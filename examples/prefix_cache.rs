@@ -1,0 +1,45 @@
+//! Cache-aware scheduling demo (§4.2.2): a multi-tenant workload where
+//! requests share Zipf-popular system prompts. Cache-aware PBAA routes
+//! requests to the DP units already holding their prefix KV, cutting
+//! effective prefill compute; basic PBAA treats every token as cold.
+//!
+//! Run: `cargo run --release --example prefix_cache`
+
+use sbs::cluster::sim::{SchedMode, Simulation};
+use sbs::config;
+use sbs::workload::{LengthDist, PrefixSpec};
+
+fn main() {
+    sbs::logging::init(log::LevelFilter::Warn);
+    println!("multi-tenant workload: 16 system prompts (Zipf 1.1), 80% participation,");
+    println!("prefix 256–1024 tokens of mean-1K prompts, 100 QPS, 3P1D chunk 3K\n");
+    println!(
+        "{:<16} {:>12} {:>12} {:>14} {:>16}",
+        "PBAA mode", "TTFT(ms)", "p99(ms)", "prefill tok/s", "passes (fewer=hit)"
+    );
+    for (label, cache_aware) in [("basic", false), ("cache-aware", true)] {
+        let mut cfg = config::fig6a(1.0, true, 33);
+        cfg.workload.duration = 90.0;
+        cfg.warmup = 15.0;
+        cfg.workload.prefix = Some(PrefixSpec {
+            groups: 16,
+            zipf_s: 1.1,
+            prefix_len: LengthDist::Uniform { lo: 256, hi: 1024 },
+            participation: 0.8,
+        });
+        if let SchedMode::Staggered(sc) = &mut cfg.mode {
+            sc.pbaa.cache_aware = cache_aware;
+        }
+        let r = Simulation::run(&cfg);
+        println!(
+            "{:<16} {:>12.1} {:>12.1} {:>14.0} {:>16}",
+            label,
+            r.report.ttft.mean_ms(),
+            r.report.ttft.percentile_ms(99.0),
+            r.report.throughput.prefill_tps(),
+            r.prefill_passes,
+        );
+    }
+    println!("\ncache-aware PBAA computes fewer effective tokens for the same requests:");
+    println!("lower prefill tok/s at equal QPS = KV reuse, and TTFT drops accordingly.");
+}

@@ -1,0 +1,71 @@
+//! Quickstart: load the AOT artifacts, run a chunked prefill and a few
+//! decode steps directly against the PJRT runtime — the smallest possible
+//! tour of the public API. Requires `make artifacts`.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use sbs::engine::sampler::Sampling;
+use sbs::engine::{tokenizer, MiniEngine};
+use sbs::runtime::{artifacts_dir, Runtime};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    sbs::logging::init(log::LevelFilter::Info);
+    let dir = artifacts_dir();
+    if !dir.join("model_meta.json").exists() {
+        eprintln!("no artifacts at {} — run `make artifacts` first", dir.display());
+        return Ok(());
+    }
+
+    println!("loading runtime (compiling {} variants)...", 5);
+    let t0 = Instant::now();
+    let rt = Arc::new(Runtime::load(&dir)?);
+    println!(
+        "loaded in {:.1}s: prefill chunks {:?}, decode batches {:?}, vocab {}",
+        t0.elapsed().as_secs_f64(),
+        rt.prefill_chunks(),
+        rt.decode_batches(),
+        rt.meta.model.vocab
+    );
+
+    let mut engine = MiniEngine::new(rt, 4, Sampling::Greedy, 42)?;
+    let prompt = tokenizer::encode(
+        "Staggered batch scheduling buffers requests to form optimal \
+         execution batches, eliminating device-side queuing.",
+    );
+    println!("\nprompt: {} tokens", prompt.len());
+
+    // Chunked prefill (the gated, non-preemptive pass).
+    let t0 = Instant::now();
+    let pre = engine.prefill(&prompt)?;
+    println!(
+        "prefill: {} passes, {:.0} ms exec → first token {} (TTFT {:.0} ms)",
+        pre.passes,
+        pre.exec_time * 1e3,
+        pre.first_token,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // Batched decode.
+    engine.admit(&pre, 12, 0)?;
+    let mut generated = vec![pre.first_token];
+    let t0 = Instant::now();
+    while engine.active() > 0 {
+        let (emissions, _) = engine.step()?;
+        for e in emissions {
+            generated.push(e.token);
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "decode: {} tokens in {:.1}s ({:.1} tok/s)",
+        generated.len() - 1,
+        dt,
+        (generated.len() - 1) as f64 / dt
+    );
+    println!("token ids: {generated:?}");
+    println!("text: {:?}", tokenizer::decode(&generated));
+    println!("\n(random-init weights — the text is noise; the machinery is the point)");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! End-to-end driver (the repository's headline validation): serve real
+//! batched requests through the full three-layer stack — SBS scheduler
+//! (L3 rust) → PJRT engines executing the AOT-compiled nano-MoE (L2 jax)
+//! with Pallas kernels (L1) — and report latency/throughput, comparing
+//! the staggered scheduler against immediate dispatch on the same jobs.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example serve_cluster`
+//! (SBS_E2E_REQUESTS / SBS_E2E_MAXNEW env knobs; defaults 8 / 8.)
+
+use sbs::cluster::workers::{Job, RealCluster, RealClusterConfig, RealSchedMode};
+use sbs::engine::tokenizer;
+use sbs::metrics::ServingReport;
+use sbs::runtime::artifacts_dir;
+use sbs::scheduler::baseline::ImmediatePolicy;
+
+fn env_or(key: &str, default: u32) -> u32 {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn run_mode(mode: RealSchedMode, n: u32, max_new: u32) -> anyhow::Result<ServingReport> {
+    let cfg = RealClusterConfig {
+        n_prefill: 2,
+        decode_batch: 4,
+        mode,
+        artifacts: artifacts_dir(),
+        ..Default::default()
+    };
+    let mut cluster = RealCluster::start(cfg)?;
+    for i in 0..n {
+        let prompt = tokenizer::encode(&format!(
+            "[session {i}] Summarize the effect of staggered batch \
+             scheduling on time-to-first-token for request number {i} \
+             in a production DP+EP cluster with chunked prefill."
+        ));
+        cluster.submit(Job {
+            id: i as u64,
+            prompt,
+            max_new,
+        });
+        // Poisson-ish spacing so the batching window has something to do.
+        std::thread::sleep(std::time::Duration::from_millis(150));
+    }
+    let (_completions, report) = cluster.finish()?;
+    Ok(report)
+}
+
+fn main() -> anyhow::Result<()> {
+    sbs::logging::init(log::LevelFilter::Warn);
+    if !artifacts_dir().join("model_meta.json").exists() {
+        eprintln!("no artifacts — run `make artifacts` first");
+        return Ok(());
+    }
+    let n = env_or("SBS_E2E_REQUESTS", 8);
+    let max_new = env_or("SBS_E2E_MAXNEW", 8);
+
+    println!("=== staggered batch scheduling (SBS) ===");
+    let sbs_report = run_mode(RealSchedMode::Staggered(Default::default()), n, max_new)?;
+    println!("{}", sbs_report.render());
+
+    println!("\n=== immediate dispatch (round-robin baseline) ===");
+    let base_report = run_mode(
+        RealSchedMode::Immediate(ImmediatePolicy::RoundRobin),
+        n,
+        max_new,
+    )?;
+    println!("{}", base_report.render());
+
+    let tb = base_report.ttft.mean_ms();
+    let ts = sbs_report.ttft.mean_ms();
+    if tb > 0.0 {
+        println!(
+            "\nmean TTFT: baseline {tb:.0} ms vs SBS {ts:.0} ms ({:+.1}%)",
+            (ts - tb) / tb * 100.0
+        );
+    }
+    println!(
+        "(real PJRT execution on CPU with interpret-mode Pallas. At this demo scale —\n          a handful of requests on 2 instances — the SBS-vs-baseline delta is run noise;\n          the cluster-scale comparison lives in the DES: see EXPERIMENTS.md.)"
+    );
+    Ok(())
+}

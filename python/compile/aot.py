@@ -1,0 +1,164 @@
+"""AOT path: lower the L2 model (with L1 Pallas kernels) to HLO text.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+
+Emits, per variant:
+  prefill_c{chunk}.hlo.txt    — prefill_chunk entry
+  decode_b{batch}.hlo.txt     — decode_step entry
+plus:
+  weights.bin                 — all parameters, little-endian f32, in
+                                param_spec order
+  model_meta.json             — config, parameter manifest (name/shape/
+                                offset), variant ABI (argument order and
+                                shapes), output arity
+
+Interchange is HLO *text*, not a serialized HloModuleProto: jax ≥ 0.5
+emits 64-bit instruction ids that the xla crate's XLA (xla_extension
+0.5.1) rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import DEFAULT, ModelConfig
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_prefill(cfg: ModelConfig, chunk: int, n_params: int) -> str:
+    """Lower prefill_chunk for a fixed chunk size."""
+
+    def fn(*args):
+        params = list(args[:n_params])
+        tokens, kc, vc, pos = args[n_params:]
+        return model.prefill_chunk(cfg, params, tokens, kc, vc, pos)
+
+    shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in model.param_spec(cfg)]
+    shapes += [
+        jax.ShapeDtypeStruct((chunk,), jnp.int32),
+        jax.ShapeDtypeStruct(
+            (cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.d_head), jnp.float32
+        ),
+        jax.ShapeDtypeStruct(
+            (cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.d_head), jnp.float32
+        ),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*shapes))
+
+
+def lower_decode(cfg: ModelConfig, batch: int, n_params: int) -> str:
+    """Lower decode_step for a fixed batch size."""
+
+    def fn(*args):
+        params = list(args[:n_params])
+        tokens, kc, vc, lens = args[n_params:]
+        return model.decode_step(cfg, params, tokens, kc, vc, lens)
+
+    shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in model.param_spec(cfg)]
+    shapes += [
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, cfg.max_seq, cfg.n_heads, cfg.d_head), jnp.float32
+        ),
+        jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, cfg.max_seq, cfg.n_heads, cfg.d_head), jnp.float32
+        ),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*shapes))
+
+
+def write_weights(cfg: ModelConfig, out_dir: str, seed: int):
+    """weights.bin + manifest entries (name, shape, offset in f32 elems)."""
+    params = model.init_params(cfg, seed)
+    manifest = []
+    offset = 0
+    blob = bytearray()
+    for (name, shape), arr in zip(model.param_spec(cfg), params):
+        a = np.asarray(arr, dtype="<f4")
+        manifest.append({"name": name, "shape": list(shape), "offset": offset})
+        offset += int(a.size)
+        blob += a.tobytes()
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        f.write(bytes(blob))
+    return manifest, offset
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--layers", type=int, default=DEFAULT.n_layers)
+    ap.add_argument("--max-seq", type=int, default=DEFAULT.max_seq)
+    args = ap.parse_args(argv)
+
+    cfg = ModelConfig(n_layers=args.layers, max_seq=args.max_seq)
+    os.makedirs(args.out, exist_ok=True)
+    n_params = len(model.param_spec(cfg))
+
+    variants = []
+    for chunk in cfg.prefill_chunks:
+        name = f"prefill_c{chunk}"
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        text = lower_prefill(cfg, chunk, n_params)
+        with open(path, "w") as f:
+            f.write(text)
+        variants.append({
+            "name": name, "kind": "prefill", "chunk": chunk,
+            "file": f"{name}.hlo.txt",
+        })
+        print(f"wrote {path} ({len(text)} chars)")
+    for batch in cfg.decode_batches:
+        name = f"decode_b{batch}"
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        text = lower_decode(cfg, batch, n_params)
+        with open(path, "w") as f:
+            f.write(text)
+        variants.append({
+            "name": name, "kind": "decode", "batch": batch,
+            "file": f"{name}.hlo.txt",
+        })
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest, total = write_weights(cfg, args.out, args.seed)
+    meta = {
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_head": cfg.d_head, "n_experts": cfg.n_experts,
+            "top_k": cfg.top_k, "d_ff": cfg.d_ff,
+            "d_shared_ff": cfg.d_shared_ff, "max_seq": cfg.max_seq,
+        },
+        "weights": {"file": "weights.bin", "total_f32": total, "params": manifest},
+        "variants": variants,
+        "abi": {
+            "order": "params... , tokens, k_caches, v_caches, pos_or_lens",
+            "outputs": "(logits, k_caches, v_caches) as a 3-tuple",
+        },
+        "seed": args.seed,
+    }
+    meta_path = os.path.join(args.out, "model_meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {meta_path}; {total} f32 weights")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,44 @@
+"""Model/topology configuration for the nano-MoE serving model.
+
+This is the L2/L1 stand-in for DeepSeek-V3: a small Mixture-of-Experts
+transformer with the same *structural* properties the paper's scheduler
+cares about — DP-replicated attention, expert FFNs behind a shared routing
+step, chunked prefill over a KV cache, and batched single-token decode.
+Sizes are chosen so interpret-mode Pallas on CPU stays fast while the
+AOT artifacts remain realistic to serve.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """nano-MoE hyperparameters (defaults ≈ 8.5M parameters)."""
+
+    vocab: int = 512          # byte-pair-free: raw bytes + specials
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_head: int = 64          # n_heads * d_head == d_model
+    n_experts: int = 8
+    top_k: int = 2
+    d_ff: int = 512           # per-expert hidden dim
+    d_shared_ff: int = 512    # shared-expert hidden dim
+    max_seq: int = 512        # KV capacity per sequence
+    rope_base: float = 10000.0
+
+    # AOT variant axes: prefill chunk sizes and decode batch sizes.
+    prefill_chunks: tuple = (64, 128)
+    decode_batches: tuple = (1, 4, 8)
+
+    def n_params(self) -> int:
+        """Approximate parameter count."""
+        d, e = self.d_model, self.n_experts
+        attn = 4 * d * d
+        moe = e * 2 * d * self.d_ff + d * e  # experts + router
+        shared = 2 * d * self.d_shared_ff
+        per_layer = attn + moe + shared + 2 * d
+        return self.vocab * d * 2 + self.n_layers * per_layer + d
+
+
+DEFAULT = ModelConfig()

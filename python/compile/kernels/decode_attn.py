@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: batched single-token decode attention.
+
+Grid walks (sequence, head); each program loads its sequence's whole KV
+stripe for one head into VMEM (S×Dh f32 = 128 KiB at S=512, Dh=64 — small
+against a 16 MiB budget) and does a masked softmax-weighted reduction.
+Decode is memory-bound: the schedule is one streaming read of K and V per
+program, which is exactly the HBM→VMEM traffic a TPU decode kernel is
+optimizing; no online-softmax needed at these cache lengths.
+
+interpret=True — see flash_prefill.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, s):
+    """One (sequence, head) program."""
+    n = len_ref[0]
+    q = q_ref[...]  # [dh]
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, dtype=jnp.float32))
+    k = k_ref[...]  # [S, dh]
+    v = v_ref[...]
+    scores = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale  # [S]
+    mask = jax.lax.iota(jnp.int32, s) < n
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = scores.max()
+    p = jnp.exp(scores - m)
+    p = p / p.sum()
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lens):
+    """Batched decode attention (Pallas, interpret mode).
+
+    Args:
+      q: [B, H, Dh] — current token per sequence.
+      k_cache, v_cache: [B, S, H, Dh].
+      lens: [B] int32 valid KV lengths (current token included).
+
+    Returns:
+      [B, H, Dh].
+    """
+    b, h, dh = q.shape
+    s = k_cache.shape[1]
+    kernel = functools.partial(_decode_kernel, s=s)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi: (bi,)),                  # lens
+            pl.BlockSpec((None, None, dh), lambda bi, hi: (bi, hi, 0)),  # q
+            pl.BlockSpec((None, s, None, dh), lambda bi, hi: (bi, 0, hi, 0)),  # k
+            pl.BlockSpec((None, s, None, dh), lambda bi, hi: (bi, 0, hi, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((None, None, dh), lambda bi, hi: (bi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        interpret=True,
+    )(lens.astype(jnp.int32), q, k_cache, v_cache)

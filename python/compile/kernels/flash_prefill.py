@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: blocked causal prefill attention over a KV cache.
+
+TPU-minded structure (see DESIGN.md §Hardware-Adaptation): the grid walks
+(head, q-block); each program streams the KV cache through VMEM in
+`KV_BLOCK`-sized tiles, maintaining an online-softmax accumulator — the
+flash-attention schedule expressed with BlockSpec instead of CUDA
+threadblocks. Must run with interpret=True on CPU (real-TPU lowering emits
+a Mosaic custom-call the CPU PJRT client cannot execute).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# KV tile streamed through VMEM per iteration. 128 lanes wide — MXU/VPU
+# native tiling; at Dh=64 a (128, 64) f32 tile is 32 KiB, so q-tile + 2 kv
+# tiles + accumulators stay well inside a 16 MiB VMEM budget.
+KV_BLOCK = 128
+
+
+def _attention_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, q_block, kv_len):
+    """One (head, q-block) program: online-softmax over KV tiles."""
+    pos = pos_ref[0]
+    qi = pl.program_id(1)
+    q = q_ref[...]  # [q_block, dh]
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, dtype=jnp.float32))
+    q_pos = pos + qi * q_block + jax.lax.iota(jnp.int32, q_block)  # [q_block]
+
+    def body(carry, kv_i):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.dslice(kv_i * KV_BLOCK, KV_BLOCK), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(kv_i * KV_BLOCK, KV_BLOCK), slice(None)))
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        k_pos = kv_i * KV_BLOCK + jax.lax.iota(jnp.int32, KV_BLOCK)
+        mask = k_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        return (m_new, l_new, acc_new), None
+
+    n_kv = kv_len // KV_BLOCK
+    init = (
+        jnp.full((q_block,), NEG_INF, dtype=jnp.float32),
+        jnp.zeros((q_block,), dtype=jnp.float32),
+        jnp.zeros((q_block, dh), dtype=jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(n_kv))
+    # Fully-masked rows (can't happen causally: j == i always valid) guard.
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def causal_prefill_attention(q, k_cache, v_cache, pos, q_block=64):
+    """Blocked causal attention over a KV cache (Pallas, interpret mode).
+
+    Args:
+      q: [chunk, H, Dh] queries at absolute positions pos..pos+chunk-1.
+      k_cache, v_cache: [S, H, Dh], S a multiple of KV_BLOCK.
+      pos: int32 scalar.
+      q_block: q-tile size (chunk must be a multiple).
+
+    Returns:
+      [chunk, H, Dh].
+    """
+    chunk, h, dh = q.shape
+    s = k_cache.shape[0]
+    assert chunk % q_block == 0, (chunk, q_block)
+    assert s % KV_BLOCK == 0, (s, KV_BLOCK)
+    pos_arr = jnp.reshape(pos.astype(jnp.int32), (1,))
+    kernel = functools.partial(_attention_kernel, q_block=q_block, kv_len=s)
+    # Layout: heads on the leading grid axis; q/k/v sliced per head.
+    out = pl.pallas_call(
+        kernel,
+        grid=(h, chunk // q_block),
+        in_specs=[
+            pl.BlockSpec((1,), lambda hi, qi: (0,)),                     # pos
+            pl.BlockSpec((q_block, None, dh), lambda hi, qi: (qi, hi, 0)),  # q
+            pl.BlockSpec((s, None, dh), lambda hi, qi: (0, hi, 0)),      # k
+            pl.BlockSpec((s, None, dh), lambda hi, qi: (0, hi, 0)),      # v
+        ],
+        out_specs=pl.BlockSpec((q_block, None, dh), lambda hi, qi: (qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((chunk, h, dh), q.dtype),
+        interpret=True,
+    )(pos_arr, q, k_cache, v_cache)
+    return out

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: grouped expert GEMM for the MoE FFN.
+
+Grid walks (expert, token-block); each program computes one expert's
+two-layer FFN for one tile of tokens: an (n_block×d)·(d×f) matmul, GELU,
+then (n_block×f)·(f×d) — MXU-shaped tiles with the weights resident in
+VMEM for the duration of the token loop (the dense-MoE schedule; gating
+and the weighted combine are cheap VPU work left to XLA in L2).
+
+interpret=True — see flash_prefill.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gelu(x):
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def _moe_kernel(x_ref, w1_ref, w2_ref, o_ref):
+    """One (expert, token-block) program."""
+    x = x_ref[...]          # [n_block, d]
+    w1 = w1_ref[...]        # [d, f]
+    w2 = w2_ref[...]        # [f, d]
+    h = jnp.dot(x, w1, preferred_element_type=jnp.float32)
+    h = _gelu(h)
+    o_ref[...] = jnp.dot(h, w2, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def moe_expert_gemm(x, w1, w2, n_block=64):
+    """Dense per-expert FFN outputs (Pallas, interpret mode).
+
+    Args:
+      x: [N, d] tokens (N a multiple of n_block).
+      w1: [E, d, f]; w2: [E, f, d].
+
+    Returns:
+      [E, N, d] — expert e's output for every token (combine outside).
+    """
+    n, d = x.shape
+    e, _, f = w1.shape
+    assert n % n_block == 0, (n, n_block)
+    return pl.pallas_call(
+        _moe_kernel,
+        grid=(e, n // n_block),
+        in_specs=[
+            pl.BlockSpec((n_block, d), lambda ei, ni: (ni, 0)),        # x
+            pl.BlockSpec((None, d, f), lambda ei, ni: (ei, 0, 0)),     # w1
+            pl.BlockSpec((None, f, d), lambda ei, ni: (ei, 0, 0)),     # w2
+        ],
+        out_specs=pl.BlockSpec((None, n_block, d), lambda ei, ni: (ei, ni, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, n, d), x.dtype),
+        interpret=True,
+    )(x, w1, w2)

@@ -1,0 +1,113 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness ground truth).
+
+pytest checks each kernel against these references over randomized shapes
+(hypothesis sweeps); the L2 model also exposes a reference forward built
+only from these, used to validate the kernelized model end-to-end.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gelu(x):
+    """tanh-approx GELU (matches jax.nn.gelu(approximate=True))."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def causal_prefill_attention_ref(q, k_cache, v_cache, pos):
+    """Chunked causal attention over a KV cache.
+
+    Args:
+      q: [chunk, H, Dh] queries for absolute positions pos..pos+chunk-1.
+      k_cache, v_cache: [S, H, Dh]; rows < pos+chunk are valid (the
+        current chunk's K/V already written).
+      pos: int32 scalar — absolute position of the chunk's first token.
+
+    Returns:
+      [chunk, H, Dh] attention outputs.
+    """
+    chunk, _, dh = q.shape
+    s = k_cache.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, dtype=q.dtype))
+    scores = jnp.einsum("qhd,khd->hqk", q, k_cache) * scale
+    q_pos = pos + jnp.arange(chunk)[:, None]            # [chunk, 1]
+    k_pos = jnp.arange(s)[None, :]                      # [1, S]
+    mask = k_pos <= q_pos                               # [chunk, S]
+    scores = jnp.where(mask[None, :, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,khd->qhd", p, v_cache)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lens):
+    """Batched single-token decode attention.
+
+    Args:
+      q: [B, H, Dh] — one query token per sequence.
+      k_cache, v_cache: [B, S, H, Dh].
+      lens: [B] int32 — valid KV length per sequence (the current token's
+        K/V is already written at position lens-1).
+
+    Returns:
+      [B, H, Dh].
+    """
+    _, _, dh = q.shape
+    s = k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, dtype=q.dtype))
+    scores = jnp.einsum("bhd,bkhd->bhk", q, k_cache) * scale
+    mask = jnp.arange(s)[None, :] < lens[:, None]       # [B, S]
+    scores = jnp.where(mask[:, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, v_cache)
+
+
+def moe_expert_gemm_ref(x, w1, w2):
+    """Per-expert two-layer FFN applied densely to all tokens.
+
+    Args:
+      x: [N, d] tokens.
+      w1: [E, d, f]; w2: [E, f, d].
+
+    Returns:
+      [E, N, d] — every expert's output for every token (the dense-MoE
+      formulation; gating/combining happens outside).
+    """
+    hidden = jnp.einsum("nd,edf->enf", x, w1)
+    return jnp.einsum("enf,efd->end", gelu(hidden), w2)
+
+
+def moe_ffn_ref(x, gate_w, w1, w2, top_k):
+    """Full top-k MoE feed-forward (router + experts + combine)."""
+    logits = x @ gate_w                                 # [N, E]
+    top_vals, top_idx = jax.lax.top_k(logits, top_k)
+    gates = jax.nn.softmax(top_vals, axis=-1)           # softmax over top-k
+    dense = jnp.zeros_like(logits)
+    rows = jnp.arange(logits.shape[0])[:, None]
+    dense = dense.at[rows, top_idx].set(gates)          # [N, E]
+    expert_out = moe_expert_gemm_ref(x, w1, w2)         # [E, N, d]
+    return jnp.einsum("end,ne->nd", expert_out, dense)
+
+
+def rmsnorm_ref(x, w, eps=1e-6):
+    """RMSNorm over the last axis."""
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_ref(x, positions, base=10000.0):
+    """Rotary position embedding.
+
+    Args:
+      x: [..., T, H, Dh] with Dh even.
+      positions: [..., T] int32 absolute positions (broadcastable).
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos = jnp.cos(angles)[..., None, :]   # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)

@@ -1,0 +1,251 @@
+"""L2: the nano-MoE transformer in JAX, calling the L1 Pallas kernels.
+
+Two entry points are AOT-lowered per variant (see aot.py):
+
+* ``prefill_chunk`` — process one chunk of a single sequence's prompt,
+  writing K/V into the cache at positions ``pos..pos+chunk-1`` and
+  returning the logits of the chunk's last token.
+* ``decode_step``   — one synchronized autoregressive step for a batch of
+  sequences, appending one K/V row per sequence.
+
+A ``*_reference`` twin of each, built purely from kernels/ref.py, provides
+the end-to-end oracle for pytest.
+
+Parameters are a flat list of arrays in the order given by
+``param_spec()`` so the Rust runtime can feed PJRT buffers positionally.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import ref
+from .kernels.decode_attn import decode_attention
+from .kernels.flash_prefill import causal_prefill_attention
+from .kernels.moe_gemm import moe_expert_gemm
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig):
+    """Ordered (name, shape) list — the ABI between aot.py and Rust."""
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    e, f, fs = cfg.n_experts, cfg.d_ff, cfg.d_shared_ff
+    spec = [("embed", (cfg.vocab, d))]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "norm_attn", (d,)),
+            (p + "wq", (d, h * dh)),
+            (p + "wk", (d, h * dh)),
+            (p + "wv", (d, h * dh)),
+            (p + "wo", (h * dh, d)),
+            (p + "norm_ffn", (d,)),
+            (p + "router", (d, e)),
+            (p + "w1", (e, d, f)),
+            (p + "w2", (e, f, d)),
+            (p + "shared_w1", (d, fs)),
+            (p + "shared_w2", (fs, d)),
+        ]
+    spec += [("norm_out", (d,)), ("lm_head", (d, cfg.vocab))]
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Deterministic scaled-normal init, returned as the flat list."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if "norm" in name:
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = 1.0 / jnp.sqrt(jnp.array(fan_in, jnp.float32))
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _unflatten(cfg: ModelConfig, flat):
+    """flat list -> (embed, [per-layer dicts], norm_out, lm_head)."""
+    names = [n for n, _ in param_spec(cfg)]
+    by_name = dict(zip(names, flat))
+    layers = []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        layers.append({k: by_name[p + k] for k in (
+            "norm_attn", "wq", "wk", "wv", "wo",
+            "norm_ffn", "router", "w1", "w2", "shared_w1", "shared_w2",
+        )})
+    return by_name["embed"], layers, by_name["norm_out"], by_name["lm_head"]
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+def _top_k_manual(logits, k):
+    """Iterative-argmax top-k.
+
+    Functionally identical to jax.lax.top_k for distinct values but lowers
+    to plain reduce/select HLO — the `topk` instruction jax emits carries a
+    `largest=` attribute that xla_extension 0.5.1's HLO parser rejects.
+    """
+    vals, idxs = [], []
+    x = logits
+    rows = jnp.arange(logits.shape[0])
+    for _ in range(k):
+        i = jnp.argmax(x, axis=-1)
+        v = x[rows, i]
+        vals.append(v)
+        idxs.append(i)
+        x = x.at[rows, i].set(-jnp.inf)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def _moe_block(x, lp, cfg, kernels: bool):
+    """Router + top-k combine over expert outputs + shared expert."""
+    logits = x @ lp["router"]
+    top_vals, top_idx = _top_k_manual(logits, cfg.top_k)
+    gates = jax.nn.softmax(top_vals, axis=-1)
+    dense = jnp.zeros_like(logits)
+    rows = jnp.arange(x.shape[0])[:, None]
+    dense = dense.at[rows, top_idx].set(gates)
+    if kernels:
+        expert_out = moe_expert_gemm(x, lp["w1"], lp["w2"], n_block=min(64, x.shape[0]))
+    else:
+        expert_out = ref.moe_expert_gemm_ref(x, lp["w1"], lp["w2"])
+    mixed = jnp.einsum("end,ne->nd", expert_out, dense)
+    shared = ref.gelu(x @ lp["shared_w1"]) @ lp["shared_w2"]
+    return mixed + shared
+
+
+def _qkv(x, lp, cfg, positions):
+    h, dh = cfg.n_heads, cfg.d_head
+    t = x.shape[0]
+    q = (x @ lp["wq"]).reshape(t, h, dh)
+    k = (x @ lp["wk"]).reshape(t, h, dh)
+    v = (x @ lp["wv"]).reshape(t, h, dh)
+    q = ref.rope_ref(q, positions, cfg.rope_base)
+    k = ref.rope_ref(k, positions, cfg.rope_base)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# Prefill
+# --------------------------------------------------------------------------
+
+def prefill_chunk(cfg: ModelConfig, flat_params, tokens, k_caches, v_caches, pos,
+                  kernels: bool = True):
+    """Process one prompt chunk of a single sequence.
+
+    Args:
+      tokens: [chunk] int32 token ids.
+      k_caches, v_caches: [L, S, H, Dh] per-layer KV caches.
+      pos: int32 scalar — absolute position of tokens[0].
+
+    Returns:
+      (logits [chunk, vocab], new k_caches, new v_caches)
+      Per-position logits so a padded final chunk can read the last *real*
+      token's row.
+    """
+    embed, layers, norm_out, lm_head = _unflatten(cfg, flat_params)
+    chunk = tokens.shape[0]
+    positions = pos + jnp.arange(chunk)
+    x = embed[tokens]
+    new_k, new_v = [], []
+    for li, lp in enumerate(layers):
+        xn = ref.rmsnorm_ref(x, lp["norm_attn"])
+        q, k, v = _qkv(xn, lp, cfg, positions)
+        kc = jax.lax.dynamic_update_slice(k_caches[li], k, (pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(v_caches[li], v, (pos, 0, 0))
+        if kernels:
+            attn = causal_prefill_attention(q, kc, vc, pos, q_block=min(64, chunk))
+        else:
+            attn = ref.causal_prefill_attention_ref(q, kc, vc, pos)
+        x = x + attn.reshape(chunk, -1) @ lp["wo"]
+        xn = ref.rmsnorm_ref(x, lp["norm_ffn"])
+        x = x + _moe_block(xn, lp, cfg, kernels)
+        new_k.append(kc)
+        new_v.append(vc)
+    x = ref.rmsnorm_ref(x, norm_out)
+    logits = x @ lm_head
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, flat_params, tokens, k_caches, v_caches, lens,
+                kernels: bool = True):
+    """One autoregressive step for a batch.
+
+    Args:
+      tokens: [B] int32 current token per sequence.
+      k_caches, v_caches: [L, B, S, H, Dh].
+      lens: [B] int32 — valid KV length per sequence *before* this step.
+
+    Returns:
+      (logits [B, vocab], new k_caches, new v_caches)
+      The new token's K/V is written at position lens (lens+1 valid after).
+    """
+    embed, layers, norm_out, lm_head = _unflatten(cfg, flat_params)
+    b = tokens.shape[0]
+    x = embed[tokens]                                  # [B, d]
+    new_k, new_v = [], []
+    for li, lp in enumerate(layers):
+        xn = ref.rmsnorm_ref(x, lp["norm_attn"])
+        h, dh = cfg.n_heads, cfg.d_head
+        q = (xn @ lp["wq"]).reshape(b, h, dh)
+        k = (xn @ lp["wk"]).reshape(b, h, dh)
+        v = (xn @ lp["wv"]).reshape(b, h, dh)
+        q = ref.rope_ref(q, lens, cfg.rope_base)
+        k = ref.rope_ref(k, lens, cfg.rope_base)
+        # Scatter each sequence's new K/V row at its own length.
+        def put(cache, row):
+            def one(c, r, n):
+                return jax.lax.dynamic_update_slice(c, r[None], (n, 0, 0))
+            return jax.vmap(one)(cache, row, lens)
+        kc = put(k_caches[li], k)
+        vc = put(v_caches[li], v)
+        if kernels:
+            attn = decode_attention(q, kc, vc, lens + 1)
+        else:
+            attn = ref.decode_attention_ref(q, kc, vc, lens + 1)
+        x = x + attn.reshape(b, -1) @ lp["wo"]
+        xn = ref.rmsnorm_ref(x, lp["norm_ffn"])
+        x = x + _moe_block(xn, lp, cfg, kernels)
+        new_k.append(kc)
+        new_v.append(vc)
+    x = ref.rmsnorm_ref(x, norm_out)
+    logits = x @ lm_head
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# --------------------------------------------------------------------------
+# Reference twins (pure ref.py; the pytest oracle)
+# --------------------------------------------------------------------------
+
+def prefill_chunk_reference(cfg, flat_params, tokens, k_caches, v_caches, pos):
+    return prefill_chunk(cfg, flat_params, tokens, k_caches, v_caches, pos, kernels=False)
+
+
+def decode_step_reference(cfg, flat_params, tokens, k_caches, v_caches, lens):
+    return decode_step(cfg, flat_params, tokens, k_caches, v_caches, lens, kernels=False)
+
+
+def empty_prefill_cache(cfg: ModelConfig):
+    """[L, S, H, Dh] zeroed single-sequence cache."""
+    return jnp.zeros(
+        (cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.d_head), jnp.float32
+    )
+
+
+def empty_decode_cache(cfg: ModelConfig, batch: int):
+    """[L, B, S, H, Dh] zeroed batched cache."""
+    return jnp.zeros(
+        (cfg.n_layers, batch, cfg.max_seq, cfg.n_heads, cfg.d_head), jnp.float32
+    )

@@ -1,0 +1,61 @@
+"""AOT path smoke tests: lowering produces parseable HLO text with the
+expected entry signature, and the weights manifest is exact."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+from compile.config import ModelConfig
+
+TINY = ModelConfig(n_layers=1, max_seq=128)
+
+
+def test_lower_prefill_hlo_text_shape():
+    n_params = len(model.param_spec(TINY))
+    text = aot.lower_prefill(TINY, 64, n_params)
+    assert text.startswith("HloModule")
+    # Entry must take the caches and return the 3-tuple.
+    assert "f32[1,128,4,64]" in text          # [L, S, H, Dh]
+    assert "s32[64]" in text                  # tokens
+    assert "->(f32[64,512]" in text           # per-position logits first
+    # The xla_extension-0.5.1-incompatible `topk(...)` op must be absent
+    # (we lower top-k as iterative argmax).
+    assert " topk(" not in text
+
+
+def test_lower_decode_hlo_text_shape():
+    n_params = len(model.param_spec(TINY))
+    text = aot.lower_decode(TINY, 2, n_params)
+    assert text.startswith("HloModule")
+    assert "f32[1,2,128,4,64]" in text        # [L, B, S, H, Dh]
+    assert "->(f32[2,512]" in text            # batched logits
+    assert " topk(" not in text
+
+
+def test_weights_manifest_is_exact(tmp_path):
+    manifest, total = aot.write_weights(TINY, str(tmp_path), seed=0)
+    blob = (tmp_path / "weights.bin").read_bytes()
+    assert len(blob) == total * 4
+    # Offsets tile the blob exactly, in order.
+    expected = 0
+    for entry, (name, shape) in zip(manifest, model.param_spec(TINY)):
+        assert entry["name"] == name
+        assert entry["offset"] == expected
+        n = 1
+        for d in shape:
+            n *= d
+        expected += n
+    assert expected == total
+
+
+def test_full_artifact_dir(tmp_path):
+    rc = aot.main(["--out", str(tmp_path), "--layers", "1", "--max-seq", "128"])
+    assert rc is None or rc == 0
+    meta = json.loads((tmp_path / "model_meta.json").read_text())
+    assert meta["model"]["n_layers"] == 1
+    files = {v["file"] for v in meta["variants"]}
+    for f in files:
+        assert (tmp_path / f).exists(), f
+    assert os.path.getsize(tmp_path / "weights.bin") == meta["weights"]["total_f32"] * 4

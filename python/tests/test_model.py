@@ -1,0 +1,110 @@
+"""L2 model correctness: kernelized forward vs reference forward, shape
+contracts, KV-cache semantics, and chunked-prefill equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.config import ModelConfig
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ModelConfig(n_layers=2, max_seq=256)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, seed=0)
+
+
+def caches():
+    c = model.empty_prefill_cache(CFG)
+    return c, jnp.zeros_like(c)
+
+
+def test_param_spec_matches_init(params):
+    spec = model.param_spec(CFG)
+    assert len(spec) == len(params)
+    for (name, shape), p in zip(spec, params):
+        assert tuple(shape) == p.shape, name
+
+
+def test_prefill_matches_reference(params):
+    kc, vc = caches()
+    tokens = jnp.arange(64, dtype=jnp.int32) % CFG.vocab
+    lg, k1, v1 = model.prefill_chunk(CFG, params, tokens, kc, vc, jnp.int32(0))
+    lr, k2, v2 = model.prefill_chunk_reference(CFG, params, tokens, kc, vc, jnp.int32(0))
+    np.testing.assert_allclose(lg, lr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(k1, k2, rtol=1e-4, atol=1e-4)
+    assert lg.shape == (64, CFG.vocab)
+    assert k1.shape == (CFG.n_layers, CFG.max_seq, CFG.n_heads, CFG.d_head)
+
+
+def test_decode_matches_reference(params):
+    b = 4
+    kc = model.empty_decode_cache(CFG, b)
+    vc = jnp.zeros_like(kc)
+    toks = jnp.array([1, 2, 3, 4], jnp.int32)
+    lens = jnp.array([0, 3, 10, 100], jnp.int32)
+    lg, k1, v1 = model.decode_step(CFG, params, toks, kc, vc, lens)
+    lr, k2, v2 = model.decode_step_reference(CFG, params, toks, kc, vc, lens)
+    np.testing.assert_allclose(lg, lr, rtol=1e-4, atol=1e-4)
+    assert lg.shape == (b, CFG.vocab)
+
+
+def test_chunked_prefill_equals_single_chunk(params):
+    """Processing 128 tokens as 2×64 chunks must equal one 128 chunk."""
+    tokens = (jnp.arange(128, dtype=jnp.int32) * 7 + 3) % CFG.vocab
+    kc, vc = caches()
+    lg_full, kf, vf = model.prefill_chunk(CFG, params, tokens, kc, vc, jnp.int32(0))
+    kc2, vc2 = caches()
+    _, kc2, vc2 = model.prefill_chunk(CFG, params, tokens[:64], kc2, vc2, jnp.int32(0))
+    lg_2, k2, v2 = model.prefill_chunk(CFG, params, tokens[64:], kc2, vc2, jnp.int32(64))
+    np.testing.assert_allclose(lg_full[-1], lg_2[-1], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(lg_full[64:], lg_2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(kf[:, :128], k2[:, :128], rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_then_decode_consistency(params):
+    """Greedy decode after prefill equals teacher-forced prefill logits."""
+    prompt = (jnp.arange(64, dtype=jnp.int32) * 3 + 1) % CFG.vocab
+    kc, vc = caches()
+    lg, kc, vc = model.prefill_chunk(CFG, params, prompt, kc, vc, jnp.int32(0))
+    next_tok = jnp.argmax(lg[-1]).astype(jnp.int32)
+
+    # Same continuation via a batched decode step (batch of 1).
+    dk = model.empty_decode_cache(CFG, 1)
+    dv = jnp.zeros_like(dk)
+    dk = dk.at[:, 0].set(kc)
+    dv = dv.at[:, 0].set(vc)
+    lens = jnp.array([64], jnp.int32)
+    lg_d, _, _ = model.decode_step(CFG, params, next_tok[None], dk, dv, lens)
+
+    # Oracle: teacher-forced prefill over prompt + next token.
+    kc3, vc3 = caches()
+    full = jnp.concatenate([prompt, next_tok[None]])
+    # chunk sizes must divide q_block; use reference for odd lengths.
+    lg_tf, _, _ = model.prefill_chunk_reference(CFG, params, full, kc3, vc3, jnp.int32(0))
+    np.testing.assert_allclose(lg_d[0], lg_tf[-1], rtol=5e-3, atol=5e-3)
+
+
+def test_decode_updates_cache_at_lens(params):
+    b = 2
+    kc = model.empty_decode_cache(CFG, b)
+    vc = jnp.zeros_like(kc)
+    lens = jnp.array([5, 9], jnp.int32)
+    toks = jnp.array([7, 11], jnp.int32)
+    _, k1, _ = model.decode_step(CFG, params, toks, kc, vc, lens)
+    # Rows at the write position are nonzero; rows beyond stay zero.
+    assert float(jnp.abs(k1[:, 0, 5]).sum()) > 0
+    assert float(jnp.abs(k1[:, 0, 6:]).sum()) == 0
+    assert float(jnp.abs(k1[:, 1, 9]).sum()) > 0
+    assert float(jnp.abs(k1[:, 1, 10:]).sum()) == 0
+
+
+def test_param_count_sane():
+    cfg = ModelConfig()
+    n = sum(int(np.prod(s)) for _, s in model.param_spec(cfg))
+    assert 4_000_000 < n < 20_000_000, n  # nano scale

@@ -1,0 +1,30 @@
+//! Paper Figure 6(a): mean TTFT vs load, short inputs (0–3K, mean 1K),
+//! chunk 3K, 3P1D. Prints the paper-style series and times one sim run.
+//!
+//! Run: `cargo bench --bench bench_fig6a_ttft_short`
+//! (`SBS_FIG_QUICK=1` shortens horizons ~6×.)
+
+use sbs::bench_harness::{default_bencher, section};
+use sbs::cluster::sim::Simulation;
+use sbs::{config, figures};
+
+fn main() {
+    section("Figure 6(a) — TTFT vs load (short inputs)");
+    let j = figures::run_fig6a(figures::FIG_SEED);
+    let _ = j;
+
+    section("simulation cost (one 80%-load run, both schedulers)");
+    let b = default_bencher();
+    let mut quick_cfg = config::fig6a(0.8, true, 1);
+    quick_cfg.workload.duration = 30.0;
+    quick_cfg.warmup = 5.0;
+    b.report("sim fig6a SBS 30s-horizon", || {
+        Simulation::run(&quick_cfg).completed
+    });
+    let mut base_cfg = config::fig6a(0.8, false, 1);
+    base_cfg.workload.duration = 30.0;
+    base_cfg.warmup = 5.0;
+    b.report("sim fig6a baseline 30s-horizon", || {
+        Simulation::run(&base_cfg).completed
+    });
+}

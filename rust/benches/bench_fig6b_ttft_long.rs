@@ -1,0 +1,21 @@
+//! Paper Figure 6(b): TTFT vs load for long-context inputs (3K–64K, mean
+//! 6.7K), chunk 16K. Validates SBS tail-latency suppression under high
+//! length variance.
+//!
+//! Run: `cargo bench --bench bench_fig6b_ttft_long`
+
+use sbs::bench_harness::{default_bencher, section};
+use sbs::cluster::sim::Simulation;
+use sbs::{config, figures};
+
+fn main() {
+    section("Figure 6(b) — TTFT vs load (long context)");
+    let _ = figures::run_fig6b(figures::FIG_SEED);
+
+    section("simulation cost (one 80%-load run)");
+    let b = default_bencher();
+    let mut cfg = config::fig6b(0.8, true, 1);
+    cfg.workload.duration = 40.0;
+    cfg.warmup = 8.0;
+    b.report("sim fig6b SBS 40s-horizon", || Simulation::run(&cfg).completed);
+}

@@ -1,0 +1,13 @@
+//! Paper Figure 7: decode KV-cache load dispersion across DP=32 units
+//! over time — baseline (blind random routing) vs IQR-aware
+//! lexicographical scheduling.
+//!
+//! Run: `cargo bench --bench bench_fig7_decode_balance`
+
+use sbs::bench_harness::section;
+use sbs::figures;
+
+fn main() {
+    section("Figure 7 — decode KV load distribution");
+    let _ = figures::run_fig7(figures::FIG_SEED);
+}

@@ -1,0 +1,12 @@
+//! Paper Figure 8: aggregate decode throughput (service rate) — baseline
+//! vs IQR-aware placement under the EP sync barrier.
+//!
+//! Run: `cargo bench --bench bench_fig8_decode_throughput`
+
+use sbs::bench_harness::section;
+use sbs::figures;
+
+fn main() {
+    section("Figure 8 — decode throughput (service rate)");
+    let _ = figures::run_fig8(figures::FIG_SEED);
+}

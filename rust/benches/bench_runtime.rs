@@ -1,0 +1,59 @@
+//! Real-engine benchmarks: PJRT prefill-chunk and decode-step latencies
+//! through the AOT artifacts (requires `make artifacts`; skips gracefully
+//! otherwise).
+//!
+//! Run: `make artifacts && cargo bench --bench bench_runtime`
+
+use sbs::bench_harness::{default_bencher, section, Bencher};
+use sbs::runtime::{artifacts_dir, Runtime};
+use std::time::Duration;
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("model_meta.json").exists() {
+        eprintln!(
+            "bench_runtime: no artifacts at {} — run `make artifacts` first (skipping)",
+            dir.display()
+        );
+        return;
+    }
+    let rt = match Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("bench_runtime: failed to load runtime: {e:#} (skipping)");
+            return;
+        }
+    };
+    // PJRT passes take ~0.2–1 s each; use small budgets.
+    let b = Bencher {
+        warmup: Duration::from_millis(100),
+        measure: Duration::from_secs(4),
+        ..default_bencher()
+    };
+
+    section("prefill chunk passes (real PJRT execution)");
+    for chunk in rt.prefill_chunks() {
+        let tokens: Vec<i32> = (0..chunk as i32).map(|i| i % 500).collect();
+        let kc = rt.empty_prefill_cache();
+        let vc = rt.empty_prefill_cache();
+        let r = b.report(&format!("prefill_c{chunk}"), || {
+            rt.prefill_chunk(&tokens, &kc, &vc, 0).unwrap().exec_time
+        });
+        println!(
+            "    → {:.0} prefill tokens/s",
+            chunk as f64 * r.per_sec()
+        );
+    }
+
+    section("decode steps (real PJRT execution)");
+    for batch in rt.decode_batches() {
+        let tokens = vec![7i32; batch as usize];
+        let lens = vec![64i32; batch as usize];
+        let kc = rt.empty_decode_cache(batch);
+        let vc = rt.empty_decode_cache(batch);
+        let r = b.report(&format!("decode_b{batch}"), || {
+            rt.decode_step(&tokens, &kc, &vc, &lens).unwrap().exec_time
+        });
+        println!("    → {:.1} decode tokens/s", batch as f64 * r.per_sec());
+    }
+}

@@ -1,0 +1,93 @@
+//! Micro-benchmarks of the L3 scheduler hot paths: the costs that must
+//! stay ≪ T̄_fwd/100 so the control plane never bottlenecks the cluster.
+//!
+//! Run: `cargo bench --bench bench_scheduler_micro`
+
+use sbs::bench_harness::{default_bencher, section};
+use sbs::scheduler::decode::{schedule_batch, DecodeSchedConfig};
+use sbs::scheduler::interval::{IntervalConfig, IntervalController};
+use sbs::scheduler::pbaa::{allocate, PbaaConfig};
+use sbs::scheduler::prefix::{PrefixCacheModel, RadixTree};
+use sbs::scheduler::staggered::{SchedulerEvent, StaggeredConfig, StaggeredScheduler};
+use sbs::scheduler::state::DpState;
+use sbs::scheduler::types::{DpUnitId, Request};
+use sbs::util::stats::Iqr;
+use sbs::util::Rng;
+
+fn requests(n: usize, rng: &mut Rng) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            Request::new(
+                i as u64,
+                rng.range_u64(16, 3072) as u32,
+                rng.range_u64(16, 512) as u32,
+                0.0,
+            )
+        })
+        .collect()
+}
+
+fn dp_pool(n: usize, c_chunk: u32) -> Vec<DpState> {
+    (0..n)
+        .map(|i| DpState::new(DpUnitId::new(0, i as u32), c_chunk))
+        .collect()
+}
+
+fn main() {
+    let b = default_bencher();
+    let mut rng = Rng::new(42);
+
+    section("PBAA (Algorithm 2) — one allocation cycle");
+    for (n_req, n_dp) in [(16usize, 8usize), (64, 8), (256, 32)] {
+        let reqs = requests(n_req, &mut rng);
+        b.report(&format!("pbaa {n_req} reqs × {n_dp} DPs"), || {
+            let mut dps = dp_pool(n_dp, 3072);
+            allocate(&PbaaConfig::default(), vec![], reqs.clone(), &mut dps, None)
+                .assignments
+                .len()
+        });
+    }
+
+    section("IQR-lex decode scheduling (Algorithm 3) — one batch");
+    for (n_req, n_dp) in [(8usize, 32usize), (64, 32), (64, 128)] {
+        let reqs = requests(n_req, &mut rng);
+        b.report(&format!("alg3 {n_req} reqs × {n_dp} DPs"), || {
+            let mut dps = dp_pool(n_dp, 0);
+            schedule_batch(&DecodeSchedConfig::default(), reqs.clone(), &mut dps).len()
+        });
+    }
+
+    section("IQR computation");
+    let kvs: Vec<f64> = (0..32).map(|_| rng.uniform(0.0, 150_000.0)).collect();
+    b.report("Iqr::of over 32 units", || Iqr::of(&kvs).outlier_threshold(1.5));
+
+    section("interval controller (Algorithm 1)");
+    let mut ctl = IntervalController::new(IntervalConfig::default(), 16);
+    b.report("on_end_forward + recompute", || {
+        ctl.on_end_forward(0.35);
+        ctl.i_opt()
+    });
+
+    section("radix tree (cache-aware PBAA)");
+    let mut tree = RadixTree::new(u64::MAX);
+    let toks = PrefixCacheModel::group_tokens(7, 512);
+    tree.insert(&toks);
+    b.report("match_prefix 512 tokens (hit)", || tree.match_prefix(&toks));
+    let miss = PrefixCacheModel::group_tokens(8, 512);
+    b.report("match_prefix 512 tokens (miss)", || tree.match_prefix(&miss));
+
+    section("full scheduler event (arrival → dispatch decision)");
+    let mut sched = StaggeredScheduler::new(StaggeredConfig::default(), 3, 8, 3072);
+    let mut t = 0.0;
+    let mut id = 0u64;
+    b.report("StaggeredScheduler::on_event(Arrival)", || {
+        t += 0.01;
+        id += 1;
+        sched
+            .on_event(SchedulerEvent::Arrival {
+                request: Request::new(id, 1000, 100, t),
+                now: t,
+            })
+            .len()
+    });
+}

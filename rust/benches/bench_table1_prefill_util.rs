@@ -1,0 +1,15 @@
+//! Paper Table 1: prefill chunk utilization and max sustainable QPS under
+//! a mean-TTFT SLO, batching Off (immediate dispatch) vs On (SBS with
+//! PBAA water-filling).
+//!
+//! Run: `cargo bench --bench bench_table1_prefill_util`
+//! The SLO bisection runs ~40 simulations; `SBS_FIG_QUICK=1` recommended
+//! for iteration.
+
+use sbs::bench_harness::section;
+use sbs::figures;
+
+fn main() {
+    section("Table 1 — chunk utilization & max QPS under SLO");
+    let _ = figures::run_table1(figures::FIG_SEED);
+}

@@ -1,0 +1,179 @@
+//! Criterion-like measurement harness (the offline registry ships no
+//! criterion).
+//!
+//! [`Bencher`] runs warmup iterations, then timed batches until a wall
+//! budget is spent, and reports mean / p50 / p99 per iteration. Bench
+//! binaries (`cargo bench`, `harness = false`) use this to time scheduler
+//! hot paths and the DES; figure-level benches print paper-style tables.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark: per-iteration latency statistics.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark label.
+    pub name: String,
+    /// Number of timed iterations.
+    pub iters: u64,
+    /// Mean seconds per iteration.
+    pub mean_s: f64,
+    /// Median seconds per iteration.
+    pub p50_s: f64,
+    /// 99th percentile seconds per iteration.
+    pub p99_s: f64,
+    /// Fastest iteration.
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    /// Render one aligned report line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean_s),
+            fmt_dur(self.p50_s),
+            fmt_dur(self.p99_s),
+        )
+    }
+
+    /// Iterations per second implied by the mean.
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_dur(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner with a wall-time budget per benchmark.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Warmup budget.
+    pub warmup: Duration,
+    /// Measurement budget.
+    pub measure: Duration,
+    /// Cap on timed iterations (protects very fast ops from sample bloat).
+    pub max_iters: u64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            max_iters: 2_000_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick-profile bencher for CI-ish runs.
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            max_iters: 200_000,
+        }
+    }
+
+    /// Run `f` repeatedly and collect per-iteration timings. `f` should
+    /// return a value that depends on its work; we pass it through
+    /// `std::hint::black_box` to keep the optimizer honest.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples: Vec<f64> = Vec::with_capacity(4096);
+        let start = Instant::now();
+        while start.elapsed() < self.measure && (samples.len() as u64) < self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let iters = samples.len() as u64;
+        let mean = samples.iter().sum::<f64>() / iters.max(1) as f64;
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_s: mean,
+            p50_s: crate::util::stats::percentile_sorted(&samples, 50.0),
+            p99_s: crate::util::stats::percentile_sorted(&samples, 99.0),
+            min_s: samples.first().copied().unwrap_or(0.0),
+        }
+    }
+
+    /// Run and immediately print the report line; returns the result for
+    /// further assertions.
+    pub fn report<T, F: FnMut() -> T>(&self, name: &str, f: F) -> BenchResult {
+        let r = self.run(name, f);
+        println!("{}", r.line());
+        r
+    }
+}
+
+/// Print a section header for a bench binary.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Returns a `Bencher` honoring `SBS_BENCH_QUICK=1` for fast CI runs.
+pub fn default_bencher() -> Bencher {
+    if std::env::var("SBS_BENCH_QUICK").as_deref() == Ok("1") {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(30),
+            max_iters: 100_000,
+        };
+        let r = b.run("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.iters > 10);
+        assert!(r.mean_s > 0.0);
+        assert!(r.p50_s <= r.p99_s);
+        assert!(r.min_s <= r.p50_s);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(2.0).ends_with(" s"));
+        assert!(fmt_dur(2e-3).ends_with("ms"));
+        assert!(fmt_dur(2e-6).ends_with("µs"));
+        assert!(fmt_dur(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,221 @@
+//! Command-line argument parsing substrate (the offline registry has no
+//! `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Declarative description of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    /// Long name without the leading `--`.
+    pub name: &'static str,
+    /// Help text.
+    pub help: &'static str,
+    /// Whether the option takes a value (`--key v`) or is a boolean flag.
+    pub takes_value: bool,
+    /// Default value rendered in help (informational only).
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments: flag set, key/value options, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, bool>,
+    values: BTreeMap<String, String>,
+    /// Positional arguments, in order.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// True when `--name` was present as a flag.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Raw string value of `--name`, if given.
+    pub fn value(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// String value with default.
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.value(name).unwrap_or(default).to_string()
+    }
+
+    /// Parse `--name` as `T`, falling back to `default` when absent.
+    /// Returns an error string on malformed input (so callers can print
+    /// usage instead of panicking).
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.value(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|_| format!("invalid value for --{name}: '{s}'")),
+        }
+    }
+}
+
+/// A subcommand parser: spec + collected args.
+#[derive(Debug)]
+pub struct Command {
+    /// Binary or subcommand name for help output.
+    pub name: &'static str,
+    /// One-line description.
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+impl Command {
+    /// New command description.
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    /// Add a boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Add a value-taking option.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default,
+        });
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let lhs = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let def = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {lhs:<24} {}{def}\n", o.help));
+        }
+        s.push_str("  --help                   show this message\n");
+        s
+    }
+
+    /// Parse a raw argv slice. Unknown `--options` are an error; `--help`
+    /// yields `Err(help_text)` for the caller to print.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.help());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.help()))?;
+                if spec.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    out.values.insert(name, v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    out.flags.insert(name, true);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("t", "test")
+            .flag("verbose", "be chatty")
+            .opt("qps", "target qps", Some("10"))
+            .opt("out", "output path", None)
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = cmd()
+            .parse(&sv(&["--verbose", "--qps", "25", "pos1", "--out=x.json"]))
+            .unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.parse_or("qps", 0u32).unwrap(), 25);
+        assert_eq!(a.value("out"), Some("x.json"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn default_when_absent() {
+        let a = cmd().parse(&sv(&[])).unwrap();
+        assert_eq!(a.parse_or("qps", 7.5f64).unwrap(), 7.5);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cmd().parse(&sv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn help_requested() {
+        let e = cmd().parse(&sv(&["--help"])).unwrap_err();
+        assert!(e.contains("--qps"));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cmd().parse(&sv(&["--qps"])).is_err());
+    }
+
+    #[test]
+    fn malformed_value_error() {
+        let a = cmd().parse(&sv(&["--qps", "abc"])).unwrap();
+        assert!(a.parse_or("qps", 0u32).is_err());
+    }
+}

@@ -1,0 +1,256 @@
+//! Analytic execution-time model for simulated DP+EP engines.
+//!
+//! The paper's effects hinge on two structural properties (§3.2):
+//!
+//! 1. **Gated batch service** — a forward pass is non-preemptive.
+//! 2. **Straggler-bounded latency** — under the DP sync barrier the pass
+//!    time is dominated by the *heaviest* DP unit plus synchronization
+//!    overhead, and is otherwise largely batch-size-insensitive.
+//!
+//! We model a prefill pass as
+//! `T = t_sync + max_d (s_token · n_d + s_attn · n_d · c̄_d / 1024)`
+//! where `n_d` is the tokens DP unit `d` processes this pass and `c̄_d` the
+//! mean attention context of those tokens, and a decode step as
+//! `T = t_sync + s_batch · max_d B_d + s_kv · max_d K_d / 1024`
+//! (memory-bound: KV reads dominate).
+//!
+//! Default constants are calibrated so a full 3K-token chunk pass lands
+//! around 0.3–0.4 s and a 35-deep decode step around 50 ms — the scale the
+//! paper's H800/DeepSeek-V3 numbers imply (TTFT SLO 0.8 s at mean input
+//! 1K). `calibrate_*` constructors rescale from measured PJRT timings of
+//! the real nano-MoE engine so the threaded real mode and the simulator
+//! agree.
+
+/// Per-DP prefill workload for one forward pass.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DpPassLoad {
+    /// Tokens this DP unit processes in the pass.
+    pub tokens: u32,
+    /// Mean attention context length of those tokens.
+    pub mean_ctx: f64,
+}
+
+/// Cost model for prefill instances.
+#[derive(Debug, Clone)]
+pub struct PrefillCostModel {
+    /// Fixed synchronization / all-to-all overhead per pass (s).
+    pub t_sync: f64,
+    /// Seconds per prefill token (dense + expert FLOPs).
+    pub s_token: f64,
+    /// Seconds per token per 1024 tokens of attention context.
+    pub s_attn: f64,
+}
+
+impl Default for PrefillCostModel {
+    fn default() -> Self {
+        // Full 3072-token chunk at ~1K mean context:
+        // 0.03 + 3072·1.0e-4 + 3072·(1.0/1.024)·1.2e-5 ≈ 0.375 s.
+        PrefillCostModel {
+            t_sync: 0.03,
+            s_token: 1.0e-4,
+            s_attn: 1.2e-5,
+        }
+    }
+}
+
+impl PrefillCostModel {
+    /// Time of one pass given every DP unit's load (empty slice: no pass).
+    pub fn pass_time(&self, loads: &[DpPassLoad]) -> f64 {
+        let worst = loads
+            .iter()
+            .map(|l| self.s_token * l.tokens as f64 + self.s_attn * l.tokens as f64 * l.mean_ctx / 1024.0)
+            .fold(0.0_f64, f64::max);
+        self.t_sync + worst
+    }
+
+    /// The straggler waste of a pass: total DP-seconds idled at the
+    /// barrier, `Σ_d (T_worst − T_d)` (the "Waste" of paper Fig. 3).
+    pub fn straggler_waste(&self, loads: &[DpPassLoad]) -> f64 {
+        let per: Vec<f64> = loads
+            .iter()
+            .map(|l| self.s_token * l.tokens as f64 + self.s_attn * l.tokens as f64 * l.mean_ctx / 1024.0)
+            .collect();
+        let worst = per.iter().copied().fold(0.0_f64, f64::max);
+        per.iter().map(|t| worst - t).sum()
+    }
+
+    /// Rescale so that a full chunk of `c_chunk` tokens at `ctx` mean
+    /// context takes `measured_s` seconds (calibration from real PJRT
+    /// timings; keeps the t_sync/compute split).
+    pub fn calibrated(c_chunk: u32, ctx: f64, measured_s: f64) -> Self {
+        let base = PrefillCostModel::default();
+        let model_full = base.pass_time(&[DpPassLoad {
+            tokens: c_chunk,
+            mean_ctx: ctx,
+        }]);
+        let k = measured_s / model_full;
+        PrefillCostModel {
+            t_sync: base.t_sync * k,
+            s_token: base.s_token * k,
+            s_attn: base.s_attn * k,
+        }
+    }
+}
+
+/// Per-DP decode state snapshot for one step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DpStepLoad {
+    /// Active batch size on this unit.
+    pub batch: u32,
+    /// Resident KV tokens on this unit.
+    pub kv_tokens: u64,
+}
+
+/// Cost model for decode instances.
+#[derive(Debug, Clone)]
+pub struct DecodeCostModel {
+    /// Fixed synchronization / all-to-all overhead per step (s).
+    pub t_sync: f64,
+    /// Seconds per step per unit of max batch size (kernel launch, MoE
+    /// dispatch width).
+    pub s_batch: f64,
+    /// Seconds per step per 1024 resident KV tokens on the heaviest unit
+    /// (HBM bandwidth bound).
+    pub s_kv: f64,
+}
+
+impl Default for DecodeCostModel {
+    fn default() -> Self {
+        // B=35, K≈87.5K (35 seqs × 2.5K tok):
+        // 0.01 + 35·2e-4 + 85·3.5e-4 ≈ 0.047 s/step  (~21 tok/s/seq).
+        DecodeCostModel {
+            t_sync: 0.010,
+            s_batch: 2.0e-4,
+            s_kv: 3.5e-4,
+        }
+    }
+}
+
+impl DecodeCostModel {
+    /// Time of one synchronized decode step across the instance.
+    pub fn step_time(&self, loads: &[DpStepLoad]) -> f64 {
+        let b_max = loads.iter().map(|l| l.batch).max().unwrap_or(0) as f64;
+        let k_max = loads.iter().map(|l| l.kv_tokens).max().unwrap_or(0) as f64;
+        self.t_sync + self.s_batch * b_max + self.s_kv * k_max / 1024.0
+    }
+}
+
+/// P→D KV-cache transfer model: fixed RTT plus per-token wire time.
+#[derive(Debug, Clone)]
+pub struct KvTransferModel {
+    /// Fixed per-transfer latency (s).
+    pub t_fixed: f64,
+    /// Seconds per 1024 tokens transferred.
+    pub s_per_k: f64,
+}
+
+impl Default for KvTransferModel {
+    fn default() -> Self {
+        // NVLink/RDMA-class: ~5 ms + ~2 ms per 1K tokens.
+        KvTransferModel {
+            t_fixed: 0.005,
+            s_per_k: 0.002,
+        }
+    }
+}
+
+impl KvTransferModel {
+    /// Transfer latency for a sequence of `tokens` KV entries.
+    pub fn transfer_time(&self, tokens: u32) -> f64 {
+        self.t_fixed + self.s_per_k * tokens as f64 / 1024.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pass_time_is_straggler_bound() {
+        let m = PrefillCostModel::default();
+        let balanced = m.pass_time(&[
+            DpPassLoad { tokens: 1500, mean_ctx: 750.0 },
+            DpPassLoad { tokens: 1500, mean_ctx: 750.0 },
+        ]);
+        let skewed = m.pass_time(&[
+            DpPassLoad { tokens: 3000, mean_ctx: 1500.0 },
+            DpPassLoad { tokens: 0, mean_ctx: 0.0 },
+        ]);
+        assert!(skewed > balanced, "{skewed} vs {balanced}");
+        // Same total tokens, roughly double the time when fully skewed.
+        assert!(skewed / balanced > 1.6);
+    }
+
+    #[test]
+    fn batch_insensitive_within_one_dp() {
+        // Two requests of 500 vs one of 1000 on a single DP: identical.
+        let m = PrefillCostModel::default();
+        let a = m.pass_time(&[DpPassLoad { tokens: 1000, mean_ctx: 500.0 }]);
+        let b = m.pass_time(&[DpPassLoad { tokens: 1000, mean_ctx: 500.0 }]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_pass_costs_sync_only() {
+        let m = PrefillCostModel::default();
+        assert_eq!(m.pass_time(&[]), m.t_sync);
+    }
+
+    #[test]
+    fn full_chunk_in_plausible_range() {
+        let m = PrefillCostModel::default();
+        let t = m.pass_time(&[DpPassLoad { tokens: 3072, mean_ctx: 1000.0 }]);
+        assert!((0.2..0.6).contains(&t), "full 3K chunk pass = {t}");
+    }
+
+    #[test]
+    fn straggler_waste_zero_when_balanced() {
+        let m = PrefillCostModel::default();
+        let loads = [
+            DpPassLoad { tokens: 1000, mean_ctx: 500.0 },
+            DpPassLoad { tokens: 1000, mean_ctx: 500.0 },
+        ];
+        assert!(m.straggler_waste(&loads) < 1e-12);
+        let skew = [
+            DpPassLoad { tokens: 2000, mean_ctx: 500.0 },
+            DpPassLoad { tokens: 0, mean_ctx: 0.0 },
+        ];
+        assert!(m.straggler_waste(&skew) > 0.1);
+    }
+
+    #[test]
+    fn calibration_hits_target() {
+        let m = PrefillCostModel::calibrated(3072, 1000.0, 0.5);
+        let t = m.pass_time(&[DpPassLoad { tokens: 3072, mean_ctx: 1000.0 }]);
+        assert!((t - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_step_scales_with_worst_unit() {
+        let m = DecodeCostModel::default();
+        let even = m.step_time(&[
+            DpStepLoad { batch: 30, kv_tokens: 80_000 },
+            DpStepLoad { batch: 30, kv_tokens: 80_000 },
+        ]);
+        let skew = m.step_time(&[
+            DpStepLoad { batch: 30, kv_tokens: 150_000 },
+            DpStepLoad { batch: 30, kv_tokens: 10_000 },
+        ]);
+        assert!(skew > even);
+    }
+
+    #[test]
+    fn decode_step_plausible() {
+        let m = DecodeCostModel::default();
+        let t = m.step_time(&[DpStepLoad { batch: 35, kv_tokens: 87_500 }]);
+        assert!((0.02..0.1).contains(&t), "decode step = {t}");
+    }
+
+    #[test]
+    fn kv_transfer_linear() {
+        let m = KvTransferModel::default();
+        let t1 = m.transfer_time(1024);
+        let t2 = m.transfer_time(2048);
+        assert!((t2 - t1 - 0.002).abs() < 1e-12);
+    }
+}

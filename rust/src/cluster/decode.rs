@@ -1,0 +1,235 @@
+//! Simulated decode engine: synchronized autoregressive stepping across DP
+//! units (§4.3).
+//!
+//! All DP units of a decode instance step together (EP all-to-all barrier);
+//! step time is bound by the heaviest unit's batch size and KV residency
+//! ([`DecodeCostModel`]). Sequences join at step boundaries (continuous
+//! batching) and leave when their output budget is exhausted, freeing KV.
+
+use super::costmodel::{DecodeCostModel, DpStepLoad};
+
+/// An active decode sequence on a DP unit.
+#[derive(Debug, Clone)]
+pub struct ActiveSeq {
+    /// Workload index of the request.
+    pub req: usize,
+    /// Output tokens still to generate.
+    pub remaining: u32,
+    /// Current KV length (grows by 1 per step).
+    pub kv: u32,
+}
+
+/// Token emissions of one completed step.
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    /// `(req, finished)` per token emitted this step.
+    pub emissions: Vec<(usize, bool)>,
+    /// Tokens generated (= active sequences at step start).
+    pub tokens: u32,
+}
+
+/// Hard per-DP-unit resource caps (batch slots and KV memory), matching
+/// real engines' max-num-seqs and KV-block budgets.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeCaps {
+    /// Max concurrent sequences per unit.
+    pub b_max: u32,
+    /// Max resident KV tokens per unit.
+    pub kv_max: u64,
+}
+
+impl Default for DecodeCaps {
+    fn default() -> Self {
+        // Sized for the paper's decode workload: ~35–40 seqs × ~2.5K
+        // tokens pins units near the KV budget (the §4.3.1 "memory
+        // imbalance" regime). Admission checks resident KV at join time;
+        // K then *grows* one token per seq per step, so an imbalanced
+        // policy overshoots the budget on its heaviest units — exactly
+        // the straggler dynamics Fig. 7 visualizes.
+        DecodeCaps {
+            b_max: 64,
+            kv_max: 150_000,
+        }
+    }
+}
+
+/// Simulated decode engine for one instance.
+#[derive(Debug)]
+pub struct DecodeEngine {
+    units: Vec<Vec<ActiveSeq>>,
+    stepping: bool,
+    cost: DecodeCostModel,
+    caps: DecodeCaps,
+}
+
+impl DecodeEngine {
+    /// New engine with `n_dp` DP units.
+    pub fn new(n_dp: u32, cost: DecodeCostModel) -> Self {
+        Self::with_caps(n_dp, cost, DecodeCaps::default())
+    }
+
+    /// New engine with explicit resource caps.
+    pub fn with_caps(n_dp: u32, cost: DecodeCostModel, caps: DecodeCaps) -> Self {
+        DecodeEngine {
+            units: (0..n_dp).map(|_| Vec::new()).collect(),
+            stepping: false,
+            cost,
+            caps,
+        }
+    }
+
+    /// Whether unit `dp` can admit a sequence of `kv` resident tokens
+    /// without violating its batch/KV caps.
+    pub fn can_accept(&self, dp: usize, kv: u32) -> bool {
+        let u = &self.units[dp];
+        u.len() < self.caps.b_max as usize
+            && u.iter().map(|s| s.kv as u64).sum::<u64>() + kv as u64 <= self.caps.kv_max
+    }
+
+    /// Number of DP units.
+    pub fn n_dp(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Whether a step is executing.
+    pub fn stepping(&self) -> bool {
+        self.stepping
+    }
+
+    /// Active sequences across all units.
+    pub fn active(&self) -> usize {
+        self.units.iter().map(Vec::len).sum()
+    }
+
+    /// Per-unit `(batch, kv_tokens)` snapshot — Fig. 7's observable.
+    pub fn unit_loads(&self) -> Vec<DpStepLoad> {
+        self.units
+            .iter()
+            .map(|u| DpStepLoad {
+                batch: u.len() as u32,
+                kv_tokens: u.iter().map(|s| s.kv as u64).sum(),
+            })
+            .collect()
+    }
+
+    /// A sequence joins unit `dp` with `kv` resident tokens (its prompt)
+    /// and `remaining` output tokens to generate.
+    pub fn join(&mut self, dp: usize, req: usize, kv: u32, remaining: u32) {
+        self.units[dp].push(ActiveSeq { req, remaining, kv });
+    }
+
+    /// Start a synchronized step; returns its duration if any sequence is
+    /// active and the engine is idle.
+    pub fn start_step(&mut self) -> Option<f64> {
+        if self.stepping || self.active() == 0 {
+            return None;
+        }
+        self.stepping = true;
+        Some(self.cost.step_time(&self.unit_loads()))
+    }
+
+    /// Finish the in-flight step: every active sequence emits one token
+    /// and grows its KV by one; exhausted sequences leave.
+    pub fn finish_step(&mut self) -> StepOutcome {
+        debug_assert!(self.stepping);
+        self.stepping = false;
+        let mut emissions = Vec::new();
+        for unit in &mut self.units {
+            for s in unit.iter_mut() {
+                s.kv += 1;
+                s.remaining -= 1;
+                emissions.push((s.req, s.remaining == 0));
+            }
+            unit.retain(|s| s.remaining > 0);
+        }
+        StepOutcome {
+            tokens: emissions.len() as u32,
+            emissions,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(n: u32) -> DecodeEngine {
+        DecodeEngine::new(n, DecodeCostModel::default())
+    }
+
+    #[test]
+    fn no_step_when_empty() {
+        let mut e = engine(2);
+        assert!(e.start_step().is_none());
+    }
+
+    #[test]
+    fn sequence_lifecycle() {
+        let mut e = engine(1);
+        e.join(0, 42, 100, 3);
+        assert_eq!(e.active(), 1);
+        for step in 0..3 {
+            let d = e.start_step().unwrap();
+            assert!(d > 0.0);
+            assert!(e.start_step().is_none(), "locked mid-step");
+            let out = e.finish_step();
+            assert_eq!(out.tokens, 1);
+            let (req, done) = out.emissions[0];
+            assert_eq!(req, 42);
+            assert_eq!(done, step == 2);
+        }
+        assert_eq!(e.active(), 0);
+        assert!(e.start_step().is_none());
+    }
+
+    #[test]
+    fn kv_grows_per_step() {
+        let mut e = engine(1);
+        e.join(0, 1, 100, 5);
+        e.start_step().unwrap();
+        e.finish_step();
+        let loads = e.unit_loads();
+        assert_eq!(loads[0].kv_tokens, 101);
+    }
+
+    #[test]
+    fn step_time_bound_by_heaviest_unit() {
+        let mut even = engine(2);
+        even.join(0, 1, 50_000, 10);
+        even.join(1, 2, 50_000, 10);
+        let t_even = even.start_step().unwrap();
+
+        let mut skew = engine(2);
+        skew.join(0, 1, 100_000, 10);
+        skew.join(0, 2, 0, 10);
+        let t_skew = skew.start_step().unwrap();
+        assert!(t_skew > t_even);
+    }
+
+    #[test]
+    fn caps_limit_admission() {
+        let caps = DecodeCaps {
+            b_max: 2,
+            kv_max: 1000,
+        };
+        let e2 = DecodeEngine::with_caps(1, DecodeCostModel::default(), caps);
+        assert!(e2.can_accept(0, 900));
+        assert!(!e2.can_accept(0, 1100)); // kv cap
+        let mut e3 = DecodeEngine::with_caps(1, DecodeCostModel::default(), caps);
+        e3.join(0, 1, 100, 5);
+        e3.join(0, 2, 100, 5);
+        assert!(!e3.can_accept(0, 10)); // batch cap
+    }
+
+    #[test]
+    fn joins_between_steps_take_effect() {
+        let mut e = engine(2);
+        e.join(0, 1, 10, 2);
+        e.start_step().unwrap();
+        e.finish_step();
+        e.join(1, 2, 10, 2);
+        e.start_step().unwrap();
+        let out = e.finish_step();
+        assert_eq!(out.tokens, 2);
+    }
+}

@@ -1,0 +1,18 @@
+//! The resource plane: simulated DP+EP engines (discrete-event) and the
+//! threaded real-engine fabric.
+//!
+//! * [`costmodel`] — analytic execution-time models calibrated against the
+//!   real PJRT engine (H800 substitute; see DESIGN.md §2).
+//! * [`prefill`] / [`decode`] — gated batch engine models with DP sync
+//!   barriers.
+//! * [`sim`] — the discrete-event driver reproducing the paper's cluster
+//!   experiments.
+//! * [`workers`] — threads running *actual* PJRT forward passes behind the
+//!   same scheduler, proving the control plane end-to-end.
+
+pub mod costmodel;
+pub mod decode;
+pub mod events;
+pub mod prefill;
+pub mod sim;
+pub mod workers;

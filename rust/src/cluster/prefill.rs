@@ -1,0 +1,294 @@
+//! Simulated prefill engine: a gated, non-preemptive, chunked batch
+//! processor with per-DP device queues and a DP sync barrier (§3.2's
+//! "Discrete Gated Service").
+//!
+//! Each DP unit owns a FIFO device queue of chunk work. A forward pass
+//! takes up to `C_chunk` tokens from every DP queue simultaneously; its
+//! duration is straggler-bound via [`PrefillCostModel`]. While a pass
+//! runs the engine is locked — newly delivered work waits in the device
+//! queue (the HOL blocking immediate dispatch suffers from).
+
+use super::costmodel::{DpPassLoad, PrefillCostModel};
+use std::collections::VecDeque;
+
+/// One request's prefill work as queued on a DP unit.
+#[derive(Debug, Clone)]
+pub struct ChunkWork {
+    /// Workload index of the request.
+    pub req: usize,
+    /// Prefill tokens still to process (cached prefix already excluded).
+    pub remaining: u32,
+    /// Tokens already processed (attention context accumulated so far,
+    /// including any cached prefix).
+    pub processed: u32,
+    /// Whether any pass has taken tokens from this work yet.
+    pub started: bool,
+}
+
+/// One (request, tokens) slice executed in a pass on a DP unit.
+#[derive(Debug, Clone)]
+pub struct PassItem {
+    /// DP rank within the instance.
+    pub dp: usize,
+    /// Workload index of the request.
+    pub req: usize,
+    /// Tokens of this request processed in this pass.
+    pub tokens: u32,
+    /// True if this is the first pass containing tokens of the request
+    /// (ends its device-side queueing).
+    pub first_chunk: bool,
+    /// True if the request's prefill completes in this pass (first token
+    /// is produced at pass end).
+    pub finishes: bool,
+}
+
+/// Statistics and contents of one forward pass.
+#[derive(Debug, Clone)]
+pub struct PassRecord {
+    /// Work slices executed.
+    pub items: Vec<PassItem>,
+    /// Pass duration from the cost model.
+    pub duration: f64,
+    /// Tokens actually processed.
+    pub used_tokens: u32,
+    /// Theoretical capacity (`C_chunk × n_dp`) — for chunk utilization.
+    pub capacity: u32,
+    /// DP-seconds wasted at the sync barrier (straggler bubbles).
+    pub straggler_waste: f64,
+}
+
+/// The simulated prefill engine for one instance.
+#[derive(Debug)]
+pub struct PrefillEngine {
+    /// Per-DP device queues.
+    queues: Vec<VecDeque<ChunkWork>>,
+    /// Max tokens per DP per pass.
+    c_chunk: u32,
+    /// Whether a pass is currently executing (engine locked).
+    busy: bool,
+    cost: PrefillCostModel,
+}
+
+impl PrefillEngine {
+    /// New idle engine with `n_dp` DP units.
+    pub fn new(n_dp: u32, c_chunk: u32, cost: PrefillCostModel) -> Self {
+        PrefillEngine {
+            queues: (0..n_dp).map(|_| VecDeque::new()).collect(),
+            c_chunk,
+            busy: false,
+            cost,
+        }
+    }
+
+    /// Number of DP units.
+    pub fn n_dp(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Whether the engine is mid-pass.
+    pub fn busy(&self) -> bool {
+        self.busy
+    }
+
+    /// Total tokens waiting in device queues.
+    pub fn backlog_tokens(&self) -> u32 {
+        self.queues
+            .iter()
+            .flat_map(|q| q.iter())
+            .map(|w| w.remaining)
+            .sum()
+    }
+
+    /// Tokens waiting on one DP unit.
+    pub fn dp_backlog(&self, dp: usize) -> u32 {
+        self.queues[dp].iter().map(|w| w.remaining).sum()
+    }
+
+    /// Deliver work to a DP unit's device queue. `effective_tokens` is the
+    /// prefill still to compute (prefix-cache hits excluded);
+    /// `already_cached` seeds the attention context.
+    pub fn enqueue(&mut self, dp: usize, req: usize, effective_tokens: u32, already_cached: u32) {
+        self.queues[dp].push_back(ChunkWork {
+            req,
+            remaining: effective_tokens,
+            processed: already_cached,
+            started: false,
+        });
+    }
+
+    /// Attempt to start a forward pass at `now`. Returns the pass record
+    /// (with `duration`) if the engine was idle and had work; the caller
+    /// schedules completion at `now + duration` and then calls
+    /// [`Self::finish_pass`].
+    pub fn start_pass(&mut self) -> Option<PassRecord> {
+        if self.busy {
+            return None;
+        }
+        let mut items = Vec::new();
+        let mut loads = vec![DpPassLoad::default(); self.queues.len()];
+        let mut used = 0u32;
+        for (dp, queue) in self.queues.iter_mut().enumerate() {
+            let mut budget = self.c_chunk;
+            let mut ctx_weighted = 0.0f64;
+            let mut taken = 0u32;
+            while budget > 0 {
+                let Some(front) = queue.front_mut() else { break };
+                let take = front.remaining.min(budget);
+                let is_first = !front.started;
+                front.started = true;
+                // Mean attention context of these tokens: processed so far
+                // plus half the slice (causal attention grows linearly).
+                let mean_ctx = front.processed as f64 + take as f64 / 2.0;
+                ctx_weighted += mean_ctx * take as f64;
+                front.remaining -= take;
+                front.processed += take;
+                let finishes = front.remaining == 0;
+                items.push(PassItem {
+                    dp,
+                    req: front.req,
+                    tokens: take,
+                    first_chunk: is_first,
+                    finishes,
+                });
+                budget -= take;
+                taken += take;
+                if finishes {
+                    queue.pop_front();
+                } else {
+                    break; // chunk budget exhausted mid-request
+                }
+            }
+            if taken > 0 {
+                loads[dp] = DpPassLoad {
+                    tokens: taken,
+                    mean_ctx: ctx_weighted / taken as f64,
+                };
+                used += taken;
+            }
+        }
+        if used == 0 {
+            return None;
+        }
+        self.busy = true;
+        Some(PassRecord {
+            duration: self.cost.pass_time(&loads),
+            straggler_waste: self.cost.straggler_waste(&loads),
+            used_tokens: used,
+            capacity: self.c_chunk * self.queues.len() as u32,
+            items,
+        })
+    }
+
+    /// Mark the in-flight pass complete (engine unlocks).
+    pub fn finish_pass(&mut self) {
+        debug_assert!(self.busy);
+        self.busy = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(n_dp: u32, chunk: u32) -> PrefillEngine {
+        PrefillEngine::new(n_dp, chunk, PrefillCostModel::default())
+    }
+
+    #[test]
+    fn idle_engine_with_no_work_does_not_start() {
+        let mut e = engine(2, 1000);
+        assert!(e.start_pass().is_none());
+    }
+
+    #[test]
+    fn single_request_single_pass() {
+        let mut e = engine(1, 1000);
+        e.enqueue(0, 7, 600, 0);
+        let p = e.start_pass().unwrap();
+        assert_eq!(p.used_tokens, 600);
+        assert_eq!(p.items.len(), 1);
+        assert!(p.items[0].finishes);
+        assert_eq!(p.capacity, 1000);
+        assert!(e.busy());
+        assert!(e.start_pass().is_none(), "locked while busy");
+        e.finish_pass();
+        assert!(!e.busy());
+        assert_eq!(e.backlog_tokens(), 0);
+    }
+
+    #[test]
+    fn long_request_spans_passes() {
+        let mut e = engine(1, 1000);
+        e.enqueue(0, 1, 2500, 0);
+        let p1 = e.start_pass().unwrap();
+        assert_eq!(p1.used_tokens, 1000);
+        assert!(!p1.items[0].finishes);
+        e.finish_pass();
+        let p2 = e.start_pass().unwrap();
+        assert_eq!(p2.used_tokens, 1000);
+        e.finish_pass();
+        let p3 = e.start_pass().unwrap();
+        assert_eq!(p3.used_tokens, 500);
+        assert!(p3.items[0].finishes);
+        e.finish_pass();
+        assert!(e.start_pass().is_none());
+    }
+
+    #[test]
+    fn multiple_requests_pack_into_chunk() {
+        let mut e = engine(1, 1000);
+        e.enqueue(0, 1, 400, 0);
+        e.enqueue(0, 2, 300, 0);
+        e.enqueue(0, 3, 600, 0);
+        let p = e.start_pass().unwrap();
+        assert_eq!(p.used_tokens, 1000); // 400 + 300 + 300 (partial)
+        assert_eq!(p.items.len(), 3);
+        assert!(p.items[0].finishes && p.items[1].finishes);
+        assert!(!p.items[2].finishes);
+        e.finish_pass();
+        let p2 = e.start_pass().unwrap();
+        assert_eq!(p2.used_tokens, 300);
+        assert!(p2.items[0].finishes);
+    }
+
+    #[test]
+    fn straggler_bound_duration() {
+        let mut balanced = engine(2, 2000);
+        balanced.enqueue(0, 1, 1000, 0);
+        balanced.enqueue(1, 2, 1000, 0);
+        let pb = balanced.start_pass().unwrap();
+
+        let mut skewed = engine(2, 2000);
+        skewed.enqueue(0, 1, 1000, 0);
+        skewed.enqueue(0, 2, 1000, 0);
+        let ps = skewed.start_pass().unwrap();
+
+        assert_eq!(pb.used_tokens, ps.used_tokens);
+        assert!(ps.duration > pb.duration, "{} vs {}", ps.duration, pb.duration);
+        assert!(ps.straggler_waste > pb.straggler_waste);
+    }
+
+    #[test]
+    fn cached_prefix_seeds_context() {
+        // Same compute tokens, but the cached variant attends over more
+        // context — slightly longer pass.
+        let mut cold = engine(1, 4000);
+        cold.enqueue(0, 1, 1000, 0);
+        let pc = cold.start_pass().unwrap();
+        let mut warm = engine(1, 4000);
+        warm.enqueue(0, 1, 1000, 2000);
+        let pw = warm.start_pass().unwrap();
+        assert!(pw.duration > pc.duration);
+        assert_eq!(pw.used_tokens, pc.used_tokens);
+    }
+
+    #[test]
+    fn utilization_reflects_imbalance() {
+        let mut e = engine(4, 1000);
+        e.enqueue(0, 1, 1000, 0); // only DP0 has work
+        let p = e.start_pass().unwrap();
+        assert_eq!(p.used_tokens, 1000);
+        assert_eq!(p.capacity, 4000);
+        // 25% chunk utilization — the Table 1 effect.
+    }
+}

@@ -1,0 +1,748 @@
+//! Discrete-event simulation of a P/D-disaggregated DP+EP serving
+//! cluster.
+//!
+//! This is the experimental substrate standing in for the paper's H800
+//! production cluster: gated prefill engines with per-DP device queues and
+//! sync barriers ([`super::prefill`]), synchronized decode engines
+//! ([`super::decode`]), a KV-transfer fabric, and either the staggered
+//! batch scheduler or an immediate-dispatch baseline in the control plane.
+//! Time is virtual; every run is deterministic given the workload seed.
+
+use super::costmodel::{DecodeCostModel, DpStepLoad, KvTransferModel, PrefillCostModel};
+use super::decode::{DecodeCaps, DecodeEngine};
+use super::events::EventQueue;
+use super::prefill::PrefillEngine;
+use crate::metrics::{RequestMetrics, ServingReport};
+use crate::scheduler::baseline::{ImmediatePolicy, ImmediateScheduler};
+use crate::scheduler::decode::{schedule_batch, DecodeSchedConfig};
+use crate::scheduler::pbaa::Assignment;
+use crate::scheduler::staggered::{
+    SchedulerAction, SchedulerEvent, StaggeredConfig, StaggeredScheduler,
+};
+use crate::scheduler::state::DpState;
+use crate::scheduler::types::{DpUnitId, Request};
+use crate::workload::WorkloadSpec;
+
+/// Prefill control-plane mode.
+#[derive(Debug, Clone)]
+pub enum SchedMode {
+    /// The paper's staggered batch scheduler.
+    Staggered(StaggeredConfig),
+    /// Immediate dispatch with a classical policy (baseline).
+    Immediate(ImmediatePolicy),
+}
+
+/// Decode placement mode (§4.3 vs baselines).
+#[derive(Debug, Clone)]
+pub enum DecodePlacement {
+    /// Algorithm 3: IQR masking + lexicographic ⟨B, K⟩.
+    IqrLex(DecodeSchedConfig),
+    /// Blind hash/random routing (the Fig. 7–8 baseline).
+    Random,
+    /// Blind strict round-robin (ablation).
+    RoundRobin,
+}
+
+/// Cluster shape.
+#[derive(Debug, Clone)]
+pub struct SimTopology {
+    /// Prefill instances in the pool.
+    pub n_prefill: u32,
+    /// DP-Attention units per prefill instance.
+    pub dp_prefill: u32,
+    /// Prefill chunk size (tokens per DP per pass).
+    pub c_chunk: u32,
+    /// Decode instances.
+    pub n_decode: u32,
+    /// DP units per decode instance.
+    pub dp_decode: u32,
+}
+
+impl SimTopology {
+    /// The paper's §5.1 topology: 3P1D, prefill DP=8, decode DP=32.
+    pub fn paper_3p1d(c_chunk: u32) -> Self {
+        SimTopology {
+            n_prefill: 3,
+            dp_prefill: 8,
+            c_chunk,
+            n_decode: 1,
+            dp_decode: 32,
+        }
+    }
+}
+
+/// Full simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Cluster shape.
+    pub topology: SimTopology,
+    /// Request workload.
+    pub workload: WorkloadSpec,
+    /// Prefill control plane.
+    pub mode: SchedMode,
+    /// Decode placement.
+    pub decode: DecodePlacement,
+    /// Prefill execution-time model.
+    pub prefill_cost: PrefillCostModel,
+    /// Decode execution-time model.
+    pub decode_cost: DecodeCostModel,
+    /// P→D KV transfer model.
+    pub kv_transfer: KvTransferModel,
+    /// Scheduler→instance network latency (s).
+    pub l_net: f64,
+    /// Engine batch-formation delay: after a pass completes, the engine
+    /// gathers its device queue for this long before launching the next
+    /// pass (lets an EndForward-triggered dispatch merge with leftovers).
+    pub formation_delay: f64,
+    /// Ignore metrics for requests arriving before this time (s).
+    pub warmup: f64,
+    /// Fig. 7 sampling interval for decode KV snapshots (0 = off).
+    pub kv_sample_interval: f64,
+    /// Hard wall time to stop even if requests remain (safety).
+    pub max_time: f64,
+    /// Fault injection: probability that an instance's EndForward signal
+    /// is silently lost (exercises the §4.1.2 watchdog safety path).
+    pub fault_lose_endforward: f64,
+    /// Per-DP decode resource caps (batch slots / KV memory).
+    pub decode_caps: DecodeCaps,
+}
+
+impl SimConfig {
+    /// Paper Fig. 6(a) setup at `load` × the calibrated baseline peak QPS
+    /// (150 QPS — the immediate-dispatch SLO point found by the Table 1
+    /// search; see `crate::config::FIG6A_BASELINE_PEAK_QPS`).
+    pub fn paper_fig6a(load: f64) -> Self {
+        let qps = 150.0 * load;
+        SimConfig {
+            topology: SimTopology::paper_3p1d(3072),
+            workload: WorkloadSpec::paper_short(qps, 120.0, 42),
+            mode: SchedMode::Staggered(StaggeredConfig::default()),
+            decode: DecodePlacement::IqrLex(DecodeSchedConfig::default()),
+            prefill_cost: PrefillCostModel::default(),
+            decode_cost: DecodeCostModel::default(),
+            kv_transfer: KvTransferModel::default(),
+            l_net: 0.002,
+            formation_delay: 0.004,
+            warmup: 20.0,
+            kv_sample_interval: 0.0,
+            max_time: 1.0e4,
+            fault_lose_endforward: 0.0,
+            decode_caps: DecodeCaps::default(),
+        }
+    }
+
+    /// Switch to the immediate-dispatch baseline.
+    pub fn with_immediate(mut self, policy: ImmediatePolicy) -> Self {
+        self.mode = SchedMode::Immediate(policy);
+        self
+    }
+}
+
+/// One decode join waiting for placement.
+#[derive(Debug, Clone)]
+struct PendingJoin {
+    req: usize,
+    kv: u32,
+    remaining_out: u32,
+}
+
+/// Simulation events.
+enum Ev {
+    Arrival(usize),
+    SchedTimer,
+    Deliver {
+        instance: u32,
+        assignments: Vec<Assignment>,
+        dispatched_at: f64,
+    },
+    PassDone {
+        instance: u32,
+    },
+    /// Batch-formation window elapsed: the engine may launch its next pass.
+    TryStart {
+        instance: u32,
+    },
+    KvReady(usize),
+    StepDone {
+        instance: u32,
+    },
+    KvSample,
+}
+
+/// Simulation output.
+#[derive(Debug)]
+pub struct SimReport {
+    /// Aggregate serving metrics (TTFT, queue decomposition, throughput,
+    /// chunk utilization).
+    pub report: ServingReport,
+    /// Decode KV snapshots `(t, per-unit loads)` for Fig. 7.
+    pub kv_series: Vec<(f64, Vec<DpStepLoad>)>,
+    /// Total prefill forward passes executed.
+    pub prefill_passes: u64,
+    /// Total decode steps executed.
+    pub decode_steps: u64,
+    /// Seconds of decode execution (Σ step durations, post-warmup).
+    pub decode_busy_s: f64,
+    /// Decode tokens generated post-warmup.
+    pub decode_tokens: u64,
+    /// Accumulated straggler DP-seconds (Fig. 3 "waste").
+    pub straggler_waste_s: f64,
+    /// Final adaptive interval (SBS mode; 0 for baselines).
+    pub i_opt_final: f64,
+    /// Requests completed.
+    pub completed: usize,
+    /// Requests generated.
+    pub offered: usize,
+    /// EndForward signals eaten by fault injection.
+    pub lost_signals: u64,
+    /// Virtual time at simulation end.
+    pub t_end: f64,
+}
+
+impl SimReport {
+    /// Mean/σ of per-unit KV across the sampled series (Fig. 7 band).
+    pub fn kv_band(&self) -> (f64, f64) {
+        let mut all_means = Vec::new();
+        let mut all_stds = Vec::new();
+        for (_, loads) in &self.kv_series {
+            let xs: Vec<f64> = loads.iter().map(|l| l.kv_tokens as f64).collect();
+            all_means.push(crate::util::stats::mean(&xs));
+            all_stds.push(crate::util::stats::stddev(&xs));
+        }
+        (
+            crate::util::stats::mean(&all_means),
+            crate::util::stats::mean(&all_stds),
+        )
+    }
+}
+
+/// The simulation driver.
+pub struct Simulation {
+    cfg: SimConfig,
+    q: EventQueue<Ev>,
+    requests: Vec<Request>,
+    metrics: Vec<RequestMetrics>,
+    effective: Vec<u32>, // prefill tokens after cache hits
+    // Prefill plane.
+    prefill: Vec<PrefillEngine>,
+    inflight_pass: Vec<Option<(super::prefill::PassRecord, f64)>>,
+    sbs: Option<StaggeredScheduler>,
+    imm: Option<ImmediateScheduler>,
+    // Decode plane.
+    decode: Vec<DecodeEngine>,
+    decode_states: Vec<DpState>, // pooled across decode instances
+    pending_joins: Vec<PendingJoin>,
+    rr_cursor: usize,
+    place_rng: crate::util::Rng,
+    fault_rng: crate::util::Rng,
+    /// EndForward signals eaten by fault injection.
+    pub lost_signals: u64,
+    // Accounting.
+    report: ServingReport,
+    kv_series: Vec<(f64, Vec<DpStepLoad>)>,
+    prefill_passes: u64,
+    decode_steps: u64,
+    decode_busy_s: f64,
+    decode_tokens: u64,
+    straggler_waste_s: f64,
+    completed: usize,
+    rejected: u64,
+}
+
+impl Simulation {
+    /// Run the configured simulation to completion.
+    pub fn run(cfg: &SimConfig) -> SimReport {
+        let requests = cfg.workload.generate();
+        Self::run_trace(cfg, requests)
+    }
+
+    /// Run against an explicit request trace (replay path) instead of
+    /// generating from `cfg.workload`.
+    pub fn run_trace(cfg: &SimConfig, requests: Vec<Request>) -> SimReport {
+        let mut sim = Simulation::new(cfg.clone(), requests);
+        sim.prime();
+        sim.drive();
+        sim.finish()
+    }
+
+    fn new(cfg: SimConfig, requests: Vec<Request>) -> Self {
+        let metrics = requests
+            .iter()
+            .map(|r| RequestMetrics::arrive(r.arrival, r.input_tokens))
+            .collect();
+        let effective = requests.iter().map(|r| r.input_tokens).collect();
+        let t = &cfg.topology;
+        let prefill = (0..t.n_prefill)
+            .map(|_| PrefillEngine::new(t.dp_prefill, t.c_chunk, cfg.prefill_cost.clone()))
+            .collect();
+        let inflight_pass = (0..t.n_prefill).map(|_| None).collect();
+        let decode = (0..t.n_decode)
+            .map(|_| DecodeEngine::with_caps(t.dp_decode, cfg.decode_cost.clone(), cfg.decode_caps))
+            .collect();
+        let mut decode_states = Vec::new();
+        for i in 0..t.n_decode {
+            for d in 0..t.dp_decode {
+                decode_states.push(DpState::new(DpUnitId::new(i, d), 0));
+            }
+        }
+        let (sbs, imm) = match &cfg.mode {
+            SchedMode::Staggered(sc) => (
+                Some(StaggeredScheduler::new(
+                    sc.clone(),
+                    t.n_prefill,
+                    t.dp_prefill,
+                    t.c_chunk,
+                )),
+                None,
+            ),
+            SchedMode::Immediate(p) => (
+                None,
+                Some(ImmediateScheduler::new(*p, t.n_prefill, t.dp_prefill, t.c_chunk)),
+            ),
+        };
+        Simulation {
+            q: EventQueue::new(),
+            requests,
+            metrics,
+            effective,
+            prefill,
+            inflight_pass,
+            sbs,
+            imm,
+            decode,
+            decode_states,
+            pending_joins: Vec::new(),
+            rr_cursor: 0,
+            place_rng: crate::util::Rng::new(cfg.workload.seed ^ 0xDECD_E000),
+            fault_rng: crate::util::Rng::new(cfg.workload.seed ^ 0xFA17_0000),
+            lost_signals: 0,
+            report: ServingReport::new(0.0),
+            kv_series: Vec::new(),
+            prefill_passes: 0,
+            decode_steps: 0,
+            decode_busy_s: 0.0,
+            decode_tokens: 0,
+            straggler_waste_s: 0.0,
+            completed: 0,
+            rejected: 0,
+            cfg,
+        }
+    }
+
+    fn prime(&mut self) {
+        for i in 0..self.requests.len() {
+            self.q.push(self.requests[i].arrival, Ev::Arrival(i));
+        }
+        if self.cfg.kv_sample_interval > 0.0 {
+            self.q.push(self.cfg.kv_sample_interval, Ev::KvSample);
+        }
+    }
+
+    fn drive(&mut self) {
+        let total = self.requests.len();
+        while let Some((now, ev)) = self.q.pop() {
+            if now > self.cfg.max_time {
+                log::warn!("simulation hit max_time={} with {} requests unfinished",
+                    self.cfg.max_time, total - self.completed);
+                break;
+            }
+            match ev {
+                Ev::Arrival(i) => self.on_arrival(i, now),
+                Ev::SchedTimer => {
+                    self.sbs_event(SchedulerEvent::Timer { now });
+                }
+                Ev::Deliver {
+                    instance,
+                    assignments,
+                    dispatched_at,
+                } => self.on_deliver(instance, assignments, dispatched_at, now),
+                Ev::PassDone { instance } => self.on_pass_done(instance, now),
+                Ev::TryStart { instance } => self.try_start_pass(instance, now),
+                Ev::KvReady(i) => self.on_kv_ready(i, now),
+                Ev::StepDone { instance } => self.on_step_done(instance, now),
+                Ev::KvSample => {
+                    // Only steady-state samples: past warmup, before the
+                    // arrival horizon ends (the drain tail would bias the
+                    // dispersion estimate down).
+                    if now >= self.cfg.warmup && now <= self.cfg.workload.duration {
+                        let mut snapshot = Vec::new();
+                        for e in &self.decode {
+                            snapshot.extend(e.unit_loads());
+                        }
+                        self.kv_series.push((now, snapshot));
+                    }
+                    if self.completed < total && now <= self.cfg.workload.duration {
+                        self.q
+                            .push(now + self.cfg.kv_sample_interval, Ev::KvSample);
+                    }
+                }
+            }
+            if self.completed == total {
+                break;
+            }
+        }
+    }
+
+    fn on_arrival(&mut self, i: usize, now: f64) {
+        let req = self.requests[i].clone();
+        match (&mut self.sbs, &mut self.imm) {
+            (Some(_), _) => {
+                self.sbs_event(SchedulerEvent::Arrival { request: req, now });
+            }
+            (_, Some(imm)) => {
+                // Immediate dispatch: bind to an instance right now.
+                let a = imm.dispatch(req);
+                self.metrics[i].t_dispatch = now;
+                self.q.push(
+                    now + self.cfg.l_net,
+                    Ev::Deliver {
+                        instance: a.unit.instance,
+                        assignments: vec![a],
+                        dispatched_at: now,
+                    },
+                );
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Feed one event to the SBS scheduler and execute resulting actions.
+    fn sbs_event(&mut self, ev: SchedulerEvent) {
+        let Some(sbs) = self.sbs.as_mut() else { return };
+        let actions = sbs.on_event(ev);
+        for act in actions {
+            match act {
+                SchedulerAction::Dispatch(batch) => {
+                    for a in &batch.assignments {
+                        self.metrics[a.request.id as usize].t_dispatch = batch.at;
+                    }
+                    self.q.push(
+                        batch.at + self.cfg.l_net,
+                        Ev::Deliver {
+                            instance: batch.instance,
+                            assignments: batch.assignments,
+                            dispatched_at: batch.at,
+                        },
+                    );
+                }
+                SchedulerAction::ArmTimer { at } => {
+                    self.q.push(at, Ev::SchedTimer);
+                }
+                SchedulerAction::Reject(r) => {
+                    self.rejected += 1;
+                    // Mark as completed-with-rejection so the run drains.
+                    self.completed += 1;
+                    let _ = r;
+                }
+                SchedulerAction::Watchdog(_) => {}
+            }
+        }
+    }
+
+    fn on_deliver(&mut self, instance: u32, assignments: Vec<Assignment>, _dispatched_at: f64, now: f64) {
+        for a in &assignments {
+            let i = a.request.id as usize;
+            let eff = a.request.input_tokens - a.cached_tokens;
+            self.effective[i] = eff.max(1);
+            // Tokens have physically arrived on the device: flight→queued.
+            if let Some(sbs) = self.sbs.as_mut() {
+                sbs.state.dp_mut(a.unit).on_ack(self.effective[i]);
+            }
+            if let Some(imm) = self.imm.as_mut() {
+                imm.state.dp_mut(a.unit).on_ack(self.effective[i]);
+            }
+            self.prefill[instance as usize].enqueue(
+                a.unit.dp as usize,
+                i,
+                self.effective[i],
+                a.cached_tokens,
+            );
+        }
+        self.try_start_pass(instance, now);
+    }
+
+    fn try_start_pass(&mut self, instance: u32, now: f64) {
+        let engine = &mut self.prefill[instance as usize];
+        if let Some(pass) = engine.start_pass() {
+            // Device-side queueing ends now for first-chunk items.
+            for item in &pass.items {
+                if item.first_chunk {
+                    let m = &mut self.metrics[item.req];
+                    if m.t_exec_start < 0.0 {
+                        m.t_exec_start = now;
+                    }
+                }
+            }
+            let done_at = now + pass.duration;
+            self.inflight_pass[instance as usize] = Some((pass, now));
+            self.q.push(done_at, Ev::PassDone { instance });
+        }
+    }
+
+    fn on_pass_done(&mut self, instance: u32, now: f64) {
+        let (pass, _started) = self.inflight_pass[instance as usize]
+            .take()
+            .expect("pass done without inflight pass");
+        self.prefill[instance as usize].finish_pass();
+        self.prefill_passes += 1;
+        let after_warmup = now >= self.cfg.warmup;
+        if after_warmup {
+            self.report
+                .chunk_util
+                .record_pass(pass.used_tokens as u64, pass.capacity as u64);
+            self.straggler_waste_s += pass.straggler_waste;
+            self.report
+                .throughput
+                .add_tokens(now, pass.used_tokens as u64, 0);
+        }
+        // Consumption feedback to the control plane's capacity model.
+        for item in &pass.items {
+            let unit = DpUnitId::new(instance, item.dp as u32);
+            if let Some(sbs) = self.sbs.as_mut() {
+                sbs.state.dp_mut(unit).on_consumed(item.tokens);
+            }
+            if let Some(imm) = self.imm.as_mut() {
+                imm.state.dp_mut(unit).on_consumed(item.tokens);
+            }
+        }
+        // First tokens + decode handoff.
+        for item in &pass.items {
+            if item.finishes {
+                let i = item.req;
+                self.metrics[i].t_first_token = now;
+                let out = self.requests[i].output_tokens;
+                if out <= 1 {
+                    self.complete_request(i, now, 1);
+                } else {
+                    let transfer = self.cfg.kv_transfer.transfer_time(self.requests[i].input_tokens);
+                    self.q.push(now + transfer, Ev::KvReady(i));
+                }
+            }
+        }
+        // Feedback to the scheduler — unless fault injection eats the
+        // signal (network partition / silent instance fault, §4.1.2; the
+        // watchdog must recover liveness).
+        let lost = self.cfg.fault_lose_endforward > 0.0
+            && self.fault_rng.chance(self.cfg.fault_lose_endforward);
+        if lost {
+            self.lost_signals += 1;
+        } else {
+            let backlog = self.prefill[instance as usize].backlog_tokens();
+            if self.sbs.is_some() {
+                self.sbs_event(SchedulerEvent::EndForward {
+                    instance,
+                    t_measured: pass.duration,
+                    remaining: Some(backlog),
+                    now,
+                });
+            }
+            if let Some(imm) = self.imm.as_mut() {
+                imm.on_end_forward(instance, now);
+            }
+        }
+        // The gated engine keeps chewing its device queue autonomously,
+        // after a short batch-formation window so an EndForward-triggered
+        // dispatch can merge with any leftover backlog (avoids degenerate
+        // spillover passes).
+        self.q
+            .push(now + self.cfg.formation_delay, Ev::TryStart { instance });
+    }
+
+    fn on_kv_ready(&mut self, i: usize, now: f64) {
+        let kv = self.requests[i].input_tokens;
+        let remaining_out = self.requests[i].output_tokens - 1;
+        self.pending_joins.push(PendingJoin {
+            req: i,
+            kv,
+            remaining_out,
+        });
+        self.place_joins();
+        for inst in 0..self.decode.len() {
+            self.try_start_step(inst as u32, now);
+        }
+    }
+
+    /// Place all pending joins across the pooled decode DP units using the
+    /// configured policy, respecting each unit's hard batch/KV caps.
+    /// Joins with no admissible unit stay parked (retried at the next step
+    /// boundary) — this is the decode-side admission backpressure a real
+    /// engine's KV-block budget enforces.
+    fn place_joins(&mut self) {
+        if self.pending_joins.is_empty() {
+            return;
+        }
+        // Refresh the pooled DP state from engine ground truth.
+        let dp_per = self.cfg.topology.dp_decode as usize;
+        for (inst, e) in self.decode.iter().enumerate() {
+            for (d, load) in e.unit_loads().iter().enumerate() {
+                let s = &mut self.decode_states[inst * dp_per + d];
+                s.batch = load.batch;
+                s.kv_tokens = load.kv_tokens;
+            }
+        }
+        let mut joins = std::mem::take(&mut self.pending_joins);
+        // Fill-the-valley placement order: heaviest first (§4.3.2); the
+        // per-join snapshot semantics of Algorithm 3 are preserved by
+        // placing one request at a time against admissible units.
+        joins.sort_by(|a, b| (b.kv + b.remaining_out).cmp(&(a.kv + a.remaining_out)));
+        let mut parked = Vec::new();
+        for j in joins {
+            // Admissible units under hard caps.
+            let admissible: Vec<usize> = (0..self.decode_states.len())
+                .filter(|&u| {
+                    let inst = u / dp_per;
+                    let dp = u % dp_per;
+                    self.decode[inst].can_accept(dp, j.kv)
+                })
+                .collect();
+            if admissible.is_empty() {
+                parked.push(j);
+                continue;
+            }
+            // Run the policy over a view of the admissible units.
+            let mut view: Vec<DpState> = admissible
+                .iter()
+                .map(|&u| self.decode_states[u].clone())
+                .collect();
+            let req = Request::new(j.req as u64, j.kv, j.remaining_out, 0.0);
+            let chosen_view_idx = match &self.cfg.decode {
+                DecodePlacement::IqrLex(cfg) => {
+                    let a = schedule_batch(cfg, vec![req], &mut view);
+                    view.iter().position(|d| d.id == a[0].unit).unwrap()
+                }
+                DecodePlacement::Random => self.place_rng.index(view.len()),
+                DecodePlacement::RoundRobin => {
+                    let i = self.rr_cursor % view.len();
+                    self.rr_cursor = self.rr_cursor.wrapping_add(1);
+                    i
+                }
+            };
+            let u = admissible[chosen_view_idx];
+            self.decode_states[u].on_decode_join(j.kv + j.remaining_out);
+            let inst = u / dp_per;
+            let dp = u % dp_per;
+            self.decode[inst].join(dp, j.req, j.kv, j.remaining_out);
+        }
+        self.pending_joins = parked;
+    }
+
+    fn try_start_step(&mut self, instance: u32, now: f64) {
+        if let Some(duration) = self.decode[instance as usize].start_step() {
+            if now >= self.cfg.warmup {
+                self.decode_busy_s += duration;
+            }
+            self.q.push(now + duration, Ev::StepDone { instance });
+        }
+    }
+
+    fn on_step_done(&mut self, instance: u32, now: f64) {
+        let out = self.decode[instance as usize].finish_step();
+        self.decode_steps += 1;
+        if now >= self.cfg.warmup {
+            self.report.throughput.add_tokens(now, 0, out.tokens as u64);
+            self.decode_tokens += out.tokens as u64;
+        }
+        for (req, finished) in out.emissions {
+            if finished {
+                let total_out = self.requests[req].output_tokens;
+                self.complete_request(req, now, total_out);
+            }
+        }
+        self.place_joins();
+        self.try_start_step(instance, now);
+    }
+
+    fn complete_request(&mut self, i: usize, now: f64, tokens_out: u32) {
+        let m = &mut self.metrics[i];
+        m.t_done = now;
+        m.output_tokens = tokens_out;
+        self.completed += 1;
+        if self.requests[i].arrival >= self.cfg.warmup {
+            let m = self.metrics[i];
+            self.report.absorb(&m);
+        }
+    }
+
+    fn finish(mut self) -> SimReport {
+        self.report.rejected = self.rejected;
+        SimReport {
+            report: self.report,
+            kv_series: self.kv_series,
+            prefill_passes: self.prefill_passes,
+            decode_steps: self.decode_steps,
+            decode_busy_s: self.decode_busy_s,
+            decode_tokens: self.decode_tokens,
+            straggler_waste_s: self.straggler_waste_s,
+            i_opt_final: self.sbs.as_ref().map(|s| s.i_opt()).unwrap_or(0.0),
+            completed: self.completed,
+            offered: self.requests.len(),
+            lost_signals: self.lost_signals,
+            t_end: self.q.now(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(qps: f64, staggered: bool) -> SimConfig {
+        let mut cfg = SimConfig::paper_fig6a(1.0);
+        cfg.workload = WorkloadSpec::paper_short(qps, 30.0, 7);
+        cfg.warmup = 5.0;
+        if !staggered {
+            cfg = cfg.with_immediate(ImmediatePolicy::RoundRobin);
+        }
+        cfg
+    }
+
+    #[test]
+    fn sbs_run_completes_all_requests() {
+        let cfg = small_cfg(10.0, true);
+        let r = Simulation::run(&cfg);
+        assert_eq!(r.completed, r.offered, "all requests finish");
+        assert!(r.report.ttft.count() > 0);
+        assert!(r.prefill_passes > 0);
+        assert!(r.decode_steps > 0);
+        assert!(r.i_opt_final > 0.0);
+    }
+
+    #[test]
+    fn immediate_run_completes_all_requests() {
+        let cfg = small_cfg(10.0, false);
+        let r = Simulation::run(&cfg);
+        assert_eq!(r.completed, r.offered);
+        assert!(r.report.ttft.count() > 0);
+    }
+
+    #[test]
+    fn sbs_beats_immediate_on_device_queue() {
+        // The core §3.2 claim: SBS shifts waiting out of the device queue.
+        let sbs = Simulation::run(&small_cfg(16.0, true));
+        let imm = Simulation::run(&small_cfg(16.0, false));
+        assert!(
+            sbs.report.device_queue.mean() < imm.report.device_queue.mean(),
+            "SBS device queue {:.4}s vs immediate {:.4}s",
+            sbs.report.device_queue.mean(),
+            imm.report.device_queue.mean()
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Simulation::run(&small_cfg(8.0, true));
+        let b = Simulation::run(&small_cfg(8.0, true));
+        assert_eq!(a.prefill_passes, b.prefill_passes);
+        assert!((a.report.ttft.mean() - b.report.ttft.mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kv_sampling_produces_series() {
+        let mut cfg = small_cfg(10.0, true);
+        cfg.kv_sample_interval = 0.5;
+        let r = Simulation::run(&cfg);
+        assert!(r.kv_series.len() > 10);
+        let (mean, std) = r.kv_band();
+        assert!(mean >= 0.0 && std >= 0.0);
+    }
+}

@@ -1,0 +1,542 @@
+//! Threaded *real* mini-cluster: the same SBS control plane driving
+//! actual PJRT forward passes (no simulation on this path).
+//!
+//! Topology: `n_prefill` prefill workers (one gated engine thread each —
+//! DP=1 per instance; sub-instance DP balancing is exercised at scale in
+//! the DES) and one batched decode worker. The scheduler thread runs the
+//! identical [`StaggeredScheduler`] state machine the simulator uses,
+//! receiving real `EndForward` signals over channels and arming real
+//! timers via `recv_timeout` — the end-to-end proof that L3, L2 and L1
+//! compose.
+
+use crate::engine::sampler::Sampling;
+use crate::engine::{MiniEngine, PrefillOutcome};
+use crate::metrics::{RequestMetrics, ServingReport};
+use crate::runtime::Runtime;
+use std::path::PathBuf;
+use crate::scheduler::baseline::{ImmediatePolicy, ImmediateScheduler};
+use crate::scheduler::staggered::{
+    SchedulerAction, SchedulerEvent, StaggeredConfig, StaggeredScheduler,
+};
+use crate::scheduler::types::Request;
+use crate::util::{Clock, RealClock};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Control-plane choice for the real cluster.
+#[derive(Debug, Clone)]
+pub enum RealSchedMode {
+    /// Staggered batch scheduling (the paper).
+    Staggered(StaggeredConfig),
+    /// Immediate dispatch baseline.
+    Immediate(ImmediatePolicy),
+}
+
+/// Real-cluster configuration.
+#[derive(Debug, Clone)]
+pub struct RealClusterConfig {
+    /// Prefill instances (one engine thread each).
+    pub n_prefill: u32,
+    /// Decode batch size (one decode engine; must be a compiled variant).
+    pub decode_batch: u32,
+    /// Scheduler-visible per-instance token budget per dispatch cycle.
+    pub c_chunk: u32,
+    /// Control plane.
+    pub mode: RealSchedMode,
+    /// Sampling policy for generation.
+    pub sampling: Sampling,
+    /// RNG seed.
+    pub seed: u64,
+    /// Artifact directory (each worker thread loads its own PJRT client —
+    /// the xla crate's handles are not Send, mirroring the
+    /// process-per-instance deployment model).
+    pub artifacts: PathBuf,
+}
+
+impl Default for RealClusterConfig {
+    fn default() -> Self {
+        // Real CPU-PJRT passes take ~0.5–2 s; seed the interval
+        // controller accordingly so the watchdog doesn't misfire during
+        // the first pass, and scale N_limit to real pass cadence (cycles
+        // here are seconds, not the simulator's ~100 ms).
+        let mut sc = StaggeredConfig::default();
+        sc.interval.t_default = 1.5;
+        sc.pbaa.n_limit = 10_000;
+        RealClusterConfig {
+            n_prefill: 2,
+            decode_batch: 4,
+            c_chunk: 256,
+            mode: RealSchedMode::Staggered(sc),
+            sampling: Sampling::Greedy,
+            seed: 7,
+            artifacts: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+/// One submitted generation job.
+pub struct Job {
+    /// Unique id.
+    pub id: u64,
+    /// Prompt token ids.
+    pub prompt: Vec<i32>,
+    /// Max tokens to generate.
+    pub max_new: u32,
+}
+
+/// Completed generation.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    /// Job id.
+    pub id: u64,
+    /// Generated token ids (first token included).
+    pub tokens: Vec<i32>,
+    /// Lifecycle metrics (timestamps on the real clock).
+    pub metrics: RequestMetrics,
+}
+
+enum SchedMsg {
+    Submit(Job, f64),
+    EndForward { instance: u32, t_measured: f64 },
+    Drain,
+}
+
+enum PrefillMsg {
+    Work(Vec<(Job, f64)>),
+    Stop,
+}
+
+enum DecodeMsg {
+    Admit {
+        id: u64,
+        outcome: Box<PrefillOutcome>,
+        max_new: u32,
+        metrics: RequestMetrics,
+    },
+    Stop,
+}
+
+/// The running cluster: submit jobs, then `finish()` to collect results.
+pub struct RealCluster {
+    to_sched: Sender<SchedMsg>,
+    completions: Receiver<Completion>,
+    threads: Vec<JoinHandle<()>>,
+    clock: Arc<RealClock>,
+    submitted: u64,
+    collected: Vec<Completion>,
+}
+
+impl RealCluster {
+    /// Start scheduler + worker threads; each engine thread loads its own
+    /// runtime from `cfg.artifacts`.
+    pub fn start(cfg: RealClusterConfig) -> Result<RealCluster> {
+        let clock = Arc::new(RealClock::new());
+        let (to_sched, sched_rx) = channel::<SchedMsg>();
+        let (done_tx, completions) = channel::<Completion>();
+
+        let (decode_tx, decode_rx) = channel::<DecodeMsg>();
+        let (ready_tx, ready_rx) = channel::<()>();
+        let mut threads = Vec::new();
+        {
+            let clock = clock.clone();
+            let done_tx = done_tx.clone();
+            let (sampling, batch, seed) = (cfg.sampling, cfg.decode_batch, cfg.seed);
+            let dir = cfg.artifacts.clone();
+            let ready = ready_tx.clone();
+            threads.push(std::thread::spawn(move || {
+                decode_worker(dir, batch, sampling, seed, decode_rx, done_tx, clock, ready);
+            }));
+        }
+
+        let mut prefill_txs = Vec::new();
+        for i in 0..cfg.n_prefill {
+            let (tx, rx) = channel::<PrefillMsg>();
+            prefill_txs.push(tx);
+            let clock = clock.clone();
+            let to_sched = to_sched.clone();
+            let decode_tx = decode_tx.clone();
+            let done_tx = done_tx.clone();
+            let dir = cfg.artifacts.clone();
+            let ready = ready_tx.clone();
+            threads.push(std::thread::spawn(move || {
+                prefill_worker(i, dir, rx, to_sched, decode_tx, done_tx, clock, ready);
+            }));
+        }
+
+        // Block until every engine thread has loaded its runtime: jobs
+        // submitted before readiness would charge artifact compilation to
+        // TTFT.
+        for _ in 0..(cfg.n_prefill + 1) {
+            ready_rx
+                .recv_timeout(Duration::from_secs(600))
+                .map_err(|_| anyhow!("worker failed to become ready (artifacts built?)"))?;
+        }
+        log::info!("all workers ready");
+
+        {
+            let cfg2 = cfg.clone();
+            let clock = clock.clone();
+            let done_tx = done_tx.clone();
+            threads.push(std::thread::spawn(move || {
+                scheduler_loop(cfg2, sched_rx, prefill_txs, decode_tx, done_tx, clock);
+            }));
+        }
+        Ok(RealCluster {
+            to_sched,
+            completions,
+            threads,
+            clock,
+            submitted: 0,
+            collected: Vec::new(),
+        })
+    }
+
+    /// Submit one generation job (arrival timestamped now).
+    pub fn submit(&mut self, job: Job) {
+        self.submitted += 1;
+        let _ = self.to_sched.send(SchedMsg::Submit(job, self.clock.now_s()));
+    }
+
+    /// Block until the completion for `id` arrives (other completions are
+    /// stashed for `finish`). Used by the synchronous TCP frontend.
+    pub fn wait_for(&mut self, id: u64, timeout: Duration) -> Result<Completion> {
+        if let Some(i) = self.collected.iter().position(|c| c.id == id) {
+            return Ok(self.collected.swap_remove(i));
+        }
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let left = deadline
+                .checked_duration_since(std::time::Instant::now())
+                .ok_or_else(|| anyhow!("timed out waiting for job {id}"))?;
+            let c = self
+                .completions
+                .recv_timeout(left)
+                .map_err(|_| anyhow!("timed out waiting for job {id}"))?;
+            if c.id == id {
+                return Ok(c);
+            }
+            self.collected.push(c);
+        }
+    }
+
+    /// Wait for all submitted jobs, stop the cluster, and return the
+    /// completions plus an aggregate report.
+    pub fn finish(mut self) -> Result<(Vec<Completion>, ServingReport)> {
+        let mut out = std::mem::take(&mut self.collected);
+        while (out.len() as u64) < self.submitted {
+            let c = self
+                .completions
+                .recv_timeout(Duration::from_secs(600))
+                .map_err(|_| anyhow!("timed out waiting for completions"))?;
+            out.push(c);
+        }
+        let _ = self.to_sched.send(SchedMsg::Drain);
+        for t in self.threads {
+            let _ = t.join();
+        }
+        let mut report = ServingReport::new(0.0);
+        for c in &out {
+            report.absorb(&c.metrics);
+        }
+        Ok((out, report))
+    }
+}
+
+/// Scheduler thread: the SBS (or baseline) state machine on real time.
+fn scheduler_loop(
+    cfg: RealClusterConfig,
+    rx: Receiver<SchedMsg>,
+    prefill_txs: Vec<Sender<PrefillMsg>>,
+    decode_tx: Sender<DecodeMsg>,
+    done_tx: Sender<Completion>,
+    clock: Arc<RealClock>,
+) {
+    let n = cfg.n_prefill;
+    // Job payloads keyed by request id (the scheduler works on Requests).
+    let mut jobs: HashMap<u64, (Job, f64)> = HashMap::new();
+    let mut sbs = match &cfg.mode {
+        RealSchedMode::Staggered(sc) => {
+            // Real-mode clamps: dispatch cycles here are seconds (PJRT
+            // passes), not the simulator's ~100 ms, so simulator-scale
+            // flow-control/watchdog defaults would misfire.
+            let mut sc = sc.clone();
+            sc.pbaa.n_limit = sc.pbaa.n_limit.max(10_000);
+            sc.interval.t_default = sc.interval.t_default.max(1.0);
+            Some(StaggeredScheduler::new(sc, n, 1, cfg.c_chunk))
+        }
+        RealSchedMode::Immediate(_) => None,
+    };
+    let mut imm = match &cfg.mode {
+        RealSchedMode::Immediate(p) => Some(ImmediateScheduler::new(*p, n, 1, cfg.c_chunk)),
+        RealSchedMode::Staggered(_) => None,
+    };
+    let mut next_timer: Option<f64> = None;
+    let mut stop = false;
+    while !stop {
+        let now = clock.now_s();
+        let timeout = next_timer
+            .map(|t| Duration::from_secs_f64((t - now).max(1e-4)))
+            .unwrap_or(Duration::from_millis(50));
+        let msg = rx.recv_timeout(timeout);
+        let now = clock.now_s();
+        let mut actions = Vec::new();
+        match msg {
+            Ok(SchedMsg::Submit(job, t_arrive)) => {
+                let req = Request::new(job.id, job.prompt.len() as u32, job.max_new, t_arrive);
+                jobs.insert(job.id, (job, t_arrive));
+                if let Some(s) = sbs.as_mut() {
+                    actions = s.on_event(SchedulerEvent::Arrival { request: req, now });
+                } else if let Some(im) = imm.as_mut() {
+                    let a = im.dispatch(req);
+                    if let Some(jt) = jobs.remove(&a.request.id) {
+                        let _ = prefill_txs[a.unit.instance as usize]
+                            .send(PrefillMsg::Work(vec![jt]));
+                    }
+                }
+            }
+            Ok(SchedMsg::EndForward {
+                instance,
+                t_measured,
+            }) => {
+                if let Some(s) = sbs.as_mut() {
+                    // The engine fully consumed its dispatched batch
+                    // before signalling: clear the capacity model (the
+                    // simulator gets this via per-pass on_ack/on_consumed;
+                    // the real engine reports completion wholesale).
+                    for dp in s.state.instance_dps_mut(instance) {
+                        let backlog = dp.u_flight + dp.r_queued;
+                        dp.on_ack(dp.u_flight);
+                        dp.on_consumed(backlog);
+                    }
+                    actions = s.on_event(SchedulerEvent::EndForward {
+                        instance,
+                        t_measured,
+                        remaining: Some(0),
+                        now,
+                    });
+                } else if let Some(im) = imm.as_mut() {
+                    im.on_end_forward(instance, now);
+                }
+            }
+            Ok(SchedMsg::Drain) => stop = true,
+            Err(_) => {
+                next_timer = None;
+                if let Some(s) = sbs.as_mut() {
+                    actions = s.on_event(SchedulerEvent::Timer { now });
+                }
+            }
+        }
+        for act in actions {
+            match act {
+                SchedulerAction::Dispatch(batch) => {
+                    let work: Vec<(Job, f64)> = batch
+                        .assignments
+                        .iter()
+                        .filter_map(|a| jobs.remove(&a.request.id))
+                        .collect();
+                    if !work.is_empty() {
+                        let _ =
+                            prefill_txs[batch.instance as usize].send(PrefillMsg::Work(work));
+                    }
+                }
+                SchedulerAction::ArmTimer { at } => {
+                    next_timer = Some(match next_timer {
+                        Some(t) => t.min(at),
+                        None => at,
+                    });
+                }
+                SchedulerAction::Reject(r) => {
+                    // Surface the rejection as an (empty) completion so
+                    // callers waiting on this job don't hang.
+                    log::warn!("flow control rejected request {}", r.id);
+                    jobs.remove(&r.id);
+                    let _ = done_tx.send(Completion {
+                        id: r.id,
+                        tokens: Vec::new(),
+                        metrics: RequestMetrics::arrive(r.arrival, r.input_tokens),
+                    });
+                }
+                SchedulerAction::Watchdog(w) => log::warn!("watchdog: {w:?}"),
+            }
+        }
+    }
+    for tx in &prefill_txs {
+        let _ = tx.send(PrefillMsg::Stop);
+    }
+    let _ = decode_tx.send(DecodeMsg::Stop);
+}
+
+/// Prefill worker: gated, non-preemptive chunked prefill of each batch.
+fn prefill_worker(
+    instance: u32,
+    dir: PathBuf,
+    rx: Receiver<PrefillMsg>,
+    to_sched: Sender<SchedMsg>,
+    decode_tx: Sender<DecodeMsg>,
+    done_tx: Sender<Completion>,
+    clock: Arc<RealClock>,
+    ready: Sender<()>,
+) {
+    let engine = match Runtime::load_filtered(&dir, Some(&["prefill", "decode"]))
+        .map(Arc::new)
+        .and_then(|rt| {
+            let b = rt.decode_batches()[0];
+            MiniEngine::new(rt, b, Sampling::Greedy, 1)
+        }) {
+        Ok(e) => e,
+        Err(e) => {
+            log::error!("prefill worker {instance}: {e:#}");
+            return;
+        }
+    };
+    let _ = ready.send(());
+    while let Ok(PrefillMsg::Work(batch)) = rx.recv() {
+        for (job, t_arrive) in batch {
+            let t_dispatch = clock.now_s();
+            match engine.prefill(&job.prompt) {
+                Ok(outcome) => {
+                    let t_first = clock.now_s();
+                    let mut m = RequestMetrics::arrive(t_arrive, job.prompt.len() as u32);
+                    m.t_dispatch = t_dispatch;
+                    m.t_exec_start = t_dispatch;
+                    m.t_first_token = t_first;
+                    let exec = outcome.exec_time;
+                    if job.max_new <= 1 {
+                        m.t_done = t_first;
+                        m.output_tokens = 1;
+                        let _ = done_tx.send(Completion {
+                            id: job.id,
+                            tokens: vec![outcome.first_token],
+                            metrics: m,
+                        });
+                    } else {
+                        let _ = decode_tx.send(DecodeMsg::Admit {
+                            id: job.id,
+                            outcome: Box::new(outcome),
+                            max_new: job.max_new - 1,
+                            metrics: m,
+                        });
+                    }
+                    let _ = to_sched.send(SchedMsg::EndForward {
+                        instance,
+                        t_measured: exec,
+                    });
+                }
+                Err(e) => log::error!("prefill failed for job {}: {e:#}", job.id),
+            }
+        }
+    }
+}
+
+/// Decode worker: continuous batched stepping with slot admission.
+fn decode_worker(
+    dir: PathBuf,
+    batch: u32,
+    sampling: Sampling,
+    seed: u64,
+    rx: Receiver<DecodeMsg>,
+    done_tx: Sender<Completion>,
+    clock: Arc<RealClock>,
+    ready: Sender<()>,
+) {
+    let mut engine = match Runtime::load_filtered(&dir, Some(&["decode"]))
+        .map(Arc::new)
+        .and_then(|rt| MiniEngine::new(rt, batch, sampling, seed))
+    {
+        Ok(e) => e,
+        Err(e) => {
+            log::error!("decode worker: {e:#}");
+            return;
+        }
+    };
+    let _ = ready.send(());
+    struct Track {
+        tokens: Vec<i32>,
+        metrics: RequestMetrics,
+    }
+    let mut tracks: HashMap<u64, Track> = HashMap::new();
+    let mut pending: Vec<DecodeMsg> = Vec::new();
+    let mut stopping = false;
+    loop {
+        // Admit as many pending sequences as there are free slots.
+        let mut rest = Vec::new();
+        for msg in pending.drain(..) {
+            match msg {
+                DecodeMsg::Admit {
+                    id,
+                    outcome,
+                    max_new,
+                    metrics,
+                } if engine.free_slots() > 0 => {
+                    if let Err(e) = engine.admit(&outcome, max_new, id) {
+                        log::error!("admit failed: {e:#}");
+                        continue;
+                    }
+                    tracks.insert(
+                        id,
+                        Track {
+                            tokens: vec![outcome.first_token],
+                            metrics,
+                        },
+                    );
+                }
+                other => rest.push(other),
+            }
+        }
+        pending = rest;
+
+        // Pull new messages (non-blocking while active, blocking idle).
+        loop {
+            let msg = if engine.active() > 0 || stopping {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            } else {
+                match rx.recv_timeout(Duration::from_millis(100)) {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            };
+            match msg {
+                DecodeMsg::Stop => stopping = true,
+                m => pending.push(m),
+            }
+        }
+
+        if engine.active() == 0 {
+            if stopping && pending.is_empty() {
+                break;
+            }
+            continue;
+        }
+        match engine.step() {
+            Ok((emissions, _t)) => {
+                let now = clock.now_s();
+                for e in emissions {
+                    if let Some(tr) = tracks.get_mut(&e.request_id) {
+                        tr.tokens.push(e.token);
+                        if e.done {
+                            let mut tr = tracks.remove(&e.request_id).unwrap();
+                            tr.metrics.t_done = now;
+                            tr.metrics.output_tokens = tr.tokens.len() as u32;
+                            let _ = done_tx.send(Completion {
+                                id: e.request_id,
+                                tokens: tr.tokens,
+                                metrics: tr.metrics,
+                            });
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                log::error!("decode step failed: {e:#}");
+                break;
+            }
+        }
+    }
+}

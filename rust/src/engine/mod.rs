@@ -1,0 +1,304 @@
+//! The real mini inference engine on top of [`crate::runtime`]: chunked
+//! prefill, slot-based batched decode with a persistent KV cache, byte
+//! tokenizer and sampling.
+//!
+//! One [`MiniEngine`] is one "instance" of the paper's resource plane in
+//! real mode: its prefill is gated and non-preemptive (one chunk pass at
+//! a time), its decode runs synchronized batch steps — the same structural
+//! properties the DES models, with actual PJRT forward passes.
+
+pub mod sampler;
+pub mod tokenizer;
+
+use crate::runtime::Runtime;
+use crate::util::Rng;
+use anyhow::{anyhow, bail, Result};
+use sampler::Sampling;
+use std::sync::Arc;
+use xla::Literal;
+
+/// Result of a full chunked prefill of one prompt.
+pub struct PrefillOutcome {
+    /// First generated token (argmax over the final real position).
+    pub first_token: i32,
+    /// Prompt length in tokens (valid KV rows).
+    pub len: usize,
+    /// Final K caches `[L, S, H, Dh]` as host f32.
+    pub k: Vec<f32>,
+    /// Final V caches.
+    pub v: Vec<f32>,
+    /// Total PJRT execution time across chunks, seconds.
+    pub exec_time: f64,
+    /// Number of forward passes used.
+    pub passes: u32,
+}
+
+/// One active decode slot.
+#[derive(Debug, Clone)]
+struct Slot {
+    request_id: u64,
+    len: i32,
+    generated: u32,
+    max_new: u32,
+    last_token: i32,
+}
+
+/// A token emitted by one decode step.
+#[derive(Debug, Clone)]
+pub struct Emission {
+    /// Request that produced the token.
+    pub request_id: u64,
+    /// The token id.
+    pub token: i32,
+    /// Whether the sequence finished (budget exhausted or EOS).
+    pub done: bool,
+}
+
+/// Slot-based batched decoder + chunked prefill over the PJRT runtime.
+pub struct MiniEngine {
+    rt: Arc<Runtime>,
+    batch: usize,
+    // Host mirrors of the batched decode caches [L, B, S, H, Dh].
+    kc: Vec<f32>,
+    vc: Vec<f32>,
+    // Perf: between decode steps the caches live as the previous step's
+    // output literals; the f32 mirrors are refreshed lazily only when an
+    // admission must splice in prompt KV (saves ~4 large memcpys/step).
+    cache_lits: Option<(Literal, Literal)>,
+    vecs_stale: bool,
+    slots: Vec<Option<Slot>>,
+    layers: usize,
+    max_seq: usize,
+    head_elems: usize, // H * Dh
+    sampling: Sampling,
+    rng: Rng,
+}
+
+impl MiniEngine {
+    /// Build an engine with the given decode batch size (must be one of
+    /// the compiled variants).
+    pub fn new(rt: Arc<Runtime>, batch: u32, sampling: Sampling, seed: u64) -> Result<Self> {
+        if !rt.decode_batches().contains(&batch) {
+            bail!(
+                "decode batch {batch} not among compiled variants {:?}",
+                rt.decode_batches()
+            );
+        }
+        let m = &rt.meta.model;
+        let n = m.n_layers * batch as usize * m.max_seq * m.n_heads * m.d_head;
+        Ok(MiniEngine {
+            layers: m.n_layers,
+            max_seq: m.max_seq,
+            head_elems: m.n_heads * m.d_head,
+            kc: vec![0.0; n],
+            vc: vec![0.0; n],
+            cache_lits: None,
+            vecs_stale: false,
+            slots: vec![None; batch as usize],
+            batch: batch as usize,
+            rt,
+            sampling,
+            rng: Rng::new(seed),
+        })
+    }
+
+    /// Chunked prefill of `prompt` (any length < max_seq): runs compiled
+    /// chunk passes (largest chunks first, padded final chunk). The
+    /// returned logits correspond to the last *real* token because PAD
+    /// positions sit strictly after it and attention is causal — but the
+    /// AOT entry returns last-chunk-position logits, so the final chunk is
+    /// sized to end exactly at the prompt's last token by choosing the
+    /// smallest compiled chunk ≥ the remainder and masking: we instead
+    /// re-run position accounting such that padded tail tokens never
+    /// contribute (they are written to rows ≥ len and later overwritten by
+    /// decode).
+    pub fn prefill(&self, prompt: &[i32]) -> Result<PrefillOutcome> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if prompt.len() >= self.max_seq {
+            bail!("prompt length {} >= max_seq {}", prompt.len(), self.max_seq);
+        }
+        let chunks = self.rt.prefill_chunks();
+        let min_chunk = *chunks.first().ok_or_else(|| anyhow!("no prefill variants"))? as usize;
+        let max_chunk = *chunks.last().unwrap() as usize;
+        let mut kc = self.rt.empty_prefill_cache();
+        let mut vc = self.rt.empty_prefill_cache();
+        let mut pos = 0usize;
+        let mut exec_time = 0.0;
+        let mut passes = 0u32;
+        let mut last_logits: Vec<f32> = Vec::new();
+        while pos < prompt.len() {
+            let remaining = prompt.len() - pos;
+            // Pick the chunk: full big chunks while they fit entirely,
+            // otherwise the smallest compiled chunk covering the tail.
+            let chunk = if remaining >= max_chunk {
+                max_chunk
+            } else {
+                round_up(remaining, min_chunk).min(max_chunk)
+            };
+            if pos + chunk > self.max_seq {
+                bail!("prompt + padding exceeds max_seq");
+            }
+            let real = remaining.min(chunk);
+            let mut toks: Vec<i32> = Vec::with_capacity(chunk);
+            toks.extend_from_slice(&prompt[pos..pos + real]);
+            toks.resize(chunk, tokenizer::PAD);
+            let step = self.rt.prefill_chunk(&toks, &kc, &vc, pos as i32)?;
+            exec_time += step.exec_time;
+            passes += 1;
+            last_logits = step.logits_at(real - 1);
+            kc = step.k_caches;
+            vc = step.v_caches;
+            pos += real;
+        }
+        let first_token = sampler::argmax(&last_logits);
+        Ok(PrefillOutcome {
+            first_token,
+            len: prompt.len(),
+            k: literal_to_vec(&kc)?,
+            v: literal_to_vec(&vc)?,
+            exec_time,
+            passes,
+        })
+    }
+
+    /// Number of free decode slots.
+    pub fn free_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    /// Number of active sequences.
+    pub fn active(&self) -> usize {
+        self.batch - self.free_slots()
+    }
+
+    /// Per-slot `(active, kv_tokens)` loads — the Algorithm 3 observable.
+    pub fn slot_loads(&self) -> Vec<(u32, u64)> {
+        self.slots
+            .iter()
+            .map(|s| match s {
+                Some(s) => (1u32, s.len as u64),
+                None => (0u32, 0u64),
+            })
+            .collect()
+    }
+
+    /// Admit a prefilled sequence into a free slot; returns the slot id.
+    pub fn admit(&mut self, pre: &PrefillOutcome, max_new: u32, request_id: u64) -> Result<usize> {
+        let slot = self
+            .slots
+            .iter()
+            .position(Option::is_none)
+            .ok_or_else(|| anyhow!("no free decode slot"))?;
+        // Refresh host mirrors from the authoritative literals before
+        // splicing in this sequence's KV rows.
+        if self.vecs_stale {
+            if let Some((kl, vl)) = &self.cache_lits {
+                self.kc = literal_to_vec(kl)?;
+                self.vc = literal_to_vec(vl)?;
+            }
+            self.vecs_stale = false;
+        }
+        self.cache_lits = None; // mirrors are about to change
+        let budget = (self.max_seq - pre.len - 1) as u32;
+        let max_new = max_new.min(budget).max(1);
+        // Copy the prompt's KV rows into the slot region of the host
+        // mirror: prefill [L, S, H, Dh] -> decode [L, B, S, H, Dh].
+        let he = self.head_elems;
+        let s_total = self.max_seq;
+        for l in 0..self.layers {
+            let src = l * s_total * he;
+            let dst = (l * self.batch + slot) * s_total * he;
+            let n = pre.len * he;
+            self.kc[dst..dst + n].copy_from_slice(&pre.k[src..src + n]);
+            self.vc[dst..dst + n].copy_from_slice(&pre.v[src..src + n]);
+        }
+        self.slots[slot] = Some(Slot {
+            request_id,
+            len: pre.len as i32,
+            generated: 0,
+            max_new,
+            last_token: pre.first_token,
+        });
+        Ok(slot)
+    }
+
+    /// Run one synchronized decode step over all active slots. Returns the
+    /// emissions plus the PJRT execution time.
+    pub fn step(&mut self) -> Result<(Vec<Emission>, f64)> {
+        if self.active() == 0 {
+            return Ok((Vec::new(), 0.0));
+        }
+        let mut tokens = vec![tokenizer::PAD; self.batch];
+        let mut lens = vec![0i32; self.batch];
+        for (b, s) in self.slots.iter().enumerate() {
+            if let Some(s) = s {
+                tokens[b] = s.last_token;
+                lens[b] = s.len;
+            }
+        }
+        let (kc_l, vc_l) = match self.cache_lits.take() {
+            Some(t) => t,
+            None => {
+                let dims = self.decode_dims();
+                (
+                    vec_to_literal(&self.kc, &dims)?,
+                    vec_to_literal(&self.vc, &dims)?,
+                )
+            }
+        };
+        let step = self.rt.decode_step(&tokens, &kc_l, &vc_l, &lens)?;
+        self.cache_lits = Some((step.k_caches, step.v_caches));
+        self.vecs_stale = true;
+        let vocab = self.rt.meta.model.vocab;
+        let mut emissions = Vec::new();
+        for b in 0..self.batch {
+            let Some(slot) = self.slots[b].as_mut() else {
+                continue;
+            };
+            let logits = &step.logits[b * vocab..(b + 1) * vocab];
+            let tok = sampler::sample(logits, self.sampling, &mut self.rng);
+            slot.len += 1;
+            slot.generated += 1;
+            slot.last_token = tok;
+            let done = slot.generated >= slot.max_new
+                || tok == tokenizer::EOS
+                || slot.len as usize >= self.max_seq - 1;
+            emissions.push(Emission {
+                request_id: slot.request_id,
+                token: tok,
+                done,
+            });
+            if done {
+                self.slots[b] = None;
+            }
+        }
+        Ok((emissions, step.exec_time))
+    }
+
+    fn decode_dims(&self) -> Vec<i64> {
+        let m = &self.rt.meta.model;
+        vec![
+            m.n_layers as i64,
+            self.batch as i64,
+            m.max_seq as i64,
+            m.n_heads as i64,
+            m.d_head as i64,
+        ]
+    }
+}
+
+fn round_up(x: usize, to: usize) -> usize {
+    (x + to - 1) / to * to
+}
+
+fn literal_to_vec(l: &Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+}
+
+fn vec_to_literal(v: &[f32], dims: &[i64]) -> Result<Literal> {
+    Literal::vec1(v)
+        .reshape(dims)
+        .map_err(|e| anyhow!("{e:?}"))
+}

@@ -1,0 +1,80 @@
+//! Token sampling over model logits.
+
+use crate::util::Rng;
+
+/// Sampling policy.
+#[derive(Debug, Clone, Copy)]
+pub enum Sampling {
+    /// Argmax.
+    Greedy,
+    /// Softmax with temperature (> 0).
+    Temperature(f64),
+}
+
+/// Draw a token id from `logits` under the policy.
+pub fn sample(logits: &[f32], policy: Sampling, rng: &mut Rng) -> i32 {
+    match policy {
+        Sampling::Greedy => argmax(logits),
+        Sampling::Temperature(t) => {
+            let t = t.max(1e-4);
+            let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+            let weights: Vec<f64> = logits
+                .iter()
+                .map(|&x| ((x as f64 - m) / t).exp())
+                .collect();
+            let total: f64 = weights.iter().sum();
+            let mut u = rng.f64() * total;
+            for (i, w) in weights.iter().enumerate() {
+                u -= w;
+                if u <= 0.0 {
+                    return i as i32;
+                }
+            }
+            (weights.len() - 1) as i32
+        }
+    }
+}
+
+/// Index of the maximum logit (first on ties).
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut rng = Rng::new(1);
+        let logits = [0.0f32, 3.0, -1.0, 2.9];
+        assert_eq!(sample(&logits, Sampling::Greedy, &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_respects_distribution() {
+        let mut rng = Rng::new(2);
+        // One dominant logit: low temperature should almost always pick it.
+        let logits = [0.0f32, 8.0, 0.0, 0.0];
+        let hits = (0..200)
+            .filter(|_| sample(&logits, Sampling::Temperature(0.5), &mut rng) == 1)
+            .count();
+        assert!(hits > 190, "{hits}");
+        // Very high temperature spreads out.
+        let spread = (0..200)
+            .filter(|_| sample(&logits, Sampling::Temperature(100.0), &mut rng) != 1)
+            .count();
+        assert!(spread > 50, "{spread}");
+    }
+
+    #[test]
+    fn argmax_ties_first() {
+        assert_eq!(argmax(&[1.0, 1.0, 1.0]), 0);
+    }
+}

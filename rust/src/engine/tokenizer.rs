@@ -1,0 +1,60 @@
+//! Byte-level tokenizer for the nano-MoE model (vocab 512 = 256 bytes +
+//! specials). No merges: deterministic, reversible, dependency-free —
+//! adequate for a randomly-initialized research model where text quality
+//! is not the subject.
+
+/// Beginning-of-sequence token.
+pub const BOS: i32 = 256;
+/// End-of-sequence token.
+pub const EOS: i32 = 257;
+/// Padding token (inactive decode slots).
+pub const PAD: i32 = 258;
+
+/// Encode text as `[BOS, bytes...]`.
+pub fn encode(text: &str) -> Vec<i32> {
+    let mut out = Vec::with_capacity(text.len() + 1);
+    out.push(BOS);
+    out.extend(text.bytes().map(|b| b as i32));
+    out
+}
+
+/// Decode token ids back to text (specials dropped; invalid bytes become
+/// U+FFFD via lossy UTF-8).
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| (0..256).contains(&t))
+        .map(|&t| t as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let ids = encode("hello, world");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(decode(&ids), "hello, world");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let s = "héllo → wörld";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn specials_dropped() {
+        assert_eq!(decode(&[BOS, 104, 105, EOS, PAD]), "hi");
+    }
+
+    #[test]
+    fn ids_fit_vocab() {
+        for id in encode("any text at all") {
+            assert!((0..512).contains(&id));
+        }
+    }
+}

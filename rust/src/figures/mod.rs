@@ -1,0 +1,286 @@
+//! Regeneration harness for every table and figure in the paper's
+//! evaluation (§5). Each `run_*` function executes the corresponding
+//! simulated experiment, prints the paper-style rows, and returns the
+//! measurements as JSON for EXPERIMENTS.md bookkeeping.
+//!
+//! | Function | Paper artifact | Headline claim |
+//! |---|---|---|
+//! | [`run_fig6a`] | Fig. 6(a) | TTFT −30..40% at ≤80% load (short inputs) |
+//! | [`run_fig6b`] | Fig. 6(b) | advantage holds for 3K–64K inputs |
+//! | [`run_table1`] | Table 1 | chunk util 52→88%, QPS +12.9..22.8% |
+//! | [`run_fig7`] | Fig. 7 | decode KV ±1σ band ~40% tighter |
+//! | [`run_fig8`] | Fig. 8 | decode throughput +15% |
+
+use crate::cluster::sim::{SimReport, Simulation};
+use crate::config;
+use crate::json::Json;
+
+/// Default seed for figure runs (deterministic).
+pub const FIG_SEED: u64 = 2025;
+
+/// Scale factor for quick runs (`SBS_FIG_QUICK=1` shortens horizons ~6×;
+/// used by CI/tests — published numbers use the full horizon).
+fn horizon_scale() -> f64 {
+    if std::env::var("SBS_FIG_QUICK").as_deref() == Ok("1") {
+        1.0 / 6.0
+    } else {
+        1.0
+    }
+}
+
+fn scale_cfg(mut cfg: config::SimConfig) -> config::SimConfig {
+    let s = horizon_scale();
+    cfg.workload.duration *= s;
+    cfg.warmup *= s;
+    cfg
+}
+
+/// Fig. 6(a): mean TTFT and device-queue latency vs load (short inputs).
+pub fn run_fig6a(seed: u64) -> Json {
+    println!("\n== Figure 6(a): TTFT vs load — input 0–3K (mean 1K), chunk 3K, 3P1D ==");
+    println!(
+        "{:<8} {:>14} {:>14} {:>9}  {:>16} {:>16}",
+        "load", "TTFT base(ms)", "TTFT SBS(ms)", "ΔTTFT", "devq base(ms)", "devq SBS(ms)"
+    );
+    let mut rows = Vec::new();
+    for load in [0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0] {
+        let base = Simulation::run(&scale_cfg(config::fig6a(load, false, seed)));
+        let sbs = Simulation::run(&scale_cfg(config::fig6a(load, true, seed)));
+        let tb = base.report.ttft.mean_ms();
+        let ts = sbs.report.ttft.mean_ms();
+        let delta = (tb - ts) / tb * 100.0;
+        println!(
+            "{:<8} {:>14.1} {:>14.1} {:>8.1}%  {:>16.1} {:>16.1}",
+            format!("{:.0}%", load * 100.0),
+            tb,
+            ts,
+            delta,
+            base.report.device_queue.mean_ms(),
+            sbs.report.device_queue.mean_ms(),
+        );
+        rows.push(Json::obj(vec![
+            ("load", Json::from(load)),
+            ("ttft_base_ms", Json::from(tb)),
+            ("ttft_sbs_ms", Json::from(ts)),
+            ("ttft_delta_pct", Json::from(delta)),
+            ("devq_base_ms", Json::from(base.report.device_queue.mean_ms())),
+            ("devq_sbs_ms", Json::from(sbs.report.device_queue.mean_ms())),
+        ]));
+    }
+    Json::obj(vec![("fig6a", Json::Arr(rows))])
+}
+
+/// Fig. 6(b): long-context variant (3K–64K, chunk 16K).
+pub fn run_fig6b(seed: u64) -> Json {
+    println!("\n== Figure 6(b): TTFT vs load — input 3K–64K (mean 6.7K), chunk 16K ==");
+    println!(
+        "{:<8} {:>14} {:>14} {:>9}  {:>14} {:>14}",
+        "load", "TTFT base(ms)", "TTFT SBS(ms)", "ΔTTFT", "p99 base(ms)", "p99 SBS(ms)"
+    );
+    let mut rows = Vec::new();
+    for load in [0.4, 0.6, 0.8, 1.0] {
+        let base = Simulation::run(&scale_cfg(config::fig6b(load, false, seed)));
+        let sbs = Simulation::run(&scale_cfg(config::fig6b(load, true, seed)));
+        let tb = base.report.ttft.mean_ms();
+        let ts = sbs.report.ttft.mean_ms();
+        let delta = (tb - ts) / tb * 100.0;
+        println!(
+            "{:<8} {:>14.1} {:>14.1} {:>8.1}%  {:>14.1} {:>14.1}",
+            format!("{:.0}%", load * 100.0),
+            tb,
+            ts,
+            delta,
+            base.report.ttft.percentile_ms(99.0),
+            sbs.report.ttft.percentile_ms(99.0),
+        );
+        rows.push(Json::obj(vec![
+            ("load", Json::from(load)),
+            ("ttft_base_ms", Json::from(tb)),
+            ("ttft_sbs_ms", Json::from(ts)),
+            ("ttft_delta_pct", Json::from(delta)),
+            ("p99_base_ms", Json::from(base.report.ttft.percentile_ms(99.0))),
+            ("p99_sbs_ms", Json::from(sbs.report.ttft.percentile_ms(99.0))),
+        ]));
+    }
+    Json::obj(vec![("fig6b", Json::Arr(rows))])
+}
+
+/// Find the max QPS whose mean TTFT meets `slo_s`, by bisection.
+fn max_qps_under_slo(c_chunk: u32, staggered: bool, slo_s: f64, seed: u64) -> (f64, SimReport) {
+    let (mut lo, mut hi) = (10.0f64, 400.0f64);
+    let mut best: Option<(f64, SimReport)> = None;
+    for _ in 0..10 {
+        let mid = 0.5 * (lo + hi);
+        let mut cfg = scale_cfg(config::table1(c_chunk, mid, staggered, seed));
+        // An over-saturated run that can't drain within 3× the horizon has
+        // failed the SLO regardless — don't simulate its whole backlog.
+        cfg.max_time = cfg.workload.duration * 3.0;
+        let rep = Simulation::run(&cfg);
+        let unfinished = rep.offered - rep.completed;
+        // SLO: mean TTFT within budget, nothing rejected by flow control,
+        // nothing stranded at sim end.
+        let ok = rep.report.ttft.mean() <= slo_s && unfinished == 0 && rep.report.rejected == 0;
+        if ok {
+            best = Some((mid, rep));
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    best.unwrap_or_else(|| {
+        let cfg = scale_cfg(config::table1(c_chunk, lo, staggered, seed));
+        (lo, Simulation::run(&cfg))
+    })
+}
+
+/// Table 1: max sustainable QPS and chunk utilization under a mean-TTFT
+/// SLO, batching off (immediate) vs on (SBS).
+pub fn run_table1(seed: u64) -> Json {
+    println!("\n== Table 1: Prefill chunk utilization & max QPS under mean-TTFT SLO ==");
+    println!(
+        "{:<26} {:<6} {:>8} {:>14} {:>10} {:>16}",
+        "scenario", "batch", "QPS", "chunk util(%)", "ΔQPS(%)", "Δchunk util(pp)"
+    );
+    let mut rows = Vec::new();
+    for (c_chunk, slo) in [(3072u32, 0.8f64), (5120, 1.0)] {
+        let (q_off, r_off) = max_qps_under_slo(c_chunk, false, slo, seed);
+        let (q_on, r_on) = max_qps_under_slo(c_chunk, true, slo, seed);
+        let u_off = r_off.report.chunk_util.utilization() * 100.0;
+        let u_on = r_on.report.chunk_util.utilization() * 100.0;
+        let dq = (q_on - q_off) / q_off * 100.0;
+        let scen = format!("Chunk {}K (TTFT≤{:.1}s)", c_chunk / 1024, slo);
+        println!(
+            "{:<26} {:<6} {:>8.1} {:>14.1} {:>10} {:>16}",
+            scen, "Off", q_off, u_off, "—", "—"
+        );
+        println!(
+            "{:<26} {:<6} {:>8.1} {:>14.1} {:>+9.1} {:>+15.1}",
+            scen, "On", q_on, u_on, dq, u_on - u_off
+        );
+        rows.push(Json::obj(vec![
+            ("chunk", Json::from(c_chunk)),
+            ("slo_s", Json::from(slo)),
+            ("qps_off", Json::from(q_off)),
+            ("qps_on", Json::from(q_on)),
+            ("util_off_pct", Json::from(u_off)),
+            ("util_on_pct", Json::from(u_on)),
+            ("delta_qps_pct", Json::from(dq)),
+            ("delta_util_pp", Json::from(u_on - u_off)),
+        ]));
+    }
+    Json::obj(vec![("table1", Json::Arr(rows))])
+}
+
+/// Fig. 7: decode KV-load dispersion across DP units over time.
+pub fn run_fig7(seed: u64) -> Json {
+    println!("\n== Figure 7: decode KV load distribution across DP=32 units ==");
+    let qps = 40.0;
+    let base = Simulation::run(&scale_cfg(config::fig7(qps, false, seed)));
+    let sbs = Simulation::run(&scale_cfg(config::fig7(qps, true, seed)));
+    let (mb, sb) = base.kv_band();
+    let (ms, ss) = sbs.kv_band();
+    println!(
+        "{:<22} {:>12} {:>12} {:>16} {:>16}",
+        "placement", "mean KV", "σ KV", "band lo (−1σ)", "band hi (+1σ)"
+    );
+    println!(
+        "{:<22} {:>12.0} {:>12.0} {:>16.0} {:>16.0}",
+        "baseline (RR)", mb, sb, mb - sb, mb + sb
+    );
+    println!(
+        "{:<22} {:>12.0} {:>12.0} {:>16.0} {:>16.0}",
+        "SBS (IQR+lex)", ms, ss, ms - ss, ms + ss
+    );
+    let reduction = (1.0 - ss / sb) * 100.0;
+    println!("σ reduction: {reduction:.1}% (paper: ±1σ range reduced ~40%)");
+    Json::obj(vec![(
+        "fig7",
+        Json::obj(vec![
+            ("kv_mean_base", Json::from(mb)),
+            ("kv_sigma_base", Json::from(sb)),
+            ("kv_mean_sbs", Json::from(ms)),
+            ("kv_sigma_sbs", Json::from(ss)),
+            ("sigma_reduction_pct", Json::from(reduction)),
+        ]),
+    )])
+}
+
+/// Fig. 8: aggregate decode throughput, baseline vs IQR-aware placement.
+///
+/// Metric: **decode service rate** — tokens generated per second of decode
+/// *execution* (Σ step durations). Under the EP sync barrier a step costs
+/// what its straggler unit costs, so unbalanced placement inflates step
+/// time for the same token count; the service rate captures exactly the
+/// "parallelization bubbles → productive generation" conversion the paper
+/// claims, independent of arrival limits.
+pub fn run_fig8(seed: u64) -> Json {
+    println!("\n== Figure 8: aggregate decode throughput (service rate) ==");
+    // Slot-bound regime: offered load keeps every decode slot (b_max=35,
+    // the paper's average batch) occupied, so both policies generate the
+    // same tokens per step and the only variable is the straggler-driven
+    // step time — the paper's throughput mechanism.
+    let qps = 70.0;
+    let mut base_cfg = scale_cfg(config::fig8(qps, false, seed));
+    base_cfg.max_time = base_cfg.workload.duration * 2.0;
+    let mut sbs_cfg = scale_cfg(config::fig8(qps, true, seed));
+    sbs_cfg.max_time = sbs_cfg.workload.duration * 2.0;
+    let base = Simulation::run(&base_cfg);
+    let sbs = Simulation::run(&sbs_cfg);
+    let tb = base.decode_tokens as f64 / base.decode_busy_s.max(1e-9);
+    let ts = sbs.decode_tokens as f64 / sbs.decode_busy_s.max(1e-9);
+    let delta = (ts - tb) / tb * 100.0;
+    println!(
+        "baseline (random): {tb:>10.0} tok/s of execution   ({} steps, mean {:.1} ms)",
+        base.decode_steps,
+        base.decode_busy_s / base.decode_steps.max(1) as f64 * 1e3
+    );
+    println!(
+        "SBS (IQR+lex):     {ts:>10.0} tok/s of execution   ({} steps, mean {:.1} ms)",
+        sbs.decode_steps,
+        sbs.decode_busy_s / sbs.decode_steps.max(1) as f64 * 1e3
+    );
+    println!("Δ service rate: {delta:+.1}% (paper: +15%)");
+    Json::obj(vec![(
+        "fig8",
+        Json::obj(vec![
+            ("decode_service_base", Json::from(tb)),
+            ("decode_service_sbs", Json::from(ts)),
+            ("delta_pct", Json::from(delta)),
+        ]),
+    )])
+}
+
+/// Run every artifact; returns the merged JSON document.
+pub fn run_all(seed: u64) -> Json {
+    let mut merged = std::collections::BTreeMap::new();
+    for j in [
+        run_fig6a(seed),
+        run_fig6b(seed),
+        run_table1(seed),
+        run_fig7(seed),
+        run_fig8(seed),
+    ] {
+        if let Json::Obj(m) = j {
+            merged.extend(m);
+        }
+    }
+    Json::Obj(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    // Figure runs are exercised end-to-end by `cargo bench` and the
+    // integration tests; unit tests here only cover plumbing helpers.
+    use super::*;
+
+    #[test]
+    fn horizon_scale_parses_env() {
+        // Not setting the env var in-process: default is full scale.
+        assert!(horizon_scale() > 0.0);
+    }
+
+    #[test]
+    fn fig_seed_stable() {
+        assert_eq!(FIG_SEED, 2025);
+    }
+}

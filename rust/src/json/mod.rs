@@ -1,0 +1,181 @@
+//! Minimal JSON value model, parser and writer.
+//!
+//! The offline registry ships no `serde`, so traces, metrics dumps and the
+//! python-side `model_meta.json` interchange go through this small,
+//! dependency-free implementation. It supports the full JSON grammar
+//! except `\u` surrogate pairs beyond the BMP (sufficient for our ASCII
+//! artifacts).
+
+mod parse;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use write::to_string;
+
+use std::collections::BTreeMap;
+
+/// A JSON value. Object keys are kept in a `BTreeMap` so serialization is
+/// deterministic (stable golden tests, reproducible traces).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Any JSON number (held as f64; integers round-trip exactly to 2^53).
+    Num(f64),
+    /// String.
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object with deterministic (sorted) key order.
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    /// Build an object from key/value pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+    }
+
+    /// Look up a key in an object.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Numeric accessor.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Integer accessor (exact for |x| <= 2^53).
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().map(|x| x as i64)
+    }
+
+    /// Unsigned accessor.
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().and_then(|x| {
+            if x >= 0.0 {
+                Some(x as usize)
+            } else {
+                None
+            }
+        })
+    }
+
+    /// String accessor.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Bool accessor.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Array accessor.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Serialize (compact).
+    pub fn dump(&self) -> String {
+        to_string(self)
+    }
+}
+
+impl From<f64> for Json {
+    fn from(x: f64) -> Self {
+        Json::Num(x)
+    }
+}
+impl From<usize> for Json {
+    fn from(x: usize) -> Self {
+        Json::Num(x as f64)
+    }
+}
+impl From<u64> for Json {
+    fn from(x: u64) -> Self {
+        Json::Num(x as f64)
+    }
+}
+impl From<i64> for Json {
+    fn from(x: i64) -> Self {
+        Json::Num(x as f64)
+    }
+}
+impl From<u32> for Json {
+    fn from(x: u32) -> Self {
+        Json::Num(x as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(x: bool) -> Self {
+        Json::Bool(x)
+    }
+}
+impl From<&str> for Json {
+    fn from(x: &str) -> Self {
+        Json::Str(x.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(x: String) -> Self {
+        Json::Str(x)
+    }
+}
+impl<T: Into<Json>> From<Vec<T>> for Json {
+    fn from(xs: Vec<T>) -> Self {
+        Json::Arr(xs.into_iter().map(Into::into).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_object() {
+        let j = Json::obj(vec![
+            ("a", Json::from(1.5)),
+            ("b", Json::from("hi")),
+            ("c", Json::from(vec![1.0, 2.0])),
+            ("d", Json::Null),
+            ("e", Json::from(true)),
+        ]);
+        let s = j.dump();
+        let back = parse(&s).unwrap();
+        assert_eq!(j, back);
+    }
+
+    #[test]
+    fn accessors() {
+        let j = parse(r#"{"n": 3, "s": "x", "a": [1, 2], "b": false}"#).unwrap();
+        assert_eq!(j.get("n").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("s").unwrap().as_str(), Some("x"));
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("b").unwrap().as_bool(), Some(false));
+        assert!(j.get("missing").is_none());
+    }
+}

@@ -1,0 +1,104 @@
+//! Compact JSON serialization.
+
+use super::Json;
+use std::fmt::Write as _;
+
+/// Serialize a [`Json`] value to a compact string. Object keys are emitted
+/// in sorted order (deterministic output).
+pub fn to_string(v: &Json) -> String {
+    let mut out = String::new();
+    write_value(v, &mut out);
+    out
+}
+
+fn write_value(v: &Json, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(true) => out.push_str("true"),
+        Json::Bool(false) => out.push_str("false"),
+        Json::Num(x) => write_num(*x, out),
+        Json::Str(s) => write_str(s, out),
+        Json::Arr(xs) => {
+            out.push('[');
+            for (i, x) in xs.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(x, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(m) => {
+            out.push('{');
+            for (i, (k, x)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_str(k, out);
+                out.push(':');
+                write_value(x, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_num(x: f64, out: &mut String) {
+    if !x.is_finite() {
+        // JSON has no NaN/Inf; emit null like most tolerant writers.
+        out.push_str("null");
+    } else if x == x.trunc() && x.abs() < 9.007_199_254_740_992e15 {
+        let _ = write!(out, "{}", x as i64);
+    } else {
+        let _ = write!(out, "{x}");
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+
+    #[test]
+    fn integers_stay_integers() {
+        assert_eq!(to_string(&Json::Num(3.0)), "3");
+        assert_eq!(to_string(&Json::Num(-7.0)), "-7");
+        assert_eq!(to_string(&Json::Num(1.5)), "1.5");
+    }
+
+    #[test]
+    fn escapes() {
+        assert_eq!(to_string(&Json::Str("a\"b\n".into())), r#""a\"b\n""#);
+    }
+
+    #[test]
+    fn nonfinite_to_null() {
+        assert_eq!(to_string(&Json::Num(f64::NAN)), "null");
+    }
+
+    #[test]
+    fn roundtrip_keys_sorted() {
+        let j = Json::obj(vec![("z", Json::from(1.0)), ("a", Json::from(2.0))]);
+        let s = to_string(&j);
+        assert_eq!(s, r#"{"a":2,"z":1}"#);
+        assert_eq!(parse(&s).unwrap(), j);
+    }
+}

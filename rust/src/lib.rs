@@ -1,0 +1,59 @@
+//! # SBS — Staggered Batch Scheduling for P/D-disaggregated DP+EP LLM serving
+//!
+//! Reproduction of *"Staggered Batch Scheduling: Co-optimizing
+//! Time-to-First-Token and Throughput for High-Efficiency LLM Inference"*
+//! (Tian et al., Baidu, CS.DC 2025).
+//!
+//! The crate is organised in three planes mirroring the paper's Figure 5:
+//!
+//! * **Control plane** — [`scheduler`]: the staggered batch main loop
+//!   ([`scheduler::staggered`]), the throughput-adaptive interval controller
+//!   (Algorithm 1, [`scheduler::interval`]), the Prioritized Batch
+//!   Allocation Algorithm for prefill (Algorithm 2, [`scheduler::pbaa`]),
+//!   and the IQR-aware lexicographical decode scheduler (Algorithm 3,
+//!   [`scheduler::decode`]). Immediate-dispatch baselines live in
+//!   [`scheduler::baseline`].
+//! * **State plane** — [`scheduler::state`] (the global state matrix
+//!   `⟨C_avail, B_i, K_i⟩`) and [`scheduler::sync`] (the multi-tier state
+//!   synchronization protocol: quiescence polling, `EndForward` fast path,
+//!   liveness watchdog).
+//! * **Resource plane** — [`cluster`]: a discrete-event simulation of
+//!   gated, non-preemptive DP+EP inference instances (used for the paper's
+//!   cluster-scale experiments) and a threaded *real* mode in which each
+//!   instance executes actual forward passes through the PJRT runtime
+//!   ([`runtime`], [`engine`]).
+//!
+//! Python/JAX/Pallas participate only at build time: `make artifacts`
+//! lowers the nano-MoE model (L2) and its Pallas kernels (L1) to HLO text,
+//! which [`runtime`] loads through the `xla` crate's PJRT CPU client. The
+//! request path is pure Rust.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use sbs::config::SimConfig;
+//! use sbs::cluster::sim::Simulation;
+//!
+//! let cfg = SimConfig::paper_fig6a(0.8); // 80% of baseline peak load
+//! let report = Simulation::run(&cfg);
+//! println!("mean TTFT = {:.1} ms", report.report.ttft.mean_ms());
+//! ```
+
+pub mod bench_harness;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod engine;
+pub mod figures;
+pub mod json;
+pub mod logging;
+pub mod metrics;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod testing;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,93 @@
+//! Tiny structured logger behind the `log` facade.
+//!
+//! Reads `SBS_LOG` (error|warn|info|debug|trace, default `info`) and writes
+//! `[elapsed] LEVEL target: message` lines to stderr. Installed once by the
+//! CLI entrypoints; library code only uses the `log` macros.
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::io::Write;
+use std::sync::Once;
+use std::time::Instant;
+
+struct StderrLogger {
+    epoch: Instant,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, _metadata: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.epoch.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{t:10.4}] {lvl} {}: {}",
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static INIT: Once = Once::new();
+
+/// Install the logger (idempotent). Level comes from `SBS_LOG` or the
+/// `default` argument.
+pub fn init(default: LevelFilter) {
+    INIT.call_once(|| {
+        let level = std::env::var("SBS_LOG")
+            .ok()
+            .and_then(|s| parse_level(&s))
+            .unwrap_or(default);
+        let logger = Box::leak(Box::new(StderrLogger {
+            epoch: Instant::now(),
+        }));
+        let _ = log::set_logger(logger);
+        log::set_max_level(level);
+    });
+}
+
+/// Parse a level name (case-insensitive).
+pub fn parse_level(s: &str) -> Option<LevelFilter> {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => Some(LevelFilter::Off),
+        "error" => Some(LevelFilter::Error),
+        "warn" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(parse_level("INFO"), Some(LevelFilter::Info));
+        assert_eq!(parse_level("debug"), Some(LevelFilter::Debug));
+        assert_eq!(parse_level("nope"), None);
+    }
+
+    #[test]
+    fn init_idempotent() {
+        init(LevelFilter::Warn);
+        init(LevelFilter::Trace); // second call is a no-op
+        log::info!("smoke");
+    }
+}

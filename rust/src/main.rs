@@ -1,0 +1,211 @@
+//! `sbs` — leader entrypoint and CLI for the Staggered Batch Scheduling
+//! reproduction.
+//!
+//! Subcommands:
+//!
+//! * `simulate`      — run one cluster simulation and print the report.
+//! * `bench-figures` — regenerate the paper's tables/figures (§5).
+//! * `gen-trace`     — write a workload trace (JSONL) for replay.
+//! * `serve`         — serve the real nano-MoE model through SBS on the
+//!                     threaded mini-cluster (requires `make artifacts`).
+//! * `calibrate`     — measure real PJRT pass times and print calibrated
+//!                     cost-model constants.
+
+use sbs::cli::Command;
+use sbs::cluster::sim::Simulation;
+use sbs::config;
+use sbs::json::Json;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    sbs::logging::init(log::LevelFilter::Info);
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((sub, rest)) = argv.split_first() else {
+        eprintln!("{}", usage());
+        return ExitCode::FAILURE;
+    };
+    let result = match sub.as_str() {
+        "simulate" => cmd_simulate(rest),
+        "bench-figures" => cmd_bench_figures(rest),
+        "gen-trace" => cmd_gen_trace(rest),
+        "serve" => cmd_serve(rest),
+        "calibrate" => cmd_calibrate(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand '{other}'\n\n{}", usage())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(msg) => {
+            eprintln!("{msg}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() -> String {
+    "sbs — Staggered Batch Scheduling (Tian et al., 2025) reproduction\n\n\
+     Usage: sbs <subcommand> [options]\n\n\
+     Subcommands:\n\
+       simulate        run one cluster simulation (--help for knobs)\n\
+       bench-figures   regenerate paper tables/figures (--all | --fig6a | --fig6b | --table1 | --fig7 | --fig8)\n\
+       gen-trace       generate a JSONL workload trace\n\
+       serve           serve the real nano-MoE model via SBS (needs artifacts/)\n\
+       calibrate       measure PJRT pass times, print cost-model constants"
+        .to_string()
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("sbs simulate", "run one cluster simulation")
+        .opt("preset", "fig6a | fig6b | table1 | fig7", Some("fig6a"))
+        .opt("load", "load fraction of baseline peak", Some("0.8"))
+        .opt("qps", "absolute request rate (overrides --load)", None)
+        .opt(
+            "scheduler",
+            "staggered | round_robin | least_outstanding | jsq",
+            Some("staggered"),
+        )
+        .opt("seed", "workload seed", Some("42"))
+        .opt("duration", "workload horizon seconds", None)
+        .opt("config", "key=value config file overriding the preset", None)
+        .flag("json", "emit the report as JSON");
+    let args = cmd.parse(argv)?;
+    let seed: u64 = args.parse_or("seed", 42)?;
+    let load: f64 = args.parse_or("load", 0.8)?;
+    let sched = args.str_or("scheduler", "staggered");
+    let staggered = sched == "staggered";
+    let mut cfg = match args.str_or("preset", "fig6a").as_str() {
+        "fig6a" => config::fig6a(load, staggered, seed),
+        "fig6b" => config::fig6b(load, staggered, seed),
+        "table1" => config::table1(3072, config::FIG6A_BASELINE_PEAK_QPS * load, staggered, seed),
+        "fig7" => config::fig7(40.0 * load, staggered, seed),
+        other => return Err(format!("unknown preset '{other}'")),
+    };
+    if let Some(path) = args.value("config") {
+        let kv = config::KvFile::load(&PathBuf::from(path)).map_err(|e| e.to_string())?;
+        kv.apply(&mut cfg).map_err(|e| e.to_string())?;
+    }
+    use sbs::scheduler::baseline::ImmediatePolicy;
+    match sched.as_str() {
+        "staggered" => {}
+        "round_robin" => cfg.mode = config::SchedMode::Immediate(ImmediatePolicy::RoundRobin),
+        "least_outstanding" => {
+            cfg.mode = config::SchedMode::Immediate(ImmediatePolicy::LeastOutstanding)
+        }
+        "jsq" => cfg.mode = config::SchedMode::Immediate(ImmediatePolicy::JoinShortestQueue),
+        other => return Err(format!("unknown scheduler '{other}'")),
+    }
+    if let Some(qps) = args.value("qps") {
+        let qps: f64 = qps.parse().map_err(|_| "bad --qps")?;
+        cfg.workload.arrivals = sbs::workload::ArrivalProcess::Poisson { qps };
+    }
+    if let Some(d) = args.value("duration") {
+        cfg.workload.duration = d.parse().map_err(|_| "bad --duration")?;
+    }
+    let report = Simulation::run(&cfg);
+    if args.flag("json") {
+        let mut j = report.report.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("prefill_passes".into(), Json::from(report.prefill_passes));
+            m.insert("decode_steps".into(), Json::from(report.decode_steps));
+            m.insert("completed".into(), Json::from(report.completed));
+            m.insert("offered".into(), Json::from(report.offered));
+            m.insert("i_opt_final".into(), Json::from(report.i_opt_final));
+        }
+        println!("{}", j.dump());
+    } else {
+        println!("{}", report.report.render());
+        println!(
+            "passes={} steps={} completed={}/{} i_opt={:.4}s straggler_waste={:.1} DP-s t_end={:.1}s",
+            report.prefill_passes,
+            report.decode_steps,
+            report.completed,
+            report.offered,
+            report.i_opt_final,
+            report.straggler_waste_s,
+            report.t_end
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench_figures(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("sbs bench-figures", "regenerate paper tables/figures")
+        .flag("all", "run everything")
+        .flag("fig6a", "TTFT vs load, short inputs")
+        .flag("fig6b", "TTFT vs load, long context")
+        .flag("table1", "chunk utilization / max QPS under SLO")
+        .flag("fig7", "decode KV dispersion")
+        .flag("fig8", "decode throughput")
+        .opt("seed", "workload seed", Some("2025"))
+        .opt("out", "write merged JSON to this path", None);
+    let args = cmd.parse(argv)?;
+    let seed: u64 = args.parse_or("seed", sbs::figures::FIG_SEED)?;
+    let all = args.flag("all")
+        || !(args.flag("fig6a")
+            || args.flag("fig6b")
+            || args.flag("table1")
+            || args.flag("fig7")
+            || args.flag("fig8"));
+    let mut merged = std::collections::BTreeMap::new();
+    let mut absorb = |merged: &mut std::collections::BTreeMap<String, Json>, j: Json| {
+        if let Json::Obj(m) = j {
+            merged.extend(m);
+        }
+    };
+    if all || args.flag("fig6a") {
+        absorb(&mut merged, sbs::figures::run_fig6a(seed));
+    }
+    if all || args.flag("fig6b") {
+        absorb(&mut merged, sbs::figures::run_fig6b(seed));
+    }
+    if all || args.flag("table1") {
+        absorb(&mut merged, sbs::figures::run_table1(seed));
+    }
+    if all || args.flag("fig7") {
+        absorb(&mut merged, sbs::figures::run_fig7(seed));
+    }
+    if all || args.flag("fig8") {
+        absorb(&mut merged, sbs::figures::run_fig8(seed));
+    }
+    if let Some(path) = args.value("out") {
+        std::fs::write(path, Json::Obj(merged).dump()).map_err(|e| e.to_string())?;
+        println!("\nwrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_gen_trace(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("sbs gen-trace", "generate a JSONL workload trace")
+        .opt("preset", "short | long | decode", Some("short"))
+        .opt("qps", "request rate", Some("20"))
+        .opt("duration", "horizon seconds", Some("60"))
+        .opt("seed", "workload seed", Some("42"))
+        .opt("out", "output path", Some("trace.jsonl"));
+    let args = cmd.parse(argv)?;
+    let qps: f64 = args.parse_or("qps", 20.0)?;
+    let duration: f64 = args.parse_or("duration", 60.0)?;
+    let seed: u64 = args.parse_or("seed", 42)?;
+    let spec = match args.str_or("preset", "short").as_str() {
+        "short" => sbs::workload::WorkloadSpec::paper_short(qps, duration, seed),
+        "long" => sbs::workload::WorkloadSpec::paper_long(qps, duration, seed),
+        "decode" => sbs::workload::WorkloadSpec::paper_decode(qps, duration, seed),
+        other => return Err(format!("unknown preset '{other}'")),
+    };
+    let reqs = spec.generate();
+    let out = PathBuf::from(args.str_or("out", "trace.jsonl"));
+    sbs::workload::write_trace(&out, &reqs).map_err(|e| e.to_string())?;
+    println!("wrote {} requests to {}", reqs.len(), out.display());
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<(), String> {
+    sbs::server::cli_serve(argv).map_err(|e| format!("{e:#}"))
+}
+
+fn cmd_calibrate(argv: &[String]) -> Result<(), String> {
+    sbs::runtime::cli_calibrate(argv).map_err(|e| format!("{e:#}"))
+}

@@ -1,0 +1,181 @@
+//! Log-scaled latency histogram with bounded memory.
+//!
+//! Buckets grow geometrically from `min` to `max` (default 0.1 ms … 1000 s)
+//! so percentile queries stay within ~2% relative error regardless of how
+//! many samples are recorded — the right trade-off for long simulations
+//! where storing every TTFT sample would dominate memory.
+
+/// Geometric-bucket histogram over positive values.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    min: f64,
+    growth: f64,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    max_seen: f64,
+    min_seen: f64,
+}
+
+impl Histogram {
+    /// Histogram covering `[min, max]` with `buckets` geometric buckets.
+    pub fn new(min: f64, max: f64, buckets: usize) -> Self {
+        assert!(min > 0.0 && max > min && buckets >= 2);
+        let growth = (max / min).powf(1.0 / buckets as f64);
+        Histogram {
+            min,
+            growth,
+            counts: vec![0; buckets + 2], // +underflow +overflow
+            total: 0,
+            sum: 0.0,
+            max_seen: f64::NEG_INFINITY,
+            min_seen: f64::INFINITY,
+        }
+    }
+
+    /// Default latency histogram: 0.1 ms … 1000 s, ~2% resolution.
+    pub fn latency() -> Self {
+        Histogram::new(1e-4, 1e3, 800)
+    }
+
+    fn bucket(&self, x: f64) -> usize {
+        if x < self.min {
+            return 0; // underflow
+        }
+        let idx = (x / self.min).ln() / self.growth.ln();
+        let idx = idx.floor() as usize + 1;
+        idx.min(self.counts.len() - 1)
+    }
+
+    /// Record a sample (non-positive values clamp into the underflow
+    /// bucket but still count toward mean).
+    pub fn record(&mut self, x: f64) {
+        let b = if x <= 0.0 { 0 } else { self.bucket(x) };
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum += x;
+        self.max_seen = self.max_seen.max(x);
+        self.min_seen = self.min_seen.min(x);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Exact running mean.
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Approximate percentile (`p` in `[0, 100]`); exact min/max at the
+    /// extremes.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        if p <= 0.0 {
+            return self.min_seen;
+        }
+        if p >= 100.0 {
+            return self.max_seen;
+        }
+        let target = (p / 100.0 * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.bucket_mid(i);
+            }
+        }
+        self.max_seen
+    }
+
+    fn bucket_mid(&self, i: usize) -> f64 {
+        if i == 0 {
+            return self.min_seen.max(0.0).min(self.min);
+        }
+        let lo = self.min * self.growth.powi(i as i32 - 1);
+        let hi = lo * self.growth;
+        ((lo + hi) * 0.5).min(self.max_seen)
+    }
+
+    /// Merge another histogram with identical geometry.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        assert!((self.growth - other.growth).abs() < 1e-12);
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max_seen = self.max_seen.max(other.max_seen);
+        self.min_seen = self.min_seen.min(other.min_seen);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn empty() {
+        let h = Histogram::latency();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = Histogram::latency();
+        h.record(0.1);
+        h.record(0.3);
+        assert!((h.mean() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_within_resolution() {
+        let mut h = Histogram::latency();
+        let mut r = Rng::new(5);
+        let mut xs = Vec::new();
+        for _ in 0..20_000 {
+            let x = r.lognormal(-2.0, 1.0); // around 135 ms
+            xs.push(x);
+            h.record(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [50.0, 90.0, 99.0] {
+            let exact = crate::util::stats::percentile_sorted(&xs, p);
+            let approx = h.percentile(p);
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.05, "p{p}: exact {exact} approx {approx}");
+        }
+    }
+
+    #[test]
+    fn extremes_exact() {
+        let mut h = Histogram::latency();
+        for x in [0.01, 0.5, 2.0] {
+            h.record(x);
+        }
+        assert_eq!(h.percentile(0.0), 0.01);
+        assert_eq!(h.percentile(100.0), 2.0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Histogram::latency();
+        let mut b = Histogram::latency();
+        a.record(0.1);
+        b.record(0.2);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean() - 0.15).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,13 @@
+//! Serving metrics: TTFT / TPOT / queueing-time recorders, log-scaled
+//! latency histograms, chunk-utilization and throughput accounting.
+//!
+//! These are the quantities the paper's evaluation reports: mean TTFT and
+//! internal queuing latency (Fig. 6), Prefill Chunk Utilization and max
+//! sustainable QPS (Table 1), per-DP KV-load dispersion (Fig. 7) and
+//! aggregate decode throughput (Fig. 8).
+
+mod histogram;
+mod recorder;
+
+pub use histogram::Histogram;
+pub use recorder::{LatencyRecorder, RequestMetrics, ServingReport, ThroughputCounter, UtilizationMeter};

@@ -1,0 +1,382 @@
+//! Per-request metric collection and aggregate serving reports.
+
+use super::Histogram;
+use crate::json::Json;
+
+/// Lifecycle timestamps of a single request (seconds; -1 = not yet).
+#[derive(Debug, Clone, Copy)]
+pub struct RequestMetrics {
+    /// External arrival at the scheduler frontend.
+    pub t_arrival: f64,
+    /// Dispatch from the scheduler to an instance (leaves the
+    /// scheduler-side queue).
+    pub t_dispatch: f64,
+    /// First forward pass containing this request starts on-device (leaves
+    /// the device-side queue).
+    pub t_exec_start: f64,
+    /// First output token produced (prefill for this request completed).
+    pub t_first_token: f64,
+    /// Final output token produced.
+    pub t_done: f64,
+    /// Prompt length in tokens.
+    pub input_tokens: u32,
+    /// Generated length in tokens.
+    pub output_tokens: u32,
+}
+
+impl RequestMetrics {
+    /// Fresh record at arrival time.
+    pub fn arrive(t: f64, input_tokens: u32) -> Self {
+        RequestMetrics {
+            t_arrival: t,
+            t_dispatch: -1.0,
+            t_exec_start: -1.0,
+            t_first_token: -1.0,
+            t_done: -1.0,
+            input_tokens,
+            output_tokens: 0,
+        }
+    }
+
+    /// Time-to-first-token: arrival → first token.
+    pub fn ttft(&self) -> Option<f64> {
+        (self.t_first_token >= 0.0).then(|| self.t_first_token - self.t_arrival)
+    }
+
+    /// Scheduler-side queueing: arrival → dispatch.
+    pub fn sched_queue(&self) -> Option<f64> {
+        (self.t_dispatch >= 0.0).then(|| self.t_dispatch - self.t_arrival)
+    }
+
+    /// Device-side queueing: dispatch → execution start. This is the HOL
+    /// blocking component the paper attributes to immediate dispatch.
+    pub fn device_queue(&self) -> Option<f64> {
+        (self.t_exec_start >= 0.0 && self.t_dispatch >= 0.0)
+            .then(|| self.t_exec_start - self.t_dispatch)
+    }
+
+    /// Mean time-per-output-token after the first.
+    pub fn tpot(&self) -> Option<f64> {
+        if self.t_done >= 0.0 && self.output_tokens > 1 {
+            Some((self.t_done - self.t_first_token) / (self.output_tokens - 1) as f64)
+        } else {
+            None
+        }
+    }
+}
+
+/// Streaming latency statistics (histogram + exact mean).
+#[derive(Debug, Clone)]
+pub struct LatencyRecorder {
+    hist: Histogram,
+    label: String,
+}
+
+impl LatencyRecorder {
+    /// New recorder with a display label (e.g. "ttft").
+    pub fn new(label: &str) -> Self {
+        LatencyRecorder {
+            hist: Histogram::latency(),
+            label: label.to_string(),
+        }
+    }
+
+    /// Record one latency sample in seconds.
+    pub fn record(&mut self, seconds: f64) {
+        self.hist.record(seconds);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.hist.count()
+    }
+
+    /// Exact mean in seconds.
+    pub fn mean(&self) -> f64 {
+        self.hist.mean()
+    }
+
+    /// Mean in milliseconds.
+    pub fn mean_ms(&self) -> f64 {
+        self.mean() * 1e3
+    }
+
+    /// Approximate percentile in seconds.
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.hist.percentile(p)
+    }
+
+    /// Percentile in milliseconds.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        self.percentile(p) * 1e3
+    }
+
+    /// Merge samples from another recorder.
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.hist.merge(&other.hist);
+    }
+
+    /// One-line human report.
+    pub fn line(&self) -> String {
+        format!(
+            "{}: n={} mean={:.1}ms p50={:.1}ms p90={:.1}ms p99={:.1}ms",
+            self.label,
+            self.count(),
+            self.mean_ms(),
+            self.percentile_ms(50.0),
+            self.percentile_ms(90.0),
+            self.percentile_ms(99.0),
+        )
+    }
+
+    /// JSON summary.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::from(self.label.clone())),
+            ("count", Json::from(self.count())),
+            ("mean_ms", Json::from(self.mean_ms())),
+            ("p50_ms", Json::from(self.percentile_ms(50.0))),
+            ("p90_ms", Json::from(self.percentile_ms(90.0))),
+            ("p99_ms", Json::from(self.percentile_ms(99.0))),
+        ])
+    }
+}
+
+/// Windowless token/request throughput counter over a time span.
+#[derive(Debug, Clone, Default)]
+pub struct ThroughputCounter {
+    /// Completed requests.
+    pub requests: u64,
+    /// Prefill tokens processed.
+    pub prefill_tokens: u64,
+    /// Decode tokens generated.
+    pub decode_tokens: u64,
+    t_start: f64,
+    t_end: f64,
+}
+
+impl ThroughputCounter {
+    /// Start a counter at `t`.
+    pub fn start(t: f64) -> Self {
+        ThroughputCounter {
+            t_start: t,
+            t_end: t,
+            ..Default::default()
+        }
+    }
+
+    /// Account a completed request at time `t`.
+    pub fn complete(&mut self, t: f64, prefill_tokens: u64, decode_tokens: u64) {
+        self.requests += 1;
+        self.prefill_tokens += prefill_tokens;
+        self.decode_tokens += decode_tokens;
+        self.t_end = self.t_end.max(t);
+    }
+
+    /// Account raw tokens (e.g. per forward pass) at time `t`.
+    pub fn add_tokens(&mut self, t: f64, prefill: u64, decode: u64) {
+        self.prefill_tokens += prefill;
+        self.decode_tokens += decode;
+        self.t_end = self.t_end.max(t);
+    }
+
+    /// Elapsed span in seconds.
+    pub fn elapsed(&self) -> f64 {
+        (self.t_end - self.t_start).max(1e-9)
+    }
+
+    /// Requests per second.
+    pub fn qps(&self) -> f64 {
+        self.requests as f64 / self.elapsed()
+    }
+
+    /// Prefill tokens per second.
+    pub fn prefill_tps(&self) -> f64 {
+        self.prefill_tokens as f64 / self.elapsed()
+    }
+
+    /// Decode tokens per second.
+    pub fn decode_tps(&self) -> f64 {
+        self.decode_tokens as f64 / self.elapsed()
+    }
+}
+
+/// Prefill Chunk Utilization meter (Table 1): fraction of the theoretical
+/// per-forward token capacity actually used, averaged over forward passes.
+#[derive(Debug, Clone, Default)]
+pub struct UtilizationMeter {
+    used: u64,
+    capacity: u64,
+    passes: u64,
+}
+
+impl UtilizationMeter {
+    /// Account one forward pass that used `used` of `capacity` tokens.
+    pub fn record_pass(&mut self, used: u64, capacity: u64) {
+        self.used += used;
+        self.capacity += capacity;
+        self.passes += 1;
+    }
+
+    /// Aggregate utilization in `[0, 1]`.
+    pub fn utilization(&self) -> f64 {
+        if self.capacity == 0 {
+            0.0
+        } else {
+            self.used as f64 / self.capacity as f64
+        }
+    }
+
+    /// Number of forward passes observed.
+    pub fn passes(&self) -> u64 {
+        self.passes
+    }
+}
+
+/// Aggregate output of a serving run (simulation or real): the quantities
+/// the paper's tables/figures report.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    /// Time-to-first-token distribution.
+    pub ttft: LatencyRecorder,
+    /// Scheduler-side queueing delay distribution.
+    pub sched_queue: LatencyRecorder,
+    /// Device-side queueing delay distribution (HOL blocking).
+    pub device_queue: LatencyRecorder,
+    /// End-to-end latency distribution.
+    pub e2e: LatencyRecorder,
+    /// Token/request throughput.
+    pub throughput: ThroughputCounter,
+    /// Prefill chunk utilization.
+    pub chunk_util: UtilizationMeter,
+    /// Requests rejected by flow control.
+    pub rejected: u64,
+}
+
+impl ServingReport {
+    /// Empty report with the clock starting at `t`.
+    pub fn new(t_start: f64) -> Self {
+        ServingReport {
+            ttft: LatencyRecorder::new("ttft"),
+            sched_queue: LatencyRecorder::new("sched_queue"),
+            device_queue: LatencyRecorder::new("device_queue"),
+            e2e: LatencyRecorder::new("e2e"),
+            throughput: ThroughputCounter::start(t_start),
+            chunk_util: UtilizationMeter::default(),
+            rejected: 0,
+        }
+    }
+
+    /// Fold one finished request into the aggregates.
+    pub fn absorb(&mut self, m: &RequestMetrics) {
+        if let Some(x) = m.ttft() {
+            self.ttft.record(x);
+        }
+        if let Some(x) = m.sched_queue() {
+            self.sched_queue.record(x);
+        }
+        if let Some(x) = m.device_queue() {
+            self.device_queue.record(x);
+        }
+        if m.t_done >= 0.0 {
+            self.e2e.record(m.t_done - m.t_arrival);
+            self.throughput.complete(
+                m.t_done,
+                m.input_tokens as u64,
+                m.output_tokens as u64,
+            );
+        }
+    }
+
+    /// Human-readable multi-line summary.
+    pub fn render(&self) -> String {
+        format!(
+            "{}\n{}\n{}\n{}\nthroughput: qps={:.2} prefill_tps={:.0} decode_tps={:.0} rejected={}\nchunk_util: {:.1}% over {} passes",
+            self.ttft.line(),
+            self.sched_queue.line(),
+            self.device_queue.line(),
+            self.e2e.line(),
+            self.throughput.qps(),
+            self.throughput.prefill_tps(),
+            self.throughput.decode_tps(),
+            self.rejected,
+            self.chunk_util.utilization() * 100.0,
+            self.chunk_util.passes(),
+        )
+    }
+
+    /// JSON summary for trace/analysis dumps.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ttft", self.ttft.to_json()),
+            ("sched_queue", self.sched_queue.to_json()),
+            ("device_queue", self.device_queue.to_json()),
+            ("e2e", self.e2e.to_json()),
+            ("qps", Json::from(self.throughput.qps())),
+            ("prefill_tps", Json::from(self.throughput.prefill_tps())),
+            ("decode_tps", Json::from(self.throughput.decode_tps())),
+            ("chunk_util", Json::from(self.chunk_util.utilization())),
+            ("rejected", Json::from(self.rejected)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_req() -> RequestMetrics {
+        let mut m = RequestMetrics::arrive(10.0, 1000);
+        m.t_dispatch = 10.2;
+        m.t_exec_start = 10.5;
+        m.t_first_token = 10.9;
+        m.t_done = 12.9;
+        m.output_tokens = 101;
+        m
+    }
+
+    #[test]
+    fn request_decomposition() {
+        let m = sample_req();
+        assert!((m.ttft().unwrap() - 0.9).abs() < 1e-12);
+        assert!((m.sched_queue().unwrap() - 0.2).abs() < 1e-12);
+        assert!((m.device_queue().unwrap() - 0.3).abs() < 1e-12);
+        assert!((m.tpot().unwrap() - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn incomplete_request_none() {
+        let m = RequestMetrics::arrive(0.0, 10);
+        assert!(m.ttft().is_none());
+        assert!(m.tpot().is_none());
+        assert!(m.device_queue().is_none());
+    }
+
+    #[test]
+    fn report_absorb() {
+        let mut r = ServingReport::new(10.0);
+        r.absorb(&sample_req());
+        assert_eq!(r.ttft.count(), 1);
+        assert_eq!(r.throughput.requests, 1);
+        assert_eq!(r.throughput.prefill_tokens, 1000);
+        assert!(r.render().contains("ttft"));
+    }
+
+    #[test]
+    fn utilization_meter() {
+        let mut u = UtilizationMeter::default();
+        u.record_pass(1500, 3000);
+        u.record_pass(3000, 3000);
+        assert!((u.utilization() - 0.75).abs() < 1e-12);
+        assert_eq!(u.passes(), 2);
+    }
+
+    #[test]
+    fn throughput_counter() {
+        let mut t = ThroughputCounter::start(0.0);
+        t.complete(2.0, 100, 50);
+        t.complete(4.0, 100, 50);
+        assert!((t.qps() - 0.5).abs() < 1e-9);
+        assert!((t.decode_tps() - 25.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,210 @@
+//! Parse `artifacts/model_meta.json` — the ABI between aot.py and Rust.
+
+use crate::json::{parse, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Model hyperparameters (mirror of python ModelConfig).
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Hidden width.
+    pub d_model: usize,
+    /// Transformer layers.
+    pub n_layers: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// Head width.
+    pub d_head: usize,
+    /// KV capacity per sequence.
+    pub max_seq: usize,
+}
+
+/// One parameter tensor in weights.bin.
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    /// Dotted parameter name.
+    pub name: String,
+    /// Tensor shape.
+    pub shape: Vec<usize>,
+    /// Offset into weights.bin, in f32 elements.
+    pub offset: usize,
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct VariantMeta {
+    /// Variant name, e.g. `prefill_c128`.
+    pub name: String,
+    /// `"prefill"` or `"decode"`.
+    pub kind: String,
+    /// Chunk size (prefill) or batch size (decode).
+    pub chunk_or_batch: u32,
+    /// HLO text file name.
+    pub file: String,
+}
+
+/// Parsed artifact metadata.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    /// Model dimensions.
+    pub model: ModelDims,
+    /// Weights blob file name.
+    pub weights_file: String,
+    /// Total f32 elements in the blob.
+    pub total_f32: usize,
+    /// Parameter manifest, in argument order.
+    pub params: Vec<ParamMeta>,
+    /// Entry-point variants.
+    pub variants: Vec<VariantMeta>,
+}
+
+impl ModelMeta {
+    /// Load and validate the metadata file.
+    pub fn load(path: &Path) -> Result<ModelMeta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse metadata from JSON text.
+    pub fn parse(text: &str) -> Result<ModelMeta> {
+        let j = parse(text).map_err(|e| anyhow!("model_meta.json: {e}"))?;
+        let num = |o: &Json, k: &str| -> Result<usize> {
+            o.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing numeric field '{k}'"))
+        };
+        let model_j = j.get("model").ok_or_else(|| anyhow!("missing 'model'"))?;
+        let model = ModelDims {
+            vocab: num(model_j, "vocab")?,
+            d_model: num(model_j, "d_model")?,
+            n_layers: num(model_j, "n_layers")?,
+            n_heads: num(model_j, "n_heads")?,
+            d_head: num(model_j, "d_head")?,
+            max_seq: num(model_j, "max_seq")?,
+        };
+        let w = j.get("weights").ok_or_else(|| anyhow!("missing 'weights'"))?;
+        let weights_file = w
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("missing weights.file"))?
+            .to_string();
+        let total_f32 = num(w, "total_f32")?;
+        let mut params = Vec::new();
+        for p in w
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing weights.params"))?
+        {
+            let shape = p
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("param missing shape"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad shape")))
+                .collect::<Result<Vec<_>>>()?;
+            params.push(ParamMeta {
+                name: p
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("param missing name"))?
+                    .to_string(),
+                shape,
+                offset: num(p, "offset")?,
+            });
+        }
+        let mut variants = Vec::new();
+        for v in j
+            .get("variants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing 'variants'"))?
+        {
+            let kind = v
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("variant missing kind"))?
+                .to_string();
+            let cb = match kind.as_str() {
+                "prefill" => num(v, "chunk")?,
+                "decode" => num(v, "batch")?,
+                other => return Err(anyhow!("unknown variant kind '{other}'")),
+            } as u32;
+            variants.push(VariantMeta {
+                name: v
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("variant missing name"))?
+                    .to_string(),
+                kind,
+                chunk_or_batch: cb,
+                file: v
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("variant missing file"))?
+                    .to_string(),
+            });
+        }
+        // Sanity: manifest offsets are monotone and end at total_f32.
+        let mut expected = 0usize;
+        for p in &params {
+            if p.offset != expected {
+                return Err(anyhow!("param '{}' offset {} != expected {expected}", p.name, p.offset));
+            }
+            expected += p.shape.iter().product::<usize>().max(1);
+        }
+        if expected != total_f32 {
+            return Err(anyhow!("manifest covers {expected} f32 but total is {total_f32}"));
+        }
+        Ok(ModelMeta {
+            model,
+            weights_file,
+            total_f32,
+            params,
+            variants,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"vocab": 512, "d_model": 8, "n_layers": 1, "n_heads": 2,
+                "d_head": 4, "n_experts": 2, "top_k": 1, "d_ff": 8,
+                "d_shared_ff": 8, "max_seq": 16},
+      "weights": {"file": "weights.bin", "total_f32": 4104,
+        "params": [
+          {"name": "embed", "shape": [512, 8], "offset": 0},
+          {"name": "norm_out", "shape": [8], "offset": 4096}
+        ]},
+      "variants": [
+        {"name": "prefill_c64", "kind": "prefill", "chunk": 64, "file": "prefill_c64.hlo.txt"},
+        {"name": "decode_b1", "kind": "decode", "batch": 1, "file": "decode_b1.hlo.txt"}
+      ],
+      "abi": {}, "seed": 0
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.model.vocab, 512);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.variants.len(), 2);
+        assert_eq!(m.variants[0].chunk_or_batch, 64);
+        assert_eq!(m.variants[1].kind, "decode");
+    }
+
+    #[test]
+    fn rejects_bad_offsets() {
+        let bad = SAMPLE.replace("\"offset\": 4096", "\"offset\": 4000");
+        assert!(ModelMeta::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(ModelMeta::parse("{}").is_err());
+    }
+}

@@ -1,0 +1,371 @@
+//! PJRT runtime: load the AOT artifacts (`make artifacts`) and execute the
+//! nano-MoE model from Rust. Python never runs on this path.
+//!
+//! Artifact contract (see python/compile/aot.py):
+//!
+//! * `model_meta.json` — model config, parameter manifest, variant ABI.
+//! * `weights.bin` — all parameters as little-endian f32 in manifest
+//!   order. Uploaded once per client into device-resident buffers.
+//! * `prefill_c{chunk}.hlo.txt` / `decode_b{batch}.hlo.txt` — HLO text
+//!   entries: `(params..., tokens, k_caches, v_caches, pos|lens) ->
+//!   (logits, k_caches, v_caches)` as a 3-tuple.
+//!
+//! Weights are uploaded once (`execute_b` with persistent `PjRtBuffer`s);
+//! per-call operands (tokens + caches) are uploaded per call and the tuple
+//! output is synced back to host literals — on the CPU PJRT plugin these
+//! are memcpys, not PCIe transfers.
+
+mod meta;
+
+pub use meta::{ModelDims, ModelMeta, ParamMeta, VariantMeta};
+
+use crate::cli::Command;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// Output of one model call.
+pub struct StepOutput {
+    /// Logits, flattened (`[chunk, vocab]` for prefill, `[batch, vocab]`
+    /// for decode).
+    pub logits: Vec<f32>,
+    /// Updated K caches (host literal, ready to feed back).
+    pub k_caches: Literal,
+    /// Updated V caches.
+    pub v_caches: Literal,
+    /// Wall time of the PJRT execute + output sync, seconds.
+    pub exec_time: f64,
+    /// Vocab size (row stride of `logits`).
+    pub vocab: usize,
+}
+
+impl StepOutput {
+    /// Logits row for position/slot `idx`.
+    pub fn logits_at(&self, idx: usize) -> Vec<f32> {
+        self.logits[idx * self.vocab..(idx + 1) * self.vocab].to_vec()
+    }
+}
+
+/// The loaded model runtime: one PJRT client, device-resident weights,
+/// and one compiled executable per AOT variant. `Send + Sync`: workers
+/// share it behind an `Arc`.
+pub struct Runtime {
+    client: PjRtClient,
+    /// Parsed artifact metadata.
+    pub meta: ModelMeta,
+    param_bufs: Vec<PjRtBuffer>,
+    prefill: HashMap<u32, PjRtLoadedExecutable>,
+    decode: HashMap<u32, PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load artifacts from `dir`, compile all variants, upload weights.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        Self::load_filtered(dir, None)
+    }
+
+    /// Load artifacts, compiling only variants whose kind is in `kinds`
+    /// (`None` = all). Workers that only prefill (or only decode) use this
+    /// to halve startup compilation.
+    pub fn load_filtered(dir: &Path, kinds: Option<&[&str]>) -> Result<Runtime> {
+        let meta = ModelMeta::load(&dir.join("model_meta.json"))
+            .context("loading model_meta.json — did you run `make artifacts`?")?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        log::info!(
+            "PJRT platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+
+        // Weights: one flat f32 blob, sliced per the manifest.
+        let blob = std::fs::read(dir.join(&meta.weights_file))
+            .with_context(|| format!("reading {}", meta.weights_file))?;
+        if blob.len() != meta.total_f32 * 4 {
+            bail!(
+                "weights.bin size mismatch: {} bytes vs {} f32 expected",
+                blob.len(),
+                meta.total_f32
+            );
+        }
+        let floats: Vec<f32> = blob
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let mut param_bufs = Vec::with_capacity(meta.params.len());
+        for p in &meta.params {
+            let n: usize = p.shape.iter().product::<usize>().max(1);
+            let data = &floats[p.offset..p.offset + n];
+            let dims: Vec<usize> = if p.shape.is_empty() {
+                vec![1]
+            } else {
+                p.shape.clone()
+            };
+            let buf = client
+                .buffer_from_host_buffer(data, &dims, None)
+                .map_err(|e| anyhow!("uploading param {}: {e:?}", p.name))?;
+            param_bufs.push(buf);
+        }
+
+        // Compile each variant from HLO text.
+        let mut prefill = HashMap::new();
+        let mut decode = HashMap::new();
+        for v in &meta.variants {
+            if let Some(kinds) = kinds {
+                if !kinds.contains(&v.kind.as_str()) {
+                    continue;
+                }
+            }
+            let path = dir.join(&v.file);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", v.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", v.file))?;
+            log::info!("compiled {} in {:.2}s", v.name, t0.elapsed().as_secs_f64());
+            match v.kind.as_str() {
+                "prefill" => {
+                    prefill.insert(v.chunk_or_batch, exe);
+                }
+                "decode" => {
+                    decode.insert(v.chunk_or_batch, exe);
+                }
+                other => bail!("unknown variant kind '{other}'"),
+            }
+        }
+        Ok(Runtime {
+            client,
+            meta,
+            param_bufs,
+            prefill,
+            decode,
+        })
+    }
+
+    /// Available prefill chunk sizes (sorted ascending).
+    pub fn prefill_chunks(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self.prefill.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Available decode batch sizes (sorted ascending).
+    pub fn decode_batches(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self.decode.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Zeroed single-sequence prefill cache literal `[L, S, H, Dh]`.
+    pub fn empty_prefill_cache(&self) -> Literal {
+        let m = &self.meta.model;
+        let n = m.n_layers * m.max_seq * m.n_heads * m.d_head;
+        Literal::vec1(&vec![0f32; n])
+            .reshape(&[
+                m.n_layers as i64,
+                m.max_seq as i64,
+                m.n_heads as i64,
+                m.d_head as i64,
+            ])
+            .expect("reshape")
+    }
+
+    /// Zeroed batched decode cache literal `[L, B, S, H, Dh]`.
+    pub fn empty_decode_cache(&self, batch: u32) -> Literal {
+        let m = &self.meta.model;
+        let n = m.n_layers * batch as usize * m.max_seq * m.n_heads * m.d_head;
+        Literal::vec1(&vec![0f32; n])
+            .reshape(&[
+                m.n_layers as i64,
+                batch as i64,
+                m.max_seq as i64,
+                m.n_heads as i64,
+                m.d_head as i64,
+            ])
+            .expect("reshape")
+    }
+
+    fn run(
+        &self,
+        exe: &PjRtLoadedExecutable,
+        operands: &[&Literal],
+    ) -> Result<(Vec<f32>, Literal, Literal, f64)> {
+        // Upload per-call operands; params are already device-resident.
+        let uploaded: Vec<PjRtBuffer> = operands
+            .iter()
+            .map(|l| {
+                self.client
+                    .buffer_from_host_literal(None, l)
+                    .map_err(|e| anyhow!("uploading operand: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let mut args: Vec<&PjRtBuffer> = self.param_bufs.iter().collect();
+        args.extend(uploaded.iter());
+        let t0 = Instant::now();
+        let outs = exe.execute_b(&args).map_err(|e| anyhow!("execute: {e:?}"))?;
+        let tuple = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("output sync: {e:?}"))?;
+        let exec_time = t0.elapsed().as_secs_f64();
+        let mut parts = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if parts.len() != 3 {
+            bail!("expected 3 outputs, got {}", parts.len());
+        }
+        let vc = parts.pop().unwrap();
+        let kc = parts.pop().unwrap();
+        let logits = parts
+            .pop()
+            .unwrap()
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        Ok((logits, kc, vc, exec_time))
+    }
+
+    /// Execute one prefill chunk: `tokens.len()` must equal a compiled
+    /// chunk size; `pos` is the absolute position of `tokens[0]`.
+    pub fn prefill_chunk(
+        &self,
+        tokens: &[i32],
+        k_caches: &Literal,
+        v_caches: &Literal,
+        pos: i32,
+    ) -> Result<StepOutput> {
+        let chunk = tokens.len() as u32;
+        let exe = self
+            .prefill
+            .get(&chunk)
+            .ok_or_else(|| anyhow!("no prefill variant for chunk={chunk}"))?;
+        let toks = Literal::vec1(tokens);
+        let pos_l = Literal::scalar(pos);
+        let (logits, kc, vc, exec_time) =
+            self.run(exe, &[&toks, k_caches, v_caches, &pos_l])?;
+        Ok(StepOutput {
+            logits,
+            k_caches: kc,
+            v_caches: vc,
+            exec_time,
+            vocab: self.meta.model.vocab,
+        })
+    }
+
+    /// Execute one decode step for a full batch: `tokens`/`lens` length
+    /// must equal a compiled batch size. Inactive slots pass any token
+    /// with `lens` pointing at a scratch row.
+    pub fn decode_step(
+        &self,
+        tokens: &[i32],
+        k_caches: &Literal,
+        v_caches: &Literal,
+        lens: &[i32],
+    ) -> Result<StepOutput> {
+        let batch = tokens.len() as u32;
+        if lens.len() != tokens.len() {
+            bail!("lens/tokens length mismatch");
+        }
+        let exe = self
+            .decode
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no decode variant for batch={batch}"))?;
+        let toks = Literal::vec1(tokens);
+        let lens_l = Literal::vec1(lens);
+        let (logits, kc, vc, exec_time) =
+            self.run(exe, &[&toks, k_caches, v_caches, &lens_l])?;
+        Ok(StepOutput {
+            logits,
+            k_caches: kc,
+            v_caches: vc,
+            exec_time,
+            vocab: self.meta.model.vocab,
+        })
+    }
+}
+
+/// Duplicate a literal (the crate's `Literal` is not `Clone`): CPU
+/// memcpy round-trip through the raw f32 data.
+pub fn clone_literal(l: &Literal) -> Result<Literal> {
+    let shape = l.array_shape().map_err(|e| anyhow!("{e:?}"))?;
+    let data = l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    Literal::vec1(&data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("{e:?}"))
+}
+
+/// Default artifact directory (env `SBS_ARTIFACTS` overrides).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("SBS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// `sbs calibrate`: measure real pass/step times and print cost-model
+/// constants for the simulator (DESIGN.md §Hardware-Adaptation).
+pub fn cli_calibrate(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("sbs calibrate", "measure PJRT execution times")
+        .opt("artifacts", "artifact directory", Some("artifacts"))
+        .opt("iters", "timed iterations per variant", Some("5"));
+    let args = cmd.parse(argv).map_err(|e| anyhow!("{e}"))?;
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let iters: usize = args.parse_or("iters", 5).map_err(|e| anyhow!("{e}"))?;
+    let rt = Runtime::load(&dir)?;
+
+    println!("variant          mean_exec_s   tokens/s");
+    let mut prefill_full = 0.0;
+    let mut chunk_max = 0;
+    for chunk in rt.prefill_chunks() {
+        let tokens: Vec<i32> = (0..chunk as i32).map(|i| i % 500).collect();
+        let kc = rt.empty_prefill_cache();
+        let vc = rt.empty_prefill_cache();
+        let _ = rt.prefill_chunk(&tokens, &kc, &vc, 0)?; // warmup
+        let mut total = 0.0;
+        for _ in 0..iters {
+            total += rt.prefill_chunk(&tokens, &kc, &vc, 0)?.exec_time;
+        }
+        let mean = total / iters as f64;
+        println!(
+            "prefill_c{:<6} {:>12.4} {:>10.0}",
+            chunk,
+            mean,
+            chunk as f64 / mean
+        );
+        if chunk > chunk_max {
+            chunk_max = chunk;
+            prefill_full = mean;
+        }
+    }
+    for batch in rt.decode_batches() {
+        let tokens: Vec<i32> = vec![7; batch as usize];
+        let lens: Vec<i32> = vec![64; batch as usize];
+        let kc = rt.empty_decode_cache(batch);
+        let vc = rt.empty_decode_cache(batch);
+        let _ = rt.decode_step(&tokens, &kc, &vc, &lens)?; // warmup
+        let mut total = 0.0;
+        for _ in 0..iters {
+            total += rt.decode_step(&tokens, &kc, &vc, &lens)?.exec_time;
+        }
+        let mean = total / iters as f64;
+        println!(
+            "decode_b{:<7} {:>12.4} {:>10.0}",
+            batch,
+            mean,
+            batch as f64 / mean
+        );
+    }
+    if prefill_full > 0.0 {
+        let model = crate::cluster::costmodel::PrefillCostModel::calibrated(
+            chunk_max,
+            chunk_max as f64 / 2.0,
+            prefill_full,
+        );
+        println!(
+            "\ncalibrated PrefillCostModel: t_sync={:.4} s_token={:.3e} s_attn={:.3e}",
+            model.t_sync, model.s_token, model.s_attn
+        );
+    }
+    Ok(())
+}

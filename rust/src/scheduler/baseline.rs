@@ -1,0 +1,175 @@
+//! Immediate-dispatch baseline schedulers (§3.2's "traditional
+//! continuous-service assumption").
+//!
+//! These dispatch every request the moment it arrives, choosing an
+//! instance by a classical load-balancing policy and a DP unit by
+//! instantaneous greedy headroom. Because the engine is a non-preemptive
+//! gated batch processor, requests pushed to a busy instance accumulate in
+//! its device-side queue — the HOL blocking SBS eliminates. These are the
+//! baselines for Fig. 6, Table 1 and Figs. 7–8.
+
+use super::pbaa::Assignment;
+use super::state::GlobalState;
+use super::types::Request;
+
+/// Instance-selection policy for immediate dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ImmediatePolicy {
+    /// Cycle through instances regardless of state.
+    RoundRobin,
+    /// Least outstanding work: minimal total in-flight + queued tokens.
+    LeastOutstanding,
+    /// Join-shortest-queue: minimal device queue depth (batches).
+    JoinShortestQueue,
+}
+
+/// Immediate-dispatch scheduler over a pool.
+pub struct ImmediateScheduler {
+    /// Policy in force.
+    pub policy: ImmediatePolicy,
+    /// Pool state (updated on dispatch/feedback like the SBS state plane,
+    /// but *not* consulted for readiness — that is the point).
+    pub state: GlobalState,
+    rr_cursor: u32,
+    dp_cursor: Vec<u32>,
+}
+
+impl ImmediateScheduler {
+    /// Build for `n_instances × dp_per_instance` with chunk capacity.
+    pub fn new(policy: ImmediatePolicy, n_instances: u32, dp_per_instance: u32, c_chunk: u32) -> Self {
+        ImmediateScheduler {
+            policy,
+            state: GlobalState::new(n_instances, dp_per_instance, c_chunk),
+            rr_cursor: 0,
+            dp_cursor: vec![0; n_instances as usize],
+        }
+    }
+
+    /// Dispatch one request *now*; always succeeds (that is the failure
+    /// mode). Returns the chosen assignment.
+    pub fn dispatch(&mut self, request: Request) -> Assignment {
+        let instance = self.pick_instance();
+        // DP choice: round-robin, blind to chunk-level state. This is the
+        // paper's §4.2 "granularity mismatch": traditional schedulers
+        // perceive instances coarsely (request counts / total lengths)
+        // and never model per-DP chunk occupancy, so DP placement inside
+        // the engine is effectively arrival-order striping.
+        let n_dp = self.state.dp_per_instance;
+        let cursor = &mut self.dp_cursor[instance as usize];
+        let dp = *cursor % n_dp;
+        *cursor = cursor.wrapping_add(1);
+        let unit = self.state.instance_dps(instance)[dp as usize].id;
+        let tokens = request.input_tokens;
+        self.state.dp_mut(unit).on_dispatch(tokens);
+        let inst = &mut self.state.instances[instance as usize];
+        inst.queue_depth += 1;
+        Assignment {
+            request,
+            unit,
+            cached_tokens: 0,
+        }
+    }
+
+    /// Engine feedback: a forward pass completed on `instance`.
+    pub fn on_end_forward(&mut self, instance: u32, now: f64) {
+        let inst = &mut self.state.instances[instance as usize];
+        inst.queue_depth = inst.queue_depth.saturating_sub(1);
+        inst.last_end_forward = now;
+    }
+
+    fn pick_instance(&mut self) -> u32 {
+        let n = self.state.n_instances();
+        match self.policy {
+            ImmediatePolicy::RoundRobin => {
+                let i = self.rr_cursor % n;
+                self.rr_cursor = self.rr_cursor.wrapping_add(1);
+                i
+            }
+            ImmediatePolicy::LeastOutstanding => {
+                let mut best = 0u32;
+                let mut best_load = i64::MAX;
+                for i in 0..n {
+                    let load: i64 = self
+                        .state
+                        .instance_dps(i)
+                        .iter()
+                        .map(|d| d.u_flight as i64 + d.r_queued as i64)
+                        .sum();
+                    if load < best_load {
+                        best_load = load;
+                        best = i;
+                    }
+                }
+                best
+            }
+            ImmediatePolicy::JoinShortestQueue => {
+                let mut best = 0u32;
+                let mut best_depth = u32::MAX;
+                for (i, inst) in self.state.instances.iter().enumerate() {
+                    if inst.queue_depth < best_depth {
+                        best_depth = inst.queue_depth;
+                        best = i as u32;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, len: u32) -> Request {
+        Request::new(id, len, 16, 0.0)
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut s = ImmediateScheduler::new(ImmediatePolicy::RoundRobin, 3, 2, 3072);
+        let instances: Vec<u32> = (0..6).map(|i| s.dispatch(req(i, 100)).unit.instance).collect();
+        assert_eq!(instances, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn dispatches_even_to_busy_instances() {
+        // The defining flaw: requests keep landing on a saturated target.
+        let mut s = ImmediateScheduler::new(ImmediatePolicy::RoundRobin, 1, 1, 100);
+        for i in 0..5 {
+            s.dispatch(req(i, 100));
+        }
+        assert_eq!(s.state.instances[0].queue_depth, 5);
+        assert!(s.state.dps[0].c_avail() < 0);
+    }
+
+    #[test]
+    fn least_outstanding_prefers_idle() {
+        let mut s = ImmediateScheduler::new(ImmediatePolicy::LeastOutstanding, 2, 1, 3072);
+        let a = s.dispatch(req(0, 1000));
+        let b = s.dispatch(req(1, 100));
+        assert_ne!(a.unit.instance, b.unit.instance);
+    }
+
+    #[test]
+    fn jsq_follows_queue_depth() {
+        let mut s = ImmediateScheduler::new(ImmediatePolicy::JoinShortestQueue, 2, 1, 3072);
+        s.dispatch(req(0, 10));
+        s.dispatch(req(1, 10));
+        s.on_end_forward(0, 1.0);
+        let c = s.dispatch(req(2, 10));
+        assert_eq!(c.unit.instance, 0);
+    }
+
+    #[test]
+    fn dp_choice_is_blind_round_robin() {
+        let mut s = ImmediateScheduler::new(ImmediatePolicy::RoundRobin, 1, 2, 3072);
+        let a = s.dispatch(req(0, 2000));
+        let b = s.dispatch(req(1, 10));
+        let c = s.dispatch(req(2, 2000));
+        // Striped in arrival order regardless of load: dp0, dp1, dp0.
+        assert_eq!(a.unit.dp, 0);
+        assert_eq!(b.unit.dp, 1);
+        assert_eq!(c.unit.dp, 0);
+    }
+}

@@ -1,0 +1,123 @@
+//! Overload protection / flow control (Algorithm 2, phase 3).
+//!
+//! When PBAA reports requests that exceeded `N_limit` waiting cycles, the
+//! flow controller decides between throttling (shed a fraction of new
+//! admissions for a cool-down window) and outright rejection, and exposes
+//! an admission check for the frontend.
+
+use super::types::Request;
+
+/// Flow-control policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlowPolicy {
+    /// Reject the overloaded requests themselves, admit everything else.
+    RejectOverloaded,
+    /// Additionally shed a fraction of *new* admissions for a cool-down
+    /// period after each overload event (paper's "Throttle").
+    Throttle,
+}
+
+/// Flow controller state.
+#[derive(Debug, Clone)]
+pub struct FlowController {
+    policy: FlowPolicy,
+    /// Fraction of new requests shed while throttling (0..1).
+    pub shed_fraction: f64,
+    /// Cool-down duration in seconds after an overload event.
+    pub cooldown: f64,
+    throttle_until: f64,
+    /// Monotone counter used to deterministically shed every k-th request.
+    admit_counter: u64,
+    /// Total rejected requests (overload + shed).
+    rejected: u64,
+}
+
+impl FlowController {
+    /// New controller.
+    pub fn new(policy: FlowPolicy) -> Self {
+        FlowController {
+            policy,
+            shed_fraction: 0.25,
+            cooldown: 2.0,
+            throttle_until: -1.0,
+            admit_counter: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Total requests rejected so far.
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// Whether throttling is active at `now`.
+    pub fn throttling(&self, now: f64) -> bool {
+        self.policy == FlowPolicy::Throttle && now < self.throttle_until
+    }
+
+    /// Handle PBAA's overloaded set at time `now`; returns the requests to
+    /// reject upstream (all of them, under both policies — they already
+    /// waited `N_limit` cycles).
+    pub fn on_overload(&mut self, now: f64, overloaded: Vec<Request>) -> Vec<Request> {
+        if !overloaded.is_empty() && self.policy == FlowPolicy::Throttle {
+            self.throttle_until = now + self.cooldown;
+        }
+        self.rejected += overloaded.len() as u64;
+        overloaded
+    }
+
+    /// Admission check for a new arrival at `now`. Deterministic shedding:
+    /// while throttling, every ⌈1/shed_fraction⌉-th request is refused.
+    pub fn admit(&mut self, now: f64) -> bool {
+        if !self.throttling(now) {
+            return true;
+        }
+        self.admit_counter += 1;
+        let period = (1.0 / self.shed_fraction).round().max(1.0) as u64;
+        if self.admit_counter % period == 0 {
+            self.rejected += 1;
+            false
+        } else {
+            true
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r(id: u64) -> Request {
+        Request::new(id, 100, 10, 0.0)
+    }
+
+    #[test]
+    fn reject_policy_never_throttles() {
+        let mut f = FlowController::new(FlowPolicy::RejectOverloaded);
+        let rejected = f.on_overload(1.0, vec![r(1), r(2)]);
+        assert_eq!(rejected.len(), 2);
+        assert_eq!(f.rejected(), 2);
+        assert!(!f.throttling(1.1));
+        assert!(f.admit(1.1));
+    }
+
+    #[test]
+    fn throttle_sheds_fraction_during_cooldown() {
+        let mut f = FlowController::new(FlowPolicy::Throttle);
+        f.shed_fraction = 0.5;
+        f.on_overload(10.0, vec![r(1)]);
+        assert!(f.throttling(10.5));
+        let admitted = (0..10).filter(|_| f.admit(10.5)).count();
+        assert_eq!(admitted, 5, "50% shed");
+        // After cooldown everything is admitted again.
+        assert!(!f.throttling(12.5));
+        assert!(f.admit(12.5));
+    }
+
+    #[test]
+    fn empty_overload_does_not_arm_throttle() {
+        let mut f = FlowController::new(FlowPolicy::Throttle);
+        f.on_overload(10.0, vec![]);
+        assert!(!f.throttling(10.1));
+    }
+}

@@ -1,0 +1,195 @@
+//! Algorithm 1 — Throughput-Adaptive Interval Control Loop.
+//!
+//! The staggered dispatch cadence `I_opt = (T̄_fwd + L_net) / N_active`
+//! matches the arrival rate the scheduler is willing to admit to the
+//! cluster's aggregate service rate: with `N_active` gated engines each
+//! taking `T̄_fwd` per pass (plus distribution latency `L_net`), one engine
+//! becomes ready every `I_opt` seconds in steady state.
+//!
+//! `T̄_fwd` is smoothed with a sliding-window moving average (W_stats) fed
+//! by `EndForward` payloads; `N_active` tracks auto-scaling/health events.
+
+use crate::util::SlidingWindow;
+
+/// Configuration for the interval controller.
+#[derive(Debug, Clone)]
+pub struct IntervalConfig {
+    /// Maximum samples in the execution-time window (`W_size`).
+    pub window_size: usize,
+    /// Estimated request-distribution network latency (`L_net`), seconds.
+    pub l_net: f64,
+    /// Initial fallback forward time from offline stress testing
+    /// (`T_default`), seconds.
+    pub t_default: f64,
+    /// Adaptive updates enabled (set false for the static-interval
+    /// ablation: `I_opt` stays at `(T_default + L_net)/N`).
+    pub adaptive: bool,
+}
+
+impl Default for IntervalConfig {
+    fn default() -> Self {
+        IntervalConfig {
+            window_size: 64,
+            l_net: 0.002,
+            t_default: 0.25,
+            adaptive: true,
+        }
+    }
+}
+
+/// The Algorithm 1 state machine.
+#[derive(Debug, Clone)]
+pub struct IntervalController {
+    cfg: IntervalConfig,
+    window: SlidingWindow,
+    n_active: u32,
+    i_opt: f64,
+}
+
+impl IntervalController {
+    /// Initialize with the offline-calibrated default and the starting
+    /// instance count.
+    pub fn new(cfg: IntervalConfig, n_active: u32) -> Self {
+        let mut c = IntervalController {
+            window: SlidingWindow::new(cfg.window_size),
+            cfg,
+            n_active,
+            i_opt: 0.0,
+        };
+        c.recompute();
+        c
+    }
+
+    /// Smoothed forward time `T̄_fwd` (falls back to `T_default` before any
+    /// sample arrives — Alg. 1 initialization).
+    pub fn t_fwd(&self) -> f64 {
+        self.window.mean().unwrap_or(self.cfg.t_default)
+    }
+
+    /// Current optimal dispatch interval `I_opt`.
+    pub fn i_opt(&self) -> f64 {
+        self.i_opt
+    }
+
+    /// Current active-instance count.
+    pub fn n_active(&self) -> u32 {
+        self.n_active
+    }
+
+    /// Number of samples currently in W_stats.
+    pub fn samples(&self) -> usize {
+        self.window.len()
+    }
+
+    /// Alg. 1 `RecomputeInterval`.
+    fn recompute(&mut self) {
+        if self.n_active > 0 {
+            self.i_opt = (self.t_fwd() + self.cfg.l_net) / self.n_active as f64;
+        }
+        // n_active == 0: keep the previous interval; dispatch is gated on
+        // readiness anyway and the watchdog path recovers instances.
+    }
+
+    /// Alg. 1 `OnEndForward(t_measured)`: push the sample, refresh the
+    /// moving average, recompute the timer.
+    pub fn on_end_forward(&mut self, t_measured: f64) {
+        if self.cfg.adaptive && t_measured.is_finite() && t_measured >= 0.0 {
+            self.window.push(t_measured);
+        }
+        self.recompute();
+    }
+
+    /// Alg. 1 `OnTopologyChange(N_new)`: immediate adaptation to capacity
+    /// shifts from the auto-scaler or health checker.
+    pub fn on_topology_change(&mut self, n_new: u32) {
+        self.n_active = n_new;
+        self.recompute();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(n: u32) -> IntervalController {
+        IntervalController::new(
+            IntervalConfig {
+                window_size: 4,
+                l_net: 0.0,
+                t_default: 1.0,
+                adaptive: true,
+            },
+            n,
+        )
+    }
+
+    #[test]
+    fn initial_interval_uses_default() {
+        let c = ctl(4);
+        assert!((c.i_opt() - 0.25).abs() < 1e-12); // 1.0 / 4
+        assert!((c.t_fwd() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn converges_to_measured_mean() {
+        let mut c = ctl(2);
+        for _ in 0..8 {
+            c.on_end_forward(0.5);
+        }
+        assert!((c.t_fwd() - 0.5).abs() < 1e-12);
+        assert!((c.i_opt() - 0.25).abs() < 1e-12); // 0.5 / 2
+    }
+
+    #[test]
+    fn window_evicts_old_samples() {
+        let mut c = ctl(1);
+        for _ in 0..4 {
+            c.on_end_forward(1.0);
+        }
+        for _ in 0..4 {
+            c.on_end_forward(2.0); // fully displaces the 1.0s
+        }
+        assert!((c.t_fwd() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topology_change_recomputes_immediately() {
+        let mut c = ctl(4);
+        c.on_end_forward(0.8);
+        let before = c.i_opt();
+        c.on_topology_change(8);
+        assert!((c.i_opt() - before / 2.0).abs() < 1e-12);
+        assert_eq!(c.n_active(), 8);
+    }
+
+    #[test]
+    fn zero_active_keeps_previous_interval() {
+        let mut c = ctl(4);
+        let before = c.i_opt();
+        c.on_topology_change(0);
+        assert_eq!(c.i_opt(), before);
+    }
+
+    #[test]
+    fn l_net_included() {
+        let c = IntervalController::new(
+            IntervalConfig {
+                window_size: 4,
+                l_net: 0.1,
+                t_default: 0.9,
+                adaptive: true,
+            },
+            2,
+        );
+        assert!((c.i_opt() - 0.5).abs() < 1e-12); // (0.9 + 0.1)/2
+    }
+
+    #[test]
+    fn rejects_garbage_samples() {
+        let mut c = ctl(1);
+        c.on_end_forward(f64::NAN);
+        c.on_end_forward(-3.0);
+        assert_eq!(c.samples(), 0);
+        assert!((c.t_fwd() - 1.0).abs() < 1e-12);
+    }
+}

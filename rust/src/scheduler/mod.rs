@@ -1,0 +1,35 @@
+//! The paper's contribution: Staggered Batch Scheduling.
+//!
+//! Everything in this module is a *pure state machine*: no clocks, no
+//! threads, no I/O. Timestamps come in through event arguments and
+//! decisions go out as action values, so the same scheduler code is driven
+//! by the discrete-event simulator ([`crate::cluster::sim`]) for the
+//! paper's cluster-scale experiments and by the threaded real-engine
+//! fabric ([`crate::cluster::workers`]) for end-to-end serving.
+//!
+//! Map from the paper:
+//!
+//! | Paper | Module |
+//! |---|---|
+//! | §4.1.1 Algorithm 1 (adaptive interval)      | [`interval`]  |
+//! | §4.1.2 multi-tier state synchronization     | [`sync`]      |
+//! | §4.2 Algorithm 2 (PBAA, water-filling)      | [`pbaa`]      |
+//! | §4.2.2 cache-aware capacity                 | [`prefix`]    |
+//! | §4.3 Algorithm 3 (IQR + lexicographic)      | [`decode`]    |
+//! | Fig. 5 main schedule loop (dual trigger)    | [`staggered`] |
+//! | §3.2 immediate-dispatch baselines           | [`baseline`]  |
+//! | global state matrix ⟨C_avail, B_i, K_i⟩     | [`state`]     |
+//! | §4.2.2 phase-3 overload protection          | [`flow`]      |
+
+pub mod baseline;
+pub mod decode;
+pub mod flow;
+pub mod interval;
+pub mod pbaa;
+pub mod prefix;
+pub mod state;
+pub mod staggered;
+pub mod sync;
+pub mod types;
+
+pub use types::{DpUnitId, Request, RequestId};

@@ -1,0 +1,301 @@
+//! Algorithm 2 — Prioritized Batch Allocation Algorithm (PBAA).
+//!
+//! Maps a buffered batch of prefill requests onto DP units in three
+//! phases:
+//!
+//! 1. **Starvation prevention** — requests left over from previous cycles
+//!    (`Q_pending`) are allocated first, enforcing FCFS fairness.
+//! 2. **Straggler-aware bin packing** — within each phase, requests are
+//!    sorted by length descending and each goes to the DP unit with the
+//!    highest available capacity ("water-filling"), proactively levelling
+//!    the load the DP sync barrier will see.
+//! 3. **Overload protection** — requests that fail allocation `N_limit`
+//!    cycles in a row trigger flow control.
+//!
+//! Cache-aware mode replaces raw capacity with effective computational
+//! cost: `C_avail − (Len(r) − Len_hit(r, d))`.
+
+use super::prefix::PrefixCacheModel;
+use super::state::DpState;
+use super::types::{DpUnitId, Request};
+
+/// PBAA configuration.
+#[derive(Debug, Clone)]
+pub struct PbaaConfig {
+    /// Maximum tolerable waiting cycles before flow control (`N_limit`).
+    pub n_limit: u32,
+    /// Use the cache-aware objective (§4.2.2 "Optimization for Context
+    /// Caching").
+    pub cache_aware: bool,
+}
+
+impl Default for PbaaConfig {
+    fn default() -> Self {
+        PbaaConfig {
+            n_limit: 32,
+            cache_aware: false,
+        }
+    }
+}
+
+/// One allocation decision.
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    /// The request being placed.
+    pub request: Request,
+    /// Chosen DP unit.
+    pub unit: DpUnitId,
+    /// Tokens of the request already cached on that unit (0 in basic
+    /// mode); the engine only recomputes `input_tokens − cached_tokens`.
+    pub cached_tokens: u32,
+}
+
+/// Result of one PBAA cycle.
+#[derive(Debug, Default)]
+pub struct PbaaOutcome {
+    /// Request → DP assignments for this dispatch.
+    pub assignments: Vec<Assignment>,
+    /// Requests that could not be placed (carried to the next cycle with
+    /// incremented wait counters).
+    pub next_queue: Vec<Request>,
+    /// Requests whose wait count exceeded `N_limit` this cycle (flow
+    /// control must throttle/reject).
+    pub overloaded: Vec<Request>,
+}
+
+/// Run one PBAA cycle over the pending (legacy) queue and new arrivals,
+/// against the DP units in `dps` (their `u_flight` is updated in place for
+/// assigned requests). `cache` supplies `Len_hit` when configured.
+pub fn allocate(
+    cfg: &PbaaConfig,
+    pending: Vec<Request>,
+    new_arrivals: Vec<Request>,
+    dps: &mut [DpState],
+    mut cache: Option<&mut PrefixCacheModel>,
+) -> PbaaOutcome {
+    let mut out = PbaaOutcome::default();
+
+    // Phase 1: prioritize legacy; Phase 2: new arrivals.
+    greedy_dispatch(cfg, pending, dps, cache.as_deref_mut(), &mut out);
+    greedy_dispatch(cfg, new_arrivals, dps, cache.as_deref_mut(), &mut out);
+
+    // Phase 3: overload detection on everything that failed to place.
+    let mut survivors = Vec::with_capacity(out.next_queue.len());
+    for mut r in out.next_queue.drain(..) {
+        r.wait_cycles += 1;
+        if r.wait_cycles > cfg.n_limit {
+            out.overloaded.push(r);
+        } else {
+            survivors.push(r);
+        }
+    }
+    out.next_queue = survivors;
+    out
+}
+
+/// The paper's `GreedyDispatch(Q)`: sort by length descending (reduce
+/// fragmentation), then water-fill.
+fn greedy_dispatch(
+    cfg: &PbaaConfig,
+    mut queue: Vec<Request>,
+    dps: &mut [DpState],
+    mut cache: Option<&mut PrefixCacheModel>,
+    out: &mut PbaaOutcome,
+) {
+    // Stable sort: equal lengths keep FCFS order.
+    queue.sort_by(|a, b| b.input_tokens.cmp(&a.input_tokens));
+
+    for r in queue {
+        // `Capacity(r, d)` for every unit; pick the argmax.
+        let mut best: Option<(usize, i64, u32)> = None; // (idx, score, hit)
+        for (i, d) in dps.iter().enumerate() {
+            let (score, hit) = capacity(cfg, &r, d, i, cache.as_deref_mut());
+            match best {
+                Some((_, s, _)) if s >= score => {}
+                _ => best = Some((i, score, hit)),
+            }
+        }
+        let Some((idx, _score, hit)) = best else {
+            out.next_queue.push(r);
+            continue;
+        };
+        // Assign only while the chosen unit has positive headroom; a long
+        // request may drive C_avail negative after assignment (it spans
+        // multiple chunked-prefill passes), matching Alg. 2 line 8–10.
+        if dps[idx].c_avail() > 0 {
+            let effective = r.input_tokens.saturating_sub(hit);
+            dps[idx].on_dispatch(effective);
+            if let Some(c) = cache.as_deref_mut() {
+                if let Some(g) = r.prefix_group {
+                    c.admit(idx, g, r.prefix_len);
+                }
+            }
+            out.assignments.push(Assignment {
+                unit: dps[idx].id,
+                cached_tokens: hit,
+                request: r,
+            });
+        } else {
+            out.next_queue.push(r);
+        }
+    }
+}
+
+/// `Capacity(r, d)` — basic: `C_avail − L(r)`; cache-aware:
+/// `C_avail − (L(r) − L_hit(r, d))`. Returns `(score, len_hit)`.
+fn capacity(
+    cfg: &PbaaConfig,
+    r: &Request,
+    d: &DpState,
+    unit_index: usize,
+    cache: Option<&mut PrefixCacheModel>,
+) -> (i64, u32) {
+    let hit = if cfg.cache_aware {
+        match (cache, r.prefix_group) {
+            (Some(c), Some(g)) => c.len_hit(unit_index, g, r.prefix_len),
+            _ => 0,
+        }
+    } else {
+        0
+    };
+    let effective = r.input_tokens.saturating_sub(hit) as i64;
+    (d.c_avail() - effective, hit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn units(caps: &[u32]) -> Vec<DpState> {
+        caps.iter()
+            .enumerate()
+            .map(|(i, &c)| DpState::new(DpUnitId::new(0, i as u32), c))
+            .collect()
+    }
+
+    fn reqs(lens: &[u32]) -> Vec<Request> {
+        lens.iter()
+            .enumerate()
+            .map(|(i, &l)| Request::new(i as u64, l, 10, 0.0))
+            .collect()
+    }
+
+    #[test]
+    fn water_filling_balances_load() {
+        let mut dps = units(&[3000, 3000]);
+        let out = allocate(
+            &PbaaConfig::default(),
+            vec![],
+            reqs(&[1000, 900, 800, 700]),
+            &mut dps,
+            None,
+        );
+        assert_eq!(out.assignments.len(), 4);
+        // Longest→emptiest: 1000→d0, 900→d1, 800→d1(2100>2000), 700→d0.
+        let load0: u32 = dps[0].u_flight;
+        let load1: u32 = dps[1].u_flight;
+        assert_eq!(load0 + load1, 3400);
+        assert!((load0 as i64 - load1 as i64).abs() <= 100, "{load0} vs {load1}");
+    }
+
+    #[test]
+    fn legacy_requests_have_priority() {
+        let mut dps = units(&[1000]);
+        let legacy = reqs(&[1000]); // exactly fills the chunk
+        let fresh = reqs(&[900]); // must NOT jump the queue
+        let out = allocate(&PbaaConfig::default(), legacy, fresh, &mut dps, None);
+        assert_eq!(out.assignments.len(), 1);
+        assert_eq!(out.assignments[0].request.input_tokens, 1000);
+        assert_eq!(out.next_queue.len(), 1);
+        assert_eq!(out.next_queue[0].input_tokens, 900);
+    }
+
+    #[test]
+    fn no_assignment_without_headroom() {
+        let mut dps = units(&[500]);
+        dps[0].on_dispatch(500); // saturated
+        let out = allocate(&PbaaConfig::default(), vec![], reqs(&[100]), &mut dps, None);
+        assert!(out.assignments.is_empty());
+        assert_eq!(out.next_queue.len(), 1);
+        assert_eq!(out.next_queue[0].wait_cycles, 1);
+    }
+
+    #[test]
+    fn long_request_spans_chunks() {
+        // A request longer than the chunk still places on a unit with
+        // positive headroom (chunked prefill executes it across passes).
+        let mut dps = units(&[1000]);
+        let out = allocate(&PbaaConfig::default(), vec![], reqs(&[2500]), &mut dps, None);
+        assert_eq!(out.assignments.len(), 1);
+        assert_eq!(dps[0].c_avail(), -1500);
+    }
+
+    #[test]
+    fn overload_triggers_after_n_limit() {
+        let cfg = PbaaConfig {
+            n_limit: 2,
+            cache_aware: false,
+        };
+        let mut dps = units(&[10]);
+        dps[0].on_dispatch(10);
+        let mut pending = reqs(&[100]);
+        for cycle in 0..3 {
+            let out = allocate(&cfg, pending, vec![], &mut dps, None);
+            if cycle < 2 {
+                assert_eq!(out.next_queue.len(), 1, "cycle {cycle}");
+                assert!(out.overloaded.is_empty());
+                pending = out.next_queue;
+            } else {
+                assert!(out.next_queue.is_empty());
+                assert_eq!(out.overloaded.len(), 1);
+                assert_eq!(out.overloaded[0].wait_cycles, 3);
+                pending = vec![];
+            }
+        }
+        assert!(pending.is_empty());
+    }
+
+    #[test]
+    fn cache_aware_prefers_warm_unit() {
+        let cfg = PbaaConfig {
+            n_limit: 8,
+            cache_aware: true,
+        };
+        let mut cache = PrefixCacheModel::new(2, u64::MAX);
+        cache.admit(1, 77, 600); // unit 1 holds the prefix
+        let mut dps = units(&[3000, 3000]);
+        // Slightly load unit 1 so raw capacity would pick unit 0.
+        dps[1].on_dispatch(200);
+        let r = vec![Request::new(1, 1000, 10, 0.0).with_prefix(77, 600)];
+        let out = allocate(&cfg, vec![], r, &mut dps, Some(&mut cache));
+        assert_eq!(out.assignments.len(), 1);
+        // Unit 1 score: (3000-200) - (1000-600) = 2400; unit 0: 3000-1000 = 2000.
+        assert_eq!(out.assignments[0].unit, DpUnitId::new(0, 1));
+        assert_eq!(out.assignments[0].cached_tokens, 600);
+        // Only the uncached tokens hit the device budget.
+        assert_eq!(dps[1].u_flight, 200 + 400);
+    }
+
+    #[test]
+    fn cache_admission_happens_on_assignment() {
+        let cfg = PbaaConfig {
+            n_limit: 8,
+            cache_aware: true,
+        };
+        let mut cache = PrefixCacheModel::new(1, u64::MAX);
+        let mut dps = units(&[3000]);
+        let r1 = vec![Request::new(1, 1000, 10, 0.0).with_prefix(9, 500)];
+        allocate(&cfg, vec![], r1, &mut dps, Some(&mut cache));
+        // Second request of the same group now hits.
+        assert_eq!(cache.len_hit(0, 9, 500), 500);
+    }
+
+    #[test]
+    fn stable_fcfs_among_equal_lengths() {
+        let mut dps = units(&[10_000]);
+        let rs: Vec<Request> = (0..4).map(|i| Request::new(i, 100, 1, i as f64)).collect();
+        let out = allocate(&PbaaConfig::default(), vec![], rs, &mut dps, None);
+        let ids: Vec<u64> = out.assignments.iter().map(|a| a.request.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+}

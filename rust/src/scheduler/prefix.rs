@@ -1,0 +1,323 @@
+//! Token-level radix (prefix) tree for cache-aware allocation (§4.2.2).
+//!
+//! The cache-aware PBAA variant scores a DP unit by *effective
+//! computational cost*: `C_avail − (Len(r) − Len_hit(r, d))`. `Len_hit` is
+//! the longest prefix of the request already resident in the unit's KV
+//! cache. We track residency with one radix tree per DP unit, in the style
+//! of SGLang's RadixAttention / SGL-Router's approximate tree, with
+//! LRU-by-leaf eviction under a token budget.
+
+use std::collections::HashMap;
+
+/// One radix-tree node: an edge label (token run) plus children keyed by
+/// their first token.
+#[derive(Debug)]
+struct Node {
+    /// Token run on the edge leading into this node.
+    edge: Vec<u32>,
+    children: HashMap<u32, usize>, // first token -> node index
+    /// Last-touch logical timestamp for LRU eviction.
+    last_touch: u64,
+}
+
+/// Radix tree over token sequences with a token budget and LRU eviction.
+#[derive(Debug)]
+pub struct RadixTree {
+    nodes: Vec<Node>,
+    /// Total tokens resident (sum of edge lengths).
+    resident: u64,
+    /// Token budget; inserts beyond it evict least-recently-used leaves.
+    budget: u64,
+    tick: u64,
+}
+
+impl RadixTree {
+    /// Empty tree with a residency budget in tokens (`u64::MAX` =
+    /// unbounded).
+    pub fn new(budget: u64) -> Self {
+        RadixTree {
+            nodes: vec![Node {
+                edge: Vec::new(),
+                children: HashMap::new(),
+                last_touch: 0,
+            }],
+            resident: 0,
+            budget,
+            tick: 0,
+        }
+    }
+
+    /// Tokens currently resident.
+    pub fn resident_tokens(&self) -> u64 {
+        self.resident
+    }
+
+    /// Longest cached prefix of `tokens`, in tokens. Touches the path for
+    /// LRU purposes.
+    pub fn match_prefix(&mut self, tokens: &[u32]) -> u32 {
+        self.tick += 1;
+        let tick = self.tick;
+        let mut node = 0usize;
+        let mut matched = 0usize;
+        self.nodes[0].last_touch = tick;
+        while matched < tokens.len() {
+            let Some(&child) = self.nodes[node].children.get(&tokens[matched]) else {
+                break;
+            };
+            let edge_len = self.nodes[child].edge.len();
+            let avail = &tokens[matched..];
+            let common = common_len(&self.nodes[child].edge, avail);
+            matched += common;
+            self.nodes[child].last_touch = tick;
+            if common < edge_len {
+                break; // partial edge match: stop inside the edge
+            }
+            node = child;
+        }
+        matched as u32
+    }
+
+    /// Insert `tokens` (idempotent for already-resident prefixes); returns
+    /// the number of *new* tokens added. Evicts LRU leaves if over budget.
+    pub fn insert(&mut self, tokens: &[u32]) -> u64 {
+        self.tick += 1;
+        let tick = self.tick;
+        let mut node = 0usize;
+        let mut pos = 0usize;
+        let mut added = 0u64;
+        self.nodes[0].last_touch = tick;
+        while pos < tokens.len() {
+            let first = tokens[pos];
+            match self.nodes[node].children.get(&first).copied() {
+                None => {
+                    // New leaf with the whole remainder.
+                    let rest = tokens[pos..].to_vec();
+                    added += rest.len() as u64;
+                    self.resident += rest.len() as u64;
+                    let idx = self.nodes.len();
+                    self.nodes.push(Node {
+                        edge: rest,
+                        children: HashMap::new(),
+                        last_touch: tick,
+                    });
+                    self.nodes[node].children.insert(first, idx);
+                    break;
+                }
+                Some(child) => {
+                    let common = common_len(&self.nodes[child].edge, &tokens[pos..]);
+                    let edge_len = self.nodes[child].edge.len();
+                    self.nodes[child].last_touch = tick;
+                    if common == edge_len {
+                        // Full edge consumed; descend.
+                        node = child;
+                        pos += common;
+                    } else {
+                        // Split the edge at `common`.
+                        let tail = self.nodes[child].edge.split_off(common);
+                        let grandchild_children =
+                            std::mem::take(&mut self.nodes[child].children);
+                        let g_idx = self.nodes.len();
+                        self.nodes.push(Node {
+                            edge: tail.clone(),
+                            children: grandchild_children,
+                            last_touch: self.nodes[child].last_touch,
+                        });
+                        self.nodes[child].children.insert(tail[0], g_idx);
+                        node = child;
+                        pos += common;
+                        // Loop continues: remainder (if any) becomes a new
+                        // sibling leaf on the next iteration.
+                    }
+                }
+            }
+        }
+        self.evict_to_budget();
+        added
+    }
+
+    /// Evict least-recently-touched leaves until within budget.
+    fn evict_to_budget(&mut self) {
+        while self.resident > self.budget {
+            // Find the LRU leaf (excluding root).
+            let mut lru: Option<(usize, u64)> = None;
+            for (i, n) in self.nodes.iter().enumerate().skip(1) {
+                if n.children.is_empty() && !n.edge.is_empty() {
+                    match lru {
+                        Some((_, t)) if n.last_touch >= t => {}
+                        _ => lru = Some((i, n.last_touch)),
+                    }
+                }
+            }
+            let Some((leaf, _)) = lru else { break };
+            let removed = self.nodes[leaf].edge.len() as u64;
+            // Unlink from parent.
+            let first = self.nodes[leaf].edge[0];
+            for n in self.nodes.iter_mut() {
+                if n.children.get(&first) == Some(&leaf) {
+                    n.children.remove(&first);
+                    break;
+                }
+            }
+            self.nodes[leaf].edge.clear();
+            self.resident -= removed;
+        }
+    }
+}
+
+fn common_len(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+/// Per-DP-unit prefix cache model used by cache-aware PBAA. Maps each DP
+/// unit to a radix tree; requests carry (group, prefix_len) and the tree
+/// stores the group's synthetic token stream.
+#[derive(Debug)]
+pub struct PrefixCacheModel {
+    trees: Vec<RadixTree>,
+    /// Index offset: callers holding an instance-local DP slice set this
+    /// so their slice-local indices resolve to pool-global units.
+    base: usize,
+}
+
+impl PrefixCacheModel {
+    /// One tree per DP unit with the given per-unit token budget.
+    pub fn new(n_units: usize, budget_per_unit: u64) -> Self {
+        PrefixCacheModel {
+            trees: (0..n_units).map(|_| RadixTree::new(budget_per_unit)).collect(),
+            base: 0,
+        }
+    }
+
+    /// Set the slice-local → pool-global index offset for subsequent
+    /// `len_hit` / `admit` calls.
+    pub fn set_base(&mut self, base: usize) {
+        self.base = base;
+    }
+
+    /// Deterministic synthetic token stream for a prefix group. The DES
+    /// has no real token text; this makes distinct groups occupy disjoint
+    /// tree paths while identical groups collide perfectly — exactly the
+    /// property `Len_hit` needs.
+    pub fn group_tokens(group: u64, len: u32) -> Vec<u32> {
+        let mut state = group ^ 0x9E37_79B9_7F4A_7C15;
+        (0..len)
+            .map(|i| {
+                // Mix group and position; stay deterministic.
+                let x = crate::util::prng::splitmix64(&mut state);
+                ((x >> 17) as u32) ^ i
+            })
+            .collect()
+    }
+
+    /// `Len_hit(r, d)` for a request with prefix `(group, len)` on unit
+    /// `d` (index relative to the current base).
+    pub fn len_hit(&mut self, unit: usize, group: u64, prefix_len: u32) -> u32 {
+        if prefix_len == 0 {
+            return 0;
+        }
+        let toks = Self::group_tokens(group, prefix_len);
+        let i = self.base + unit;
+        self.trees[i].match_prefix(&toks)
+    }
+
+    /// Record that unit `d` (base-relative) now holds the prefix.
+    pub fn admit(&mut self, unit: usize, group: u64, prefix_len: u32) {
+        if prefix_len == 0 {
+            return;
+        }
+        let toks = Self::group_tokens(group, prefix_len);
+        let i = self.base + unit;
+        self.trees[i].insert(&toks);
+    }
+
+    /// Resident tokens on a unit (base-relative; for tests/metrics).
+    pub fn resident(&self, unit: usize) -> u64 {
+        self.trees[self.base + unit].resident_tokens()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_tree_matches_nothing() {
+        let mut t = RadixTree::new(u64::MAX);
+        assert_eq!(t.match_prefix(&[1, 2, 3]), 0);
+    }
+
+    #[test]
+    fn insert_then_full_match() {
+        let mut t = RadixTree::new(u64::MAX);
+        assert_eq!(t.insert(&[1, 2, 3, 4]), 4);
+        assert_eq!(t.match_prefix(&[1, 2, 3, 4]), 4);
+        assert_eq!(t.match_prefix(&[1, 2, 3, 4, 5]), 4);
+        assert_eq!(t.match_prefix(&[1, 2]), 2);
+        assert_eq!(t.match_prefix(&[2, 2]), 0);
+    }
+
+    #[test]
+    fn insert_is_idempotent() {
+        let mut t = RadixTree::new(u64::MAX);
+        t.insert(&[5, 6, 7]);
+        assert_eq!(t.insert(&[5, 6, 7]), 0);
+        assert_eq!(t.resident_tokens(), 3);
+    }
+
+    #[test]
+    fn edge_split_on_divergence() {
+        let mut t = RadixTree::new(u64::MAX);
+        t.insert(&[1, 2, 3, 4]);
+        let added = t.insert(&[1, 2, 9, 9]);
+        assert_eq!(added, 2);
+        assert_eq!(t.resident_tokens(), 6);
+        assert_eq!(t.match_prefix(&[1, 2, 3, 4]), 4);
+        assert_eq!(t.match_prefix(&[1, 2, 9, 9]), 4);
+        assert_eq!(t.match_prefix(&[1, 2]), 2);
+    }
+
+    #[test]
+    fn extension_of_existing_path() {
+        let mut t = RadixTree::new(u64::MAX);
+        t.insert(&[1, 2]);
+        assert_eq!(t.insert(&[1, 2, 3, 4]), 2);
+        assert_eq!(t.match_prefix(&[1, 2, 3, 4]), 4);
+    }
+
+    #[test]
+    fn eviction_respects_budget() {
+        let mut t = RadixTree::new(6);
+        t.insert(&[1, 1, 1]);
+        t.insert(&[2, 2, 2]);
+        assert_eq!(t.resident_tokens(), 6);
+        // Touch [1,1,1] so [2,2,2] is LRU.
+        t.match_prefix(&[1, 1, 1]);
+        t.insert(&[3, 3, 3]);
+        assert!(t.resident_tokens() <= 6);
+        assert_eq!(t.match_prefix(&[1, 1, 1]), 3); // survivor
+        assert_eq!(t.match_prefix(&[2, 2, 2]), 0); // evicted
+    }
+
+    #[test]
+    fn cache_model_group_hit() {
+        let mut m = PrefixCacheModel::new(2, u64::MAX);
+        assert_eq!(m.len_hit(0, 42, 100), 0);
+        m.admit(0, 42, 100);
+        assert_eq!(m.len_hit(0, 42, 100), 100);
+        assert_eq!(m.len_hit(1, 42, 100), 0); // other unit cold
+        assert_eq!(m.len_hit(0, 43, 100), 0); // other group disjoint
+        // Shorter prefix of the same group still hits fully.
+        assert_eq!(m.len_hit(0, 42, 60), 60);
+    }
+
+    #[test]
+    fn group_tokens_deterministic_and_prefix_stable() {
+        let a = PrefixCacheModel::group_tokens(7, 50);
+        let b = PrefixCacheModel::group_tokens(7, 50);
+        assert_eq!(a, b);
+        let c = PrefixCacheModel::group_tokens(7, 30);
+        assert_eq!(&a[..30], &c[..]);
+        let d = PrefixCacheModel::group_tokens(8, 50);
+        assert_ne!(a, d);
+    }
+}

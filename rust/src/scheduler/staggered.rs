@@ -1,0 +1,504 @@
+//! The Staggered Batch Scheduler main loop (paper Fig. 5).
+//!
+//! A pure event-driven state machine around three coordinated planes:
+//!
+//! * **Control plane** — the schedule loop itself. Dispatch fires on the
+//!   *dual trigger*: the adaptive interval `I_opt` has elapsed **and** a
+//!   target instance is ready (EndForward received / quiescent). Requests
+//!   buffer in the scheduler-side queue meanwhile — the deliberate wait
+//!   that eliminates device-side HOL blocking (§3.2).
+//! * **State plane** — [`GlobalState`] updated by instance feedback, the
+//!   Algorithm 1 interval controller, and the §4.1.2 sync protocol.
+//! * **Resource plane** — abstract here: dispatch decisions are returned
+//!   as [`SchedulerAction`]s for the driver (simulator or real fabric) to
+//!   execute.
+//!
+//! Degraded mode: when the sync protocol marks instances suspect, the loop
+//! reverts to fixed-interval batch dispatch over the surviving instances
+//! (graceful degradation, §4.1.2).
+
+use super::interval::{IntervalConfig, IntervalController};
+use super::pbaa::{self, Assignment, PbaaConfig};
+use super::prefix::PrefixCacheModel;
+use super::state::{GlobalState, InstancePhase};
+use super::sync::{SyncProtocol, WatchdogEvent};
+use super::types::Request;
+
+/// Events fed to the scheduler by its driver.
+#[derive(Debug, Clone)]
+pub enum SchedulerEvent {
+    /// A request arrived at the frontend.
+    Arrival { request: Request, now: f64 },
+    /// An instance finished a forward pass and reported its measured
+    /// execution time and remaining backlog (the `EndForward` payload of
+    /// Fig. 5). `remaining = None` means the engine does not report
+    /// backlog (per-dispatch accounting is used instead).
+    EndForward {
+        instance: u32,
+        t_measured: f64,
+        remaining: Option<u32>,
+        now: f64,
+    },
+    /// The timer previously armed via [`SchedulerAction::ArmTimer`] fired.
+    Timer { now: f64 },
+    /// Queue-depth observation from the polling path (§4.1.2 tier 1).
+    QueueObservation {
+        instance: u32,
+        depth: u32,
+        now: f64,
+    },
+    /// Auto-scaler / health-checker topology change (Alg. 1
+    /// `OnTopologyChange`).
+    TopologyChange { n_active: u32, now: f64 },
+}
+
+/// A batch dispatch to all DP units of one instance.
+#[derive(Debug, Clone)]
+pub struct DispatchBatch {
+    /// Target instance.
+    pub instance: u32,
+    /// Per-request DP assignments (from PBAA).
+    pub assignments: Vec<Assignment>,
+    /// Dispatch timestamp.
+    pub at: f64,
+}
+
+/// Decisions returned to the driver.
+#[derive(Debug, Clone)]
+pub enum SchedulerAction {
+    /// Send this batch to the instance.
+    Dispatch(DispatchBatch),
+    /// Deliver a [`SchedulerEvent::Timer`] at (or shortly after) `at`.
+    ArmTimer { at: f64 },
+    /// Reject this request upstream (flow control).
+    Reject(Request),
+    /// Informational: watchdog fired (drivers may log / fault-inject).
+    Watchdog(WatchdogEvent),
+}
+
+/// Scheduler configuration.
+#[derive(Debug, Clone, Default)]
+pub struct StaggeredConfig {
+    /// Algorithm 1 knobs.
+    pub interval: IntervalConfig,
+    /// Algorithm 2 knobs.
+    pub pbaa: PbaaConfig,
+}
+
+/// The staggered batch scheduler for a prefill pool.
+pub struct StaggeredScheduler {
+    cfg: StaggeredConfig,
+    /// Global state matrix for the pool.
+    pub state: GlobalState,
+    interval: IntervalController,
+    sync: SyncProtocol,
+    /// Scheduler-side queue: fresh arrivals since the last cycle.
+    buffer: Vec<Request>,
+    /// Unassigned leftovers from previous PBAA cycles (`Q_pending`).
+    pending: Vec<Request>,
+    /// Optional per-DP prefix-cache model (cache-aware PBAA).
+    cache: Option<PrefixCacheModel>,
+    /// Requests staged for rejection by flow control.
+    overflow: Vec<Request>,
+    /// Total input tokens sitting in `buffer` + `pending` (size trigger).
+    queued_tokens: u64,
+    /// Per-DP chunk capacity (for the batch-formed early trigger).
+    chunk_capacity: u32,
+    last_dispatch: f64,
+    /// Round-robin cursor for target selection among ready instances.
+    target_cursor: u32,
+    timer_armed_at: f64,
+}
+
+impl StaggeredScheduler {
+    /// Build a scheduler for `n_instances × dp_per_instance` units with
+    /// chunk capacity `c_chunk`.
+    pub fn new(cfg: StaggeredConfig, n_instances: u32, dp_per_instance: u32, c_chunk: u32) -> Self {
+        let state = GlobalState::new(n_instances, dp_per_instance, c_chunk);
+        let interval = IntervalController::new(cfg.interval.clone(), n_instances);
+        let cache = cfg.pbaa.cache_aware.then(|| {
+            // Budget: hold ~32 chunks of prefix per DP unit before LRU
+            // eviction; enough for realistic multi-tenant prefix reuse.
+            PrefixCacheModel::new(
+                (n_instances * dp_per_instance) as usize,
+                32 * c_chunk as u64,
+            )
+        });
+        StaggeredScheduler {
+            cfg,
+            state,
+            interval,
+            sync: SyncProtocol::new(n_instances),
+            buffer: Vec::new(),
+            pending: Vec::new(),
+            cache,
+            overflow: Vec::new(),
+            queued_tokens: 0,
+            chunk_capacity: c_chunk,
+            last_dispatch: f64::NEG_INFINITY,
+            target_cursor: 0,
+            timer_armed_at: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Current adaptive interval (exposed for metrics/tests).
+    pub fn i_opt(&self) -> f64 {
+        self.interval.i_opt()
+    }
+
+    /// Buffered + pending request count (scheduler-side queue length).
+    pub fn queued(&self) -> usize {
+        self.buffer.len() + self.pending.len()
+    }
+
+    /// Whether degraded fixed-interval mode is active.
+    pub fn degraded(&self) -> bool {
+        self.sync.degraded()
+    }
+
+    /// Feed one event; returns the actions the driver must execute.
+    pub fn on_event(&mut self, ev: SchedulerEvent) -> Vec<SchedulerAction> {
+        let mut actions = Vec::new();
+        match ev {
+            SchedulerEvent::Arrival { request, now } => {
+                self.queued_tokens += request.input_tokens as u64;
+                self.buffer.push(request);
+                self.try_dispatch(now, &mut actions);
+                self.ensure_timer(now, &mut actions);
+            }
+            SchedulerEvent::EndForward {
+                instance,
+                t_measured,
+                remaining,
+                now,
+            } => {
+                self.interval.on_end_forward(t_measured);
+                self.sync
+                    .on_end_forward(&mut self.state, instance, now, remaining);
+                self.try_dispatch(now, &mut actions);
+                self.ensure_timer(now, &mut actions);
+            }
+            SchedulerEvent::Timer { now } => {
+                self.timer_armed_at = f64::NEG_INFINITY;
+                for w in self.sync.sweep_watchdogs(&mut self.state, now) {
+                    actions.push(SchedulerAction::Watchdog(w));
+                }
+                self.try_dispatch(now, &mut actions);
+                self.ensure_timer(now, &mut actions);
+            }
+            SchedulerEvent::QueueObservation {
+                instance,
+                depth,
+                now,
+            } => {
+                self.sync.on_queue_observation(&mut self.state, instance, depth);
+                self.try_dispatch(now, &mut actions);
+            }
+            SchedulerEvent::TopologyChange { n_active, now } => {
+                self.interval.on_topology_change(n_active);
+                self.try_dispatch(now, &mut actions);
+                self.ensure_timer(now, &mut actions);
+            }
+        }
+        actions
+    }
+
+    /// The dual-trigger dispatch check. Fires at most one batch per call
+    /// per ready target (loops while both triggers hold and work remains —
+    /// e.g. after a long drain several instances may be ready).
+    fn try_dispatch(&mut self, now: f64, actions: &mut Vec<SchedulerAction>) {
+        loop {
+            if self.buffer.is_empty() && self.pending.is_empty() {
+                return;
+            }
+            // Trigger 1: interval elapsed since the last dispatch — OR an
+            // optimal batch has already formed (≥ one instance's full
+            // chunk budget buffered). The window exists to *form optimal
+            // batches* (§3.2); once one is formed, waiting adds latency
+            // without improving the batch.
+            let chunk_budget =
+                (self.state.dp_per_instance as u64) * self.chunk_capacity as u64;
+            let interval_ok = now - self.last_dispatch >= self.interval.i_opt();
+            let batch_formed = self.queued_tokens >= chunk_budget;
+            if !interval_ok && !batch_formed {
+                return;
+            }
+            // Trigger 2: a target instance signalled readiness — unless
+            // degraded mode, where fixed-interval dispatch proceeds on the
+            // least-recently-dispatched live instance. A ready target with
+            // no capacity headroom yields an empty PBAA cycle; try the
+            // next ready instance before giving up.
+            let mut dispatched = false;
+            for _ in 0..self.state.n_instances() {
+                let target = if self.sync.degraded() {
+                    self.pick_degraded_target()
+                } else {
+                    self.pick_ready_target()
+                };
+                let Some(instance) = target else { break };
+                let assignments = self.run_pbaa(instance);
+                // Flow-control rejections may arise even on empty cycles.
+                while let Some(r) = self.overflow.pop() {
+                    actions.push(SchedulerAction::Reject(r));
+                }
+                if assignments.is_empty() {
+                    continue; // no headroom here; try another ready target
+                }
+                self.last_dispatch = now;
+                self.sync
+                    .on_dispatch(&mut self.state, instance, now, self.interval.t_fwd());
+                actions.push(SchedulerAction::Dispatch(DispatchBatch {
+                    instance,
+                    assignments,
+                    at: now,
+                }));
+                dispatched = true;
+                break;
+            }
+            if !dispatched {
+                return;
+            }
+        }
+    }
+
+    /// Round-robin over instances currently in the Ready phase.
+    fn pick_ready_target(&mut self) -> Option<u32> {
+        let n = self.state.n_instances();
+        for k in 0..n {
+            let i = (self.target_cursor + k) % n;
+            if self.state.instances[i as usize].phase == InstancePhase::Ready {
+                self.target_cursor = i + 1;
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// Degraded mode target: least-recently-dispatched non-suspect
+    /// instance regardless of Busy state (fixed-interval batch mode).
+    fn pick_degraded_target(&mut self) -> Option<u32> {
+        self.state
+            .instances
+            .iter()
+            .filter(|i| i.phase != InstancePhase::Suspect)
+            .min_by(|a, b| a.last_dispatch.partial_cmp(&b.last_dispatch).unwrap())
+            .map(|i| i.index)
+    }
+
+    /// Run PBAA over (pending, buffer) against the target instance's DP
+    /// units; refills `pending` with leftovers and stages overloads.
+    fn run_pbaa(&mut self, instance: u32) -> Vec<Assignment> {
+        let pending = std::mem::take(&mut self.pending);
+        let fresh = std::mem::take(&mut self.buffer);
+        let a = (instance * self.state.dp_per_instance) as usize;
+        let b = a + self.state.dp_per_instance as usize;
+        // PBAA receives an instance-local DP slice; the pool-global cache
+        // model is told the slice's base so `len_hit(i, ..)` resolves to
+        // the right global unit.
+        let cache = self.cache.as_mut().map(|c| {
+            c.set_base(a);
+            c
+        });
+        let outcome = pbaa::allocate(
+            &self.cfg.pbaa,
+            pending,
+            fresh,
+            &mut self.state.dps[a..b],
+            cache,
+        );
+        self.pending = outcome.next_queue;
+        self.overflow.extend(outcome.overloaded);
+        self.queued_tokens = self
+            .pending
+            .iter()
+            .map(|r| r.input_tokens as u64)
+            .sum();
+        outcome.assignments
+    }
+
+    /// Arm the driver timer for the next interval boundary (idempotent —
+    /// at most one outstanding timer).
+    fn ensure_timer(&mut self, now: f64, actions: &mut Vec<SchedulerAction>) {
+        if self.buffer.is_empty() && self.pending.is_empty() {
+            return; // nothing to dispatch; EndForward/Arrival will re-arm
+        }
+        // Never arm sub-interval timers: when the interval is already
+        // overdue (waiting on instance readiness, not time), spinning at
+        // microsecond cadence would only burn cycles and race the
+        // flow-control wait counters. Wake at half an interval for
+        // dispatch retries, capped by T̄ for watchdog sweeps.
+        let retry = (self.interval.i_opt() * 0.5).max(1e-3);
+        let next = (self.last_dispatch + self.interval.i_opt()).max(now + retry);
+        let next = next.min(now + self.interval.t_fwd().max(1e-3));
+        if self.timer_armed_at > now && self.timer_armed_at <= next {
+            return; // an earlier-or-equal timer is already armed
+        }
+        self.timer_armed_at = next;
+        actions.push(SchedulerAction::ArmTimer { at: next });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(n: u32, dp: u32) -> StaggeredScheduler {
+        let cfg = StaggeredConfig {
+            interval: IntervalConfig {
+                window_size: 8,
+                l_net: 0.0,
+                t_default: 0.4,
+                adaptive: true,
+            },
+            pbaa: PbaaConfig::default(),
+        };
+        StaggeredScheduler::new(cfg, n, dp, 3072)
+    }
+
+    fn req(id: u64, len: u32, t: f64) -> Request {
+        Request::new(id, len, 16, t)
+    }
+
+    fn dispatches(actions: &[SchedulerAction]) -> Vec<&DispatchBatch> {
+        actions
+            .iter()
+            .filter_map(|a| match a {
+                SchedulerAction::Dispatch(d) => Some(d),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn first_arrival_dispatches_immediately() {
+        // Cold start: all instances ready, no prior dispatch — the dual
+        // trigger is satisfied at once (quiescence path).
+        let mut s = sched(2, 4);
+        let acts = s.on_event(SchedulerEvent::Arrival {
+            request: req(1, 1000, 0.0),
+            now: 0.0,
+        });
+        let d = dispatches(&acts);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].assignments.len(), 1);
+        assert_eq!(s.queued(), 0);
+    }
+
+    #[test]
+    fn second_arrival_buffers_until_interval() {
+        let mut s = sched(2, 4);
+        s.on_event(SchedulerEvent::Arrival {
+            request: req(1, 1000, 0.0),
+            now: 0.0,
+        });
+        // i_opt = 0.4/2 = 0.2; an arrival at 0.1 must buffer.
+        let acts = s.on_event(SchedulerEvent::Arrival {
+            request: req(2, 800, 0.1),
+            now: 0.1,
+        });
+        assert!(dispatches(&acts).is_empty());
+        assert_eq!(s.queued(), 1);
+        // Timer fires at the interval boundary → dispatch to the other
+        // (still-ready) instance.
+        let acts = s.on_event(SchedulerEvent::Timer { now: 0.2 });
+        let d = dispatches(&acts);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].instance, 1);
+    }
+
+    #[test]
+    fn no_dispatch_when_all_busy() {
+        let mut s = sched(1, 2);
+        s.on_event(SchedulerEvent::Arrival {
+            request: req(1, 500, 0.0),
+            now: 0.0,
+        });
+        // Instance 0 is now busy; next arrival can't go anywhere even
+        // after the interval.
+        s.on_event(SchedulerEvent::Arrival {
+            request: req(2, 500, 0.5),
+            now: 0.5,
+        });
+        let acts = s.on_event(SchedulerEvent::Timer { now: 1.0 });
+        assert!(dispatches(&acts).is_empty());
+        assert_eq!(s.queued(), 1);
+        // EndForward releases it.
+        let acts = s.on_event(SchedulerEvent::EndForward {
+            instance: 0,
+            t_measured: 0.4,
+            remaining: None,
+            now: 1.1,
+        });
+        assert_eq!(dispatches(&acts).len(), 1);
+    }
+
+    #[test]
+    fn interval_adapts_to_end_forward_times() {
+        let mut s = sched(4, 1);
+        let before = s.i_opt(); // 0.4 / 4 = 0.1
+        assert!((before - 0.1).abs() < 1e-12);
+        s.on_event(SchedulerEvent::Arrival {
+            request: req(1, 100, 0.0),
+            now: 0.0,
+        });
+        for k in 0..8 {
+            s.on_event(SchedulerEvent::EndForward {
+                instance: 0,
+                t_measured: 0.8,
+                remaining: None,
+                now: 0.1 * k as f64,
+            });
+        }
+        assert!((s.i_opt() - 0.2).abs() < 1e-12); // 0.8 / 4
+    }
+
+    #[test]
+    fn watchdog_recovers_lost_end_forward() {
+        let mut s = sched(1, 1);
+        s.on_event(SchedulerEvent::Arrival {
+            request: req(1, 100, 0.0),
+            now: 0.0,
+        });
+        // EndForward never arrives. Watchdog threshold = 5 × 0.4 = 2.0.
+        s.on_event(SchedulerEvent::Arrival {
+            request: req(2, 100, 0.5),
+            now: 0.5,
+        });
+        let acts = s.on_event(SchedulerEvent::Timer { now: 2.5 });
+        let saw_watchdog = acts
+            .iter()
+            .any(|a| matches!(a, SchedulerAction::Watchdog(_)));
+        assert!(saw_watchdog, "{acts:?}");
+        // The forced reset makes the instance ready again → dispatch.
+        assert_eq!(dispatches(&acts).len(), 1);
+    }
+
+    #[test]
+    fn topology_change_halves_interval() {
+        let mut s = sched(2, 1);
+        let i2 = s.i_opt();
+        s.on_event(SchedulerEvent::TopologyChange {
+            n_active: 4,
+            now: 0.0,
+        });
+        assert!((s.i_opt() - i2 / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_robin_target_rotation() {
+        let mut s = sched(3, 1);
+        let mut targets = Vec::new();
+        let mut t = 0.0;
+        for id in 0..3 {
+            let acts = s.on_event(SchedulerEvent::Arrival {
+                request: req(id, 100, t),
+                now: t,
+            });
+            for d in dispatches(&acts) {
+                targets.push(d.instance);
+            }
+            t += 0.2; // ≥ i_opt = 0.4/3
+        }
+        assert_eq!(targets, vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,260 @@
+//! The Global State Matrix (paper Fig. 5): real-time per-DP-unit state
+//! vectors `⟨C_avail, B_i, K_i⟩` and per-instance readiness.
+//!
+//! §4.2.1 defines Real-time Available Capacity as
+//! `C_avail = C_chunk − U_flight − R_queued`: the hardware chunk budget
+//! minus tokens in transit (dispatched, unacknowledged) minus the backlog
+//! already buffered on the device.
+
+use super::types::DpUnitId;
+
+/// Real-time state of one DP-Attention unit.
+#[derive(Debug, Clone)]
+pub struct DpState {
+    /// Identity of this unit.
+    pub id: DpUnitId,
+    /// Hardware-constrained max token capacity per forward pass
+    /// (`C_chunk`, e.g. 3072 for the paper's "3K chunk" config).
+    pub c_chunk: u32,
+    /// Tokens dispatched but not yet acknowledged (`U_flight`).
+    pub u_flight: u32,
+    /// Token backlog buffered on the device (`R_queued`).
+    pub r_queued: u32,
+    /// Decode batch size (`B_i`, Algorithm 3).
+    pub batch: u32,
+    /// Resident KV cache length in tokens (`K_i`, Algorithm 3).
+    pub kv_tokens: u64,
+}
+
+impl DpState {
+    /// Fresh idle unit.
+    pub fn new(id: DpUnitId, c_chunk: u32) -> Self {
+        DpState {
+            id,
+            c_chunk,
+            u_flight: 0,
+            r_queued: 0,
+            batch: 0,
+            kv_tokens: 0,
+        }
+    }
+
+    /// §4.2.1: `C_avail = C_chunk − U_flight − R_queued`. May be negative
+    /// when the device is oversubscribed (requests spanning chunks).
+    pub fn c_avail(&self) -> i64 {
+        self.c_chunk as i64 - self.u_flight as i64 - self.r_queued as i64
+    }
+
+    /// Account tokens dispatched toward this unit.
+    pub fn on_dispatch(&mut self, tokens: u32) {
+        self.u_flight += tokens;
+    }
+
+    /// Device acknowledged receipt: tokens move from flight to backlog.
+    pub fn on_ack(&mut self, tokens: u32) {
+        let t = tokens.min(self.u_flight);
+        self.u_flight -= t;
+        self.r_queued += t;
+    }
+
+    /// A forward pass consumed `tokens` from the backlog.
+    pub fn on_consumed(&mut self, tokens: u32) {
+        self.r_queued = self.r_queued.saturating_sub(tokens);
+    }
+
+    /// A decode request joined this unit (Algorithm 3 state update).
+    pub fn on_decode_join(&mut self, seq_len: u32) {
+        self.batch += 1;
+        self.kv_tokens += seq_len as u64;
+    }
+
+    /// A decode request finished / its KV was freed.
+    pub fn on_decode_leave(&mut self, seq_len: u32) {
+        self.batch = self.batch.saturating_sub(1);
+        self.kv_tokens = self.kv_tokens.saturating_sub(seq_len as u64);
+    }
+
+    /// Each decode step grows every resident sequence by one token.
+    pub fn on_decode_step(&mut self) {
+        self.kv_tokens += self.batch as u64;
+    }
+}
+
+/// Readiness of one inference instance (the dispatch target of the
+/// staggered loop; all its DP units receive a batch together because of
+/// the DP sync barrier).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstancePhase {
+    /// No forward pass in flight; can accept a batch immediately.
+    Ready,
+    /// Executing a forward pass (non-preemptive, "locked" per §3.2).
+    Busy,
+    /// Watchdog-expired or health-check failed; excluded from dispatch.
+    Suspect,
+}
+
+/// Per-instance view: phase plus device-queue depth.
+#[derive(Debug, Clone)]
+pub struct InstanceState {
+    /// Pool-local instance index.
+    pub index: u32,
+    /// Current phase.
+    pub phase: InstancePhase,
+    /// Batches sitting in the device-side input queue (observable only
+    /// through engine feedback; immediate dispatch drives this up).
+    pub queue_depth: u32,
+    /// Timestamp of the last dispatch to this instance.
+    pub last_dispatch: f64,
+    /// Timestamp of the last EndForward received from it.
+    pub last_end_forward: f64,
+}
+
+impl InstanceState {
+    /// Fresh ready instance.
+    pub fn new(index: u32) -> Self {
+        InstanceState {
+            index,
+            phase: InstancePhase::Ready,
+            queue_depth: 0,
+            last_dispatch: -1.0,
+            last_end_forward: -1.0,
+        }
+    }
+}
+
+/// The full state plane for one pool (prefill or decode): instances plus
+/// their DP units, indexable both ways.
+#[derive(Debug, Clone)]
+pub struct GlobalState {
+    /// Instance-level states, length = pool size.
+    pub instances: Vec<InstanceState>,
+    /// Flattened DP-unit states, length = pool size × dp_per_instance.
+    pub dps: Vec<DpState>,
+    /// DP units per instance.
+    pub dp_per_instance: u32,
+}
+
+impl GlobalState {
+    /// Build a pool of `n_instances`, each with `dp_per_instance` units of
+    /// chunk capacity `c_chunk`.
+    pub fn new(n_instances: u32, dp_per_instance: u32, c_chunk: u32) -> Self {
+        let instances = (0..n_instances).map(InstanceState::new).collect();
+        let mut dps = Vec::with_capacity((n_instances * dp_per_instance) as usize);
+        for i in 0..n_instances {
+            for d in 0..dp_per_instance {
+                dps.push(DpState::new(DpUnitId::new(i, d), c_chunk));
+            }
+        }
+        GlobalState {
+            instances,
+            dps,
+            dp_per_instance,
+        }
+    }
+
+    /// Number of instances.
+    pub fn n_instances(&self) -> u32 {
+        self.instances.len() as u32
+    }
+
+    /// Flat index of a DP unit.
+    pub fn dp_index(&self, id: DpUnitId) -> usize {
+        (id.instance * self.dp_per_instance + id.dp) as usize
+    }
+
+    /// DP unit state by id.
+    pub fn dp(&self, id: DpUnitId) -> &DpState {
+        &self.dps[self.dp_index(id)]
+    }
+
+    /// Mutable DP unit state by id.
+    pub fn dp_mut(&mut self, id: DpUnitId) -> &mut DpState {
+        let i = self.dp_index(id);
+        &mut self.dps[i]
+    }
+
+    /// The DP-unit slice belonging to one instance.
+    pub fn instance_dps(&self, instance: u32) -> &[DpState] {
+        let a = (instance * self.dp_per_instance) as usize;
+        let b = a + self.dp_per_instance as usize;
+        &self.dps[a..b]
+    }
+
+    /// Mutable DP-unit slice of one instance.
+    pub fn instance_dps_mut(&mut self, instance: u32) -> &mut [DpState] {
+        let a = (instance * self.dp_per_instance) as usize;
+        let b = a + self.dp_per_instance as usize;
+        &mut self.dps[a..b]
+    }
+
+    /// Instances currently in the given phase.
+    pub fn instances_in(&self, phase: InstancePhase) -> impl Iterator<Item = &InstanceState> {
+        self.instances.iter().filter(move |i| i.phase == phase)
+    }
+
+    /// Count of non-suspect instances (the `N_active` of Algorithm 1).
+    pub fn n_active(&self) -> u32 {
+        self.instances
+            .iter()
+            .filter(|i| i.phase != InstancePhase::Suspect)
+            .count() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c_avail_matches_formula() {
+        let mut d = DpState::new(DpUnitId::new(0, 0), 3072);
+        assert_eq!(d.c_avail(), 3072);
+        d.on_dispatch(1000);
+        assert_eq!(d.c_avail(), 2072);
+        d.on_ack(1000);
+        assert_eq!(d.c_avail(), 2072); // flight→queued, headroom unchanged
+        assert_eq!(d.u_flight, 0);
+        assert_eq!(d.r_queued, 1000);
+        d.on_consumed(600);
+        assert_eq!(d.c_avail(), 2672);
+    }
+
+    #[test]
+    fn c_avail_can_go_negative() {
+        let mut d = DpState::new(DpUnitId::new(0, 0), 100);
+        d.on_dispatch(250); // long request spanning multiple chunks
+        assert_eq!(d.c_avail(), -150);
+    }
+
+    #[test]
+    fn decode_state_updates() {
+        let mut d = DpState::new(DpUnitId::new(0, 1), 0);
+        d.on_decode_join(2500);
+        d.on_decode_join(100);
+        assert_eq!(d.batch, 2);
+        assert_eq!(d.kv_tokens, 2600);
+        d.on_decode_step();
+        assert_eq!(d.kv_tokens, 2602);
+        d.on_decode_leave(2501);
+        assert_eq!(d.batch, 1);
+        assert_eq!(d.kv_tokens, 101);
+    }
+
+    #[test]
+    fn pool_indexing() {
+        let g = GlobalState::new(3, 8, 3072);
+        assert_eq!(g.dps.len(), 24);
+        assert_eq!(g.dp(DpUnitId::new(2, 5)).id, DpUnitId::new(2, 5));
+        assert_eq!(g.instance_dps(1).len(), 8);
+        assert_eq!(g.instance_dps(1)[0].id.instance, 1);
+        assert_eq!(g.n_active(), 3);
+    }
+
+    #[test]
+    fn n_active_excludes_suspect() {
+        let mut g = GlobalState::new(4, 1, 1024);
+        g.instances[2].phase = InstancePhase::Suspect;
+        assert_eq!(g.n_active(), 3);
+        assert_eq!(g.instances_in(InstancePhase::Ready).count(), 3);
+    }
+}

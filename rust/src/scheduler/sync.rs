@@ -1,0 +1,261 @@
+//! §4.1.2 — Robust multi-tier State Synchronization Protocol.
+//!
+//! Interval estimation alone drifts; the paper supplements it with a
+//! triple-check readiness mechanism per instance:
+//!
+//! 1. **Quiescence polling** (initialization path): observed zero task
+//!    depth ⇒ immediately ready. Covers cold start and fast recovery.
+//! 2. **Asynchronous `EndForward` signaling** (fast path): the standard
+//!    event-driven readiness trigger.
+//! 3. **Liveness watchdog** (safety path): a timer armed at dispatch with
+//!    threshold `T_timeout = 5 × T̄`; expiration forces a state reset so a
+//!    lost EndForward cannot deadlock the cluster. Repeated expirations
+//!    mark the instance *suspect* and the system degrades gracefully to
+//!    fixed-interval batch dispatch.
+
+use super::state::{GlobalState, InstancePhase};
+
+/// Watchdog multiplier from the paper (`T_timeout = 5 × T̄`).
+pub const WATCHDOG_MULTIPLIER: f64 = 5.0;
+
+/// Consecutive watchdog expirations after which an instance is marked
+/// suspect rather than silently reset again.
+pub const SUSPECT_AFTER_TIMEOUTS: u32 = 3;
+
+/// Per-instance watchdog + readiness bookkeeping.
+#[derive(Debug, Clone)]
+struct InstanceSync {
+    /// Armed watchdog deadline (None when no pass is in flight).
+    deadline: Option<f64>,
+    /// Consecutive watchdog expirations.
+    consecutive_timeouts: u32,
+}
+
+/// Outcome of a watchdog sweep.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WatchdogEvent {
+    /// Instance timed out and was force-reset to Ready.
+    ForcedReset { instance: u32 },
+    /// Instance exceeded [`SUSPECT_AFTER_TIMEOUTS`] and is quarantined.
+    MarkedSuspect { instance: u32 },
+}
+
+/// The synchronization protocol state machine. Owns the instance phases in
+/// [`GlobalState`] transitions; callers feed it dispatches, EndForward
+/// events, queue-depth observations and periodic watchdog sweeps.
+#[derive(Debug, Clone)]
+pub struct SyncProtocol {
+    per_instance: Vec<InstanceSync>,
+    /// True once any instance has been marked suspect — the signal the
+    /// outer loop uses to fall back to fixed-interval batch mode.
+    degraded: bool,
+}
+
+impl SyncProtocol {
+    /// Protocol state for `n` instances.
+    pub fn new(n: u32) -> Self {
+        SyncProtocol {
+            per_instance: (0..n)
+                .map(|_| InstanceSync {
+                    deadline: None,
+                    consecutive_timeouts: 0,
+                })
+                .collect(),
+            degraded: false,
+        }
+    }
+
+    /// Whether graceful degradation (fixed-interval mode) is active.
+    pub fn degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// Record a dispatch to `instance` at time `now`: the instance becomes
+    /// Busy and the watchdog is armed with `5 × t_bar`.
+    pub fn on_dispatch(&mut self, g: &mut GlobalState, instance: u32, now: f64, t_bar: f64) {
+        let s = &mut g.instances[instance as usize];
+        s.phase = InstancePhase::Busy;
+        s.last_dispatch = now;
+        s.queue_depth += 1;
+        self.per_instance[instance as usize].deadline =
+            Some(now + WATCHDOG_MULTIPLIER * t_bar.max(1e-6));
+    }
+
+    /// Fast path: `EndForward` received from `instance` at `now`. Disarms
+    /// the watchdog, clears the timeout streak, and marks Ready when the
+    /// device queue has drained.
+    ///
+    /// Per paper Fig. 5 the EndForward payload carries the instance's
+    /// *remaining token count*; engines that report it pass
+    /// `remaining = Some(backlog)` and the depth is synced exactly.
+    /// `None` falls back to per-dispatch decrement accounting.
+    pub fn on_end_forward(
+        &mut self,
+        g: &mut GlobalState,
+        instance: u32,
+        now: f64,
+        remaining: Option<u32>,
+    ) {
+        let sync = &mut self.per_instance[instance as usize];
+        sync.consecutive_timeouts = 0;
+        let s = &mut g.instances[instance as usize];
+        s.last_end_forward = now;
+        match remaining {
+            Some(n) => s.queue_depth = n,
+            None => s.queue_depth = s.queue_depth.saturating_sub(1),
+        }
+        // A completed pass *freed capacity*: the instance is dispatchable
+        // again even if backlog remains on-device — how much can actually
+        // be sent is governed by the C_avail capacity model (§4.2.1), not
+        // by this binary phase. (Suspect instances stay quarantined.)
+        if s.phase == InstancePhase::Busy {
+            s.phase = InstancePhase::Ready;
+        }
+        sync.deadline = None;
+    }
+
+    /// Initialization path: a queue-depth observation (polling). Zero
+    /// depth is an immediate readiness trigger regardless of signals.
+    pub fn on_queue_observation(&mut self, g: &mut GlobalState, instance: u32, depth: u32) {
+        let s = &mut g.instances[instance as usize];
+        s.queue_depth = depth;
+        if depth == 0 && s.phase == InstancePhase::Busy {
+            s.phase = InstancePhase::Ready;
+            self.per_instance[instance as usize].deadline = None;
+        }
+    }
+
+    /// Safety path: sweep all watchdogs at `now`. Expired instances are
+    /// force-reset (preventing distributed deadlock); repeat offenders are
+    /// marked suspect and the protocol enters degraded mode.
+    pub fn sweep_watchdogs(&mut self, g: &mut GlobalState, now: f64) -> Vec<WatchdogEvent> {
+        let mut events = Vec::new();
+        for (i, sync) in self.per_instance.iter_mut().enumerate() {
+            let Some(deadline) = sync.deadline else {
+                continue;
+            };
+            if now < deadline {
+                continue;
+            }
+            sync.deadline = None;
+            sync.consecutive_timeouts += 1;
+            let s = &mut g.instances[i];
+            if sync.consecutive_timeouts >= SUSPECT_AFTER_TIMEOUTS {
+                s.phase = InstancePhase::Suspect;
+                self.degraded = true;
+                events.push(WatchdogEvent::MarkedSuspect { instance: i as u32 });
+            } else {
+                // Forced state reset: assume the pass (and anything queued
+                // behind it) was lost or will complete unobserved.
+                s.phase = InstancePhase::Ready;
+                s.queue_depth = 0;
+                events.push(WatchdogEvent::ForcedReset { instance: i as u32 });
+            }
+        }
+        events
+    }
+
+    /// Re-admit a recovered instance (health check passed): clears suspect
+    /// state; degraded mode ends when no suspects remain.
+    pub fn reinstate(&mut self, g: &mut GlobalState, instance: u32) {
+        let s = &mut g.instances[instance as usize];
+        if s.phase == InstancePhase::Suspect {
+            s.phase = InstancePhase::Ready;
+            s.queue_depth = 0;
+        }
+        self.per_instance[instance as usize].consecutive_timeouts = 0;
+        self.degraded = g
+            .instances
+            .iter()
+            .any(|i| i.phase == InstancePhase::Suspect);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(n: u32) -> (GlobalState, SyncProtocol) {
+        (GlobalState::new(n, 2, 1024), SyncProtocol::new(n))
+    }
+
+    #[test]
+    fn dispatch_then_end_forward_cycle() {
+        let (mut g, mut p) = setup(2);
+        p.on_dispatch(&mut g, 0, 10.0, 0.5);
+        assert_eq!(g.instances[0].phase, InstancePhase::Busy);
+        assert_eq!(g.instances[0].queue_depth, 1);
+        p.on_end_forward(&mut g, 0, 10.4, None);
+        assert_eq!(g.instances[0].phase, InstancePhase::Ready);
+        assert_eq!(g.instances[0].queue_depth, 0);
+    }
+
+    #[test]
+    fn end_forward_frees_capacity_even_with_backlog() {
+        let (mut g, mut p) = setup(1);
+        p.on_dispatch(&mut g, 0, 0.0, 0.5);
+        assert_eq!(g.instances[0].phase, InstancePhase::Busy);
+        // EndForward with backlog still pending: dispatchable again — the
+        // C_avail model limits how much the next cycle can send.
+        p.on_end_forward(&mut g, 0, 0.5, Some(500));
+        assert_eq!(g.instances[0].phase, InstancePhase::Ready);
+        assert_eq!(g.instances[0].queue_depth, 500);
+        p.on_end_forward(&mut g, 0, 1.0, Some(0));
+        assert_eq!(g.instances[0].queue_depth, 0);
+    }
+
+    #[test]
+    fn quiescence_polling_recovers() {
+        let (mut g, mut p) = setup(1);
+        p.on_dispatch(&mut g, 0, 0.0, 0.5);
+        // EndForward lost; an external poll observes an empty device queue.
+        p.on_queue_observation(&mut g, 0, 0);
+        assert_eq!(g.instances[0].phase, InstancePhase::Ready);
+    }
+
+    #[test]
+    fn watchdog_threshold_is_5x() {
+        let (mut g, mut p) = setup(1);
+        p.on_dispatch(&mut g, 0, 0.0, 0.4);
+        assert!(p.sweep_watchdogs(&mut g, 1.9).is_empty()); // 5×0.4 = 2.0
+        let ev = p.sweep_watchdogs(&mut g, 2.0);
+        assert_eq!(ev, vec![WatchdogEvent::ForcedReset { instance: 0 }]);
+        assert_eq!(g.instances[0].phase, InstancePhase::Ready);
+        assert_eq!(g.instances[0].queue_depth, 0);
+    }
+
+    #[test]
+    fn repeated_timeouts_mark_suspect_and_degrade() {
+        let (mut g, mut p) = setup(2);
+        for k in 0..SUSPECT_AFTER_TIMEOUTS {
+            p.on_dispatch(&mut g, 0, k as f64 * 10.0, 0.1);
+            let ev = p.sweep_watchdogs(&mut g, k as f64 * 10.0 + 1.0);
+            if k + 1 < SUSPECT_AFTER_TIMEOUTS {
+                assert_eq!(ev, vec![WatchdogEvent::ForcedReset { instance: 0 }]);
+            } else {
+                assert_eq!(ev, vec![WatchdogEvent::MarkedSuspect { instance: 0 }]);
+            }
+        }
+        assert!(p.degraded());
+        assert_eq!(g.instances[0].phase, InstancePhase::Suspect);
+        assert_eq!(g.n_active(), 1);
+
+        p.reinstate(&mut g, 0);
+        assert!(!p.degraded());
+        assert_eq!(g.instances[0].phase, InstancePhase::Ready);
+    }
+
+    #[test]
+    fn end_forward_clears_timeout_streak() {
+        let (mut g, mut p) = setup(1);
+        p.on_dispatch(&mut g, 0, 0.0, 0.1);
+        p.sweep_watchdogs(&mut g, 1.0); // one timeout
+        p.on_dispatch(&mut g, 0, 2.0, 0.1);
+        p.on_end_forward(&mut g, 0, 2.1, None); // healthy again
+        p.on_dispatch(&mut g, 0, 3.0, 0.1);
+        let ev = p.sweep_watchdogs(&mut g, 4.0);
+        // Streak restarted: this is timeout #1, not #2.
+        assert_eq!(ev, vec![WatchdogEvent::ForcedReset { instance: 0 }]);
+        assert!(!p.degraded());
+    }
+}

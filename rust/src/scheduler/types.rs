@@ -1,0 +1,105 @@
+//! Shared request/identifier types used across scheduling policies, the
+//! simulator and the real engine.
+
+/// Globally unique request identifier.
+pub type RequestId = u64;
+
+/// Identifies one DP-Attention unit: `(instance, local dp rank)`.
+///
+/// The paper's §3.1 point: in DP+EP deployments the atomic scheduling unit
+/// is the DP-Attention group *inside* an instance, not the instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DpUnitId {
+    /// Index of the inference instance in its pool.
+    pub instance: u32,
+    /// DP rank within the instance.
+    pub dp: u32,
+}
+
+impl DpUnitId {
+    /// Convenience constructor.
+    pub fn new(instance: u32, dp: u32) -> Self {
+        DpUnitId { instance, dp }
+    }
+}
+
+impl std::fmt::Display for DpUnitId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "i{}d{}", self.instance, self.dp)
+    }
+}
+
+/// A request as the scheduler sees it.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Unique id.
+    pub id: RequestId,
+    /// Prompt length in tokens (the paper's `L(r)`).
+    pub input_tokens: u32,
+    /// Number of tokens to generate (known in simulation; a cap in real
+    /// serving).
+    pub output_tokens: u32,
+    /// Arrival timestamp at the scheduler frontend, seconds.
+    pub arrival: f64,
+    /// Consecutive allocation cycles this request failed to place
+    /// (Algorithm 2 phase 3; compared against `N_limit`).
+    pub wait_cycles: u32,
+    /// Shared-prefix group for cache-aware scheduling (None = unique).
+    pub prefix_group: Option<u64>,
+    /// Length of the shared prefix in tokens (0 when no group).
+    pub prefix_len: u32,
+}
+
+impl Request {
+    /// A plain request with no shared prefix.
+    pub fn new(id: RequestId, input_tokens: u32, output_tokens: u32, arrival: f64) -> Self {
+        Request {
+            id,
+            input_tokens,
+            output_tokens,
+            arrival,
+            wait_cycles: 0,
+            prefix_group: None,
+            prefix_len: 0,
+        }
+    }
+
+    /// Attach a shared prefix group (for cache-aware allocation).
+    pub fn with_prefix(mut self, group: u64, prefix_len: u32) -> Self {
+        assert!(prefix_len <= self.input_tokens);
+        self.prefix_group = Some(group);
+        self.prefix_len = prefix_len;
+        self
+    }
+
+    /// Total sequence length once fully decoded (used by Algorithm 3's
+    /// fill-the-valley pre-sort).
+    pub fn total_len(&self) -> u32 {
+        self.input_tokens + self.output_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dp_unit_display_and_ord() {
+        let a = DpUnitId::new(0, 1);
+        let b = DpUnitId::new(1, 0);
+        assert!(a < b);
+        assert_eq!(a.to_string(), "i0d1");
+    }
+
+    #[test]
+    fn request_total_len() {
+        let r = Request::new(1, 100, 28, 0.0);
+        assert_eq!(r.total_len(), 128);
+    }
+
+    #[test]
+    #[should_panic]
+    fn prefix_longer_than_input_rejected() {
+        let _ = Request::new(1, 10, 1, 0.0).with_prefix(7, 11);
+    }
+}

@@ -1,0 +1,149 @@
+//! Serving frontend over the real mini-cluster: an in-process batch mode
+//! plus a minimal TCP line protocol
+//! (`GEN <max_tokens> <prompt...>` → `OK <id> ttft_ms=.. e2e_ms=.. tokens=.. <text>`),
+//! wired through `sbs serve`.
+
+use crate::cli::Command;
+use crate::cluster::workers::{Job, RealCluster, RealClusterConfig, RealSchedMode};
+use crate::engine::sampler::Sampling;
+use crate::engine::tokenizer;
+use crate::runtime::artifacts_dir;
+use crate::scheduler::baseline::ImmediatePolicy;
+use anyhow::{anyhow, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::time::Duration;
+
+/// `sbs serve` entrypoint.
+pub fn cli_serve(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("sbs serve", "serve the nano-MoE model via SBS")
+        .opt("artifacts", "artifact directory", Some("artifacts"))
+        .opt("prefill", "prefill instances", Some("2"))
+        .opt("batch", "decode batch size", Some("4"))
+        .opt(
+            "scheduler",
+            "staggered | round_robin | least_outstanding",
+            Some("staggered"),
+        )
+        .opt("requests", "batch mode: number of synthetic requests", Some("8"))
+        .opt("max-new", "tokens to generate per request", Some("16"))
+        .opt(
+            "listen",
+            "run the TCP server on this addr instead (e.g. 127.0.0.1:7433)",
+            None,
+        )
+        .opt("seed", "rng seed", Some("7"));
+    let args = cmd.parse(argv).map_err(|e| anyhow!("{e}"))?;
+    let dir = std::path::PathBuf::from(
+        args.str_or("artifacts", artifacts_dir().to_str().unwrap_or("artifacts")),
+    );
+    let mode = match args.str_or("scheduler", "staggered").as_str() {
+        "staggered" => RealSchedMode::Staggered(Default::default()),
+        "round_robin" => RealSchedMode::Immediate(ImmediatePolicy::RoundRobin),
+        "least_outstanding" => RealSchedMode::Immediate(ImmediatePolicy::LeastOutstanding),
+        other => return Err(anyhow!("unknown scheduler '{other}'")),
+    };
+    let cfg = RealClusterConfig {
+        n_prefill: args.parse_or("prefill", 2u32).map_err(|e| anyhow!("{e}"))?,
+        decode_batch: args.parse_or("batch", 4u32).map_err(|e| anyhow!("{e}"))?,
+        mode,
+        sampling: Sampling::Greedy,
+        seed: args.parse_or("seed", 7u64).map_err(|e| anyhow!("{e}"))?,
+        artifacts: dir,
+        ..Default::default()
+    };
+
+    if let Some(addr) = args.value("listen") {
+        return serve_tcp(cfg, addr);
+    }
+
+    // Batch mode: synthetic prompts through the cluster; print report.
+    let n: usize = args.parse_or("requests", 8).map_err(|e| anyhow!("{e}"))?;
+    let max_new: u32 = args.parse_or("max-new", 16).map_err(|e| anyhow!("{e}"))?;
+    let mut cluster = RealCluster::start(cfg)?;
+    for i in 0..n {
+        let prompt = tokenizer::encode(&format!(
+            "Request {i}: the staggered batch scheduler buffers requests to \
+             form optimal execution batches before dispatch."
+        ));
+        cluster.submit(Job {
+            id: i as u64,
+            prompt,
+            max_new,
+        });
+    }
+    let (completions, report) = cluster.finish()?;
+    for c in completions.iter().take(3) {
+        println!(
+            "job {}: {} tokens, ttft={:.0}ms",
+            c.id,
+            c.tokens.len(),
+            c.metrics.ttft().unwrap_or(-1.0) * 1e3,
+        );
+    }
+    println!("\n{}", report.render());
+    Ok(())
+}
+
+/// Run the TCP line-protocol server. Connections are handled sequentially
+/// and requests synchronously — the research focus is the scheduler, not
+/// an async frontend.
+fn serve_tcp(cfg: RealClusterConfig, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    log::info!("listening on {addr}");
+    let mut cluster = RealCluster::start(cfg)?;
+    let mut next_id: u64 = 0;
+    for conn in listener.incoming() {
+        let conn = conn?;
+        let peer = conn.peer_addr()?;
+        log::info!("connection from {peer}");
+        let mut reader = BufReader::new(conn.try_clone()?);
+        let mut out = conn;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                break;
+            }
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line == "QUIT" {
+                return Ok(());
+            }
+            let Some(rest) = line.strip_prefix("GEN ") else {
+                writeln!(out, "ERR expected: GEN <max_tokens> <prompt>")?;
+                continue;
+            };
+            let (max_s, prompt_text) = rest.split_once(' ').unwrap_or((rest, ""));
+            let max_new: u32 = max_s.parse().unwrap_or(16);
+            let id = next_id;
+            next_id += 1;
+            let t0 = std::time::Instant::now();
+            cluster.submit(Job {
+                id,
+                prompt: tokenizer::encode(prompt_text),
+                max_new,
+            });
+            let c = cluster.wait_for(id, Duration::from_secs(600))?;
+            writeln!(
+                out,
+                "OK {id} ttft_ms={:.0} e2e_ms={:.0} tokens={} {}",
+                c.metrics.ttft().unwrap_or(-1.0) * 1e3,
+                t0.elapsed().as_secs_f64() * 1e3,
+                c.tokens.len(),
+                truncate(&tokenizer::decode(&c.tokens), 120)
+            )?;
+        }
+    }
+    Ok(())
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.chars().count() <= n {
+        s.to_string()
+    } else {
+        s.chars().take(n).collect::<String>() + "…"
+    }
+}

@@ -1,0 +1,168 @@
+//! Seeded property-testing mini-framework (no `proptest` in the offline
+//! registry).
+//!
+//! [`check`] runs a property over `cases` randomly-generated inputs. On
+//! failure it retries with progressively "smaller" regenerated inputs
+//! (size-bounded regeneration — a pragmatic stand-in for shrinking) and
+//! panics with the failing seed so the case can be replayed exactly:
+//!
+//! ```no_run
+//! use sbs::testing::{check, Gen};
+//! check("sum is commutative", 200, |g| {
+//!     let a = g.rng.f64();
+//!     let b = g.rng.f64();
+//!     assert!((a + b - (b + a)).abs() < 1e-15);
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Per-case generation context: an rng plus a size hint in `[0, 1]` that
+/// grows over the run (small cases first, like proptest).
+pub struct Gen {
+    /// Deterministic source of randomness for this case.
+    pub rng: Rng,
+    /// Size hint in `[0, 1]`; multiply your max collection length by this.
+    pub size: f64,
+}
+
+impl Gen {
+    /// A length in `[1, max]` scaled by the current size hint.
+    pub fn len(&mut self, max: usize) -> usize {
+        let cap = ((max as f64 * self.size).ceil() as usize).max(1);
+        1 + self.rng.index(cap)
+    }
+
+    /// A vector of `n` values drawn by `f`.
+    pub fn vec_of<T>(&mut self, n: usize, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+        (0..n).map(|_| f(&mut self.rng)).collect()
+    }
+}
+
+/// Environment knob: `SBS_PROPTEST_CASES` overrides the case count.
+fn case_count(default_cases: u32) -> u32 {
+    std::env::var("SBS_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_cases)
+}
+
+/// Run `prop` over `cases` generated inputs. Panics (with the seed) on the
+/// first failing case after attempting smaller reproductions.
+pub fn check(name: &str, cases: u32, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let cases = case_count(cases);
+    let base_seed = BASE_SEED ^ hash_name(name);
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i as u64);
+        let size = (i as f64 + 1.0) / cases as f64;
+        if let Err(panic) = run_case(&prop, seed, size) {
+            // Try smaller sizes with the same seed to report a more
+            // minimal configuration.
+            let mut min_size = size;
+            let mut steps = 0;
+            let mut s = size / 2.0;
+            while steps < 16 && s > 1e-3 {
+                if run_case(&prop, seed, s).is_err() {
+                    min_size = s;
+                    s /= 2.0;
+                } else {
+                    s = (s + min_size) / 2.0;
+                }
+                steps += 1;
+            }
+            let msg = panic_text(&panic);
+            panic!(
+                "property '{name}' failed (case {i}, seed {seed:#x}, size {min_size:.4}): {msg}\n\
+                 replay: sbs::testing::replay(\"{name}\", {seed:#x}, {min_size:.6}, prop)"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed/size (used to debug failures reported by
+/// [`check`]).
+pub fn replay(name: &str, seed: u64, size: f64, prop: impl Fn(&mut Gen)) {
+    let _ = name;
+    let mut g = Gen {
+        rng: Rng::new(seed),
+        size,
+    };
+    prop(&mut g);
+}
+
+fn run_case(
+    prop: &(impl Fn(&mut Gen) + std::panic::RefUnwindSafe),
+    seed: u64,
+    size: f64,
+) -> Result<(), Box<dyn std::any::Any + Send>> {
+    std::panic::catch_unwind(|| {
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            size,
+        };
+        prop(&mut g);
+    })
+}
+
+fn panic_text(p: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+/// Base seed for all properties; change to re-roll the whole suite.
+const BASE_SEED: u64 = 0x5B5_0000_5EED;
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a, good enough to decorrelate property seeds.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse twice is identity", 64, |g| {
+            let n = g.len(32);
+            let mut v = g.vec_of(n, |r| r.next_u64());
+            let orig = v.clone();
+            v.reverse();
+            v.reverse();
+            assert_eq!(v, orig);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_reports_seed() {
+        check("always fails", 8, |_g| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        use std::sync::Mutex;
+        let seen = Mutex::new(Vec::new());
+        check("collect", 4, |g| {
+            seen.lock().unwrap().push(g.rng.next_u64());
+        });
+        let first = seen.lock().unwrap().clone();
+        seen.lock().unwrap().clear();
+        check("collect", 4, |g| {
+            seen.lock().unwrap().push(g.rng.next_u64());
+        });
+        assert_eq!(first, *seen.lock().unwrap());
+    }
+}

@@ -1,0 +1,110 @@
+//! Clock abstraction shared by the real serving path and the simulator.
+//!
+//! All timestamps in the crate are `f64` seconds from an arbitrary epoch.
+//! Scheduler state machines never read a clock directly — they take
+//! explicit `now` arguments — but the threaded real mode and the server
+//! frontend need a time source, and tests need a controllable one.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// A monotonic time source in seconds.
+pub trait Clock: Send + Sync {
+    /// Seconds since this clock's epoch.
+    fn now_s(&self) -> f64;
+}
+
+/// Wall-clock time from a process-local epoch.
+#[derive(Debug)]
+pub struct RealClock {
+    epoch: Instant,
+}
+
+impl RealClock {
+    /// A clock whose epoch is "now".
+    pub fn new() -> Self {
+        RealClock {
+            epoch: Instant::now(),
+        }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+}
+
+/// A manually-advanced clock for tests and deterministic replay. Stores
+/// nanoseconds in an atomic so it is `Sync` without locks.
+#[derive(Debug, Default)]
+pub struct ManualClock {
+    nanos: AtomicU64,
+}
+
+impl ManualClock {
+    /// A manual clock at t = 0.
+    pub fn new() -> Self {
+        ManualClock {
+            nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Advance by `dt` seconds.
+    pub fn advance(&self, dt: f64) {
+        assert!(dt >= 0.0, "clock cannot go backwards");
+        self.nanos
+            .fetch_add((dt * 1e9).round() as u64, Ordering::SeqCst);
+    }
+
+    /// Jump to an absolute time (must not go backwards).
+    pub fn set(&self, t: f64) {
+        let new = (t * 1e9).round() as u64;
+        let old = self.nanos.load(Ordering::SeqCst);
+        assert!(new >= old, "clock cannot go backwards");
+        self.nanos.store(new, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_s(&self) -> f64 {
+        self.nanos.load(Ordering::SeqCst) as f64 * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_monotonic() {
+        let c = RealClock::new();
+        let a = c.now_s();
+        let b = c.now_s();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn manual_clock_advances() {
+        let c = ManualClock::new();
+        assert_eq!(c.now_s(), 0.0);
+        c.advance(1.5);
+        assert!((c.now_s() - 1.5).abs() < 1e-9);
+        c.set(3.0);
+        assert!((c.now_s() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn manual_clock_rejects_backwards() {
+        let c = ManualClock::new();
+        c.set(2.0);
+        c.set(1.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Foundational utilities: deterministic PRNG, statistics, sliding windows
+//! and clock abstractions.
+//!
+//! Everything here is dependency-free and deterministic so that simulations
+//! and property tests are exactly reproducible from a seed.
+
+pub mod clock;
+pub mod prng;
+pub mod ring;
+pub mod stats;
+
+pub use clock::{Clock, ManualClock, RealClock};
+pub use prng::Rng;
+pub use ring::SlidingWindow;
+pub use stats::Summary;

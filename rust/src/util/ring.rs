@@ -1,0 +1,131 @@
+//! Fixed-capacity sliding windows.
+//!
+//! [`SlidingWindow`] is the W_stats structure of paper Algorithm 1: a
+//! bounded FIFO of forward-pass execution times with an O(1) running mean
+//! (the "moving average filter" that smooths T̄_fwd).
+
+use std::collections::VecDeque;
+
+/// Bounded FIFO of `f64` samples with an O(1) running sum/mean.
+#[derive(Debug, Clone)]
+pub struct SlidingWindow {
+    buf: VecDeque<f64>,
+    cap: usize,
+    sum: f64,
+}
+
+impl SlidingWindow {
+    /// Create a window holding at most `cap` samples (`cap >= 1`).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "window capacity must be >= 1");
+        SlidingWindow {
+            buf: VecDeque::with_capacity(cap),
+            cap,
+            sum: 0.0,
+        }
+    }
+
+    /// Push a sample, evicting the oldest if at capacity (paper Alg. 1
+    /// lines 15–18).
+    pub fn push(&mut self, x: f64) {
+        if self.buf.len() == self.cap {
+            if let Some(old) = self.buf.pop_front() {
+                self.sum -= old;
+            }
+        }
+        self.buf.push_back(x);
+        self.sum += x;
+        // Periodically re-accumulate to bound float drift in long runs.
+        if self.buf.len() == self.cap && self.sum.abs() > 1e12 {
+            self.sum = self.buf.iter().sum();
+        }
+    }
+
+    /// Number of samples currently held.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when no samples have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Running mean; `None` while empty.
+    pub fn mean(&self) -> Option<f64> {
+        if self.buf.is_empty() {
+            None
+        } else {
+            Some(self.sum / self.buf.len() as f64)
+        }
+    }
+
+    /// Latest sample, if any.
+    pub fn last(&self) -> Option<f64> {
+        self.buf.back().copied()
+    }
+
+    /// Iterate oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = f64> + '_ {
+        self.buf.iter().copied()
+    }
+
+    /// Drop all samples.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.sum = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_mean_none() {
+        let w = SlidingWindow::new(4);
+        assert!(w.mean().is_none());
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn mean_under_capacity() {
+        let mut w = SlidingWindow::new(4);
+        w.push(1.0);
+        w.push(3.0);
+        assert_eq!(w.mean(), Some(2.0));
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    fn eviction_at_capacity() {
+        let mut w = SlidingWindow::new(3);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            w.push(x);
+        }
+        // holds [2,3,4]
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.mean(), Some(3.0));
+        assert_eq!(w.last(), Some(4.0));
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut w = SlidingWindow::new(2);
+        w.push(5.0);
+        w.clear();
+        assert!(w.mean().is_none());
+        w.push(7.0);
+        assert_eq!(w.mean(), Some(7.0));
+    }
+
+    #[test]
+    fn iter_order() {
+        let mut w = SlidingWindow::new(2);
+        w.push(1.0);
+        w.push(2.0);
+        w.push(3.0);
+        let v: Vec<f64> = w.iter().collect();
+        assert_eq!(v, vec![2.0, 3.0]);
+    }
+}

@@ -1,0 +1,195 @@
+//! Descriptive statistics: means, percentiles, IQR, summaries.
+//!
+//! The IQR helpers implement exactly the quartile definition used by
+//! Algorithm 3 of the paper (linear interpolation between closest ranks,
+//! numpy's default), so the decode scheduler's outlier mask is
+//! reproducible against a numpy reference.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance; 0.0 for fewer than two samples.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile `p` in `[0, 100]` of an **unsorted** slice, with linear
+/// interpolation between closest ranks (numpy default). O(n log n).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile of an already-sorted slice. O(1).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Interquartile range statistics for outlier masking (paper Algorithm 3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Iqr {
+    /// 25th percentile.
+    pub q1: f64,
+    /// 75th percentile.
+    pub q3: f64,
+}
+
+impl Iqr {
+    /// Compute Q1/Q3 of an unsorted sample.
+    pub fn of(xs: &[f64]) -> Iqr {
+        let mut v: Vec<f64> = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Iqr {
+            q1: percentile_sorted(&v, 25.0),
+            q3: percentile_sorted(&v, 75.0),
+        }
+    }
+
+    /// The range itself, `Q3 - Q1`.
+    pub fn range(&self) -> f64 {
+        self.q3 - self.q1
+    }
+
+    /// The paper's dynamic exclusion threshold `Q3 + k * IQR`.
+    pub fn outlier_threshold(&self, k: f64) -> f64 {
+        self.q3 + k * self.range()
+    }
+}
+
+/// A one-pass summary of a sample: count, mean, stddev and key percentiles.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    /// Number of samples.
+    pub count: usize,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Population standard deviation.
+    pub std: f64,
+    /// Minimum.
+    pub min: f64,
+    /// Median (p50).
+    pub p50: f64,
+    /// 90th percentile.
+    pub p90: f64,
+    /// 99th percentile.
+    pub p99: f64,
+    /// Maximum.
+    pub max: f64,
+}
+
+impl Summary {
+    /// Summarise a sample (empty input yields all-zero summary).
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let mut v: Vec<f64> = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            count: v.len(),
+            mean: mean(&v),
+            std: stddev(&v),
+            min: v[0],
+            p50: percentile_sorted(&v, 50.0),
+            p90: percentile_sorted(&v, 90.0),
+            p99: percentile_sorted(&v, 99.0),
+            max: v[v.len() - 1],
+        }
+    }
+
+    /// Render as a compact single-line report, scaled by `unit` with the
+    /// given suffix (e.g. `1e3, "ms"` for values held in seconds).
+    pub fn line(&self, unit: f64, suffix: &str) -> String {
+        format!(
+            "n={} mean={:.2}{s} p50={:.2}{s} p90={:.2}{s} p99={:.2}{s} max={:.2}{s}",
+            self.count,
+            self.mean * unit,
+            self.p50 * unit,
+            self.p90 * unit,
+            self.p99 * unit,
+            self.max * unit,
+            s = suffix
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_matches_numpy() {
+        // numpy: percentile([1,2,3,4], 25) == 1.75; percentile(..., 75) == 3.25
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 25.0) - 1.75).abs() < 1e-12);
+        assert!((percentile(&xs, 75.0) - 3.25).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn percentile_single() {
+        assert_eq!(percentile(&[5.0], 37.0), 5.0);
+    }
+
+    #[test]
+    fn iqr_threshold() {
+        // numpy: q1 of 1..=8 is 2.75, q3 is 6.25, IQR 3.5; thr(1.5) = 11.5
+        let xs: Vec<f64> = (1..=8).map(|x| x as f64).collect();
+        let iqr = Iqr::of(&xs);
+        assert!((iqr.q1 - 2.75).abs() < 1e-12);
+        assert!((iqr.q3 - 6.25).abs() < 1e-12);
+        assert!((iqr.outlier_threshold(1.5) - 11.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_orders() {
+        let s = Summary::of(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.count, 3);
+    }
+
+    #[test]
+    fn stddev_known() {
+        let s = stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,291 @@
+//! Workload generation: arrival processes, token-length distributions,
+//! shared-prefix structure, and JSONL trace record/replay.
+//!
+//! The paper's two evaluation workloads are provided as presets:
+//! [`LengthDist::paper_short`] (0–3K input tokens, mean ≈ 1K; Fig. 6a /
+//! Table 1) and [`LengthDist::paper_long`] (3K–64K, mean ≈ 6.7K; Fig. 6b),
+//! plus the decode workload of §5.2.2 (input+output ≈ 2.5K).
+
+mod trace;
+
+pub use trace::{read_trace, write_trace};
+
+use crate::scheduler::Request;
+use crate::util::Rng;
+
+/// Token-length distribution.
+#[derive(Debug, Clone)]
+pub enum LengthDist {
+    /// Every sample is `n`.
+    Fixed(u32),
+    /// Uniform integer in `[lo, hi]`.
+    Uniform { lo: u32, hi: u32 },
+    /// Log-normal (underlying `mu`/`sigma`) clamped to `[lo, hi]` —
+    /// the right-skewed shape of production prompt lengths.
+    LogNormal { mu: f64, sigma: f64, lo: u32, hi: u32 },
+}
+
+impl LengthDist {
+    /// Paper Fig. 6(a) / Table 1 prompt lengths: 0–3K tokens, mean ≈ 1K.
+    pub fn paper_short() -> Self {
+        LengthDist::LogNormal {
+            mu: 6.75,
+            sigma: 0.75,
+            lo: 16,
+            hi: 3072,
+        }
+    }
+
+    /// Paper Fig. 6(b) long-context lengths: 3K–64K tokens, mean ≈ 6.7K.
+    pub fn paper_long() -> Self {
+        LengthDist::LogNormal {
+            mu: 8.55,
+            sigma: 0.65,
+            lo: 3072,
+            hi: 65536,
+        }
+    }
+
+    /// Paper §5.2.2 decode outputs: combined in+out ≈ 2.5K with in ≈ 2K,
+    /// heavy-tailed (long generations pin KV for minutes).
+    pub fn paper_decode_out() -> Self {
+        LengthDist::LogNormal {
+            mu: 5.9,
+            sigma: 0.8,
+            lo: 32,
+            hi: 4096,
+        }
+    }
+
+    /// Draw one length.
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        match *self {
+            LengthDist::Fixed(n) => n,
+            LengthDist::Uniform { lo, hi } => rng.range_u64(lo as u64, hi as u64) as u32,
+            LengthDist::LogNormal { mu, sigma, lo, hi } => {
+                (rng.lognormal(mu, sigma).round() as u32).clamp(lo, hi)
+            }
+        }
+    }
+
+    /// Empirical mean over `n` draws (used for load calibration).
+    pub fn empirical_mean(&self, seed: u64, n: usize) -> f64 {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| self.sample(&mut rng) as f64).sum::<f64>() / n as f64
+    }
+}
+
+/// Request arrival process.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Poisson with the given rate (requests/second) — the paper's
+    /// "uniformly arriving requests" (Markovian).
+    Poisson { qps: f64 },
+    /// Deterministic equal spacing (variance-free control case).
+    Uniform { qps: f64 },
+    /// Poisson modulated by a square wave: `qps` during bursts,
+    /// `qps × trough` between them (models >100% peak-to-trough traffic
+    /// variance, §4.1.1).
+    SquareWave {
+        qps: f64,
+        trough: f64,
+        period: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Next inter-arrival gap at absolute time `t`.
+    pub fn next_gap(&self, rng: &mut Rng, t: f64) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { qps } => rng.exp(qps.max(1e-9)),
+            ArrivalProcess::Uniform { qps } => 1.0 / qps.max(1e-9),
+            ArrivalProcess::SquareWave { qps, trough, period } => {
+                let phase = (t / period).fract();
+                let rate = if phase < 0.5 { qps } else { qps * trough };
+                rng.exp(rate.max(1e-9))
+            }
+        }
+    }
+}
+
+/// Shared-prefix structure for cache-aware experiments.
+#[derive(Debug, Clone)]
+pub struct PrefixSpec {
+    /// Number of distinct prefix groups (system prompts / sessions).
+    pub groups: usize,
+    /// Zipf exponent over group popularity.
+    pub zipf_s: f64,
+    /// Prefix length distribution (clamped to the sampled input length).
+    pub prefix_len: LengthDist,
+    /// Fraction of requests that carry a shared prefix at all.
+    pub participation: f64,
+}
+
+/// Full workload specification.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Arrival process.
+    pub arrivals: ArrivalProcess,
+    /// Prompt length distribution.
+    pub input_len: LengthDist,
+    /// Output (decode) length distribution.
+    pub output_len: LengthDist,
+    /// Optional shared-prefix structure.
+    pub prefix: Option<PrefixSpec>,
+    /// Workload horizon in seconds.
+    pub duration: f64,
+    /// RNG seed (workloads are fully reproducible).
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    /// Paper Fig. 6(a) workload at a given QPS.
+    pub fn paper_short(qps: f64, duration: f64, seed: u64) -> Self {
+        WorkloadSpec {
+            arrivals: ArrivalProcess::Poisson { qps },
+            input_len: LengthDist::paper_short(),
+            output_len: LengthDist::Uniform { lo: 64, hi: 512 },
+            prefix: None,
+            duration,
+            seed,
+        }
+    }
+
+    /// Paper Fig. 6(b) long-context workload.
+    pub fn paper_long(qps: f64, duration: f64, seed: u64) -> Self {
+        WorkloadSpec {
+            arrivals: ArrivalProcess::Poisson { qps },
+            input_len: LengthDist::paper_long(),
+            output_len: LengthDist::Uniform { lo: 64, hi: 512 },
+            prefix: None,
+            duration,
+            seed,
+        }
+    }
+
+    /// Paper §5.2.2 decode-focused workload (input ≈ 2K, heavy-tailed
+    /// output; combined ≈ 2.5K).
+    pub fn paper_decode(qps: f64, duration: f64, seed: u64) -> Self {
+        WorkloadSpec {
+            arrivals: ArrivalProcess::Poisson { qps },
+            input_len: LengthDist::LogNormal {
+                mu: 7.1,
+                sigma: 1.0,
+                lo: 64,
+                hi: 16384,
+            },
+            output_len: LengthDist::paper_decode_out(),
+            prefix: None,
+            duration,
+            seed,
+        }
+    }
+
+    /// Materialize the full request sequence.
+    pub fn generate(&self) -> Vec<Request> {
+        let mut rng = Rng::new(self.seed);
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        let mut id = 0u64;
+        loop {
+            t += self.arrivals.next_gap(&mut rng, t);
+            if t >= self.duration {
+                break;
+            }
+            let input = self.input_len.sample(&mut rng);
+            let output = self.output_len.sample(&mut rng).max(1);
+            let mut r = Request::new(id, input, output, t);
+            if let Some(p) = &self.prefix {
+                if rng.chance(p.participation) {
+                    let group = rng.zipf(p.groups, p.zipf_s) as u64;
+                    let plen = p.prefix_len.sample(&mut rng).min(input);
+                    r = r.with_prefix(group, plen);
+                }
+            }
+            out.push(r);
+            id += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_short_mean_near_1k() {
+        let m = LengthDist::paper_short().empirical_mean(1, 50_000);
+        assert!((850.0..1150.0).contains(&m), "mean {m}");
+    }
+
+    #[test]
+    fn paper_long_mean_near_6_7k() {
+        let m = LengthDist::paper_long().empirical_mean(2, 50_000);
+        assert!((5800.0..7600.0).contains(&m), "mean {m}");
+    }
+
+    #[test]
+    fn lengths_respect_bounds() {
+        let d = LengthDist::paper_short();
+        let mut rng = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = d.sample(&mut rng);
+            assert!((16..=3072).contains(&x));
+        }
+    }
+
+    #[test]
+    fn poisson_rate_close() {
+        let spec = WorkloadSpec::paper_short(50.0, 100.0, 7);
+        let reqs = spec.generate();
+        let rate = reqs.len() as f64 / 100.0;
+        assert!((44.0..56.0).contains(&rate), "rate {rate}");
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        assert!(reqs.last().unwrap().arrival < 100.0);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = WorkloadSpec::paper_short(20.0, 10.0, 42).generate();
+        let b = WorkloadSpec::paper_short(20.0, 10.0, 42).generate();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.input_tokens, y.input_tokens);
+            assert_eq!(x.arrival, y.arrival);
+        }
+    }
+
+    #[test]
+    fn square_wave_modulates_rate() {
+        let p = ArrivalProcess::SquareWave {
+            qps: 100.0,
+            trough: 0.1,
+            period: 10.0,
+        };
+        let mut rng = Rng::new(5);
+        let burst: f64 = (0..1000).map(|_| p.next_gap(&mut rng, 1.0)).sum::<f64>() / 1000.0;
+        let quiet: f64 = (0..1000).map(|_| p.next_gap(&mut rng, 6.0)).sum::<f64>() / 1000.0;
+        assert!(quiet > burst * 5.0, "burst {burst} quiet {quiet}");
+    }
+
+    #[test]
+    fn prefix_workload_attaches_groups() {
+        let mut spec = WorkloadSpec::paper_short(50.0, 20.0, 9);
+        spec.prefix = Some(PrefixSpec {
+            groups: 8,
+            zipf_s: 1.1,
+            prefix_len: LengthDist::Uniform { lo: 100, hi: 600 },
+            participation: 0.8,
+        });
+        let reqs = spec.generate();
+        let with = reqs.iter().filter(|r| r.prefix_group.is_some()).count();
+        let frac = with as f64 / reqs.len() as f64;
+        assert!((0.7..0.9).contains(&frac), "participation {frac}");
+        for r in &reqs {
+            assert!(r.prefix_len <= r.input_tokens);
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! JSONL trace record/replay: one request per line, so production traces
+//! (or generated workloads) can be captured once and replayed bit-exactly
+//! across scheduler variants.
+
+use crate::json::{parse, Json};
+use crate::scheduler::Request;
+use anyhow::{anyhow, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Serialize one request to a JSON object.
+fn to_json(r: &Request) -> Json {
+    let mut fields = vec![
+        ("id", Json::from(r.id)),
+        ("input_tokens", Json::from(r.input_tokens)),
+        ("output_tokens", Json::from(r.output_tokens)),
+        ("arrival", Json::from(r.arrival)),
+    ];
+    if let Some(g) = r.prefix_group {
+        fields.push(("prefix_group", Json::from(g)));
+        fields.push(("prefix_len", Json::from(r.prefix_len)));
+    }
+    Json::obj(fields)
+}
+
+/// Parse one request from a JSON object.
+fn from_json(j: &Json) -> Result<Request> {
+    let get_u32 = |k: &str| -> Result<u32> {
+        j.get(k)
+            .and_then(Json::as_usize)
+            .map(|x| x as u32)
+            .ok_or_else(|| anyhow!("missing/invalid field '{k}'"))
+    };
+    let id = j
+        .get("id")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("missing 'id'"))? as u64;
+    let arrival = j
+        .get("arrival")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("missing 'arrival'"))?;
+    let mut r = Request::new(id, get_u32("input_tokens")?, get_u32("output_tokens")?, arrival);
+    if let Some(g) = j.get("prefix_group").and_then(Json::as_f64) {
+        let plen = get_u32("prefix_len")?.min(r.input_tokens);
+        r = r.with_prefix(g as u64, plen);
+    }
+    Ok(r)
+}
+
+/// Write a request trace as JSONL.
+pub fn write_trace(path: &Path, requests: &[Request]) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating trace file {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for r in requests {
+        writeln!(w, "{}", to_json(r).dump())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a JSONL request trace.
+pub fn read_trace(path: &Path) -> Result<Vec<Request>> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening trace file {}", path.display()))?;
+    let mut out = Vec::new();
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = parse(&line).map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        out.push(from_json(&j).with_context(|| format!("line {}", lineno + 1))?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadSpec;
+
+    #[test]
+    fn roundtrip_trace() {
+        let dir = std::env::temp_dir().join("sbs_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let mut spec = WorkloadSpec::paper_short(30.0, 5.0, 11);
+        spec.prefix = Some(crate::workload::PrefixSpec {
+            groups: 4,
+            zipf_s: 1.0,
+            prefix_len: crate::workload::LengthDist::Fixed(64),
+            participation: 0.5,
+        });
+        let reqs = spec.generate();
+        write_trace(&path, &reqs).unwrap();
+        let back = read_trace(&path).unwrap();
+        assert_eq!(reqs.len(), back.len());
+        for (a, b) in reqs.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.input_tokens, b.input_tokens);
+            assert_eq!(a.output_tokens, b.output_tokens);
+            assert!((a.arrival - b.arrival).abs() < 1e-9);
+            assert_eq!(a.prefix_group, b.prefix_group);
+            assert_eq!(a.prefix_len, b.prefix_len);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        let dir = std::env::temp_dir().join("sbs_trace_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{\"id\": 1}\n").unwrap();
+        assert!(read_trace(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

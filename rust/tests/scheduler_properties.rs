@@ -1,0 +1,264 @@
+//! Property-based tests on scheduler invariants (seeded mini-framework,
+//! `sbs::testing`). These are the correctness contracts of Algorithms
+//! 1–3 that must hold for *any* workload.
+
+use sbs::scheduler::decode::{lex_less, schedule_batch, DecodeSchedConfig};
+use sbs::scheduler::interval::{IntervalConfig, IntervalController};
+use sbs::scheduler::pbaa::{allocate, PbaaConfig};
+use sbs::scheduler::prefix::{PrefixCacheModel, RadixTree};
+use sbs::scheduler::state::DpState;
+use sbs::scheduler::types::{DpUnitId, Request};
+use sbs::testing::check;
+use sbs::util::stats::Iqr;
+use sbs::util::Rng;
+
+fn gen_requests(rng: &mut Rng, n: usize, max_len: u32) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            Request::new(
+                i as u64,
+                rng.range_u64(1, max_len as u64) as u32,
+                rng.range_u64(1, 512) as u32,
+                rng.uniform(0.0, 100.0),
+            )
+        })
+        .collect()
+}
+
+fn gen_pool(rng: &mut Rng, n: usize, c_chunk: u32) -> Vec<DpState> {
+    (0..n)
+        .map(|i| {
+            let mut d = DpState::new(DpUnitId::new(0, i as u32), c_chunk);
+            // Random pre-existing load.
+            d.on_dispatch(rng.range_u64(0, c_chunk as u64 / 2) as u32);
+            d
+        })
+        .collect()
+}
+
+#[test]
+fn pbaa_never_assigns_to_exhausted_unit() {
+    check("pbaa headroom precondition", 200, |g| {
+        let n_req = g.len(64);
+        let n_dp = g.len(16);
+        let reqs = gen_requests(&mut g.rng, n_req, 4000);
+        let mut dps = gen_pool(&mut g.rng, n_dp, 3072);
+        // Snapshot capacities before allocation.
+        let before: Vec<i64> = dps.iter().map(|d| d.c_avail()).collect();
+        let out = allocate(&PbaaConfig::default(), vec![], reqs, &mut dps, None);
+        // Every assignment went to a unit that had strictly positive
+        // headroom at its moment of assignment. Since capacity only
+        // decreases within a cycle, a unit that started ≤ 0 can never
+        // receive anything.
+        for a in &out.assignments {
+            let i = a.unit.dp as usize;
+            assert!(
+                before[i] > 0,
+                "unit {i} started with c_avail {} but got request {}",
+                before[i],
+                a.request.id
+            );
+        }
+    });
+}
+
+#[test]
+fn pbaa_conserves_requests() {
+    check("pbaa conservation", 200, |g| {
+        let n_req = g.len(64);
+        let n_pend = g.len(16);
+        let n_dp = g.len(8);
+        let reqs = gen_requests(&mut g.rng, n_req, 4000);
+        let pending = gen_requests(&mut g.rng, n_pend, 4000);
+        let n_total = reqs.len() + pending.len();
+        let mut dps = gen_pool(&mut g.rng, n_dp, 3072);
+        let out = allocate(&PbaaConfig::default(), pending, reqs, &mut dps, None);
+        assert_eq!(
+            out.assignments.len() + out.next_queue.len() + out.overloaded.len(),
+            n_total,
+            "requests must never be lost or duplicated"
+        );
+    });
+}
+
+#[test]
+fn pbaa_legacy_never_starved_by_new() {
+    check("pbaa FCFS priority", 150, |g| {
+        let n_leg = g.len(16);
+        let n_fresh = g.len(16);
+        let n_dp = g.len(8);
+        let mut legacy = gen_requests(&mut g.rng, n_leg, 2000);
+        for (i, r) in legacy.iter_mut().enumerate() {
+            r.id = 1_000_000 + i as u64; // tag
+        }
+        let fresh = gen_requests(&mut g.rng, n_fresh, 2000);
+        let mut dps = gen_pool(&mut g.rng, n_dp, 3072);
+        let out = allocate(&PbaaConfig::default(), legacy.clone(), fresh, &mut dps, None);
+        // If any legacy request failed to place, the capacity it saw was
+        // exhausted *before* any new arrival was considered: therefore no
+        // new request may occupy a unit that could instead have fit a
+        // failed legacy request of smaller-or-equal size... The checkable
+        // invariant: every unplaced legacy request is at least as long as
+        // the shortest remaining headroom would allow (placement is
+        // headroom-gated, not size-gated), so instead verify ordering:
+        // legacy requests appear in assignments before any new request of
+        // the same cycle touched the same unit's *initial* capacity.
+        // Pragmatic check: if some legacy went unplaced, total assigned
+        // tokens must have exhausted all units.
+        let legacy_unplaced = out
+            .next_queue
+            .iter()
+            .chain(out.overloaded.iter())
+            .any(|r| r.id >= 1_000_000);
+        if legacy_unplaced {
+            assert!(
+                dps.iter().all(|d| d.c_avail() <= 0),
+                "legacy unplaced while headroom remained: {:?}",
+                dps.iter().map(|d| d.c_avail()).collect::<Vec<_>>()
+            );
+        }
+    });
+}
+
+#[test]
+fn alg3_lexicographic_choice_is_minimal() {
+    check("alg3 lex minimality", 200, |g| {
+        let n_dp = 1 + g.len(32);
+        let mut dps: Vec<DpState> = (0..n_dp)
+            .map(|i| {
+                let mut d = DpState::new(DpUnitId::new(0, i as u32), 0);
+                d.batch = g.rng.range_u64(0, 50) as u32;
+                d.kv_tokens = g.rng.range_u64(0, 200_000);
+                d
+            })
+            .collect();
+        let snapshot: Vec<(u32, u64)> = dps.iter().map(|d| (d.batch, d.kv_tokens)).collect();
+        let kvs: Vec<f64> = snapshot.iter().map(|s| s.1 as f64).collect();
+        let threshold = Iqr::of(&kvs).outlier_threshold(1.5);
+
+        let req = Request::new(0, 1000, 100, 0.0);
+        let out = schedule_batch(&DecodeSchedConfig::default(), vec![req], &mut dps);
+        let chosen = out[0].unit.dp as usize;
+
+        // The chosen unit must be lexicographically minimal among the
+        // units within the IQR threshold (or among all if all masked).
+        let safe: Vec<usize> = (0..n_dp)
+            .filter(|&i| snapshot[i].1 as f64 <= threshold)
+            .collect();
+        let candidates = if safe.is_empty() {
+            (0..n_dp).collect::<Vec<_>>()
+        } else {
+            safe
+        };
+        assert!(candidates.contains(&chosen), "chosen unit must be unmasked");
+        for &c in &candidates {
+            let a = (snapshot[chosen].0, snapshot[chosen].1);
+            let b = (snapshot[c].0, snapshot[c].1);
+            assert!(a <= b || !lex_strict_less(b, a), "not minimal: chose {a:?} over {b:?}");
+        }
+    });
+}
+
+fn lex_strict_less(a: (u32, u64), b: (u32, u64)) -> bool {
+    a.0 < b.0 || (a.0 == b.0 && a.1 < b.1)
+}
+
+#[test]
+fn alg3_state_updates_are_exact() {
+    check("alg3 bookkeeping", 150, |g| {
+        let n_dp = 1 + g.len(16);
+        let n_req = g.len(64);
+        let mut dps: Vec<DpState> = (0..n_dp)
+            .map(|i| DpState::new(DpUnitId::new(0, i as u32), 0))
+            .collect();
+        let reqs = gen_requests(&mut g.rng, n_req, 8000);
+        let total_len: u64 = reqs.iter().map(|r| r.total_len() as u64).sum();
+        let out = schedule_batch(&DecodeSchedConfig::default(), reqs, &mut dps);
+        assert_eq!(out.len(), n_req, "every request placed");
+        let batch_sum: u32 = dps.iter().map(|d| d.batch).sum();
+        let kv_sum: u64 = dps.iter().map(|d| d.kv_tokens).sum();
+        assert_eq!(batch_sum as usize, n_req);
+        assert_eq!(kv_sum, total_len);
+    });
+}
+
+#[test]
+fn alg3_balances_batch_sizes_within_one() {
+    check("alg3 batch balance (uniform lengths)", 100, |g| {
+        let n_dp = 1 + g.len(16);
+        let n_req = g.len(128);
+        let mut dps: Vec<DpState> = (0..n_dp)
+            .map(|i| DpState::new(DpUnitId::new(0, i as u32), 0))
+            .collect();
+        // Identical lengths: batch counts must end within 1 of each other.
+        let reqs: Vec<Request> = (0..n_req).map(|i| Request::new(i as u64, 100, 10, 0.0)).collect();
+        schedule_batch(&DecodeSchedConfig::default(), reqs, &mut dps);
+        let min = dps.iter().map(|d| d.batch).min().unwrap();
+        let max = dps.iter().map(|d| d.batch).max().unwrap();
+        assert!(max - min <= 1, "batch spread {min}..{max}");
+    });
+}
+
+#[test]
+fn interval_always_positive_and_bounded() {
+    check("Alg1 interval bounds", 200, |g| {
+        let n = 1 + g.rng.index(64) as u32;
+        let mut c = IntervalController::new(IntervalConfig::default(), n);
+        let mut max_sample: f64 = IntervalConfig::default().t_default;
+        for _ in 0..g.len(200) {
+            let t = g.rng.uniform(0.001, 5.0);
+            max_sample = max_sample.max(t);
+            c.on_end_forward(t);
+            assert!(c.i_opt() > 0.0);
+            // I_opt can never exceed the largest plausible cycle time.
+            assert!(c.i_opt() <= (max_sample + 1.0) / 1.0);
+        }
+    });
+}
+
+#[test]
+fn radix_tree_match_is_consistent_with_inserts() {
+    check("radix tree consistency", 150, |g| {
+        let mut tree = RadixTree::new(u64::MAX);
+        let mut inserted: Vec<Vec<u32>> = Vec::new();
+        for _ in 0..g.len(20) {
+            let len = 1 + g.rng.index(64);
+            let seq: Vec<u32> = if !inserted.is_empty() && g.rng.chance(0.5) {
+                // Extend an existing sequence (shared prefix).
+                let base = &inserted[g.rng.index(inserted.len())];
+                let keep = 1 + g.rng.index(base.len());
+                let mut s = base[..keep].to_vec();
+                for _ in 0..g.rng.index(32) {
+                    s.push(g.rng.next_u64() as u32);
+                }
+                s
+            } else {
+                (0..len).map(|_| g.rng.next_u64() as u32).collect()
+            };
+            tree.insert(&seq);
+            inserted.push(seq);
+        }
+        // Every inserted sequence matches fully.
+        for s in &inserted {
+            assert_eq!(tree.match_prefix(s) as usize, s.len());
+        }
+    });
+}
+
+#[test]
+fn prefix_cache_hit_never_exceeds_request_prefix() {
+    check("len_hit bounds", 150, |g| {
+        let units = 1 + g.len(8);
+        let mut cache = PrefixCacheModel::new(units, u64::MAX);
+        for _ in 0..g.len(30) {
+            let unit = g.rng.index(units);
+            let group = g.rng.range_u64(0, 8);
+            let len = 1 + g.rng.index(512) as u32;
+            let hit_before = cache.len_hit(unit, group, len);
+            assert!(hit_before <= len);
+            cache.admit(unit, group, len);
+            let hit_after = cache.len_hit(unit, group, len);
+            assert_eq!(hit_after, len, "admit must make the prefix fully hot");
+        }
+    });
+}

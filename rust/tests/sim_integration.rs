@@ -1,0 +1,183 @@
+//! Integration tests: scheduler × cluster simulator — the paper's
+//! qualitative claims must hold as invariants of the composed system.
+
+use sbs::cluster::sim::{DecodePlacement, SchedMode, SimConfig, Simulation};
+use sbs::config;
+use sbs::scheduler::baseline::ImmediatePolicy;
+use sbs::scheduler::staggered::StaggeredConfig;
+use sbs::workload::{LengthDist, PrefixSpec, WorkloadSpec};
+
+fn quick(load_qps: f64, staggered: bool, seed: u64) -> SimConfig {
+    let mut cfg = config::fig6a(1.0, staggered, seed);
+    cfg.workload = WorkloadSpec::paper_short(load_qps, 40.0, seed);
+    cfg.warmup = 8.0;
+    cfg
+}
+
+#[test]
+fn all_requests_complete_under_both_schedulers() {
+    for staggered in [true, false] {
+        let r = Simulation::run(&quick(60.0, staggered, 3));
+        assert_eq!(r.completed, r.offered, "staggered={staggered}");
+        assert_eq!(r.report.rejected, 0);
+    }
+}
+
+#[test]
+fn sbs_eliminates_device_side_queueing() {
+    // §3.2: the core mechanism. Device-side wait under SBS must be an
+    // order of magnitude below the immediate baseline at moderate load.
+    let sbs = Simulation::run(&quick(100.0, true, 5));
+    let imm = Simulation::run(&quick(100.0, false, 5));
+    let (ds, di) = (
+        sbs.report.device_queue.mean(),
+        imm.report.device_queue.mean(),
+    );
+    assert!(
+        ds < di / 3.0,
+        "device queue: SBS {ds:.4}s vs immediate {di:.4}s"
+    );
+}
+
+#[test]
+fn sbs_improves_mean_ttft_at_moderate_load() {
+    let sbs = Simulation::run(&quick(100.0, true, 7));
+    let imm = Simulation::run(&quick(100.0, false, 7));
+    let (ts, ti) = (sbs.report.ttft.mean(), imm.report.ttft.mean());
+    assert!(
+        ts < ti,
+        "TTFT: SBS {:.1}ms vs immediate {:.1}ms",
+        ts * 1e3,
+        ti * 1e3
+    );
+}
+
+#[test]
+fn sbs_reduces_straggler_waste() {
+    let sbs = Simulation::run(&quick(100.0, true, 9));
+    let imm = Simulation::run(&quick(100.0, false, 9));
+    assert!(
+        sbs.straggler_waste_s < imm.straggler_waste_s,
+        "waste: SBS {:.1} vs immediate {:.1} DP-s",
+        sbs.straggler_waste_s,
+        imm.straggler_waste_s
+    );
+}
+
+#[test]
+fn iqr_placement_tightens_kv_dispersion() {
+    let mut base = config::fig7(30.0, false, 11);
+    base.workload.duration = 120.0;
+    base.warmup = 40.0;
+    let mut sbs = base.clone();
+    sbs.decode = DecodePlacement::IqrLex(Default::default());
+    let rb = Simulation::run(&base);
+    let rs = Simulation::run(&sbs);
+    let (_, sigma_b) = rb.kv_band();
+    let (_, sigma_s) = rs.kv_band();
+    assert!(
+        sigma_s < sigma_b,
+        "KV σ: IQR {sigma_s:.0} vs random {sigma_b:.0}"
+    );
+}
+
+#[test]
+fn flow_control_engages_beyond_saturation() {
+    // Far beyond capacity the staggered scheduler must shed load rather
+    // than queue unboundedly.
+    let mut cfg = quick(400.0, true, 13);
+    cfg.workload.duration = 30.0;
+    let r = Simulation::run(&cfg);
+    assert!(r.report.rejected > 0, "expected rejections at 400 QPS");
+    // Survivor TTFT stays bounded (the point of overload protection).
+    assert!(r.report.ttft.percentile(99.0) < 10.0);
+}
+
+#[test]
+fn cache_aware_pbaa_cuts_effective_prefill() {
+    let mk = |aware: bool| {
+        let mut cfg = quick(80.0, true, 17);
+        cfg.workload.prefix = Some(PrefixSpec {
+            groups: 8,
+            zipf_s: 1.2,
+            prefix_len: LengthDist::Uniform { lo: 256, hi: 900 },
+            participation: 0.9,
+        });
+        if let SchedMode::Staggered(sc) = &mut cfg.mode {
+            sc.pbaa.cache_aware = aware;
+        }
+        Simulation::run(&cfg)
+    };
+    let cold = mk(false);
+    let warm = mk(true);
+    // Same offered tokens; cache hits mean fewer computed prefill tokens.
+    assert!(
+        warm.report.throughput.prefill_tokens < cold.report.throughput.prefill_tokens,
+        "computed prefill: warm {} vs cold {}",
+        warm.report.throughput.prefill_tokens,
+        cold.report.throughput.prefill_tokens
+    );
+}
+
+#[test]
+fn static_interval_underperforms_adaptive_when_miscalibrated() {
+    let mk = |adaptive: bool| {
+        let mut cfg = quick(100.0, true, 19);
+        if let SchedMode::Staggered(StaggeredConfig { interval, .. }) = &mut cfg.mode {
+            interval.adaptive = adaptive;
+            interval.t_default = 1.2; // 3–4× the true pass time
+        }
+        Simulation::run(&cfg)
+    };
+    let adaptive = mk(true);
+    let fixed = mk(false);
+    assert!(
+        adaptive.report.ttft.mean() < fixed.report.ttft.mean(),
+        "adaptive {:.1}ms vs static {:.1}ms",
+        adaptive.report.ttft.mean() * 1e3,
+        fixed.report.ttft.mean() * 1e3
+    );
+}
+
+#[test]
+fn deterministic_replay_is_bit_exact() {
+    let cfg = quick(60.0, true, 21);
+    let trace = cfg.workload.generate();
+    let a = Simulation::run_trace(&cfg, trace.clone());
+    let b = Simulation::run_trace(&cfg, trace);
+    assert_eq!(a.prefill_passes, b.prefill_passes);
+    assert_eq!(a.decode_steps, b.decode_steps);
+    assert!((a.report.ttft.mean() - b.report.ttft.mean()).abs() < 1e-15);
+}
+
+#[test]
+fn jsq_beats_round_robin_for_immediate_dispatch() {
+    // Sanity on the baselines themselves: state-aware immediate policies
+    // should not be worse than blind RR.
+    let rr = Simulation::run(&{
+        let mut c = quick(120.0, false, 23);
+        c.mode = SchedMode::Immediate(ImmediatePolicy::RoundRobin);
+        c
+    });
+    let jsq = Simulation::run(&{
+        let mut c = quick(120.0, false, 23);
+        c.mode = SchedMode::Immediate(ImmediatePolicy::JoinShortestQueue);
+        c
+    });
+    assert!(jsq.report.ttft.mean() <= rr.report.ttft.mean() * 1.15);
+}
+
+#[test]
+fn watchdog_preserves_liveness_under_signal_loss() {
+    // §4.1.2 safety path at system level: with 25% of EndForward signals
+    // silently dropped, the watchdog's forced resets must keep the
+    // cluster serving — every request still completes.
+    let mut cfg = quick(80.0, true, 31);
+    cfg.fault_lose_endforward = 0.25;
+    let r = Simulation::run(&cfg);
+    assert!(r.lost_signals > 0, "fault injection must actually fire");
+    assert_eq!(r.completed, r.offered, "liveness under signal loss");
+    // Latency degrades but stays bounded (graceful degradation).
+    let healthy = Simulation::run(&quick(80.0, true, 31));
+    assert!(r.report.ttft.mean() < healthy.report.ttft.mean() * 25.0);
+}
