@@ -8,7 +8,7 @@
 //! `cargo run --release --example serve_cluster`
 //! (SBS_E2E_REQUESTS / SBS_E2E_MAXNEW env knobs; defaults 8 / 8.)
 
-use sbs::cluster::workers::{Job, RealCluster, RealClusterConfig, RealSchedMode};
+use sbs::cluster::workers::{EngineSpec, Job, RealCluster, RealClusterConfig, RealSchedMode};
 use sbs::engine::tokenizer;
 use sbs::metrics::ServingReport;
 use sbs::runtime::artifacts_dir;
@@ -23,10 +23,12 @@ fn run_mode(mode: RealSchedMode, n: u32, max_new: u32) -> anyhow::Result<Serving
         n_prefill: 2,
         decode_batch: 4,
         mode,
-        artifacts: artifacts_dir(),
+        engine: EngineSpec::Pjrt {
+            artifacts: artifacts_dir(),
+        },
         ..Default::default()
     };
-    let mut cluster = RealCluster::start(cfg)?;
+    let cluster = RealCluster::start(cfg)?;
     for i in 0..n {
         let prompt = tokenizer::encode(&format!(
             "[session {i}] Summarize the effect of staggered batch \

@@ -13,7 +13,9 @@ use sbs::cluster::sim::{DecodePlacement, SchedMode, Simulation};
 use sbs::config;
 use sbs::scheduler::baseline::ImmediatePolicy;
 use sbs::scheduler::decode::DecodeSchedConfig;
-use sbs::scheduler::staggered::{SchedulerAction, SchedulerEvent, StaggeredConfig, StaggeredScheduler};
+use sbs::scheduler::staggered::{
+    SchedulerAction, SchedulerEvent, StaggeredConfig, StaggeredScheduler,
+};
 use sbs::scheduler::types::Request;
 use sbs::workload::{LengthDist, PrefixSpec};
 
@@ -62,7 +64,10 @@ fn main() {
         ),
         (
             "no outlier mask",
-            DecodePlacement::IqrLex(DecodeSchedConfig { mask_outliers: false, ..Default::default() }),
+            DecodePlacement::IqrLex(DecodeSchedConfig {
+                mask_outliers: false,
+                ..Default::default()
+            }),
         ),
         (
             "no pre-sort",

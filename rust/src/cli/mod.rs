@@ -89,7 +89,12 @@ impl Command {
     }
 
     /// Add a value-taking option.
-    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: Option<&'static str>,
+    ) -> Self {
         self.opts.push(OptSpec {
             name,
             help,

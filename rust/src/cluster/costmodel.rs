@@ -58,7 +58,10 @@ impl PrefillCostModel {
     pub fn pass_time(&self, loads: &[DpPassLoad]) -> f64 {
         let worst = loads
             .iter()
-            .map(|l| self.s_token * l.tokens as f64 + self.s_attn * l.tokens as f64 * l.mean_ctx / 1024.0)
+            .map(|l| {
+                self.s_token * l.tokens as f64
+                    + self.s_attn * l.tokens as f64 * l.mean_ctx / 1024.0
+            })
             .fold(0.0_f64, f64::max);
         self.t_sync + worst
     }
@@ -68,7 +71,10 @@ impl PrefillCostModel {
     pub fn straggler_waste(&self, loads: &[DpPassLoad]) -> f64 {
         let per: Vec<f64> = loads
             .iter()
-            .map(|l| self.s_token * l.tokens as f64 + self.s_attn * l.tokens as f64 * l.mean_ctx / 1024.0)
+            .map(|l| {
+                self.s_token * l.tokens as f64
+                    + self.s_attn * l.tokens as f64 * l.mean_ctx / 1024.0
+            })
             .collect();
         let worst = per.iter().copied().fold(0.0_f64, f64::max);
         per.iter().map(|t| worst - t).sum()

@@ -439,7 +439,13 @@ impl Simulation {
         }
     }
 
-    fn on_deliver(&mut self, instance: u32, assignments: Vec<Assignment>, _dispatched_at: f64, now: f64) {
+    fn on_deliver(
+        &mut self,
+        instance: u32,
+        assignments: Vec<Assignment>,
+        _dispatched_at: f64,
+        now: f64,
+    ) {
         for a in &assignments {
             let i = a.request.id as usize;
             let eff = a.request.input_tokens - a.cached_tokens;
@@ -514,7 +520,8 @@ impl Simulation {
                 if out <= 1 {
                     self.complete_request(i, now, 1);
                 } else {
-                    let transfer = self.cfg.kv_transfer.transfer_time(self.requests[i].input_tokens);
+                    let transfer =
+                        self.cfg.kv_transfer.transfer_time(self.requests[i].input_tokens);
                     self.q.push(now + transfer, Ev::KvReady(i));
                 }
             }

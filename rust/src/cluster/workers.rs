@@ -1,5 +1,6 @@
 //! Threaded *real* mini-cluster: the same SBS control plane driving
-//! actual PJRT forward passes (no simulation on this path).
+//! actual engine forward passes (no discrete-event simulation on this
+//! path).
 //!
 //! Topology: `n_prefill` prefill workers (one gated engine thread each —
 //! DP=1 per instance; sub-instance DP balancing is exercised at scale in
@@ -8,13 +9,32 @@
 //! receiving real `EndForward` signals over channels and arming real
 //! timers via `recv_timeout` — the end-to-end proof that L3, L2 and L1
 //! compose.
+//!
+//! ## Completion path (concurrent frontend architecture)
+//!
+//! Submission and completion routing are split: any number of frontend
+//! threads hold a cloned [`ClusterHandle`] and submit concurrently, while
+//! a dedicated **router** thread fans worker events out to per-job update
+//! channels. Workers publish every generated token as a [`JobUpdate`], so
+//! a streaming frontend observes TTFT on the wire the moment prefill
+//! completes — not after the full generation. The
+//! [`AdmissionController`] (Algorithm 2 phase 3) guards
+//! [`ClusterHandle::try_submit`]: overload surfaces as [`Admission::Busy`]
+//! instead of unbounded queueing.
+//!
+//! Engines are built per-thread from an [`EngineSpec`] — either real PJRT
+//! (artifacts + `pjrt` feature) or the sleep-based mock, which makes the
+//! whole stack runnable on a bare checkout.
 
+use crate::engine::mock::{MockEngine, MockEngineConfig};
 use crate::engine::sampler::Sampling;
-use crate::engine::{MiniEngine, PrefillOutcome};
+use crate::engine::{EngineBackend, MiniEngine, PrefillOutcome};
 use crate::metrics::{RequestMetrics, ServingReport};
 use crate::runtime::Runtime;
-use std::path::PathBuf;
 use crate::scheduler::baseline::{ImmediatePolicy, ImmediateScheduler};
+use crate::scheduler::flow::{AdmissionController, AdmissionDecision, FlowPolicy};
+use crate::scheduler::interval::IntervalConfig;
+use crate::scheduler::pbaa::PbaaConfig;
 use crate::scheduler::staggered::{
     SchedulerAction, SchedulerEvent, StaggeredConfig, StaggeredScheduler,
 };
@@ -22,10 +42,12 @@ use crate::scheduler::types::Request;
 use crate::util::{Clock, RealClock};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Control-plane choice for the real cluster.
 #[derive(Debug, Clone)]
@@ -36,12 +58,99 @@ pub enum RealSchedMode {
     Immediate(ImmediatePolicy),
 }
 
+/// How worker threads execute forward passes.
+#[derive(Debug, Clone)]
+pub enum EngineSpec {
+    /// Real PJRT engines loading AOT artifacts from this directory (each
+    /// worker thread loads its own client — PJRT handles are not `Send`,
+    /// mirroring the process-per-instance deployment model). Requires the
+    /// `pjrt` feature.
+    Pjrt {
+        /// Artifact directory (`make artifacts`).
+        artifacts: PathBuf,
+    },
+    /// Sleep-based mock engines: no artifacts, no `xla`, but real
+    /// wall-clock contention (CI / loadgen / integration tests).
+    Mock(MockEngineConfig),
+}
+
+#[derive(Clone, Copy)]
+enum EngineRole {
+    Prefill,
+    Decode,
+}
+
+impl EngineSpec {
+    /// Build one engine for `role` on the calling thread.
+    fn build(
+        &self,
+        role: EngineRole,
+        decode_batch: u32,
+        sampling: Sampling,
+        seed: u64,
+    ) -> Result<Box<dyn EngineBackend>> {
+        match self {
+            EngineSpec::Pjrt { artifacts } => {
+                let kinds: &[&str] = match role {
+                    EngineRole::Prefill => &["prefill", "decode"],
+                    EngineRole::Decode => &["decode"],
+                };
+                let rt = Runtime::load_filtered(artifacts, Some(kinds)).map(Arc::new)?;
+                let batch = match role {
+                    // Prefill workers never decode; any compiled batch
+                    // variant satisfies the engine's constructor.
+                    EngineRole::Prefill => rt
+                        .decode_batches()
+                        .first()
+                        .copied()
+                        .ok_or_else(|| anyhow!("no compiled decode variants"))?,
+                    EngineRole::Decode => decode_batch,
+                };
+                Ok(Box::new(MiniEngine::new(rt, batch, sampling, seed)?))
+            }
+            EngineSpec::Mock(cfg) => {
+                let batch = match role {
+                    EngineRole::Prefill => 1,
+                    EngineRole::Decode => decode_batch,
+                };
+                Ok(Box::new(MockEngine::new(*cfg, batch, seed)))
+            }
+        }
+    }
+}
+
+/// Frontend admission-control knobs (see
+/// [`crate::scheduler::flow::AdmissionController`]).
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Maximum jobs in flight (queued + executing) before `BUSY`.
+    pub max_inflight: u64,
+    /// Reject-only or throttling behaviour after overload.
+    pub policy: FlowPolicy,
+    /// Fraction of new arrivals shed during a throttle cool-down.
+    pub shed_fraction: f64,
+    /// Cool-down duration, seconds.
+    pub cooldown: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            max_inflight: 256,
+            policy: FlowPolicy::Throttle,
+            shed_fraction: 0.25,
+            cooldown: 1.0,
+        }
+    }
+}
+
 /// Real-cluster configuration.
 #[derive(Debug, Clone)]
 pub struct RealClusterConfig {
     /// Prefill instances (one engine thread each).
     pub n_prefill: u32,
-    /// Decode batch size (one decode engine; must be a compiled variant).
+    /// Decode batch size (one decode engine; must be a compiled variant
+    /// in PJRT mode).
     pub decode_batch: u32,
     /// Scheduler-visible per-instance token budget per dispatch cycle.
     pub c_chunk: u32,
@@ -51,10 +160,10 @@ pub struct RealClusterConfig {
     pub sampling: Sampling,
     /// RNG seed.
     pub seed: u64,
-    /// Artifact directory (each worker thread loads its own PJRT client —
-    /// the xla crate's handles are not Send, mirroring the
-    /// process-per-instance deployment model).
-    pub artifacts: PathBuf,
+    /// Execution backend for the worker threads.
+    pub engine: EngineSpec,
+    /// Frontend admission control.
+    pub admission: AdmissionConfig,
 }
 
 impl Default for RealClusterConfig {
@@ -63,9 +172,16 @@ impl Default for RealClusterConfig {
         // controller accordingly so the watchdog doesn't misfire during
         // the first pass, and scale N_limit to real pass cadence (cycles
         // here are seconds, not the simulator's ~100 ms).
-        let mut sc = StaggeredConfig::default();
-        sc.interval.t_default = 1.5;
-        sc.pbaa.n_limit = 10_000;
+        let sc = StaggeredConfig {
+            interval: IntervalConfig {
+                t_default: 1.5,
+                ..Default::default()
+            },
+            pbaa: PbaaConfig {
+                n_limit: 10_000,
+                ..Default::default()
+            },
+        };
         RealClusterConfig {
             n_prefill: 2,
             decode_batch: 4,
@@ -73,14 +189,18 @@ impl Default for RealClusterConfig {
             mode: RealSchedMode::Staggered(sc),
             sampling: Sampling::Greedy,
             seed: 7,
-            artifacts: PathBuf::from("artifacts"),
+            engine: EngineSpec::Pjrt {
+                artifacts: PathBuf::from("artifacts"),
+            },
+            admission: AdmissionConfig::default(),
         }
     }
 }
 
 /// One submitted generation job.
 pub struct Job {
-    /// Unique id.
+    /// Unique id (use [`ClusterHandle::next_id`] unless the caller manages
+    /// its own id space end to end).
     pub id: u64,
     /// Prompt token ids.
     pub prompt: Vec<i32>,
@@ -97,6 +217,52 @@ pub struct Completion {
     pub tokens: Vec<i32>,
     /// Lifecycle metrics (timestamps on the real clock).
     pub metrics: RequestMetrics,
+}
+
+/// Streaming per-job event delivered on the channel returned by
+/// [`ClusterHandle::try_submit`].
+#[derive(Debug, Clone)]
+pub enum JobUpdate {
+    /// One generated token. `index == 0` is the first token — receiving it
+    /// is the wire-observable TTFT moment.
+    Token {
+        /// Token id.
+        token: i32,
+        /// 0-based position in the generation.
+        index: u32,
+        /// Cluster-clock timestamp, seconds.
+        t: f64,
+    },
+    /// Terminal: generation finished.
+    Done(Completion),
+    /// Terminal: dropped by scheduler-side flow control or an engine
+    /// failure; no further updates will arrive.
+    Rejected {
+        /// Job id.
+        id: u64,
+    },
+}
+
+/// Why [`ClusterHandle::try_submit`] refused a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BusyReason {
+    /// In-flight window is full (hard overload).
+    QueueFull,
+    /// Shed during a post-overload throttle cool-down.
+    Throttled,
+}
+
+/// Result of a flow-controlled submission.
+pub enum Admission {
+    /// Admitted: stream updates from `updates`.
+    Accepted {
+        /// Assigned job id.
+        id: u64,
+        /// Per-job update stream (tokens, then one terminal event).
+        updates: Receiver<JobUpdate>,
+    },
+    /// Refused by admission control — reply `BUSY` upstream.
+    Busy(BusyReason),
 }
 
 enum SchedMsg {
@@ -120,35 +286,149 @@ enum DecodeMsg {
     Stop,
 }
 
-/// The running cluster: submit jobs, then `finish()` to collect results.
-pub struct RealCluster {
+enum RouterMsg {
+    Register { id: u64, tx: Sender<JobUpdate> },
+    Update { id: u64, update: JobUpdate },
+    Shutdown,
+}
+
+#[derive(Default)]
+struct Ledger {
+    /// Jobs submitted but not yet terminal.
+    inflight: u64,
+    /// Finished generations awaiting collection.
+    completions: Vec<Completion>,
+    /// Scheduler-side flow-control rejections observed by the router.
+    rejected: u64,
+    /// Ids of rejected jobs, so `wait_for` can fail fast instead of
+    /// blocking out its timeout.
+    rejected_ids: Vec<u64>,
+}
+
+struct ClusterShared {
+    clock: RealClock,
+    ledger: Mutex<Ledger>,
+    done_cv: Condvar,
+    admission: Mutex<AdmissionController>,
+    next_id: AtomicU64,
+}
+
+/// Cloneable, thread-safe submission handle: the concurrent frontend's
+/// view of the cluster. All clones share one ledger, admission controller
+/// and id space.
+#[derive(Clone)]
+pub struct ClusterHandle {
     to_sched: Sender<SchedMsg>,
-    completions: Receiver<Completion>,
+    router: Sender<RouterMsg>,
+    shared: Arc<ClusterShared>,
+}
+
+// mpsc senders are Send but not Sync; each frontend thread owns a clone.
+impl ClusterHandle {
+    /// Seconds since the cluster clock's epoch.
+    pub fn now_s(&self) -> f64 {
+        self.shared.clock.now_s()
+    }
+
+    /// Allocate a fresh job id (shared atomic counter).
+    pub fn next_id(&self) -> u64 {
+        self.shared.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Jobs submitted but not yet completed or rejected.
+    pub fn inflight(&self) -> u64 {
+        self.shared.ledger.lock().unwrap().inflight
+    }
+
+    /// Requests refused by frontend admission control so far.
+    pub fn admission_rejected(&self) -> u64 {
+        self.shared.admission.lock().unwrap().rejected()
+    }
+
+    /// Flow-controlled streaming submission — the serving-frontend path.
+    /// Consults the [`AdmissionController`] first: at capacity (or while
+    /// shedding during a cool-down) the request never reaches the
+    /// scheduler and the caller must reply `BUSY`.
+    pub fn try_submit(&self, prompt: Vec<i32>, max_new: u32) -> Admission {
+        let now = self.now_s();
+        {
+            // Decide and reserve the in-flight slot under the ledger lock
+            // so a concurrent burst cannot over-admit past the window
+            // (lock order ledger → admission, as in `finish`).
+            let mut led = self.shared.ledger.lock().unwrap();
+            let mut adm = self.shared.admission.lock().unwrap();
+            let probe = Request::new(u64::MAX, prompt.len() as u32, max_new, now);
+            match adm.try_admit(now, led.inflight, probe) {
+                AdmissionDecision::Admit => led.inflight += 1,
+                AdmissionDecision::RejectQueueFull => {
+                    return Admission::Busy(BusyReason::QueueFull)
+                }
+                AdmissionDecision::Shed => return Admission::Busy(BusyReason::Throttled),
+            }
+        }
+        let id = self.next_id();
+        // Registration is sent before the scheduler submission, so the
+        // router is guaranteed to see `Register` before any worker update
+        // for this id (the update is causally after the submit).
+        let (tx, rx) = channel();
+        let _ = self.router.send(RouterMsg::Register { id, tx });
+        self.send_job(Job {
+            id,
+            prompt,
+            max_new,
+        });
+        Admission::Accepted { id, updates: rx }
+    }
+
+    /// Fire-and-forget submission; the result lands in the cluster ledger
+    /// (collected by [`RealCluster::finish`] / [`RealCluster::wait_for`]).
+    pub fn submit(&self, job: Job) {
+        self.shared.ledger.lock().unwrap().inflight += 1;
+        self.send_job(job);
+    }
+
+    fn send_job(&self, job: Job) {
+        let _ = self.to_sched.send(SchedMsg::Submit(job, self.now_s()));
+    }
+}
+
+/// The running cluster: hand out [`ClusterHandle`]s to frontend threads,
+/// then [`RealCluster::finish`] to drain and collect the report.
+pub struct RealCluster {
+    handle: ClusterHandle,
     threads: Vec<JoinHandle<()>>,
-    clock: Arc<RealClock>,
-    submitted: u64,
-    collected: Vec<Completion>,
+    router_thread: Option<JoinHandle<()>>,
 }
 
 impl RealCluster {
-    /// Start scheduler + worker threads; each engine thread loads its own
-    /// runtime from `cfg.artifacts`.
+    /// Start router + scheduler + worker threads; each engine thread
+    /// builds its own backend from `cfg.engine`.
     pub fn start(cfg: RealClusterConfig) -> Result<RealCluster> {
-        let clock = Arc::new(RealClock::new());
-        let (to_sched, sched_rx) = channel::<SchedMsg>();
-        let (done_tx, completions) = channel::<Completion>();
+        let mut admission =
+            AdmissionController::new(cfg.admission.policy, cfg.admission.max_inflight);
+        admission.flow_mut().shed_fraction = cfg.admission.shed_fraction;
+        admission.flow_mut().cooldown = cfg.admission.cooldown;
+        let shared = Arc::new(ClusterShared {
+            clock: RealClock::new(),
+            ledger: Mutex::new(Ledger::default()),
+            done_cv: Condvar::new(),
+            admission: Mutex::new(admission),
+            next_id: AtomicU64::new(0),
+        });
 
+        let (to_sched, sched_rx) = channel::<SchedMsg>();
+        let (router_tx, router_rx) = channel::<RouterMsg>();
         let (decode_tx, decode_rx) = channel::<DecodeMsg>();
-        let (ready_tx, ready_rx) = channel::<()>();
+        let (ready_tx, ready_rx) = channel::<bool>();
         let mut threads = Vec::new();
         {
-            let clock = clock.clone();
-            let done_tx = done_tx.clone();
+            let spec = cfg.engine.clone();
+            let router = router_tx.clone();
+            let shared = shared.clone();
             let (sampling, batch, seed) = (cfg.sampling, cfg.decode_batch, cfg.seed);
-            let dir = cfg.artifacts.clone();
             let ready = ready_tx.clone();
             threads.push(std::thread::spawn(move || {
-                decode_worker(dir, batch, sampling, seed, decode_rx, done_tx, clock, ready);
+                decode_worker(spec, batch, sampling, seed, decode_rx, router, shared, ready);
             }));
         }
 
@@ -156,93 +436,168 @@ impl RealCluster {
         for i in 0..cfg.n_prefill {
             let (tx, rx) = channel::<PrefillMsg>();
             prefill_txs.push(tx);
-            let clock = clock.clone();
+            let spec = cfg.engine.clone();
             let to_sched = to_sched.clone();
             let decode_tx = decode_tx.clone();
-            let done_tx = done_tx.clone();
-            let dir = cfg.artifacts.clone();
+            let router = router_tx.clone();
+            let shared = shared.clone();
             let ready = ready_tx.clone();
             threads.push(std::thread::spawn(move || {
-                prefill_worker(i, dir, rx, to_sched, decode_tx, done_tx, clock, ready);
+                prefill_worker(i, spec, rx, to_sched, decode_tx, router, shared, ready);
             }));
         }
 
-        // Block until every engine thread has loaded its runtime: jobs
-        // submitted before readiness would charge artifact compilation to
-        // TTFT.
+        // Block until every engine thread has built its backend: jobs
+        // submitted before readiness would charge engine construction
+        // (e.g. PJRT artifact compilation) to TTFT. Workers report build
+        // failures explicitly so a misconfigured cluster fails fast
+        // instead of sitting out the timeout.
+        drop(ready_tx);
         for _ in 0..(cfg.n_prefill + 1) {
-            ready_rx
-                .recv_timeout(Duration::from_secs(600))
-                .map_err(|_| anyhow!("worker failed to become ready (artifacts built?)"))?;
+            match ready_rx.recv_timeout(Duration::from_secs(600)) {
+                Ok(true) => {}
+                Ok(false) => {
+                    return Err(anyhow!(
+                        "a worker failed to build its engine (see log; artifacts \
+                         built? `pjrt` feature enabled? or use the mock engine)"
+                    ))
+                }
+                Err(_) => return Err(anyhow!("worker failed to become ready (artifacts built?)")),
+            }
         }
         log::info!("all workers ready");
 
         {
             let cfg2 = cfg.clone();
-            let clock = clock.clone();
-            let done_tx = done_tx.clone();
+            let router = router_tx.clone();
+            let shared = shared.clone();
             threads.push(std::thread::spawn(move || {
-                scheduler_loop(cfg2, sched_rx, prefill_txs, decode_tx, done_tx, clock);
+                scheduler_loop(cfg2, sched_rx, prefill_txs, decode_tx, router, shared);
             }));
         }
+
+        let router_thread = {
+            let shared = shared.clone();
+            std::thread::spawn(move || router_loop(router_rx, shared))
+        };
+
         Ok(RealCluster {
-            to_sched,
-            completions,
+            handle: ClusterHandle {
+                to_sched,
+                router: router_tx,
+                shared,
+            },
             threads,
-            clock,
-            submitted: 0,
-            collected: Vec::new(),
+            router_thread: Some(router_thread),
         })
     }
 
+    /// A cloneable submission handle for frontend threads.
+    pub fn handle(&self) -> ClusterHandle {
+        self.handle.clone()
+    }
+
     /// Submit one generation job (arrival timestamped now).
-    pub fn submit(&mut self, job: Job) {
-        self.submitted += 1;
-        let _ = self.to_sched.send(SchedMsg::Submit(job, self.clock.now_s()));
+    pub fn submit(&self, job: Job) {
+        self.handle.submit(job);
     }
 
-    /// Block until the completion for `id` arrives (other completions are
-    /// stashed for `finish`). Used by the synchronous TCP frontend.
-    pub fn wait_for(&mut self, id: u64, timeout: Duration) -> Result<Completion> {
-        if let Some(i) = self.collected.iter().position(|c| c.id == id) {
-            return Ok(self.collected.swap_remove(i));
-        }
-        let deadline = std::time::Instant::now() + timeout;
+    /// Block until the completion for `id` arrives in the ledger (other
+    /// completions stay there for [`RealCluster::finish`]).
+    pub fn wait_for(&self, id: u64, timeout: Duration) -> Result<Completion> {
+        let deadline = Instant::now() + timeout;
+        let mut led = self.handle.shared.ledger.lock().unwrap();
         loop {
-            let left = deadline
-                .checked_duration_since(std::time::Instant::now())
-                .ok_or_else(|| anyhow!("timed out waiting for job {id}"))?;
-            let c = self
-                .completions
-                .recv_timeout(left)
-                .map_err(|_| anyhow!("timed out waiting for job {id}"))?;
-            if c.id == id {
-                return Ok(c);
+            if let Some(i) = led.completions.iter().position(|c| c.id == id) {
+                return Ok(led.completions.swap_remove(i));
             }
-            self.collected.push(c);
+            if led.rejected_ids.contains(&id) {
+                return Err(anyhow!("job {id} was rejected by flow control"));
+            }
+            let left = deadline
+                .checked_duration_since(Instant::now())
+                .ok_or_else(|| anyhow!("timed out waiting for job {id}"))?;
+            let (l, _) = self.handle.shared.done_cv.wait_timeout(led, left).unwrap();
+            led = l;
         }
     }
 
-    /// Wait for all submitted jobs, stop the cluster, and return the
-    /// completions plus an aggregate report.
+    /// Wait for every in-flight job to reach a terminal state, stop the
+    /// cluster, and return the remaining collected completions plus an
+    /// aggregate report (admission + flow-control rejections included).
     pub fn finish(mut self) -> Result<(Vec<Completion>, ServingReport)> {
-        let mut out = std::mem::take(&mut self.collected);
-        while (out.len() as u64) < self.submitted {
-            let c = self
-                .completions
-                .recv_timeout(Duration::from_secs(600))
-                .map_err(|_| anyhow!("timed out waiting for completions"))?;
-            out.push(c);
+        let shared = self.handle.shared.clone();
+        {
+            let mut led = shared.ledger.lock().unwrap();
+            while led.inflight > 0 {
+                let (l, timed_out) = shared
+                    .done_cv
+                    .wait_timeout(led, Duration::from_secs(600))
+                    .unwrap();
+                led = l;
+                if timed_out.timed_out() && led.inflight > 0 {
+                    return Err(anyhow!("timed out draining {} in-flight jobs", led.inflight));
+                }
+            }
         }
-        let _ = self.to_sched.send(SchedMsg::Drain);
-        for t in self.threads {
+        let _ = self.handle.to_sched.send(SchedMsg::Drain);
+        for t in std::mem::take(&mut self.threads) {
             let _ = t.join();
         }
+        // Workers are gone; stop the router explicitly (frontend handle
+        // clones may still be alive elsewhere, so channel-closure alone
+        // is not a reliable shutdown signal).
+        let _ = self.handle.router.send(RouterMsg::Shutdown);
+        if let Some(r) = self.router_thread.take() {
+            let _ = r.join();
+        }
+        let mut led = shared.ledger.lock().unwrap();
+        let out = std::mem::take(&mut led.completions);
         let mut report = ServingReport::new(0.0);
         for c in &out {
             report.absorb(&c.metrics);
         }
+        report.rejected = led.rejected + shared.admission.lock().unwrap().rejected();
         Ok((out, report))
+    }
+}
+
+/// Router thread: fans worker events out to per-job subscribers and keeps
+/// the shared ledger (in-flight count, completions, rejections) — the
+/// completion half of the submit/complete split.
+fn router_loop(rx: Receiver<RouterMsg>, shared: Arc<ClusterShared>) {
+    let mut subs: HashMap<u64, Sender<JobUpdate>> = HashMap::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            RouterMsg::Register { id, tx } => {
+                subs.insert(id, tx);
+            }
+            RouterMsg::Update { id, update } => {
+                let terminal = matches!(update, JobUpdate::Done(_) | JobUpdate::Rejected { .. });
+                if terminal {
+                    let mut led = shared.ledger.lock().unwrap();
+                    match &update {
+                        JobUpdate::Done(c) => led.completions.push(c.clone()),
+                        JobUpdate::Rejected { .. } => {
+                            led.rejected += 1;
+                            led.rejected_ids.push(id);
+                        }
+                        JobUpdate::Token { .. } => {}
+                    }
+                    led.inflight = led.inflight.saturating_sub(1);
+                    shared.done_cv.notify_all();
+                }
+                if let Some(tx) = subs.get(&id) {
+                    // Subscriber may have hung up (client disconnect) —
+                    // terminal accounting above already happened.
+                    let _ = tx.send(update);
+                }
+                if terminal {
+                    subs.remove(&id);
+                }
+            }
+            RouterMsg::Shutdown => break,
+        }
     }
 }
 
@@ -252,20 +607,23 @@ fn scheduler_loop(
     rx: Receiver<SchedMsg>,
     prefill_txs: Vec<Sender<PrefillMsg>>,
     decode_tx: Sender<DecodeMsg>,
-    done_tx: Sender<Completion>,
-    clock: Arc<RealClock>,
+    router: Sender<RouterMsg>,
+    shared: Arc<ClusterShared>,
 ) {
     let n = cfg.n_prefill;
     // Job payloads keyed by request id (the scheduler works on Requests).
     let mut jobs: HashMap<u64, (Job, f64)> = HashMap::new();
     let mut sbs = match &cfg.mode {
         RealSchedMode::Staggered(sc) => {
-            // Real-mode clamps: dispatch cycles here are seconds (PJRT
-            // passes), not the simulator's ~100 ms, so simulator-scale
-            // flow-control/watchdog defaults would misfire.
+            // PJRT-mode clamps: dispatch cycles there are seconds (CPU
+            // PJRT passes), not the simulator's ~100 ms, so simulator-
+            // scale flow-control/watchdog defaults would misfire. Mock
+            // passes are ~10 ms, so they keep the configured cadence.
             let mut sc = sc.clone();
-            sc.pbaa.n_limit = sc.pbaa.n_limit.max(10_000);
-            sc.interval.t_default = sc.interval.t_default.max(1.0);
+            if matches!(cfg.engine, EngineSpec::Pjrt { .. }) {
+                sc.pbaa.n_limit = sc.pbaa.n_limit.max(10_000);
+                sc.interval.t_default = sc.interval.t_default.max(1.0);
+            }
             Some(StaggeredScheduler::new(sc, n, 1, cfg.c_chunk))
         }
         RealSchedMode::Immediate(_) => None,
@@ -277,12 +635,12 @@ fn scheduler_loop(
     let mut next_timer: Option<f64> = None;
     let mut stop = false;
     while !stop {
-        let now = clock.now_s();
+        let now = shared.clock.now_s();
         let timeout = next_timer
             .map(|t| Duration::from_secs_f64((t - now).max(1e-4)))
             .unwrap_or(Duration::from_millis(50));
         let msg = rx.recv_timeout(timeout);
-        let now = clock.now_s();
+        let now = shared.clock.now_s();
         let mut actions = Vec::new();
         match msg {
             Ok(SchedMsg::Submit(job, t_arrive)) => {
@@ -339,8 +697,7 @@ fn scheduler_loop(
                         .filter_map(|a| jobs.remove(&a.request.id))
                         .collect();
                     if !work.is_empty() {
-                        let _ =
-                            prefill_txs[batch.instance as usize].send(PrefillMsg::Work(work));
+                        let _ = prefill_txs[batch.instance as usize].send(PrefillMsg::Work(work));
                     }
                 }
                 SchedulerAction::ArmTimer { at } => {
@@ -350,14 +707,13 @@ fn scheduler_loop(
                     });
                 }
                 SchedulerAction::Reject(r) => {
-                    // Surface the rejection as an (empty) completion so
-                    // callers waiting on this job don't hang.
+                    // Terminal rejection: route it so subscribers waiting
+                    // on this job observe it instead of hanging.
                     log::warn!("flow control rejected request {}", r.id);
                     jobs.remove(&r.id);
-                    let _ = done_tx.send(Completion {
+                    let _ = router.send(RouterMsg::Update {
                         id: r.id,
-                        tokens: Vec::new(),
-                        metrics: RequestMetrics::arrive(r.arrival, r.input_tokens),
+                        update: JobUpdate::Rejected { id: r.id },
                     });
                 }
                 SchedulerAction::Watchdog(w) => log::warn!("watchdog: {w:?}"),
@@ -371,47 +727,58 @@ fn scheduler_loop(
 }
 
 /// Prefill worker: gated, non-preemptive chunked prefill of each batch.
+/// Streams the first token through the router the moment prefill
+/// completes, so TTFT is observable before decode starts.
+#[allow(clippy::too_many_arguments)]
 fn prefill_worker(
     instance: u32,
-    dir: PathBuf,
+    spec: EngineSpec,
     rx: Receiver<PrefillMsg>,
     to_sched: Sender<SchedMsg>,
     decode_tx: Sender<DecodeMsg>,
-    done_tx: Sender<Completion>,
-    clock: Arc<RealClock>,
-    ready: Sender<()>,
+    router: Sender<RouterMsg>,
+    shared: Arc<ClusterShared>,
+    ready: Sender<bool>,
 ) {
-    let engine = match Runtime::load_filtered(&dir, Some(&["prefill", "decode"]))
-        .map(Arc::new)
-        .and_then(|rt| {
-            let b = rt.decode_batches()[0];
-            MiniEngine::new(rt, b, Sampling::Greedy, 1)
-        }) {
-        Ok(e) => e,
-        Err(e) => {
-            log::error!("prefill worker {instance}: {e:#}");
-            return;
-        }
-    };
-    let _ = ready.send(());
+    let mut engine =
+        match spec.build(EngineRole::Prefill, 0, Sampling::Greedy, 1 + instance as u64) {
+            Ok(e) => e,
+            Err(e) => {
+                log::error!("prefill worker {instance}: {e:#}");
+                let _ = ready.send(false);
+                return;
+            }
+        };
+    let _ = ready.send(true);
     while let Ok(PrefillMsg::Work(batch)) = rx.recv() {
         for (job, t_arrive) in batch {
-            let t_dispatch = clock.now_s();
+            let t_dispatch = shared.clock.now_s();
             match engine.prefill(&job.prompt) {
                 Ok(outcome) => {
-                    let t_first = clock.now_s();
+                    let t_first = shared.clock.now_s();
                     let mut m = RequestMetrics::arrive(t_arrive, job.prompt.len() as u32);
                     m.t_dispatch = t_dispatch;
                     m.t_exec_start = t_dispatch;
                     m.t_first_token = t_first;
                     let exec = outcome.exec_time;
+                    let _ = router.send(RouterMsg::Update {
+                        id: job.id,
+                        update: JobUpdate::Token {
+                            token: outcome.first_token,
+                            index: 0,
+                            t: t_first,
+                        },
+                    });
                     if job.max_new <= 1 {
                         m.t_done = t_first;
                         m.output_tokens = 1;
-                        let _ = done_tx.send(Completion {
+                        let _ = router.send(RouterMsg::Update {
                             id: job.id,
-                            tokens: vec![outcome.first_token],
-                            metrics: m,
+                            update: JobUpdate::Done(Completion {
+                                id: job.id,
+                                tokens: vec![outcome.first_token],
+                                metrics: m,
+                            }),
                         });
                     } else {
                         let _ = decode_tx.send(DecodeMsg::Admit {
@@ -426,34 +793,43 @@ fn prefill_worker(
                         t_measured: exec,
                     });
                 }
-                Err(e) => log::error!("prefill failed for job {}: {e:#}", job.id),
+                Err(e) => {
+                    log::error!("prefill failed for job {}: {e:#}", job.id);
+                    // Terminal failure — surface it so subscribers and the
+                    // ledger drain instead of hanging (the scheduler-side
+                    // watchdog recovers the instance's capacity state).
+                    let _ = router.send(RouterMsg::Update {
+                        id: job.id,
+                        update: JobUpdate::Rejected { id: job.id },
+                    });
+                }
             }
         }
     }
 }
 
-/// Decode worker: continuous batched stepping with slot admission.
+/// Decode worker: continuous batched stepping with slot admission. Every
+/// emitted token is streamed through the router.
+#[allow(clippy::too_many_arguments)]
 fn decode_worker(
-    dir: PathBuf,
+    spec: EngineSpec,
     batch: u32,
     sampling: Sampling,
     seed: u64,
     rx: Receiver<DecodeMsg>,
-    done_tx: Sender<Completion>,
-    clock: Arc<RealClock>,
-    ready: Sender<()>,
+    router: Sender<RouterMsg>,
+    shared: Arc<ClusterShared>,
+    ready: Sender<bool>,
 ) {
-    let mut engine = match Runtime::load_filtered(&dir, Some(&["decode"]))
-        .map(Arc::new)
-        .and_then(|rt| MiniEngine::new(rt, batch, sampling, seed))
-    {
+    let mut engine = match spec.build(EngineRole::Decode, batch, sampling, seed) {
         Ok(e) => e,
         Err(e) => {
             log::error!("decode worker: {e:#}");
+            let _ = ready.send(false);
             return;
         }
     };
-    let _ = ready.send(());
+    let _ = ready.send(true);
     struct Track {
         tokens: Vec<i32>,
         metrics: RequestMetrics,
@@ -461,6 +837,7 @@ fn decode_worker(
     let mut tracks: HashMap<u64, Track> = HashMap::new();
     let mut pending: Vec<DecodeMsg> = Vec::new();
     let mut stopping = false;
+    let mut failed = false;
     loop {
         // Admit as many pending sequences as there are free slots.
         let mut rest = Vec::new();
@@ -474,6 +851,10 @@ fn decode_worker(
                 } if engine.free_slots() > 0 => {
                     if let Err(e) = engine.admit(&outcome, max_new, id) {
                         log::error!("admit failed: {e:#}");
+                        let _ = router.send(RouterMsg::Update {
+                            id,
+                            update: JobUpdate::Rejected { id },
+                        });
                         continue;
                     }
                     tracks.insert(
@@ -490,16 +871,26 @@ fn decode_worker(
         pending = rest;
 
         // Pull new messages (non-blocking while active, blocking idle).
+        // A disconnected channel means the cluster is gone — treat it as
+        // Stop so the thread cannot spin forever.
         loop {
             let msg = if engine.active() > 0 || stopping {
                 match rx.try_recv() {
                     Ok(m) => m,
-                    Err(_) => break,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        stopping = true;
+                        break;
+                    }
                 }
             } else {
                 match rx.recv_timeout(Duration::from_millis(100)) {
                     Ok(m) => m,
-                    Err(_) => break,
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        stopping = true;
+                        break;
+                    }
                 }
             };
             match msg {
@@ -516,18 +907,29 @@ fn decode_worker(
         }
         match engine.step() {
             Ok((emissions, _t)) => {
-                let now = clock.now_s();
+                let now = shared.clock.now_s();
                 for e in emissions {
                     if let Some(tr) = tracks.get_mut(&e.request_id) {
                         tr.tokens.push(e.token);
+                        let _ = router.send(RouterMsg::Update {
+                            id: e.request_id,
+                            update: JobUpdate::Token {
+                                token: e.token,
+                                index: (tr.tokens.len() - 1) as u32,
+                                t: now,
+                            },
+                        });
                         if e.done {
                             let mut tr = tracks.remove(&e.request_id).unwrap();
                             tr.metrics.t_done = now;
                             tr.metrics.output_tokens = tr.tokens.len() as u32;
-                            let _ = done_tx.send(Completion {
+                            let _ = router.send(RouterMsg::Update {
                                 id: e.request_id,
-                                tokens: tr.tokens,
-                                metrics: tr.metrics,
+                                update: JobUpdate::Done(Completion {
+                                    id: e.request_id,
+                                    tokens: tr.tokens,
+                                    metrics: tr.metrics,
+                                }),
                             });
                         }
                     }
@@ -535,7 +937,39 @@ fn decode_worker(
             }
             Err(e) => {
                 log::error!("decode step failed: {e:#}");
+                // Terminalize everything this worker owns so streaming
+                // clients and the ledger drain instead of hanging.
+                for id in tracks.keys().copied().collect::<Vec<_>>() {
+                    let _ = router.send(RouterMsg::Update {
+                        id,
+                        update: JobUpdate::Rejected { id },
+                    });
+                }
+                for msg in pending.drain(..) {
+                    if let DecodeMsg::Admit { id, .. } = msg {
+                        let _ = router.send(RouterMsg::Update {
+                            id,
+                            update: JobUpdate::Rejected { id },
+                        });
+                    }
+                }
+                failed = true;
                 break;
+            }
+        }
+    }
+    if failed {
+        // The engine is dead but prefill workers may still admit: keep
+        // rejecting until the cluster stops so later jobs terminate too.
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                DecodeMsg::Admit { id, .. } => {
+                    let _ = router.send(RouterMsg::Update {
+                        id,
+                        update: JobUpdate::Rejected { id },
+                    });
+                }
+                DecodeMsg::Stop => break,
             }
         }
     }

@@ -1,0 +1,213 @@
+//! Dependency-free mock engine: the same slot/step/prefill contract as
+//! [`super::MiniEngine`], but forward passes are `thread::sleep`s sized by
+//! a small analytic cost model instead of PJRT executions.
+//!
+//! This is what makes the serving frontend, the load generator, CI smoke
+//! jobs and the concurrency integration tests runnable on a bare checkout
+//! — no `make artifacts`, no `xla` crate, but real wall-clock contention:
+//! the scheduler sees genuine `EndForward` timings and genuinely busy
+//! instances, so buffering/flow-control behaviour is exercised end to end.
+
+use super::{Emission, EngineBackend, PrefillOutcome};
+use crate::util::Rng;
+use anyhow::{anyhow, bail, Result};
+
+/// Cost model + shape knobs for the mock engine.
+#[derive(Debug, Clone, Copy)]
+pub struct MockEngineConfig {
+    /// Fixed per-prefill-pass overhead, seconds.
+    pub t_prefill_base: f64,
+    /// Marginal prefill cost per prompt token, seconds.
+    pub t_prefill_per_token: f64,
+    /// Cost of one batched decode step, seconds.
+    pub t_decode_step: f64,
+    /// Simulated chunk size (drives the reported pass count).
+    pub chunk: u32,
+    /// Multiplicative execution-time jitter in `[1-j, 1+j]`.
+    pub jitter: f64,
+}
+
+impl Default for MockEngineConfig {
+    fn default() -> Self {
+        MockEngineConfig {
+            t_prefill_base: 0.008,
+            t_prefill_per_token: 2e-5,
+            t_decode_step: 0.004,
+            chunk: 512,
+            jitter: 0.1,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct MockSlot {
+    request_id: u64,
+    generated: u32,
+    max_new: u32,
+    last_token: i32,
+}
+
+/// Sleep-based engine implementing [`EngineBackend`].
+pub struct MockEngine {
+    cfg: MockEngineConfig,
+    slots: Vec<Option<MockSlot>>,
+    rng: Rng,
+}
+
+impl MockEngine {
+    /// Engine with `batch` decode slots (use 1 for prefill-only workers).
+    pub fn new(cfg: MockEngineConfig, batch: u32, seed: u64) -> Self {
+        MockEngine {
+            cfg,
+            slots: vec![None; batch.max(1) as usize],
+            rng: Rng::new(seed),
+        }
+    }
+
+    fn jittered(&mut self, t: f64) -> f64 {
+        let j = self.cfg.jitter.clamp(0.0, 0.9);
+        t * self.rng.uniform(1.0 - j, 1.0 + j)
+    }
+
+    /// Deterministic "model output" for a prompt: a byte-range token
+    /// derived from its content, so generations are reproducible and
+    /// decode to printable text.
+    fn first_token_of(prompt: &[i32]) -> i32 {
+        let sum: i64 = prompt.iter().map(|&t| t as i64).sum();
+        0x20 + (sum % 0x5f) as i32 // printable ASCII 0x20..=0x7e
+    }
+
+    fn next_token(prev: i32) -> i32 {
+        0x20 + (prev - 0x20 + 1).rem_euclid(0x5f)
+    }
+}
+
+impl EngineBackend for MockEngine {
+    fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOutcome> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        let cost = self.cfg.t_prefill_base
+            + self.cfg.t_prefill_per_token * prompt.len() as f64;
+        let cost = self.jittered(cost);
+        std::thread::sleep(std::time::Duration::from_secs_f64(cost));
+        Ok(PrefillOutcome {
+            first_token: Self::first_token_of(prompt),
+            len: prompt.len(),
+            k: Vec::new(),
+            v: Vec::new(),
+            exec_time: cost,
+            passes: (prompt.len() as u32).div_ceil(self.cfg.chunk.max(1)),
+        })
+    }
+
+    fn free_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    fn active(&self) -> usize {
+        self.slots.len() - self.free_slots()
+    }
+
+    fn admit(&mut self, pre: &PrefillOutcome, max_new: u32, request_id: u64) -> Result<usize> {
+        let slot = self
+            .slots
+            .iter()
+            .position(Option::is_none)
+            .ok_or_else(|| anyhow!("no free decode slot"))?;
+        self.slots[slot] = Some(MockSlot {
+            request_id,
+            generated: 0,
+            max_new: max_new.max(1),
+            last_token: pre.first_token,
+        });
+        Ok(slot)
+    }
+
+    fn step(&mut self) -> Result<(Vec<Emission>, f64)> {
+        if self.active() == 0 {
+            return Ok((Vec::new(), 0.0));
+        }
+        let cost = self.jittered(self.cfg.t_decode_step);
+        std::thread::sleep(std::time::Duration::from_secs_f64(cost));
+        let mut emissions = Vec::new();
+        for s in self.slots.iter_mut() {
+            let Some(slot) = s.as_mut() else { continue };
+            let tok = Self::next_token(slot.last_token);
+            slot.last_token = tok;
+            slot.generated += 1;
+            let done = slot.generated >= slot.max_new;
+            emissions.push(Emission {
+                request_id: slot.request_id,
+                token: tok,
+                done,
+            });
+            if done {
+                *s = None;
+            }
+        }
+        Ok((emissions, cost))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> MockEngineConfig {
+        MockEngineConfig {
+            t_prefill_base: 0.0,
+            t_prefill_per_token: 0.0,
+            t_decode_step: 0.0,
+            chunk: 128,
+            jitter: 0.0,
+        }
+    }
+
+    #[test]
+    fn prefill_reports_chunk_passes() {
+        let mut e = MockEngine::new(quick_cfg(), 1, 1);
+        let pre = e.prefill(&[7; 300]).unwrap();
+        assert_eq!(pre.len, 300);
+        assert_eq!(pre.passes, 3); // ceil(300/128)
+        assert!((0x20..0x7f).contains(&pre.first_token));
+    }
+
+    #[test]
+    fn decode_runs_each_slot_to_its_budget() {
+        let mut e = MockEngine::new(quick_cfg(), 4, 1);
+        let p1 = e.prefill(&[1, 2, 3]).unwrap();
+        let p2 = e.prefill(&[4, 5]).unwrap();
+        e.admit(&p1, 2, 10).unwrap();
+        e.admit(&p2, 5, 11).unwrap();
+        assert_eq!(e.active(), 2);
+        let mut per_req = std::collections::HashMap::new();
+        while e.active() > 0 {
+            let (em, _) = e.step().unwrap();
+            for x in em {
+                *per_req.entry(x.request_id).or_insert(0u32) += 1;
+            }
+        }
+        assert_eq!(per_req[&10], 2);
+        assert_eq!(per_req[&11], 5);
+        assert_eq!(e.free_slots(), 4);
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_prompt() {
+        let mut a = MockEngine::new(quick_cfg(), 1, 1);
+        let mut b = MockEngine::new(quick_cfg(), 1, 99);
+        assert_eq!(
+            a.prefill(&[9, 9, 9]).unwrap().first_token,
+            b.prefill(&[9, 9, 9]).unwrap().first_token,
+        );
+    }
+
+    #[test]
+    fn admit_rejects_when_full() {
+        let mut e = MockEngine::new(quick_cfg(), 1, 1);
+        let p = e.prefill(&[1]).unwrap();
+        e.admit(&p, 1, 1).unwrap();
+        assert!(e.admit(&p, 1, 2).is_err());
+    }
+}

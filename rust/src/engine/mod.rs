@@ -7,15 +7,16 @@
 //! a time), its decode runs synchronized batch steps — the same structural
 //! properties the DES models, with actual PJRT forward passes.
 
+pub mod mock;
 pub mod sampler;
 pub mod tokenizer;
 
+use crate::runtime::backend::Literal;
 use crate::runtime::Runtime;
 use crate::util::Rng;
 use anyhow::{anyhow, bail, Result};
 use sampler::Sampling;
 use std::sync::Arc;
-use xla::Literal;
 
 /// Result of a full chunked prefill of one prompt.
 pub struct PrefillOutcome {
@@ -52,6 +53,47 @@ pub struct Emission {
     pub token: i32,
     /// Whether the sequence finished (budget exhausted or EOS).
     pub done: bool,
+}
+
+/// Uniform interface over execution backends (real PJRT [`MiniEngine`]
+/// or the dependency-free [`mock::MockEngine`]), so the threaded cluster
+/// fabric in [`crate::cluster::workers`] is generic over how forward
+/// passes actually run. Engines are constructed *inside* worker threads
+/// (PJRT handles are not `Send`), so the trait itself needs no `Send`
+/// bound — only the spec describing how to build one crosses threads.
+pub trait EngineBackend {
+    /// Full chunked prefill of one prompt.
+    fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOutcome>;
+    /// Number of free decode slots.
+    fn free_slots(&self) -> usize;
+    /// Number of active sequences.
+    fn active(&self) -> usize;
+    /// Admit a prefilled sequence into a free slot.
+    fn admit(&mut self, pre: &PrefillOutcome, max_new: u32, request_id: u64) -> Result<usize>;
+    /// One synchronized decode step over all active slots.
+    fn step(&mut self) -> Result<(Vec<Emission>, f64)>;
+}
+
+impl EngineBackend for MiniEngine {
+    fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOutcome> {
+        MiniEngine::prefill(self, prompt)
+    }
+
+    fn free_slots(&self) -> usize {
+        MiniEngine::free_slots(self)
+    }
+
+    fn active(&self) -> usize {
+        MiniEngine::active(self)
+    }
+
+    fn admit(&mut self, pre: &PrefillOutcome, max_new: u32, request_id: u64) -> Result<usize> {
+        MiniEngine::admit(self, pre, max_new, request_id)
+    }
+
+    fn step(&mut self) -> Result<(Vec<Emission>, f64)> {
+        MiniEngine::step(self)
+    }
 }
 
 /// Slot-based batched decoder + chunked prefill over the PJRT runtime.

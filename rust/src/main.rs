@@ -6,8 +6,11 @@
 //! * `simulate`      — run one cluster simulation and print the report.
 //! * `bench-figures` — regenerate the paper's tables/figures (§5).
 //! * `gen-trace`     — write a workload trace (JSONL) for replay.
-//! * `serve`         — serve the real nano-MoE model through SBS on the
-//!                     threaded mini-cluster (requires `make artifacts`).
+//! * `serve`         — serve the nano-MoE model through SBS on the
+//!                     threaded mini-cluster (`make artifacts` + the
+//!                     `pjrt` feature, or `--engine mock`).
+//! * `loadgen`       — open-loop TCP load generator against `sbs serve
+//!                     --listen`; prints a JSON latency report.
 //! * `calibrate`     — measure real PJRT pass times and print calibrated
 //!                     cost-model constants.
 
@@ -30,6 +33,7 @@ fn main() -> ExitCode {
         "bench-figures" => cmd_bench_figures(rest),
         "gen-trace" => cmd_gen_trace(rest),
         "serve" => cmd_serve(rest),
+        "loadgen" => cmd_loadgen(rest),
         "calibrate" => cmd_calibrate(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
@@ -53,7 +57,8 @@ fn usage() -> String {
        simulate        run one cluster simulation (--help for knobs)\n\
        bench-figures   regenerate paper tables/figures (--all | --fig6a | --fig6b | --table1 | --fig7 | --fig8)\n\
        gen-trace       generate a JSONL workload trace\n\
-       serve           serve the real nano-MoE model via SBS (needs artifacts/)\n\
+       serve           serve the nano-MoE model via SBS (artifacts/ or --engine mock)\n\
+       loadgen         open-loop load generator against a running `serve --listen`\n\
        calibrate       measure PJRT pass times, print cost-model constants"
         .to_string()
 }
@@ -204,6 +209,10 @@ fn cmd_gen_trace(argv: &[String]) -> Result<(), String> {
 
 fn cmd_serve(argv: &[String]) -> Result<(), String> {
     sbs::server::cli_serve(argv).map_err(|e| format!("{e:#}"))
+}
+
+fn cmd_loadgen(argv: &[String]) -> Result<(), String> {
+    sbs::workload::loadgen::cli_loadgen(argv).map_err(|e| format!("{e:#}"))
 }
 
 fn cmd_calibrate(argv: &[String]) -> Result<(), String> {

@@ -10,4 +10,6 @@ mod histogram;
 mod recorder;
 
 pub use histogram::Histogram;
-pub use recorder::{LatencyRecorder, RequestMetrics, ServingReport, ThroughputCounter, UtilizationMeter};
+pub use recorder::{
+    LatencyRecorder, RequestMetrics, ServingReport, ThroughputCounter, UtilizationMeter,
+};

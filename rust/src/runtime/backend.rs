@@ -1,0 +1,179 @@
+//! Compile-time switch between the real `xla` PJRT bindings and an inert
+//! stub, so the crate builds (and the whole scheduler/serving stack runs,
+//! via the mock engine) in environments whose registry lacks the `xla`
+//! crate.
+//!
+//! With the `pjrt` feature enabled this module re-exports the `xla` types
+//! verbatim; without it, the same names resolve to stubs whose
+//! constructors fail with a descriptive error. [`super::Runtime::load`]
+//! hits [`PjRtClient::cpu`] first, so no stubbed data path is ever
+//! reachable: callers get `Err("built without the `pjrt` feature")` at
+//! load time instead of a link error at build time.
+
+#[cfg(feature = "pjrt")]
+pub use xla::{
+    HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation,
+};
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{
+    HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation,
+};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    //! API-compatible stand-ins for the subset of the `xla` crate the
+    //! runtime and engine use. Every data-path method returns
+    //! [`unsupported`]; only type-checking matters, because no value of
+    //! these types can reach a data path (client construction fails).
+
+    /// Stub error; rendered through `Debug` like the real crate's error.
+    #[derive(Debug)]
+    pub struct Error {
+        msg: String,
+    }
+
+    fn unsupported<T>() -> Result<T, Error> {
+        Err(Error {
+            msg: "sbs was built without the `pjrt` feature (the `xla` crate \
+                  is not available); use the mock engine or rebuild with \
+                  --features pjrt after adding the xla dependency"
+                .to_string(),
+        })
+    }
+
+    /// Element types accepted by the stub literal constructors.
+    pub trait Element: Copy {}
+    impl Element for f32 {}
+    impl Element for i32 {}
+
+    /// Host tensor stand-in.
+    pub struct Literal;
+
+    /// Array shape stand-in (only `dims()` is used).
+    pub struct ArrayShape;
+
+    impl ArrayShape {
+        /// Dimension sizes.
+        pub fn dims(&self) -> Vec<i64> {
+            Vec::new()
+        }
+    }
+
+    impl Literal {
+        /// Rank-1 literal from host data.
+        pub fn vec1<T: Element>(_data: &[T]) -> Literal {
+            Literal
+        }
+
+        /// Rank-0 literal.
+        pub fn scalar<T: Element>(_x: T) -> Literal {
+            Literal
+        }
+
+        /// Reshape (stub: shape is never materialized).
+        pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+            Ok(Literal)
+        }
+
+        /// Copy out as host values.
+        pub fn to_vec<T: Element>(&self) -> Result<Vec<T>, Error> {
+            unsupported()
+        }
+
+        /// Destructure a tuple literal.
+        pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+            unsupported()
+        }
+
+        /// Shape of an array literal.
+        pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+            unsupported()
+        }
+    }
+
+    /// Device buffer stand-in.
+    pub struct PjRtBuffer;
+
+    impl PjRtBuffer {
+        /// Synchronous device→host copy.
+        pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+            unsupported()
+        }
+    }
+
+    /// PJRT client stand-in: construction always fails, which is the
+    /// single gate keeping every other stub method unreachable.
+    pub struct PjRtClient;
+
+    impl PjRtClient {
+        /// CPU client (always fails without the `pjrt` feature).
+        pub fn cpu() -> Result<PjRtClient, Error> {
+            unsupported()
+        }
+
+        /// Backend platform name.
+        pub fn platform_name(&self) -> String {
+            "stub".to_string()
+        }
+
+        /// Addressable device count.
+        pub fn device_count(&self) -> usize {
+            0
+        }
+
+        /// Upload raw host data.
+        pub fn buffer_from_host_buffer<T: Element>(
+            &self,
+            _data: &[T],
+            _dims: &[usize],
+            _device: Option<usize>,
+        ) -> Result<PjRtBuffer, Error> {
+            unsupported()
+        }
+
+        /// Upload a literal.
+        pub fn buffer_from_host_literal(
+            &self,
+            _device: Option<usize>,
+            _literal: &Literal,
+        ) -> Result<PjRtBuffer, Error> {
+            unsupported()
+        }
+
+        /// Compile a computation.
+        pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+            unsupported()
+        }
+    }
+
+    /// Compiled executable stand-in.
+    pub struct PjRtLoadedExecutable;
+
+    impl PjRtLoadedExecutable {
+        /// Execute with borrowed buffer arguments.
+        pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+            unsupported()
+        }
+    }
+
+    /// HLO module proto stand-in.
+    pub struct HloModuleProto;
+
+    impl HloModuleProto {
+        /// Parse HLO text from a file.
+        pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+            unsupported()
+        }
+    }
+
+    /// XLA computation stand-in.
+    pub struct XlaComputation;
+
+    impl XlaComputation {
+        /// Wrap a parsed proto.
+        pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+            XlaComputation
+        }
+    }
+}

@@ -150,7 +150,11 @@ impl ModelMeta {
         let mut expected = 0usize;
         for p in &params {
             if p.offset != expected {
-                return Err(anyhow!("param '{}' offset {} != expected {expected}", p.name, p.offset));
+                return Err(anyhow!(
+                    "param '{}' offset {} != expected {expected}",
+                    p.name,
+                    p.offset
+                ));
             }
             expected += p.shape.iter().product::<usize>().max(1);
         }

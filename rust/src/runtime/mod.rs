@@ -15,16 +15,17 @@
 //! output is synced back to host literals — on the CPU PJRT plugin these
 //! are memcpys, not PCIe transfers.
 
+pub mod backend;
 mod meta;
 
 pub use meta::{ModelDims, ModelMeta, ParamMeta, VariantMeta};
 
 use crate::cli::Command;
 use anyhow::{anyhow, bail, Context, Result};
+use backend::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
-use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 /// Output of one model call.
 pub struct StepOutput {
@@ -119,11 +120,11 @@ impl Runtime {
             }
             let path = dir.join(&v.file);
             let t0 = Instant::now();
-            let proto = xla::HloModuleProto::from_text_file(
+            let proto = backend::HloModuleProto::from_text_file(
                 path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
             )
             .map_err(|e| anyhow!("parsing {}: {e:?}", v.file))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
+            let comp = backend::XlaComputation::from_proto(&proto);
             let exe = client
                 .compile(&comp)
                 .map_err(|e| anyhow!("compiling {}: {e:?}", v.file))?;
@@ -242,8 +243,7 @@ impl Runtime {
             .ok_or_else(|| anyhow!("no prefill variant for chunk={chunk}"))?;
         let toks = Literal::vec1(tokens);
         let pos_l = Literal::scalar(pos);
-        let (logits, kc, vc, exec_time) =
-            self.run(exe, &[&toks, k_caches, v_caches, &pos_l])?;
+        let (logits, kc, vc, exec_time) = self.run(exe, &[&toks, k_caches, v_caches, &pos_l])?;
         Ok(StepOutput {
             logits,
             k_caches: kc,
@@ -273,8 +273,7 @@ impl Runtime {
             .ok_or_else(|| anyhow!("no decode variant for batch={batch}"))?;
         let toks = Literal::vec1(tokens);
         let lens_l = Literal::vec1(lens);
-        let (logits, kc, vc, exec_time) =
-            self.run(exe, &[&toks, k_caches, v_caches, &lens_l])?;
+        let (logits, kc, vc, exec_time) = self.run(exe, &[&toks, k_caches, v_caches, &lens_l])?;
         Ok(StepOutput {
             logits,
             k_caches: kc,

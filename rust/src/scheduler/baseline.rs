@@ -36,7 +36,12 @@ pub struct ImmediateScheduler {
 
 impl ImmediateScheduler {
     /// Build for `n_instances × dp_per_instance` with chunk capacity.
-    pub fn new(policy: ImmediatePolicy, n_instances: u32, dp_per_instance: u32, c_chunk: u32) -> Self {
+    pub fn new(
+        policy: ImmediatePolicy,
+        n_instances: u32,
+        dp_per_instance: u32,
+        c_chunk: u32,
+    ) -> Self {
         ImmediateScheduler {
             policy,
             state: GlobalState::new(n_instances, dp_per_instance, c_chunk),

@@ -83,6 +83,70 @@ impl FlowController {
     }
 }
 
+/// Outcome of a frontend admission check.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    /// Accept the request into the cluster.
+    Admit,
+    /// Refuse: the in-flight job count is at capacity (hard overload).
+    RejectQueueFull,
+    /// Refuse: shed during a post-overload throttle cool-down.
+    Shed,
+}
+
+/// Frontend admission control: a bounded in-flight window wrapped around
+/// the [`FlowController`]. This is what the serving frontend consults
+/// *before* a request ever reaches the scheduler, so overload surfaces as
+/// an immediate `BUSY` on the wire instead of unbounded queueing —
+/// the same two-tier shape as PBAA's in-scheduler overload path (queue
+/// pressure triggers an overload event; the flow controller then sheds a
+/// fraction of *new* arrivals for a cool-down window).
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    flow: FlowController,
+    /// Maximum jobs in flight (queued + executing) before hard rejection.
+    pub max_inflight: u64,
+}
+
+impl AdmissionController {
+    /// Controller admitting at most `max_inflight` concurrent jobs.
+    pub fn new(policy: FlowPolicy, max_inflight: u64) -> Self {
+        AdmissionController {
+            flow: FlowController::new(policy),
+            max_inflight: max_inflight.max(1),
+        }
+    }
+
+    /// Tune the wrapped flow controller (shed fraction / cool-down).
+    pub fn flow_mut(&mut self) -> &mut FlowController {
+        &mut self.flow
+    }
+
+    /// Total requests refused so far (queue-full + shed).
+    pub fn rejected(&self) -> u64 {
+        self.flow.rejected()
+    }
+
+    /// Whether the post-overload throttle window is active at `now`.
+    pub fn throttling(&self, now: f64) -> bool {
+        self.flow.throttling(now)
+    }
+
+    /// Decide admission for `request` given the current in-flight count.
+    pub fn try_admit(&mut self, now: f64, inflight: u64, request: Request) -> AdmissionDecision {
+        if inflight >= self.max_inflight {
+            // The queue is full: reject this request and (under Throttle)
+            // arm the cool-down so pressure is relieved proactively.
+            self.flow.on_overload(now, vec![request]);
+            return AdmissionDecision::RejectQueueFull;
+        }
+        if !self.flow.admit(now) {
+            return AdmissionDecision::Shed;
+        }
+        AdmissionDecision::Admit
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,5 +183,62 @@ mod tests {
         let mut f = FlowController::new(FlowPolicy::Throttle);
         f.on_overload(10.0, vec![]);
         assert!(!f.throttling(10.1));
+    }
+
+    #[test]
+    fn throttle_window_expires_at_boundary() {
+        let mut f = FlowController::new(FlowPolicy::Throttle);
+        f.on_overload(5.0, vec![r(1)]);
+        assert!(f.throttling(5.0 + f.cooldown - 1e-9));
+        assert!(!f.throttling(5.0 + f.cooldown));
+    }
+
+    #[test]
+    fn repeated_overload_extends_cooldown() {
+        let mut f = FlowController::new(FlowPolicy::Throttle);
+        f.on_overload(0.0, vec![r(1)]);
+        // A second overload mid-window pushes the cool-down out.
+        f.on_overload(1.5, vec![r(2)]);
+        assert!(f.throttling(1.5 + f.cooldown - 1e-9));
+        assert_eq!(f.rejected(), 2);
+    }
+
+    #[test]
+    fn rejected_accumulates_overload_and_shed() {
+        let mut f = FlowController::new(FlowPolicy::Throttle);
+        f.shed_fraction = 0.5;
+        f.on_overload(0.0, vec![r(1)]); // 1 overload rejection
+        let shed = (0..10).filter(|_| !f.admit(0.5)).count() as u64;
+        assert_eq!(shed, 5);
+        assert_eq!(f.rejected(), 1 + shed);
+    }
+
+    #[test]
+    fn admission_rejects_at_capacity_and_arms_throttle() {
+        let mut a = AdmissionController::new(FlowPolicy::Throttle, 4);
+        assert_eq!(a.try_admit(0.0, 0, r(1)), AdmissionDecision::Admit);
+        assert_eq!(a.try_admit(0.0, 3, r(2)), AdmissionDecision::Admit);
+        // At capacity: hard reject, cool-down armed.
+        assert_eq!(a.try_admit(1.0, 4, r(3)), AdmissionDecision::RejectQueueFull);
+        assert!(a.throttling(1.1));
+        // Below capacity again, but inside the cool-down: sheds a fraction.
+        let outcomes: Vec<AdmissionDecision> =
+            (0..8).map(|i| a.try_admit(1.2, 0, r(10 + i))).collect();
+        assert!(outcomes.contains(&AdmissionDecision::Shed));
+        assert!(outcomes.contains(&AdmissionDecision::Admit));
+        // After the cool-down everything is admitted again.
+        let later = 1.0 + 10.0;
+        assert!(!a.throttling(later));
+        assert_eq!(a.try_admit(later, 0, r(99)), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn admission_reject_policy_never_sheds() {
+        let mut a = AdmissionController::new(FlowPolicy::RejectOverloaded, 2);
+        assert_eq!(a.try_admit(0.0, 2, r(1)), AdmissionDecision::RejectQueueFull);
+        for i in 0..20 {
+            assert_eq!(a.try_admit(0.1, 0, r(2 + i)), AdmissionDecision::Admit);
+        }
+        assert_eq!(a.rejected(), 1);
     }
 }

@@ -114,8 +114,7 @@ impl RadixTree {
                     } else {
                         // Split the edge at `common`.
                         let tail = self.nodes[child].edge.split_off(common);
-                        let grandchild_children =
-                            std::mem::take(&mut self.nodes[child].children);
+                        let grandchild_children = std::mem::take(&mut self.nodes[child].children);
                         let g_idx = self.nodes.len();
                         self.nodes.push(Node {
                             edge: tail.clone(),

@@ -216,8 +216,7 @@ impl StaggeredScheduler {
             // chunk budget buffered). The window exists to *form optimal
             // batches* (§3.2); once one is formed, waiting adds latency
             // without improving the batch.
-            let chunk_budget =
-                (self.state.dp_per_instance as u64) * self.chunk_capacity as u64;
+            let chunk_budget = (self.state.dp_per_instance as u64) * self.chunk_capacity as u64;
             let interval_ok = now - self.last_dispatch >= self.interval.i_opt();
             let batch_formed = self.queued_tokens >= chunk_budget;
             if !interval_ok && !batch_formed {

@@ -1,23 +1,53 @@
 //! Serving frontend over the real mini-cluster: an in-process batch mode
-//! plus a minimal TCP line protocol
-//! (`GEN <max_tokens> <prompt...>` → `OK <id> ttft_ms=.. e2e_ms=.. tokens=.. <text>`),
-//! wired through `sbs serve`.
+//! plus a concurrent TCP line protocol, wired through `sbs serve`.
+//!
+//! ## Line protocol
+//!
+//! Requests (one per line):
+//!
+//! * `GEN <max_tokens> <prompt...>` — generate; the response streams.
+//! * `QUIT` — close *this* connection (in-flight work elsewhere is
+//!   untouched).
+//! * `SHUTDOWN` — stop accepting, drain every in-flight job, exit.
+//!
+//! Responses:
+//!
+//! * `TOK <id> <index> <token>` — one generated token as it is produced;
+//!   `index 0` arrives the moment prefill completes, so TTFT is
+//!   observable on the wire.
+//! * `DONE <id> ttft_ms=<..> e2e_ms=<..> tokens=<n> <text>` — terminal.
+//! * `BUSY <queue_full|throttled|rejected>` — load shed by the
+//!   [`FlowPolicy`]-governed admission path; retry later.
+//! * `ERR <message>` — malformed request.
+//!
+//! Each connection is served by its own thread over a shared
+//! [`ClusterHandle`]; concurrency is across connections (one in-flight
+//! `GEN` per connection, pipelining via multiple connections).
 
 use crate::cli::Command;
-use crate::cluster::workers::{Job, RealCluster, RealClusterConfig, RealSchedMode};
+use crate::cluster::workers::{
+    Admission, AdmissionConfig, BusyReason, ClusterHandle, EngineSpec, Job, JobUpdate,
+    RealCluster, RealClusterConfig, RealSchedMode,
+};
+use crate::engine::mock::MockEngineConfig;
 use crate::engine::sampler::Sampling;
 use crate::engine::tokenizer;
 use crate::runtime::artifacts_dir;
 use crate::scheduler::baseline::ImmediatePolicy;
+use crate::scheduler::flow::FlowPolicy;
 use anyhow::{anyhow, Result};
-use std::io::{BufRead, BufReader, Write};
-use std::net::TcpListener;
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// `sbs serve` entrypoint.
 pub fn cli_serve(argv: &[String]) -> Result<()> {
     let cmd = Command::new("sbs serve", "serve the nano-MoE model via SBS")
         .opt("artifacts", "artifact directory", Some("artifacts"))
+        .opt("engine", "pjrt | mock", Some("pjrt"))
         .opt("prefill", "prefill instances", Some("2"))
         .opt("batch", "decode batch size", Some("4"))
         .opt(
@@ -32,6 +62,12 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
             "run the TCP server on this addr instead (e.g. 127.0.0.1:7433)",
             None,
         )
+        .opt(
+            "max-inflight",
+            "admission control: max jobs in flight before BUSY",
+            Some("256"),
+        )
+        .opt("flow", "admission policy: throttle | reject", Some("throttle"))
         .opt("seed", "rng seed", Some("7"));
     let args = cmd.parse(argv).map_err(|e| anyhow!("{e}"))?;
     let dir = std::path::PathBuf::from(
@@ -43,13 +79,30 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
         "least_outstanding" => RealSchedMode::Immediate(ImmediatePolicy::LeastOutstanding),
         other => return Err(anyhow!("unknown scheduler '{other}'")),
     };
+    let engine = match args.str_or("engine", "pjrt").as_str() {
+        "pjrt" => EngineSpec::Pjrt { artifacts: dir },
+        "mock" => EngineSpec::Mock(MockEngineConfig::default()),
+        other => return Err(anyhow!("unknown engine '{other}'")),
+    };
+    let policy = match args.str_or("flow", "throttle").as_str() {
+        "throttle" => FlowPolicy::Throttle,
+        "reject" => FlowPolicy::RejectOverloaded,
+        other => return Err(anyhow!("unknown flow policy '{other}'")),
+    };
     let cfg = RealClusterConfig {
         n_prefill: args.parse_or("prefill", 2u32).map_err(|e| anyhow!("{e}"))?,
         decode_batch: args.parse_or("batch", 4u32).map_err(|e| anyhow!("{e}"))?,
         mode,
         sampling: Sampling::Greedy,
         seed: args.parse_or("seed", 7u64).map_err(|e| anyhow!("{e}"))?,
-        artifacts: dir,
+        engine,
+        admission: AdmissionConfig {
+            max_inflight: args
+                .parse_or("max-inflight", 256u64)
+                .map_err(|e| anyhow!("{e}"))?,
+            policy,
+            ..Default::default()
+        },
         ..Default::default()
     };
 
@@ -60,7 +113,7 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
     // Batch mode: synthetic prompts through the cluster; print report.
     let n: usize = args.parse_or("requests", 8).map_err(|e| anyhow!("{e}"))?;
     let max_new: u32 = args.parse_or("max-new", 16).map_err(|e| anyhow!("{e}"))?;
-    let mut cluster = RealCluster::start(cfg)?;
+    let cluster = RealCluster::start(cfg)?;
     for i in 0..n {
         let prompt = tokenizer::encode(&format!(
             "Request {i}: the staggered batch scheduler buffers requests to \
@@ -85,65 +138,168 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Run the TCP line-protocol server. Connections are handled sequentially
-/// and requests synchronously — the research focus is the scheduler, not
-/// an async frontend.
-fn serve_tcp(cfg: RealClusterConfig, addr: &str) -> Result<()> {
+/// Bind `addr` and run the concurrent TCP server until `SHUTDOWN`.
+pub fn serve_tcp(cfg: RealClusterConfig, addr: &str) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
+    serve_listener(cfg, listener)
+}
+
+/// Run the concurrent TCP server on an already-bound listener (tests use
+/// this with an ephemeral port). One handler thread per connection over a
+/// shared [`ClusterHandle`]; `SHUTDOWN` stops the accept loop, joins the
+/// handlers, and drains every in-flight cluster job before returning.
+pub fn serve_listener(cfg: RealClusterConfig, listener: TcpListener) -> Result<()> {
+    let addr = listener.local_addr()?;
     log::info!("listening on {addr}");
-    let mut cluster = RealCluster::start(cfg)?;
-    let mut next_id: u64 = 0;
-    for conn in listener.incoming() {
-        let conn = conn?;
-        let peer = conn.peer_addr()?;
-        log::info!("connection from {peer}");
-        let mut reader = BufReader::new(conn.try_clone()?);
-        let mut out = conn;
-        let mut line = String::new();
-        loop {
-            line.clear();
-            if reader.read_line(&mut line)? == 0 {
-                break;
+    let cluster = RealCluster::start(cfg)?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    // Non-blocking accept so the loop can observe the shutdown flag set
+    // by a handler thread.
+    listener.set_nonblocking(true)?;
+    let mut handlers = Vec::new();
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((conn, peer)) => {
+                log::info!("connection from {peer}");
+                let handle = cluster.handle();
+                let flag = shutdown.clone();
+                handlers.push(std::thread::spawn(move || {
+                    if let Err(e) = handle_connection(conn, handle, flag) {
+                        log::warn!("connection {peer}: {e:#}");
+                    }
+                }));
             }
-            let line = line.trim();
-            if line.is_empty() {
-                continue;
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                // Reap finished handlers so a long-lived server under
+                // connection churn doesn't grow the vec unboundedly.
+                handlers.retain(|h| !h.is_finished());
+                std::thread::sleep(Duration::from_millis(20));
             }
-            if line == "QUIT" {
-                return Ok(());
-            }
-            let Some(rest) = line.strip_prefix("GEN ") else {
-                writeln!(out, "ERR expected: GEN <max_tokens> <prompt>")?;
-                continue;
-            };
-            let (max_s, prompt_text) = rest.split_once(' ').unwrap_or((rest, ""));
-            let max_new: u32 = max_s.parse().unwrap_or(16);
-            let id = next_id;
-            next_id += 1;
-            let t0 = std::time::Instant::now();
-            cluster.submit(Job {
-                id,
-                prompt: tokenizer::encode(prompt_text),
-                max_new,
-            });
-            let c = cluster.wait_for(id, Duration::from_secs(600))?;
-            writeln!(
-                out,
-                "OK {id} ttft_ms={:.0} e2e_ms={:.0} tokens={} {}",
-                c.metrics.ttft().unwrap_or(-1.0) * 1e3,
-                t0.elapsed().as_secs_f64() * 1e3,
-                c.tokens.len(),
-                truncate(&tokenizer::decode(&c.tokens), 120)
-            )?;
+            Err(e) => return Err(e.into()),
         }
     }
+    log::info!(
+        "shutdown requested: draining {} in-flight jobs",
+        cluster.handle().inflight()
+    );
+    // Handlers finish their in-flight GEN (streaming is unaffected by the
+    // flag), then observe it and exit.
+    for h in handlers {
+        let _ = h.join();
+    }
+    let (_completions, report) = cluster.finish()?;
+    log::info!("final report:\n{}", report.render());
     Ok(())
 }
 
+/// Serve one connection: parse line commands, stream responses. A 100 ms
+/// read timeout keeps idle handlers responsive to server shutdown without
+/// interrupting an in-flight generation.
+fn handle_connection(
+    conn: TcpStream,
+    cluster: ClusterHandle,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    conn.set_read_timeout(Some(Duration::from_millis(100)))?;
+    // The protocol streams many tiny TOK lines; without TCP_NODELAY,
+    // Nagle coalescing would distort the wire-observable token cadence.
+    conn.set_nodelay(true)?;
+    let mut reader = BufReader::new(conn.try_clone()?);
+    let mut out = conn;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        // Poll-read one full line; a timeout may leave a partial line in
+        // the buffer, which the next iteration completes.
+        loop {
+            if shutdown.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            match reader.read_line(&mut line) {
+                Ok(0) => return Ok(()), // peer closed
+                Ok(_) => break,
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    continue
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        let req = line.trim();
+        if req.is_empty() {
+            continue;
+        }
+        if req == "QUIT" {
+            return Ok(());
+        }
+        if req == "SHUTDOWN" {
+            writeln!(out, "BYE")?;
+            shutdown.store(true, Ordering::SeqCst);
+            return Ok(());
+        }
+        let Some(rest) = req.strip_prefix("GEN ") else {
+            writeln!(out, "ERR expected: GEN <max_tokens> <prompt> | QUIT | SHUTDOWN")?;
+            continue;
+        };
+        let (max_s, prompt_text) = rest.split_once(' ').unwrap_or((rest, ""));
+        let max_new: u32 = max_s.parse().unwrap_or(16);
+        match cluster.try_submit(tokenizer::encode(prompt_text), max_new) {
+            Admission::Busy(reason) => {
+                let tag = match reason {
+                    BusyReason::QueueFull => "queue_full",
+                    BusyReason::Throttled => "throttled",
+                };
+                writeln!(out, "BUSY {tag}")?;
+            }
+            Admission::Accepted { id, updates } => stream_job(&mut out, id, updates)?,
+        }
+    }
+}
+
+/// Relay one job's update stream onto the wire as `TOK`/`DONE` lines.
+fn stream_job(out: &mut TcpStream, id: u64, updates: Receiver<JobUpdate>) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let mut ttft_ms = -1.0f64;
+    loop {
+        let upd = updates
+            .recv_timeout(Duration::from_secs(600))
+            .map_err(|_| anyhow!("timed out streaming job {id}"))?;
+        match upd {
+            JobUpdate::Token { token, index, .. } => {
+                if index == 0 {
+                    ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
+                }
+                writeln!(out, "TOK {id} {index} {token}")?;
+            }
+            JobUpdate::Done(c) => {
+                writeln!(
+                    out,
+                    "DONE {id} ttft_ms={:.1} e2e_ms={:.1} tokens={} {}",
+                    c.metrics.ttft().map(|t| t * 1e3).unwrap_or(ttft_ms),
+                    t0.elapsed().as_secs_f64() * 1e3,
+                    c.tokens.len(),
+                    truncate(&tokenizer::decode(&c.tokens), 120)
+                )?;
+                return Ok(());
+            }
+            JobUpdate::Rejected { .. } => {
+                writeln!(out, "BUSY rejected")?;
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Truncate to `n` chars and flatten control characters: the byte-level
+/// tokenizer can generate newlines, which would split the single-line
+/// `DONE` reply and corrupt the protocol stream.
 fn truncate(s: &str, n: usize) -> String {
-    if s.chars().count() <= n {
-        s.to_string()
+    let cleaned: String = s
+        .chars()
+        .map(|c| if c.is_control() { ' ' } else { c })
+        .collect();
+    if cleaned.chars().count() <= n {
+        cleaned
     } else {
-        s.chars().take(n).collect::<String>() + "…"
+        cleaned.chars().take(n).collect::<String>() + "…"
     }
 }

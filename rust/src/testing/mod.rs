@@ -15,6 +15,8 @@
 //! });
 //! ```
 
+pub mod net;
+
 use crate::util::Rng;
 
 /// Per-case generation context: an rng plus a size hint in `[0, 1]` that

@@ -1,0 +1,169 @@
+//! TCP test harness for the serving frontend: spawn a mock-engine server
+//! on an ephemeral port and drive it with line-protocol clients. Used by
+//! the `server_concurrency` integration suite; kept in the library so
+//! examples and future stress drivers can reuse it.
+
+use crate::cluster::workers::RealClusterConfig;
+use crate::server;
+use anyhow::{anyhow, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A serving frontend running on its own thread, bound to an ephemeral
+/// port. Call [`TestServer::shutdown`] to drain and join it.
+pub struct TestServer {
+    /// Bound address (`127.0.0.1:<port>`).
+    pub addr: String,
+    thread: Option<JoinHandle<Result<()>>>,
+}
+
+impl TestServer {
+    /// Bind `127.0.0.1:0` and run [`server::serve_listener`] with `cfg`.
+    pub fn start(cfg: RealClusterConfig) -> TestServer {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+        let addr = listener.local_addr().expect("local addr").to_string();
+        let thread = std::thread::spawn(move || server::serve_listener(cfg, listener));
+        TestServer {
+            addr,
+            thread: Some(thread),
+        }
+    }
+
+    /// Send `SHUTDOWN`, wait for the server to drain in-flight jobs and
+    /// exit, and surface any server-side error.
+    pub fn shutdown(mut self) -> Result<()> {
+        crate::workload::loadgen::send_shutdown(&self.addr)?;
+        match self.thread.take().expect("not yet joined").join() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow!("server thread panicked")),
+        }
+    }
+}
+
+/// One parsed server reply line.
+#[derive(Debug, Clone)]
+pub enum Reply {
+    /// `TOK <id> <index> <token>`
+    Tok {
+        /// Job id.
+        id: u64,
+        /// 0-based token index.
+        index: u32,
+        /// Token id.
+        token: i32,
+    },
+    /// `DONE <id> ...` (full line kept for assertions).
+    Done {
+        /// Job id.
+        id: u64,
+        /// The raw line.
+        line: String,
+    },
+    /// `BUSY <reason>`
+    Busy {
+        /// `queue_full`, `throttled` or `rejected`.
+        reason: String,
+    },
+    /// `ERR <message>`
+    Err(String),
+    /// `BYE` (shutdown acknowledgement).
+    Bye,
+}
+
+/// Everything observed while streaming one `GEN`.
+#[derive(Debug, Default)]
+pub struct GenOutcome {
+    /// The request was shed (`BUSY`).
+    pub busy: bool,
+    /// Streamed token ids in arrival order.
+    pub tokens: Vec<i32>,
+    /// Receive instant of each token (interleaving assertions).
+    pub tok_times: Vec<Instant>,
+    /// Raw `DONE` line, when the generation completed.
+    pub done: Option<String>,
+}
+
+/// Parse one server reply line — the single decoder for the wire
+/// protocol, shared by [`LineClient`] and the load generator so the two
+/// cannot drift apart.
+pub fn parse_reply(l: &str) -> Reply {
+    let mut parts = l.split_whitespace();
+    match parts.next() {
+        Some("TOK") => {
+            let id = parts.next().and_then(|x| x.parse().ok()).unwrap_or(0);
+            let index = parts.next().and_then(|x| x.parse().ok()).unwrap_or(0);
+            let token = parts.next().and_then(|x| x.parse().ok()).unwrap_or(0);
+            Reply::Tok { id, index, token }
+        }
+        Some("DONE") => Reply::Done {
+            id: parts.next().and_then(|x| x.parse().ok()).unwrap_or(0),
+            line: l.to_string(),
+        },
+        Some("BUSY") => Reply::Busy {
+            reason: parts.next().unwrap_or("").to_string(),
+        },
+        Some("BYE") => Reply::Bye,
+        _ => Reply::Err(l.to_string()),
+    }
+}
+
+/// Blocking line-protocol client with a 30 s read timeout (so a wedged
+/// server fails tests instead of hanging them).
+pub struct LineClient {
+    reader: BufReader<TcpStream>,
+    out: TcpStream,
+}
+
+impl LineClient {
+    /// Connect to a [`TestServer`] address.
+    pub fn connect(addr: &str) -> Result<LineClient> {
+        let conn = TcpStream::connect(addr)?;
+        conn.set_read_timeout(Some(Duration::from_secs(30)))?;
+        conn.set_nodelay(true)?;
+        Ok(LineClient {
+            reader: BufReader::new(conn.try_clone()?),
+            out: conn,
+        })
+    }
+
+    /// Send one protocol line.
+    pub fn send(&mut self, line: &str) -> Result<()> {
+        writeln!(self.out, "{line}")?;
+        Ok(())
+    }
+
+    /// Read one reply; `None` on clean EOF.
+    pub fn recv(&mut self) -> Result<Option<Reply>> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Ok(None);
+        }
+        Ok(Some(parse_reply(line.trim())))
+    }
+
+    /// Send one `GEN` and stream it to its terminal reply.
+    pub fn gen(&mut self, max_new: u32, prompt: &str) -> Result<GenOutcome> {
+        self.send(&format!("GEN {max_new} {prompt}"))?;
+        let mut out = GenOutcome::default();
+        loop {
+            match self.recv()? {
+                Some(Reply::Tok { token, .. }) => {
+                    out.tokens.push(token);
+                    out.tok_times.push(Instant::now());
+                }
+                Some(Reply::Done { line, .. }) => {
+                    out.done = Some(line);
+                    return Ok(out);
+                }
+                Some(Reply::Busy { .. }) => {
+                    out.busy = true;
+                    return Ok(out);
+                }
+                Some(Reply::Err(e)) => return Err(anyhow!("server error: {e}")),
+                Some(Reply::Bye) | None => return Err(anyhow!("connection closed mid-GEN")),
+            }
+        }
+    }
+}

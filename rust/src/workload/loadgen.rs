@@ -1,0 +1,302 @@
+//! Open-loop TCP load generator for the serving frontend (`sbs loadgen`).
+//!
+//! Arrivals are a Poisson process at `--rate` over `--duration` seconds,
+//! generated up front and timestamped against a shared epoch — the
+//! *open-loop* discipline of the paper's evaluation (and of Sarathi-style
+//! serving benchmarks): request N is due at its scheduled instant whether
+//! or not earlier requests have completed. `--conns` client connections
+//! drain the schedule; when all connections are busy, later arrivals are
+//! sent late and the delay is charged to the request's latency, so
+//! saturation shows up as growing TTFT rather than a silently reduced
+//! offered rate.
+//!
+//! The report is JSON on stdout: offered/completed/`BUSY` counts plus
+//! TTFT and end-to-end latency summaries (mean, p50, p90, p99) measured
+//! from the scheduled arrival instant.
+
+use crate::cli::Command;
+use crate::json::Json;
+use crate::metrics::LatencyRecorder;
+use crate::testing::net::{self, Reply};
+use crate::util::Rng;
+use anyhow::{anyhow, Context, Result};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One scheduled request.
+#[derive(Debug, Clone, Copy)]
+struct Arrival {
+    /// Due time, seconds from the epoch.
+    at: f64,
+    /// Prompt length in tokens (encoded as that many prompt bytes).
+    prompt_tokens: u32,
+    /// Generation budget.
+    max_new: u32,
+}
+
+/// Per-connection tallies, merged into the final report.
+#[derive(Debug, Default)]
+struct ClientStats {
+    ttft: Vec<f64>,
+    e2e: Vec<f64>,
+    completed: u64,
+    busy: u64,
+    errors: u64,
+    tokens: u64,
+}
+
+/// `sbs loadgen` entrypoint.
+pub fn cli_loadgen(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("sbs loadgen", "open-loop TCP load generator")
+        .opt("addr", "server address", Some("127.0.0.1:7433"))
+        .opt("rate", "offered load, requests/second", Some("20"))
+        .opt("duration", "offered-load horizon, seconds", Some("10"))
+        .opt("conns", "concurrent client connections", Some("8"))
+        .opt("prompt-tokens", "prompt length per request", Some("48"))
+        .opt("max-new", "tokens to generate per request", Some("16"))
+        .opt("seed", "arrival-process seed", Some("42"))
+        .flag("shutdown", "send SHUTDOWN to the server when finished");
+    let args = cmd.parse(argv).map_err(|e| anyhow!("{e}"))?;
+    let addr = args.str_or("addr", "127.0.0.1:7433");
+    let rate: f64 = args.parse_or("rate", 20.0).map_err(|e| anyhow!("{e}"))?;
+    let duration: f64 = args.parse_or("duration", 10.0).map_err(|e| anyhow!("{e}"))?;
+    let conns: usize = args.parse_or("conns", 8).map_err(|e| anyhow!("{e}"))?;
+    let prompt_tokens: u32 = args
+        .parse_or("prompt-tokens", 48u32)
+        .map_err(|e| anyhow!("{e}"))?;
+    let max_new: u32 = args.parse_or("max-new", 16u32).map_err(|e| anyhow!("{e}"))?;
+    let seed: u64 = args.parse_or("seed", 42u64).map_err(|e| anyhow!("{e}"))?;
+
+    let schedule = poisson_schedule(rate, duration, seed, prompt_tokens, max_new);
+    let offered = schedule.len();
+    let report = run(&addr, schedule, conns)?;
+    if args.flag("shutdown") {
+        send_shutdown(&addr)?;
+    }
+
+    let mut j = match report.to_json() {
+        Json::Obj(m) => m,
+        _ => unreachable!(),
+    };
+    j.insert("offered".into(), Json::from(offered));
+    j.insert("rate_qps".into(), Json::from(rate));
+    j.insert("duration_s".into(), Json::from(duration));
+    j.insert("conns".into(), Json::from(conns));
+    println!("{}", Json::Obj(j).dump());
+    Ok(())
+}
+
+/// Aggregate loadgen outcome (the JSON report's source of truth).
+#[derive(Debug)]
+pub struct LoadgenReport {
+    /// Requests answered with a full generation.
+    pub completed: u64,
+    /// Requests shed with `BUSY`.
+    pub busy: u64,
+    /// Protocol/transport errors.
+    pub errors: u64,
+    /// Total streamed tokens.
+    pub tokens: u64,
+    /// Wall time of the whole run, seconds.
+    pub elapsed_s: f64,
+    /// TTFT from scheduled arrival.
+    pub ttft: LatencyRecorder,
+    /// End-to-end latency from scheduled arrival.
+    pub e2e: LatencyRecorder,
+}
+
+impl LoadgenReport {
+    /// JSON summary (includes p50/p99 TTFT via the recorders).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("completed", Json::from(self.completed)),
+            ("busy", Json::from(self.busy)),
+            ("errors", Json::from(self.errors)),
+            ("tokens", Json::from(self.tokens)),
+            ("elapsed_s", Json::from(self.elapsed_s)),
+            (
+                "achieved_qps",
+                Json::from(self.completed as f64 / self.elapsed_s.max(1e-9)),
+            ),
+            (
+                "decode_tps",
+                Json::from(self.tokens as f64 / self.elapsed_s.max(1e-9)),
+            ),
+            ("ttft", self.ttft.to_json()),
+            ("e2e", self.e2e.to_json()),
+        ])
+    }
+}
+
+/// Materialize the Poisson arrival schedule.
+fn poisson_schedule(
+    rate: f64,
+    duration: f64,
+    seed: u64,
+    prompt_tokens: u32,
+    max_new: u32,
+) -> VecDeque<Arrival> {
+    let mut rng = Rng::new(seed);
+    let mut out = VecDeque::new();
+    let mut t = 0.0;
+    loop {
+        t += rng.exp(rate.max(1e-9));
+        if t >= duration {
+            break;
+        }
+        out.push_back(Arrival {
+            at: t,
+            prompt_tokens,
+            max_new,
+        });
+    }
+    out
+}
+
+fn run(addr: &str, schedule: VecDeque<Arrival>, conns: usize) -> Result<LoadgenReport> {
+    let queue = Arc::new(Mutex::new(schedule));
+    let t0 = Instant::now();
+    let mut workers = Vec::new();
+    for _ in 0..conns.max(1) {
+        let queue = queue.clone();
+        let addr = addr.to_string();
+        workers.push(std::thread::spawn(move || run_client(&addr, t0, queue)));
+    }
+    let mut ttft = LatencyRecorder::new("ttft");
+    let mut e2e = LatencyRecorder::new("e2e");
+    let mut completed = 0;
+    let mut busy = 0;
+    let mut errors = 0;
+    let mut tokens = 0;
+    for w in workers {
+        match w.join() {
+            Ok(st) => {
+                for x in st.ttft {
+                    ttft.record(x);
+                }
+                for x in st.e2e {
+                    e2e.record(x);
+                }
+                completed += st.completed;
+                busy += st.busy;
+                errors += st.errors;
+                tokens += st.tokens;
+            }
+            Err(_) => errors += 1,
+        }
+    }
+    Ok(LoadgenReport {
+        completed,
+        busy,
+        errors,
+        tokens,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        ttft,
+        e2e,
+    })
+}
+
+/// Drive one connection until the shared schedule is empty. Errors are
+/// recorded, not propagated: stats gathered before a failure stay in the
+/// report (losing them would skew the percentiles the tool exists to
+/// measure).
+fn run_client(addr: &str, t0: Instant, queue: Arc<Mutex<VecDeque<Arrival>>>) -> ClientStats {
+    let mut st = ClientStats::default();
+    let setup = || -> Result<(BufReader<TcpStream>, TcpStream)> {
+        let conn = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        // A wedged server should fail the run, not hang it; tiny TOK
+        // lines need TCP_NODELAY for honest latency numbers.
+        conn.set_read_timeout(Some(Duration::from_secs(600)))?;
+        conn.set_nodelay(true)?;
+        Ok((BufReader::new(conn.try_clone()?), conn))
+    };
+    let (mut reader, mut out) = match setup() {
+        Ok(x) => x,
+        Err(e) => {
+            log::error!("loadgen client: {e:#}");
+            st.errors += 1;
+            return st;
+        }
+    };
+    let mut line = String::new();
+    'arrivals: loop {
+        let next = queue.lock().unwrap().pop_front();
+        let Some(a) = next else { break };
+        let now = t0.elapsed().as_secs_f64();
+        if a.at > now {
+            std::thread::sleep(Duration::from_secs_f64(a.at - now));
+        }
+        // One prompt byte per token (plus BOS server-side).
+        let prompt = "x".repeat(a.prompt_tokens.max(1) as usize);
+        if let Err(e) = writeln!(out, "GEN {} {}", a.max_new, prompt) {
+            log::error!("loadgen client: send failed: {e}");
+            st.errors += 1;
+            return st;
+        }
+        // TTFT is staged and only recorded on DONE: a stream that is cut
+        // short (mid-generation rejection) must not contribute latency
+        // samples for a request that never completed.
+        let mut ttft_sample = None;
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) => {
+                    log::error!("loadgen client: server closed the connection mid-request");
+                    st.errors += 1;
+                    return st;
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    log::error!("loadgen client: recv failed: {e}");
+                    st.errors += 1;
+                    return st;
+                }
+            }
+            match net::parse_reply(line.trim()) {
+                Reply::Tok { .. } => {
+                    if ttft_sample.is_none() {
+                        ttft_sample = Some(t0.elapsed().as_secs_f64() - a.at);
+                    }
+                    st.tokens += 1;
+                }
+                Reply::Done { .. } => {
+                    if let Some(x) = ttft_sample {
+                        st.ttft.push(x);
+                    }
+                    st.e2e.push(t0.elapsed().as_secs_f64() - a.at);
+                    st.completed += 1;
+                    break;
+                }
+                Reply::Busy { .. } => {
+                    st.busy += 1;
+                    break;
+                }
+                Reply::Err(_) => {
+                    st.errors += 1;
+                    break;
+                }
+                Reply::Bye => {
+                    st.errors += 1;
+                    break 'arrivals;
+                }
+            }
+        }
+    }
+    // Per-connection close; the server keeps running.
+    let _ = writeln!(out, "QUIT");
+    st
+}
+
+/// Open a throwaway connection and ask the server to drain and exit.
+pub fn send_shutdown(addr: &str) -> Result<()> {
+    let mut conn = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    writeln!(conn, "SHUTDOWN")?;
+    // Wait for the BYE (or close) so the server definitely saw it.
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+    let _ = reader.read_line(&mut line);
+    Ok(())
+}

@@ -6,6 +6,7 @@
 //! Table 1) and [`LengthDist::paper_long`] (3K–64K, mean ≈ 6.7K; Fig. 6b),
 //! plus the decode workload of §5.2.2 (input+output ≈ 2.5K).
 
+pub mod loadgen;
 mod trace;
 
 pub use trace::{read_trace, write_trace};

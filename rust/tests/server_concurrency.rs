@@ -1,0 +1,140 @@
+//! Integration tests for the concurrent TCP serving frontend over the
+//! mock-engine cluster: interleaved streaming across ≥ 4 connections,
+//! `BUSY` load shedding under overload, and the drain-on-`SHUTDOWN` path.
+//! No artifacts or `pjrt` feature required.
+
+use sbs::cluster::workers::{AdmissionConfig, EngineSpec, RealClusterConfig};
+use sbs::engine::mock::MockEngineConfig;
+use sbs::scheduler::flow::FlowPolicy;
+use sbs::testing::net::{LineClient, Reply, TestServer};
+use std::time::Duration;
+
+fn mock_cfg() -> RealClusterConfig {
+    RealClusterConfig {
+        engine: EngineSpec::Mock(MockEngineConfig::default()),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn four_concurrent_clients_stream_interleaved() {
+    let server = TestServer::start(mock_cfg());
+    let mut handles = Vec::new();
+    for i in 0..4 {
+        let addr = server.addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = LineClient::connect(&addr).expect("connect");
+            let prompt = format!("client {i} {}", "x".repeat(40));
+            let out = c.gen(24, &prompt).expect("gen");
+            let _ = c.send("QUIT");
+            out
+        }));
+    }
+    let outs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (i, o) in outs.iter().enumerate() {
+        assert!(!o.busy, "client {i} unexpectedly BUSY under light load");
+        assert_eq!(o.tokens.len(), 24, "client {i} token count");
+        assert!(o.done.is_some(), "client {i} missing DONE");
+        let done = o.done.as_deref().unwrap();
+        assert!(done.contains("ttft_ms="), "DONE carries ttft: {done}");
+    }
+    // Streaming must interleave across connections: some client receives
+    // its first token while another client's stream is still open.
+    let mut overlap = false;
+    for a in &outs {
+        for b in &outs {
+            let (fa, la) = (a.tok_times[0], *a.tok_times.last().unwrap());
+            let fb = b.tok_times[0];
+            if fb > fa && fb < la {
+                overlap = true;
+            }
+        }
+    }
+    assert!(overlap, "expected interleaved token streams across connections");
+    server.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn overload_returns_busy_then_recovers() {
+    let mut cfg = mock_cfg();
+    cfg.admission = AdmissionConfig {
+        max_inflight: 2,
+        policy: FlowPolicy::RejectOverloaded,
+        ..Default::default()
+    };
+    // Slow decode so admitted jobs hold the in-flight window open while
+    // the burst lands.
+    cfg.engine = EngineSpec::Mock(MockEngineConfig {
+        t_decode_step: 0.01,
+        ..Default::default()
+    });
+    let server = TestServer::start(cfg);
+    let mut handles = Vec::new();
+    for i in 0..8 {
+        let addr = server.addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = LineClient::connect(&addr).expect("connect");
+            let out = c.gen(32, &format!("burst client {i}")).expect("gen");
+            let _ = c.send("QUIT");
+            out
+        }));
+    }
+    let outs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let busy = outs.iter().filter(|o| o.busy).count();
+    let done = outs.iter().filter(|o| o.done.is_some()).count();
+    assert!(busy > 0, "8-deep burst over a 2-slot window must shed load");
+    assert!(done > 0, "admitted requests must still complete");
+    // Recovery: once the burst drains, a fresh request is admitted.
+    let mut c = LineClient::connect(&server.addr).expect("connect");
+    let mut recovered = false;
+    for _ in 0..100 {
+        let out = c.gen(4, "post-burst probe").expect("gen");
+        if !out.busy {
+            assert_eq!(out.tokens.len(), 4);
+            recovered = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(recovered, "server must admit again after the overload drains");
+    let _ = c.send("QUIT");
+    server.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn shutdown_drains_inflight_generation() {
+    let server = TestServer::start(mock_cfg());
+    let addr = server.addr.clone();
+    let (first_tok_tx, first_tok_rx) = std::sync::mpsc::channel();
+    let client = std::thread::spawn(move || {
+        let mut c = LineClient::connect(&addr).expect("connect");
+        c.send("GEN 64 drain me across the shutdown boundary").expect("send");
+        let mut tokens = 0u32;
+        let mut done = false;
+        loop {
+            match c.recv().expect("recv") {
+                Some(Reply::Tok { .. }) => {
+                    tokens += 1;
+                    if tokens == 1 {
+                        first_tok_tx.send(()).unwrap();
+                    }
+                }
+                Some(Reply::Done { .. }) => {
+                    done = true;
+                    break;
+                }
+                _ => break,
+            }
+        }
+        (tokens, done)
+    });
+    // Wait until the generation is demonstrably in flight, then ask the
+    // server to shut down mid-stream.
+    first_tok_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("first token before shutdown");
+    server.shutdown().expect("drain shutdown");
+    let (tokens, done) = client.join().unwrap();
+    assert!(done, "in-flight generation must complete through shutdown");
+    assert_eq!(tokens, 64, "no tokens may be dropped by the drain");
+}
