@@ -1,13 +1,50 @@
 //! Paper Figure 7: decode KV-cache load dispersion across DP=32 units
 //! over time — baseline (blind random routing) vs IQR-aware
-//! lexicographical scheduling.
+//! lexicographical scheduling — plus the live counterpart: the same
+//! comparison on the threaded mock-engine cluster with a 4-worker decode
+//! DP pool, measured through the shared dispatch core's per-DP
+//! occupancy/imbalance gauges.
 //!
 //! Run: `cargo bench --bench bench_fig7_decode_balance`
 
 use sbs::bench_harness::section;
+use sbs::cluster::dispatch::DecodePolicy;
+use sbs::cluster::workers::RealCluster;
 use sbs::figures;
+use sbs::metrics::DecodePoolStats;
+use sbs::testing::scenarios::{skewed_decode_cluster, submit_skewed_jobs};
+
+/// Live decode-balance scenario: skewed output lengths (every 4th job is
+/// 50× longer) over `n_decode = 4` mock decode workers — the same
+/// configuration the `decode_balance` integration suite asserts on.
+fn live_decode_balance(policy: DecodePolicy) -> anyhow::Result<DecodePoolStats> {
+    let cluster = RealCluster::start(skewed_decode_cluster(policy, 4))?;
+    let handle = cluster.handle();
+    submit_skewed_jobs(&cluster, 40, 4, 150, 3);
+    let _ = cluster.finish()?;
+    Ok(handle.decode_stats())
+}
 
 fn main() {
     section("Figure 7 — decode KV load distribution");
     let _ = figures::run_fig7(figures::FIG_SEED);
+
+    section("Live decode-balance (mock cluster, n_decode = 4, skewed outputs)");
+    let policies = [
+        DecodePolicy::LoadAware(Default::default()),
+        DecodePolicy::RoundRobin,
+        DecodePolicy::Random,
+    ];
+    for policy in policies {
+        match live_decode_balance(policy) {
+            Ok(stats) => println!(
+                "{:>11}: busy-time imbalance {:.3} (max/mean over {} DP units, {} placements)",
+                stats.policy,
+                stats.imbalance(),
+                stats.units.len(),
+                stats.total_placed(),
+            ),
+            Err(e) => eprintln!("live scenario failed: {e:#}"),
+        }
+    }
 }

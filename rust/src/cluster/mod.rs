@@ -5,13 +5,17 @@
 //!   real PJRT engine (H800 substitute; see DESIGN.md §2).
 //! * [`prefill`] / [`decode`] — gated batch engine models with DP sync
 //!   barriers.
+//! * [`dispatch`] — the transport-agnostic dispatch core: the shared
+//!   scheduler-driving state machine (prefill dispatch + decode DP
+//!   placement + per-DP ledger) that both drivers below execute.
 //! * [`sim`] — the discrete-event driver reproducing the paper's cluster
 //!   experiments.
 //! * [`workers`] — threads running *actual* PJRT forward passes behind the
-//!   same scheduler, proving the control plane end-to-end.
+//!   same dispatch core, proving the control plane end-to-end.
 
 pub mod costmodel;
 pub mod decode;
+pub mod dispatch;
 pub mod events;
 pub mod prefill;
 pub mod sim;

@@ -7,32 +7,33 @@
 //! ([`super::decode`]), a KV-transfer fabric, and either the staggered
 //! batch scheduler or an immediate-dispatch baseline in the control plane.
 //! Time is virtual; every run is deterministic given the workload seed.
+//!
+//! All scheduling decisions — prefill dispatch *and* decode placement —
+//! go through the shared [`DispatchCore`]; this module only owns the
+//! virtual transport (event queue), the engine models and the metrics.
+//! The threaded real cluster ([`super::workers`]) drives the same core
+//! over sockets and threads.
 
 use super::costmodel::{DecodeCostModel, DpStepLoad, KvTransferModel, PrefillCostModel};
 use super::decode::{DecodeCaps, DecodeEngine};
+use super::dispatch::{
+    DecodeAdmission, DecodeJoin, DecodePolicy, DispatchCore, DispatchCoreConfig,
+    EndForwardBacklog,
+};
 use super::events::EventQueue;
 use super::prefill::PrefillEngine;
-use crate::metrics::{RequestMetrics, ServingReport};
-use crate::scheduler::baseline::{ImmediatePolicy, ImmediateScheduler};
-use crate::scheduler::decode::{schedule_batch, DecodeSchedConfig};
+use crate::metrics::{DecodePoolStats, RequestMetrics, ServingReport};
+use crate::scheduler::baseline::ImmediatePolicy;
+use crate::scheduler::decode::DecodeSchedConfig;
 use crate::scheduler::pbaa::Assignment;
-use crate::scheduler::staggered::{
-    SchedulerAction, SchedulerEvent, StaggeredConfig, StaggeredScheduler,
-};
-use crate::scheduler::state::DpState;
+use crate::scheduler::staggered::{SchedulerAction, StaggeredConfig};
 use crate::scheduler::types::{DpUnitId, Request};
 use crate::workload::WorkloadSpec;
 
-/// Prefill control-plane mode.
-#[derive(Debug, Clone)]
-pub enum SchedMode {
-    /// The paper's staggered batch scheduler.
-    Staggered(StaggeredConfig),
-    /// Immediate dispatch with a classical policy (baseline).
-    Immediate(ImmediatePolicy),
-}
+pub use super::dispatch::SchedMode;
 
-/// Decode placement mode (§4.3 vs baselines).
+/// Decode placement mode (§4.3 vs baselines). Thin figure-facing alias
+/// over the dispatch core's [`DecodePolicy`].
 #[derive(Debug, Clone)]
 pub enum DecodePlacement {
     /// Algorithm 3: IQR masking + lexicographic ⟨B, K⟩.
@@ -41,6 +42,17 @@ pub enum DecodePlacement {
     Random,
     /// Blind strict round-robin (ablation).
     RoundRobin,
+}
+
+impl DecodePlacement {
+    /// The dispatch-core policy this placement mode maps to.
+    pub fn policy(&self) -> DecodePolicy {
+        match self {
+            DecodePlacement::IqrLex(c) => DecodePolicy::LoadAware(c.clone()),
+            DecodePlacement::Random => DecodePolicy::Random,
+            DecodePlacement::RoundRobin => DecodePolicy::RoundRobin,
+        }
+    }
 }
 
 /// Cluster shape.
@@ -136,14 +148,42 @@ impl SimConfig {
         self.mode = SchedMode::Immediate(policy);
         self
     }
+
+    fn core_config(&self) -> DispatchCoreConfig {
+        let t = &self.topology;
+        DispatchCoreConfig {
+            mode: self.mode.clone(),
+            n_prefill: t.n_prefill,
+            dp_prefill: t.dp_prefill,
+            c_chunk: t.c_chunk,
+            n_decode: t.n_decode,
+            dp_decode: t.dp_decode,
+            decode_policy: self.decode.policy(),
+            seed: self.workload.seed ^ 0xDECD_E000,
+        }
+    }
 }
 
-/// One decode join waiting for placement.
-#[derive(Debug, Clone)]
-struct PendingJoin {
-    req: usize,
-    kv: u32,
-    remaining_out: u32,
+/// Engine-backed admission for the DES: hard KV/batch caps checked
+/// against — and joins committed to — the decode engines, so
+/// admissibility stays exact within one placement cycle.
+struct EngineAdmission<'a> {
+    decode: &'a mut Vec<DecodeEngine>,
+}
+
+impl DecodeAdmission for EngineAdmission<'_> {
+    fn admissible(&mut self, unit: DpUnitId, kv: u32) -> bool {
+        self.decode[unit.instance as usize].can_accept(unit.dp as usize, kv)
+    }
+
+    fn commit(&mut self, unit: DpUnitId, join: &DecodeJoin) {
+        self.decode[unit.instance as usize].join(
+            unit.dp as usize,
+            join.request_id as usize,
+            join.kv_tokens,
+            join.remaining_out,
+        );
+    }
 }
 
 /// Simulation events.
@@ -177,6 +217,8 @@ pub struct SimReport {
     pub report: ServingReport,
     /// Decode KV snapshots `(t, per-unit loads)` for Fig. 7.
     pub kv_series: Vec<(f64, Vec<DpStepLoad>)>,
+    /// Per-DP decode occupancy + imbalance gauges from the dispatch core.
+    pub decode_pool: DecodePoolStats,
     /// Total prefill forward passes executed.
     pub prefill_passes: u64,
     /// Total decode steps executed.
@@ -223,17 +265,14 @@ pub struct Simulation {
     requests: Vec<Request>,
     metrics: Vec<RequestMetrics>,
     effective: Vec<u32>, // prefill tokens after cache hits
+    /// The shared dispatch core (all scheduling decisions).
+    core: DispatchCore,
     // Prefill plane.
     prefill: Vec<PrefillEngine>,
     inflight_pass: Vec<Option<(super::prefill::PassRecord, f64)>>,
-    sbs: Option<StaggeredScheduler>,
-    imm: Option<ImmediateScheduler>,
     // Decode plane.
     decode: Vec<DecodeEngine>,
-    decode_states: Vec<DpState>, // pooled across decode instances
-    pending_joins: Vec<PendingJoin>,
-    rr_cursor: usize,
-    place_rng: crate::util::Rng,
+    pending_joins: Vec<DecodeJoin>,
     fault_rng: crate::util::Rng,
     /// EndForward signals eaten by fault injection.
     pub lost_signals: u64,
@@ -279,41 +318,17 @@ impl Simulation {
         let decode = (0..t.n_decode)
             .map(|_| DecodeEngine::with_caps(t.dp_decode, cfg.decode_cost.clone(), cfg.decode_caps))
             .collect();
-        let mut decode_states = Vec::new();
-        for i in 0..t.n_decode {
-            for d in 0..t.dp_decode {
-                decode_states.push(DpState::new(DpUnitId::new(i, d), 0));
-            }
-        }
-        let (sbs, imm) = match &cfg.mode {
-            SchedMode::Staggered(sc) => (
-                Some(StaggeredScheduler::new(
-                    sc.clone(),
-                    t.n_prefill,
-                    t.dp_prefill,
-                    t.c_chunk,
-                )),
-                None,
-            ),
-            SchedMode::Immediate(p) => (
-                None,
-                Some(ImmediateScheduler::new(*p, t.n_prefill, t.dp_prefill, t.c_chunk)),
-            ),
-        };
+        let core = DispatchCore::new(&cfg.core_config());
         Simulation {
             q: EventQueue::new(),
             requests,
             metrics,
             effective,
+            core,
             prefill,
             inflight_pass,
-            sbs,
-            imm,
             decode,
-            decode_states,
             pending_joins: Vec::new(),
-            rr_cursor: 0,
-            place_rng: crate::util::Rng::new(cfg.workload.seed ^ 0xDECD_E000),
             fault_rng: crate::util::Rng::new(cfg.workload.seed ^ 0xFA17_0000),
             lost_signals: 0,
             report: ServingReport::new(0.0),
@@ -349,7 +364,8 @@ impl Simulation {
             match ev {
                 Ev::Arrival(i) => self.on_arrival(i, now),
                 Ev::SchedTimer => {
-                    self.sbs_event(SchedulerEvent::Timer { now });
+                    let actions = self.core.on_timer(now);
+                    self.apply_actions(actions);
                 }
                 Ev::Deliver {
                     instance,
@@ -385,31 +401,12 @@ impl Simulation {
 
     fn on_arrival(&mut self, i: usize, now: f64) {
         let req = self.requests[i].clone();
-        match (&mut self.sbs, &mut self.imm) {
-            (Some(_), _) => {
-                self.sbs_event(SchedulerEvent::Arrival { request: req, now });
-            }
-            (_, Some(imm)) => {
-                // Immediate dispatch: bind to an instance right now.
-                let a = imm.dispatch(req);
-                self.metrics[i].t_dispatch = now;
-                self.q.push(
-                    now + self.cfg.l_net,
-                    Ev::Deliver {
-                        instance: a.unit.instance,
-                        assignments: vec![a],
-                        dispatched_at: now,
-                    },
-                );
-            }
-            _ => unreachable!(),
-        }
+        let actions = self.core.on_arrival(req, now);
+        self.apply_actions(actions);
     }
 
-    /// Feed one event to the SBS scheduler and execute resulting actions.
-    fn sbs_event(&mut self, ev: SchedulerEvent) {
-        let Some(sbs) = self.sbs.as_mut() else { return };
-        let actions = sbs.on_event(ev);
+    /// Execute dispatch-core decisions on the simulated transport.
+    fn apply_actions(&mut self, actions: Vec<SchedulerAction>) {
         for act in actions {
             match act {
                 SchedulerAction::Dispatch(batch) => {
@@ -451,12 +448,7 @@ impl Simulation {
             let eff = a.request.input_tokens - a.cached_tokens;
             self.effective[i] = eff.max(1);
             // Tokens have physically arrived on the device: flight→queued.
-            if let Some(sbs) = self.sbs.as_mut() {
-                sbs.state.dp_mut(a.unit).on_ack(self.effective[i]);
-            }
-            if let Some(imm) = self.imm.as_mut() {
-                imm.state.dp_mut(a.unit).on_ack(self.effective[i]);
-            }
+            self.core.on_deliver_ack(a.unit, self.effective[i]);
             self.prefill[instance as usize].enqueue(
                 a.unit.dp as usize,
                 i,
@@ -504,12 +496,7 @@ impl Simulation {
         // Consumption feedback to the control plane's capacity model.
         for item in &pass.items {
             let unit = DpUnitId::new(instance, item.dp as u32);
-            if let Some(sbs) = self.sbs.as_mut() {
-                sbs.state.dp_mut(unit).on_consumed(item.tokens);
-            }
-            if let Some(imm) = self.imm.as_mut() {
-                imm.state.dp_mut(unit).on_consumed(item.tokens);
-            }
+            self.core.on_prefill_consumed(unit, item.tokens);
         }
         // First tokens + decode handoff.
         for item in &pass.items {
@@ -535,17 +522,13 @@ impl Simulation {
             self.lost_signals += 1;
         } else {
             let backlog = self.prefill[instance as usize].backlog_tokens();
-            if self.sbs.is_some() {
-                self.sbs_event(SchedulerEvent::EndForward {
-                    instance,
-                    t_measured: pass.duration,
-                    remaining: Some(backlog),
-                    now,
-                });
-            }
-            if let Some(imm) = self.imm.as_mut() {
-                imm.on_end_forward(instance, now);
-            }
+            let actions = self.core.on_end_forward(
+                instance,
+                pass.duration,
+                EndForwardBacklog::Remaining(backlog),
+                now,
+            );
+            self.apply_actions(actions);
         }
         // The gated engine keeps chewing its device queue autonomously,
         // after a short batch-formation window so an EndForward-triggered
@@ -556,81 +539,38 @@ impl Simulation {
     }
 
     fn on_kv_ready(&mut self, i: usize, now: f64) {
-        let kv = self.requests[i].input_tokens;
-        let remaining_out = self.requests[i].output_tokens - 1;
-        self.pending_joins.push(PendingJoin {
-            req: i,
-            kv,
-            remaining_out,
+        self.pending_joins.push(DecodeJoin {
+            request_id: i as u64,
+            kv_tokens: self.requests[i].input_tokens,
+            remaining_out: self.requests[i].output_tokens - 1,
         });
-        self.place_joins();
+        self.place_joins(now);
         for inst in 0..self.decode.len() {
             self.try_start_step(inst as u32, now);
         }
     }
 
-    /// Place all pending joins across the pooled decode DP units using the
-    /// configured policy, respecting each unit's hard batch/KV caps.
+    /// Place all pending joins across the pooled decode DP units through
+    /// the dispatch core, respecting each unit's hard batch/KV caps.
     /// Joins with no admissible unit stay parked (retried at the next step
     /// boundary) — this is the decode-side admission backpressure a real
     /// engine's KV-block budget enforces.
-    fn place_joins(&mut self) {
+    fn place_joins(&mut self, now: f64) {
         if self.pending_joins.is_empty() {
             return;
         }
-        // Refresh the pooled DP state from engine ground truth.
-        let dp_per = self.cfg.topology.dp_decode as usize;
-        for (inst, e) in self.decode.iter().enumerate() {
-            for (d, load) in e.unit_loads().iter().enumerate() {
-                let s = &mut self.decode_states[inst * dp_per + d];
-                s.batch = load.batch;
-                s.kv_tokens = load.kv_tokens;
-            }
+        // Refresh the core's pooled DP ledger from engine ground truth.
+        let mut loads = Vec::new();
+        for e in &self.decode {
+            loads.extend(e.unit_loads());
         }
-        let mut joins = std::mem::take(&mut self.pending_joins);
-        // Fill-the-valley placement order: heaviest first (§4.3.2); the
-        // per-join snapshot semantics of Algorithm 3 are preserved by
-        // placing one request at a time against admissible units.
-        joins.sort_by(|a, b| (b.kv + b.remaining_out).cmp(&(a.kv + a.remaining_out)));
-        let mut parked = Vec::new();
-        for j in joins {
-            // Admissible units under hard caps.
-            let admissible: Vec<usize> = (0..self.decode_states.len())
-                .filter(|&u| {
-                    let inst = u / dp_per;
-                    let dp = u % dp_per;
-                    self.decode[inst].can_accept(dp, j.kv)
-                })
-                .collect();
-            if admissible.is_empty() {
-                parked.push(j);
-                continue;
-            }
-            // Run the policy over a view of the admissible units.
-            let mut view: Vec<DpState> = admissible
-                .iter()
-                .map(|&u| self.decode_states[u].clone())
-                .collect();
-            let req = Request::new(j.req as u64, j.kv, j.remaining_out, 0.0);
-            let chosen_view_idx = match &self.cfg.decode {
-                DecodePlacement::IqrLex(cfg) => {
-                    let a = schedule_batch(cfg, vec![req], &mut view);
-                    view.iter().position(|d| d.id == a[0].unit).unwrap()
-                }
-                DecodePlacement::Random => self.place_rng.index(view.len()),
-                DecodePlacement::RoundRobin => {
-                    let i = self.rr_cursor % view.len();
-                    self.rr_cursor = self.rr_cursor.wrapping_add(1);
-                    i
-                }
-            };
-            let u = admissible[chosen_view_idx];
-            self.decode_states[u].on_decode_join(j.kv + j.remaining_out);
-            let inst = u / dp_per;
-            let dp = u % dp_per;
-            self.decode[inst].join(dp, j.req, j.kv, j.remaining_out);
-        }
-        self.pending_joins = parked;
+        self.core.sync_decode_loads(&loads);
+        let joins = std::mem::take(&mut self.pending_joins);
+        let mut adm = EngineAdmission {
+            decode: &mut self.decode,
+        };
+        let out = self.core.place_decode(joins, now, &mut adm);
+        self.pending_joins = out.parked;
     }
 
     fn try_start_step(&mut self, instance: u32, now: f64) {
@@ -651,11 +591,12 @@ impl Simulation {
         }
         for (req, finished) in out.emissions {
             if finished {
+                self.core.on_decode_leave(req as u64, now);
                 let total_out = self.requests[req].output_tokens;
                 self.complete_request(req, now, total_out);
             }
         }
-        self.place_joins();
+        self.place_joins(now);
         self.try_start_step(instance, now);
     }
 
@@ -675,12 +616,13 @@ impl Simulation {
         SimReport {
             report: self.report,
             kv_series: self.kv_series,
+            decode_pool: self.core.decode_stats(self.q.now()),
             prefill_passes: self.prefill_passes,
             decode_steps: self.decode_steps,
             decode_busy_s: self.decode_busy_s,
             decode_tokens: self.decode_tokens,
             straggler_waste_s: self.straggler_waste_s,
-            i_opt_final: self.sbs.as_ref().map(|s| s.i_opt()).unwrap_or(0.0),
+            i_opt_final: self.core.i_opt(),
             completed: self.completed,
             offered: self.requests.len(),
             lost_signals: self.lost_signals,
@@ -751,5 +693,15 @@ mod tests {
         assert!(r.kv_series.len() > 10);
         let (mean, std) = r.kv_band();
         assert!(mean >= 0.0 && std >= 0.0);
+    }
+
+    #[test]
+    fn decode_pool_gauges_populated() {
+        let r = Simulation::run(&small_cfg(10.0, true));
+        let t = SimConfig::paper_fig6a(1.0).topology;
+        assert_eq!(r.decode_pool.units.len(), (t.n_decode * t.dp_decode) as usize);
+        assert!(r.decode_pool.total_placed() > 0);
+        assert!(r.decode_pool.imbalance() >= 1.0);
+        assert_eq!(r.decode_pool.policy, "load-aware");
     }
 }

@@ -3,19 +3,22 @@
 //! path).
 //!
 //! Topology: `n_prefill` prefill workers (one gated engine thread each —
-//! DP=1 per instance; sub-instance DP balancing is exercised at scale in
-//! the DES) and one batched decode worker. The scheduler thread runs the
-//! identical [`StaggeredScheduler`] state machine the simulator uses,
+//! DP=1 per instance) and `n_decode` batched decode DP workers (one
+//! engine thread each). The scheduler thread runs the shared
+//! [`DispatchCore`] — the identical state machine the simulator drives —
 //! receiving real `EndForward` signals over channels and arming real
-//! timers via `recv_timeout` — the end-to-end proof that L3, L2 and L1
-//! compose.
+//! timers via `recv_timeout`. Prefill completions are placed onto a
+//! decode DP unit by the core's [`DecodePolicy`] (Algorithm 3 load-aware
+//! allocation, or the round-robin / random baselines), so the paper's
+//! Fig. 7 decode-balance claim is measurable end to end on real sockets.
 //!
 //! ## Completion path (concurrent frontend architecture)
 //!
 //! Submission and completion routing are split: any number of frontend
 //! threads hold a cloned [`ClusterHandle`] and submit concurrently, while
 //! a dedicated **router** thread fans worker events out to per-job update
-//! channels. Workers publish every generated token as a [`JobUpdate`], so
+//! channels — per job, regardless of which decode DP unit owns the
+//! sequence. Workers publish every generated token as a [`JobUpdate`], so
 //! a streaming frontend observes TTFT on the wire the moment prefill
 //! completes — not after the full generation. The
 //! [`AdmissionController`] (Algorithm 2 phase 3) guards
@@ -26,19 +29,21 @@
 //! (artifacts + `pjrt` feature) or the sleep-based mock, which makes the
 //! whole stack runnable on a bare checkout.
 
+use super::dispatch::{
+    DecodeAdmission, DecodeJoin, DecodePolicy, DispatchCore, DispatchCoreConfig,
+    EndForwardBacklog,
+};
 use crate::engine::mock::{MockEngine, MockEngineConfig};
 use crate::engine::sampler::Sampling;
 use crate::engine::{EngineBackend, MiniEngine, PrefillOutcome};
-use crate::metrics::{RequestMetrics, ServingReport};
+use crate::metrics::{DecodePoolStats, RequestMetrics, ServingReport};
 use crate::runtime::Runtime;
-use crate::scheduler::baseline::{ImmediatePolicy, ImmediateScheduler};
+use crate::scheduler::decode::DecodeSchedConfig;
 use crate::scheduler::flow::{AdmissionController, AdmissionDecision, FlowPolicy};
 use crate::scheduler::interval::IntervalConfig;
 use crate::scheduler::pbaa::PbaaConfig;
-use crate::scheduler::staggered::{
-    SchedulerAction, SchedulerEvent, StaggeredConfig, StaggeredScheduler,
-};
-use crate::scheduler::types::Request;
+use crate::scheduler::staggered::{SchedulerAction, StaggeredConfig};
+use crate::scheduler::types::{DpUnitId, Request};
 use crate::util::{Clock, RealClock};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
@@ -49,14 +54,9 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Control-plane choice for the real cluster.
-#[derive(Debug, Clone)]
-pub enum RealSchedMode {
-    /// Staggered batch scheduling (the paper).
-    Staggered(StaggeredConfig),
-    /// Immediate dispatch baseline.
-    Immediate(ImmediatePolicy),
-}
+/// Control-plane choice for the real cluster — the same [`SchedMode`] the
+/// simulator consumes, re-exported under its historical name.
+pub use super::dispatch::SchedMode as RealSchedMode;
 
 /// How worker threads execute forward passes.
 #[derive(Debug, Clone)]
@@ -149,13 +149,17 @@ impl Default for AdmissionConfig {
 pub struct RealClusterConfig {
     /// Prefill instances (one engine thread each).
     pub n_prefill: u32,
-    /// Decode batch size (one decode engine; must be a compiled variant
-    /// in PJRT mode).
+    /// Decode DP workers (one batched engine thread each).
+    pub n_decode: u32,
+    /// Decode batch size per decode worker (must be a compiled variant in
+    /// PJRT mode).
     pub decode_batch: u32,
     /// Scheduler-visible per-instance token budget per dispatch cycle.
     pub c_chunk: u32,
     /// Control plane.
     pub mode: RealSchedMode,
+    /// Decode placement policy across the DP pool.
+    pub decode_policy: DecodePolicy,
     /// Sampling policy for generation.
     pub sampling: Sampling,
     /// RNG seed.
@@ -181,12 +185,15 @@ impl Default for RealClusterConfig {
                 n_limit: 10_000,
                 ..Default::default()
             },
+            decode: DecodeSchedConfig::default(),
         };
         RealClusterConfig {
             n_prefill: 2,
+            n_decode: 1,
             decode_batch: 4,
             c_chunk: 256,
             mode: RealSchedMode::Staggered(sc),
+            decode_policy: DecodePolicy::LoadAware(DecodeSchedConfig::default()),
             sampling: Sampling::Greedy,
             seed: 7,
             engine: EngineSpec::Pjrt {
@@ -267,7 +274,23 @@ pub enum Admission {
 
 enum SchedMsg {
     Submit(Job, f64),
-    EndForward { instance: u32, t_measured: f64 },
+    EndForward {
+        instance: u32,
+        t_measured: f64,
+    },
+    /// A prefill worker finished a job that still needs decode: hand it
+    /// to the scheduler thread for placement onto a decode DP unit.
+    PrefillDone {
+        id: u64,
+        outcome: Box<PrefillOutcome>,
+        max_new: u32,
+        metrics: RequestMetrics,
+    },
+    /// A decode worker released a sequence (finished or rejected): free
+    /// its slot and ledger charge.
+    DecodeDone {
+        id: u64,
+    },
     Drain,
 }
 
@@ -310,6 +333,9 @@ struct ClusterShared {
     ledger: Mutex<Ledger>,
     done_cv: Condvar,
     admission: Mutex<AdmissionController>,
+    /// Latest decode-pool occupancy snapshot, published by the scheduler
+    /// thread after every placement/release (read by `STATS`).
+    decode_stats: Mutex<DecodePoolStats>,
     next_id: AtomicU64,
 }
 
@@ -343,6 +369,11 @@ impl ClusterHandle {
     /// Requests refused by frontend admission control so far.
     pub fn admission_rejected(&self) -> u64 {
         self.shared.admission.lock().unwrap().rejected()
+    }
+
+    /// Latest per-DP decode occupancy + imbalance gauges.
+    pub fn decode_stats(&self) -> DecodePoolStats {
+        self.shared.decode_stats.lock().unwrap().clone()
     }
 
     /// Flow-controlled streaming submission — the serving-frontend path.
@@ -408,27 +439,37 @@ impl RealCluster {
             AdmissionController::new(cfg.admission.policy, cfg.admission.max_inflight);
         admission.flow_mut().shed_fraction = cfg.admission.shed_fraction;
         admission.flow_mut().cooldown = cfg.admission.cooldown;
+        let n_decode = cfg.n_decode.max(1);
         let shared = Arc::new(ClusterShared {
             clock: RealClock::new(),
             ledger: Mutex::new(Ledger::default()),
             done_cv: Condvar::new(),
             admission: Mutex::new(admission),
+            // Shaped all-zero snapshot: STATS reports the pool shape even
+            // before the scheduler thread publishes its first refresh.
+            decode_stats: Mutex::new(DecodePoolStats::zeroed(
+                cfg.decode_policy.name(),
+                (0..n_decode).map(|i| DpUnitId::new(i, 0).to_string()).collect(),
+            )),
             next_id: AtomicU64::new(0),
         });
-
         let (to_sched, sched_rx) = channel::<SchedMsg>();
         let (router_tx, router_rx) = channel::<RouterMsg>();
-        let (decode_tx, decode_rx) = channel::<DecodeMsg>();
         let (ready_tx, ready_rx) = channel::<bool>();
         let mut threads = Vec::new();
-        {
+        let mut decode_txs = Vec::new();
+        for i in 0..n_decode {
+            let (tx, rx) = channel::<DecodeMsg>();
+            decode_txs.push(tx);
             let spec = cfg.engine.clone();
             let router = router_tx.clone();
+            let to_sched = to_sched.clone();
             let shared = shared.clone();
-            let (sampling, batch, seed) = (cfg.sampling, cfg.decode_batch, cfg.seed);
+            let (sampling, batch) = (cfg.sampling, cfg.decode_batch);
+            let seed = cfg.seed.wrapping_add(1000 + i as u64);
             let ready = ready_tx.clone();
             threads.push(std::thread::spawn(move || {
-                decode_worker(spec, batch, sampling, seed, decode_rx, router, shared, ready);
+                decode_worker(i, spec, batch, sampling, seed, rx, to_sched, router, shared, ready);
             }));
         }
 
@@ -438,12 +479,11 @@ impl RealCluster {
             prefill_txs.push(tx);
             let spec = cfg.engine.clone();
             let to_sched = to_sched.clone();
-            let decode_tx = decode_tx.clone();
             let router = router_tx.clone();
             let shared = shared.clone();
             let ready = ready_tx.clone();
             threads.push(std::thread::spawn(move || {
-                prefill_worker(i, spec, rx, to_sched, decode_tx, router, shared, ready);
+                prefill_worker(i, spec, rx, to_sched, router, shared, ready);
             }));
         }
 
@@ -453,7 +493,7 @@ impl RealCluster {
         // failures explicitly so a misconfigured cluster fails fast
         // instead of sitting out the timeout.
         drop(ready_tx);
-        for _ in 0..(cfg.n_prefill + 1) {
+        for _ in 0..(cfg.n_prefill + n_decode) {
             match ready_rx.recv_timeout(Duration::from_secs(600)) {
                 Ok(true) => {}
                 Ok(false) => {
@@ -472,7 +512,7 @@ impl RealCluster {
             let router = router_tx.clone();
             let shared = shared.clone();
             threads.push(std::thread::spawn(move || {
-                scheduler_loop(cfg2, sched_rx, prefill_txs, decode_tx, router, shared);
+                scheduler_loop(cfg2, sched_rx, prefill_txs, decode_txs, router, shared);
             }));
         }
 
@@ -601,19 +641,139 @@ fn router_loop(rx: Receiver<RouterMsg>, shared: Arc<ClusterShared>) {
     }
 }
 
-/// Scheduler thread: the SBS (or baseline) state machine on real time.
+/// A prefilled job waiting for decode placement (the scheduler thread's
+/// payload store behind the core's parked [`DecodeJoin`]s).
+struct JoinPayload {
+    outcome: Box<PrefillOutcome>,
+    max_new: u32,
+    metrics: RequestMetrics,
+}
+
+/// Slot-count admission for the live pool: `outstanding` tracks
+/// admitted-but-unfinished sequences per worker (the live counterpart of
+/// the DES's KV-cap check), committed per placement so one freed slot
+/// cannot be handed to several joins in the same cycle.
+struct SlotAdmission<'a> {
+    outstanding: &'a mut [u32],
+    slots: u32,
+}
+
+impl DecodeAdmission for SlotAdmission<'_> {
+    fn admissible(&mut self, unit: DpUnitId, _kv: u32) -> bool {
+        self.outstanding[unit.instance as usize] < self.slots
+    }
+
+    fn commit(&mut self, unit: DpUnitId, _join: &DecodeJoin) {
+        self.outstanding[unit.instance as usize] += 1;
+    }
+}
+
+/// Park one prefilled job for decode placement (join + engine payload).
+fn park_join(
+    parked: &mut Vec<DecodeJoin>,
+    payloads: &mut HashMap<u64, JoinPayload>,
+    id: u64,
+    outcome: Box<PrefillOutcome>,
+    max_new: u32,
+    metrics: RequestMetrics,
+) {
+    parked.push(DecodeJoin {
+        request_id: id,
+        kv_tokens: outcome.len as u32,
+        remaining_out: max_new,
+    });
+    payloads.insert(
+        id,
+        JoinPayload {
+            outcome,
+            max_new,
+            metrics,
+        },
+    );
+}
+
+/// Release one decode sequence from the ledger and its worker's slot
+/// count. Returns whether anything was released.
+fn release_decode(core: &mut DispatchCore, outstanding: &mut [u32], id: u64, now: f64) -> bool {
+    match core.on_decode_leave(id, now) {
+        Some(unit) => {
+            let inst = unit.instance as usize;
+            outstanding[inst] = outstanding[inst].saturating_sub(1);
+            true
+        }
+        None => false,
+    }
+}
+
+/// Place parked joins through the dispatch core and ship the placed ones
+/// to their decode workers. Returns whether any ledger state changed (so
+/// the caller can skip republishing the gauges).
+#[allow(clippy::too_many_arguments)]
+fn place_parked(
+    core: &mut DispatchCore,
+    parked: &mut Vec<DecodeJoin>,
+    payloads: &mut HashMap<u64, JoinPayload>,
+    outstanding: &mut [u32],
+    slots: u32,
+    decode_txs: &[Sender<DecodeMsg>],
+    router: &Sender<RouterMsg>,
+    now: f64,
+) -> bool {
+    if parked.is_empty() {
+        return false;
+    }
+    let joins = std::mem::take(parked);
+    let mut adm = SlotAdmission {
+        outstanding: &mut *outstanding,
+        slots,
+    };
+    let out = core.place_decode(joins, now, &mut adm);
+    let changed = !out.placed.is_empty();
+    for (j, unit) in out.placed {
+        let inst = unit.instance as usize;
+        let Some(p) = payloads.remove(&j.request_id) else {
+            // No engine payload (duplicate id): undo the placement and
+            // terminalize so the job cannot hang the ledger.
+            outstanding[inst] = outstanding[inst].saturating_sub(1);
+            core.on_decode_leave(j.request_id, now);
+            let _ = router.send(RouterMsg::Update {
+                id: j.request_id,
+                update: JobUpdate::Rejected { id: j.request_id },
+            });
+            continue;
+        };
+        let msg = DecodeMsg::Admit {
+            id: j.request_id,
+            outcome: p.outcome,
+            max_new: p.max_new,
+            metrics: p.metrics,
+        };
+        if decode_txs[inst].send(msg).is_err() {
+            // Worker is gone: terminalize instead of hanging the job.
+            outstanding[inst] = outstanding[inst].saturating_sub(1);
+            core.on_decode_leave(j.request_id, now);
+            let _ = router.send(RouterMsg::Update {
+                id: j.request_id,
+                update: JobUpdate::Rejected { id: j.request_id },
+            });
+        }
+    }
+    *parked = out.parked;
+    changed
+}
+
+/// Scheduler thread: the shared [`DispatchCore`] on real time. Owns both
+/// planes — prefill dispatch (SBS dual trigger or immediate baseline) and
+/// decode placement across the DP pool.
 fn scheduler_loop(
     cfg: RealClusterConfig,
     rx: Receiver<SchedMsg>,
     prefill_txs: Vec<Sender<PrefillMsg>>,
-    decode_tx: Sender<DecodeMsg>,
+    decode_txs: Vec<Sender<DecodeMsg>>,
     router: Sender<RouterMsg>,
     shared: Arc<ClusterShared>,
 ) {
-    let n = cfg.n_prefill;
-    // Job payloads keyed by request id (the scheduler works on Requests).
-    let mut jobs: HashMap<u64, (Job, f64)> = HashMap::new();
-    let mut sbs = match &cfg.mode {
+    let mode = match &cfg.mode {
         RealSchedMode::Staggered(sc) => {
             // PJRT-mode clamps: dispatch cycles there are seconds (CPU
             // PJRT passes), not the simulator's ~100 ms, so simulator-
@@ -624,16 +784,32 @@ fn scheduler_loop(
                 sc.pbaa.n_limit = sc.pbaa.n_limit.max(10_000);
                 sc.interval.t_default = sc.interval.t_default.max(1.0);
             }
-            Some(StaggeredScheduler::new(sc, n, 1, cfg.c_chunk))
+            RealSchedMode::Staggered(sc)
         }
-        RealSchedMode::Immediate(_) => None,
+        m @ RealSchedMode::Immediate(_) => m.clone(),
     };
-    let mut imm = match &cfg.mode {
-        RealSchedMode::Immediate(p) => Some(ImmediateScheduler::new(*p, n, 1, cfg.c_chunk)),
-        RealSchedMode::Staggered(_) => None,
-    };
+    let n_decode = decode_txs.len() as u32;
+    let mut core = DispatchCore::new(&DispatchCoreConfig {
+        mode,
+        n_prefill: cfg.n_prefill,
+        dp_prefill: 1,
+        c_chunk: cfg.c_chunk,
+        n_decode,
+        dp_decode: 1,
+        decode_policy: cfg.decode_policy.clone(),
+        seed: cfg.seed ^ 0xDECD_E000,
+    });
+    // Job payloads keyed by request id (the scheduler works on Requests).
+    let mut jobs: HashMap<u64, (Job, f64)> = HashMap::new();
+    // Decode joins awaiting placement + their engine payloads.
+    let mut parked: Vec<DecodeJoin> = Vec::new();
+    let mut payloads: HashMap<u64, JoinPayload> = HashMap::new();
+    let mut outstanding = vec![0u32; n_decode as usize];
+    let slots = cfg.decode_batch.max(1);
     let mut next_timer: Option<f64> = None;
     let mut stop = false;
+    // The shaped zero snapshot was published at cluster start; from here
+    // on it is refreshed only when the ledger actually changes.
     while !stop {
         let now = shared.clock.now_s();
         let timeout = next_timer
@@ -642,51 +818,49 @@ fn scheduler_loop(
         let msg = rx.recv_timeout(timeout);
         let now = shared.clock.now_s();
         let mut actions = Vec::new();
+        let mut pool_dirty = false;
         match msg {
             Ok(SchedMsg::Submit(job, t_arrive)) => {
                 let req = Request::new(job.id, job.prompt.len() as u32, job.max_new, t_arrive);
                 jobs.insert(job.id, (job, t_arrive));
-                if let Some(s) = sbs.as_mut() {
-                    actions = s.on_event(SchedulerEvent::Arrival { request: req, now });
-                } else if let Some(im) = imm.as_mut() {
-                    let a = im.dispatch(req);
-                    if let Some(jt) = jobs.remove(&a.request.id) {
-                        let _ = prefill_txs[a.unit.instance as usize]
-                            .send(PrefillMsg::Work(vec![jt]));
-                    }
-                }
+                actions = core.on_arrival(req, now);
             }
             Ok(SchedMsg::EndForward {
                 instance,
                 t_measured,
             }) => {
-                if let Some(s) = sbs.as_mut() {
-                    // The engine fully consumed its dispatched batch
-                    // before signalling: clear the capacity model (the
-                    // simulator gets this via per-pass on_ack/on_consumed;
-                    // the real engine reports completion wholesale).
-                    for dp in s.state.instance_dps_mut(instance) {
-                        let backlog = dp.u_flight + dp.r_queued;
-                        dp.on_ack(dp.u_flight);
-                        dp.on_consumed(backlog);
-                    }
-                    actions = s.on_event(SchedulerEvent::EndForward {
-                        instance,
-                        t_measured,
-                        remaining: Some(0),
-                        now,
-                    });
-                } else if let Some(im) = imm.as_mut() {
-                    im.on_end_forward(instance, now);
-                }
+                // The engine fully consumed its dispatched batch before
+                // signalling; the core clears the capacity model itself.
+                actions =
+                    core.on_end_forward(instance, t_measured, EndForwardBacklog::ConsumedAll, now);
+            }
+            Ok(SchedMsg::PrefillDone {
+                id,
+                outcome,
+                max_new,
+                metrics,
+            }) => park_join(&mut parked, &mut payloads, id, outcome, max_new, metrics),
+            Ok(SchedMsg::DecodeDone { id }) => {
+                pool_dirty |= release_decode(&mut core, &mut outstanding, id, now);
             }
             Ok(SchedMsg::Drain) => stop = true,
             Err(_) => {
                 next_timer = None;
-                if let Some(s) = sbs.as_mut() {
-                    actions = s.on_event(SchedulerEvent::Timer { now });
-                }
+                actions = core.on_timer(now);
             }
+        }
+        pool_dirty |= place_parked(
+            &mut core,
+            &mut parked,
+            &mut payloads,
+            &mut outstanding,
+            slots,
+            &decode_txs,
+            &router,
+            now,
+        );
+        if pool_dirty {
+            *shared.decode_stats.lock().unwrap() = core.decode_stats(now);
         }
         for act in actions {
             match act {
@@ -720,22 +894,40 @@ fn scheduler_loop(
             }
         }
     }
+    // Drain guard: `Drain` is only sent once the ledger's in-flight count
+    // has reached zero, and a parked join always belongs to an in-flight
+    // job — the main loop's place_parked/DecodeDone servicing is what
+    // guarantees no job hangs when a decode DP unit drains last. If a
+    // future caller ever sends Drain early, terminalize whatever is still
+    // parked so subscribers and the ledger drain instead of hanging.
+    if !parked.is_empty() {
+        log::warn!("drain with {} unplaced decode joins; rejecting them", parked.len());
+        for j in parked.drain(..) {
+            payloads.remove(&j.request_id);
+            let _ = router.send(RouterMsg::Update {
+                id: j.request_id,
+                update: JobUpdate::Rejected { id: j.request_id },
+            });
+        }
+    }
+    *shared.decode_stats.lock().unwrap() = core.decode_stats(shared.clock.now_s());
     for tx in &prefill_txs {
         let _ = tx.send(PrefillMsg::Stop);
     }
-    let _ = decode_tx.send(DecodeMsg::Stop);
+    for tx in &decode_txs {
+        let _ = tx.send(DecodeMsg::Stop);
+    }
 }
 
 /// Prefill worker: gated, non-preemptive chunked prefill of each batch.
 /// Streams the first token through the router the moment prefill
-/// completes, so TTFT is observable before decode starts.
-#[allow(clippy::too_many_arguments)]
+/// completes, so TTFT is observable before decode starts; jobs needing
+/// decode go back to the scheduler for DP placement.
 fn prefill_worker(
     instance: u32,
     spec: EngineSpec,
     rx: Receiver<PrefillMsg>,
     to_sched: Sender<SchedMsg>,
-    decode_tx: Sender<DecodeMsg>,
     router: Sender<RouterMsg>,
     shared: Arc<ClusterShared>,
     ready: Sender<bool>,
@@ -781,7 +973,7 @@ fn prefill_worker(
                             }),
                         });
                     } else {
-                        let _ = decode_tx.send(DecodeMsg::Admit {
+                        let _ = to_sched.send(SchedMsg::PrefillDone {
                             id: job.id,
                             outcome: Box::new(outcome),
                             max_new: job.max_new - 1,
@@ -808,15 +1000,19 @@ fn prefill_worker(
     }
 }
 
-/// Decode worker: continuous batched stepping with slot admission. Every
-/// emitted token is streamed through the router.
+/// Decode DP worker: continuous batched stepping with slot admission.
+/// Every emitted token is streamed through the router; every released
+/// sequence (done or rejected) is reported back to the scheduler so the
+/// pool ledger stays exact.
 #[allow(clippy::too_many_arguments)]
 fn decode_worker(
+    instance: u32,
     spec: EngineSpec,
     batch: u32,
     sampling: Sampling,
     seed: u64,
     rx: Receiver<DecodeMsg>,
+    to_sched: Sender<SchedMsg>,
     router: Sender<RouterMsg>,
     shared: Arc<ClusterShared>,
     ready: Sender<bool>,
@@ -824,7 +1020,7 @@ fn decode_worker(
     let mut engine = match spec.build(EngineRole::Decode, batch, sampling, seed) {
         Ok(e) => e,
         Err(e) => {
-            log::error!("decode worker: {e:#}");
+            log::error!("decode worker {instance}: {e:#}");
             let _ = ready.send(false);
             return;
         }
@@ -850,7 +1046,12 @@ fn decode_worker(
                     metrics,
                 } if engine.free_slots() > 0 => {
                     if let Err(e) = engine.admit(&outcome, max_new, id) {
-                        log::error!("admit failed: {e:#}");
+                        log::error!("decode worker {instance}: admit failed: {e:#}");
+                        // Ledger release goes first: the router's terminal
+                        // update is what lets finish() observe the drain,
+                        // and the scheduler must dequeue the DecodeDone
+                        // before the Drain that follows it.
+                        let _ = to_sched.send(SchedMsg::DecodeDone { id });
                         let _ = router.send(RouterMsg::Update {
                             id,
                             update: JobUpdate::Rejected { id },
@@ -923,6 +1124,12 @@ fn decode_worker(
                             let mut tr = tracks.remove(&e.request_id).unwrap();
                             tr.metrics.t_done = now;
                             tr.metrics.output_tokens = tr.tokens.len() as u32;
+                            // DecodeDone before Done: the router update is
+                            // what decrements inflight, so a Drain sent
+                            // after the pool looks empty is guaranteed to
+                            // sit behind this release in the scheduler's
+                            // queue (exact final gauges).
+                            let _ = to_sched.send(SchedMsg::DecodeDone { id: e.request_id });
                             let _ = router.send(RouterMsg::Update {
                                 id: e.request_id,
                                 update: JobUpdate::Done(Completion {
@@ -936,10 +1143,12 @@ fn decode_worker(
                 }
             }
             Err(e) => {
-                log::error!("decode step failed: {e:#}");
+                log::error!("decode worker {instance}: step failed: {e:#}");
                 // Terminalize everything this worker owns so streaming
-                // clients and the ledger drain instead of hanging.
+                // clients, the ledger and the pool accounting drain
+                // instead of hanging.
                 for id in tracks.keys().copied().collect::<Vec<_>>() {
+                    let _ = to_sched.send(SchedMsg::DecodeDone { id });
                     let _ = router.send(RouterMsg::Update {
                         id,
                         update: JobUpdate::Rejected { id },
@@ -947,6 +1156,7 @@ fn decode_worker(
                 }
                 for msg in pending.drain(..) {
                     if let DecodeMsg::Admit { id, .. } = msg {
+                        let _ = to_sched.send(SchedMsg::DecodeDone { id });
                         let _ = router.send(RouterMsg::Update {
                             id,
                             update: JobUpdate::Rejected { id },
@@ -959,11 +1169,13 @@ fn decode_worker(
         }
     }
     if failed {
-        // The engine is dead but prefill workers may still admit: keep
-        // rejecting until the cluster stops so later jobs terminate too.
+        // The engine is dead but the scheduler may still place onto this
+        // unit: keep rejecting (and releasing the ledger) until the
+        // cluster stops so later jobs terminate too.
         while let Ok(msg) = rx.recv() {
             match msg {
                 DecodeMsg::Admit { id, .. } => {
+                    let _ = to_sched.send(SchedMsg::DecodeDone { id });
                     let _ = router.send(RouterMsg::Update {
                         id,
                         update: JobUpdate::Rejected { id },

@@ -179,8 +179,9 @@ impl KvFile {
         }
         if let Some(d) = self.get("decode_placement") {
             cfg.decode = match d {
-                "iqr" => DecodePlacement::IqrLex(DecodeSchedConfig::default()),
+                "iqr" | "load_aware" => DecodePlacement::IqrLex(DecodeSchedConfig::default()),
                 "round_robin" => DecodePlacement::RoundRobin,
+                "random" => DecodePlacement::Random,
                 other => return Err(anyhow!("unknown decode_placement '{other}'")),
             };
         }

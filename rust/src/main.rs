@@ -57,8 +57,10 @@ fn usage() -> String {
        simulate        run one cluster simulation (--help for knobs)\n\
        bench-figures   regenerate paper tables/figures (--all | --fig6a | --fig6b | --table1 | --fig7 | --fig8)\n\
        gen-trace       generate a JSONL workload trace\n\
-       serve           serve the nano-MoE model via SBS (artifacts/ or --engine mock)\n\
+       serve           serve the nano-MoE model via SBS (artifacts/ or --engine mock;\n\
+                       multi-DP decode pool via --n-decode / --decode-policy)\n\
        loadgen         open-loop load generator against a running `serve --listen`\n\
+                       (--arrival poisson|bursty|heavy-tail)\n\
        calibrate       measure PJRT pass times, print cost-model constants"
         .to_string()
 }

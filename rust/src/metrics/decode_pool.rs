@@ -1,0 +1,170 @@
+//! Per-DP decode-pool occupancy and imbalance gauges (the live-cluster
+//! counterpart of Fig. 7's KV-dispersion series).
+//!
+//! The dispatch core maintains these while placing decode sequences; the
+//! serving frontend exposes the snapshot over the wire (`STATS`) so the
+//! load generator can embed it in its JSON report. The headline gauge is
+//! [`DecodePoolStats::imbalance`]: max/mean of per-unit busy time
+//! (sequence-seconds), 1.0 = perfectly balanced.
+
+use crate::json::Json;
+use crate::util::stats;
+
+/// Occupancy gauge for one decode DP unit.
+#[derive(Debug, Clone)]
+pub struct DpOccupancyGauge {
+    /// Unit label (`i<instance>d<dp>`).
+    pub unit: String,
+    /// Sequences placed on this unit so far.
+    pub placed: u64,
+    /// Sequences currently resident.
+    pub active: u32,
+    /// Peak concurrent sequences observed.
+    pub peak_active: u32,
+    /// Integral of `active` over time (sequence-seconds) — the per-unit
+    /// busy-time the imbalance gauge compares.
+    pub seq_seconds: f64,
+    /// Ledger KV tokens currently charged to this unit.
+    pub kv_tokens: u64,
+}
+
+impl DpOccupancyGauge {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("unit", Json::from(self.unit.clone())),
+            ("placed", Json::from(self.placed)),
+            ("active", Json::from(self.active)),
+            ("peak_active", Json::from(self.peak_active)),
+            ("seq_seconds", Json::from(self.seq_seconds)),
+            ("kv_tokens", Json::from(self.kv_tokens)),
+        ])
+    }
+}
+
+/// Snapshot of the whole decode DP pool under one placement policy.
+#[derive(Debug, Clone)]
+pub struct DecodePoolStats {
+    /// Placement policy name (`load-aware` / `round-robin` / `random`).
+    pub policy: String,
+    /// Per-unit gauges, flat unit order.
+    pub units: Vec<DpOccupancyGauge>,
+}
+
+impl DecodePoolStats {
+    /// Empty snapshot (pool not yet started).
+    pub fn empty(policy: &str) -> Self {
+        DecodePoolStats {
+            policy: policy.to_string(),
+            units: Vec::new(),
+        }
+    }
+
+    /// All-zero snapshot with the pool shape known up front (so `STATS`
+    /// reports `n_units` even before the scheduler has placed anything).
+    pub fn zeroed(policy: &str, unit_labels: Vec<String>) -> Self {
+        DecodePoolStats {
+            policy: policy.to_string(),
+            units: unit_labels
+                .into_iter()
+                .map(|unit| DpOccupancyGauge {
+                    unit,
+                    placed: 0,
+                    active: 0,
+                    peak_active: 0,
+                    seq_seconds: 0.0,
+                    kv_tokens: 0,
+                })
+                .collect(),
+        }
+    }
+
+    /// Total sequences placed across the pool.
+    pub fn total_placed(&self) -> u64 {
+        self.units.iter().map(|u| u.placed).sum()
+    }
+
+    /// Max/mean per-unit busy-time imbalance: 1.0 = perfectly balanced,
+    /// `n_units` = everything on one unit. Falls back to placement counts
+    /// when no busy time has accumulated yet; 1.0 for an empty pool.
+    pub fn imbalance(&self) -> f64 {
+        if self.units.is_empty() {
+            return 1.0;
+        }
+        let mut xs: Vec<f64> = self.units.iter().map(|u| u.seq_seconds).collect();
+        if xs.iter().sum::<f64>() <= 0.0 {
+            xs = self.units.iter().map(|u| u.placed as f64).collect();
+        }
+        let mean = stats::mean(&xs);
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        xs.iter().cloned().fold(0.0, f64::max) / mean
+    }
+
+    /// JSON summary (embedded in the loadgen report and `STATS` replies).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::from(self.policy.clone())),
+            ("n_units", Json::from(self.units.len())),
+            ("imbalance", Json::from(self.imbalance())),
+            ("placed", Json::from(self.total_placed())),
+            (
+                "units",
+                Json::Arr(self.units.iter().map(|u| u.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit(name: &str, placed: u64, seq_seconds: f64) -> DpOccupancyGauge {
+        DpOccupancyGauge {
+            unit: name.to_string(),
+            placed,
+            active: 0,
+            peak_active: 1,
+            seq_seconds,
+            kv_tokens: 0,
+        }
+    }
+
+    #[test]
+    fn empty_pool_is_balanced() {
+        assert_eq!(DecodePoolStats::empty("round-robin").imbalance(), 1.0);
+    }
+
+    #[test]
+    fn imbalance_is_max_over_mean() {
+        let s = DecodePoolStats {
+            policy: "round-robin".into(),
+            units: vec![unit("i0d0", 1, 3.0), unit("i1d0", 1, 1.0)],
+        };
+        assert!((s.imbalance() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn falls_back_to_placed_counts_before_busy_time() {
+        let s = DecodePoolStats {
+            policy: "random".into(),
+            units: vec![unit("i0d0", 4, 0.0), unit("i1d0", 0, 0.0)],
+        };
+        assert!((s.imbalance() - 2.0).abs() < 1e-12);
+        assert_eq!(s.total_placed(), 4);
+    }
+
+    #[test]
+    fn json_carries_the_gauges() {
+        let s = DecodePoolStats {
+            policy: "load-aware".into(),
+            units: vec![unit("i0d0", 2, 1.0)],
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("policy").and_then(|x| x.as_str()), Some("load-aware"));
+        assert_eq!(j.get("n_units").and_then(|x| x.as_usize()), Some(1));
+        assert!(j.get("imbalance").and_then(|x| x.as_f64()).is_some());
+        assert_eq!(j.get("units").and_then(|x| x.as_arr()).map(|a| a.len()), Some(1));
+    }
+}

@@ -6,9 +6,11 @@
 //! sustainable QPS (Table 1), per-DP KV-load dispersion (Fig. 7) and
 //! aggregate decode throughput (Fig. 8).
 
+mod decode_pool;
 mod histogram;
 mod recorder;
 
+pub use decode_pool::{DecodePoolStats, DpOccupancyGauge};
 pub use histogram::Histogram;
 pub use recorder::{
     LatencyRecorder, RequestMetrics, ServingReport, ThroughputCounter, UtilizationMeter,

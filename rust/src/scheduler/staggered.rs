@@ -17,6 +17,7 @@
 //! reverts to fixed-interval batch dispatch over the surviving instances
 //! (graceful degradation, §4.1.2).
 
+use super::decode::DecodeSchedConfig;
 use super::interval::{IntervalConfig, IntervalController};
 use super::pbaa::{self, Assignment, PbaaConfig};
 use super::prefix::PrefixCacheModel;
@@ -83,6 +84,11 @@ pub struct StaggeredConfig {
     pub interval: IntervalConfig,
     /// Algorithm 2 knobs.
     pub pbaa: PbaaConfig,
+    /// Algorithm 3 knobs for decode-side placement. The prefill loop
+    /// never reads these; the cluster dispatch core consumes them when
+    /// its decode policy is load-aware, so one `StaggeredConfig` carries
+    /// the paper's full knob set.
+    pub decode: DecodeSchedConfig,
 }
 
 /// The staggered batch scheduler for a prefill pool.
@@ -350,6 +356,7 @@ mod tests {
                 adaptive: true,
             },
             pbaa: PbaaConfig::default(),
+            decode: DecodeSchedConfig::default(),
         };
         StaggeredScheduler::new(cfg, n, dp, 3072)
     }

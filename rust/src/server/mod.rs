@@ -6,6 +6,8 @@
 //! Requests (one per line):
 //!
 //! * `GEN <max_tokens> <prompt...>` — generate; the response streams.
+//! * `STATS` — one-line JSON snapshot of the decode DP pool (per-DP
+//!   occupancy + imbalance gauges).
 //! * `QUIT` — close *this* connection (in-flight work elsewhere is
 //!   untouched).
 //! * `SHUTDOWN` — stop accepting, drain every in-flight job, exit.
@@ -16,6 +18,7 @@
 //!   `index 0` arrives the moment prefill completes, so TTFT is
 //!   observable on the wire.
 //! * `DONE <id> ttft_ms=<..> e2e_ms=<..> tokens=<n> <text>` — terminal.
+//! * `STATS <json>` — reply to `STATS`.
 //! * `BUSY <queue_full|throttled|rejected>` — load shed by the
 //!   [`FlowPolicy`]-governed admission path; retry later.
 //! * `ERR <message>` — malformed request.
@@ -25,6 +28,7 @@
 //! `GEN` per connection, pipelining via multiple connections).
 
 use crate::cli::Command;
+use crate::cluster::dispatch::DecodePolicy;
 use crate::cluster::workers::{
     Admission, AdmissionConfig, BusyReason, ClusterHandle, EngineSpec, Job, JobUpdate,
     RealCluster, RealClusterConfig, RealSchedMode,
@@ -49,11 +53,17 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
         .opt("artifacts", "artifact directory", Some("artifacts"))
         .opt("engine", "pjrt | mock", Some("pjrt"))
         .opt("prefill", "prefill instances", Some("2"))
-        .opt("batch", "decode batch size", Some("4"))
+        .opt("n-decode", "decode DP workers", Some("1"))
+        .opt("batch", "decode batch size per decode worker", Some("4"))
         .opt(
             "scheduler",
             "staggered | round_robin | least_outstanding",
             Some("staggered"),
+        )
+        .opt(
+            "decode-policy",
+            "decode placement: load-aware | round-robin | random",
+            Some("load-aware"),
         )
         .opt("requests", "batch mode: number of synthetic requests", Some("8"))
         .opt("max-new", "tokens to generate per request", Some("16"))
@@ -89,10 +99,13 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
         "reject" => FlowPolicy::RejectOverloaded,
         other => return Err(anyhow!("unknown flow policy '{other}'")),
     };
+    let decode_policy = parse_decode_policy(&args.str_or("decode-policy", "load-aware"), &mode)?;
     let cfg = RealClusterConfig {
         n_prefill: args.parse_or("prefill", 2u32).map_err(|e| anyhow!("{e}"))?,
+        n_decode: args.parse_or("n-decode", 1u32).map_err(|e| anyhow!("{e}"))?,
         decode_batch: args.parse_or("batch", 4u32).map_err(|e| anyhow!("{e}"))?,
         mode,
+        decode_policy,
         sampling: Sampling::Greedy,
         seed: args.parse_or("seed", 7u64).map_err(|e| anyhow!("{e}"))?,
         engine,
@@ -136,6 +149,24 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
     }
     println!("\n{}", report.render());
     Ok(())
+}
+
+/// Map a `--decode-policy` string onto a [`DecodePolicy`]. The load-aware
+/// policy picks up Algorithm 3's knobs from the staggered scheduler config
+/// when one is in force (one `StaggeredConfig` carries the full knob set).
+fn parse_decode_policy(s: &str, mode: &RealSchedMode) -> Result<DecodePolicy> {
+    Ok(match s {
+        "load-aware" | "load_aware" | "iqr" => {
+            let dc = match mode {
+                RealSchedMode::Staggered(sc) => sc.decode.clone(),
+                RealSchedMode::Immediate(_) => Default::default(),
+            };
+            DecodePolicy::LoadAware(dc)
+        }
+        "round-robin" | "round_robin" => DecodePolicy::RoundRobin,
+        "random" => DecodePolicy::Random,
+        other => return Err(anyhow!("unknown decode policy '{other}'")),
+    })
 }
 
 /// Bind `addr` and run the concurrent TCP server until `SHUTDOWN`.
@@ -231,13 +262,17 @@ fn handle_connection(
         if req == "QUIT" {
             return Ok(());
         }
+        if req == "STATS" {
+            writeln!(out, "STATS {}", cluster.decode_stats().to_json().dump())?;
+            continue;
+        }
         if req == "SHUTDOWN" {
             writeln!(out, "BYE")?;
             shutdown.store(true, Ordering::SeqCst);
             return Ok(());
         }
         let Some(rest) = req.strip_prefix("GEN ") else {
-            writeln!(out, "ERR expected: GEN <max_tokens> <prompt> | QUIT | SHUTDOWN")?;
+            writeln!(out, "ERR expected: GEN <max_tokens> <prompt> | STATS | QUIT | SHUTDOWN")?;
             continue;
         };
         let (max_s, prompt_text) = rest.split_once(' ').unwrap_or((rest, ""));

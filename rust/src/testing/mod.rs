@@ -16,6 +16,7 @@
 //! ```
 
 pub mod net;
+pub mod scenarios;
 
 use crate::util::Rng;
 

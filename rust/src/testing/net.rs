@@ -61,6 +61,11 @@ pub enum Reply {
         /// The raw line.
         line: String,
     },
+    /// `STATS <json>` (decode-pool gauges snapshot).
+    Stats {
+        /// The raw JSON payload.
+        json: String,
+    },
     /// `BUSY <reason>`
     Busy {
         /// `queue_full`, `throttled` or `rejected`.
@@ -89,6 +94,12 @@ pub struct GenOutcome {
 /// protocol, shared by [`LineClient`] and the load generator so the two
 /// cannot drift apart.
 pub fn parse_reply(l: &str) -> Reply {
+    // Keep the raw JSON payload intact (it contains spaces).
+    if let Some(json) = l.strip_prefix("STATS ") {
+        return Reply::Stats {
+            json: json.to_string(),
+        };
+    }
     let mut parts = l.split_whitespace();
     match parts.next() {
         Some("TOK") => {
@@ -157,6 +168,9 @@ impl LineClient {
                     out.done = Some(line);
                     return Ok(out);
                 }
+                // A STATS reply can only be a response to a STATS request,
+                // never part of a GEN stream; tolerate and keep reading.
+                Some(Reply::Stats { .. }) => {}
                 Some(Reply::Busy { .. }) => {
                     out.busy = true;
                     return Ok(out);

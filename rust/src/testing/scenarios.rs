@@ -1,0 +1,76 @@
+//! Reusable live-cluster scenarios shared by the integration suite and
+//! the benches, so both always measure the same configuration.
+
+use crate::cluster::dispatch::DecodePolicy;
+use crate::cluster::workers::{
+    AdmissionConfig, EngineSpec, Job, RealCluster, RealClusterConfig, RealSchedMode,
+};
+use crate::engine::mock::MockEngineConfig;
+use crate::engine::sampler::Sampling;
+use crate::scheduler::interval::IntervalConfig;
+use crate::scheduler::pbaa::PbaaConfig;
+use crate::scheduler::staggered::StaggeredConfig;
+use std::time::Duration;
+
+/// The decode-balance scenario (live Fig. 7): a fast mock cluster with a
+/// multi-worker decode DP pool and a single prefill worker, so placement
+/// order tracks submission order and the decode policy is the only
+/// variable.
+pub fn skewed_decode_cluster(policy: DecodePolicy, n_decode: u32) -> RealClusterConfig {
+    let sc = StaggeredConfig {
+        interval: IntervalConfig {
+            t_default: 0.02,
+            ..Default::default()
+        },
+        pbaa: PbaaConfig {
+            n_limit: 10_000,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    RealClusterConfig {
+        n_prefill: 1,
+        n_decode,
+        decode_batch: 16,
+        c_chunk: 4096,
+        mode: RealSchedMode::Staggered(sc),
+        decode_policy: policy,
+        sampling: Sampling::Greedy,
+        seed: 11,
+        engine: EngineSpec::Mock(MockEngineConfig {
+            t_prefill_base: 0.001,
+            t_prefill_per_token: 5e-6,
+            t_decode_step: 0.002,
+            chunk: 512,
+            jitter: 0.0,
+        }),
+        admission: AdmissionConfig {
+            max_inflight: 1024,
+            ..Default::default()
+        },
+    }
+}
+
+/// Submit `n_jobs` with skewed output lengths: every `heavy_stride`-th job
+/// generates `heavy_max_new` tokens, the rest `light_max_new`. Spaced
+/// submissions keep placement order ≈ arrival order, which makes blind
+/// round-robin's aliasing with the pool size reproducible.
+pub fn submit_skewed_jobs(
+    cluster: &RealCluster,
+    n_jobs: u64,
+    heavy_stride: u64,
+    heavy_max_new: u32,
+    light_max_new: u32,
+) {
+    for i in 0..n_jobs {
+        let heavy = i % heavy_stride == 0;
+        cluster.submit(Job {
+            id: i,
+            prompt: vec![7; 24],
+            max_new: if heavy { heavy_max_new } else { light_max_new },
+        });
+        // Wide enough that a briefly stalled scheduler thread on a loaded
+        // CI runner still sees one placement per cycle (order-preserving).
+        std::thread::sleep(Duration::from_millis(6));
+    }
+}

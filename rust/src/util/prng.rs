@@ -141,6 +141,31 @@ impl Rng {
         x_m / (1.0 - self.f64()).powf(1.0 / alpha)
     }
 
+    /// Gamma(shape `k`, scale `θ`) via Marsaglia–Tsang squeeze (mean
+    /// `kθ`). Shapes below 1 use the boosting identity
+    /// `Gamma(k) = Gamma(k+1) · U^{1/k}` — that sub-1 regime (CV > 1) is
+    /// what the bursty arrival generator draws from.
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        debug_assert!(shape > 0.0 && scale > 0.0);
+        if shape < 1.0 {
+            let u = 1.0 - self.f64(); // (0, 1]
+            return self.gamma(shape + 1.0, scale) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = 1.0 - self.f64(); // (0, 1], ln is finite
+            if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+                return d * v * scale;
+            }
+        }
+    }
+
     /// Zipf-distributed rank in `[0, n)` with exponent `s`, via inverse-CDF
     /// over precomputable weights. O(n) per call — fine for the prefix
     /// workload generator's modest n.
@@ -229,6 +254,30 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.02, "mean {mean}");
         assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn gamma_mean_close_both_regimes() {
+        let mut r = Rng::new(29);
+        let n = 100_000;
+        // Sub-1 shape (the bursty-arrival regime) exercises the boost.
+        let mean: f64 = (0..n).map(|_| r.gamma(0.25, 4.0)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.05, "k=0.25 mean {mean}");
+        let mean: f64 = (0..n).map(|_| r.gamma(3.0, 0.5)).sum::<f64>() / n as f64;
+        assert!((mean - 1.5).abs() < 0.05, "k=3 mean {mean}");
+    }
+
+    #[test]
+    fn gamma_is_nonnegative_and_bursty_shape_has_high_cv() {
+        let mut r = Rng::new(31);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gamma(0.25, 4.0)).collect();
+        assert!(xs.iter().all(|&x| x >= 0.0));
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let cv = var.sqrt() / mean;
+        // Theoretical CV = 1/√k = 2; allow sampling slack.
+        assert!(cv > 1.5, "cv {cv}");
     }
 
     #[test]

@@ -1,18 +1,29 @@
 //! Open-loop TCP load generator for the serving frontend (`sbs loadgen`).
 //!
-//! Arrivals are a Poisson process at `--rate` over `--duration` seconds,
-//! generated up front and timestamped against a shared epoch — the
-//! *open-loop* discipline of the paper's evaluation (and of Sarathi-style
-//! serving benchmarks): request N is due at its scheduled instant whether
-//! or not earlier requests have completed. `--conns` client connections
-//! drain the schedule; when all connections are busy, later arrivals are
-//! sent late and the delay is charged to the request's latency, so
-//! saturation shows up as growing TTFT rather than a silently reduced
-//! offered rate.
+//! Arrivals follow the `--arrival` process at mean rate `--rate` over
+//! `--duration` seconds, generated up front and timestamped against a
+//! shared epoch — the *open-loop* discipline of the paper's evaluation
+//! (and of Sarathi-style serving benchmarks): request N is due at its
+//! scheduled instant whether or not earlier requests have completed.
+//! `--conns` client connections drain the schedule; when all connections
+//! are busy, later arrivals are sent late and the delay is charged to the
+//! request's latency, so saturation shows up as growing TTFT rather than
+//! a silently reduced offered rate.
 //!
-//! The report is JSON on stdout: offered/completed/`BUSY` counts plus
-//! TTFT and end-to-end latency summaries (mean, p50, p90, p99) measured
-//! from the scheduled arrival instant.
+//! Three arrival models (all mean-rate-preserving, so reports stay
+//! comparable across models):
+//!
+//! * `poisson` — exponential gaps, the classical memoryless baseline.
+//! * `bursty` — Gamma(k=0.25) gaps (CV 2): arrivals clump into bursts
+//!   separated by lulls, the regime that stresses batching windows.
+//! * `heavy-tail` — Pareto(α=1.5) gaps: occasional very long quiet
+//!   periods with dense arrival clusters between them.
+//!
+//! The report is JSON on stdout: offered/completed/`BUSY` counts, TTFT
+//! and end-to-end latency summaries (mean, p50, p90, p99) measured from
+//! the scheduled arrival instant, the arrival model used, and the
+//! server's decode DP-pool gauges (per-DP occupancy + imbalance, fetched
+//! via the `STATS` protocol command at the end of the run).
 
 use crate::cli::Command;
 use crate::json::Json;
@@ -25,6 +36,56 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Inter-arrival process for the open-loop schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalModel {
+    /// Exponential gaps (memoryless baseline).
+    Poisson,
+    /// Gamma-burst gaps: CV 2, arrivals clump into bursts.
+    Bursty,
+    /// Pareto-tailed gaps: long lulls, dense clusters.
+    HeavyTail,
+}
+
+impl ArrivalModel {
+    /// Parse a `--arrival` value.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "poisson" => ArrivalModel::Poisson,
+            "bursty" | "gamma" => ArrivalModel::Bursty,
+            "heavy-tail" | "heavy_tail" | "pareto" => ArrivalModel::HeavyTail,
+            other => return Err(anyhow!("unknown arrival model '{other}'")),
+        })
+    }
+
+    /// Stable name for the JSON report.
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalModel::Poisson => "poisson",
+            ArrivalModel::Bursty => "bursty",
+            ArrivalModel::HeavyTail => "heavy-tail",
+        }
+    }
+
+    /// Draw one inter-arrival gap with mean `1/rate` seconds.
+    fn gap(self, rng: &mut Rng, rate: f64) -> f64 {
+        let rate = rate.max(1e-9);
+        match self {
+            ArrivalModel::Poisson => rng.exp(rate),
+            ArrivalModel::Bursty => {
+                // Gamma(k, θ) has mean kθ; k = 0.25 gives CV 1/√k = 2.
+                const SHAPE: f64 = 0.25;
+                rng.gamma(SHAPE, 1.0 / (SHAPE * rate))
+            }
+            ArrivalModel::HeavyTail => {
+                // Pareto(x_m, α) has mean αx_m/(α−1); solve x_m for 1/rate.
+                const ALPHA: f64 = 1.5;
+                rng.pareto((ALPHA - 1.0) / (ALPHA * rate), ALPHA)
+            }
+        }
+    }
+}
 
 /// One scheduled request.
 #[derive(Debug, Clone, Copy)]
@@ -57,6 +118,11 @@ pub fn cli_loadgen(argv: &[String]) -> Result<()> {
         .opt("conns", "concurrent client connections", Some("8"))
         .opt("prompt-tokens", "prompt length per request", Some("48"))
         .opt("max-new", "tokens to generate per request", Some("16"))
+        .opt(
+            "arrival",
+            "inter-arrival model: poisson | bursty | heavy-tail",
+            Some("poisson"),
+        )
         .opt("seed", "arrival-process seed", Some("42"))
         .flag("shutdown", "send SHUTDOWN to the server when finished");
     let args = cmd.parse(argv).map_err(|e| anyhow!("{e}"))?;
@@ -68,11 +134,20 @@ pub fn cli_loadgen(argv: &[String]) -> Result<()> {
         .parse_or("prompt-tokens", 48u32)
         .map_err(|e| anyhow!("{e}"))?;
     let max_new: u32 = args.parse_or("max-new", 16u32).map_err(|e| anyhow!("{e}"))?;
+    let arrival = ArrivalModel::parse(&args.str_or("arrival", "poisson"))?;
     let seed: u64 = args.parse_or("seed", 42u64).map_err(|e| anyhow!("{e}"))?;
 
-    let schedule = poisson_schedule(rate, duration, seed, prompt_tokens, max_new);
+    let schedule = arrival_schedule(arrival, rate, duration, seed, prompt_tokens, max_new);
     let offered = schedule.len();
     let report = run(&addr, schedule, conns)?;
+    // Grab the server's decode-pool gauges before (optionally) draining it.
+    let decode_pool = match fetch_stats(&addr) {
+        Ok(j) => j,
+        Err(e) => {
+            log::warn!("could not fetch decode-pool stats: {e:#}");
+            Json::Null
+        }
+    };
     if args.flag("shutdown") {
         send_shutdown(&addr)?;
     }
@@ -85,6 +160,8 @@ pub fn cli_loadgen(argv: &[String]) -> Result<()> {
     j.insert("rate_qps".into(), Json::from(rate));
     j.insert("duration_s".into(), Json::from(duration));
     j.insert("conns".into(), Json::from(conns));
+    j.insert("arrival".into(), Json::from(arrival.name()));
+    j.insert("decode_pool".into(), decode_pool);
     println!("{}", Json::Obj(j).dump());
     Ok(())
 }
@@ -131,8 +208,9 @@ impl LoadgenReport {
     }
 }
 
-/// Materialize the Poisson arrival schedule.
-fn poisson_schedule(
+/// Materialize the arrival schedule under the chosen inter-arrival model.
+fn arrival_schedule(
+    model: ArrivalModel,
     rate: f64,
     duration: f64,
     seed: u64,
@@ -143,7 +221,7 @@ fn poisson_schedule(
     let mut out = VecDeque::new();
     let mut t = 0.0;
     loop {
-        t += rng.exp(rate.max(1e-9));
+        t += model.gap(&mut rng, rate);
         if t >= duration {
             break;
         }
@@ -274,6 +352,8 @@ fn run_client(addr: &str, t0: Instant, queue: Arc<Mutex<VecDeque<Arrival>>>) -> 
                     st.busy += 1;
                     break;
                 }
+                // Never sent during a GEN stream; ignore defensively.
+                Reply::Stats { .. } => {}
                 Reply::Err(_) => {
                     st.errors += 1;
                     break;
@@ -288,6 +368,24 @@ fn run_client(addr: &str, t0: Instant, queue: Arc<Mutex<VecDeque<Arrival>>>) -> 
     // Per-connection close; the server keeps running.
     let _ = writeln!(out, "QUIT");
     st
+}
+
+/// Open a throwaway connection and fetch the server's decode DP-pool
+/// gauges (`STATS` protocol command) as parsed JSON.
+pub fn fetch_stats(addr: &str) -> Result<Json> {
+    let mut conn = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    conn.set_read_timeout(Some(Duration::from_secs(30)))?;
+    writeln!(conn, "STATS")?;
+    let mut reader = BufReader::new(conn.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    // One shared wire-format decoder (testing::net) for all clients.
+    let Reply::Stats { json } = net::parse_reply(line.trim()) else {
+        return Err(anyhow!("unexpected STATS reply: {line:?}"));
+    };
+    let parsed = crate::json::parse(&json).map_err(|e| anyhow!("bad STATS JSON: {e:?}"))?;
+    let _ = writeln!(conn, "QUIT");
+    Ok(parsed)
 }
 
 /// Open a throwaway connection and ask the server to drain and exit.

@@ -1,0 +1,155 @@
+//! Integration tests for the multi-DP decode pool.
+//!
+//! 1. On the live mock-engine cluster with `n_decode = 4`, skewed output
+//!    lengths must make load-aware placement (Algorithm 3) beat blind
+//!    round-robin on the per-DP busy-time imbalance gauge — the live
+//!    counterpart of the paper's Fig. 7 claim.
+//! 2. The simulator-style and live-style drivers of the shared dispatch
+//!    core must produce identical dispatch decisions from the same event
+//!    trace (the refactor's no-divergence guarantee).
+
+use sbs::cluster::dispatch::{
+    DecodeJoin, DecodePolicy, DispatchCore, DispatchCoreConfig, EndForwardBacklog, FnAdmission,
+    SchedMode,
+};
+use sbs::cluster::workers::RealCluster;
+use sbs::metrics::DecodePoolStats;
+use sbs::scheduler::staggered::{SchedulerAction, StaggeredConfig};
+use sbs::scheduler::types::{DpUnitId, Request};
+use sbs::testing::scenarios::{skewed_decode_cluster, submit_skewed_jobs};
+
+const N_JOBS: u64 = 40;
+const N_DECODE: u32 = 4;
+
+/// Run the live mock cluster under `policy` with skewed output lengths:
+/// every 4th job generates 150 tokens, the rest 3. Submission order is
+/// near-deterministic (single prefill worker, spaced submissions), which
+/// exposes round-robin's blindness: with the heavy jobs arriving at a
+/// stride that aliases with the pool size, RR piles them onto the same
+/// units while load-aware reacts to the live per-DP ledger.
+fn run_live(policy: DecodePolicy) -> (DecodePoolStats, usize) {
+    let cfg = skewed_decode_cluster(policy, N_DECODE);
+    let cluster = RealCluster::start(cfg).expect("cluster start");
+    let handle = cluster.handle();
+    submit_skewed_jobs(&cluster, N_JOBS, 4, 150, 3);
+    let (completions, _report) = cluster.finish().expect("cluster finish");
+    (handle.decode_stats(), completions.len())
+}
+
+#[test]
+fn load_aware_beats_round_robin_on_live_imbalance() {
+    let (rr, rr_done) = run_live(DecodePolicy::RoundRobin);
+    let (la, la_done) = run_live(DecodePolicy::LoadAware(Default::default()));
+    assert_eq!(rr_done, N_JOBS as usize, "round-robin run must drain fully");
+    assert_eq!(la_done, N_JOBS as usize, "load-aware run must drain fully");
+    for stats in [&rr, &la] {
+        assert_eq!(stats.units.len(), N_DECODE as usize);
+        assert_eq!(stats.total_placed(), N_JOBS, "every job decodes: {stats:?}");
+    }
+    assert_eq!(rr.policy, "round-robin");
+    assert_eq!(la.policy, "load-aware");
+    let (rr_imb, la_imb) = (rr.imbalance(), la.imbalance());
+    assert!(
+        la_imb < rr_imb,
+        "load-aware imbalance {la_imb:.3} must be strictly below round-robin {rr_imb:.3}\n\
+         load-aware units: {:?}\nround-robin units: {:?}",
+        la.units.iter().map(|u| u.seq_seconds).collect::<Vec<_>>(),
+        rr.units.iter().map(|u| u.seq_seconds).collect::<Vec<_>>(),
+    );
+}
+
+/// Drive one dispatch core through a fixed event trace the way each
+/// driver does: the sim style acks + consumes every dispatched token and
+/// reports zero backlog at `EndForward`; the live style does nothing
+/// between dispatch and `EndForward` and lets the core clear the
+/// capacity model wholesale (`ConsumedAll`).
+fn drive_trace(live_style: bool) -> (Vec<(u32, Vec<u64>)>, DispatchCore) {
+    fn record(
+        core: &mut DispatchCore,
+        actions: Vec<SchedulerAction>,
+        live_style: bool,
+        out: &mut Vec<(u32, Vec<u64>)>,
+    ) {
+        for act in actions {
+            if let SchedulerAction::Dispatch(batch) = act {
+                if !live_style {
+                    for a in &batch.assignments {
+                        let eff = a.request.input_tokens - a.cached_tokens;
+                        core.on_deliver_ack(a.unit, eff);
+                        core.on_prefill_consumed(a.unit, eff);
+                    }
+                }
+                out.push((
+                    batch.instance,
+                    batch.assignments.iter().map(|a| a.request.id).collect(),
+                ));
+                // The engine finishes the pass and signals EndForward.
+                let backlog = if live_style {
+                    EndForwardBacklog::ConsumedAll
+                } else {
+                    EndForwardBacklog::Remaining(0)
+                };
+                let t_done = batch.at + 0.08;
+                let next = core.on_end_forward(batch.instance, 0.08, backlog, t_done);
+                record(core, next, live_style, out);
+            }
+        }
+    }
+
+    let cfg = DispatchCoreConfig {
+        mode: SchedMode::Staggered(StaggeredConfig::default()),
+        n_prefill: 2,
+        dp_prefill: 2,
+        c_chunk: 1024,
+        n_decode: 2,
+        dp_decode: 2,
+        decode_policy: DecodePolicy::LoadAware(Default::default()),
+        seed: 99,
+    };
+    let mut core = DispatchCore::new(&cfg);
+    let mut decisions = Vec::new();
+    let mut t = 0.0;
+    for id in 0..24u64 {
+        let len = 100 + (id as u32 * 57) % 800;
+        let acts = core.on_arrival(Request::new(id, len, 16, t), t);
+        record(&mut core, acts, live_style, &mut decisions);
+        if id % 3 == 2 {
+            t += 0.05;
+            let acts = core.on_timer(t);
+            record(&mut core, acts, live_style, &mut decisions);
+        }
+        t += 0.21;
+    }
+    (decisions, core)
+}
+
+#[test]
+fn sim_and_live_drivers_make_identical_dispatch_decisions() {
+    let (sim_style, mut core_sim) = drive_trace(false);
+    let (live_style, mut core_live) = drive_trace(true);
+    assert!(!sim_style.is_empty(), "trace must produce dispatches");
+    assert_eq!(
+        sim_style, live_style,
+        "prefill dispatch decisions must match between driver styles"
+    );
+    // Decode placement goes through the same shared function: identical
+    // join sets must land on identical units.
+    let joins: Vec<DecodeJoin> = (0..12u64)
+        .map(|i| DecodeJoin {
+            request_id: 1000 + i,
+            kv_tokens: 64 + (i as u32 * 97) % 900,
+            remaining_out: 8 + (i as u32 * 13) % 120,
+        })
+        .collect();
+    let place = |core: &mut DispatchCore| -> Vec<(u64, DpUnitId)> {
+        core.place_decode(joins.clone(), 10.0, &mut FnAdmission(|_, _| true))
+            .placed
+            .iter()
+            .map(|(j, u)| (j.request_id, *u))
+            .collect()
+    };
+    let pa = place(&mut core_sim);
+    let pb = place(&mut core_live);
+    assert_eq!(pa.len(), joins.len());
+    assert_eq!(pa, pb, "decode placements must match between driver styles");
+}
