@@ -10,7 +10,7 @@
 
 use sbs::cluster::workers::{EngineSpec, Job, RealCluster, RealClusterConfig, RealSchedMode};
 use sbs::engine::tokenizer;
-use sbs::metrics::ServingReport;
+use sbs::metrics::{DecodePoolStats, ServingReport};
 use sbs::runtime::artifacts_dir;
 use sbs::scheduler::baseline::ImmediatePolicy;
 
@@ -18,7 +18,19 @@ fn env_or(key: &str, default: u32) -> u32 {
     std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
 }
 
-fn run_mode(mode: RealSchedMode, n: u32, max_new: u32) -> anyhow::Result<ServingReport> {
+/// Remote decode shard addresses from `SBS_E2E_SHARDS` (comma-separated
+/// `sbs worker --decode` listeners), joined to the pool when set.
+fn env_shards() -> Vec<String> {
+    std::env::var("SBS_E2E_SHARDS")
+        .map(|s| sbs::transport::parse_shard_list(&s))
+        .unwrap_or_default()
+}
+
+fn run_mode(
+    mode: RealSchedMode,
+    n: u32,
+    max_new: u32,
+) -> anyhow::Result<(ServingReport, DecodePoolStats)> {
     let cfg = RealClusterConfig {
         n_prefill: 2,
         decode_batch: 4,
@@ -26,9 +38,14 @@ fn run_mode(mode: RealSchedMode, n: u32, max_new: u32) -> anyhow::Result<Serving
         engine: EngineSpec::Pjrt {
             artifacts: artifacts_dir(),
         },
+        remote_decode: env_shards(),
+        // Both comparison runs share one shard set: disconnect on drain
+        // instead of stopping the worker processes between runs.
+        stop_shards_on_drain: false,
         ..Default::default()
     };
     let cluster = RealCluster::start(cfg)?;
+    let handle = cluster.handle();
     for i in 0..n {
         let prompt = tokenizer::encode(&format!(
             "[session {i}] Summarize the effect of staggered batch \
@@ -44,7 +61,36 @@ fn run_mode(mode: RealSchedMode, n: u32, max_new: u32) -> anyhow::Result<Serving
         std::thread::sleep(std::time::Duration::from_millis(150));
     }
     let (_completions, report) = cluster.finish()?;
-    Ok(report)
+    Ok((report, handle.decode_stats()))
+}
+
+/// Render the decode pool per unit, shard deaths included: a unit whose
+/// transport died mid-run shows `DEAD`, not a silently shrunk pool.
+fn render_pool(stats: &DecodePoolStats) -> String {
+    let mut s = format!(
+        "decode pool [{}]: {}/{} units alive, imbalance {:.2}\n",
+        stats.policy,
+        stats.units_alive(),
+        stats.units.len(),
+        stats.imbalance()
+    );
+    for u in &stats.units {
+        let rtt = u
+            .rtt_ms
+            .map(|ms| format!(" rtt={ms:.2}ms"))
+            .unwrap_or_default();
+        s.push_str(&format!(
+            "  {} via {}{}: {} — placed={} active={} busy={:.2}s\n",
+            u.unit,
+            u.transport,
+            rtt,
+            if u.alive { "alive" } else { "DEAD" },
+            u.placed,
+            u.active,
+            u.seq_seconds,
+        ));
+    }
+    s
 }
 
 fn main() -> anyhow::Result<()> {
@@ -57,16 +103,19 @@ fn main() -> anyhow::Result<()> {
     let max_new = env_or("SBS_E2E_MAXNEW", 8);
 
     println!("=== staggered batch scheduling (SBS) ===");
-    let sbs_report = run_mode(RealSchedMode::Staggered(Default::default()), n, max_new)?;
+    let (sbs_report, sbs_pool) =
+        run_mode(RealSchedMode::Staggered(Default::default()), n, max_new)?;
     println!("{}", sbs_report.render());
+    println!("{}", render_pool(&sbs_pool));
 
     println!("\n=== immediate dispatch (round-robin baseline) ===");
-    let base_report = run_mode(
+    let (base_report, base_pool) = run_mode(
         RealSchedMode::Immediate(ImmediatePolicy::RoundRobin),
         n,
         max_new,
     )?;
     println!("{}", base_report.render());
+    println!("{}", render_pool(&base_pool));
 
     let tb = base_report.ttft.mean_ms();
     let ts = sbs_report.ttft.mean_ms();

@@ -46,9 +46,11 @@ impl Default for DecodeCaps {
         // K then *grows* one token per seq per step, so an imbalanced
         // policy overshoots the budget on its heaviest units — exactly
         // the straggler dynamics Fig. 7 visualizes.
+        // One number shared with the live pool's admission budget so the
+        // DES and the serving path cannot drift.
         DecodeCaps {
             b_max: 64,
-            kv_max: 150_000,
+            kv_max: crate::config::LIVE_KV_BUDGET_TOKENS,
         }
     }
 }

@@ -122,8 +122,9 @@ pub struct DecodeJoin {
 }
 
 impl DecodeJoin {
-    /// Expected resident length once fully decoded (the ledger charge).
-    fn total_len(&self) -> u32 {
+    /// Expected resident length once fully decoded — the ledger charge,
+    /// and the amount a KV-budget admission must reserve.
+    pub fn total_len(&self) -> u32 {
         self.kv_tokens + self.remaining_out
     }
 }
@@ -140,26 +141,30 @@ pub struct DecodePlacementOutcome {
 
 /// Driver-side admission control for decode placement.
 ///
-/// `admissible` is the driver's hard resource check (KV/batch caps in
-/// the DES, free engine slots live). `commit` is called the moment a
-/// join is placed, so the driver updates its backing state *inside* the
-/// placement cycle — later joins in the same cycle must observe earlier
-/// placements, or caps can be over-committed against a stale snapshot.
+/// `admissible` receives the core's live ledger entry for the unit
+/// (`state`) and the full join, so budget-style checks can compare the
+/// unit's charged occupancy (`⟨B, K⟩`) against the join's eventual
+/// resident length without keeping a second ledger of their own — the
+/// core updates `state` the moment each join is placed, so later joins
+/// in the same cycle observe earlier placements. Drivers with resource
+/// state the core cannot see (the DES's engine-backed KV caps) check
+/// that state instead and sync it in `commit`, which is called the
+/// moment a join is placed.
 pub trait DecodeAdmission {
-    /// Whether `unit` can accept a sequence with `kv` resident tokens.
-    fn admissible(&mut self, unit: DpUnitId, kv: u32) -> bool;
-    /// A join was placed on `unit`; apply it to the backing state now.
+    /// Whether the unit described by `state` can accept `join`.
+    fn admissible(&mut self, state: &DpState, join: &DecodeJoin) -> bool;
+    /// A join was placed on `unit`; apply it to any backing state now.
     fn commit(&mut self, unit: DpUnitId, join: &DecodeJoin);
 }
 
-/// Adapter: admission from a plain check with no backing state to sync
-/// (tests and always-admissible pools). The wrapped closure is the
-/// `admissible` check; `commit` is a no-op.
+/// Adapter: admission from a plain `(unit, kv_tokens)` check with no
+/// backing state to sync (tests and always-admissible pools). The
+/// wrapped closure is the `admissible` check; `commit` is a no-op.
 pub struct FnAdmission<F>(pub F);
 
 impl<F: FnMut(DpUnitId, u32) -> bool> DecodeAdmission for FnAdmission<F> {
-    fn admissible(&mut self, unit: DpUnitId, kv: u32) -> bool {
-        (self.0)(unit, kv)
+    fn admissible(&mut self, state: &DpState, join: &DecodeJoin) -> bool {
+        (self.0)(state.id, join.kv_tokens)
     }
 
     fn commit(&mut self, _unit: DpUnitId, _join: &DecodeJoin) {}
@@ -387,7 +392,7 @@ impl DispatchCore {
         let mut parked = Vec::new();
         for j in joins {
             let admit: Vec<usize> = (0..self.decode_states.len())
-                .filter(|&u| admission.admissible(self.decode_states[u].id, j.kv_tokens))
+                .filter(|&u| admission.admissible(&self.decode_states[u], &j))
                 .collect();
             if admit.is_empty() {
                 parked.push(j);
@@ -430,13 +435,15 @@ impl DispatchCore {
     }
 
     /// A placed sequence finished (or was terminally rejected): release
-    /// its ledger charge. Returns the unit that owned it, `None` for
-    /// unknown ids (never placed / already released).
-    pub fn on_decode_leave(&mut self, request_id: u64, now: f64) -> Option<DpUnitId> {
+    /// its ledger charge. Returns the owning unit and the released
+    /// charge (callers today only test ownership; the charge documents
+    /// what the ledger just gave back), `None` for unknown ids (never
+    /// placed / already released).
+    pub fn on_decode_leave(&mut self, request_id: u64, now: f64) -> Option<(DpUnitId, u32)> {
         let (u, charge) = self.owners.remove(&request_id)?;
         self.decode_states[u].on_decode_leave(charge);
         self.occupancy[u].leave(now);
-        Some(self.decode_states[u].id)
+        Some((self.decode_states[u].id, charge))
     }
 
     /// Sequences currently placed on `unit` per the core ledger.
@@ -461,6 +468,11 @@ impl DispatchCore {
                 peak_active: o.peak_active,
                 seq_seconds: o.seq_seconds + o.active as f64 * (now - o.last_t).max(0.0),
                 kv_tokens: s.kv_tokens,
+                // The core is transport-blind; the driver decorates these
+                // from its transports before publishing.
+                transport: "local".to_string(),
+                alive: true,
+                rtt_ms: None,
             })
             .collect();
         DecodePoolStats {
@@ -580,7 +592,7 @@ mod tests {
         assert_eq!(out.placed.len(), 1);
         let unit = out.placed[0].1;
         assert_eq!(c.unit_active(unit), 1);
-        assert_eq!(c.on_decode_leave(7, 2.0), Some(unit));
+        assert_eq!(c.on_decode_leave(7, 2.0), Some((unit, 60)));
         assert_eq!(c.unit_active(unit), 0);
         assert_eq!(c.on_decode_leave(7, 2.0), None, "double release is safe");
     }

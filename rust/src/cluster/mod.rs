@@ -12,11 +12,15 @@
 //!   experiments.
 //! * [`workers`] — threads running *actual* PJRT forward passes behind the
 //!   same dispatch core, proving the control plane end-to-end.
+//! * [`shard`] — the standalone decode shard process (`sbs worker`),
+//!   serving decode DP units to a remote scheduler over the
+//!   [`crate::transport`] wire protocol.
 
 pub mod costmodel;
 pub mod decode;
 pub mod dispatch;
 pub mod events;
 pub mod prefill;
+pub mod shard;
 pub mod sim;
 pub mod workers;

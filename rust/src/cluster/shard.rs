@@ -1,0 +1,613 @@
+//! Standalone decode shard process: `sbs worker --decode --listen
+//! <addr>` runs one or more decode DP units and serves the
+//! [`crate::transport::proto`] frame protocol, so a scheduler
+//! (`sbs serve --remote-decode <addr>`) can drive them from another
+//! process or machine through the same dispatch core as its local pool.
+//!
+//! ## Connection model
+//!
+//! The shard serves **one scheduler at a time**: the accept loop
+//! handshakes (`Hello`/`HelloAck`), aborts any state a previous
+//! connection left behind (that scheduler already evicted those
+//! sequences on its side), then relays frames until EOF — after which it
+//! goes back to accepting, which is what makes scheduler-side reconnect
+//! work. Unit engine threads persist across connections.
+//!
+//! A single writer thread serializes all outbound frames (unit events,
+//! `Pong`, `StatsReply`, `Bye`) onto the current connection; events that
+//! arrive while no scheduler is connected are dropped — their sequences
+//! were (or will be) evicted by the scheduler that owned them.
+//!
+//! `Stop` drains: units finish their active sequences (their `Done`
+//! frames flush first), the shard replies `Bye` and the process exits.
+
+use super::workers::{DecodeEventSink, EngineSpec, run_decode_unit, UnitGauges};
+use crate::cli::Command;
+use crate::engine::mock::MockEngineConfig;
+use crate::engine::sampler::Sampling;
+use crate::engine::PrefillOutcome;
+use crate::metrics::RequestMetrics;
+use crate::runtime::artifacts_dir;
+use crate::transport::proto::{self, Frame, FrameReader, PROTO_VERSION, ProtoError, UnitLoad};
+use crate::transport::{AdmitJob, UnitMsg};
+use crate::util::{Clock, RealClock};
+use anyhow::{anyhow, Result};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Decode shard configuration.
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// Decode DP units (one batched engine thread each).
+    pub units: u32,
+    /// Decode slots per unit (advertised in `HelloAck`).
+    pub batch: u32,
+    /// Execution backend for the unit threads.
+    pub engine: EngineSpec,
+    /// Sampling policy for generation.
+    pub sampling: Sampling,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            units: 1,
+            batch: 8,
+            engine: EngineSpec::Mock(MockEngineConfig::default()),
+            sampling: Sampling::Greedy,
+            seed: 17,
+        }
+    }
+}
+
+/// `sbs worker` entrypoint.
+pub fn cli_worker(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("sbs worker", "run a standalone decode shard")
+        .flag("decode", "serve decode DP units (required; prefill later)")
+        .opt(
+            "listen",
+            "bind address (e.g. 127.0.0.1:7501; port 0 = ephemeral)",
+            Some("127.0.0.1:7501"),
+        )
+        .opt("units", "decode DP units in this shard", Some("1"))
+        .opt("batch", "decode slots per unit", Some("8"))
+        .opt("engine", "pjrt | mock", Some("mock"))
+        .opt("artifacts", "artifact directory (pjrt engine)", Some("artifacts"))
+        .opt("mock-decode-ms", "mock engine: one decode step, milliseconds", Some("4"))
+        .opt("mock-jitter", "mock engine: execution-time jitter fraction", Some("0.1"))
+        .opt("seed", "rng seed", Some("17"));
+    let args = cmd.parse(argv).map_err(|e| anyhow!("{e}"))?;
+    if !args.flag("decode") {
+        return Err(anyhow!(
+            "`sbs worker` currently serves decode shards only: pass --decode"
+        ));
+    }
+    let engine = match args.str_or("engine", "mock").as_str() {
+        "pjrt" => EngineSpec::Pjrt {
+            artifacts: std::path::PathBuf::from(
+                args.str_or("artifacts", artifacts_dir().to_str().unwrap_or("artifacts")),
+            ),
+        },
+        "mock" => {
+            let step_ms: f64 = args.parse_or("mock-decode-ms", 4.0).map_err(|e| anyhow!("{e}"))?;
+            let jitter: f64 = args.parse_or("mock-jitter", 0.1).map_err(|e| anyhow!("{e}"))?;
+            EngineSpec::Mock(MockEngineConfig {
+                t_decode_step: step_ms / 1e3,
+                jitter,
+                ..Default::default()
+            })
+        }
+        other => return Err(anyhow!("unknown engine '{other}'")),
+    };
+    let cfg = ShardConfig {
+        units: args.parse_or("units", 1u32).map_err(|e| anyhow!("{e}"))?,
+        batch: args.parse_or("batch", 8u32).map_err(|e| anyhow!("{e}"))?,
+        engine,
+        sampling: Sampling::Greedy,
+        seed: args.parse_or("seed", 17u64).map_err(|e| anyhow!("{e}"))?,
+    };
+    let listener = TcpListener::bind(args.str_or("listen", "127.0.0.1:7501"))?;
+    // Announce the bound address on stdout so a parent that asked for an
+    // ephemeral port (`:0`) can learn it.
+    println!("LISTENING {}", listener.local_addr()?);
+    use std::io::Write;
+    std::io::stdout().flush().ok();
+    run_shard(cfg, listener)
+}
+
+/// Outbound frame sink for one unit thread: every engine event becomes a
+/// wire frame. Timestamps and request metrics stay shard-local and are
+/// *not* sent — the scheduler re-stamps terminal events on its own
+/// clock.
+struct WireSink {
+    out: Sender<Outbound>,
+}
+
+impl DecodeEventSink for WireSink {
+    fn token(&self, id: u64, index: u32, token: i32, _t: f64) {
+        let _ = self.out.send(Outbound::Frame(Frame::Token { id, index, token }));
+    }
+
+    fn done(&self, id: u64, tokens: Vec<i32>, _metrics: RequestMetrics) {
+        let _ = self.out.send(Outbound::Frame(Frame::Done { id, tokens }));
+    }
+
+    fn rejected(&self, id: u64) {
+        let _ = self.out.send(Outbound::Frame(Frame::Rejected { id }));
+    }
+}
+
+/// Run a decode shard on an already-bound listener until a scheduler
+/// sends `Stop` (tests use this with an ephemeral port; `cli_worker`
+/// binds from the CLI flags).
+/// Shard-internal outbound queue entry: wire frames, plus a flush
+/// marker used to fence a new connection behind everything the units
+/// queued before their abort ack (stale frames must be *dropped* while
+/// no connection is attached, never flushed to the new scheduler).
+enum Outbound {
+    Frame(Frame),
+    Flush(Sender<()>),
+}
+
+pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
+    let cfg = ShardConfig {
+        units: cfg.units.max(1),
+        // slots = 0 would advertise a unit that can never admit — every
+        // placement would pend forever with no terminal event.
+        batch: cfg.batch.max(1),
+        ..cfg
+    };
+    let units = cfg.units;
+    let clock = Arc::new(RealClock::new());
+    let (ev_tx, ev_rx) = channel::<Outbound>();
+    let (ready_tx, ready_rx) = channel::<bool>();
+    let mut unit_txs: Vec<Sender<UnitMsg>> = Vec::new();
+    let mut gauges: Vec<Arc<UnitGauges>> = Vec::new();
+    let mut unit_threads = Vec::new();
+    for u in 0..units {
+        let (tx, rx) = channel::<UnitMsg>();
+        unit_txs.push(tx);
+        let g = Arc::new(UnitGauges::default());
+        gauges.push(g.clone());
+        let spec = cfg.engine.clone();
+        let sink = WireSink { out: ev_tx.clone() };
+        let clock = clock.clone();
+        let (sampling, batch) = (cfg.sampling, cfg.batch);
+        let seed = cfg.seed.wrapping_add(7000 + u as u64);
+        let ready = ready_tx.clone();
+        unit_threads.push(std::thread::spawn(move || {
+            run_decode_unit(
+                &format!("shard-unit:{u}"),
+                &spec,
+                batch,
+                sampling,
+                seed,
+                rx,
+                sink,
+                move || clock.now_s(),
+                Some(&g),
+                ready,
+            );
+        }));
+    }
+    drop(ready_tx);
+    for _ in 0..units {
+        match ready_rx.recv_timeout(Duration::from_secs(600)) {
+            Ok(true) => {}
+            _ => return Err(anyhow!("a shard unit failed to build its engine (see log)")),
+        }
+    }
+    log::info!("decode shard ready: {units} units × {} slots", cfg.batch);
+
+    // One writer serializes every outbound frame onto the current
+    // connection; with no connection, events are dropped (their owners
+    // evicted them).
+    let current: Arc<Mutex<Option<TcpStream>>> = Arc::new(Mutex::new(None));
+    let writer = {
+        let current = current.clone();
+        std::thread::spawn(move || {
+            while let Ok(out) = ev_rx.recv() {
+                let frame = match out {
+                    Outbound::Frame(f) => f,
+                    Outbound::Flush(ack) => {
+                        // Everything queued before this marker has been
+                        // drained (written or dropped); tell the fence.
+                        let _ = ack.send(());
+                        continue;
+                    }
+                };
+                let is_bye = matches!(frame, Frame::Bye);
+                let mut cur = current.lock().unwrap();
+                if let Some(conn) = cur.as_mut() {
+                    if proto::write_frame(conn, &frame).is_err() {
+                        // The scheduler hung up (or the write timed out
+                        // mid-frame): shut the socket so the peer sees
+                        // the failure now, not after its silence guard.
+                        let _ = conn.shutdown(std::net::Shutdown::Both);
+                        *cur = None;
+                    }
+                }
+                if is_bye {
+                    break;
+                }
+            }
+        })
+    };
+
+    let mut stopping = false;
+    while !stopping {
+        let (conn, peer) = match listener.accept() {
+            Ok(x) => x,
+            Err(e) => {
+                log::warn!("accept failed: {e}");
+                continue;
+            }
+        };
+        log::info!("scheduler connected from {peer}");
+        // A failed handshake/setup on one connection must never take the
+        // whole shard down — drop it and keep accepting.
+        stopping = match serve_connection(conn, &cfg, &unit_txs, &gauges, &ev_tx, &current) {
+            Ok(stop) => stop,
+            Err(e) => {
+                log::warn!("connection setup failed: {e:#}");
+                false
+            }
+        };
+    }
+
+    // Graceful drain: units finish their active sequences (flushing Done
+    // frames through the writer), then Bye closes the stream.
+    for tx in &unit_txs {
+        let _ = tx.send(UnitMsg::Stop);
+    }
+    for t in unit_threads {
+        let _ = t.join();
+    }
+    let _ = ev_tx.send(Outbound::Frame(Frame::Bye));
+    let _ = writer.join();
+    log::info!("decode shard drained; exiting");
+    Ok(())
+}
+
+/// Serve one scheduler connection. Returns `Ok(true)` when the scheduler
+/// asked the shard to stop, `Ok(false)` on disconnect (go back to
+/// accepting).
+fn serve_connection(
+    conn: TcpStream,
+    cfg: &ShardConfig,
+    unit_txs: &[Sender<UnitMsg>],
+    gauges: &[Arc<UnitGauges>],
+    ev_tx: &Sender<Outbound>,
+    current: &Arc<Mutex<Option<TcpStream>>>,
+) -> Result<bool> {
+    conn.set_nodelay(true)?;
+    conn.set_read_timeout(Some(Duration::from_millis(250)))?;
+    // Bound writes too: a wedged scheduler socket must error out of the
+    // writer thread (which then detaches the connection), not block it.
+    conn.set_write_timeout(Some(Duration::from_secs(5)))?;
+    let mut rd = conn.try_clone()?;
+    let mut reader = FrameReader::new();
+    // Handshake: Hello must arrive promptly, then HelloAck is written
+    // directly (before the writer thread can interleave unit events).
+    let hello = {
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            match reader.poll(&mut rd) {
+                Ok(Some(f)) => break f,
+                Ok(None) if std::time::Instant::now() < deadline => continue,
+                Ok(None) => return Ok(false),
+                Err(e) => {
+                    log::warn!("handshake read failed: {e}");
+                    return Ok(false);
+                }
+            }
+        }
+    };
+    match hello {
+        Frame::Hello { version } if version == PROTO_VERSION => {}
+        Frame::Hello { version } => {
+            log::warn!("scheduler speaks protocol v{version}, we speak v{PROTO_VERSION}");
+            return Ok(false);
+        }
+        other => {
+            log::warn!("expected Hello, got {other:?}");
+            return Ok(false);
+        }
+    }
+    {
+        let mut w = conn.try_clone()?;
+        proto::write_frame(
+            &mut w,
+            &Frame::HelloAck {
+                version: PROTO_VERSION,
+                units: unit_txs.len() as u32,
+                slots: cfg.batch,
+            },
+        )?;
+    }
+    // A new scheduler owns the shard from here: silently drop whatever a
+    // previous connection left tracked (its scheduler already evicted
+    // those sequences), and *wait for the abort to land* before
+    // attaching the connection — a unit mid-step could otherwise emit a
+    // stale id that collides with the new scheduler's fresh id space.
+    // One engine step bounds how long a unit takes to see the abort.
+    {
+        let (ack_tx, ack_rx) = channel::<()>();
+        for tx in unit_txs {
+            let _ = tx.send(UnitMsg::Abort { ack: ack_tx.clone() });
+        }
+        drop(ack_tx);
+        for _ in 0..unit_txs.len() {
+            if ack_rx.recv_timeout(Duration::from_secs(60)).is_err() {
+                log::warn!("a unit did not acknowledge the abort in time");
+                break;
+            }
+        }
+        // The acks fence unit *state*; frames a unit queued just before
+        // its abort could still sit in the outbound queue. Drain the
+        // queue (dropped — no connection attached) behind a flush
+        // marker before the new connection can receive anything.
+        let (flush_tx, flush_rx) = channel::<()>();
+        if ev_tx.send(Outbound::Flush(flush_tx)).is_ok()
+            && flush_rx.recv_timeout(Duration::from_secs(10)).is_err()
+        {
+            log::warn!("outbound queue flush timed out");
+        }
+    }
+    *current.lock().unwrap() = Some(conn.try_clone()?);
+
+    // A healthy scheduler heartbeats every second (transport pings), so
+    // prolonged byte-silence (see `proto::IdleGuard`) means it is gone
+    // without an EOF/RST (black-holed link, or its FIN was lost). Time
+    // the connection out so the accept loop frees up for the
+    // scheduler's reconnect — without this, a half-open connection
+    // wedges the shard forever.
+    const CONN_DEAD_AFTER: Duration = Duration::from_secs(6);
+    let mut idle = proto::IdleGuard::new(&reader);
+    let result = loop {
+        if idle.idle_for(&reader) >= CONN_DEAD_AFTER {
+            log::warn!("scheduler silent for {CONN_DEAD_AFTER:?}; dropping the connection");
+            break false;
+        }
+        match reader.poll(&mut rd) {
+            Ok(Some(frame)) => {
+                idle.touch();
+                if handle_scheduler_frame(frame, cfg, unit_txs, gauges, ev_tx) {
+                    break true;
+                }
+            }
+            Ok(None) => continue,
+            Err(ProtoError::Closed) => {
+                log::info!("scheduler disconnected");
+                break false;
+            }
+            Err(e) => {
+                log::warn!("connection failed: {e}");
+                break false;
+            }
+        }
+    };
+    // Detach the writer from this connection; on Stop it stays attached
+    // so the drain's Done/Bye frames flush to the scheduler.
+    if !result {
+        *current.lock().unwrap() = None;
+    }
+    Ok(result)
+}
+
+/// Handle one inbound frame on an established scheduler connection.
+/// Returns `true` when the frame was `Stop` (drain and exit).
+fn handle_scheduler_frame(
+    frame: Frame,
+    cfg: &ShardConfig,
+    unit_txs: &[Sender<UnitMsg>],
+    gauges: &[Arc<UnitGauges>],
+    ev_tx: &Sender<Outbound>,
+) -> bool {
+    match frame {
+        Frame::Admit {
+            unit,
+            id,
+            first_token,
+            kv_len,
+            max_new,
+            k,
+            v,
+        } => {
+            let job = AdmitJob {
+                id,
+                outcome: Box::new(PrefillOutcome {
+                    first_token,
+                    len: kv_len as usize,
+                    k,
+                    v,
+                    exec_time: 0.0,
+                    passes: 0,
+                }),
+                max_new,
+                // Shard-local bookkeeping only (KV gauge); real metrics
+                // stay with the scheduler.
+                metrics: RequestMetrics::arrive(0.0, kv_len),
+            };
+            match unit_txs.get(unit as usize) {
+                Some(tx) => {
+                    if tx.send(UnitMsg::Admit(job)).is_err() {
+                        let _ = ev_tx.send(Outbound::Frame(Frame::Rejected { id }));
+                    }
+                }
+                None => {
+                    log::warn!("admit for unknown unit {unit}");
+                    let _ = ev_tx.send(Outbound::Frame(Frame::Rejected { id }));
+                }
+            }
+        }
+        Frame::Ping { nonce, t_us } => {
+            let _ = ev_tx.send(Outbound::Frame(Frame::Pong { nonce, t_us }));
+        }
+        Frame::StatsRequest => {
+            let units = gauges
+                .iter()
+                .map(|g| {
+                    let used = g.slots_used.load(Ordering::Relaxed);
+                    UnitLoad {
+                        active: g.active.load(Ordering::Relaxed),
+                        free_slots: cfg.batch.saturating_sub(used),
+                        kv_tokens: g.kv_tokens.load(Ordering::Relaxed),
+                    }
+                })
+                .collect();
+            let _ = ev_tx.send(Outbound::Frame(Frame::StatsReply { units }));
+        }
+        Frame::Stop => return true,
+        other => log::debug!("ignoring frame {other:?}"),
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Raw protocol smoke against an in-thread shard: handshake, admit,
+    /// stream to Done, stats, clean Stop/Bye drain.
+    #[test]
+    fn shard_serves_the_frame_protocol_end_to_end() {
+        let cfg = ShardConfig {
+            units: 2,
+            batch: 4,
+            engine: EngineSpec::Mock(MockEngineConfig {
+                t_prefill_base: 0.0,
+                t_prefill_per_token: 0.0,
+                t_decode_step: 0.001,
+                chunk: 128,
+                jitter: 0.0,
+            }),
+            sampling: Sampling::Greedy,
+            seed: 3,
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let shard = std::thread::spawn(move || run_shard(cfg, listener));
+
+        let conn = TcpStream::connect(addr).unwrap();
+        conn.set_nodelay(true).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut w = conn.try_clone().unwrap();
+        let mut rd = conn.try_clone().unwrap();
+        let mut reader = FrameReader::new();
+        let mut recv = || loop {
+            if let Some(f) = reader.poll(&mut rd).expect("read frame") {
+                return f;
+            }
+        };
+
+        proto::write_frame(&mut w, &Frame::Hello { version: PROTO_VERSION }).unwrap();
+        let ack = Frame::HelloAck {
+            version: PROTO_VERSION,
+            units: 2,
+            slots: 4,
+        };
+        assert_eq!(recv(), ack);
+
+        proto::write_frame(
+            &mut w,
+            &Frame::Admit {
+                unit: 1,
+                id: 42,
+                first_token: 0x30,
+                kv_len: 5,
+                max_new: 3,
+                k: Vec::new(),
+                v: Vec::new(),
+            },
+        )
+        .unwrap();
+        let mut tokens = Vec::new();
+        let done = loop {
+            match recv() {
+                Frame::Token { id, index, token } => {
+                    assert_eq!(id, 42);
+                    assert_eq!(index as usize, tokens.len() + 1, "indices continue past prefill");
+                    tokens.push(token);
+                }
+                Frame::Done { id, tokens: all } => {
+                    assert_eq!(id, 42);
+                    break all;
+                }
+                other => panic!("unexpected frame {other:?}"),
+            }
+        };
+        assert_eq!(done.len(), 4, "prefill token + 3 generated");
+        assert_eq!(done[0], 0x30);
+        assert_eq!(&done[1..], &tokens[..]);
+
+        proto::write_frame(&mut w, &Frame::Ping { nonce: 9, t_us: 123 }).unwrap();
+        assert_eq!(recv(), Frame::Pong { nonce: 9, t_us: 123 });
+
+        proto::write_frame(&mut w, &Frame::StatsRequest).unwrap();
+        match recv() {
+            Frame::StatsReply { units } => assert_eq!(units.len(), 2),
+            other => panic!("unexpected frame {other:?}"),
+        }
+
+        proto::write_frame(&mut w, &Frame::Stop).unwrap();
+        assert_eq!(recv(), Frame::Bye);
+        shard.join().unwrap().unwrap();
+    }
+
+    /// Admits for an out-of-range unit come back Rejected instead of
+    /// wedging the scheduler's ledger.
+    #[test]
+    fn unknown_unit_admit_is_rejected() {
+        let cfg = ShardConfig {
+            units: 1,
+            batch: 2,
+            engine: EngineSpec::Mock(MockEngineConfig {
+                t_prefill_base: 0.0,
+                t_prefill_per_token: 0.0,
+                t_decode_step: 0.001,
+                chunk: 128,
+                jitter: 0.0,
+            }),
+            sampling: Sampling::Greedy,
+            seed: 3,
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let shard = std::thread::spawn(move || run_shard(cfg, listener));
+        let conn = TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut w = conn.try_clone().unwrap();
+        let mut rd = conn.try_clone().unwrap();
+        let mut reader = FrameReader::new();
+        let mut recv = || loop {
+            if let Some(f) = reader.poll(&mut rd).expect("read frame") {
+                return f;
+            }
+        };
+        proto::write_frame(&mut w, &Frame::Hello { version: PROTO_VERSION }).unwrap();
+        recv(); // HelloAck
+        proto::write_frame(
+            &mut w,
+            &Frame::Admit {
+                unit: 5,
+                id: 1,
+                first_token: 0x30,
+                kv_len: 2,
+                max_new: 2,
+                k: Vec::new(),
+                v: Vec::new(),
+            },
+        )
+        .unwrap();
+        assert_eq!(recv(), Frame::Rejected { id: 1 });
+        proto::write_frame(&mut w, &Frame::Stop).unwrap();
+        assert_eq!(recv(), Frame::Bye);
+        shard.join().unwrap().unwrap();
+    }
+}

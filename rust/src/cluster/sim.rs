@@ -172,8 +172,9 @@ struct EngineAdmission<'a> {
 }
 
 impl DecodeAdmission for EngineAdmission<'_> {
-    fn admissible(&mut self, unit: DpUnitId, kv: u32) -> bool {
-        self.decode[unit.instance as usize].can_accept(unit.dp as usize, kv)
+    fn admissible(&mut self, state: &crate::scheduler::state::DpState, join: &DecodeJoin) -> bool {
+        let unit = state.id;
+        self.decode[unit.instance as usize].can_accept(unit.dp as usize, join.kv_tokens)
     }
 
     fn commit(&mut self, unit: DpUnitId, join: &DecodeJoin) {

@@ -3,14 +3,19 @@
 //! path).
 //!
 //! Topology: `n_prefill` prefill workers (one gated engine thread each —
-//! DP=1 per instance) and `n_decode` batched decode DP workers (one
-//! engine thread each). The scheduler thread runs the shared
-//! [`DispatchCore`] — the identical state machine the simulator drives —
-//! receiving real `EndForward` signals over channels and arming real
-//! timers via `recv_timeout`. Prefill completions are placed onto a
-//! decode DP unit by the core's [`DecodePolicy`] (Algorithm 3 load-aware
-//! allocation, or the round-robin / random baselines), so the paper's
-//! Fig. 7 decode-balance claim is measurable end to end on real sockets.
+//! DP=1 per instance) and a decode DP pool reached purely through
+//! [`DecodeTransport`]s — `n_decode` in-process batched engine threads
+//! plus the units of any remote shards in
+//! [`RealClusterConfig::remote_decode`] (`sbs worker --decode`
+//! processes, driven over the `crate::transport` wire protocol). The
+//! scheduler thread runs the shared [`DispatchCore`] — the identical
+//! state machine the simulator drives — receiving real `EndForward`
+//! signals over channels and arming real timers via `recv_timeout`.
+//! Prefill completions are placed onto a decode DP unit by the core's
+//! [`DecodePolicy`] (Algorithm 3 load-aware allocation, or the
+//! round-robin / random baselines) regardless of where the unit runs, so
+//! the paper's Fig. 7 decode-balance claim is measurable end to end on
+//! real sockets — across real process boundaries.
 //!
 //! ## Completion path (concurrent frontend architecture)
 //!
@@ -43,12 +48,15 @@ use crate::scheduler::flow::{AdmissionController, AdmissionDecision, FlowPolicy}
 use crate::scheduler::interval::IntervalConfig;
 use crate::scheduler::pbaa::PbaaConfig;
 use crate::scheduler::staggered::{SchedulerAction, StaggeredConfig};
+use crate::scheduler::state::DpState;
 use crate::scheduler::types::{DpUnitId, Request};
+use crate::transport::remote::{connect_shard, RemoteShardConfig};
+use crate::transport::{AdmitJob, DecodeTransport, LocalUnit, ShardSinks, UnitMsg};
 use crate::util::{Clock, RealClock};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -149,10 +157,11 @@ impl Default for AdmissionConfig {
 pub struct RealClusterConfig {
     /// Prefill instances (one engine thread each).
     pub n_prefill: u32,
-    /// Decode DP workers (one batched engine thread each).
+    /// *Local* decode DP workers (one batched engine thread each). May be
+    /// 0 when `remote_decode` supplies the pool.
     pub n_decode: u32,
-    /// Decode batch size per decode worker (must be a compiled variant in
-    /// PJRT mode).
+    /// Decode batch size per local decode worker (must be a compiled
+    /// variant in PJRT mode; remote shards advertise their own).
     pub decode_batch: u32,
     /// Scheduler-visible per-instance token budget per dispatch cycle.
     pub c_chunk: u32,
@@ -168,6 +177,19 @@ pub struct RealClusterConfig {
     pub engine: EngineSpec,
     /// Frontend admission control.
     pub admission: AdmissionConfig,
+    /// Remote decode shard addresses (`sbs worker --decode --listen`);
+    /// each shard's units join the pool behind the same dispatch core.
+    pub remote_decode: Vec<String>,
+    /// Per-DP-unit KV-token budget for decode admissibility (the live
+    /// mirror of the DES's `DecodeCaps::kv_max`): a join reserves its
+    /// expected resident length (`prompt + max_new`) and parks when no
+    /// unit has room. 0 disables the budget (slot-count only).
+    pub kv_budget: u64,
+    /// Whether draining this cluster also stops its remote shard
+    /// processes (the serving default). `false` merely disconnects them,
+    /// leaving the shards running for another cluster — e.g. the example
+    /// binary, which runs two clusters back to back over one shard set.
+    pub stop_shards_on_drain: bool,
 }
 
 impl Default for RealClusterConfig {
@@ -200,6 +222,9 @@ impl Default for RealClusterConfig {
                 artifacts: PathBuf::from("artifacts"),
             },
             admission: AdmissionConfig::default(),
+            remote_decode: Vec::new(),
+            kv_budget: crate::config::LIVE_KV_BUDGET_TOKENS,
+            stop_shards_on_drain: true,
         }
     }
 }
@@ -286,26 +311,21 @@ enum SchedMsg {
         max_new: u32,
         metrics: RequestMetrics,
     },
-    /// A decode worker released a sequence (finished or rejected): free
+    /// A decode unit released a sequence (finished or rejected): free
     /// its slot and ledger charge.
     DecodeDone {
         id: u64,
+    },
+    /// A remote shard died with these sequences resident: release their
+    /// ledger charges and reject them upstream so nothing leaks.
+    Evict {
+        ids: Vec<u64>,
     },
     Drain,
 }
 
 enum PrefillMsg {
     Work(Vec<(Job, f64)>),
-    Stop,
-}
-
-enum DecodeMsg {
-    Admit {
-        id: u64,
-        outcome: Box<PrefillOutcome>,
-        max_new: u32,
-        metrics: RequestMetrics,
-    },
     Stop,
 }
 
@@ -433,43 +453,62 @@ pub struct RealCluster {
 
 impl RealCluster {
     /// Start router + scheduler + worker threads; each engine thread
-    /// builds its own backend from `cfg.engine`.
+    /// builds its own backend from `cfg.engine`. Remote decode shards in
+    /// `cfg.remote_decode` are connected synchronously, so a wrong
+    /// address fails startup fast; drops *after* startup are handled by
+    /// the transport's evict-and-reconnect path instead.
     pub fn start(cfg: RealClusterConfig) -> Result<RealCluster> {
         let mut admission =
             AdmissionController::new(cfg.admission.policy, cfg.admission.max_inflight);
         admission.flow_mut().shed_fraction = cfg.admission.shed_fraction;
         admission.flow_mut().cooldown = cfg.admission.cooldown;
-        let n_decode = cfg.n_decode.max(1);
+        // With remote shards configured, zero local decode workers is a
+        // valid topology; otherwise keep at least one.
+        let n_local = if cfg.remote_decode.is_empty() {
+            cfg.n_decode.max(1)
+        } else {
+            cfg.n_decode
+        };
         let shared = Arc::new(ClusterShared {
             clock: RealClock::new(),
             ledger: Mutex::new(Ledger::default()),
             done_cv: Condvar::new(),
             admission: Mutex::new(admission),
-            // Shaped all-zero snapshot: STATS reports the pool shape even
-            // before the scheduler thread publishes its first refresh.
-            decode_stats: Mutex::new(DecodePoolStats::zeroed(
-                cfg.decode_policy.name(),
-                (0..n_decode).map(|i| DpUnitId::new(i, 0).to_string()).collect(),
-            )),
+            // Placeholder until the pool shape (local + remote units) is
+            // known below; replaced by a shaped zero snapshot.
+            decode_stats: Mutex::new(DecodePoolStats::empty(cfg.decode_policy.name())),
             next_id: AtomicU64::new(0),
         });
         let (to_sched, sched_rx) = channel::<SchedMsg>();
         let (router_tx, router_rx) = channel::<RouterMsg>();
         let (ready_tx, ready_rx) = channel::<bool>();
         let mut threads = Vec::new();
-        let mut decode_txs = Vec::new();
-        for i in 0..n_decode {
-            let (tx, rx) = channel::<DecodeMsg>();
-            decode_txs.push(tx);
+        let mut transports: Vec<Box<dyn DecodeTransport>> = Vec::new();
+        for i in 0..n_local {
+            let (tx, rx) = channel::<UnitMsg>();
+            transports.push(Box::new(LocalUnit::new(i, tx, cfg.decode_batch)));
             let spec = cfg.engine.clone();
-            let router = router_tx.clone();
-            let to_sched = to_sched.clone();
+            let sink = LocalSink {
+                to_sched: to_sched.clone(),
+                router: router_tx.clone(),
+            };
             let shared = shared.clone();
             let (sampling, batch) = (cfg.sampling, cfg.decode_batch);
             let seed = cfg.seed.wrapping_add(1000 + i as u64);
             let ready = ready_tx.clone();
             threads.push(std::thread::spawn(move || {
-                decode_worker(i, spec, batch, sampling, seed, rx, to_sched, router, shared, ready);
+                run_decode_unit(
+                    &format!("local:{i}"),
+                    &spec,
+                    batch,
+                    sampling,
+                    seed,
+                    rx,
+                    sink,
+                    move || shared.clock.now_s(),
+                    None,
+                    ready,
+                );
             }));
         }
 
@@ -493,7 +532,7 @@ impl RealCluster {
         // failures explicitly so a misconfigured cluster fails fast
         // instead of sitting out the timeout.
         drop(ready_tx);
-        for _ in 0..(cfg.n_prefill + n_decode) {
+        for _ in 0..(cfg.n_prefill + n_local) {
             match ready_rx.recv_timeout(Duration::from_secs(600)) {
                 Ok(true) => {}
                 Ok(false) => {
@@ -505,14 +544,69 @@ impl RealCluster {
                 Err(_) => return Err(anyhow!("worker failed to become ready (artifacts built?)")),
             }
         }
-        log::info!("all workers ready");
+
+        // Join the remote decode shards' units to the pool. Duplicate
+        // addresses are a config error worth naming: the second connect
+        // would otherwise sit in the shard's single-scheduler backlog
+        // and fail as a misleading handshake timeout. Compare *resolved*
+        // addresses so aliases (localhost vs 127.0.0.1) are caught too.
+        let mut seen = std::collections::HashSet::new();
+        for addr in &cfg.remote_decode {
+            use std::net::ToSocketAddrs;
+            let key = addr
+                .to_socket_addrs()
+                .ok()
+                .and_then(|mut it| it.next())
+                .map(|sa| sa.to_string())
+                .unwrap_or_else(|| addr.clone());
+            if !seen.insert(key) {
+                for t in transports.iter_mut() {
+                    t.detach();
+                }
+                return Err(anyhow!("duplicate shard address {addr} in --remote-decode"));
+            }
+            let sinks = shard_sinks(to_sched.clone(), router_tx.clone(), shared.clone());
+            let units = match connect_shard(RemoteShardConfig::new(addr), sinks) {
+                Ok(units) => units,
+                Err(e) => {
+                    // Release everything already connected: reader
+                    // threads stop and the shards go back to accepting,
+                    // so a retried start() in this process can succeed.
+                    for t in transports.iter_mut() {
+                        t.detach();
+                    }
+                    return Err(e);
+                }
+            };
+            log::info!("shard {addr}: {} decode DP units joined the pool", units.len());
+            for u in units {
+                transports.push(Box::new(u));
+            }
+        }
+        if transports.is_empty() {
+            return Err(anyhow!("decode pool is empty (no local workers, no shards)"));
+        }
+        log::info!("all workers ready ({} decode DP units)", transports.len());
+
+        // Shaped all-zero snapshot: STATS reports the pool shape (and
+        // per-shard transports) even before the first placement.
+        {
+            let mut stats = DecodePoolStats::zeroed(
+                cfg.decode_policy.name(),
+                (0..transports.len() as u32)
+                    .map(|i| DpUnitId::new(i, 0).to_string())
+                    .collect(),
+            );
+            decorate_stats(&mut stats, &transports);
+            *shared.decode_stats.lock().unwrap() = stats;
+        }
 
         {
             let cfg2 = cfg.clone();
             let router = router_tx.clone();
             let shared = shared.clone();
             threads.push(std::thread::spawn(move || {
-                scheduler_loop(cfg2, sched_rx, prefill_txs, decode_txs, router, shared);
+                scheduler_loop(cfg2, sched_rx, prefill_txs, transports, router, shared);
             }));
         }
 
@@ -649,23 +743,35 @@ struct JoinPayload {
     metrics: RequestMetrics,
 }
 
-/// Slot-count admission for the live pool: `outstanding` tracks
-/// admitted-but-unfinished sequences per worker (the live counterpart of
-/// the DES's KV-cap check), committed per placement so one freed slot
-/// cannot be handed to several joins in the same cycle.
-struct SlotAdmission<'a> {
-    outstanding: &'a mut [u32],
-    slots: u32,
+/// Live-pool decode admission over the core's *own* per-unit ledger
+/// (`state` carries the unit's charged `⟨B, K⟩`, updated by the core as
+/// each join in the cycle is placed — no second ledger to keep in
+/// sync). A unit is admissible when all three hold:
+///
+/// * its transport is alive (a dead shard is never placed onto),
+/// * it has a free engine slot (`state.batch < slots`),
+/// * the join's expected resident length fits the per-unit KV-token
+///   budget — the live mirror of the DES's `DecodeCaps::kv_max` check,
+///   so parked-join backpressure is byte-accurate, not slot-count-only.
+struct PoolAdmission<'a> {
+    /// Engine slots per unit (local batch size / shard-advertised).
+    slots: &'a [u32],
+    /// Per-unit KV-token budget; 0 disables the check.
+    kv_budget: u64,
+    /// Transport liveness snapshot, taken at cycle start.
+    alive: &'a [bool],
 }
 
-impl DecodeAdmission for SlotAdmission<'_> {
-    fn admissible(&mut self, unit: DpUnitId, _kv: u32) -> bool {
-        self.outstanding[unit.instance as usize] < self.slots
+impl DecodeAdmission for PoolAdmission<'_> {
+    fn admissible(&mut self, state: &DpState, join: &DecodeJoin) -> bool {
+        let u = state.id.instance as usize;
+        self.alive[u]
+            && state.batch < self.slots[u]
+            && (self.kv_budget == 0
+                || state.kv_tokens + join.total_len() as u64 <= self.kv_budget)
     }
 
-    fn commit(&mut self, unit: DpUnitId, _join: &DecodeJoin) {
-        self.outstanding[unit.instance as usize] += 1;
-    }
+    fn commit(&mut self, _unit: DpUnitId, _join: &DecodeJoin) {}
 }
 
 /// Park one prefilled job for decode placement (join + engine payload).
@@ -692,84 +798,156 @@ fn park_join(
     );
 }
 
-/// Release one decode sequence from the ledger and its worker's slot
-/// count. Returns whether anything was released.
-fn release_decode(core: &mut DispatchCore, outstanding: &mut [u32], id: u64, now: f64) -> bool {
-    match core.on_decode_leave(id, now) {
-        Some(unit) => {
-            let inst = unit.instance as usize;
-            outstanding[inst] = outstanding[inst].saturating_sub(1);
-            true
-        }
-        None => false,
-    }
+/// Terminally reject a join that was never placed (no ledger charge to
+/// release): drop its engine payload and route the rejection upstream.
+fn reject_unplaced(
+    payloads: &mut HashMap<u64, JoinPayload>,
+    router: &Sender<RouterMsg>,
+    id: u64,
+) {
+    payloads.remove(&id);
+    let _ = router.send(RouterMsg::Update {
+        id,
+        update: JobUpdate::Rejected { id },
+    });
 }
 
-/// Place parked joins through the dispatch core and ship the placed ones
-/// to their decode workers. Returns whether any ledger state changed (so
-/// the caller can skip republishing the gauges).
+/// Undo a placement that could not be shipped and terminalize the job so
+/// it cannot hang the ledger.
+fn unwind_placement(core: &mut DispatchCore, router: &Sender<RouterMsg>, id: u64, now: f64) {
+    core.on_decode_leave(id, now);
+    let _ = router.send(RouterMsg::Update {
+        id,
+        update: JobUpdate::Rejected { id },
+    });
+}
+
+/// How long an all-transports-dead pool keeps parked joins alive before
+/// terminally rejecting them: long enough for the 500 ms-backoff
+/// reconnect loop to revive a blipped shard, short enough that a truly
+/// dead pool fails requests promptly instead of timing out drains.
+const ALL_DEAD_GRACE: Duration = Duration::from_secs(10);
+
+/// Place parked joins through the dispatch core and commit the placed
+/// ones to their transports (local channel or remote shard). Returns
+/// whether any ledger state changed (so the caller can skip republishing
+/// the gauges).
 #[allow(clippy::too_many_arguments)]
 fn place_parked(
     core: &mut DispatchCore,
     parked: &mut Vec<DecodeJoin>,
     payloads: &mut HashMap<u64, JoinPayload>,
-    outstanding: &mut [u32],
-    slots: u32,
-    decode_txs: &[Sender<DecodeMsg>],
+    slots: &[u32],
+    kv_budget: u64,
+    transports: &mut [Box<dyn DecodeTransport>],
     router: &Sender<RouterMsg>,
+    all_dead_since: &mut Option<Instant>,
     now: f64,
 ) -> bool {
+    // Track the pool's all-dead episode continuously (this runs every
+    // scheduler tick), so the grace window below always measures the
+    // *current* outage — a timestamp left over from a past outage must
+    // never zero out a fresh one's grace.
+    let alive: Vec<bool> = transports.iter().map(|t| t.alive()).collect();
+    if alive.iter().any(|&a| a) {
+        *all_dead_since = None;
+    } else if all_dead_since.is_none() {
+        *all_dead_since = Some(Instant::now());
+    }
     if parked.is_empty() {
         return false;
     }
-    let joins = std::mem::take(parked);
-    let mut adm = SlotAdmission {
-        outstanding: &mut *outstanding,
+    let mut joins = std::mem::take(parked);
+    let mut changed = false;
+    // A join whose full resident length exceeds the per-unit budget can
+    // never fit on *any* unit: reject it now instead of parking it
+    // forever (which would hang the request and the drain).
+    if kv_budget > 0 {
+        joins.retain(|j| {
+            if j.total_len() as u64 <= kv_budget {
+                return true;
+            }
+            log::warn!(
+                "join {} needs {} KV tokens, over the {kv_budget}-token unit budget; rejecting",
+                j.request_id,
+                j.total_len(),
+            );
+            reject_unplaced(payloads, router, j.request_id);
+            false
+        });
+        if joins.is_empty() {
+            return false;
+        }
+    }
+    // With every transport dead there is nowhere for a join to go *right
+    // now* — but a blipped shard may be mid-reconnect, so park through a
+    // grace window first; only a pool that stays dead past it has its
+    // parked work terminally rejected (instead of holding the drain
+    // hostage until its timeout).
+    if alive.iter().all(|a| !a) {
+        let since = all_dead_since.unwrap_or_else(Instant::now);
+        if since.elapsed() < ALL_DEAD_GRACE {
+            *parked = joins;
+            return false;
+        }
+        log::error!(
+            "every decode transport dead for {ALL_DEAD_GRACE:?}; rejecting {} joins",
+            joins.len()
+        );
+        for j in joins {
+            reject_unplaced(payloads, router, j.request_id);
+        }
+        return false;
+    }
+    let mut adm = PoolAdmission {
         slots,
+        kv_budget,
+        alive: &alive,
     };
     let out = core.place_decode(joins, now, &mut adm);
-    let changed = !out.placed.is_empty();
+    changed |= !out.placed.is_empty();
     for (j, unit) in out.placed {
         let inst = unit.instance as usize;
         let Some(p) = payloads.remove(&j.request_id) else {
-            // No engine payload (duplicate id): undo the placement and
-            // terminalize so the job cannot hang the ledger.
-            outstanding[inst] = outstanding[inst].saturating_sub(1);
-            core.on_decode_leave(j.request_id, now);
-            let _ = router.send(RouterMsg::Update {
-                id: j.request_id,
-                update: JobUpdate::Rejected { id: j.request_id },
-            });
+            // No engine payload (duplicate id): undo and terminalize.
+            unwind_placement(core, router, j.request_id, now);
             continue;
         };
-        let msg = DecodeMsg::Admit {
+        let job = AdmitJob {
             id: j.request_id,
             outcome: p.outcome,
             max_new: p.max_new,
             metrics: p.metrics,
         };
-        if decode_txs[inst].send(msg).is_err() {
-            // Worker is gone: terminalize instead of hanging the job.
-            outstanding[inst] = outstanding[inst].saturating_sub(1);
-            core.on_decode_leave(j.request_id, now);
-            let _ = router.send(RouterMsg::Update {
-                id: j.request_id,
-                update: JobUpdate::Rejected { id: j.request_id },
-            });
+        if transports[inst].admit(job).is_err() {
+            // Transport is gone: terminalize instead of hanging the job.
+            unwind_placement(core, router, j.request_id, now);
         }
     }
     *parked = out.parked;
     changed
 }
 
+/// Overlay per-unit transport identity, liveness and RTT onto the core's
+/// gauges before publishing them (the core itself is transport-blind).
+fn decorate_stats(stats: &mut DecodePoolStats, transports: &[Box<dyn DecodeTransport>]) {
+    for (g, t) in stats.units.iter_mut().zip(transports) {
+        g.transport = t.label();
+        g.alive = t.alive();
+        g.rtt_ms = t.rtt_ms();
+    }
+}
+
 /// Scheduler thread: the shared [`DispatchCore`] on real time. Owns both
 /// planes — prefill dispatch (SBS dual trigger or immediate baseline) and
-/// decode placement across the DP pool.
+/// decode placement across the DP pool, which it reaches purely through
+/// [`DecodeTransport`]s (local engine threads and remote shards mix
+/// freely behind the same core and Algorithm 3 placement).
 fn scheduler_loop(
     cfg: RealClusterConfig,
     rx: Receiver<SchedMsg>,
     prefill_txs: Vec<Sender<PrefillMsg>>,
-    decode_txs: Vec<Sender<DecodeMsg>>,
+    mut transports: Vec<Box<dyn DecodeTransport>>,
     router: Sender<RouterMsg>,
     shared: Arc<ClusterShared>,
 ) {
@@ -788,7 +966,7 @@ fn scheduler_loop(
         }
         m @ RealSchedMode::Immediate(_) => m.clone(),
     };
-    let n_decode = decode_txs.len() as u32;
+    let n_decode = transports.len() as u32;
     let mut core = DispatchCore::new(&DispatchCoreConfig {
         mode,
         n_prefill: cfg.n_prefill,
@@ -804,12 +982,21 @@ fn scheduler_loop(
     // Decode joins awaiting placement + their engine payloads.
     let mut parked: Vec<DecodeJoin> = Vec::new();
     let mut payloads: HashMap<u64, JoinPayload> = HashMap::new();
-    let mut outstanding = vec![0u32; n_decode as usize];
-    let slots = cfg.decode_batch.max(1);
+    // Per-unit slot caps for admission; occupancy itself lives in the
+    // core's ledger (one authoritative ⟨B, K⟩ per unit).
+    let slots: Vec<u32> = transports.iter().map(|t| t.slots().max(1)).collect();
     let mut next_timer: Option<f64> = None;
     let mut stop = false;
+    // Shard liveness/RTT can change without ledger traffic, so pools
+    // with remote transports also refresh their gauges on idle ticks;
+    // purely local pools keep the cheaper ledger-change-only publishing.
+    let has_remote = !cfg.remote_decode.is_empty();
+    // Since when every transport has been dead (drives the parked-join
+    // grace window in place_parked).
+    let mut all_dead_since: Option<Instant> = None;
     // The shaped zero snapshot was published at cluster start; from here
-    // on it is refreshed only when the ledger actually changes.
+    // on it is refreshed when the ledger changes — and on idle ticks, so
+    // shard liveness/RTT stay fresh even without traffic.
     while !stop {
         let now = shared.clock.now_s();
         let timeout = next_timer
@@ -841,11 +1028,27 @@ fn scheduler_loop(
                 metrics,
             }) => park_join(&mut parked, &mut payloads, id, outcome, max_new, metrics),
             Ok(SchedMsg::DecodeDone { id }) => {
-                pool_dirty |= release_decode(&mut core, &mut outstanding, id, now);
+                pool_dirty |= core.on_decode_leave(id, now).is_some();
+            }
+            Ok(SchedMsg::Evict { ids }) => {
+                // A shard died owning these sequences: release each from
+                // the ledger and reject it upstream. Only ids the core
+                // actually still owned are rejected, so a sequence that
+                // completed a moment earlier is never double-terminated.
+                for id in ids {
+                    if core.on_decode_leave(id, now).is_some() {
+                        pool_dirty = true;
+                        let _ = router.send(RouterMsg::Update {
+                            id,
+                            update: JobUpdate::Rejected { id },
+                        });
+                    }
+                }
             }
             Ok(SchedMsg::Drain) => stop = true,
             Err(_) => {
                 next_timer = None;
+                pool_dirty = has_remote; // refresh liveness/RTT gauges
                 actions = core.on_timer(now);
             }
         }
@@ -853,14 +1056,17 @@ fn scheduler_loop(
             &mut core,
             &mut parked,
             &mut payloads,
-            &mut outstanding,
-            slots,
-            &decode_txs,
+            &slots,
+            cfg.kv_budget,
+            &mut transports,
             &router,
+            &mut all_dead_since,
             now,
         );
         if pool_dirty {
-            *shared.decode_stats.lock().unwrap() = core.decode_stats(now);
+            let mut stats = core.decode_stats(now);
+            decorate_stats(&mut stats, &transports);
+            *shared.decode_stats.lock().unwrap() = stats;
         }
         for act in actions {
             match act {
@@ -903,19 +1109,26 @@ fn scheduler_loop(
     if !parked.is_empty() {
         log::warn!("drain with {} unplaced decode joins; rejecting them", parked.len());
         for j in parked.drain(..) {
-            payloads.remove(&j.request_id);
-            let _ = router.send(RouterMsg::Update {
-                id: j.request_id,
-                update: JobUpdate::Rejected { id: j.request_id },
-            });
+            reject_unplaced(&mut payloads, &router, j.request_id);
         }
     }
-    *shared.decode_stats.lock().unwrap() = core.decode_stats(shared.clock.now_s());
+    {
+        let mut stats = core.decode_stats(shared.clock.now_s());
+        decorate_stats(&mut stats, &transports);
+        *shared.decode_stats.lock().unwrap() = stats;
+    }
     for tx in &prefill_txs {
         let _ = tx.send(PrefillMsg::Stop);
     }
-    for tx in &decode_txs {
-        let _ = tx.send(DecodeMsg::Stop);
+    for t in transports.iter_mut() {
+        // In-process units always stop (their threads must exit with the
+        // cluster); detach() only differs for remote shards, which it
+        // disconnects without terminating when the config says so.
+        if cfg.stop_shards_on_drain {
+            t.stop();
+        } else {
+            t.detach();
+        }
     }
 }
 
@@ -1000,27 +1213,126 @@ fn prefill_worker(
     }
 }
 
-/// Decode DP worker: continuous batched stepping with slot admission.
-/// Every emitted token is streamed through the router; every released
-/// sequence (done or rejected) is reported back to the scheduler so the
-/// pool ledger stays exact.
-#[allow(clippy::too_many_arguments)]
-fn decode_worker(
-    instance: u32,
-    spec: EngineSpec,
-    batch: u32,
-    sampling: Sampling,
-    seed: u64,
-    rx: Receiver<DecodeMsg>,
+/// Where a decode engine runner reports its per-sequence events. The
+/// in-process pool routes them straight onto the scheduler/router
+/// channels ([`LocalSink`]); a remote shard serializes them onto the
+/// wire (`cluster::shard`'s frame sink) for the scheduler-side
+/// transport to re-deliver through the *same* channels.
+pub(crate) trait DecodeEventSink {
+    /// One generated token at runner-clock time `t`.
+    fn token(&self, id: u64, index: u32, token: i32, t: f64);
+    /// Terminal success with the full generation (ledger release).
+    fn done(&self, id: u64, tokens: Vec<i32>, metrics: RequestMetrics);
+    /// Terminal failure (ledger release).
+    fn rejected(&self, id: u64);
+}
+
+/// In-process sink: the decode half of the historical worker wiring.
+#[derive(Clone)]
+struct LocalSink {
+    to_sched: Sender<SchedMsg>,
+    router: Sender<RouterMsg>,
+}
+
+impl DecodeEventSink for LocalSink {
+    fn token(&self, id: u64, index: u32, token: i32, t: f64) {
+        let _ = self.router.send(RouterMsg::Update {
+            id,
+            update: JobUpdate::Token { token, index, t },
+        });
+    }
+
+    fn done(&self, id: u64, tokens: Vec<i32>, metrics: RequestMetrics) {
+        // DecodeDone before Done: the router update is what decrements
+        // inflight, so a Drain sent after the pool looks empty is
+        // guaranteed to sit behind this release in the scheduler's
+        // queue (exact final gauges).
+        let _ = self.to_sched.send(SchedMsg::DecodeDone { id });
+        let _ = self.router.send(RouterMsg::Update {
+            id,
+            update: JobUpdate::Done(Completion { id, tokens, metrics }),
+        });
+    }
+
+    fn rejected(&self, id: u64) {
+        let _ = self.to_sched.send(SchedMsg::DecodeDone { id });
+        let _ = self.router.send(RouterMsg::Update {
+            id,
+            update: JobUpdate::Rejected { id },
+        });
+    }
+}
+
+/// Scheduler-side sinks for one remote shard: terminal events are
+/// re-stamped on the cluster clock here, so every timestamp a client
+/// sees comes from one clock regardless of where the sequence decoded.
+fn shard_sinks(
     to_sched: Sender<SchedMsg>,
     router: Sender<RouterMsg>,
     shared: Arc<ClusterShared>,
+) -> ShardSinks {
+    let sink = LocalSink {
+        to_sched: to_sched.clone(),
+        router,
+    };
+    let (tok, don, rej) = (sink.clone(), sink.clone(), sink);
+    let clock = shared.clone();
+    ShardSinks {
+        on_token: Box::new(move |id, index, token| {
+            tok.token(id, index, token, clock.clock.now_s());
+        }),
+        on_done: Box::new(move |id, tokens, mut metrics| {
+            metrics.t_done = shared.clock.now_s();
+            metrics.output_tokens = tokens.len() as u32;
+            don.done(id, tokens, metrics);
+        }),
+        on_rejected: Box::new(move |id| rej.rejected(id)),
+        on_evicted: Box::new(move |ids| {
+            // The scheduler decides which of these are still live in the
+            // ledger and rejects exactly those upstream.
+            let _ = to_sched.send(SchedMsg::Evict { ids });
+        }),
+    }
+}
+
+/// Per-unit occupancy gauges a shard exposes over `StatsReply` (the
+/// in-process pool reads the core ledger instead and passes no gauges).
+/// Refreshed when the tracked set changes (admit / done / abort), so the
+/// KV figure is a snapshot from the last membership change, not
+/// per-token exact — a deliberate trade for a quiet hot loop.
+#[derive(Default)]
+pub(crate) struct UnitGauges {
+    /// Routable (tracked) sequences.
+    pub active: AtomicU32,
+    /// Engine slots occupied.
+    pub slots_used: AtomicU32,
+    /// Approximate resident KV tokens across tracked sequences.
+    pub kv_tokens: AtomicU64,
+}
+
+/// Decode DP engine runner: continuous batched stepping with slot
+/// admission, shared verbatim by the in-process pool and the remote
+/// shard process — the engine loop cannot drift between deployments.
+/// Every emitted token goes to the sink; every released sequence (done
+/// or rejected) is a terminal sink event so the owning scheduler's pool
+/// ledger stays exact.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_decode_unit<S: DecodeEventSink, F: Fn() -> f64>(
+    label: &str,
+    spec: &EngineSpec,
+    batch: u32,
+    sampling: Sampling,
+    seed: u64,
+    rx: Receiver<UnitMsg>,
+    sink: S,
+    now_fn: F,
+    gauges: Option<&UnitGauges>,
     ready: Sender<bool>,
 ) {
     let mut engine = match spec.build(EngineRole::Decode, batch, sampling, seed) {
         Ok(e) => e,
         Err(e) => {
-            log::error!("decode worker {instance}: {e:#}");
+            log::error!("decode unit {label}: {e:#}");
             let _ = ready.send(false);
             return;
         }
@@ -1031,48 +1343,50 @@ fn decode_worker(
         metrics: RequestMetrics,
     }
     let mut tracks: HashMap<u64, Track> = HashMap::new();
-    let mut pending: Vec<DecodeMsg> = Vec::new();
+    let mut pending: Vec<AdmitJob> = Vec::new();
     let mut stopping = false;
     let mut failed = false;
+    // Gauges exist only for shard-hosted units (a `StatsReply` consumer);
+    // the in-process pool reads the core ledger instead and passes None.
+    let publish_gauges = |tracks: &HashMap<u64, Track>, engine_active: usize| {
+        let Some(g) = gauges else { return };
+        g.active.store(tracks.len() as u32, Ordering::Relaxed);
+        g.slots_used.store(engine_active as u32, Ordering::Relaxed);
+        let kv: u64 = tracks
+            .values()
+            .map(|t| t.metrics.input_tokens as u64 + t.tokens.len() as u64)
+            .sum();
+        g.kv_tokens.store(kv, Ordering::Relaxed);
+    };
     loop {
+        // Gauges republish only when the tracked set changes — per-token
+        // growth between changes is not worth hot-loop recomputation.
+        let mut membership_changed = false;
         // Admit as many pending sequences as there are free slots.
         let mut rest = Vec::new();
-        for msg in pending.drain(..) {
-            match msg {
-                DecodeMsg::Admit {
-                    id,
-                    outcome,
-                    max_new,
-                    metrics,
-                } if engine.free_slots() > 0 => {
-                    if let Err(e) = engine.admit(&outcome, max_new, id) {
-                        log::error!("decode worker {instance}: admit failed: {e:#}");
-                        // Ledger release goes first: the router's terminal
-                        // update is what lets finish() observe the drain,
-                        // and the scheduler must dequeue the DecodeDone
-                        // before the Drain that follows it.
-                        let _ = to_sched.send(SchedMsg::DecodeDone { id });
-                        let _ = router.send(RouterMsg::Update {
-                            id,
-                            update: JobUpdate::Rejected { id },
-                        });
-                        continue;
-                    }
-                    tracks.insert(
-                        id,
-                        Track {
-                            tokens: vec![outcome.first_token],
-                            metrics,
-                        },
-                    );
-                }
-                other => rest.push(other),
+        for job in pending.drain(..) {
+            if engine.free_slots() == 0 {
+                rest.push(job);
+                continue;
             }
+            if let Err(e) = engine.admit(&job.outcome, job.max_new, job.id) {
+                log::error!("decode unit {label}: admit failed: {e:#}");
+                sink.rejected(job.id);
+                continue;
+            }
+            tracks.insert(
+                job.id,
+                Track {
+                    tokens: vec![job.outcome.first_token],
+                    metrics: job.metrics,
+                },
+            );
+            membership_changed = true;
         }
         pending = rest;
 
         // Pull new messages (non-blocking while active, blocking idle).
-        // A disconnected channel means the cluster is gone — treat it as
+        // A disconnected channel means the owner is gone — treat it as
         // Stop so the thread cannot spin forever.
         loop {
             let msg = if engine.active() > 0 || stopping {
@@ -1095,9 +1409,31 @@ fn decode_worker(
                 }
             };
             match msg {
-                DecodeMsg::Stop => stopping = true,
-                m => pending.push(m),
+                UnitMsg::Stop => stopping = true,
+                UnitMsg::Admit(job) => pending.push(job),
+                UnitMsg::Abort { ack } => {
+                    // A new owner superseded whoever admitted these
+                    // sequences: drop them *silently* (the old scheduler
+                    // already evicted them) and free their engine slots
+                    // right away — stale ids must not keep generating,
+                    // or they could collide with the new owner's ids.
+                    if !tracks.is_empty() || !pending.is_empty() {
+                        log::info!(
+                            "decode unit {label}: aborting {} tracked + {} pending sequences",
+                            tracks.len(),
+                            pending.len()
+                        );
+                    }
+                    engine.abort_all();
+                    tracks.clear();
+                    pending.clear();
+                    membership_changed = true;
+                    let _ = ack.send(());
+                }
             }
+        }
+        if membership_changed {
+            publish_gauges(&tracks, engine.active());
         }
 
         if engine.active() == 0 {
@@ -1108,80 +1444,54 @@ fn decode_worker(
         }
         match engine.step() {
             Ok((emissions, _t)) => {
-                let now = shared.clock.now_s();
+                let now = now_fn();
+                let mut finished = false;
                 for e in emissions {
                     if let Some(tr) = tracks.get_mut(&e.request_id) {
                         tr.tokens.push(e.token);
-                        let _ = router.send(RouterMsg::Update {
-                            id: e.request_id,
-                            update: JobUpdate::Token {
-                                token: e.token,
-                                index: (tr.tokens.len() - 1) as u32,
-                                t: now,
-                            },
-                        });
+                        sink.token(e.request_id, (tr.tokens.len() - 1) as u32, e.token, now);
                         if e.done {
                             let mut tr = tracks.remove(&e.request_id).unwrap();
                             tr.metrics.t_done = now;
                             tr.metrics.output_tokens = tr.tokens.len() as u32;
-                            // DecodeDone before Done: the router update is
-                            // what decrements inflight, so a Drain sent
-                            // after the pool looks empty is guaranteed to
-                            // sit behind this release in the scheduler's
-                            // queue (exact final gauges).
-                            let _ = to_sched.send(SchedMsg::DecodeDone { id: e.request_id });
-                            let _ = router.send(RouterMsg::Update {
-                                id: e.request_id,
-                                update: JobUpdate::Done(Completion {
-                                    id: e.request_id,
-                                    tokens: tr.tokens,
-                                    metrics: tr.metrics,
-                                }),
-                            });
+                            sink.done(e.request_id, tr.tokens, tr.metrics);
+                            finished = true;
                         }
                     }
                 }
+                if finished {
+                    publish_gauges(&tracks, engine.active());
+                }
             }
             Err(e) => {
-                log::error!("decode worker {instance}: step failed: {e:#}");
-                // Terminalize everything this worker owns so streaming
+                log::error!("decode unit {label}: step failed: {e:#}");
+                // Terminalize everything this unit owns so streaming
                 // clients, the ledger and the pool accounting drain
                 // instead of hanging.
                 for id in tracks.keys().copied().collect::<Vec<_>>() {
-                    let _ = to_sched.send(SchedMsg::DecodeDone { id });
-                    let _ = router.send(RouterMsg::Update {
-                        id,
-                        update: JobUpdate::Rejected { id },
-                    });
+                    sink.rejected(id);
                 }
-                for msg in pending.drain(..) {
-                    if let DecodeMsg::Admit { id, .. } = msg {
-                        let _ = to_sched.send(SchedMsg::DecodeDone { id });
-                        let _ = router.send(RouterMsg::Update {
-                            id,
-                            update: JobUpdate::Rejected { id },
-                        });
-                    }
+                tracks.clear();
+                for job in pending.drain(..) {
+                    sink.rejected(job.id);
                 }
+                publish_gauges(&tracks, 0);
                 failed = true;
                 break;
             }
         }
     }
     if failed {
-        // The engine is dead but the scheduler may still place onto this
-        // unit: keep rejecting (and releasing the ledger) until the
-        // cluster stops so later jobs terminate too.
+        // The engine is dead but the owner may still place onto this
+        // unit: keep rejecting (and releasing the ledger) until told to
+        // stop so later jobs terminate too.
         while let Ok(msg) = rx.recv() {
             match msg {
-                DecodeMsg::Admit { id, .. } => {
-                    let _ = to_sched.send(SchedMsg::DecodeDone { id });
-                    let _ = router.send(RouterMsg::Update {
-                        id,
-                        update: JobUpdate::Rejected { id },
-                    });
+                UnitMsg::Admit(job) => sink.rejected(job.id),
+                UnitMsg::Abort { ack } => {
+                    let _ = ack.send(());
                 }
-                DecodeMsg::Stop => break,
+                UnitMsg::Stop => break,
             }
         }
     }

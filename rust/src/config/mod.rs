@@ -26,6 +26,19 @@ pub const FIG6A_BASELINE_PEAK_QPS: f64 = 150.0;
 /// mean input ≈ 6.7K tokens), same protocol at a ~6 s mean-TTFT SLO (multi-chunk prefills make sub-second TTFT unattainable at 64K context).
 pub const FIG6B_BASELINE_PEAK_QPS: f64 = 12.0;
 
+/// Default per-DP-unit KV-token budget on the *live* decode path,
+/// mirroring the DES's `DecodeCaps::kv_max` so the simulated and live
+/// admissibility checks share one number: a decode join reserves its
+/// expected resident length (`prompt + max_new`) against this budget and
+/// parks when no unit has room (byte-accurate backpressure instead of
+/// slot counting alone).
+pub const LIVE_KV_BUDGET_TOKENS: u64 = 150_000;
+
+/// String form of [`LIVE_KV_BUDGET_TOKENS`] for CLI help text (the CLI
+/// substrate wants `&'static str` defaults); a test asserts the two
+/// cannot drift.
+pub const LIVE_KV_BUDGET_TOKENS_STR: &str = "150000";
+
 /// Simulation horizon used by the figure harness (virtual seconds).
 pub const FIG_HORIZON_S: f64 = 180.0;
 
@@ -192,6 +205,14 @@ impl KvFile {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn kv_budget_help_string_matches_constant() {
+        assert_eq!(
+            LIVE_KV_BUDGET_TOKENS_STR.parse::<u64>().unwrap(),
+            LIVE_KV_BUDGET_TOKENS
+        );
+    }
 
     #[test]
     fn presets_construct() {

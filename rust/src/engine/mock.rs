@@ -148,6 +148,10 @@ impl EngineBackend for MockEngine {
         }
         Ok((emissions, cost))
     }
+
+    fn abort_all(&mut self) {
+        self.slots.iter_mut().for_each(|s| *s = None);
+    }
 }
 
 #[cfg(test)]

@@ -72,6 +72,11 @@ pub trait EngineBackend {
     fn admit(&mut self, pre: &PrefillOutcome, max_new: u32, request_id: u64) -> Result<usize>;
     /// One synchronized decode step over all active slots.
     fn step(&mut self) -> Result<(Vec<Emission>, f64)>;
+    /// Drop every active sequence immediately, freeing all slots (no
+    /// emissions for the dropped sequences will follow). Used when a new
+    /// owner supersedes whoever admitted them — stale request ids must
+    /// not keep generating, or they could collide with the new owner's.
+    fn abort_all(&mut self);
 }
 
 impl EngineBackend for MiniEngine {
@@ -93,6 +98,10 @@ impl EngineBackend for MiniEngine {
 
     fn step(&mut self) -> Result<(Vec<Emission>, f64)> {
         MiniEngine::step(self)
+    }
+
+    fn abort_all(&mut self) {
+        MiniEngine::abort_all(self)
     }
 }
 
@@ -208,6 +217,13 @@ impl MiniEngine {
     /// Number of free decode slots.
     pub fn free_slots(&self) -> usize {
         self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    /// Drop every active sequence, freeing all slots. The KV rows of the
+    /// dropped sequences stay in the caches as dead weight until an
+    /// admission overwrites them — causal masking keeps them invisible.
+    pub fn abort_all(&mut self) {
+        self.slots.iter_mut().for_each(|s| *s = None);
     }
 
     /// Number of active sequences.

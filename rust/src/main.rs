@@ -8,7 +8,10 @@
 //! * `gen-trace`     — write a workload trace (JSONL) for replay.
 //! * `serve`         — serve the nano-MoE model through SBS on the
 //!                     threaded mini-cluster (`make artifacts` + the
-//!                     `pjrt` feature, or `--engine mock`).
+//!                     `pjrt` feature, or `--engine mock`); drives
+//!                     remote decode shards via `--remote-decode`.
+//! * `worker`        — run a standalone decode shard serving the binary
+//!                     transport protocol (`--decode --listen <addr>`).
 //! * `loadgen`       — open-loop TCP load generator against `sbs serve
 //!                     --listen`; prints a JSON latency report.
 //! * `calibrate`     — measure real PJRT pass times and print calibrated
@@ -33,6 +36,7 @@ fn main() -> ExitCode {
         "bench-figures" => cmd_bench_figures(rest),
         "gen-trace" => cmd_gen_trace(rest),
         "serve" => cmd_serve(rest),
+        "worker" => cmd_worker(rest),
         "loadgen" => cmd_loadgen(rest),
         "calibrate" => cmd_calibrate(rest),
         "--help" | "-h" | "help" => {
@@ -58,7 +62,9 @@ fn usage() -> String {
        bench-figures   regenerate paper tables/figures (--all | --fig6a | --fig6b | --table1 | --fig7 | --fig8)\n\
        gen-trace       generate a JSONL workload trace\n\
        serve           serve the nano-MoE model via SBS (artifacts/ or --engine mock;\n\
-                       multi-DP decode pool via --n-decode / --decode-policy)\n\
+                       multi-DP decode pool via --n-decode / --decode-policy;\n\
+                       remote shards via --remote-decode addr[,addr...])\n\
+       worker          run a standalone decode shard (--decode --listen addr)\n\
        loadgen         open-loop load generator against a running `serve --listen`\n\
                        (--arrival poisson|bursty|heavy-tail)\n\
        calibrate       measure PJRT pass times, print cost-model constants"
@@ -211,6 +217,10 @@ fn cmd_gen_trace(argv: &[String]) -> Result<(), String> {
 
 fn cmd_serve(argv: &[String]) -> Result<(), String> {
     sbs::server::cli_serve(argv).map_err(|e| format!("{e:#}"))
+}
+
+fn cmd_worker(argv: &[String]) -> Result<(), String> {
+    sbs::cluster::shard::cli_worker(argv).map_err(|e| format!("{e:#}"))
 }
 
 fn cmd_loadgen(argv: &[String]) -> Result<(), String> {

@@ -6,6 +6,11 @@
 //! load generator can embed it in its JSON report. The headline gauge is
 //! [`DecodePoolStats::imbalance`]: max/mean of per-unit busy time
 //! (sequence-seconds), 1.0 = perfectly balanced.
+//!
+//! With remote decode shards in the pool, each gauge also carries its
+//! transport label, liveness and last-measured RTT, so a killed shard is
+//! *visible* in `STATS` (and in the loadgen report embedding it) rather
+//! than silently shrinking the pool.
 
 use crate::json::Json;
 use crate::util::stats;
@@ -26,6 +31,14 @@ pub struct DpOccupancyGauge {
     pub seq_seconds: f64,
     /// Ledger KV tokens currently charged to this unit.
     pub kv_tokens: u64,
+    /// Transport carrying this unit (`local:<i>` or `<addr>#<unit>`).
+    pub transport: String,
+    /// Whether the unit's transport can currently receive placements
+    /// (false = its shard is disconnected/dead).
+    pub alive: bool,
+    /// Last measured shard round-trip time, milliseconds (`None` for
+    /// in-process units and not-yet-measured shards).
+    pub rtt_ms: Option<f64>,
 }
 
 impl DpOccupancyGauge {
@@ -37,6 +50,9 @@ impl DpOccupancyGauge {
             ("peak_active", Json::from(self.peak_active)),
             ("seq_seconds", Json::from(self.seq_seconds)),
             ("kv_tokens", Json::from(self.kv_tokens)),
+            ("transport", Json::from(self.transport.clone())),
+            ("alive", Json::from(self.alive)),
+            ("rtt_ms", self.rtt_ms.map(Json::from).unwrap_or(Json::Null)),
         ])
     }
 }
@@ -73,9 +89,17 @@ impl DecodePoolStats {
                     peak_active: 0,
                     seq_seconds: 0.0,
                     kv_tokens: 0,
+                    transport: "local".to_string(),
+                    alive: true,
+                    rtt_ms: None,
                 })
                 .collect(),
         }
+    }
+
+    /// Units whose transport can currently receive placements.
+    pub fn units_alive(&self) -> usize {
+        self.units.iter().filter(|u| u.alive).count()
     }
 
     /// Total sequences placed across the pool.
@@ -106,6 +130,7 @@ impl DecodePoolStats {
         Json::obj(vec![
             ("policy", Json::from(self.policy.clone())),
             ("n_units", Json::from(self.units.len())),
+            ("units_alive", Json::from(self.units_alive())),
             ("imbalance", Json::from(self.imbalance())),
             ("placed", Json::from(self.total_placed())),
             (
@@ -128,6 +153,9 @@ mod tests {
             peak_active: 1,
             seq_seconds,
             kv_tokens: 0,
+            transport: "local".to_string(),
+            alive: true,
+            rtt_ms: None,
         }
     }
 
@@ -164,7 +192,30 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.get("policy").and_then(|x| x.as_str()), Some("load-aware"));
         assert_eq!(j.get("n_units").and_then(|x| x.as_usize()), Some(1));
+        assert_eq!(j.get("units_alive").and_then(|x| x.as_usize()), Some(1));
         assert!(j.get("imbalance").and_then(|x| x.as_f64()).is_some());
         assert_eq!(j.get("units").and_then(|x| x.as_arr()).map(|a| a.len()), Some(1));
+        let u = &j.get("units").and_then(|x| x.as_arr()).unwrap()[0];
+        assert_eq!(u.get("alive").and_then(|x| x.as_bool()), Some(true));
+        assert_eq!(u.get("transport").and_then(|x| x.as_str()), Some("local"));
+    }
+
+    #[test]
+    fn dead_units_are_visible_not_silently_dropped() {
+        let mut dead = unit("i1d0", 3, 1.0);
+        dead.alive = false;
+        dead.transport = "127.0.0.1:7501#0".into();
+        dead.rtt_ms = Some(0.4);
+        let s = DecodePoolStats {
+            policy: "load-aware".into(),
+            units: vec![unit("i0d0", 2, 2.0), dead],
+        };
+        assert_eq!(s.units_alive(), 1);
+        let j = s.to_json();
+        assert_eq!(j.get("units_alive").and_then(|x| x.as_usize()), Some(1));
+        assert_eq!(j.get("n_units").and_then(|x| x.as_usize()), Some(2));
+        let u = &j.get("units").and_then(|x| x.as_arr()).unwrap()[1];
+        assert_eq!(u.get("alive").and_then(|x| x.as_bool()), Some(false));
+        assert!(u.get("rtt_ms").and_then(|x| x.as_f64()).is_some());
     }
 }

@@ -65,6 +65,16 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
             "decode placement: load-aware | round-robin | random",
             Some("load-aware"),
         )
+        .opt(
+            "remote-decode",
+            "comma-separated remote decode shard addrs (sbs worker --decode)",
+            None,
+        )
+        .opt(
+            "kv-budget",
+            "per-DP-unit KV-token admission budget (0 = slots only)",
+            Some(crate::config::LIVE_KV_BUDGET_TOKENS_STR),
+        )
         .opt("requests", "batch mode: number of synthetic requests", Some("8"))
         .opt("max-new", "tokens to generate per request", Some("16"))
         .opt(
@@ -100,6 +110,10 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
         other => return Err(anyhow!("unknown flow policy '{other}'")),
     };
     let decode_policy = parse_decode_policy(&args.str_or("decode-policy", "load-aware"), &mode)?;
+    let remote_decode = args
+        .value("remote-decode")
+        .map(crate::transport::parse_shard_list)
+        .unwrap_or_default();
     let cfg = RealClusterConfig {
         n_prefill: args.parse_or("prefill", 2u32).map_err(|e| anyhow!("{e}"))?,
         n_decode: args.parse_or("n-decode", 1u32).map_err(|e| anyhow!("{e}"))?,
@@ -116,6 +130,10 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
             policy,
             ..Default::default()
         },
+        remote_decode,
+        kv_budget: args
+            .parse_or("kv-budget", crate::config::LIVE_KV_BUDGET_TOKENS)
+            .map_err(|e| anyhow!("{e}"))?,
         ..Default::default()
     };
 

@@ -42,6 +42,31 @@ impl TestServer {
     }
 }
 
+/// Poll-connect `addr` until something accepts or `timeout` elapses —
+/// the handshake-free way to wait for a just-spawned server or shard
+/// process to finish binding.
+pub fn wait_for_port(addr: &str, timeout: Duration) -> Result<()> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(_) => return Ok(()),
+            Err(e) if Instant::now() >= deadline => {
+                return Err(anyhow!("nothing listening on {addr} after {timeout:?}: {e}"))
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+/// Parse the `LISTENING <addr>` announcement an `sbs worker` process
+/// prints after binding (how a parent learns an ephemeral port).
+pub fn parse_listening_line(line: &str) -> Result<String> {
+    line.trim()
+        .strip_prefix("LISTENING ")
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("expected 'LISTENING <addr>', got {line:?}"))
+}
+
 /// One parsed server reply line.
 #[derive(Debug, Clone)]
 pub enum Reply {

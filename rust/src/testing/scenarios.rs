@@ -48,6 +48,7 @@ pub fn skewed_decode_cluster(policy: DecodePolicy, n_decode: u32) -> RealCluster
             max_inflight: 1024,
             ..Default::default()
         },
+        ..Default::default()
     }
 }
 

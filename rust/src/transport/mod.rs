@@ -1,0 +1,229 @@
+//! The decode **transport subsystem**: how the scheduler thread reaches a
+//! decode DP unit, wherever it runs.
+//!
+//! PR 2 made the dispatch core transport-agnostic; this module supplies
+//! the transports. A [`DecodeTransport`] is the scheduler's handle to one
+//! decode DP unit — placement commits go *down* through it, and
+//! token/terminal events come *back* through scheduler-side sinks — with
+//! two implementations:
+//!
+//! * [`LocalUnit`] — the in-process channel transport: one decode engine
+//!   thread in the same process (`cluster::workers`), reached over an
+//!   `mpsc` channel. Always alive, no RTT.
+//! * [`remote::RemoteUnit`] — one DP unit of an out-of-process decode
+//!   shard (`sbs worker --decode`), reached over TCP speaking the
+//!   length-prefixed [`proto`] frame protocol, with per-shard liveness
+//!   tracking, RTT measurement and reconnect/eviction semantics.
+//!
+//! The scheduler drives a *mixed* pool — local and remote units behind
+//! the same `DispatchCore` and the same Algorithm 3 placement — so
+//! scaling out is a deployment decision, not a scheduling one. Every
+//! future multi-node feature (prefill shards, KV transfer) extends this
+//! subsystem rather than the scheduler.
+
+pub mod proto;
+pub mod remote;
+
+use crate::engine::PrefillOutcome;
+use crate::metrics::RequestMetrics;
+use std::sync::mpsc::Sender;
+
+/// Parse a comma-separated shard address list (`a:p[,a:p...]`), the
+/// shared grammar of `sbs serve --remote-decode` and the example's
+/// `SBS_E2E_SHARDS` env knob. Empty segments are dropped.
+pub fn parse_shard_list(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|a| !a.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
+/// One prefilled sequence being committed to a decode DP unit: the
+/// engine payload plus the scheduler-clock metrics that stay
+/// scheduler-side (remote shards never see wall-clock state; the
+/// scheduler re-stamps terminal events on receipt so all timestamps
+/// share one clock).
+pub struct AdmitJob {
+    /// Request id.
+    pub id: u64,
+    /// Prefill result (first token + KV caches).
+    pub outcome: Box<PrefillOutcome>,
+    /// Output tokens still to generate.
+    pub max_new: u32,
+    /// Lifecycle metrics, scheduler clock.
+    pub metrics: RequestMetrics,
+}
+
+/// Message consumed by one decode engine runner (local worker thread or
+/// shard-side unit thread).
+pub enum UnitMsg {
+    /// Admit a sequence into a free slot.
+    Admit(AdmitJob),
+    /// Drop every tracked sequence *silently* — no terminal events, and
+    /// the engine slots are freed immediately. Sent by a shard when a
+    /// new scheduler connection supersedes the state the old one left
+    /// behind (the old scheduler already evicted and rejected those
+    /// sequences on its side; their ids must not keep generating, or
+    /// they could collide with the new scheduler's id space). The
+    /// runner acknowledges on `ack` once the abort is applied, so the
+    /// shard can fence the new connection behind it — no stale
+    /// emission can slip out after the ack.
+    Abort {
+        /// Signalled (best-effort) after the abort has been applied.
+        ack: Sender<()>,
+    },
+    /// Finish active sequences, then exit.
+    Stop,
+}
+
+/// The scheduler's handle to one decode DP unit. `admit` is the
+/// placement-commit path; liveness and RTT feed both the admissibility
+/// check (dead units are never placed onto) and the per-shard gauges.
+pub trait DecodeTransport: Send {
+    /// Stable display label (`local:<i>` or `<addr>#<unit>`).
+    fn label(&self) -> String;
+    /// Whether the unit can currently receive placements.
+    fn alive(&self) -> bool;
+    /// Last measured round-trip time, if this transport crosses a wire.
+    fn rtt_ms(&self) -> Option<f64>;
+    /// Decode slots on this unit (its engine batch size).
+    fn slots(&self) -> u32;
+    /// Commit one placement. On failure the job is handed back so the
+    /// caller can terminalize it (release the ledger, reject upstream).
+    fn admit(&mut self, job: AdmitJob) -> Result<(), AdmitJob>;
+    /// Ask the unit (and its shard, once per shard) to drain and stop.
+    fn stop(&mut self);
+    /// Release the unit without stopping its backing process: an
+    /// in-process worker still stops (its thread must exit with the
+    /// cluster), but a remote shard is merely disconnected, left running
+    /// for a future scheduler. Defaults to [`DecodeTransport::stop`].
+    fn detach(&mut self) {
+        self.stop();
+    }
+}
+
+/// In-process transport: one decode worker thread behind an `mpsc`
+/// channel. Alive as long as the thread holds its receiver.
+pub struct LocalUnit {
+    label: String,
+    tx: Sender<UnitMsg>,
+    slots: u32,
+    dead: bool,
+}
+
+impl LocalUnit {
+    /// Wrap a worker thread's channel as a transport.
+    pub fn new(index: u32, tx: Sender<UnitMsg>, slots: u32) -> Self {
+        LocalUnit {
+            label: format!("local:{index}"),
+            tx,
+            slots,
+            dead: false,
+        }
+    }
+}
+
+impl DecodeTransport for LocalUnit {
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn alive(&self) -> bool {
+        !self.dead
+    }
+
+    fn rtt_ms(&self) -> Option<f64> {
+        None
+    }
+
+    fn slots(&self) -> u32 {
+        self.slots
+    }
+
+    fn admit(&mut self, job: AdmitJob) -> Result<(), AdmitJob> {
+        match self.tx.send(UnitMsg::Admit(job)) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                // The worker thread is gone; stop placing onto it.
+                self.dead = true;
+                match e.0 {
+                    UnitMsg::Admit(job) => Err(job),
+                    _ => unreachable!("send payload is the admit we passed"),
+                }
+            }
+        }
+    }
+
+    fn stop(&mut self) {
+        let _ = self.tx.send(UnitMsg::Stop);
+    }
+}
+
+/// Scheduler-side event sinks a remote shard client delivers into
+/// (consumed by the shard's single reader thread, hence `Send` without
+/// `Sync`). The cluster fabric builds these over its private
+/// router/scheduler channels; the transport layer stays ignorant of
+/// those types.
+pub struct ShardSinks {
+    /// One generated token: `(id, index, token)`.
+    pub on_token: Box<dyn Fn(u64, u32, i32) + Send>,
+    /// Terminal success: `(id, generation tokens, metrics)` — the
+    /// metrics the scheduler attached at admit time, handed back for
+    /// final stamping on the scheduler clock.
+    pub on_done: Box<dyn Fn(u64, Vec<i32>, RequestMetrics) + Send>,
+    /// Terminal failure reported by the shard.
+    pub on_rejected: Box<dyn Fn(u64) + Send>,
+    /// The shard died with these sequences resident: release their
+    /// ledger charges and reject them upstream.
+    pub on_evicted: Box<dyn Fn(Vec<u64>) + Send>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn job(id: u64) -> AdmitJob {
+        AdmitJob {
+            id,
+            outcome: Box::new(PrefillOutcome {
+                first_token: 65,
+                len: 4,
+                k: Vec::new(),
+                v: Vec::new(),
+                exec_time: 0.0,
+                passes: 1,
+            }),
+            max_new: 3,
+            metrics: RequestMetrics::arrive(0.0, 4),
+        }
+    }
+
+    #[test]
+    fn local_unit_delivers_and_reports_shape() {
+        let (tx, rx) = channel();
+        let mut t = LocalUnit::new(2, tx, 8);
+        assert_eq!(t.label(), "local:2");
+        assert_eq!(t.slots(), 8);
+        assert!(t.alive());
+        assert!(t.rtt_ms().is_none());
+        t.admit(job(9)).map_err(|_| ()).unwrap();
+        match rx.recv().unwrap() {
+            UnitMsg::Admit(j) => assert_eq!(j.id, 9),
+            _ => panic!("expected admit"),
+        }
+        t.stop();
+        assert!(matches!(rx.recv().unwrap(), UnitMsg::Stop));
+    }
+
+    #[test]
+    fn local_unit_dead_receiver_hands_job_back() {
+        let (tx, rx) = channel();
+        drop(rx);
+        let mut t = LocalUnit::new(0, tx, 8);
+        let back = t.admit(job(5)).unwrap_err();
+        assert_eq!(back.id, 5);
+        assert!(!t.alive(), "failed admit marks the unit dead");
+    }
+}

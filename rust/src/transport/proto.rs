@@ -1,0 +1,783 @@
+//! Length-prefixed binary wire protocol for remote decode shards.
+//!
+//! One frame on the wire is `[u32 LE payload length][payload]`, where the
+//! payload is `[u8 tag][fields...]` with all integers little-endian and
+//! `f64` as LE bit patterns. The frame set mirrors the dispatch-core
+//! message vocabulary so every future multi-node feature (prefill
+//! sharding, KV transfer) rides on the same protocol:
+//!
+//! | direction | frame | dispatch-core meaning |
+//! |---|---|---|
+//! | sched → shard | [`Frame::Hello`] | connection handshake |
+//! | shard → sched | [`Frame::HelloAck`] | shard shape (units, slots) |
+//! | sched → shard | [`Frame::Admit`] | decode join / placement commit |
+//! | shard → sched | [`Frame::Token`] | one generated token |
+//! | shard → sched | [`Frame::Done`] | `DecodeDone` — ledger release (success) |
+//! | shard → sched | [`Frame::Rejected`] | `DecodeDone` — ledger release (failure) |
+//! | shard → sched | [`Frame::EndForward`] | engine backlog feedback (future prefill shards) |
+//! | both | [`Frame::Ping`] / [`Frame::Pong`] | liveness + RTT measurement |
+//! | sched → shard | [`Frame::StatsRequest`] | gauge snapshot request |
+//! | shard → sched | [`Frame::StatsReply`] | per-unit occupancy gauges |
+//! | sched → shard | [`Frame::Stop`] | drain and exit |
+//! | shard → sched | [`Frame::Bye`] | drain complete, closing |
+//!
+//! Reads are driven through the stateful [`FrameReader`], which preserves
+//! partial progress across socket read timeouts — a timeout mid-frame
+//! must never desynchronize the stream.
+
+use std::io::{ErrorKind, Read, Write};
+use std::time::{Duration, Instant};
+
+/// Protocol version carried in `Hello`/`HelloAck`; bumped on any frame
+/// layout change. Mismatched peers refuse the handshake.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Upper bound on one frame's payload (guards against a corrupt length
+/// prefix allocating unbounded memory). Sized for an `Admit` carrying
+/// full-context KV caches of a small model.
+pub const MAX_FRAME: u32 = 256 * 1024 * 1024;
+
+/// Per-unit occupancy snapshot carried by [`Frame::StatsReply`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnitLoad {
+    /// Sequences currently resident on the unit.
+    pub active: u32,
+    /// Free decode slots.
+    pub free_slots: u32,
+    /// Resident KV tokens (engine ground truth where available).
+    pub kv_tokens: u64,
+}
+
+/// One protocol frame (see module docs for the direction table).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Scheduler handshake: protocol version check.
+    Hello {
+        /// Sender's [`PROTO_VERSION`].
+        version: u32,
+    },
+    /// Shard handshake reply: the shape the scheduler adds to its pool.
+    HelloAck {
+        /// Shard's [`PROTO_VERSION`].
+        version: u32,
+        /// Decode DP units served by this shard.
+        units: u32,
+        /// Decode slots per unit (the shard's batch size).
+        slots: u32,
+    },
+    /// Placement commit: admit a prefilled sequence onto `unit`.
+    Admit {
+        /// Target DP unit, shard-local index in `0..units`.
+        unit: u32,
+        /// Request id (scheduler-scoped; echoed in every reply).
+        id: u64,
+        /// First generated token (produced by prefill).
+        first_token: i32,
+        /// Prompt length — resident KV rows at join.
+        kv_len: u32,
+        /// Output tokens still to generate.
+        max_new: u32,
+        /// Prompt K caches (`[L, S, H, Dh]` flattened; empty for engines
+        /// without transferable KV, e.g. the mock).
+        k: Vec<f32>,
+        /// Prompt V caches.
+        v: Vec<f32>,
+    },
+    /// One generated token for request `id`.
+    Token {
+        /// Request id.
+        id: u64,
+        /// 0-based position in the generation (0 was emitted by prefill
+        /// scheduler-side, so shard tokens start at 1).
+        index: u32,
+        /// Token id.
+        token: i32,
+    },
+    /// Terminal: generation finished; releases the ledger charge.
+    Done {
+        /// Request id.
+        id: u64,
+        /// The full generation, first (prefill-produced) token included —
+        /// identical to what an in-process unit reports.
+        tokens: Vec<i32>,
+    },
+    /// Terminal: the shard could not serve the sequence; releases the
+    /// ledger charge.
+    Rejected {
+        /// Request id.
+        id: u64,
+    },
+    /// Engine backlog feedback (reserved for future prefill shards; the
+    /// decode path never sends it).
+    EndForward {
+        /// Shard-local instance index.
+        instance: u32,
+        /// Measured pass time, seconds.
+        t_measured: f64,
+        /// Tokens still buffered on the device; `None` means the engine
+        /// consumed everything dispatched (`EndForwardBacklog::ConsumedAll`).
+        remaining: Option<u32>,
+    },
+    /// Liveness probe; the peer echoes both fields in a [`Frame::Pong`].
+    Ping {
+        /// Correlates the pong.
+        nonce: u64,
+        /// Sender-clock send instant, microseconds.
+        t_us: u64,
+    },
+    /// Echo of a [`Frame::Ping`].
+    Pong {
+        /// Echoed nonce.
+        nonce: u64,
+        /// Echoed send instant (the pinger computes RTT from it).
+        t_us: u64,
+    },
+    /// Ask the shard for its per-unit occupancy.
+    StatsRequest,
+    /// Per-unit occupancy gauges, shard-local unit order.
+    StatsReply {
+        /// One entry per DP unit.
+        units: Vec<UnitLoad>,
+    },
+    /// Drain every active sequence, then exit.
+    Stop,
+    /// Drain complete; the shard closes the connection after this.
+    Bye,
+}
+
+/// Why a frame could not be decoded.
+#[derive(Debug)]
+pub enum ProtoError {
+    /// Payload ended before the fields it declared.
+    Truncated,
+    /// Unknown frame tag.
+    BadTag(u8),
+    /// Length prefix exceeds [`MAX_FRAME`].
+    Oversize(u32),
+    /// Trailing bytes after a complete frame body.
+    TrailingBytes,
+    /// The peer closed the stream.
+    Closed,
+    /// Underlying transport error.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Truncated => write!(f, "truncated frame payload"),
+            ProtoError::BadTag(t) => write!(f, "unknown frame tag {t}"),
+            ProtoError::Oversize(n) => write!(f, "frame length {n} exceeds MAX_FRAME"),
+            ProtoError::TrailingBytes => write!(f, "trailing bytes after frame body"),
+            ProtoError::Closed => write!(f, "connection closed"),
+            ProtoError::Io(e) => write!(f, "transport error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+const TAG_HELLO: u8 = 1;
+const TAG_HELLO_ACK: u8 = 2;
+const TAG_ADMIT: u8 = 3;
+const TAG_TOKEN: u8 = 4;
+const TAG_DONE: u8 = 5;
+const TAG_REJECTED: u8 = 6;
+const TAG_END_FORWARD: u8 = 7;
+const TAG_PING: u8 = 8;
+const TAG_PONG: u8 = 9;
+const TAG_STATS_REQUEST: u8 = 10;
+const TAG_STATS_REPLY: u8 = 11;
+const TAG_STOP: u8 = 12;
+const TAG_BYE: u8 = 13;
+
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u8(&mut self, x: u8) {
+        self.0.push(x);
+    }
+
+    fn u32(&mut self, x: u32) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn u64(&mut self, x: u64) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn i32(&mut self, x: i32) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn f64(&mut self, x: f64) {
+        self.0.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+
+    fn f32s(&mut self, xs: &[f32]) {
+        self.u32(xs.len() as u32);
+        for x in xs {
+            self.0.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn i32s(&mut self, xs: &[i32]) {
+        self.u32(xs.len() as u32);
+        for x in xs {
+            self.0.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.at + n > self.buf.len() {
+            return Err(ProtoError::Truncated);
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32, ProtoError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, ProtoError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Guard before allocating: the declared element count must fit in
+    /// the bytes actually present (checked arithmetic — a huge count
+    /// must not wrap past the guard on 32-bit targets).
+    fn check_elems(&self, n: usize, elem_size: usize) -> Result<(), ProtoError> {
+        match n.checked_mul(elem_size) {
+            Some(bytes) if self.at.saturating_add(bytes) <= self.buf.len() => Ok(()),
+            _ => Err(ProtoError::Truncated),
+        }
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, ProtoError> {
+        let n = self.u32()? as usize;
+        self.check_elems(n, 4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f32::from_le_bytes(self.take(4)?.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    fn i32s(&mut self) -> Result<Vec<i32>, ProtoError> {
+        let n = self.u32()? as usize;
+        self.check_elems(n, 4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.i32()?);
+        }
+        Ok(out)
+    }
+
+    fn finish(self) -> Result<(), ProtoError> {
+        if self.at == self.buf.len() {
+            Ok(())
+        } else {
+            Err(ProtoError::TrailingBytes)
+        }
+    }
+}
+
+/// Conservative upper bound on a frame's encoded payload size, for
+/// sender-side [`MAX_FRAME`] checks *before* serializing: an oversized
+/// frame must be refused locally (failing one job), never written —
+/// the receiver's `Oversize` error would kill the whole connection.
+pub fn admit_payload_bound(k_len: usize, v_len: usize) -> u64 {
+    // tag + unit + id + first_token + kv_len + max_new + 2 vec headers.
+    64 + 4 * (k_len as u64 + v_len as u64)
+}
+
+/// Serialize one frame payload (tag + fields, *without* the length
+/// prefix).
+pub fn encode(f: &Frame) -> Vec<u8> {
+    let mut e = Enc(Vec::new());
+    match f {
+        Frame::Hello { version } => {
+            e.u8(TAG_HELLO);
+            e.u32(*version);
+        }
+        Frame::HelloAck {
+            version,
+            units,
+            slots,
+        } => {
+            e.u8(TAG_HELLO_ACK);
+            e.u32(*version);
+            e.u32(*units);
+            e.u32(*slots);
+        }
+        Frame::Admit {
+            unit,
+            id,
+            first_token,
+            kv_len,
+            max_new,
+            k,
+            v,
+        } => {
+            e.u8(TAG_ADMIT);
+            e.u32(*unit);
+            e.u64(*id);
+            e.i32(*first_token);
+            e.u32(*kv_len);
+            e.u32(*max_new);
+            e.f32s(k);
+            e.f32s(v);
+        }
+        Frame::Token { id, index, token } => {
+            e.u8(TAG_TOKEN);
+            e.u64(*id);
+            e.u32(*index);
+            e.i32(*token);
+        }
+        Frame::Done { id, tokens } => {
+            e.u8(TAG_DONE);
+            e.u64(*id);
+            e.i32s(tokens);
+        }
+        Frame::Rejected { id } => {
+            e.u8(TAG_REJECTED);
+            e.u64(*id);
+        }
+        Frame::EndForward {
+            instance,
+            t_measured,
+            remaining,
+        } => {
+            e.u8(TAG_END_FORWARD);
+            e.u32(*instance);
+            e.f64(*t_measured);
+            match remaining {
+                Some(r) => {
+                    e.u8(1);
+                    e.u32(*r);
+                }
+                None => e.u8(0),
+            }
+        }
+        Frame::Ping { nonce, t_us } => {
+            e.u8(TAG_PING);
+            e.u64(*nonce);
+            e.u64(*t_us);
+        }
+        Frame::Pong { nonce, t_us } => {
+            e.u8(TAG_PONG);
+            e.u64(*nonce);
+            e.u64(*t_us);
+        }
+        Frame::StatsRequest => e.u8(TAG_STATS_REQUEST),
+        Frame::StatsReply { units } => {
+            e.u8(TAG_STATS_REPLY);
+            e.u32(units.len() as u32);
+            for u in units {
+                e.u32(u.active);
+                e.u32(u.free_slots);
+                e.u64(u.kv_tokens);
+            }
+        }
+        Frame::Stop => e.u8(TAG_STOP),
+        Frame::Bye => e.u8(TAG_BYE),
+    }
+    e.0
+}
+
+/// Decode one frame payload (tag + fields, the bytes `encode` produced).
+pub fn decode(buf: &[u8]) -> Result<Frame, ProtoError> {
+    let mut d = Dec { buf, at: 0 };
+    let tag = d.u8()?;
+    let f = match tag {
+        TAG_HELLO => Frame::Hello { version: d.u32()? },
+        TAG_HELLO_ACK => Frame::HelloAck {
+            version: d.u32()?,
+            units: d.u32()?,
+            slots: d.u32()?,
+        },
+        TAG_ADMIT => Frame::Admit {
+            unit: d.u32()?,
+            id: d.u64()?,
+            first_token: d.i32()?,
+            kv_len: d.u32()?,
+            max_new: d.u32()?,
+            k: d.f32s()?,
+            v: d.f32s()?,
+        },
+        TAG_TOKEN => Frame::Token {
+            id: d.u64()?,
+            index: d.u32()?,
+            token: d.i32()?,
+        },
+        TAG_DONE => Frame::Done {
+            id: d.u64()?,
+            tokens: d.i32s()?,
+        },
+        TAG_REJECTED => Frame::Rejected { id: d.u64()? },
+        TAG_END_FORWARD => Frame::EndForward {
+            instance: d.u32()?,
+            t_measured: d.f64()?,
+            remaining: match d.u8()? {
+                0 => None,
+                _ => Some(d.u32()?),
+            },
+        },
+        TAG_PING => Frame::Ping {
+            nonce: d.u64()?,
+            t_us: d.u64()?,
+        },
+        TAG_PONG => Frame::Pong {
+            nonce: d.u64()?,
+            t_us: d.u64()?,
+        },
+        TAG_STATS_REQUEST => Frame::StatsRequest,
+        TAG_STATS_REPLY => {
+            let n = d.u32()? as usize;
+            d.check_elems(n, 16)?;
+            let mut units = Vec::with_capacity(n);
+            for _ in 0..n {
+                units.push(UnitLoad {
+                    active: d.u32()?,
+                    free_slots: d.u32()?,
+                    kv_tokens: d.u64()?,
+                });
+            }
+            Frame::StatsReply { units }
+        }
+        TAG_STOP => Frame::Stop,
+        TAG_BYE => Frame::Bye,
+        t => return Err(ProtoError::BadTag(t)),
+    };
+    d.finish()?;
+    Ok(f)
+}
+
+/// Write one length-prefixed frame. The whole frame is serialized first
+/// and written with one `write_all`, so a frame is never interleaved
+/// with another writer's bytes as long as callers serialize writes.
+pub fn write_frame<W: Write>(w: &mut W, f: &Frame) -> std::io::Result<()> {
+    let payload = encode(f);
+    let mut out = Vec::with_capacity(4 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    w.write_all(&out)
+}
+
+enum ReadState {
+    /// Filling the 4-byte length prefix.
+    Header,
+    /// Filling a payload (`buf` is sized to the decoded length).
+    Payload,
+}
+
+/// Incremental frame reader that survives socket read timeouts.
+///
+/// [`FrameReader::poll`] returns `Ok(None)` on `WouldBlock`/`TimedOut`
+/// *keeping any partial bytes already consumed*, so the caller can use a
+/// socket read timeout as an idle tick (to check a stop flag, send a
+/// ping) without ever desynchronizing the stream.
+pub struct FrameReader {
+    state: ReadState,
+    buf: Vec<u8>,
+    filled: usize,
+    consumed: u64,
+}
+
+impl Default for FrameReader {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrameReader {
+    /// Fresh reader at a frame boundary.
+    pub fn new() -> Self {
+        FrameReader {
+            state: ReadState::Header,
+            buf: vec![0; 4],
+            filled: 0,
+            consumed: 0,
+        }
+    }
+
+    /// Total bytes consumed from the stream so far. Monotonic across
+    /// frames *and across timeouts*, so liveness guards can treat a
+    /// large frame trickling in slowly as activity rather than silence.
+    pub fn consumed(&self) -> u64 {
+        self.consumed
+    }
+
+    fn reset_frame(&mut self) {
+        self.state = ReadState::Header;
+        self.buf = vec![0; 4];
+        self.filled = 0;
+    }
+
+    /// Drive the reader with one blocking-with-timeout source. Returns
+    /// `Ok(Some(frame))` when a full frame is available, `Ok(None)` on a
+    /// read timeout (partial progress is preserved), or an error on EOF /
+    /// transport failure / malformed frame.
+    pub fn poll<R: Read>(&mut self, r: &mut R) -> Result<Option<Frame>, ProtoError> {
+        loop {
+            while self.filled < self.buf.len() {
+                match r.read(&mut self.buf[self.filled..]) {
+                    Ok(0) => return Err(ProtoError::Closed),
+                    Ok(n) => {
+                        self.filled += n;
+                        self.consumed += n as u64;
+                    }
+                    Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                        return Ok(None)
+                    }
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(ProtoError::Io(e)),
+                }
+            }
+            match self.state {
+                ReadState::Header => {
+                    let len = u32::from_le_bytes(self.buf[..4].try_into().unwrap());
+                    if len > MAX_FRAME {
+                        return Err(ProtoError::Oversize(len));
+                    }
+                    self.state = ReadState::Payload;
+                    self.buf = vec![0; len as usize];
+                    self.filled = 0;
+                }
+                ReadState::Payload => {
+                    let frame = decode(&self.buf)?;
+                    self.reset_frame();
+                    return Ok(Some(frame));
+                }
+            }
+        }
+    }
+}
+
+/// Byte-granular silence tracker for the symmetric silence-to-death
+/// guards on both ends of a shard connection (the scheduler's
+/// `dead_after` and the shard's connection timeout). Activity is
+/// *consumed bytes*, not complete frames, so a large frame trickling in
+/// over a slow link never reads as silence. Both guards rely on the
+/// scheduler's 1 s ping cadence keeping a healthy link audible; keep
+/// any deadline comfortably above it.
+pub struct IdleGuard {
+    last_activity: Instant,
+    last_consumed: u64,
+}
+
+impl IdleGuard {
+    /// Start the guard against `reader`'s current position.
+    pub fn new(reader: &FrameReader) -> Self {
+        IdleGuard {
+            last_activity: Instant::now(),
+            last_consumed: reader.consumed(),
+        }
+    }
+
+    /// How long the stream has been byte-silent. Call with the same
+    /// reader each poll cycle; any consumed-byte progress (or a call to
+    /// [`IdleGuard::touch`] on a complete frame) resets the clock.
+    pub fn idle_for(&mut self, reader: &FrameReader) -> Duration {
+        if reader.consumed() != self.last_consumed {
+            self.last_consumed = reader.consumed();
+            self.last_activity = Instant::now();
+        }
+        self.last_activity.elapsed()
+    }
+
+    /// Record explicit activity (a complete frame was handled).
+    pub fn touch(&mut self) {
+        self.last_activity = Instant::now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn arbitrary_frame(rng: &mut Rng) -> Frame {
+        match rng.below(13) {
+            0 => Frame::Hello {
+                version: rng.next_u64() as u32,
+            },
+            1 => Frame::HelloAck {
+                version: rng.next_u64() as u32,
+                units: rng.below(64) as u32,
+                slots: rng.below(256) as u32,
+            },
+            2 => Frame::Admit {
+                unit: rng.below(16) as u32,
+                id: rng.next_u64(),
+                first_token: rng.next_u64() as i32,
+                kv_len: rng.below(4096) as u32,
+                max_new: rng.below(1024) as u32,
+                k: (0..rng.below(32)).map(|_| rng.f64() as f32).collect(),
+                v: (0..rng.below(32)).map(|_| rng.f64() as f32).collect(),
+            },
+            3 => Frame::Token {
+                id: rng.next_u64(),
+                index: rng.below(1 << 20) as u32,
+                token: rng.next_u64() as i32,
+            },
+            4 => Frame::Done {
+                id: rng.next_u64(),
+                tokens: (0..rng.below(64)).map(|_| rng.next_u64() as i32).collect(),
+            },
+            5 => Frame::Rejected { id: rng.next_u64() },
+            6 => Frame::EndForward {
+                instance: rng.below(32) as u32,
+                t_measured: rng.f64() * 10.0,
+                remaining: rng.chance(0.5).then(|| rng.below(1 << 16) as u32),
+            },
+            7 => Frame::Ping {
+                nonce: rng.next_u64(),
+                t_us: rng.next_u64(),
+            },
+            8 => Frame::Pong {
+                nonce: rng.next_u64(),
+                t_us: rng.next_u64(),
+            },
+            9 => Frame::StatsRequest,
+            10 => Frame::StatsReply {
+                units: (0..rng.below(8))
+                    .map(|_| UnitLoad {
+                        active: rng.below(64) as u32,
+                        free_slots: rng.below(64) as u32,
+                        kv_tokens: rng.below(1 << 30),
+                    })
+                    .collect(),
+            },
+            11 => Frame::Stop,
+            _ => Frame::Bye,
+        }
+    }
+
+    #[test]
+    fn every_frame_round_trips() {
+        let mut rng = Rng::new(0xF8A3);
+        for i in 0..2000 {
+            let f = arbitrary_frame(&mut rng);
+            let bytes = encode(&f);
+            let back = decode(&bytes).unwrap_or_else(|e| panic!("iter {i}: {e} for {f:?}"));
+            assert_eq!(f, back, "iter {i}");
+        }
+    }
+
+    #[test]
+    fn truncated_payloads_error_not_panic() {
+        let mut rng = Rng::new(0xBEEF);
+        for _ in 0..500 {
+            let f = arbitrary_frame(&mut rng);
+            let bytes = encode(&f);
+            for cut in 0..bytes.len() {
+                assert!(decode(&bytes[..cut]).is_err(), "prefix of {f:?} must not decode");
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = encode(&Frame::Stop);
+        bytes.push(0);
+        assert!(matches!(decode(&bytes), Err(ProtoError::TrailingBytes)));
+    }
+
+    #[test]
+    fn corrupt_element_counts_error_not_oom() {
+        // A Done frame whose token count claims far more elements than
+        // the payload carries must fail before allocating.
+        let mut e = Enc(Vec::new());
+        e.u8(TAG_DONE);
+        e.u64(7);
+        e.u32(u32::MAX); // element count
+        assert!(matches!(decode(&e.0), Err(ProtoError::Truncated)));
+    }
+
+    #[test]
+    fn unknown_tag_rejected() {
+        assert!(matches!(decode(&[200]), Err(ProtoError::BadTag(200))));
+    }
+
+    /// A reader that delivers one byte per call, interleaving timeouts —
+    /// the worst case a socket read timeout can produce.
+    struct Trickle {
+        data: Vec<u8>,
+        at: usize,
+        tick: bool,
+    }
+
+    impl std::io::Read for Trickle {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            self.tick = !self.tick;
+            if self.tick {
+                return Err(std::io::Error::new(ErrorKind::WouldBlock, "tick"));
+            }
+            if self.at >= self.data.len() {
+                return Ok(0);
+            }
+            buf[0] = self.data[self.at];
+            self.at += 1;
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn frame_reader_survives_timeouts_mid_frame() {
+        let mut rng = Rng::new(0xC0DE);
+        let frames: Vec<Frame> = (0..40).map(|_| arbitrary_frame(&mut rng)).collect();
+        let mut data = Vec::new();
+        for f in &frames {
+            write_frame(&mut data, f).unwrap();
+        }
+        let mut src = Trickle {
+            data,
+            at: 0,
+            tick: false,
+        };
+        let mut reader = FrameReader::new();
+        let mut got = Vec::new();
+        loop {
+            match reader.poll(&mut src) {
+                Ok(Some(f)) => got.push(f),
+                Ok(None) => continue, // timeout tick: state preserved
+                Err(ProtoError::Closed) => break,
+                Err(e) => panic!("{e}"),
+            }
+        }
+        assert_eq!(got, frames);
+    }
+
+    #[test]
+    fn oversize_length_prefix_rejected() {
+        let mut data = (MAX_FRAME + 1).to_le_bytes().to_vec();
+        data.extend_from_slice(&[0; 16]);
+        let mut reader = FrameReader::new();
+        assert!(matches!(
+            reader.poll(&mut data.as_slice()),
+            Err(ProtoError::Oversize(_))
+        ));
+    }
+}

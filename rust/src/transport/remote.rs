@@ -1,0 +1,445 @@
+//! TCP client for a remote decode shard (`sbs worker --decode`).
+//!
+//! One shard connection ([`connect_shard`]) serves every DP unit the
+//! shard advertises in its `HelloAck`; the scheduler holds one
+//! [`RemoteUnit`] transport per unit, all sharing the connection.
+//!
+//! ## Failure semantics
+//!
+//! A dedicated reader thread owns the receive side. When the connection
+//! dies (EOF, reset, transport error) the reader atomically: marks the
+//! shard dead (placements stop immediately — `alive()` gates
+//! admissibility), drains the pending-sequence table, and delivers the
+//! resident request ids through [`ShardSinks::on_evicted`] so the
+//! scheduler releases their ledger charges and rejects them upstream —
+//! *nothing leaks*. It then retries the connect/handshake loop with
+//! backoff until it succeeds (the shard aborts any stale state on a new
+//! handshake, so a reconnect starts clean) or the cluster stops.
+//!
+//! ## Liveness and RTT
+//!
+//! The reader heartbeats: a `Ping` every ping interval (busy or idle),
+//! with the `Pong` round trip published through the transport's
+//! `rtt_ms` and surfaced in the decode-pool gauges (`STATS`). Silence —
+//! no inbound frame for `dead_after`, pings unanswered — declares the
+//! shard dead even without an EOF/RST (black-holed link), triggering
+//! the same evict-and-reconnect path. The steady ping cadence is also
+//! what the shard's own symmetric silence guard keys off.
+
+use super::proto::{self, Frame, FrameReader, PROTO_VERSION, ProtoError};
+use super::{AdmitJob, DecodeTransport, ShardSinks};
+use crate::metrics::RequestMetrics;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Tunables for one shard connection.
+#[derive(Debug, Clone)]
+pub struct RemoteShardConfig {
+    /// Shard address (`host:port`).
+    pub addr: String,
+    /// Initial connect + handshake budget (startup fails fast past it).
+    pub connect_timeout: Duration,
+    /// Socket read timeout — the reader's idle-tick cadence.
+    pub read_tick: Duration,
+    /// Quiet time before the reader sends a liveness ping.
+    pub ping_interval: Duration,
+    /// Total silence (no frame of any kind, pings unanswered) after
+    /// which the shard is declared dead even without an EOF/RST — the
+    /// black-hole case: network partition, frozen host.
+    pub dead_after: Duration,
+    /// Delay between reconnect attempts after a drop.
+    pub reconnect_backoff: Duration,
+}
+
+impl RemoteShardConfig {
+    /// Defaults for `addr` (5 s connect budget, 250 ms ticks, 1 s pings,
+    /// 5 s silence-to-death, 500 ms reconnect backoff).
+    pub fn new(addr: &str) -> Self {
+        RemoteShardConfig {
+            addr: addr.to_string(),
+            connect_timeout: Duration::from_secs(5),
+            read_tick: Duration::from_millis(250),
+            ping_interval: Duration::from_secs(1),
+            dead_after: Duration::from_secs(5),
+            reconnect_backoff: Duration::from_millis(500),
+        }
+    }
+}
+
+/// Send side + pending table, guarded together so admit/evict/complete
+/// transitions are atomic (an admit can never slip a sequence into a
+/// shard that was just declared dead without being evicted).
+struct ShardIo {
+    conn: Option<TcpStream>,
+    /// Sequences admitted and not yet terminal: id → scheduler metrics.
+    pending: HashMap<u64, RequestMetrics>,
+}
+
+/// State shared by the per-unit transports and the reader thread.
+pub struct ShardHandle {
+    cfg: RemoteShardConfig,
+    io: Mutex<ShardIo>,
+    alive: AtomicBool,
+    /// Last measured RTT, microseconds; 0 = not yet measured.
+    rtt_us: AtomicU64,
+    stop: AtomicBool,
+    /// Epoch for ping timestamps.
+    epoch: Instant,
+    ping_nonce: AtomicU64,
+    /// Shape advertised at first handshake; the scheduler's pool is
+    /// sized to it, so a reconnecting shard must match it exactly.
+    units: u32,
+    slots: u32,
+}
+
+impl ShardHandle {
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Serialize one frame onto the connection. On failure the socket is
+    /// shut down so the reader notices promptly and runs eviction.
+    fn send(&self, io: &mut ShardIo, frame: &Frame) -> std::io::Result<()> {
+        let Some(conn) = io.conn.as_mut() else {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::NotConnected,
+                "shard disconnected",
+            ));
+        };
+        match proto::write_frame(conn, frame) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let _ = conn.shutdown(Shutdown::Both);
+                io.conn = None;
+                self.alive.store(false, Ordering::SeqCst);
+                Err(e)
+            }
+        }
+    }
+}
+
+fn resolve(addr: &str) -> Result<std::net::SocketAddr> {
+    addr.to_socket_addrs()
+        .with_context(|| format!("resolving shard address {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow!("shard address {addr} resolved to nothing"))
+}
+
+/// Connect, exchange `Hello`/`HelloAck`, and return the ready stream
+/// plus the advertised shape.
+fn connect_and_handshake(cfg: &RemoteShardConfig) -> Result<(TcpStream, u32, u32)> {
+    let sockaddr = resolve(&cfg.addr)?;
+    let conn = TcpStream::connect_timeout(&sockaddr, cfg.connect_timeout)
+        .with_context(|| format!("connecting to shard {}", cfg.addr))?;
+    conn.set_nodelay(true)?;
+    conn.set_read_timeout(Some(cfg.read_tick))?;
+    conn.set_write_timeout(Some(cfg.connect_timeout))?;
+    let mut w = conn.try_clone()?;
+    proto::write_frame(&mut w, &Frame::Hello { version: PROTO_VERSION })?;
+    let mut reader = FrameReader::new();
+    let mut r = conn.try_clone()?;
+    let deadline = Instant::now() + cfg.connect_timeout;
+    loop {
+        match reader.poll(&mut r) {
+            Ok(Some(Frame::HelloAck {
+                version,
+                units,
+                slots,
+            })) => {
+                if version != PROTO_VERSION {
+                    return Err(anyhow!(
+                        "shard {} speaks protocol v{version}, we speak v{PROTO_VERSION}",
+                        cfg.addr
+                    ));
+                }
+                if units == 0 {
+                    return Err(anyhow!("shard {} advertises zero units", cfg.addr));
+                }
+                if slots == 0 {
+                    // A zero-slot unit could never admit: every placement
+                    // would pend forever with no terminal event.
+                    return Err(anyhow!("shard {} advertises zero slots", cfg.addr));
+                }
+                return Ok((conn, units, slots));
+            }
+            // A reconnecting shard may flush stale events first; skip
+            // them (but still within the handshake deadline — a peer
+            // streaming non-HelloAck frames must not pin us forever).
+            Ok(Some(_)) | Ok(None) => {
+                if Instant::now() >= deadline {
+                    return Err(anyhow!("shard {} handshake timed out", cfg.addr));
+                }
+            }
+            Err(e) => return Err(anyhow!("shard {} handshake failed: {e}", cfg.addr)),
+        }
+    }
+}
+
+/// Connect to a shard and return one [`RemoteUnit`] transport per DP
+/// unit it serves. Fails fast if the shard is unreachable at startup;
+/// after that, drops are handled by evict-and-reconnect (module docs).
+pub fn connect_shard(cfg: RemoteShardConfig, sinks: ShardSinks) -> Result<Vec<RemoteUnit>> {
+    let (conn, units, slots) = connect_and_handshake(&cfg)?;
+    let reader_stream = conn.try_clone()?;
+    let handle = Arc::new(ShardHandle {
+        cfg,
+        io: Mutex::new(ShardIo {
+            conn: Some(conn),
+            pending: HashMap::new(),
+        }),
+        alive: AtomicBool::new(true),
+        rtt_us: AtomicU64::new(0),
+        stop: AtomicBool::new(false),
+        epoch: Instant::now(),
+        ping_nonce: AtomicU64::new(1),
+        units,
+        slots,
+    });
+    {
+        let handle = handle.clone();
+        std::thread::spawn(move || reader_loop(handle, sinks, reader_stream));
+    }
+    Ok((0..units)
+        .map(|u| RemoteUnit {
+            shard: handle.clone(),
+            unit: u,
+            slots,
+        })
+        .collect())
+}
+
+/// Receive side: deliver events, measure RTT, and on connection death
+/// evict + reconnect (see module docs).
+fn reader_loop(handle: Arc<ShardHandle>, sinks: ShardSinks, mut stream: TcpStream) {
+    let addr = handle.cfg.addr.clone();
+    'conn: loop {
+        let mut reader = FrameReader::new();
+        let mut idle = proto::IdleGuard::new(&reader);
+        let mut last_ping = Instant::now();
+        loop {
+            if handle.stop.load(Ordering::SeqCst) {
+                break 'conn;
+            }
+            match reader.poll(&mut stream) {
+                Ok(Some(frame)) => {
+                    idle.touch();
+                    handle_frame(&handle, &sinks, frame);
+                }
+                Ok(None) => {
+                    // Total silence with pings outstanding: the link is
+                    // black-holed (partition, frozen host) — no EOF/RST
+                    // will ever come, so declare death ourselves.
+                    if idle.idle_for(&reader) >= handle.cfg.dead_after {
+                        log::warn!(
+                            "shard {addr}: no frames for {:?} (pings unanswered); declaring dead",
+                            handle.cfg.dead_after
+                        );
+                        break;
+                    }
+                }
+                Err(ProtoError::Closed) => break,
+                Err(e) => {
+                    log::warn!("shard {addr}: receive failed: {e}");
+                    break;
+                }
+            }
+            // Heartbeat every ping interval, busy or idle: the pongs
+            // measure RTT, and the shard relies on this steady inbound
+            // cadence for its own symmetric silence-to-death guard.
+            if last_ping.elapsed() >= handle.cfg.ping_interval {
+                last_ping = Instant::now();
+                let ping = Frame::Ping {
+                    nonce: handle.ping_nonce.fetch_add(1, Ordering::Relaxed),
+                    t_us: handle.now_us(),
+                };
+                let mut io = handle.io.lock().unwrap();
+                if handle.send(&mut io, &ping).is_err() {
+                    break;
+                }
+            }
+        }
+        // The connection is dead: evict everything resident, atomically
+        // with marking the shard unplaceable.
+        let resident: Vec<u64> = {
+            let mut io = handle.io.lock().unwrap();
+            handle.alive.store(false, Ordering::SeqCst);
+            if let Some(c) = io.conn.take() {
+                let _ = c.shutdown(Shutdown::Both);
+            }
+            io.pending.drain().map(|(id, _)| id).collect()
+        };
+        if !resident.is_empty() {
+            log::warn!("shard {addr} died with {} resident sequences; evicting", resident.len());
+            (sinks.on_evicted)(resident);
+        }
+        if handle.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // Reconnect with backoff until the shard returns or we stop.
+        log::info!("shard {addr}: reconnecting");
+        loop {
+            std::thread::sleep(handle.cfg.reconnect_backoff);
+            if handle.stop.load(Ordering::SeqCst) {
+                break 'conn;
+            }
+            match connect_and_handshake(&handle.cfg) {
+                Ok((conn, units, slots)) => {
+                    // The scheduler's pool was sized to the original
+                    // shape; a replacement with a different one would
+                    // leave phantom units that it rejects every admit
+                    // for. Refuse it and keep retrying (the shard stays
+                    // visibly dead in the gauges).
+                    if units != handle.units || slots != handle.slots {
+                        log::error!(
+                            "shard {addr}: replacement advertises {units}×{slots} but the \
+                             pool was built for {}×{}; refusing to rejoin",
+                            handle.units,
+                            handle.slots
+                        );
+                        continue;
+                    }
+                    log::info!("shard {addr}: reconnected ({units} units)");
+                    let Ok(rs) = conn.try_clone() else { continue };
+                    let mut io = handle.io.lock().unwrap();
+                    io.conn = Some(conn);
+                    handle.alive.store(true, Ordering::SeqCst);
+                    drop(io);
+                    stream = rs;
+                    continue 'conn;
+                }
+                Err(e) => log::debug!("shard {addr}: reconnect attempt failed: {e:#}"),
+            }
+        }
+    }
+}
+
+fn handle_frame(handle: &ShardHandle, sinks: &ShardSinks, frame: Frame) {
+    match frame {
+        Frame::Token { id, index, token } => {
+            // Gate on the pending table: a stale id (evicted, or left
+            // over from a connection this scheduler never owned) must
+            // not produce upstream events.
+            if handle.io.lock().unwrap().pending.contains_key(&id) {
+                (sinks.on_token)(id, index, token);
+            }
+        }
+        Frame::Done { id, tokens } => {
+            let metrics = handle.io.lock().unwrap().pending.remove(&id);
+            if let Some(m) = metrics {
+                (sinks.on_done)(id, tokens, m);
+            }
+        }
+        Frame::Rejected { id } => {
+            if handle.io.lock().unwrap().pending.remove(&id).is_some() {
+                (sinks.on_rejected)(id);
+            }
+        }
+        Frame::Pong { t_us, .. } => {
+            let rtt = handle.now_us().saturating_sub(t_us).max(1);
+            handle.rtt_us.store(rtt, Ordering::Relaxed);
+        }
+        Frame::Bye => {
+            // Clean shutdown acknowledgement; the close follows as EOF.
+        }
+        // StatsReply and the rest are informational or future-facing;
+        // the scheduler's own ledger is authoritative for gauges.
+        _ => {}
+    }
+}
+
+/// Transport for one DP unit of a remote shard (shares the shard's
+/// connection, liveness and RTT with its sibling units).
+pub struct RemoteUnit {
+    shard: Arc<ShardHandle>,
+    unit: u32,
+    slots: u32,
+}
+
+impl DecodeTransport for RemoteUnit {
+    fn label(&self) -> String {
+        format!("{}#{}", self.shard.cfg.addr, self.unit)
+    }
+
+    fn alive(&self) -> bool {
+        self.shard.alive.load(Ordering::SeqCst)
+    }
+
+    fn rtt_ms(&self) -> Option<f64> {
+        match self.shard.rtt_us.load(Ordering::Relaxed) {
+            0 => None,
+            us => Some(us as f64 / 1e3),
+        }
+    }
+
+    fn slots(&self) -> u32 {
+        self.slots
+    }
+
+    fn admit(&mut self, job: AdmitJob) -> Result<(), AdmitJob> {
+        // Refuse frames the receiver would reject as oversized: sending
+        // one would cost the whole connection (and every resident
+        // sequence on the shard), not just this job.
+        let bound = proto::admit_payload_bound(job.outcome.k.len(), job.outcome.v.len());
+        if bound > proto::MAX_FRAME as u64 {
+            log::warn!(
+                "shard {}: admit for job {} (~{bound} B) exceeds the frame limit; refusing",
+                self.shard.cfg.addr,
+                job.id
+            );
+            return Err(job);
+        }
+        let frame = Frame::Admit {
+            unit: self.unit,
+            id: job.id,
+            first_token: job.outcome.first_token,
+            kv_len: job.outcome.len as u32,
+            max_new: job.max_new,
+            k: job.outcome.k.clone(),
+            v: job.outcome.v.clone(),
+        };
+        let mut io = self.shard.io.lock().unwrap();
+        if io.conn.is_none() {
+            return Err(job);
+        }
+        // Register before writing: the reader (same lock) can deliver a
+        // fast Done only after we release the lock, and an eviction
+        // sweeping the table will include this id if the shard dies
+        // mid-write.
+        io.pending.insert(job.id, job.metrics);
+        match self.shard.send(&mut io, &frame) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                io.pending.remove(&job.id);
+                drop(io);
+                log::warn!("shard {}: admit failed: {e}", self.shard.cfg.addr);
+                Err(job)
+            }
+        }
+    }
+
+    fn stop(&mut self) {
+        // First unit to stop speaks for the whole shard.
+        if self.shard.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let mut io = self.shard.io.lock().unwrap();
+        let _ = self.shard.send(&mut io, &Frame::Stop);
+    }
+
+    fn detach(&mut self) {
+        // Close the connection without Frame::Stop: the shard sees EOF,
+        // aborts nothing it still owes (we own no sequences at drain)
+        // and goes back to accepting — ready for the next scheduler.
+        if self.shard.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let mut io = self.shard.io.lock().unwrap();
+        if let Some(c) = io.conn.take() {
+            let _ = c.shutdown(Shutdown::Both);
+        }
+    }
+}

@@ -161,6 +161,13 @@ pub fn cli_loadgen(argv: &[String]) -> Result<()> {
     j.insert("duration_s".into(), Json::from(duration));
     j.insert("conns".into(), Json::from(conns));
     j.insert("arrival".into(), Json::from(arrival.name()));
+    // Hoist pool liveness to the top level: a shard killed mid-run must
+    // be loud in the report, not a silently smaller pool.
+    for key in ["n_units", "units_alive"] {
+        if let Some(v) = decode_pool.get(key) {
+            j.insert(key.into(), v.clone());
+        }
+    }
     j.insert("decode_pool".into(), decode_pool);
     println!("{}", Json::Obj(j).dump());
     Ok(())

@@ -1,0 +1,318 @@
+//! Integration tests for the remote decode shard transport: true
+//! multi-process (`sbs worker` children driven over real TCP).
+//!
+//! 1. **Parity** (extends the PR 2 harness): the same deterministic job
+//!    trace through an in-process 2-unit pool and a 2-shard remote pool
+//!    must produce identical placement decisions — the transport must be
+//!    invisible to the dispatch core.
+//! 2. **Shard death**: killing a shard mid-run evicts its sequences
+//!    (rejected upstream, ledger released — nothing hangs or leaks) and
+//!    the dead unit stays *visible* in the gauges.
+//! 3. **Reconnect**: a replacement shard on the same address rejoins the
+//!    pool without restarting the scheduler.
+
+use sbs::cluster::dispatch::DecodePolicy;
+use sbs::cluster::workers::{
+    Admission, AdmissionConfig, EngineSpec, Job, JobUpdate, RealCluster, RealClusterConfig,
+    RealSchedMode,
+};
+use sbs::engine::mock::MockEngineConfig;
+use sbs::engine::sampler::Sampling;
+use sbs::scheduler::baseline::ImmediatePolicy;
+use sbs::testing::net::{parse_listening_line, wait_for_port};
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// Spawn one `sbs worker --decode` shard process with a deterministic
+/// mock engine (2 ms steps, zero jitter); returns the child and the
+/// address it announced.
+fn spawn_worker(listen: &str, units: u32, batch: u32) -> (Child, String) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_sbs"))
+        .args([
+            "worker",
+            "--decode",
+            "--listen",
+            listen,
+            "--units",
+            &units.to_string(),
+            "--batch",
+            &batch.to_string(),
+            "--engine",
+            "mock",
+            "--mock-decode-ms",
+            "2",
+            "--mock-jitter",
+            "0",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn sbs worker");
+    let stdout = child.stdout.take().expect("worker stdout");
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).expect("read LISTENING line");
+    let addr = parse_listening_line(&line).expect("LISTENING announcement");
+    wait_for_port(&addr, Duration::from_secs(10)).expect("shard listener accepting");
+    (child, addr)
+}
+
+/// Wait (bounded) for a shard process to exit on its own; kill on
+/// timeout so a failed drain cannot leak processes past the test.
+fn reap(mut child: Child, timeout: Duration) -> bool {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match child.try_wait().expect("try_wait") {
+            Some(_) => return true,
+            None if Instant::now() >= deadline => {
+                let _ = child.kill();
+                let _ = child.wait();
+                return false;
+            }
+            None => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+fn det_mock() -> EngineSpec {
+    EngineSpec::Mock(MockEngineConfig {
+        t_prefill_base: 0.001,
+        t_prefill_per_token: 5e-6,
+        t_decode_step: 0.002,
+        chunk: 512,
+        jitter: 0.0,
+    })
+}
+
+/// Pool config shared by both parity runs; only the decode topology
+/// (local units vs remote shards) differs. Immediate prefill dispatch +
+/// one prefill worker serializes placements in submission order, and
+/// every job outlives the whole submission window, so placement
+/// decisions depend *only* on the join sequence — deterministic across
+/// runs and transports.
+fn parity_cfg(n_local: u32, remote: Vec<String>) -> RealClusterConfig {
+    RealClusterConfig {
+        n_prefill: 1,
+        n_decode: n_local,
+        decode_batch: 16,
+        c_chunk: 4096,
+        mode: RealSchedMode::Immediate(ImmediatePolicy::RoundRobin),
+        decode_policy: DecodePolicy::LoadAware(Default::default()),
+        sampling: Sampling::Greedy,
+        seed: 11,
+        engine: det_mock(),
+        admission: AdmissionConfig {
+            max_inflight: 1024,
+            ..Default::default()
+        },
+        remote_decode: remote,
+        ..Default::default()
+    }
+}
+
+const PARITY_JOBS: u64 = 24;
+
+fn submit_parity_trace(cluster: &RealCluster) {
+    for i in 0..PARITY_JOBS {
+        // Heterogeneous KV footprints so load-aware placement has real
+        // decisions to make; max_new keeps every job resident past the
+        // ~240 ms submission window (≥ 150 steps × 2 ms = 300 ms), so no
+        // release ever interleaves with a placement and the decision
+        // sequence is timing-independent.
+        let prompt_len = 16 + (i as usize * 37) % 200;
+        let max_new = 150 + (i as u32 % 4) * 60;
+        cluster.submit(Job {
+            id: i,
+            prompt: vec![7; prompt_len],
+            max_new,
+        });
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn run_parity(cfg: RealClusterConfig) -> (Vec<u64>, usize) {
+    let cluster = RealCluster::start(cfg).expect("cluster start");
+    let handle = cluster.handle();
+    submit_parity_trace(&cluster);
+    let (completions, _report) = cluster.finish().expect("cluster finish");
+    let stats = handle.decode_stats();
+    (stats.units.iter().map(|u| u.placed).collect(), completions.len())
+}
+
+#[test]
+fn remote_pool_matches_inprocess_dispatch_decisions() {
+    let (w1, a1) = spawn_worker("127.0.0.1:0", 1, 16);
+    let (w2, a2) = spawn_worker("127.0.0.1:0", 1, 16);
+
+    let (local_placed, local_done) = run_parity(parity_cfg(2, Vec::new()));
+    let (remote_placed, remote_done) = run_parity(parity_cfg(0, vec![a1, a2]));
+
+    assert_eq!(local_done, PARITY_JOBS as usize, "in-process run must drain");
+    assert_eq!(remote_done, PARITY_JOBS as usize, "remote run must drain");
+    assert_eq!(local_placed.len(), 2);
+    assert_eq!(
+        local_placed, remote_placed,
+        "the transport must be invisible to placement: in-process pool \
+         placed {local_placed:?}, remote pool placed {remote_placed:?}"
+    );
+    assert!(
+        local_placed.iter().all(|&p| p > 0),
+        "trace must exercise every unit: {local_placed:?}"
+    );
+
+    // The remote run's drain sent Stop to both shards: they must exit
+    // cleanly on their own.
+    assert!(reap(w1, Duration::from_secs(10)), "shard 1 must drain and exit");
+    assert!(reap(w2, Duration::from_secs(10)), "shard 2 must drain and exit");
+}
+
+/// Drain one streaming job to its terminal update. Returns `true` for
+/// Done, `false` for Rejected.
+fn drain_stream(rx: &std::sync::mpsc::Receiver<JobUpdate>, timeout: Duration) -> bool {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let left = deadline
+            .checked_duration_since(Instant::now())
+            .expect("job stream must terminate (no hang after shard death)");
+        match rx.recv_timeout(left) {
+            Ok(JobUpdate::Token { .. }) => continue,
+            Ok(JobUpdate::Done(_)) => return true,
+            Ok(JobUpdate::Rejected { .. }) => return false,
+            Err(_) => panic!("job stream must terminate (no hang after shard death)"),
+        }
+    }
+}
+
+#[test]
+fn killed_shard_evicts_sequences_and_stays_visible() {
+    let (mut worker, addr) = spawn_worker("127.0.0.1:0", 1, 8);
+    let cfg = RealClusterConfig {
+        n_prefill: 1,
+        n_decode: 1,
+        decode_batch: 8,
+        c_chunk: 4096,
+        mode: RealSchedMode::Immediate(ImmediatePolicy::RoundRobin),
+        decode_policy: DecodePolicy::LoadAware(Default::default()),
+        sampling: Sampling::Greedy,
+        seed: 5,
+        engine: det_mock(),
+        admission: AdmissionConfig {
+            max_inflight: 1024,
+            ..Default::default()
+        },
+        remote_decode: vec![addr],
+        ..Default::default()
+    };
+    let cluster = RealCluster::start(cfg).expect("cluster start");
+    let handle = cluster.handle();
+
+    // 12 long jobs across 16 slots: load-aware spreads them over both
+    // units, so some are resident on the shard when it dies.
+    let mut streams = Vec::new();
+    for _ in 0..12 {
+        match handle.try_submit(vec![7; 24], 300) {
+            Admission::Accepted { updates, .. } => streams.push(updates),
+            Admission::Busy(r) => panic!("unexpected BUSY: {r:?}"),
+        }
+        std::thread::sleep(Duration::from_millis(8));
+    }
+    // Let every job prefill and get placed, then kill the shard cold.
+    std::thread::sleep(Duration::from_millis(300));
+    let placed_remote_before = {
+        let stats = handle.decode_stats();
+        stats.units[1].placed
+    };
+    worker.kill().expect("kill shard");
+    worker.wait().expect("reap shard");
+
+    let (mut done, mut rejected) = (0, 0);
+    for rx in &streams {
+        if drain_stream(rx, Duration::from_secs(60)) {
+            done += 1;
+        } else {
+            rejected += 1;
+        }
+    }
+    assert_eq!(done + rejected, 12, "every stream reaches a terminal state");
+    assert!(placed_remote_before > 0, "test premise: the shard owned sequences before dying");
+    assert!(rejected > 0, "shard-resident sequences must be rejected");
+    assert!(done > 0, "locally-resident sequences must still complete");
+
+    // Nothing leaked: the ledger drains to zero (poll briefly — the last
+    // DecodeDone can trail the last router update by a scheduler tick),
+    // and the dead unit is visible.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let stats = loop {
+        let stats = handle.decode_stats();
+        if stats.units.iter().all(|u| u.active == 0) {
+            break stats;
+        }
+        assert!(Instant::now() < deadline, "leaked ledger entries: {stats:?}");
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    assert_eq!(stats.units.len(), 2);
+    assert_eq!(stats.units_alive(), 1, "dead shard must be reported, not hidden");
+    assert!(!stats.units[1].alive, "unit 1 is the shard: {stats:?}");
+    let (_completions, _report) = cluster.finish().expect("finish must not hang");
+}
+
+#[test]
+fn replacement_shard_on_same_address_rejoins_the_pool() {
+    let (mut worker, addr) = spawn_worker("127.0.0.1:0", 1, 8);
+    let cfg = RealClusterConfig {
+        n_prefill: 1,
+        n_decode: 1,
+        decode_batch: 8,
+        c_chunk: 4096,
+        mode: RealSchedMode::Immediate(ImmediatePolicy::RoundRobin),
+        decode_policy: DecodePolicy::LoadAware(Default::default()),
+        sampling: Sampling::Greedy,
+        seed: 5,
+        engine: det_mock(),
+        admission: AdmissionConfig {
+            max_inflight: 1024,
+            ..Default::default()
+        },
+        remote_decode: vec![addr.clone()],
+        ..Default::default()
+    };
+    let cluster = RealCluster::start(cfg).expect("cluster start");
+    let handle = cluster.handle();
+
+    let wait_alive = |want: usize, what: &str| {
+        let deadline = Instant::now() + Duration::from_secs(15);
+        loop {
+            if handle.decode_stats().units_alive() == want {
+                return;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "{what}: still {} alive units",
+                handle.decode_stats().units_alive()
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    };
+
+    worker.kill().expect("kill shard");
+    worker.wait().expect("reap shard");
+    wait_alive(1, "scheduler must notice the dead shard");
+
+    // A replacement process on the *same* address: the client's
+    // reconnect loop finds it and restores the pool.
+    let (replacement, readdr) = spawn_worker(&addr, 1, 8);
+    assert_eq!(readdr, addr);
+    wait_alive(2, "replacement shard must rejoin");
+
+    // The restored pool serves traffic end to end.
+    for i in 0..6u64 {
+        cluster.submit(Job {
+            id: 1000 + i,
+            prompt: vec![7; 24],
+            max_new: 4,
+        });
+    }
+    let (completions, _report) = cluster.finish().expect("finish");
+    assert_eq!(completions.len(), 6, "restored pool must serve all jobs");
+    assert!(reap(replacement, Duration::from_secs(10)), "replacement drains on Stop");
+}
