@@ -26,6 +26,14 @@ fn env_shards() -> Vec<String> {
         .unwrap_or_default()
 }
 
+/// Remote prefill shard addresses from `SBS_E2E_PREFILL_SHARDS`
+/// (comma-separated `sbs worker --prefill` listeners).
+fn env_prefill_shards() -> Vec<String> {
+    std::env::var("SBS_E2E_PREFILL_SHARDS")
+        .map(|s| sbs::transport::parse_shard_list(&s))
+        .unwrap_or_default()
+}
+
 fn run_mode(
     mode: RealSchedMode,
     n: u32,
@@ -39,6 +47,7 @@ fn run_mode(
             artifacts: artifacts_dir(),
         },
         remote_decode: env_shards(),
+        remote_prefill: env_prefill_shards(),
         // Both comparison runs share one shard set: disconnect on drain
         // instead of stopping the worker processes between runs.
         stop_shards_on_drain: false,
@@ -64,7 +73,7 @@ fn run_mode(
     Ok((report, handle.decode_stats()))
 }
 
-/// Render the decode pool per unit, shard deaths included: a unit whose
+/// Render both pools per unit, shard deaths included: a unit whose
 /// transport died mid-run shows `DEAD`, not a silently shrunk pool.
 fn render_pool(stats: &DecodePoolStats) -> String {
     let mut s = format!(
@@ -88,6 +97,25 @@ fn render_pool(stats: &DecodePoolStats) -> String {
             u.placed,
             u.active,
             u.seq_seconds,
+        ));
+    }
+    s.push_str(&format!(
+        "prefill pool: {}/{} instances alive\n",
+        stats.prefill_units_alive(),
+        stats.prefill.len()
+    ));
+    for p in &stats.prefill {
+        let rtt = p
+            .rtt_ms
+            .map(|ms| format!(" rtt={ms:.2}ms"))
+            .unwrap_or_default();
+        s.push_str(&format!(
+            "  {} via {}{}: {} — dispatched={}\n",
+            p.unit,
+            p.transport,
+            rtt,
+            if p.alive { "alive" } else { "DEAD" },
+            p.dispatched,
         ));
     }
     s

@@ -105,9 +105,16 @@ pub enum EndForwardBacklog {
     /// path: per-pass consumption is fed back separately).
     Remaining(u32),
     /// The engine fully consumed everything dispatched to it before
-    /// signalling (the live path: real engines report completion
+    /// signalling (the local live path: real engines report completion
     /// wholesale, so the core clears the capacity model here).
     ConsumedAll,
+    /// The engine consumed the pass it just finished *and* reports
+    /// `tokens` still queued behind it — the remote prefill shard path,
+    /// where `EndForward` crosses the wire carrying the instance's real
+    /// backlog. The core acknowledges everything in flight, then seeds
+    /// `R_queued` with the report, so `C_avail` reflects engine truth
+    /// instead of per-dispatch bookkeeping.
+    Reported(u32),
 }
 
 /// One prefilled request waiting for decode placement.
@@ -300,6 +307,26 @@ impl DispatchCore {
                 }
                 0
             }
+            EndForwardBacklog::Reported(b) => {
+                // Engine-truth backlog off the wire: acknowledge every
+                // in-flight token (it reached the shard), then seed the
+                // device backlog with the report so `C_avail` gates the
+                // next dispatch on what the engine actually holds. Live
+                // instances run dp=1; with more DPs the report is split
+                // evenly (remainder on the first) as the best available
+                // approximation.
+                let dps = match &mut self.prefill {
+                    PrefillPlane::Staggered(s) => s.state.instance_dps_mut(instance),
+                    PrefillPlane::Immediate(im) => im.state.instance_dps_mut(instance),
+                };
+                let n = dps.len().max(1) as u32;
+                let (per, extra) = (b / n, b % n);
+                for (i, dp) in dps.iter_mut().enumerate() {
+                    dp.on_ack(dp.u_flight);
+                    dp.r_queued = per + u32::from(i == 0) * extra;
+                }
+                b
+            }
         };
         match &mut self.prefill {
             PrefillPlane::Staggered(s) => s.on_event(SchedulerEvent::EndForward {
@@ -337,6 +364,17 @@ impl DispatchCore {
             PrefillPlane::Staggered(s) => s.state.dp_mut(unit).on_consumed(tokens),
             PrefillPlane::Immediate(im) => im.state.dp_mut(unit).on_consumed(tokens),
         }
+    }
+
+    /// Sum of one prefill instance's per-DP available capacity
+    /// (`Σ C_avail`, §4.2.1) — the observable the `EndForward` backlog
+    /// variants feed; exposed for gauges and tests.
+    pub fn prefill_c_avail(&self, instance: u32) -> i64 {
+        let dps = match &self.prefill {
+            PrefillPlane::Staggered(s) => s.state.instance_dps(instance),
+            PrefillPlane::Immediate(im) => im.state.instance_dps(instance),
+        };
+        dps.iter().map(|d| d.c_avail()).sum()
     }
 
     /// Current adaptive interval (0 for the immediate baseline).
@@ -469,15 +507,18 @@ impl DispatchCore {
                 seq_seconds: o.seq_seconds + o.active as f64 * (now - o.last_t).max(0.0),
                 kv_tokens: s.kv_tokens,
                 // The core is transport-blind; the driver decorates these
-                // from its transports before publishing.
+                // (and the prefill section) from its transports before
+                // publishing.
                 transport: "local".to_string(),
                 alive: true,
                 rtt_ms: None,
+                engine_kv_tokens: None,
             })
             .collect();
         DecodePoolStats {
             policy: self.policy.name().to_string(),
             units,
+            prefill: Vec::new(),
         }
     }
 }
@@ -552,6 +593,23 @@ mod tests {
     // The sim-style vs live-style EndForward parity (Remaining(0) after
     // per-pass ack/consume ≡ ConsumedAll) is asserted end to end by
     // tests/decode_balance.rs::sim_and_live_drivers_make_identical_dispatch_decisions.
+
+    #[test]
+    fn reported_backlog_seeds_capacity_with_engine_truth() {
+        let mut c = DispatchCore::new(&core_cfg(staggered(), DecodePolicy::RoundRobin));
+        let full = c.prefill_c_avail(0);
+        // Cold start dispatches to instance 0 immediately (500 in flight).
+        c.on_arrival(Request::new(1, 500, 8, 0.0), 0.0);
+        assert_eq!(c.prefill_c_avail(0), full - 500);
+        // The remote prefill path: the shard reports 700 tokens still
+        // queued — C_avail must reflect the wire report, not the
+        // per-dispatch bookkeeping.
+        c.on_end_forward(0, 0.3, EndForwardBacklog::Reported(700), 0.4);
+        assert_eq!(c.prefill_c_avail(0), full - 700);
+        // A zero report (engine drained) restores full capacity.
+        c.on_end_forward(0, 0.3, EndForwardBacklog::Reported(0), 0.8);
+        assert_eq!(c.prefill_c_avail(0), full);
+    }
 
     #[test]
     fn round_robin_placement_cycles_units() {

@@ -1,35 +1,55 @@
-//! Standalone decode shard process: `sbs worker --decode --listen
-//! <addr>` runs one or more decode DP units and serves the
+//! Standalone shard process: `sbs worker --decode|--prefill --listen
+//! <addr>` runs decode DP units *or* prefill instances and serves the
 //! [`crate::transport::proto`] frame protocol, so a scheduler
-//! (`sbs serve --remote-decode <addr>`) can drive them from another
-//! process or machine through the same dispatch core as its local pool.
+//! (`sbs serve --remote-decode <addr> --remote-prefill <addr>`) can
+//! drive a fully P/D-separated cluster from another process or machine
+//! through the same dispatch core as its local pool.
 //!
 //! ## Connection model
 //!
 //! The shard serves **one scheduler at a time**: the accept loop
-//! handshakes (`Hello`/`HelloAck`), aborts any state a previous
-//! connection left behind (that scheduler already evicted those
-//! sequences on its side), then relays frames until EOF — after which it
-//! goes back to accepting, which is what makes scheduler-side reconnect
-//! work. Unit engine threads persist across connections.
+//! handshakes (`Hello`/`HelloAck`, the ack carrying the shard's role and
+//! shape), aborts any state a previous connection left behind (that
+//! scheduler already evicted those sequences/jobs on its side), then
+//! relays frames until EOF — after which it goes back to accepting,
+//! which is what makes scheduler-side reconnect work. Unit engine
+//! threads persist across connections.
 //!
 //! A single writer thread serializes all outbound frames (unit events,
 //! `Pong`, `StatsReply`, `Bye`) onto the current connection; events that
 //! arrive while no scheduler is connected are dropped — their sequences
 //! were (or will be) evicted by the scheduler that owned them.
 //!
-//! `Stop` drains: units finish their active sequences (their `Done`
-//! frames flush first), the shard replies `Bye` and the process exits.
+//! ## Prefill shards and the KV handoff
+//!
+//! A prefill shard's instances run the same [`run_prefill_unit`] engine
+//! loop as the in-process pool. A finished prefill leaves the shard as
+//! a **streamed KV handoff**: the prompt caches are borrow-serialized
+//! into [`config::KV_SEGMENT_ELEMS`]-sized `KvSegment` frames (one
+//! buffer per chunk, no intermediate copies) and committed by a
+//! `PrefillDone` — chunking lets other instances' frames interleave, so
+//! a long prompt's caches never monopolize the connection. Each pass
+//! also emits `EndForward` with the instance's *real remaining backlog*,
+//! which the scheduler feeds to the staggered trigger's capacity model.
+//!
+//! `Stop` drains: units finish their queued work (their terminal frames
+//! flush first), the shard replies `Bye` and the process exits.
 
-use super::workers::{DecodeEventSink, EngineSpec, run_decode_unit, UnitGauges};
+use super::workers::{
+    run_decode_unit, run_prefill_unit, DecodeEventSink, EngineSpec, PrefillEventSink,
+    PrefillGauges, UnitGauges,
+};
 use crate::cli::Command;
+use crate::config;
 use crate::engine::mock::MockEngineConfig;
 use crate::engine::sampler::Sampling;
 use crate::engine::PrefillOutcome;
 use crate::metrics::RequestMetrics;
 use crate::runtime::artifacts_dir;
-use crate::transport::proto::{self, Frame, FrameReader, PROTO_VERSION, ProtoError, UnitLoad};
-use crate::transport::{AdmitJob, UnitMsg};
+use crate::transport::proto::{
+    self, Frame, FrameReader, KvHalf, ProtoError, ShardRole, UnitLoad, PROTO_VERSION,
+};
+use crate::transport::{AdmitJob, PrefillMsg, PrefillWork, UnitMsg};
 use crate::util::{Clock, RealClock};
 use anyhow::{anyhow, Result};
 use std::net::{TcpListener, TcpStream};
@@ -38,12 +58,16 @@ use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// Decode shard configuration.
+/// Shard configuration (one role per process).
 #[derive(Debug, Clone)]
 pub struct ShardConfig {
-    /// Decode DP units (one batched engine thread each).
+    /// Which plane this shard serves.
+    pub role: ShardRole,
+    /// Units: decode DP units or prefill instances (one engine thread
+    /// each).
     pub units: u32,
-    /// Decode slots per unit (advertised in `HelloAck`).
+    /// Decode slots per unit (advertised in `HelloAck`; prefill shards
+    /// advertise 1 — their instances are gated single-pass engines).
     pub batch: u32,
     /// Execution backend for the unit threads.
     pub engine: EngineSpec,
@@ -56,6 +80,7 @@ pub struct ShardConfig {
 impl Default for ShardConfig {
     fn default() -> Self {
         ShardConfig {
+            role: ShardRole::Decode,
             units: 1,
             batch: 8,
             engine: EngineSpec::Mock(MockEngineConfig::default()),
@@ -67,26 +92,31 @@ impl Default for ShardConfig {
 
 /// `sbs worker` entrypoint.
 pub fn cli_worker(argv: &[String]) -> Result<()> {
-    let cmd = Command::new("sbs worker", "run a standalone decode shard")
-        .flag("decode", "serve decode DP units (required; prefill later)")
+    let cmd = Command::new("sbs worker", "run a standalone shard (decode or prefill)")
+        .flag("decode", "serve decode DP units")
+        .flag("prefill", "serve prefill instances")
         .opt(
             "listen",
             "bind address (e.g. 127.0.0.1:7501; port 0 = ephemeral)",
             Some("127.0.0.1:7501"),
         )
-        .opt("units", "decode DP units in this shard", Some("1"))
-        .opt("batch", "decode slots per unit", Some("8"))
+        .opt("units", "DP units / instances in this shard", Some("1"))
+        .opt("batch", "decode slots per unit (decode shards)", Some("8"))
         .opt("engine", "pjrt | mock", Some("mock"))
         .opt("artifacts", "artifact directory (pjrt engine)", Some("artifacts"))
         .opt("mock-decode-ms", "mock engine: one decode step, milliseconds", Some("4"))
         .opt("mock-jitter", "mock engine: execution-time jitter fraction", Some("0.1"))
         .opt("seed", "rng seed", Some("17"));
     let args = cmd.parse(argv).map_err(|e| anyhow!("{e}"))?;
-    if !args.flag("decode") {
-        return Err(anyhow!(
-            "`sbs worker` currently serves decode shards only: pass --decode"
-        ));
-    }
+    let role = match (args.flag("decode"), args.flag("prefill")) {
+        (true, false) => ShardRole::Decode,
+        (false, true) => ShardRole::Prefill,
+        _ => {
+            return Err(anyhow!(
+                "`sbs worker` serves exactly one plane: pass --decode or --prefill"
+            ))
+        }
+    };
     let engine = match args.str_or("engine", "mock").as_str() {
         "pjrt" => EngineSpec::Pjrt {
             artifacts: std::path::PathBuf::from(
@@ -105,6 +135,7 @@ pub fn cli_worker(argv: &[String]) -> Result<()> {
         other => return Err(anyhow!("unknown engine '{other}'")),
     };
     let cfg = ShardConfig {
+        role,
         units: args.parse_or("units", 1u32).map_err(|e| anyhow!("{e}"))?,
         batch: args.parse_or("batch", 8u32).map_err(|e| anyhow!("{e}"))?,
         engine,
@@ -120,10 +151,22 @@ pub fn cli_worker(argv: &[String]) -> Result<()> {
     run_shard(cfg, listener)
 }
 
-/// Outbound frame sink for one unit thread: every engine event becomes a
-/// wire frame. Timestamps and request metrics stay shard-local and are
-/// *not* sent — the scheduler re-stamps terminal events on its own
-/// clock.
+/// Shard-internal outbound queue entry: pre-framed wire bytes (the
+/// KV-handoff hot path — already length-prefixed, borrow-encoded into
+/// one buffer per chunk), plain frames (everything else), plus a flush
+/// marker used to fence a new connection behind everything the units
+/// queued before their abort ack (stale frames must be *dropped* while
+/// no connection is attached, never flushed to the new scheduler).
+enum Outbound {
+    Frame(Frame),
+    Bytes(Vec<u8>),
+    Flush(Sender<()>),
+}
+
+/// Outbound frame sink for one decode unit thread: every engine event
+/// becomes a wire frame. Timestamps and request metrics stay shard-local
+/// and are *not* sent — the scheduler re-stamps terminal events on its
+/// own clock.
 struct WireSink {
     out: Sender<Outbound>,
 }
@@ -142,18 +185,137 @@ impl DecodeEventSink for WireSink {
     }
 }
 
-/// Run a decode shard on an already-bound listener until a scheduler
-/// sends `Stop` (tests use this with an ephemeral port; `cli_worker`
-/// binds from the CLI flags).
-/// Shard-internal outbound queue entry: wire frames, plus a flush
-/// marker used to fence a new connection behind everything the units
-/// queued before their abort ack (stale frames must be *dropped* while
-/// no connection is attached, never flushed to the new scheduler).
-enum Outbound {
-    Frame(Frame),
-    Flush(Sender<()>),
+/// Outbound sink for one prefill instance thread: finished prefills
+/// leave as a chunked `KvSegment` stream + `PrefillDone`, passes as
+/// `EndForward` carrying the instance's real remaining backlog.
+struct PrefillWireSink {
+    out: Sender<Outbound>,
 }
 
+impl PrefillEventSink for PrefillWireSink {
+    fn prefilled(&self, id: u64, outcome: PrefillOutcome, _max_new: u32, _metrics: RequestMetrics) {
+        for (half, data) in [(KvHalf::K, &outcome.k), (KvHalf::V, &outcome.v)] {
+            let total = data.len() as u32;
+            let mut off = 0usize;
+            while off < data.len() {
+                let end = (off + config::KV_SEGMENT_ELEMS).min(data.len());
+                // Borrow-encode the chunk straight from the outcome into
+                // one wire buffer — the only copy between engine memory
+                // and the socket.
+                let mut buf = Vec::new();
+                proto::kv_segment_frame_into(&mut buf, id, half, off as u32, total, &data[off..end]);
+                if self.out.send(Outbound::Bytes(buf)).is_err() {
+                    return;
+                }
+                off = end;
+            }
+        }
+        let _ = self.out.send(Outbound::Frame(Frame::PrefillDone {
+            id,
+            first_token: outcome.first_token,
+            kv_len: outcome.len as u32,
+            exec_time: outcome.exec_time,
+        }));
+    }
+
+    fn failed(&self, id: u64) {
+        let _ = self.out.send(Outbound::Frame(Frame::PrefillFailed { id }));
+    }
+
+    fn end_forward(&self, instance: u32, t_measured: f64, remaining: u32) {
+        let _ = self.out.send(Outbound::Frame(Frame::EndForward {
+            instance,
+            t_measured,
+            remaining: Some(remaining),
+        }));
+    }
+}
+
+/// The shard's unit channels + gauges, shaped by its role.
+enum UnitChannels {
+    Decode {
+        txs: Vec<Sender<UnitMsg>>,
+        gauges: Vec<Arc<UnitGauges>>,
+    },
+    Prefill {
+        txs: Vec<Sender<PrefillMsg>>,
+        gauges: Vec<Arc<PrefillGauges>>,
+    },
+}
+
+impl UnitChannels {
+    fn len(&self) -> usize {
+        match self {
+            UnitChannels::Decode { txs, .. } => txs.len(),
+            UnitChannels::Prefill { txs, .. } => txs.len(),
+        }
+    }
+
+    /// Tell every unit to silently drop state a superseded connection
+    /// left behind; returns one ack receiver covering all of them.
+    fn send_aborts(&self) -> std::sync::mpsc::Receiver<()> {
+        let (ack_tx, ack_rx) = channel::<()>();
+        match self {
+            UnitChannels::Decode { txs, .. } => {
+                for tx in txs {
+                    let _ = tx.send(UnitMsg::Abort { ack: ack_tx.clone() });
+                }
+            }
+            UnitChannels::Prefill { txs, .. } => {
+                for tx in txs {
+                    let _ = tx.send(PrefillMsg::Abort { ack: ack_tx.clone() });
+                }
+            }
+        }
+        ack_rx
+    }
+
+    fn send_stops(&self) {
+        match self {
+            UnitChannels::Decode { txs, .. } => {
+                for tx in txs {
+                    let _ = tx.send(UnitMsg::Stop);
+                }
+            }
+            UnitChannels::Prefill { txs, .. } => {
+                for tx in txs {
+                    let _ = tx.send(PrefillMsg::Stop);
+                }
+            }
+        }
+    }
+
+    /// Role-appropriate per-unit loads for `StatsReply`: decode units
+    /// report residency/slots/KV, prefill instances report queued jobs
+    /// (as `active`) and queued prompt tokens (as `kv_tokens`).
+    fn unit_loads(&self, batch: u32) -> Vec<UnitLoad> {
+        match self {
+            UnitChannels::Decode { gauges, .. } => gauges
+                .iter()
+                .map(|g| {
+                    let used = g.slots_used.load(Ordering::Relaxed);
+                    UnitLoad {
+                        active: g.active.load(Ordering::Relaxed),
+                        free_slots: batch.saturating_sub(used),
+                        kv_tokens: g.kv_tokens.load(Ordering::Relaxed),
+                    }
+                })
+                .collect(),
+            UnitChannels::Prefill { gauges, .. } => gauges
+                .iter()
+                .map(|g| UnitLoad {
+                    active: g.queued_jobs.load(Ordering::Relaxed),
+                    free_slots: 0,
+                    kv_tokens: g.queued_tokens.load(Ordering::Relaxed),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Run a shard on an already-bound listener until a scheduler sends
+/// `Stop` (tests use this with an ephemeral port; `cli_worker` binds
+/// from the CLI flags).
 pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
     let cfg = ShardConfig {
         units: cfg.units.max(1),
@@ -166,35 +328,67 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
     let clock = Arc::new(RealClock::new());
     let (ev_tx, ev_rx) = channel::<Outbound>();
     let (ready_tx, ready_rx) = channel::<bool>();
-    let mut unit_txs: Vec<Sender<UnitMsg>> = Vec::new();
-    let mut gauges: Vec<Arc<UnitGauges>> = Vec::new();
     let mut unit_threads = Vec::new();
-    for u in 0..units {
-        let (tx, rx) = channel::<UnitMsg>();
-        unit_txs.push(tx);
-        let g = Arc::new(UnitGauges::default());
-        gauges.push(g.clone());
-        let spec = cfg.engine.clone();
-        let sink = WireSink { out: ev_tx.clone() };
-        let clock = clock.clone();
-        let (sampling, batch) = (cfg.sampling, cfg.batch);
-        let seed = cfg.seed.wrapping_add(7000 + u as u64);
-        let ready = ready_tx.clone();
-        unit_threads.push(std::thread::spawn(move || {
-            run_decode_unit(
-                &format!("shard-unit:{u}"),
-                &spec,
-                batch,
-                sampling,
-                seed,
-                rx,
-                sink,
-                move || clock.now_s(),
-                Some(&g),
-                ready,
-            );
-        }));
-    }
+    let channels = match cfg.role {
+        ShardRole::Decode => {
+            let mut txs = Vec::new();
+            let mut gauges = Vec::new();
+            for u in 0..units {
+                let (tx, rx) = channel::<UnitMsg>();
+                txs.push(tx);
+                let g = Arc::new(UnitGauges::default());
+                gauges.push(g.clone());
+                let spec = cfg.engine.clone();
+                let sink = WireSink { out: ev_tx.clone() };
+                let clock = clock.clone();
+                let (sampling, batch) = (cfg.sampling, cfg.batch);
+                let seed = cfg.seed.wrapping_add(7000 + u as u64);
+                let ready = ready_tx.clone();
+                unit_threads.push(std::thread::spawn(move || {
+                    run_decode_unit(
+                        &format!("shard-unit:{u}"),
+                        &spec,
+                        batch,
+                        sampling,
+                        seed,
+                        rx,
+                        sink,
+                        move || clock.now_s(),
+                        Some(&g),
+                        ready,
+                    );
+                }));
+            }
+            UnitChannels::Decode { txs, gauges }
+        }
+        ShardRole::Prefill => {
+            let mut txs = Vec::new();
+            let mut gauges = Vec::new();
+            for u in 0..units {
+                let (tx, rx) = channel::<PrefillMsg>();
+                txs.push(tx);
+                let g = Arc::new(PrefillGauges::default());
+                gauges.push(g.clone());
+                let spec = cfg.engine.clone();
+                let sink = PrefillWireSink { out: ev_tx.clone() };
+                let seed = cfg.seed.wrapping_add(8000 + u as u64);
+                let ready = ready_tx.clone();
+                unit_threads.push(std::thread::spawn(move || {
+                    run_prefill_unit(
+                        &format!("shard-prefill:{u}"),
+                        u,
+                        &spec,
+                        seed,
+                        rx,
+                        sink,
+                        Some(&g),
+                        ready,
+                    );
+                }));
+            }
+            UnitChannels::Prefill { txs, gauges }
+        }
+    };
     drop(ready_tx);
     for _ in 0..units {
         match ready_rx.recv_timeout(Duration::from_secs(600)) {
@@ -202,7 +396,14 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
             _ => return Err(anyhow!("a shard unit failed to build its engine (see log)")),
         }
     }
-    log::info!("decode shard ready: {units} units × {} slots", cfg.batch);
+    log::info!(
+        "{} shard ready: {units} units{}",
+        cfg.role.name(),
+        match cfg.role {
+            ShardRole::Decode => format!(" × {} slots", cfg.batch),
+            ShardRole::Prefill => String::new(),
+        }
+    );
 
     // One writer serializes every outbound frame onto the current
     // connection; with no connection, events are dropped (their owners
@@ -212,8 +413,14 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
         let current = current.clone();
         std::thread::spawn(move || {
             while let Ok(out) = ev_rx.recv() {
-                let frame = match out {
-                    Outbound::Frame(f) => f,
+                let (bytes, is_bye) = match out {
+                    Outbound::Frame(f) => {
+                        let mut buf = Vec::new();
+                        proto::write_frame(&mut buf, &f).expect("Vec write cannot fail");
+                        (buf, matches!(f, Frame::Bye))
+                    }
+                    // Pre-framed wire bytes (the KV-handoff hot path).
+                    Outbound::Bytes(b) => (b, false),
                     Outbound::Flush(ack) => {
                         // Everything queued before this marker has been
                         // drained (written or dropped); tell the fence.
@@ -221,15 +428,18 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
                         continue;
                     }
                 };
-                let is_bye = matches!(frame, Frame::Bye);
-                let mut cur = current.lock().unwrap();
-                if let Some(conn) = cur.as_mut() {
-                    if proto::write_frame(conn, &frame).is_err() {
-                        // The scheduler hung up (or the write timed out
-                        // mid-frame): shut the socket so the peer sees
-                        // the failure now, not after its silence guard.
-                        let _ = conn.shutdown(std::net::Shutdown::Both);
-                        *cur = None;
+                {
+                    let mut cur = current.lock().unwrap();
+                    if let Some(conn) = cur.as_mut() {
+                        use std::io::Write;
+                        if conn.write_all(&bytes).is_err() {
+                            // The scheduler hung up (or the write timed
+                            // out mid-frame): shut the socket so the peer
+                            // sees the failure now, not after its silence
+                            // guard.
+                            let _ = conn.shutdown(std::net::Shutdown::Both);
+                            *cur = None;
+                        }
                     }
                 }
                 if is_bye {
@@ -251,7 +461,7 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
         log::info!("scheduler connected from {peer}");
         // A failed handshake/setup on one connection must never take the
         // whole shard down — drop it and keep accepting.
-        stopping = match serve_connection(conn, &cfg, &unit_txs, &gauges, &ev_tx, &current) {
+        stopping = match serve_connection(conn, &cfg, &channels, &ev_tx, &current) {
             Ok(stop) => stop,
             Err(e) => {
                 log::warn!("connection setup failed: {e:#}");
@@ -260,17 +470,15 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
         };
     }
 
-    // Graceful drain: units finish their active sequences (flushing Done
+    // Graceful drain: units finish their active work (flushing terminal
     // frames through the writer), then Bye closes the stream.
-    for tx in &unit_txs {
-        let _ = tx.send(UnitMsg::Stop);
-    }
+    channels.send_stops();
     for t in unit_threads {
         let _ = t.join();
     }
     let _ = ev_tx.send(Outbound::Frame(Frame::Bye));
     let _ = writer.join();
-    log::info!("decode shard drained; exiting");
+    log::info!("{} shard drained; exiting", cfg.role.name());
     Ok(())
 }
 
@@ -280,8 +488,7 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
 fn serve_connection(
     conn: TcpStream,
     cfg: &ShardConfig,
-    unit_txs: &[Sender<UnitMsg>],
-    gauges: &[Arc<UnitGauges>],
+    channels: &UnitChannels,
     ev_tx: &Sender<Outbound>,
     current: &Arc<Mutex<Option<TcpStream>>>,
 ) -> Result<bool> {
@@ -325,24 +532,26 @@ fn serve_connection(
             &mut w,
             &Frame::HelloAck {
                 version: PROTO_VERSION,
-                units: unit_txs.len() as u32,
-                slots: cfg.batch,
+                role: cfg.role,
+                units: channels.len() as u32,
+                slots: match cfg.role {
+                    ShardRole::Decode => cfg.batch,
+                    // Prefill instances are gated single-pass engines;
+                    // "slots" only exists for the shape check.
+                    ShardRole::Prefill => 1,
+                },
             },
         )?;
     }
     // A new scheduler owns the shard from here: silently drop whatever a
     // previous connection left tracked (its scheduler already evicted
-    // those sequences), and *wait for the abort to land* before
-    // attaching the connection — a unit mid-step could otherwise emit a
-    // stale id that collides with the new scheduler's fresh id space.
-    // One engine step bounds how long a unit takes to see the abort.
+    // that state), and *wait for the abort to land* before attaching the
+    // connection — a unit mid-step could otherwise emit a stale id that
+    // collides with the new scheduler's fresh id space. One engine pass
+    // bounds how long a unit takes to see the abort.
     {
-        let (ack_tx, ack_rx) = channel::<()>();
-        for tx in unit_txs {
-            let _ = tx.send(UnitMsg::Abort { ack: ack_tx.clone() });
-        }
-        drop(ack_tx);
-        for _ in 0..unit_txs.len() {
+        let ack_rx = channels.send_aborts();
+        for _ in 0..channels.len() {
             if ack_rx.recv_timeout(Duration::from_secs(60)).is_err() {
                 log::warn!("a unit did not acknowledge the abort in time");
                 break;
@@ -377,7 +586,7 @@ fn serve_connection(
         match reader.poll(&mut rd) {
             Ok(Some(frame)) => {
                 idle.touch();
-                if handle_scheduler_frame(frame, cfg, unit_txs, gauges, ev_tx) {
+                if handle_scheduler_frame(frame, cfg, channels, ev_tx) {
                     break true;
                 }
             }
@@ -393,7 +602,7 @@ fn serve_connection(
         }
     };
     // Detach the writer from this connection; on Stop it stays attached
-    // so the drain's Done/Bye frames flush to the scheduler.
+    // so the drain's terminal/Bye frames flush to the scheduler.
     if !result {
         *current.lock().unwrap() = None;
     }
@@ -405,8 +614,7 @@ fn serve_connection(
 fn handle_scheduler_frame(
     frame: Frame,
     cfg: &ShardConfig,
-    unit_txs: &[Sender<UnitMsg>],
-    gauges: &[Arc<UnitGauges>],
+    channels: &UnitChannels,
     ev_tx: &Sender<Outbound>,
 ) -> bool {
     match frame {
@@ -419,6 +627,13 @@ fn handle_scheduler_frame(
             k,
             v,
         } => {
+            let UnitChannels::Decode { txs, .. } = channels else {
+                // Role was checked at handshake; an admit here is a
+                // protocol violation, not a crash.
+                log::warn!("admit sent to a prefill shard; rejecting job {id}");
+                let _ = ev_tx.send(Outbound::Frame(Frame::Rejected { id }));
+                return false;
+            };
             let job = AdmitJob {
                 id,
                 outcome: Box::new(PrefillOutcome {
@@ -434,7 +649,7 @@ fn handle_scheduler_frame(
                 // stay with the scheduler.
                 metrics: RequestMetrics::arrive(0.0, kv_len),
             };
-            match unit_txs.get(unit as usize) {
+            match txs.get(unit as usize) {
                 Some(tx) => {
                     if tx.send(UnitMsg::Admit(job)).is_err() {
                         let _ = ev_tx.send(Outbound::Frame(Frame::Rejected { id }));
@@ -446,21 +661,50 @@ fn handle_scheduler_frame(
                 }
             }
         }
+        Frame::PrefillDispatch { unit, jobs } => {
+            let UnitChannels::Prefill { txs, .. } = channels else {
+                log::warn!("prefill dispatch sent to a decode shard; failing the batch");
+                for j in &jobs {
+                    let _ = ev_tx.send(Outbound::Frame(Frame::PrefillFailed { id: j.id }));
+                }
+                return false;
+            };
+            let work: Vec<PrefillWork> = jobs
+                .into_iter()
+                .map(|j| {
+                    let len = j.prompt.len() as u32;
+                    PrefillWork {
+                        id: j.id,
+                        prompt: j.prompt,
+                        max_new: j.max_new,
+                        // Shard-local bookkeeping only; the scheduler
+                        // keeps the real wall-clock metrics.
+                        metrics: RequestMetrics::arrive(0.0, len),
+                    }
+                })
+                .collect();
+            match txs.get(unit as usize) {
+                Some(tx) => {
+                    let ids: Vec<u64> = work.iter().map(|w| w.id).collect();
+                    if tx.send(PrefillMsg::Work(work)).is_err() {
+                        for id in ids {
+                            let _ = ev_tx.send(Outbound::Frame(Frame::PrefillFailed { id }));
+                        }
+                    }
+                }
+                None => {
+                    log::warn!("prefill dispatch for unknown instance {unit}");
+                    for w in work {
+                        let _ = ev_tx.send(Outbound::Frame(Frame::PrefillFailed { id: w.id }));
+                    }
+                }
+            }
+        }
         Frame::Ping { nonce, t_us } => {
             let _ = ev_tx.send(Outbound::Frame(Frame::Pong { nonce, t_us }));
         }
         Frame::StatsRequest => {
-            let units = gauges
-                .iter()
-                .map(|g| {
-                    let used = g.slots_used.load(Ordering::Relaxed);
-                    UnitLoad {
-                        active: g.active.load(Ordering::Relaxed),
-                        free_slots: cfg.batch.saturating_sub(used),
-                        kv_tokens: g.kv_tokens.load(Ordering::Relaxed),
-                    }
-                })
-                .collect();
+            let units = channels.unit_loads(cfg.batch);
             let _ = ev_tx.send(Outbound::Frame(Frame::StatsReply { units }));
         }
         Frame::Stop => return true,
@@ -473,20 +717,56 @@ fn handle_scheduler_frame(
 mod tests {
     use super::*;
 
-    /// Raw protocol smoke against an in-thread shard: handshake, admit,
-    /// stream to Done, stats, clean Stop/Bye drain.
+    fn fast_mock() -> EngineSpec {
+        EngineSpec::Mock(MockEngineConfig {
+            t_prefill_base: 0.0,
+            t_prefill_per_token: 0.0,
+            t_decode_step: 0.001,
+            chunk: 128,
+            jitter: 0.0,
+        })
+    }
+
+    struct ShardClient {
+        w: TcpStream,
+        rd: TcpStream,
+        reader: FrameReader,
+    }
+
+    impl ShardClient {
+        fn connect(addr: std::net::SocketAddr) -> ShardClient {
+            let conn = TcpStream::connect(addr).unwrap();
+            conn.set_nodelay(true).unwrap();
+            conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            ShardClient {
+                w: conn.try_clone().unwrap(),
+                rd: conn.try_clone().unwrap(),
+                reader: FrameReader::new(),
+            }
+        }
+
+        fn send(&mut self, f: &Frame) {
+            proto::write_frame(&mut self.w, f).unwrap();
+        }
+
+        fn recv(&mut self) -> Frame {
+            loop {
+                if let Some(f) = self.reader.poll(&mut self.rd).expect("read frame") {
+                    return f;
+                }
+            }
+        }
+    }
+
+    /// Raw protocol smoke against an in-thread decode shard: handshake,
+    /// admit, stream to Done, stats, clean Stop/Bye drain.
     #[test]
-    fn shard_serves_the_frame_protocol_end_to_end() {
+    fn decode_shard_serves_the_frame_protocol_end_to_end() {
         let cfg = ShardConfig {
+            role: ShardRole::Decode,
             units: 2,
             batch: 4,
-            engine: EngineSpec::Mock(MockEngineConfig {
-                t_prefill_base: 0.0,
-                t_prefill_per_token: 0.0,
-                t_decode_step: 0.001,
-                chunk: 128,
-                jitter: 0.0,
-            }),
+            engine: fast_mock(),
             sampling: Sampling::Greedy,
             seed: 3,
         };
@@ -494,42 +774,28 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let shard = std::thread::spawn(move || run_shard(cfg, listener));
 
-        let conn = TcpStream::connect(addr).unwrap();
-        conn.set_nodelay(true).unwrap();
-        conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
-        let mut w = conn.try_clone().unwrap();
-        let mut rd = conn.try_clone().unwrap();
-        let mut reader = FrameReader::new();
-        let mut recv = || loop {
-            if let Some(f) = reader.poll(&mut rd).expect("read frame") {
-                return f;
-            }
-        };
-
-        proto::write_frame(&mut w, &Frame::Hello { version: PROTO_VERSION }).unwrap();
+        let mut c = ShardClient::connect(addr);
+        c.send(&Frame::Hello { version: PROTO_VERSION });
         let ack = Frame::HelloAck {
             version: PROTO_VERSION,
+            role: ShardRole::Decode,
             units: 2,
             slots: 4,
         };
-        assert_eq!(recv(), ack);
+        assert_eq!(c.recv(), ack);
 
-        proto::write_frame(
-            &mut w,
-            &Frame::Admit {
-                unit: 1,
-                id: 42,
-                first_token: 0x30,
-                kv_len: 5,
-                max_new: 3,
-                k: Vec::new(),
-                v: Vec::new(),
-            },
-        )
-        .unwrap();
+        c.send(&Frame::Admit {
+            unit: 1,
+            id: 42,
+            first_token: 0x30,
+            kv_len: 5,
+            max_new: 3,
+            k: Vec::new(),
+            v: Vec::new(),
+        });
         let mut tokens = Vec::new();
         let done = loop {
-            match recv() {
+            match c.recv() {
                 Frame::Token { id, index, token } => {
                     assert_eq!(id, 42);
                     assert_eq!(index as usize, tokens.len() + 1, "indices continue past prefill");
@@ -546,17 +812,17 @@ mod tests {
         assert_eq!(done[0], 0x30);
         assert_eq!(&done[1..], &tokens[..]);
 
-        proto::write_frame(&mut w, &Frame::Ping { nonce: 9, t_us: 123 }).unwrap();
-        assert_eq!(recv(), Frame::Pong { nonce: 9, t_us: 123 });
+        c.send(&Frame::Ping { nonce: 9, t_us: 123 });
+        assert_eq!(c.recv(), Frame::Pong { nonce: 9, t_us: 123 });
 
-        proto::write_frame(&mut w, &Frame::StatsRequest).unwrap();
-        match recv() {
+        c.send(&Frame::StatsRequest);
+        match c.recv() {
             Frame::StatsReply { units } => assert_eq!(units.len(), 2),
             other => panic!("unexpected frame {other:?}"),
         }
 
-        proto::write_frame(&mut w, &Frame::Stop).unwrap();
-        assert_eq!(recv(), Frame::Bye);
+        c.send(&Frame::Stop);
+        assert_eq!(c.recv(), Frame::Bye);
         shard.join().unwrap().unwrap();
     }
 
@@ -565,49 +831,157 @@ mod tests {
     #[test]
     fn unknown_unit_admit_is_rejected() {
         let cfg = ShardConfig {
+            role: ShardRole::Decode,
             units: 1,
             batch: 2,
-            engine: EngineSpec::Mock(MockEngineConfig {
-                t_prefill_base: 0.0,
-                t_prefill_per_token: 0.0,
-                t_decode_step: 0.001,
-                chunk: 128,
-                jitter: 0.0,
-            }),
+            engine: fast_mock(),
             sampling: Sampling::Greedy,
             seed: 3,
         };
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let shard = std::thread::spawn(move || run_shard(cfg, listener));
-        let conn = TcpStream::connect(addr).unwrap();
-        conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
-        let mut w = conn.try_clone().unwrap();
-        let mut rd = conn.try_clone().unwrap();
-        let mut reader = FrameReader::new();
-        let mut recv = || loop {
-            if let Some(f) = reader.poll(&mut rd).expect("read frame") {
-                return f;
-            }
+        let mut c = ShardClient::connect(addr);
+        c.send(&Frame::Hello { version: PROTO_VERSION });
+        c.recv(); // HelloAck
+        c.send(&Frame::Admit {
+            unit: 5,
+            id: 1,
+            first_token: 0x30,
+            kv_len: 2,
+            max_new: 2,
+            k: Vec::new(),
+            v: Vec::new(),
+        });
+        assert_eq!(c.recv(), Frame::Rejected { id: 1 });
+        c.send(&Frame::Stop);
+        assert_eq!(c.recv(), Frame::Bye);
+        shard.join().unwrap().unwrap();
+    }
+
+    /// Raw protocol smoke against an in-thread *prefill* shard: the
+    /// dispatch→KvSegment*→PrefillDone handoff plus EndForward backlog
+    /// feedback, stats, and a clean drain. The mock engine produces
+    /// empty KV, so the handoff here carries no segments and the commit
+    /// alone must suffice; segment framing itself is covered by the
+    /// proto property tests and the remote-prefill client test.
+    #[test]
+    fn prefill_shard_streams_the_kv_handoff_end_to_end() {
+        let cfg = ShardConfig {
+            role: ShardRole::Prefill,
+            units: 1,
+            batch: 8, // ignored for prefill; HelloAck must advertise 1
+            engine: fast_mock(),
+            sampling: Sampling::Greedy,
+            seed: 3,
         };
-        proto::write_frame(&mut w, &Frame::Hello { version: PROTO_VERSION }).unwrap();
-        recv(); // HelloAck
-        proto::write_frame(
-            &mut w,
-            &Frame::Admit {
-                unit: 5,
-                id: 1,
-                first_token: 0x30,
-                kv_len: 2,
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let shard = std::thread::spawn(move || run_shard(cfg, listener));
+
+        let mut c = ShardClient::connect(addr);
+        c.send(&Frame::Hello { version: PROTO_VERSION });
+        let ack = Frame::HelloAck {
+            version: PROTO_VERSION,
+            role: ShardRole::Prefill,
+            units: 1,
+            slots: 1,
+        };
+        assert_eq!(c.recv(), ack);
+
+        c.send(&Frame::PrefillDispatch {
+            unit: 0,
+            jobs: vec![
+                proto::PrefillJobWire {
+                    id: 7,
+                    max_new: 4,
+                    prompt: vec![1, 2, 3, 4, 5],
+                },
+                proto::PrefillJobWire {
+                    id: 8,
+                    max_new: 4,
+                    prompt: vec![9; 12],
+                },
+            ],
+        });
+        let mut done_ids = Vec::new();
+        let mut end_forwards = 0u32;
+        while done_ids.len() < 2 || end_forwards < 2 {
+            match c.recv() {
+                Frame::KvSegment { id, offset, total, data, .. } => {
+                    assert!(id == 7 || id == 8);
+                    assert!(offset as usize + data.len() <= total as usize);
+                }
+                Frame::PrefillDone { id, kv_len, .. } => {
+                    let expect_len = if id == 7 { 5 } else { 12 };
+                    assert_eq!(kv_len, expect_len, "kv_len echoes the prompt length");
+                    done_ids.push(id);
+                }
+                Frame::EndForward { instance, remaining, .. } => {
+                    assert_eq!(instance, 0);
+                    assert!(remaining.is_some(), "prefill shards report real backlog");
+                    end_forwards += 1;
+                }
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+        assert_eq!(done_ids.len(), 2);
+
+        c.send(&Frame::StatsRequest);
+        match c.recv() {
+            Frame::StatsReply { units } => {
+                assert_eq!(units.len(), 1);
+                assert_eq!(units[0].active, 0, "queue drained");
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+
+        // An admit against a prefill shard is rejected, not served.
+        c.send(&Frame::Admit {
+            unit: 0,
+            id: 99,
+            first_token: 0,
+            kv_len: 1,
+            max_new: 1,
+            k: Vec::new(),
+            v: Vec::new(),
+        });
+        assert_eq!(c.recv(), Frame::Rejected { id: 99 });
+
+        c.send(&Frame::Stop);
+        assert_eq!(c.recv(), Frame::Bye);
+        shard.join().unwrap().unwrap();
+    }
+
+    /// Dispatches for an out-of-range prefill instance come back
+    /// PrefillFailed instead of silently vanishing.
+    #[test]
+    fn unknown_prefill_instance_dispatch_fails_the_jobs() {
+        let cfg = ShardConfig {
+            role: ShardRole::Prefill,
+            units: 1,
+            batch: 1,
+            engine: fast_mock(),
+            sampling: Sampling::Greedy,
+            seed: 3,
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let shard = std::thread::spawn(move || run_shard(cfg, listener));
+        let mut c = ShardClient::connect(addr);
+        c.send(&Frame::Hello { version: PROTO_VERSION });
+        c.recv(); // HelloAck
+        c.send(&Frame::PrefillDispatch {
+            unit: 3,
+            jobs: vec![proto::PrefillJobWire {
+                id: 11,
                 max_new: 2,
-                k: Vec::new(),
-                v: Vec::new(),
-            },
-        )
-        .unwrap();
-        assert_eq!(recv(), Frame::Rejected { id: 1 });
-        proto::write_frame(&mut w, &Frame::Stop).unwrap();
-        assert_eq!(recv(), Frame::Bye);
+                prompt: vec![1, 2],
+            }],
+        });
+        assert_eq!(c.recv(), Frame::PrefillFailed { id: 11 });
+        c.send(&Frame::Stop);
+        assert_eq!(c.recv(), Frame::Bye);
         shard.join().unwrap().unwrap();
     }
 }

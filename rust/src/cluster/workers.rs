@@ -2,20 +2,24 @@
 //! actual engine forward passes (no discrete-event simulation on this
 //! path).
 //!
-//! Topology: `n_prefill` prefill workers (one gated engine thread each —
-//! DP=1 per instance) and a decode DP pool reached purely through
-//! [`DecodeTransport`]s — `n_decode` in-process batched engine threads
-//! plus the units of any remote shards in
-//! [`RealClusterConfig::remote_decode`] (`sbs worker --decode`
-//! processes, driven over the `crate::transport` wire protocol). The
+//! Topology (P/D-separated): a prefill pool and a decode DP pool, each
+//! reached purely through transports. The prefill pool mixes `n_prefill`
+//! in-process workers (one gated engine thread each — DP=1 per
+//! instance) with the instances of any remote prefill shards in
+//! [`RealClusterConfig::remote_prefill`] (`sbs worker --prefill`
+//! processes, whose prompt-KV handoff crosses the wire as a chunked
+//! `KvSegment` stream and whose `EndForward` carries real engine
+//! backlog into the staggered trigger). The decode pool mixes
+//! `n_decode` in-process batched engine threads with the units of any
+//! remote decode shards in [`RealClusterConfig::remote_decode`]. The
 //! scheduler thread runs the shared [`DispatchCore`] — the identical
 //! state machine the simulator drives — receiving real `EndForward`
-//! signals over channels and arming real timers via `recv_timeout`.
-//! Prefill completions are placed onto a decode DP unit by the core's
-//! [`DecodePolicy`] (Algorithm 3 load-aware allocation, or the
-//! round-robin / random baselines) regardless of where the unit runs, so
-//! the paper's Fig. 7 decode-balance claim is measurable end to end on
-//! real sockets — across real process boundaries.
+//! signals over channels/sockets and arming real timers via
+//! `recv_timeout`. Prefill completions are placed onto a decode DP unit
+//! by the core's [`DecodePolicy`] (Algorithm 3 load-aware allocation,
+//! or the round-robin / random baselines) regardless of where either
+//! phase ran, so the paper's claims are measurable end to end across
+//! real process boundaries.
 //!
 //! ## Completion path (concurrent frontend architecture)
 //!
@@ -50,11 +54,15 @@ use crate::scheduler::pbaa::PbaaConfig;
 use crate::scheduler::staggered::{SchedulerAction, StaggeredConfig};
 use crate::scheduler::state::DpState;
 use crate::scheduler::types::{DpUnitId, Request};
-use crate::transport::remote::{connect_shard, RemoteShardConfig};
-use crate::transport::{AdmitJob, DecodeTransport, LocalUnit, ShardSinks, UnitMsg};
+use crate::transport::proto::UnitLoad;
+use crate::transport::remote::{connect_prefill_shard, connect_shard, RemoteShardConfig};
+use crate::transport::{
+    AdmitJob, DecodeTransport, LocalPrefill, LocalUnit, PrefillMsg, PrefillSinks,
+    PrefillTransport, PrefillWork, ShardSinks, UnitMsg,
+};
 use crate::util::{Clock, RealClock};
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -180,6 +188,11 @@ pub struct RealClusterConfig {
     /// Remote decode shard addresses (`sbs worker --decode --listen`);
     /// each shard's units join the pool behind the same dispatch core.
     pub remote_decode: Vec<String>,
+    /// Remote prefill shard addresses (`sbs worker --prefill --listen`);
+    /// each shard's instances join the prefill pool behind the same
+    /// staggered trigger, with the KV handoff streamed back over the
+    /// wire. May fully replace the local workers (`n_prefill = 0`).
+    pub remote_prefill: Vec<String>,
     /// Per-DP-unit KV-token budget for decode admissibility (the live
     /// mirror of the DES's `DecodeCaps::kv_max`): a join reserves its
     /// expected resident length (`prompt + max_new`) and parks when no
@@ -223,6 +236,7 @@ impl Default for RealClusterConfig {
             },
             admission: AdmissionConfig::default(),
             remote_decode: Vec::new(),
+            remote_prefill: Vec::new(),
             kv_budget: crate::config::LIVE_KV_BUDGET_TOKENS,
             stop_shards_on_drain: true,
         }
@@ -302,6 +316,11 @@ enum SchedMsg {
     EndForward {
         instance: u32,
         t_measured: f64,
+        /// Engine-reported backlog still queued behind the pass. `None`
+        /// for in-process workers (they consume each dispatch wholesale
+        /// before signalling); `Some` when the report crossed the wire
+        /// from a prefill shard — real engine truth for `C_avail`.
+        remaining: Option<u32>,
     },
     /// A prefill worker finished a job that still needs decode: hand it
     /// to the scheduler thread for placement onto a decode DP unit.
@@ -316,17 +335,25 @@ enum SchedMsg {
     DecodeDone {
         id: u64,
     },
-    /// A remote shard died with these sequences resident: release their
-    /// ledger charges and reject them upstream so nothing leaks.
+    /// A remote decode shard died with these sequences resident: release
+    /// their ledger charges and reject them upstream so nothing leaks.
     Evict {
         ids: Vec<u64>,
     },
+    /// A remote prefill shard died with these jobs queued or
+    /// mid-handoff: reject them upstream (they hold no decode ledger
+    /// charge yet).
+    PrefillEvict {
+        ids: Vec<u64>,
+    },
+    /// A decode shard's engine-truth gauges arrived (`StatsReply`):
+    /// cross-check them against the scheduler's own ledger. `base` is
+    /// the flat pool index of the shard's first unit.
+    ShardStats {
+        base: usize,
+        loads: Vec<UnitLoad>,
+    },
     Drain,
-}
-
-enum PrefillMsg {
-    Work(Vec<(Job, f64)>),
-    Stop,
 }
 
 enum RouterMsg {
@@ -453,10 +480,11 @@ pub struct RealCluster {
 
 impl RealCluster {
     /// Start router + scheduler + worker threads; each engine thread
-    /// builds its own backend from `cfg.engine`. Remote decode shards in
-    /// `cfg.remote_decode` are connected synchronously, so a wrong
-    /// address fails startup fast; drops *after* startup are handled by
-    /// the transport's evict-and-reconnect path instead.
+    /// builds its own backend from `cfg.engine`. Remote shards
+    /// (`cfg.remote_decode` / `cfg.remote_prefill`) are connected
+    /// synchronously, so a wrong address fails startup fast; drops
+    /// *after* startup are handled by the transport's
+    /// evict-and-reconnect path instead.
     pub fn start(cfg: RealClusterConfig) -> Result<RealCluster> {
         let mut admission =
             AdmissionController::new(cfg.admission.policy, cfg.admission.max_inflight);
@@ -512,17 +540,27 @@ impl RealCluster {
             }));
         }
 
-        let mut prefill_txs = Vec::new();
-        for i in 0..cfg.n_prefill {
+        // With remote prefill shards configured, zero local prefill
+        // workers is a valid topology; otherwise keep at least one.
+        let n_local_prefill = if cfg.remote_prefill.is_empty() {
+            cfg.n_prefill.max(1)
+        } else {
+            cfg.n_prefill
+        };
+        let mut prefills: Vec<Box<dyn PrefillTransport>> = Vec::new();
+        for i in 0..n_local_prefill {
             let (tx, rx) = channel::<PrefillMsg>();
-            prefill_txs.push(tx);
+            prefills.push(Box::new(LocalPrefill::new(i, tx)));
             let spec = cfg.engine.clone();
-            let to_sched = to_sched.clone();
-            let router = router_tx.clone();
-            let shared = shared.clone();
+            let sink = LocalPrefillSink {
+                to_sched: to_sched.clone(),
+                router: router_tx.clone(),
+                shared: shared.clone(),
+            };
+            let seed = cfg.seed.wrapping_add(1 + i as u64);
             let ready = ready_tx.clone();
             threads.push(std::thread::spawn(move || {
-                prefill_worker(i, spec, rx, to_sched, router, shared, ready);
+                run_prefill_unit(&format!("prefill:{i}"), i, &spec, seed, rx, sink, None, ready);
             }));
         }
 
@@ -532,7 +570,7 @@ impl RealCluster {
         // failures explicitly so a misconfigured cluster fails fast
         // instead of sitting out the timeout.
         drop(ready_tx);
-        for _ in 0..(cfg.n_prefill + n_local) {
+        for _ in 0..(n_local_prefill + n_local) {
             match ready_rx.recv_timeout(Duration::from_secs(600)) {
                 Ok(true) => {}
                 Ok(false) => {
@@ -545,13 +583,32 @@ impl RealCluster {
             }
         }
 
-        // Join the remote decode shards' units to the pool. Duplicate
-        // addresses are a config error worth naming: the second connect
+        // Join the remote shards to their pools. Duplicate addresses —
+        // within a list or *across* the two lists (one shard serves one
+        // role) — are a config error worth naming: the second connect
         // would otherwise sit in the shard's single-scheduler backlog
         // and fail as a misleading handshake timeout. Compare *resolved*
         // addresses so aliases (localhost vs 127.0.0.1) are caught too.
         let mut seen = std::collections::HashSet::new();
-        for addr in &cfg.remote_decode {
+        let release_all =
+            |transports: &mut Vec<Box<dyn DecodeTransport>>,
+             prefills: &mut Vec<Box<dyn PrefillTransport>>| {
+                // Release everything already connected: reader threads
+                // stop and the shards go back to accepting, so a retried
+                // start() in this process can succeed.
+                for t in transports.iter_mut() {
+                    t.detach();
+                }
+                for p in prefills.iter_mut() {
+                    p.detach();
+                }
+            };
+        for (addr, flag) in cfg
+            .remote_decode
+            .iter()
+            .map(|a| (a, "--remote-decode"))
+            .chain(cfg.remote_prefill.iter().map(|a| (a, "--remote-prefill")))
+        {
             use std::net::ToSocketAddrs;
             let key = addr
                 .to_socket_addrs()
@@ -560,21 +617,20 @@ impl RealCluster {
                 .map(|sa| sa.to_string())
                 .unwrap_or_else(|| addr.clone());
             if !seen.insert(key) {
-                for t in transports.iter_mut() {
-                    t.detach();
-                }
-                return Err(anyhow!("duplicate shard address {addr} in --remote-decode"));
+                release_all(&mut transports, &mut prefills);
+                return Err(anyhow!("duplicate shard address {addr} in {flag}"));
             }
-            let sinks = shard_sinks(to_sched.clone(), router_tx.clone(), shared.clone());
+        }
+        for addr in &cfg.remote_decode {
+            // The shard's units join the flat pool after everything
+            // connected so far; the stats sink needs that base index to
+            // map its shard-local `StatsReply` onto pool units.
+            let base = transports.len();
+            let sinks = shard_sinks(to_sched.clone(), router_tx.clone(), shared.clone(), base);
             let units = match connect_shard(RemoteShardConfig::new(addr), sinks) {
                 Ok(units) => units,
                 Err(e) => {
-                    // Release everything already connected: reader
-                    // threads stop and the shards go back to accepting,
-                    // so a retried start() in this process can succeed.
-                    for t in transports.iter_mut() {
-                        t.detach();
-                    }
+                    release_all(&mut transports, &mut prefills);
                     return Err(e);
                 }
             };
@@ -583,12 +639,39 @@ impl RealCluster {
                 transports.push(Box::new(u));
             }
         }
+        for addr in &cfg.remote_prefill {
+            let base = prefills.len() as u32;
+            let sinks = prefill_shard_sinks(to_sched.clone(), router_tx.clone(), shared.clone(), base);
+            let units = match connect_prefill_shard(RemoteShardConfig::new(addr), sinks) {
+                Ok(units) => units,
+                Err(e) => {
+                    release_all(&mut transports, &mut prefills);
+                    return Err(e);
+                }
+            };
+            log::info!(
+                "prefill shard {addr}: {} instances joined the pool",
+                units.len()
+            );
+            for u in units {
+                prefills.push(Box::new(u));
+            }
+        }
         if transports.is_empty() {
+            release_all(&mut transports, &mut prefills);
             return Err(anyhow!("decode pool is empty (no local workers, no shards)"));
         }
-        log::info!("all workers ready ({} decode DP units)", transports.len());
+        if prefills.is_empty() {
+            release_all(&mut transports, &mut prefills);
+            return Err(anyhow!("prefill pool is empty (no local workers, no shards)"));
+        }
+        log::info!(
+            "all workers ready ({} prefill instances, {} decode DP units)",
+            prefills.len(),
+            transports.len()
+        );
 
-        // Shaped all-zero snapshot: STATS reports the pool shape (and
+        // Shaped all-zero snapshot: STATS reports both pool shapes (and
         // per-shard transports) even before the first placement.
         {
             let mut stats = DecodePoolStats::zeroed(
@@ -597,7 +680,8 @@ impl RealCluster {
                     .map(|i| DpUnitId::new(i, 0).to_string())
                     .collect(),
             );
-            decorate_stats(&mut stats, &transports);
+            decorate_stats(&mut stats, &transports, &HashMap::new());
+            decorate_prefill_stats(&mut stats, &prefills, &[]);
             *shared.decode_stats.lock().unwrap() = stats;
         }
 
@@ -606,7 +690,7 @@ impl RealCluster {
             let router = router_tx.clone();
             let shared = shared.clone();
             threads.push(std::thread::spawn(move || {
-                scheduler_loop(cfg2, sched_rx, prefill_txs, transports, router, shared);
+                scheduler_loop(cfg2, sched_rx, prefills, transports, router, shared);
             }));
         }
 
@@ -928,25 +1012,66 @@ fn place_parked(
     changed
 }
 
-/// Overlay per-unit transport identity, liveness and RTT onto the core's
-/// gauges before publishing them (the core itself is transport-blind).
-fn decorate_stats(stats: &mut DecodePoolStats, transports: &[Box<dyn DecodeTransport>]) {
-    for (g, t) in stats.units.iter_mut().zip(transports) {
+/// Overlay per-unit transport identity, liveness, RTT and the latest
+/// engine-truth KV sample onto the core's gauges before publishing them
+/// (the core itself is transport-blind).
+fn decorate_stats(
+    stats: &mut DecodePoolStats,
+    transports: &[Box<dyn DecodeTransport>],
+    engine_truth: &HashMap<usize, UnitLoad>,
+) {
+    for (i, (g, t)) in stats.units.iter_mut().zip(transports).enumerate() {
         g.transport = t.label();
         g.alive = t.alive();
         g.rtt_ms = t.rtt_ms();
+        g.engine_kv_tokens = engine_truth.get(&i).map(|l| l.kv_tokens);
     }
 }
 
+/// Fill the snapshot's prefill section from the prefill transports and
+/// the scheduler's per-instance dispatch counters.
+fn decorate_prefill_stats(
+    stats: &mut DecodePoolStats,
+    prefills: &[Box<dyn PrefillTransport>],
+    dispatched: &[u64],
+) {
+    stats.prefill = prefills
+        .iter()
+        .enumerate()
+        .map(|(i, p)| crate::metrics::PrefillUnitGauge {
+            unit: format!("p{i}"),
+            transport: p.label(),
+            alive: p.alive(),
+            rtt_ms: p.rtt_ms(),
+            dispatched: dispatched.get(i).copied().unwrap_or(0),
+        })
+        .collect();
+}
+
+/// One submitted job awaiting prefill dispatch, with its re-dispatch
+/// budget (a dispatch that fails because its prefill transport died is
+/// requeued onto the surviving instances, not instantly rejected).
+struct PendingJob {
+    job: Job,
+    t_arrive: f64,
+    attempts: u32,
+}
+
+/// Re-dispatch attempts before a job whose prefill dispatches keep
+/// landing on dead transports is terminally rejected (bounds the
+/// requeue loop when the whole prefill pool is gone).
+const MAX_PREFILL_ATTEMPTS: u32 = 5;
+
 /// Scheduler thread: the shared [`DispatchCore`] on real time. Owns both
-/// planes — prefill dispatch (SBS dual trigger or immediate baseline) and
-/// decode placement across the DP pool, which it reaches purely through
-/// [`DecodeTransport`]s (local engine threads and remote shards mix
-/// freely behind the same core and Algorithm 3 placement).
+/// planes — prefill dispatch (SBS dual trigger or immediate baseline)
+/// across the prefill pool via [`PrefillTransport`]s, and decode
+/// placement across the DP pool via [`DecodeTransport`]s (local engine
+/// threads and remote shards mix freely on both planes behind the same
+/// core).
 fn scheduler_loop(
     cfg: RealClusterConfig,
     rx: Receiver<SchedMsg>,
-    prefill_txs: Vec<Sender<PrefillMsg>>,
+    mut prefills: Vec<Box<dyn PrefillTransport>>,
     mut transports: Vec<Box<dyn DecodeTransport>>,
     router: Sender<RouterMsg>,
     shared: Arc<ClusterShared>,
@@ -969,7 +1094,7 @@ fn scheduler_loop(
     let n_decode = transports.len() as u32;
     let mut core = DispatchCore::new(&DispatchCoreConfig {
         mode,
-        n_prefill: cfg.n_prefill,
+        n_prefill: prefills.len() as u32,
         dp_prefill: 1,
         c_chunk: cfg.c_chunk,
         n_decode,
@@ -978,19 +1103,26 @@ fn scheduler_loop(
         seed: cfg.seed ^ 0xDECD_E000,
     });
     // Job payloads keyed by request id (the scheduler works on Requests).
-    let mut jobs: HashMap<u64, (Job, f64)> = HashMap::new();
+    let mut jobs: HashMap<u64, PendingJob> = HashMap::new();
     // Decode joins awaiting placement + their engine payloads.
     let mut parked: Vec<DecodeJoin> = Vec::new();
     let mut payloads: HashMap<u64, JoinPayload> = HashMap::new();
     // Per-unit slot caps for admission; occupancy itself lives in the
     // core's ledger (one authoritative ⟨B, K⟩ per unit).
     let slots: Vec<u32> = transports.iter().map(|t| t.slots().max(1)).collect();
+    // Per-instance prefill dispatch counters (the prefill gauges).
+    let mut prefill_dispatched: Vec<u64> = vec![0; prefills.len()];
+    // Latest engine-truth per-unit loads from decode shards'
+    // `StatsReply`, keyed by flat pool index, plus the consecutive
+    // divergence streak behind the logged cross-check.
+    let mut engine_truth: HashMap<usize, UnitLoad> = HashMap::new();
+    let mut divergent_polls: Vec<u32> = vec![0; transports.len()];
     let mut next_timer: Option<f64> = None;
     let mut stop = false;
     // Shard liveness/RTT can change without ledger traffic, so pools
     // with remote transports also refresh their gauges on idle ticks;
     // purely local pools keep the cheaper ledger-change-only publishing.
-    let has_remote = !cfg.remote_decode.is_empty();
+    let has_remote = !cfg.remote_decode.is_empty() || !cfg.remote_prefill.is_empty();
     // Since when every transport has been dead (drives the parked-join
     // grace window in place_parked).
     let mut all_dead_since: Option<Instant> = None;
@@ -1009,17 +1141,31 @@ fn scheduler_loop(
         match msg {
             Ok(SchedMsg::Submit(job, t_arrive)) => {
                 let req = Request::new(job.id, job.prompt.len() as u32, job.max_new, t_arrive);
-                jobs.insert(job.id, (job, t_arrive));
+                jobs.insert(
+                    job.id,
+                    PendingJob {
+                        job,
+                        t_arrive,
+                        attempts: 0,
+                    },
+                );
                 actions = core.on_arrival(req, now);
             }
             Ok(SchedMsg::EndForward {
                 instance,
                 t_measured,
+                remaining,
             }) => {
-                // The engine fully consumed its dispatched batch before
-                // signalling; the core clears the capacity model itself.
-                actions =
-                    core.on_end_forward(instance, t_measured, EndForwardBacklog::ConsumedAll, now);
+                // Local workers consume each dispatch wholesale before
+                // signalling (None → the core clears the capacity model
+                // itself); remote prefill shards report their real
+                // backlog over the wire (Some → engine truth seeds
+                // C_avail).
+                let backlog = match remaining {
+                    None => EndForwardBacklog::ConsumedAll,
+                    Some(r) => EndForwardBacklog::Reported(r),
+                };
+                actions = core.on_end_forward(instance, t_measured, backlog, now);
             }
             Ok(SchedMsg::PrefillDone {
                 id,
@@ -1045,10 +1191,63 @@ fn scheduler_loop(
                     }
                 }
             }
+            Ok(SchedMsg::PrefillEvict { ids }) => {
+                // A prefill shard died with these jobs in flight: they
+                // hold no decode ledger charge yet, so a terminal
+                // rejection upstream is the whole release.
+                for id in ids {
+                    let _ = router.send(RouterMsg::Update {
+                        id,
+                        update: JobUpdate::Rejected { id },
+                    });
+                }
+            }
+            Ok(SchedMsg::ShardStats { base, loads }) => {
+                // Engine-truth cross-check: compare the shard's own
+                // residency against the scheduler ledger. Transient
+                // skew is normal (admits/terminals in flight), so only
+                // a *persistent* divergence is promoted to a warning.
+                let ledger = core.decode_stats(now);
+                for (j, load) in loads.into_iter().enumerate() {
+                    let unit = base + j;
+                    let Some(g) = ledger.units.get(unit) else { break };
+                    if load.active != g.active {
+                        divergent_polls[unit] += 1;
+                        if divergent_polls[unit] == 3 {
+                            log::warn!(
+                                "unit {unit} engine-truth divergence: shard reports \
+                                 {} active / {} KV tokens, ledger holds {} / {} \
+                                 (3 consecutive polls)",
+                                load.active,
+                                load.kv_tokens,
+                                g.active,
+                                g.kv_tokens,
+                            );
+                        } else {
+                            log::debug!(
+                                "unit {unit}: shard reports {} active, ledger {}",
+                                load.active,
+                                g.active
+                            );
+                        }
+                    } else {
+                        divergent_polls[unit] = 0;
+                    }
+                    engine_truth.insert(unit, load);
+                }
+                pool_dirty = true;
+            }
             Ok(SchedMsg::Drain) => stop = true,
             Err(_) => {
                 next_timer = None;
                 pool_dirty = has_remote; // refresh liveness/RTT gauges
+                if has_remote {
+                    // Poll the decode shards' engine truth (throttled to
+                    // one StatsRequest per shard per second internally).
+                    for t in &transports {
+                        t.request_stats();
+                    }
+                }
                 actions = core.on_timer(now);
             }
         }
@@ -1063,21 +1262,85 @@ fn scheduler_loop(
             &mut all_dead_since,
             now,
         );
-        if pool_dirty {
-            let mut stats = core.decode_stats(now);
-            decorate_stats(&mut stats, &transports);
-            *shared.decode_stats.lock().unwrap() = stats;
-        }
-        for act in actions {
+        // Work-queue over the actions: a dispatch that lands on a dead
+        // prefill transport requeues its jobs through `on_arrival`,
+        // whose follow-up actions join the back of the queue (bounded by
+        // the per-job attempt budget).
+        let mut queue: VecDeque<SchedulerAction> = actions.into();
+        while let Some(act) = queue.pop_front() {
             match act {
                 SchedulerAction::Dispatch(batch) => {
-                    let work: Vec<(Job, f64)> = batch
+                    let inst = batch.instance as usize;
+                    let mut attempts: HashMap<u64, u32> = HashMap::new();
+                    let work: Vec<PrefillWork> = batch
                         .assignments
                         .iter()
                         .filter_map(|a| jobs.remove(&a.request.id))
+                        .map(|p| {
+                            attempts.insert(p.job.id, p.attempts);
+                            let mut m =
+                                RequestMetrics::arrive(p.t_arrive, p.job.prompt.len() as u32);
+                            m.t_dispatch = now;
+                            PrefillWork {
+                                id: p.job.id,
+                                prompt: p.job.prompt,
+                                max_new: p.job.max_new,
+                                metrics: m,
+                            }
+                        })
                         .collect();
-                    if !work.is_empty() {
-                        let _ = prefill_txs[batch.instance as usize].send(PrefillMsg::Work(work));
+                    if work.is_empty() {
+                        continue;
+                    }
+                    pool_dirty = true;
+                    match prefills[inst].dispatch(work) {
+                        Ok(()) => prefill_dispatched[inst] += 1,
+                        Err(work) => {
+                            // The transport died: requeue each job onto
+                            // the surviving instances; terminally reject
+                            // only once its attempt budget is spent
+                            // (every transport keeps failing — the pool
+                            // is gone).
+                            log::warn!(
+                                "prefill dispatch to {} failed; requeueing {} jobs",
+                                prefills[inst].label(),
+                                work.len()
+                            );
+                            for w in work {
+                                let tries = attempts.get(&w.id).copied().unwrap_or(0) + 1;
+                                if tries >= MAX_PREFILL_ATTEMPTS {
+                                    log::warn!(
+                                        "job {} failed {tries} prefill dispatches; rejecting",
+                                        w.id
+                                    );
+                                    let _ = router.send(RouterMsg::Update {
+                                        id: w.id,
+                                        update: JobUpdate::Rejected { id: w.id },
+                                    });
+                                    continue;
+                                }
+                                let t_arrive = w.metrics.t_arrival;
+                                let req = Request::new(
+                                    w.id,
+                                    w.prompt.len() as u32,
+                                    w.max_new,
+                                    t_arrive,
+                                );
+                                jobs.insert(
+                                    w.id,
+                                    PendingJob {
+                                        job: Job {
+                                            id: w.id,
+                                            prompt: w.prompt,
+                                            max_new: w.max_new,
+                                        },
+                                        t_arrive,
+                                        attempts: tries,
+                                    },
+                                );
+                                queue.extend(core.on_arrival(req, now));
+                            }
+                        }
                     }
                 }
                 SchedulerAction::ArmTimer { at } => {
@@ -1099,6 +1362,12 @@ fn scheduler_loop(
                 SchedulerAction::Watchdog(w) => log::warn!("watchdog: {w:?}"),
             }
         }
+        if pool_dirty {
+            let mut stats = core.decode_stats(now);
+            decorate_stats(&mut stats, &transports, &engine_truth);
+            decorate_prefill_stats(&mut stats, &prefills, &prefill_dispatched);
+            *shared.decode_stats.lock().unwrap() = stats;
+        }
     }
     // Drain guard: `Drain` is only sent once the ledger's in-flight count
     // has reached zero, and a parked join always belongs to an in-flight
@@ -1114,16 +1383,21 @@ fn scheduler_loop(
     }
     {
         let mut stats = core.decode_stats(shared.clock.now_s());
-        decorate_stats(&mut stats, &transports);
+        decorate_stats(&mut stats, &transports, &engine_truth);
+        decorate_prefill_stats(&mut stats, &prefills, &prefill_dispatched);
         *shared.decode_stats.lock().unwrap() = stats;
     }
-    for tx in &prefill_txs {
-        let _ = tx.send(PrefillMsg::Stop);
+    // In-process units always stop (their threads must exit with the
+    // cluster); detach() only differs for remote shards, which it
+    // disconnects without terminating when the config says so.
+    for p in prefills.iter_mut() {
+        if cfg.stop_shards_on_drain {
+            p.stop();
+        } else {
+            p.detach();
+        }
     }
     for t in transports.iter_mut() {
-        // In-process units always stop (their threads must exit with the
-        // cluster); detach() only differs for remote shards, which it
-        // disconnects without terminating when the config says so.
         if cfg.stop_shards_on_drain {
             t.stop();
         } else {
@@ -1132,82 +1406,231 @@ fn scheduler_loop(
     }
 }
 
-/// Prefill worker: gated, non-preemptive chunked prefill of each batch.
-/// Streams the first token through the router the moment prefill
-/// completes, so TTFT is observable before decode starts; jobs needing
-/// decode go back to the scheduler for DP placement.
-fn prefill_worker(
-    instance: u32,
-    spec: EngineSpec,
-    rx: Receiver<PrefillMsg>,
+/// Where a prefill engine runner reports its events — the prefill-plane
+/// sibling of [`DecodeEventSink`]. The in-process pool routes them
+/// straight onto the scheduler/router channels ([`LocalPrefillSink`]); a
+/// prefill shard serializes them onto the wire (`cluster::shard`'s
+/// sink: chunked `KvSegment` stream + `PrefillDone`) for the
+/// scheduler-side transport to re-deliver through the *same* channels.
+pub(crate) trait PrefillEventSink {
+    /// Prefill finished: the outcome plus the job's dispatch-time state.
+    fn prefilled(&self, id: u64, outcome: PrefillOutcome, max_new: u32, metrics: RequestMetrics);
+    /// Terminal prefill failure.
+    fn failed(&self, id: u64);
+    /// A pass completed; `remaining` is the runner's queued backlog in
+    /// prompt tokens (the `EndForward` payload of Fig. 5).
+    fn end_forward(&self, instance: u32, t_measured: f64, remaining: u32);
+}
+
+/// Route one finished prefill into the cluster: stamp the first token on
+/// the scheduler clock, stream it, and either terminalize (single-token
+/// jobs) or park the sequence for decode placement. Shared by the
+/// in-process sink and the remote-shard sink, so where prefill ran is
+/// invisible downstream.
+fn deliver_prefilled(
+    to_sched: &Sender<SchedMsg>,
+    router: &Sender<RouterMsg>,
+    id: u64,
+    outcome: Box<PrefillOutcome>,
+    max_new: u32,
+    mut metrics: RequestMetrics,
+    t_first: f64,
+) {
+    metrics.t_first_token = t_first;
+    // Engine execution is a duration, so it maps onto the scheduler
+    // clock even for remote shards: the pass started ~exec_time before
+    // its first token surfaced.
+    metrics.t_exec_start = (t_first - outcome.exec_time).max(metrics.t_dispatch);
+    let first_token = outcome.first_token;
+    let _ = router.send(RouterMsg::Update {
+        id,
+        update: JobUpdate::Token {
+            token: first_token,
+            index: 0,
+            t: t_first,
+        },
+    });
+    if max_new <= 1 {
+        metrics.t_done = t_first;
+        metrics.output_tokens = 1;
+        let _ = router.send(RouterMsg::Update {
+            id,
+            update: JobUpdate::Done(Completion {
+                id,
+                tokens: vec![first_token],
+                metrics,
+            }),
+        });
+    } else {
+        let _ = to_sched.send(SchedMsg::PrefillDone {
+            id,
+            outcome,
+            max_new: max_new - 1,
+            metrics,
+        });
+    }
+}
+
+/// In-process prefill sink: events go straight onto the cluster
+/// channels, timestamps from the shared cluster clock.
+struct LocalPrefillSink {
     to_sched: Sender<SchedMsg>,
     router: Sender<RouterMsg>,
     shared: Arc<ClusterShared>,
+}
+
+impl PrefillEventSink for LocalPrefillSink {
+    fn prefilled(&self, id: u64, outcome: PrefillOutcome, max_new: u32, metrics: RequestMetrics) {
+        let t_first = self.shared.clock.now_s();
+        deliver_prefilled(
+            &self.to_sched,
+            &self.router,
+            id,
+            Box::new(outcome),
+            max_new,
+            metrics,
+            t_first,
+        );
+    }
+
+    fn failed(&self, id: u64) {
+        // Terminal failure — surface it so subscribers and the ledger
+        // drain instead of hanging (the scheduler-side watchdog recovers
+        // the instance's capacity state).
+        let _ = self.router.send(RouterMsg::Update {
+            id,
+            update: JobUpdate::Rejected { id },
+        });
+    }
+
+    fn end_forward(&self, instance: u32, t_measured: f64, _remaining: u32) {
+        // In-process workers keep the historical wholesale-consumption
+        // semantics (`None` → the core clears the capacity model); only
+        // the wire path reports granular backlog.
+        let _ = self.to_sched.send(SchedMsg::EndForward {
+            instance,
+            t_measured,
+            remaining: None,
+        });
+    }
+}
+
+/// Per-instance gauges a prefill shard exposes over `StatsReply` (the
+/// in-process pool reads the scheduler's own state instead and passes
+/// `None`). Refreshed when the runner's queue changes.
+#[derive(Default)]
+pub(crate) struct PrefillGauges {
+    /// Jobs waiting in the runner's queue (the in-flight pass excluded).
+    pub queued_jobs: AtomicU32,
+    /// Prompt tokens waiting in the runner's queue.
+    pub queued_tokens: AtomicU64,
+}
+
+/// Prefill instance runner: gated, non-preemptive prefill of dispatched
+/// batches, shared verbatim by the in-process pool and the prefill
+/// shard process — the engine loop cannot drift between deployments.
+/// Each finished pass reports `EndForward` with the queue still behind
+/// it; an `Abort` clears the queue even when it arrived behind stale
+/// work (the runner drains every pending message before each pass, so
+/// one engine pass bounds abort latency).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_prefill_unit<S: PrefillEventSink>(
+    label: &str,
+    instance: u32,
+    spec: &EngineSpec,
+    seed: u64,
+    rx: Receiver<PrefillMsg>,
+    sink: S,
+    gauges: Option<&PrefillGauges>,
     ready: Sender<bool>,
 ) {
-    let mut engine =
-        match spec.build(EngineRole::Prefill, 0, Sampling::Greedy, 1 + instance as u64) {
-            Ok(e) => e,
-            Err(e) => {
-                log::error!("prefill worker {instance}: {e:#}");
-                let _ = ready.send(false);
-                return;
-            }
-        };
+    let mut engine = match spec.build(EngineRole::Prefill, 0, Sampling::Greedy, seed) {
+        Ok(e) => e,
+        Err(e) => {
+            log::error!("prefill unit {label}: {e:#}");
+            let _ = ready.send(false);
+            return;
+        }
+    };
     let _ = ready.send(true);
-    while let Ok(PrefillMsg::Work(batch)) = rx.recv() {
-        for (job, t_arrive) in batch {
-            let t_dispatch = shared.clock.now_s();
-            match engine.prefill(&job.prompt) {
-                Ok(outcome) => {
-                    let t_first = shared.clock.now_s();
-                    let mut m = RequestMetrics::arrive(t_arrive, job.prompt.len() as u32);
-                    m.t_dispatch = t_dispatch;
-                    m.t_exec_start = t_dispatch;
-                    m.t_first_token = t_first;
-                    let exec = outcome.exec_time;
-                    let _ = router.send(RouterMsg::Update {
-                        id: job.id,
-                        update: JobUpdate::Token {
-                            token: outcome.first_token,
-                            index: 0,
-                            t: t_first,
-                        },
-                    });
-                    if job.max_new <= 1 {
-                        m.t_done = t_first;
-                        m.output_tokens = 1;
-                        let _ = router.send(RouterMsg::Update {
-                            id: job.id,
-                            update: JobUpdate::Done(Completion {
-                                id: job.id,
-                                tokens: vec![outcome.first_token],
-                                metrics: m,
-                            }),
-                        });
-                    } else {
-                        let _ = to_sched.send(SchedMsg::PrefillDone {
-                            id: job.id,
-                            outcome: Box::new(outcome),
-                            max_new: job.max_new - 1,
-                            metrics: m,
-                        });
+    let publish = |queue: &VecDeque<PrefillWork>| {
+        let Some(g) = gauges else { return };
+        g.queued_jobs.store(queue.len() as u32, Ordering::Relaxed);
+        g.queued_tokens.store(
+            queue.iter().map(|w| w.prompt.len() as u64).sum(),
+            Ordering::Relaxed,
+        );
+    };
+    let mut queue: VecDeque<PrefillWork> = VecDeque::new();
+    let mut stopping = false;
+    loop {
+        // Drain every available message before the next engine pass, so
+        // an Abort queued behind stale Work is honored without
+        // prefilling the work in front of it first.
+        let mut changed = false;
+        loop {
+            let msg = if queue.is_empty() && !stopping {
+                match rx.recv_timeout(Duration::from_millis(100)) {
+                    Ok(m) => m,
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        stopping = true;
+                        break;
                     }
-                    let _ = to_sched.send(SchedMsg::EndForward {
-                        instance,
-                        t_measured: exec,
-                    });
                 }
-                Err(e) => {
-                    log::error!("prefill failed for job {}: {e:#}", job.id);
-                    // Terminal failure — surface it so subscribers and the
-                    // ledger drain instead of hanging (the scheduler-side
-                    // watchdog recovers the instance's capacity state).
-                    let _ = router.send(RouterMsg::Update {
-                        id: job.id,
-                        update: JobUpdate::Rejected { id: job.id },
-                    });
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        stopping = true;
+                        break;
+                    }
                 }
+            };
+            match msg {
+                PrefillMsg::Work(w) => {
+                    queue.extend(w);
+                    changed = true;
+                }
+                PrefillMsg::Abort { ack } => {
+                    // A new owner superseded whoever dispatched these
+                    // jobs: drop them *silently* (the old scheduler
+                    // already evicted them on its side).
+                    if !queue.is_empty() {
+                        log::info!(
+                            "prefill unit {label}: aborting {} queued jobs",
+                            queue.len()
+                        );
+                    }
+                    queue.clear();
+                    changed = true;
+                    let _ = ack.send(());
+                }
+                PrefillMsg::Stop => stopping = true,
+            }
+        }
+        if changed {
+            publish(&queue);
+        }
+        let Some(w) = queue.pop_front() else {
+            if stopping {
+                break;
+            }
+            continue;
+        };
+        // Gauges reflect the post-pop queue while the pass runs.
+        publish(&queue);
+        match engine.prefill(&w.prompt) {
+            Ok(outcome) => {
+                let t_measured = outcome.exec_time;
+                sink.prefilled(w.id, outcome, w.max_new, w.metrics);
+                let remaining: u32 = queue.iter().map(|q| q.prompt.len() as u32).sum();
+                sink.end_forward(instance, t_measured, remaining);
+            }
+            Err(e) => {
+                log::error!("prefill unit {label}: prefill failed for job {}: {e:#}", w.id);
+                sink.failed(w.id);
             }
         }
     }
@@ -1263,13 +1686,16 @@ impl DecodeEventSink for LocalSink {
     }
 }
 
-/// Scheduler-side sinks for one remote shard: terminal events are
+/// Scheduler-side sinks for one remote decode shard: terminal events are
 /// re-stamped on the cluster clock here, so every timestamp a client
 /// sees comes from one clock regardless of where the sequence decoded.
+/// `base` is the flat pool index the shard's first unit will occupy
+/// (maps its shard-local `StatsReply` onto pool units).
 fn shard_sinks(
     to_sched: Sender<SchedMsg>,
     router: Sender<RouterMsg>,
     shared: Arc<ClusterShared>,
+    base: usize,
 ) -> ShardSinks {
     let sink = LocalSink {
         to_sched: to_sched.clone(),
@@ -1277,6 +1703,7 @@ fn shard_sinks(
     };
     let (tok, don, rej) = (sink.clone(), sink.clone(), sink);
     let clock = shared.clone();
+    let stats_sched = to_sched.clone();
     ShardSinks {
         on_token: Box::new(move |id, index, token| {
             tok.token(id, index, token, clock.clock.now_s());
@@ -1291,6 +1718,54 @@ fn shard_sinks(
             // The scheduler decides which of these are still live in the
             // ledger and rejects exactly those upstream.
             let _ = to_sched.send(SchedMsg::Evict { ids });
+        }),
+        on_stats: Box::new(move |loads| {
+            let _ = stats_sched.send(SchedMsg::ShardStats { base, loads });
+        }),
+    }
+}
+
+/// Scheduler-side sinks for one remote *prefill* shard: handoffs and
+/// first tokens are re-stamped on the cluster clock and re-delivered
+/// through the same channels as the in-process pool, and the shard's
+/// `EndForward` instances are re-based into the global prefill pool.
+fn prefill_shard_sinks(
+    to_sched: Sender<SchedMsg>,
+    router: Sender<RouterMsg>,
+    shared: Arc<ClusterShared>,
+    base: u32,
+) -> PrefillSinks {
+    let (prefilled_sched, prefilled_router) = (to_sched.clone(), router.clone());
+    let failed_router = router;
+    let ef_sched = to_sched.clone();
+    PrefillSinks {
+        on_prefilled: Box::new(move |id, outcome, max_new, metrics| {
+            let t_first = shared.clock.now_s();
+            deliver_prefilled(
+                &prefilled_sched,
+                &prefilled_router,
+                id,
+                outcome,
+                max_new,
+                metrics,
+                t_first,
+            );
+        }),
+        on_failed: Box::new(move |id| {
+            let _ = failed_router.send(RouterMsg::Update {
+                id,
+                update: JobUpdate::Rejected { id },
+            });
+        }),
+        on_end_forward: Box::new(move |instance, t_measured, remaining| {
+            let _ = ef_sched.send(SchedMsg::EndForward {
+                instance: base + instance,
+                t_measured,
+                remaining,
+            });
+        }),
+        on_evicted: Box::new(move |ids| {
+            let _ = to_sched.send(SchedMsg::PrefillEvict { ids });
         }),
     }
 }

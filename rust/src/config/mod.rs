@@ -39,6 +39,13 @@ pub const LIVE_KV_BUDGET_TOKENS: u64 = 150_000;
 /// cannot drift.
 pub const LIVE_KV_BUDGET_TOKENS_STR: &str = "150000";
 
+/// Elements (f32) per `KvSegment` frame in the prefill→decode KV
+/// handoff: 512 Ki elements = 2 MiB of payload per chunk. Small enough
+/// that other units' tokens and terminals interleave between a long
+/// prompt's segments on the shard connection, large enough that framing
+/// overhead stays negligible against PJRT-scale caches.
+pub const KV_SEGMENT_ELEMS: usize = 512 * 1024;
+
 /// Simulation horizon used by the figure harness (virtual seconds).
 pub const FIG_HORIZON_S: f64 = 180.0;
 

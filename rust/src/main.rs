@@ -9,9 +9,11 @@
 //! * `serve`         — serve the nano-MoE model through SBS on the
 //!                     threaded mini-cluster (`make artifacts` + the
 //!                     `pjrt` feature, or `--engine mock`); drives
-//!                     remote decode shards via `--remote-decode`.
-//! * `worker`        — run a standalone decode shard serving the binary
-//!                     transport protocol (`--decode --listen <addr>`).
+//!                     remote shards via `--remote-decode` /
+//!                     `--remote-prefill` (P/D-separated deployment).
+//! * `worker`        — run a standalone shard serving the binary
+//!                     transport protocol (`--decode` or `--prefill`,
+//!                     `--listen <addr>`).
 //! * `loadgen`       — open-loop TCP load generator against `sbs serve
 //!                     --listen`; prints a JSON latency report.
 //! * `calibrate`     — measure real PJRT pass times and print calibrated
@@ -63,8 +65,8 @@ fn usage() -> String {
        gen-trace       generate a JSONL workload trace\n\
        serve           serve the nano-MoE model via SBS (artifacts/ or --engine mock;\n\
                        multi-DP decode pool via --n-decode / --decode-policy;\n\
-                       remote shards via --remote-decode addr[,addr...])\n\
-       worker          run a standalone decode shard (--decode --listen addr)\n\
+                       remote shards via --remote-decode / --remote-prefill addr[,addr...])\n\
+       worker          run a standalone shard (--decode | --prefill, --listen addr)\n\
        loadgen         open-loop load generator against a running `serve --listen`\n\
                        (--arrival poisson|bursty|heavy-tail)\n\
        calibrate       measure PJRT pass times, print cost-model constants"

@@ -1,16 +1,20 @@
 //! Per-DP decode-pool occupancy and imbalance gauges (the live-cluster
-//! counterpart of Fig. 7's KV-dispersion series).
+//! counterpart of Fig. 7's KV-dispersion series), plus the prefill-pool
+//! liveness gauges of the P/D-separated deployment.
 //!
-//! The dispatch core maintains these while placing decode sequences; the
-//! serving frontend exposes the snapshot over the wire (`STATS`) so the
-//! load generator can embed it in its JSON report. The headline gauge is
-//! [`DecodePoolStats::imbalance`]: max/mean of per-unit busy time
-//! (sequence-seconds), 1.0 = perfectly balanced.
+//! The dispatch core maintains the decode gauges while placing
+//! sequences; the serving frontend exposes the snapshot over the wire
+//! (`STATS`) so the load generator can embed it in its JSON report. The
+//! headline gauge is [`DecodePoolStats::imbalance`]: max/mean of
+//! per-unit busy time (sequence-seconds), 1.0 = perfectly balanced.
 //!
-//! With remote decode shards in the pool, each gauge also carries its
-//! transport label, liveness and last-measured RTT, so a killed shard is
-//! *visible* in `STATS` (and in the loadgen report embedding it) rather
-//! than silently shrinking the pool.
+//! With remote shards in either pool, each gauge also carries its
+//! transport label, liveness and last-measured RTT, so a killed shard —
+//! prefill *or* decode — is *visible* in `STATS` (and in the loadgen
+//! report embedding it) rather than silently shrinking the pool. Remote
+//! decode units additionally carry `engine_kv_tokens`, the shard's
+//! engine-truth KV residency from `StatsReply`, as the cross-check
+//! against the scheduler's own reservation ledger.
 
 use crate::json::Json;
 use crate::util::stats;
@@ -39,6 +43,12 @@ pub struct DpOccupancyGauge {
     /// Last measured shard round-trip time, milliseconds (`None` for
     /// in-process units and not-yet-measured shards).
     pub rtt_ms: Option<f64>,
+    /// Engine-truth resident KV tokens from the shard's last
+    /// `StatsReply` (`None` for in-process units — the ledger *is* their
+    /// truth — and shards not yet polled). Diverges from `kv_tokens` by
+    /// design: the ledger charges the expected full residency up front,
+    /// the engine reports what is materialized now.
+    pub engine_kv_tokens: Option<u64>,
 }
 
 impl DpOccupancyGauge {
@@ -53,17 +63,57 @@ impl DpOccupancyGauge {
             ("transport", Json::from(self.transport.clone())),
             ("alive", Json::from(self.alive)),
             ("rtt_ms", self.rtt_ms.map(Json::from).unwrap_or(Json::Null)),
+            (
+                "engine_kv_tokens",
+                self.engine_kv_tokens.map(Json::from).unwrap_or(Json::Null),
+            ),
         ])
     }
 }
 
-/// Snapshot of the whole decode DP pool under one placement policy.
+/// Liveness/identity gauge for one prefill instance (local or remote) —
+/// what makes a killed prefill shard loud in `STATS` and the loadgen
+/// report instead of a silently stalled pipeline.
+#[derive(Debug, Clone)]
+pub struct PrefillUnitGauge {
+    /// Instance label (`p<i>`, flat pool order).
+    pub unit: String,
+    /// Transport carrying this instance (`prefill:<i>` or
+    /// `<addr>#p<unit>`).
+    pub transport: String,
+    /// Whether the instance's transport can currently receive
+    /// dispatches.
+    pub alive: bool,
+    /// Last measured shard round-trip time, milliseconds.
+    pub rtt_ms: Option<f64>,
+    /// Batches dispatched to this instance so far.
+    pub dispatched: u64,
+}
+
+impl PrefillUnitGauge {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("unit", Json::from(self.unit.clone())),
+            ("transport", Json::from(self.transport.clone())),
+            ("alive", Json::from(self.alive)),
+            ("rtt_ms", self.rtt_ms.map(Json::from).unwrap_or(Json::Null)),
+            ("dispatched", Json::from(self.dispatched)),
+        ])
+    }
+}
+
+/// Snapshot of the cluster's serving pools under one placement policy:
+/// the decode DP pool's occupancy gauges plus the prefill pool's
+/// liveness gauges. (Named for its decode-side origin; `STATS` exposes
+/// the whole snapshot.)
 #[derive(Debug, Clone)]
 pub struct DecodePoolStats {
     /// Placement policy name (`load-aware` / `round-robin` / `random`).
     pub policy: String,
-    /// Per-unit gauges, flat unit order.
+    /// Per-unit decode gauges, flat unit order.
     pub units: Vec<DpOccupancyGauge>,
+    /// Per-instance prefill gauges, flat pool order.
+    pub prefill: Vec<PrefillUnitGauge>,
 }
 
 impl DecodePoolStats {
@@ -72,11 +122,15 @@ impl DecodePoolStats {
         DecodePoolStats {
             policy: policy.to_string(),
             units: Vec::new(),
+            prefill: Vec::new(),
         }
     }
 
-    /// All-zero snapshot with the pool shape known up front (so `STATS`
-    /// reports `n_units` even before the scheduler has placed anything).
+    /// All-zero snapshot with the decode pool shape known up front (so
+    /// `STATS` reports `n_units` even before the scheduler has placed
+    /// anything). The `prefill` section starts empty — like
+    /// `DispatchCore::decode_stats`, this leaves it for the driver's
+    /// decorator, which builds it wholesale from its transports.
     pub fn zeroed(policy: &str, unit_labels: Vec<String>) -> Self {
         DecodePoolStats {
             policy: policy.to_string(),
@@ -92,14 +146,22 @@ impl DecodePoolStats {
                     transport: "local".to_string(),
                     alive: true,
                     rtt_ms: None,
+                    engine_kv_tokens: None,
                 })
                 .collect(),
+            prefill: Vec::new(),
         }
     }
 
     /// Units whose transport can currently receive placements.
     pub fn units_alive(&self) -> usize {
         self.units.iter().filter(|u| u.alive).count()
+    }
+
+    /// Prefill instances whose transport can currently receive
+    /// dispatches.
+    pub fn prefill_units_alive(&self) -> usize {
+        self.prefill.iter().filter(|u| u.alive).count()
     }
 
     /// Total sequences placed across the pool.
@@ -137,6 +199,17 @@ impl DecodePoolStats {
                 "units",
                 Json::Arr(self.units.iter().map(|u| u.to_json()).collect()),
             ),
+            (
+                "prefill",
+                Json::obj(vec![
+                    ("n_units", Json::from(self.prefill.len())),
+                    ("units_alive", Json::from(self.prefill_units_alive())),
+                    (
+                        "units",
+                        Json::Arr(self.prefill.iter().map(|u| u.to_json()).collect()),
+                    ),
+                ]),
+            ),
         ])
     }
 }
@@ -156,6 +229,17 @@ mod tests {
             transport: "local".to_string(),
             alive: true,
             rtt_ms: None,
+            engine_kv_tokens: None,
+        }
+    }
+
+    fn prefill_unit(i: u32, alive: bool) -> PrefillUnitGauge {
+        PrefillUnitGauge {
+            unit: format!("p{i}"),
+            transport: format!("prefill:{i}"),
+            alive,
+            rtt_ms: None,
+            dispatched: 3,
         }
     }
 
@@ -169,6 +253,7 @@ mod tests {
         let s = DecodePoolStats {
             policy: "round-robin".into(),
             units: vec![unit("i0d0", 1, 3.0), unit("i1d0", 1, 1.0)],
+            prefill: Vec::new(),
         };
         assert!((s.imbalance() - 1.5).abs() < 1e-12);
     }
@@ -178,6 +263,7 @@ mod tests {
         let s = DecodePoolStats {
             policy: "random".into(),
             units: vec![unit("i0d0", 4, 0.0), unit("i1d0", 0, 0.0)],
+            prefill: Vec::new(),
         };
         assert!((s.imbalance() - 2.0).abs() < 1e-12);
         assert_eq!(s.total_placed(), 4);
@@ -188,6 +274,7 @@ mod tests {
         let s = DecodePoolStats {
             policy: "load-aware".into(),
             units: vec![unit("i0d0", 2, 1.0)],
+            prefill: vec![prefill_unit(0, true)],
         };
         let j = s.to_json();
         assert_eq!(j.get("policy").and_then(|x| x.as_str()), Some("load-aware"));
@@ -198,6 +285,12 @@ mod tests {
         let u = &j.get("units").and_then(|x| x.as_arr()).unwrap()[0];
         assert_eq!(u.get("alive").and_then(|x| x.as_bool()), Some(true));
         assert_eq!(u.get("transport").and_then(|x| x.as_str()), Some("local"));
+        let p = j.get("prefill").unwrap();
+        assert_eq!(p.get("n_units").and_then(|x| x.as_usize()), Some(1));
+        assert_eq!(p.get("units_alive").and_then(|x| x.as_usize()), Some(1));
+        let pu = &p.get("units").and_then(|x| x.as_arr()).unwrap()[0];
+        assert_eq!(pu.get("transport").and_then(|x| x.as_str()), Some("prefill:0"));
+        assert_eq!(pu.get("dispatched").and_then(|x| x.as_usize()), Some(3));
     }
 
     #[test]
@@ -206,9 +299,11 @@ mod tests {
         dead.alive = false;
         dead.transport = "127.0.0.1:7501#0".into();
         dead.rtt_ms = Some(0.4);
+        dead.engine_kv_tokens = Some(120);
         let s = DecodePoolStats {
             policy: "load-aware".into(),
             units: vec![unit("i0d0", 2, 2.0), dead],
+            prefill: Vec::new(),
         };
         assert_eq!(s.units_alive(), 1);
         let j = s.to_json();
@@ -217,5 +312,22 @@ mod tests {
         let u = &j.get("units").and_then(|x| x.as_arr()).unwrap()[1];
         assert_eq!(u.get("alive").and_then(|x| x.as_bool()), Some(false));
         assert!(u.get("rtt_ms").and_then(|x| x.as_f64()).is_some());
+        assert_eq!(u.get("engine_kv_tokens").and_then(|x| x.as_usize()), Some(120));
+    }
+
+    #[test]
+    fn dead_prefill_instances_are_visible() {
+        let s = DecodePoolStats {
+            policy: "load-aware".into(),
+            units: vec![unit("i0d0", 2, 2.0)],
+            prefill: vec![prefill_unit(0, true), prefill_unit(1, false)],
+        };
+        assert_eq!(s.prefill_units_alive(), 1);
+        let j = s.to_json();
+        let p = j.get("prefill").unwrap();
+        assert_eq!(p.get("n_units").and_then(|x| x.as_usize()), Some(2));
+        assert_eq!(p.get("units_alive").and_then(|x| x.as_usize()), Some(1));
+        let pu = &p.get("units").and_then(|x| x.as_arr()).unwrap()[1];
+        assert_eq!(pu.get("alive").and_then(|x| x.as_bool()), Some(false));
     }
 }

@@ -71,6 +71,11 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
             None,
         )
         .opt(
+            "remote-prefill",
+            "comma-separated remote prefill shard addrs (sbs worker --prefill)",
+            None,
+        )
+        .opt(
             "kv-budget",
             "per-DP-unit KV-token admission budget (0 = slots only)",
             Some(crate::config::LIVE_KV_BUDGET_TOKENS_STR),
@@ -114,6 +119,10 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
         .value("remote-decode")
         .map(crate::transport::parse_shard_list)
         .unwrap_or_default();
+    let remote_prefill = args
+        .value("remote-prefill")
+        .map(crate::transport::parse_shard_list)
+        .unwrap_or_default();
     let cfg = RealClusterConfig {
         n_prefill: args.parse_or("prefill", 2u32).map_err(|e| anyhow!("{e}"))?,
         n_decode: args.parse_or("n-decode", 1u32).map_err(|e| anyhow!("{e}"))?,
@@ -131,6 +140,7 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
             ..Default::default()
         },
         remote_decode,
+        remote_prefill,
         kv_budget: args
             .parse_or("kv-budget", crate::config::LIVE_KV_BUDGET_TOKENS)
             .map_err(|e| anyhow!("{e}"))?,

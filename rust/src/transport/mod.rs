@@ -1,25 +1,31 @@
-//! The decode **transport subsystem**: how the scheduler thread reaches a
-//! decode DP unit, wherever it runs.
+//! The **transport subsystem**: how the scheduler thread reaches a
+//! prefill instance or a decode DP unit, wherever it runs.
 //!
 //! PR 2 made the dispatch core transport-agnostic; this module supplies
-//! the transports. A [`DecodeTransport`] is the scheduler's handle to one
-//! decode DP unit — placement commits go *down* through it, and
-//! token/terminal events come *back* through scheduler-side sinks — with
-//! two implementations:
+//! the transports for both planes of the P/D-separated cluster:
 //!
-//! * [`LocalUnit`] — the in-process channel transport: one decode engine
-//!   thread in the same process (`cluster::workers`), reached over an
-//!   `mpsc` channel. Always alive, no RTT.
-//! * [`remote::RemoteUnit`] — one DP unit of an out-of-process decode
-//!   shard (`sbs worker --decode`), reached over TCP speaking the
-//!   length-prefixed [`proto`] frame protocol, with per-shard liveness
-//!   tracking, RTT measurement and reconnect/eviction semantics.
+//! * [`DecodeTransport`] — the scheduler's handle to one decode DP unit.
+//!   Placement commits go *down* through it, token/terminal events come
+//!   *back* through scheduler-side [`ShardSinks`]. Implementations:
+//!   [`LocalUnit`] (in-process engine thread over an `mpsc` channel;
+//!   always alive, no RTT) and [`remote::RemoteUnit`] (one DP unit of an
+//!   out-of-process `sbs worker --decode` shard over TCP).
+//! * [`PrefillTransport`] — the scheduler's handle to one prefill
+//!   instance. Staggered-trigger dispatches go *down*; first tokens, the
+//!   streamed prompt-KV handoff and `EndForward` backlog feedback come
+//!   *back* through [`PrefillSinks`]. Implementations: [`LocalPrefill`]
+//!   (in-process worker thread) and [`remote::RemotePrefill`] (one
+//!   instance of an `sbs worker --prefill` shard; the KV handoff crosses
+//!   the wire as a chunked `KvSegment` stream committed by
+//!   `PrefillDone`).
 //!
-//! The scheduler drives a *mixed* pool — local and remote units behind
-//! the same `DispatchCore` and the same Algorithm 3 placement — so
-//! scaling out is a deployment decision, not a scheduling one. Every
-//! future multi-node feature (prefill shards, KV transfer) extends this
-//! subsystem rather than the scheduler.
+//! Both planes ride the same length-prefixed [`proto`] frame protocol
+//! with the same per-shard liveness tracking, RTT measurement and
+//! reconnect/eviction semantics. The scheduler drives *mixed* pools —
+//! local and remote units behind the same `DispatchCore`, the same
+//! staggered trigger and the same Algorithm 3 placement — so scaling out
+//! (or fully disaggregating P from D across machines) is a deployment
+//! decision, not a scheduling one.
 
 pub mod proto;
 pub mod remote;
@@ -29,8 +35,9 @@ use crate::metrics::RequestMetrics;
 use std::sync::mpsc::Sender;
 
 /// Parse a comma-separated shard address list (`a:p[,a:p...]`), the
-/// shared grammar of `sbs serve --remote-decode` and the example's
-/// `SBS_E2E_SHARDS` env knob. Empty segments are dropped.
+/// shared grammar of `sbs serve --remote-decode` / `--remote-prefill`
+/// and the example's `SBS_E2E_SHARDS` env knobs. Empty segments are
+/// dropped.
 pub fn parse_shard_list(s: &str) -> Vec<String> {
     s.split(',')
         .map(str::trim)
@@ -92,6 +99,12 @@ pub trait DecodeTransport: Send {
     /// Commit one placement. On failure the job is handed back so the
     /// caller can terminalize it (release the ledger, reject upstream).
     fn admit(&mut self, job: AdmitJob) -> Result<(), AdmitJob>;
+    /// Ask the unit's shard for its engine-truth occupancy gauges
+    /// (`StatsRequest`); the `StatsReply` comes back through
+    /// [`ShardSinks::on_stats`] as the cross-check against the
+    /// scheduler's own ledger. No-op for in-process units — the ledger
+    /// *is* their engine truth.
+    fn request_stats(&self) {}
     /// Ask the unit (and its shard, once per shard) to drain and stop.
     fn stop(&mut self);
     /// Release the unit without stopping its backing process: an
@@ -177,6 +190,143 @@ pub struct ShardSinks {
     /// The shard died with these sequences resident: release their
     /// ledger charges and reject them upstream.
     pub on_evicted: Box<dyn Fn(Vec<u64>) + Send>,
+    /// A `StatsReply` arrived: the shard's engine-truth per-unit gauges
+    /// (shard-local unit order), for divergence cross-checks against the
+    /// scheduler's ledger.
+    pub on_stats: Box<dyn Fn(Vec<proto::UnitLoad>) + Send>,
+}
+
+/// One prefill job being dispatched to a prefill instance: the prompt
+/// plus the scheduler-clock metrics that stay scheduler-side (remote
+/// shards never see wall-clock instants; the scheduler stamps
+/// `t_first_token` when the handoff lands, so all timestamps share one
+/// clock).
+pub struct PrefillWork {
+    /// Request id.
+    pub id: u64,
+    /// Prompt token ids.
+    pub prompt: Vec<i32>,
+    /// Max tokens to generate (first token included).
+    pub max_new: u32,
+    /// Lifecycle metrics, scheduler clock (`t_dispatch` stamped by the
+    /// scheduler before dispatch).
+    pub metrics: RequestMetrics,
+}
+
+/// Message consumed by one prefill engine runner (local worker thread or
+/// shard-side instance thread). Mirrors [`UnitMsg`] for the prefill
+/// plane.
+pub enum PrefillMsg {
+    /// Prefill this batch, in order.
+    Work(Vec<PrefillWork>),
+    /// Drop every queued job *silently* — no terminal events. Sent by a
+    /// shard when a new scheduler connection supersedes the old one's
+    /// state (which that scheduler already evicted); acknowledged on
+    /// `ack` once applied, so the shard can fence the new connection
+    /// behind it. One engine prefill bounds how long the runner takes to
+    /// observe it.
+    Abort {
+        /// Signalled (best-effort) after the abort has been applied.
+        ack: Sender<()>,
+    },
+    /// Finish queued jobs, then exit.
+    Stop,
+}
+
+/// The scheduler's handle to one prefill instance — the prefill-plane
+/// sibling of [`DecodeTransport`]. `dispatch` carries one staggered
+/// batch; liveness and RTT feed the readiness gates and the per-shard
+/// gauges.
+pub trait PrefillTransport: Send {
+    /// Stable display label (`prefill:<i>` or `<addr>#p<unit>`).
+    fn label(&self) -> String;
+    /// Whether the instance can currently receive dispatches.
+    fn alive(&self) -> bool;
+    /// Last measured round-trip time, if this transport crosses a wire.
+    fn rtt_ms(&self) -> Option<f64>;
+    /// Ship one dispatch batch. On failure the batch is handed back so
+    /// the caller can terminalize every job in it (reject upstream).
+    fn dispatch(&mut self, work: Vec<PrefillWork>) -> Result<(), Vec<PrefillWork>>;
+    /// Ask the instance (and its shard, once per shard) to drain and
+    /// stop.
+    fn stop(&mut self);
+    /// Release the instance without stopping its backing process (see
+    /// [`DecodeTransport::detach`]).
+    fn detach(&mut self) {
+        self.stop();
+    }
+}
+
+/// In-process prefill transport: one worker thread behind an `mpsc`
+/// channel. Alive as long as the thread holds its receiver.
+pub struct LocalPrefill {
+    label: String,
+    tx: Sender<PrefillMsg>,
+    dead: bool,
+}
+
+impl LocalPrefill {
+    /// Wrap a prefill worker thread's channel as a transport.
+    pub fn new(index: u32, tx: Sender<PrefillMsg>) -> Self {
+        LocalPrefill {
+            label: format!("prefill:{index}"),
+            tx,
+            dead: false,
+        }
+    }
+}
+
+impl PrefillTransport for LocalPrefill {
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn alive(&self) -> bool {
+        !self.dead
+    }
+
+    fn rtt_ms(&self) -> Option<f64> {
+        None
+    }
+
+    fn dispatch(&mut self, work: Vec<PrefillWork>) -> Result<(), Vec<PrefillWork>> {
+        match self.tx.send(PrefillMsg::Work(work)) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                // The worker thread is gone; stop dispatching onto it.
+                self.dead = true;
+                match e.0 {
+                    PrefillMsg::Work(w) => Err(w),
+                    _ => unreachable!("send payload is the batch we passed"),
+                }
+            }
+        }
+    }
+
+    fn stop(&mut self) {
+        let _ = self.tx.send(PrefillMsg::Stop);
+    }
+}
+
+/// Scheduler-side event sinks for one remote *prefill* shard (consumed
+/// by the shard's single reader thread). The cluster fabric builds these
+/// over its private router/scheduler channels; the transport layer stays
+/// ignorant of those types.
+pub struct PrefillSinks {
+    /// A prefill finished and its KV handoff is fully assembled:
+    /// `(id, outcome, max_new, metrics)` — the metrics the scheduler
+    /// attached at dispatch, handed back for first-token stamping on the
+    /// scheduler clock.
+    pub on_prefilled: Box<dyn Fn(u64, Box<PrefillOutcome>, u32, RequestMetrics) + Send>,
+    /// Terminal prefill failure reported by the shard.
+    pub on_failed: Box<dyn Fn(u64) + Send>,
+    /// `EndForward` crossed the wire: `(shard-local instance, measured
+    /// pass seconds, remaining backlog tokens)` — the staggered
+    /// trigger's readiness + capacity feedback.
+    pub on_end_forward: Box<dyn Fn(u32, f64, Option<u32>) + Send>,
+    /// The shard died with these jobs queued or mid-handoff: reject them
+    /// upstream so nothing leaks.
+    pub on_evicted: Box<dyn Fn(Vec<u64>) + Send>,
 }
 
 #[cfg(test)]
@@ -225,5 +375,45 @@ mod tests {
         let back = t.admit(job(5)).unwrap_err();
         assert_eq!(back.id, 5);
         assert!(!t.alive(), "failed admit marks the unit dead");
+    }
+
+    fn prefill_work(id: u64) -> PrefillWork {
+        PrefillWork {
+            id,
+            prompt: vec![7; 12],
+            max_new: 4,
+            metrics: RequestMetrics::arrive(0.0, 12),
+        }
+    }
+
+    #[test]
+    fn local_prefill_delivers_and_reports_shape() {
+        let (tx, rx) = channel();
+        let mut t = LocalPrefill::new(1, tx);
+        assert_eq!(t.label(), "prefill:1");
+        assert!(t.alive());
+        assert!(t.rtt_ms().is_none());
+        t.dispatch(vec![prefill_work(3), prefill_work(4)])
+            .map_err(|_| ())
+            .unwrap();
+        match rx.recv().unwrap() {
+            PrefillMsg::Work(w) => {
+                assert_eq!(w.iter().map(|j| j.id).collect::<Vec<_>>(), vec![3, 4]);
+            }
+            _ => panic!("expected work"),
+        }
+        t.stop();
+        assert!(matches!(rx.recv().unwrap(), PrefillMsg::Stop));
+    }
+
+    #[test]
+    fn local_prefill_dead_receiver_hands_batch_back() {
+        let (tx, rx) = channel();
+        drop(rx);
+        let mut t = LocalPrefill::new(0, tx);
+        let back = t.dispatch(vec![prefill_work(9)]).unwrap_err();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].id, 9);
+        assert!(!t.alive(), "failed dispatch marks the instance dead");
     }
 }

@@ -1,20 +1,24 @@
-//! Length-prefixed binary wire protocol for remote decode shards.
+//! Length-prefixed binary wire protocol for remote shards (decode *and*
+//! prefill).
 //!
 //! One frame on the wire is `[u32 LE payload length][payload]`, where the
 //! payload is `[u8 tag][fields...]` with all integers little-endian and
 //! `f64` as LE bit patterns. The frame set mirrors the dispatch-core
-//! message vocabulary so every future multi-node feature (prefill
-//! sharding, KV transfer) rides on the same protocol:
+//! message vocabulary, so both shard roles ride one protocol:
 //!
 //! | direction | frame | dispatch-core meaning |
 //! |---|---|---|
 //! | sched → shard | [`Frame::Hello`] | connection handshake |
-//! | shard → sched | [`Frame::HelloAck`] | shard shape (units, slots) |
+//! | shard → sched | [`Frame::HelloAck`] | shard role + shape (units, slots) |
 //! | sched → shard | [`Frame::Admit`] | decode join / placement commit |
 //! | shard → sched | [`Frame::Token`] | one generated token |
 //! | shard → sched | [`Frame::Done`] | `DecodeDone` — ledger release (success) |
 //! | shard → sched | [`Frame::Rejected`] | `DecodeDone` — ledger release (failure) |
-//! | shard → sched | [`Frame::EndForward`] | engine backlog feedback (future prefill shards) |
+//! | sched → shard | [`Frame::PrefillDispatch`] | prefill batch dispatch (SBS trigger output) |
+//! | shard → sched | [`Frame::KvSegment`] | one chunk of prompt KV (prefill→decode handoff) |
+//! | shard → sched | [`Frame::PrefillDone`] | prefill finished — commits the KV handoff |
+//! | shard → sched | [`Frame::PrefillFailed`] | prefill error — reject upstream |
+//! | shard → sched | [`Frame::EndForward`] | engine backlog feedback into the staggered trigger |
 //! | both | [`Frame::Ping`] / [`Frame::Pong`] | liveness + RTT measurement |
 //! | sched → shard | [`Frame::StatsRequest`] | gauge snapshot request |
 //! | shard → sched | [`Frame::StatsReply`] | per-unit occupancy gauges |
@@ -24,18 +28,103 @@
 //! Reads are driven through the stateful [`FrameReader`], which preserves
 //! partial progress across socket read timeouts — a timeout mid-frame
 //! must never desynchronize the stream.
+//!
+//! ## Hot-path encoding
+//!
+//! The KV-bearing frames (`Admit`, `KvSegment`) are the only ones whose
+//! payloads reach megabytes, and building a [`Frame`] for them would copy
+//! the caches into the enum before serialization copies them again.
+//! Senders on those paths use the borrow-based
+//! [`admit_frame_into`] / [`kv_segment_frame_into`] encoders instead:
+//! the caches are serialized straight from the engine's buffers into one
+//! reusable length-prefixed wire buffer — no intermediate `Vec`s, no
+//! steady-state allocation.
 
 use std::io::{ErrorKind, Read, Write};
 use std::time::{Duration, Instant};
 
 /// Protocol version carried in `Hello`/`HelloAck`; bumped on any frame
 /// layout change. Mismatched peers refuse the handshake.
-pub const PROTO_VERSION: u32 = 1;
+/// v2: `HelloAck` carries the shard role; prefill frames added.
+pub const PROTO_VERSION: u32 = 2;
 
 /// Upper bound on one frame's payload (guards against a corrupt length
 /// prefix allocating unbounded memory). Sized for an `Admit` carrying
 /// full-context KV caches of a small model.
 pub const MAX_FRAME: u32 = 256 * 1024 * 1024;
+
+/// Which plane a shard serves, advertised in its `HelloAck`. A scheduler
+/// connecting for one role refuses a shard of the other — a prefill pool
+/// must never be built over decode units or vice versa.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardRole {
+    /// Decode DP units (`sbs worker --decode`).
+    Decode,
+    /// Prefill instances (`sbs worker --prefill`).
+    Prefill,
+}
+
+impl ShardRole {
+    fn to_wire(self) -> u8 {
+        match self {
+            ShardRole::Decode => 0,
+            ShardRole::Prefill => 1,
+        }
+    }
+
+    fn from_wire(x: u8) -> Result<Self, ProtoError> {
+        match x {
+            0 => Ok(ShardRole::Decode),
+            1 => Ok(ShardRole::Prefill),
+            _ => Err(ProtoError::BadValue("shard role")),
+        }
+    }
+
+    /// Human-readable role name (log/error messages).
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardRole::Decode => "decode",
+            ShardRole::Prefill => "prefill",
+        }
+    }
+}
+
+/// Which half of a KV cache a [`Frame::KvSegment`] carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvHalf {
+    /// Key cache.
+    K,
+    /// Value cache.
+    V,
+}
+
+impl KvHalf {
+    fn to_wire(self) -> u8 {
+        match self {
+            KvHalf::K => 0,
+            KvHalf::V => 1,
+        }
+    }
+
+    fn from_wire(x: u8) -> Result<Self, ProtoError> {
+        match x {
+            0 => Ok(KvHalf::K),
+            1 => Ok(KvHalf::V),
+            _ => Err(ProtoError::BadValue("kv half")),
+        }
+    }
+}
+
+/// One job inside a [`Frame::PrefillDispatch`] batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefillJobWire {
+    /// Request id (scheduler-scoped; echoed in every reply).
+    pub id: u64,
+    /// Output tokens to generate after the first.
+    pub max_new: u32,
+    /// Prompt token ids.
+    pub prompt: Vec<i32>,
+}
 
 /// Per-unit occupancy snapshot carried by [`Frame::StatsReply`].
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -56,13 +145,17 @@ pub enum Frame {
         /// Sender's [`PROTO_VERSION`].
         version: u32,
     },
-    /// Shard handshake reply: the shape the scheduler adds to its pool.
+    /// Shard handshake reply: the role and shape the scheduler adds to
+    /// its pool.
     HelloAck {
         /// Shard's [`PROTO_VERSION`].
         version: u32,
-        /// Decode DP units served by this shard.
+        /// Plane this shard serves.
+        role: ShardRole,
+        /// DP units (decode) / instances (prefill) served by this shard.
         units: u32,
-        /// Decode slots per unit (the shard's batch size).
+        /// Decode slots per unit (the shard's batch size); 1 for prefill
+        /// shards, whose instances are gated single-pass engines.
         slots: u32,
     },
     /// Placement commit: admit a prefilled sequence onto `unit`.
@@ -107,8 +200,53 @@ pub enum Frame {
         /// Request id.
         id: u64,
     },
-    /// Engine backlog feedback (reserved for future prefill shards; the
-    /// decode path never sends it).
+    /// Dispatch a batch of prefill jobs onto one prefill instance — the
+    /// staggered trigger's output crossing the wire.
+    PrefillDispatch {
+        /// Target instance, shard-local index in `0..units`.
+        unit: u32,
+        /// The batch (PBAA assignments for this instance).
+        jobs: Vec<PrefillJobWire>,
+    },
+    /// One chunk of a finished prefill's prompt KV, streamed ahead of the
+    /// committing [`Frame::PrefillDone`]. Chunking keeps a long prompt's
+    /// caches from monopolizing the connection: other units' tokens and
+    /// terminals interleave between segments.
+    KvSegment {
+        /// Request id the segment belongs to.
+        id: u64,
+        /// K or V cache.
+        half: KvHalf,
+        /// Element offset of this chunk within the flattened cache.
+        offset: u32,
+        /// Total elements of this cache half (receiver pre-sizes once).
+        total: u32,
+        /// The chunk's elements.
+        data: Vec<f32>,
+    },
+    /// Prefill finished: commits the KV handoff assembled from the
+    /// preceding [`Frame::KvSegment`]s and hands the first token back.
+    PrefillDone {
+        /// Request id.
+        id: u64,
+        /// First generated token.
+        first_token: i32,
+        /// Prompt length — valid KV rows.
+        kv_len: u32,
+        /// Engine execution time of the prefill passes, seconds
+        /// (shard-clock duration, safe to ship: only wall-clock *instants*
+        /// stay scheduler-side).
+        exec_time: f64,
+    },
+    /// Prefill failed terminally; the scheduler rejects the job upstream.
+    PrefillFailed {
+        /// Request id.
+        id: u64,
+    },
+    /// Engine backlog feedback: a prefill instance finished a pass and
+    /// reports what is still queued behind it (the Fig. 5 `EndForward`
+    /// payload, feeding the staggered trigger's readiness + capacity
+    /// model). The decode path never sends it.
     EndForward {
         /// Shard-local instance index.
         instance: u32,
@@ -156,6 +294,8 @@ pub enum ProtoError {
     Oversize(u32),
     /// Trailing bytes after a complete frame body.
     TrailingBytes,
+    /// A field carried a value outside its domain (named for the error).
+    BadValue(&'static str),
     /// The peer closed the stream.
     Closed,
     /// Underlying transport error.
@@ -169,6 +309,7 @@ impl std::fmt::Display for ProtoError {
             ProtoError::BadTag(t) => write!(f, "unknown frame tag {t}"),
             ProtoError::Oversize(n) => write!(f, "frame length {n} exceeds MAX_FRAME"),
             ProtoError::TrailingBytes => write!(f, "trailing bytes after frame body"),
+            ProtoError::BadValue(what) => write!(f, "out-of-domain {what}"),
             ProtoError::Closed => write!(f, "connection closed"),
             ProtoError::Io(e) => write!(f, "transport error: {e}"),
         }
@@ -190,6 +331,10 @@ const TAG_STATS_REQUEST: u8 = 10;
 const TAG_STATS_REPLY: u8 = 11;
 const TAG_STOP: u8 = 12;
 const TAG_BYE: u8 = 13;
+const TAG_PREFILL_DISPATCH: u8 = 14;
+const TAG_KV_SEGMENT: u8 = 15;
+const TAG_PREFILL_DONE: u8 = 16;
+const TAG_PREFILL_FAILED: u8 = 17;
 
 struct Enc(Vec<u8>);
 
@@ -312,6 +457,73 @@ pub fn admit_payload_bound(k_len: usize, v_len: usize) -> u64 {
     64 + 4 * (k_len as u64 + v_len as u64)
 }
 
+/// Encode one frame body into `buf` behind a 4-byte length prefix that is
+/// backpatched once the body is complete. `body_size` pre-reserves so a
+/// steady-state caller (same-shape frames into one reused buffer) never
+/// reallocates.
+fn frame_scaffold(buf: &mut Vec<u8>, body_size: usize, body: impl FnOnce(&mut Enc)) {
+    buf.clear();
+    buf.reserve(4 + body_size);
+    let mut e = Enc(std::mem::take(buf));
+    e.0.extend_from_slice(&[0u8; 4]);
+    body(&mut e);
+    *buf = e.0;
+    let len = (buf.len() - 4) as u32;
+    buf[..4].copy_from_slice(&len.to_le_bytes());
+}
+
+/// Serialize one length-prefixed [`Frame::Admit`] into `buf` (cleared
+/// first), borrowing the KV caches straight from the engine's buffers.
+/// This is the placement-commit hot path: the enum-based
+/// `write_frame(&Frame::Admit { .. })` route would copy each cache three
+/// times (into the frame, the payload, the prefixed buffer); this
+/// serializes them once, into a buffer the caller reuses across admits —
+/// zero intermediate `Vec`s, zero steady-state allocation.
+#[allow(clippy::too_many_arguments)]
+pub fn admit_frame_into(
+    buf: &mut Vec<u8>,
+    unit: u32,
+    id: u64,
+    first_token: i32,
+    kv_len: u32,
+    max_new: u32,
+    k: &[f32],
+    v: &[f32],
+) {
+    frame_scaffold(buf, 33 + 4 * (k.len() + v.len()), |e| {
+        e.u8(TAG_ADMIT);
+        e.u32(unit);
+        e.u64(id);
+        e.i32(first_token);
+        e.u32(kv_len);
+        e.u32(max_new);
+        e.f32s(k);
+        e.f32s(v);
+    });
+}
+
+/// Serialize one length-prefixed [`Frame::KvSegment`] into `buf`
+/// (cleared first), borrowing the chunk's elements from the prefill
+/// outcome — the KV-handoff hot path, same single-buffer discipline as
+/// [`admit_frame_into`].
+pub fn kv_segment_frame_into(
+    buf: &mut Vec<u8>,
+    id: u64,
+    half: KvHalf,
+    offset: u32,
+    total: u32,
+    data: &[f32],
+) {
+    frame_scaffold(buf, 22 + 4 * data.len(), |e| {
+        e.u8(TAG_KV_SEGMENT);
+        e.u64(id);
+        e.u8(half.to_wire());
+        e.u32(offset);
+        e.u32(total);
+        e.f32s(data);
+    });
+}
+
 /// Serialize one frame payload (tag + fields, *without* the length
 /// prefix).
 pub fn encode(f: &Frame) -> Vec<u8> {
@@ -323,11 +535,13 @@ pub fn encode(f: &Frame) -> Vec<u8> {
         }
         Frame::HelloAck {
             version,
+            role,
             units,
             slots,
         } => {
             e.u8(TAG_HELLO_ACK);
             e.u32(*version);
+            e.u8(role.to_wire());
             e.u32(*units);
             e.u32(*slots);
         }
@@ -348,6 +562,46 @@ pub fn encode(f: &Frame) -> Vec<u8> {
             e.u32(*max_new);
             e.f32s(k);
             e.f32s(v);
+        }
+        Frame::PrefillDispatch { unit, jobs } => {
+            e.u8(TAG_PREFILL_DISPATCH);
+            e.u32(*unit);
+            e.u32(jobs.len() as u32);
+            for j in jobs {
+                e.u64(j.id);
+                e.u32(j.max_new);
+                e.i32s(&j.prompt);
+            }
+        }
+        Frame::KvSegment {
+            id,
+            half,
+            offset,
+            total,
+            data,
+        } => {
+            e.u8(TAG_KV_SEGMENT);
+            e.u64(*id);
+            e.u8(half.to_wire());
+            e.u32(*offset);
+            e.u32(*total);
+            e.f32s(data);
+        }
+        Frame::PrefillDone {
+            id,
+            first_token,
+            kv_len,
+            exec_time,
+        } => {
+            e.u8(TAG_PREFILL_DONE);
+            e.u64(*id);
+            e.i32(*first_token);
+            e.u32(*kv_len);
+            e.f64(*exec_time);
+        }
+        Frame::PrefillFailed { id } => {
+            e.u8(TAG_PREFILL_FAILED);
+            e.u64(*id);
         }
         Frame::Token { id, index, token } => {
             e.u8(TAG_TOKEN);
@@ -414,6 +668,7 @@ pub fn decode(buf: &[u8]) -> Result<Frame, ProtoError> {
         TAG_HELLO => Frame::Hello { version: d.u32()? },
         TAG_HELLO_ACK => Frame::HelloAck {
             version: d.u32()?,
+            role: ShardRole::from_wire(d.u8()?)?,
             units: d.u32()?,
             slots: d.u32()?,
         },
@@ -468,6 +723,35 @@ pub fn decode(buf: &[u8]) -> Result<Frame, ProtoError> {
         }
         TAG_STOP => Frame::Stop,
         TAG_BYE => Frame::Bye,
+        TAG_PREFILL_DISPATCH => {
+            let unit = d.u32()?;
+            let n = d.u32()? as usize;
+            // Every job is at least id + max_new + prompt header.
+            d.check_elems(n, 16)?;
+            let mut jobs = Vec::with_capacity(n);
+            for _ in 0..n {
+                jobs.push(PrefillJobWire {
+                    id: d.u64()?,
+                    max_new: d.u32()?,
+                    prompt: d.i32s()?,
+                });
+            }
+            Frame::PrefillDispatch { unit, jobs }
+        }
+        TAG_KV_SEGMENT => Frame::KvSegment {
+            id: d.u64()?,
+            half: KvHalf::from_wire(d.u8()?)?,
+            offset: d.u32()?,
+            total: d.u32()?,
+            data: d.f32s()?,
+        },
+        TAG_PREFILL_DONE => Frame::PrefillDone {
+            id: d.u64()?,
+            first_token: d.i32()?,
+            kv_len: d.u32()?,
+            exec_time: d.f64()?,
+        },
+        TAG_PREFILL_FAILED => Frame::PrefillFailed { id: d.u64()? },
         t => return Err(ProtoError::BadTag(t)),
     };
     d.finish()?;
@@ -619,12 +903,17 @@ mod tests {
     use crate::util::Rng;
 
     fn arbitrary_frame(rng: &mut Rng) -> Frame {
-        match rng.below(13) {
+        match rng.below(17) {
             0 => Frame::Hello {
                 version: rng.next_u64() as u32,
             },
             1 => Frame::HelloAck {
                 version: rng.next_u64() as u32,
+                role: if rng.chance(0.5) {
+                    ShardRole::Decode
+                } else {
+                    ShardRole::Prefill
+                },
                 units: rng.below(64) as u32,
                 slots: rng.below(256) as u32,
             },
@@ -671,7 +960,31 @@ mod tests {
                     .collect(),
             },
             11 => Frame::Stop,
-            _ => Frame::Bye,
+            12 => Frame::Bye,
+            13 => Frame::PrefillDispatch {
+                unit: rng.below(8) as u32,
+                jobs: (0..rng.below(6))
+                    .map(|_| PrefillJobWire {
+                        id: rng.next_u64(),
+                        max_new: rng.below(512) as u32,
+                        prompt: (0..1 + rng.below(48)).map(|_| rng.next_u64() as i32).collect(),
+                    })
+                    .collect(),
+            },
+            14 => Frame::KvSegment {
+                id: rng.next_u64(),
+                half: if rng.chance(0.5) { KvHalf::K } else { KvHalf::V },
+                offset: rng.below(1 << 20) as u32,
+                total: rng.below(1 << 20) as u32,
+                data: (0..rng.below(64)).map(|_| rng.f64() as f32).collect(),
+            },
+            15 => Frame::PrefillDone {
+                id: rng.next_u64(),
+                first_token: rng.next_u64() as i32,
+                kv_len: rng.below(4096) as u32,
+                exec_time: rng.f64() * 5.0,
+            },
+            _ => Frame::PrefillFailed { id: rng.next_u64() },
         }
     }
 
@@ -719,6 +1032,82 @@ mod tests {
     #[test]
     fn unknown_tag_rejected() {
         assert!(matches!(decode(&[200]), Err(ProtoError::BadTag(200))));
+    }
+
+    #[test]
+    fn out_of_domain_role_byte_rejected() {
+        let mut e = Enc(Vec::new());
+        e.u8(TAG_HELLO_ACK);
+        e.u32(PROTO_VERSION);
+        e.u8(9); // role: neither decode nor prefill
+        e.u32(1);
+        e.u32(1);
+        assert!(matches!(decode(&e.0), Err(ProtoError::BadValue("shard role"))));
+    }
+
+    #[test]
+    fn borrow_encoders_match_the_enum_encoding() {
+        let k: Vec<f32> = (0..70).map(|i| i as f32 * 0.5).collect();
+        let v: Vec<f32> = (0..70).map(|i| i as f32 * -0.25).collect();
+        let mut wire = Vec::new();
+        write_frame(
+            &mut wire,
+            &Frame::Admit {
+                unit: 3,
+                id: 99,
+                first_token: 7,
+                kv_len: 5,
+                max_new: 11,
+                k: k.clone(),
+                v: v.clone(),
+            },
+        )
+        .unwrap();
+        let mut buf = Vec::new();
+        admit_frame_into(&mut buf, 3, 99, 7, 5, 11, &k, &v);
+        assert_eq!(buf, wire, "admit borrow encoder must be byte-identical");
+
+        let mut wire = Vec::new();
+        write_frame(
+            &mut wire,
+            &Frame::KvSegment {
+                id: 99,
+                half: KvHalf::V,
+                offset: 128,
+                total: 4096,
+                data: k.clone(),
+            },
+        )
+        .unwrap();
+        let mut buf = Vec::new();
+        kv_segment_frame_into(&mut buf, 99, KvHalf::V, 128, 4096, &k);
+        assert_eq!(buf, wire, "kv-segment borrow encoder must be byte-identical");
+    }
+
+    #[test]
+    fn borrow_encoders_reuse_the_buffer_without_reallocating() {
+        // The zero-intermediate-allocation property of the hot path:
+        // same-shape frames into one reused buffer must not touch the
+        // allocator — heap pointer and capacity stay fixed after the
+        // first encode (clear + reserve only, never a fresh Vec).
+        let k = vec![1.0f32; 4096];
+        let v = vec![2.0f32; 4096];
+        let mut buf = Vec::new();
+        admit_frame_into(&mut buf, 0, 1, 0, 4, 4, &k, &v);
+        let (ptr, cap) = (buf.as_ptr(), buf.capacity());
+        for id in 2..32u64 {
+            admit_frame_into(&mut buf, 0, id, 0, 4, 4, &k, &v);
+            assert_eq!(buf.as_ptr(), ptr, "admit encode reallocated");
+            assert_eq!(buf.capacity(), cap, "admit encode grew the buffer");
+        }
+        let mut buf = Vec::new();
+        kv_segment_frame_into(&mut buf, 1, KvHalf::K, 0, 8192, &k);
+        let (ptr, cap) = (buf.as_ptr(), buf.capacity());
+        for off in 1..32u32 {
+            kv_segment_frame_into(&mut buf, 1, KvHalf::K, off, 8192, &k);
+            assert_eq!(buf.as_ptr(), ptr, "kv-segment encode reallocated");
+            assert_eq!(buf.capacity(), cap, "kv-segment encode grew the buffer");
+        }
     }
 
     /// A reader that delivers one byte per call, interleaving timeouts —

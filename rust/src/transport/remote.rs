@@ -1,39 +1,66 @@
-//! TCP client for a remote decode shard (`sbs worker --decode`).
+//! TCP clients for remote shards: decode (`sbs worker --decode`) and
+//! prefill (`sbs worker --prefill`).
 //!
-//! One shard connection ([`connect_shard`]) serves every DP unit the
-//! shard advertises in its `HelloAck`; the scheduler holds one
-//! [`RemoteUnit`] transport per unit, all sharing the connection.
+//! One shard connection serves every unit the shard advertises in its
+//! `HelloAck`; the scheduler holds one transport per unit
+//! ([`RemoteUnit`] / [`RemotePrefill`]), all sharing the connection.
+//!
+//! ## Locking discipline
+//!
+//! A shard's state is split into two independent lock domains so the
+//! send path can never stall the event path:
+//!
+//! * **pending lock** — the table of in-flight request ids (decode:
+//!   admitted sequences; prefill: dispatched jobs plus their partially
+//!   assembled KV). Token/terminal delivery and eviction take only this
+//!   lock.
+//! * **writer lock** — the connection's write half. Frames are encoded
+//!   *outside* both locks (the KV-bearing hot paths borrow-serialize
+//!   into a per-transport reused buffer) and the blocking `write_all`
+//!   holds only the writer lock.
+//!
+//! A slow or blocked socket write therefore delays other *writers*, but
+//! never Token/Done delivery from the same shard (the regression the
+//! old single-io-mutex design had — asserted by
+//! `blocked_admit_write_does_not_delay_token_delivery`). The reader's
+//! liveness pings use `try_lock` and skip when a write is in flight: an
+//! in-progress frame is itself keeping the shard's inbound-byte silence
+//! guard fed.
 //!
 //! ## Failure semantics
 //!
 //! A dedicated reader thread owns the receive side. When the connection
-//! dies (EOF, reset, transport error) the reader atomically: marks the
-//! shard dead (placements stop immediately — `alive()` gates
-//! admissibility), drains the pending-sequence table, and delivers the
-//! resident request ids through [`ShardSinks::on_evicted`] so the
-//! scheduler releases their ledger charges and rejects them upstream —
-//! *nothing leaks*. It then retries the connect/handshake loop with
-//! backoff until it succeeds (the shard aborts any stale state on a new
-//! handshake, so a reconnect starts clean) or the cluster stops.
+//! dies (EOF, reset, transport error) the reader: marks the shard dead
+//! and closes the write half (placements/dispatches stop immediately —
+//! `alive()` gates admissibility, and an in-flight registration that
+//! races the transition fails its write and unwinds itself), *then*
+//! drains the pending table and delivers the resident ids through the
+//! sinks' `on_evicted` so the scheduler releases their ledger charges
+//! and rejects them upstream — nothing leaks. It then retries the
+//! connect/handshake loop with backoff until it succeeds (the shard
+//! aborts any stale state on a new handshake, so a reconnect starts
+//! clean) or the cluster stops.
 //!
 //! ## Liveness and RTT
 //!
 //! The reader heartbeats: a `Ping` every ping interval (busy or idle),
 //! with the `Pong` round trip published through the transport's
-//! `rtt_ms` and surfaced in the decode-pool gauges (`STATS`). Silence —
-//! no inbound frame for `dead_after`, pings unanswered — declares the
-//! shard dead even without an EOF/RST (black-holed link), triggering
-//! the same evict-and-reconnect path. The steady ping cadence is also
-//! what the shard's own symmetric silence guard keys off.
+//! `rtt_ms` and surfaced in the pool gauges (`STATS`). Silence — no
+//! inbound byte for `dead_after`, pings unanswered — declares the shard
+//! dead even without an EOF/RST (black-holed link), triggering the same
+//! evict-and-reconnect path. The steady ping cadence is also what the
+//! shard's own symmetric silence guard keys off.
 
-use super::proto::{self, Frame, FrameReader, PROTO_VERSION, ProtoError};
-use super::{AdmitJob, DecodeTransport, ShardSinks};
+use super::proto::{self, Frame, FrameReader, KvHalf, ProtoError, ShardRole, PROTO_VERSION};
+use super::{AdmitJob, DecodeTransport, PrefillSinks, PrefillTransport, PrefillWork, ShardSinks};
+use crate::engine::PrefillOutcome;
 use crate::metrics::RequestMetrics;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
+use std::io::Write;
 use std::net::{Shutdown, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, TryLockError};
 use std::time::{Duration, Instant};
 
 /// Tunables for one shard connection.
@@ -41,7 +68,8 @@ use std::time::{Duration, Instant};
 pub struct RemoteShardConfig {
     /// Shard address (`host:port`).
     pub addr: String,
-    /// Initial connect + handshake budget (startup fails fast past it).
+    /// Initial connect + handshake budget (startup fails fast past it);
+    /// also the socket write timeout bounding a blocked writer.
     pub connect_timeout: Duration,
     /// Socket read timeout — the reader's idle-tick cadence.
     pub read_tick: Duration,
@@ -70,19 +98,13 @@ impl RemoteShardConfig {
     }
 }
 
-/// Send side + pending table, guarded together so admit/evict/complete
-/// transitions are atomic (an admit can never slip a sequence into a
-/// shard that was just declared dead without being evicted).
-struct ShardIo {
-    conn: Option<TcpStream>,
-    /// Sequences admitted and not yet terminal: id → scheduler metrics.
-    pending: HashMap<u64, RequestMetrics>,
-}
-
-/// State shared by the per-unit transports and the reader thread.
-pub struct ShardHandle {
+/// Connection state shared by both shard roles: the write half, the
+/// liveness/RTT gauges and the reconnect identity (role + shape).
+struct ShardCore {
     cfg: RemoteShardConfig,
-    io: Mutex<ShardIo>,
+    /// The connection's write half. Held only around `write_all` — never
+    /// while delivering events or touching the pending table.
+    writer: Mutex<Option<TcpStream>>,
     alive: AtomicBool,
     /// Last measured RTT, microseconds; 0 = not yet measured.
     rtt_us: AtomicU64,
@@ -90,36 +112,160 @@ pub struct ShardHandle {
     /// Epoch for ping timestamps.
     epoch: Instant,
     ping_nonce: AtomicU64,
-    /// Shape advertised at first handshake; the scheduler's pool is
-    /// sized to it, so a reconnecting shard must match it exactly.
+    /// Last `StatsRequest` send instant (epoch µs): sibling units share
+    /// one connection, so per-shard throttling keeps a pool-wide stats
+    /// sweep from issuing one request per unit.
+    last_stats_req_us: AtomicU64,
+    /// Role + shape advertised at first handshake; the scheduler's pool
+    /// is sized to it, so a reconnecting shard must match it exactly.
+    role: ShardRole,
     units: u32,
     slots: u32,
 }
 
-impl ShardHandle {
+impl ShardCore {
+    fn new(cfg: RemoteShardConfig, conn: TcpStream, role: ShardRole, units: u32, slots: u32) -> Self {
+        ShardCore {
+            cfg,
+            writer: Mutex::new(Some(conn)),
+            alive: AtomicBool::new(true),
+            rtt_us: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            epoch: Instant::now(),
+            ping_nonce: AtomicU64::new(1),
+            last_stats_req_us: AtomicU64::new(0),
+            role,
+            units,
+            slots,
+        }
+    }
+
+    /// Throttled engine-truth gauge poll: at most one `StatsRequest` per
+    /// shard per second, no matter how many sibling units ask.
+    fn request_stats(&self) {
+        const MIN_GAP_US: u64 = 1_000_000;
+        let now = self.now_us();
+        let last = self.last_stats_req_us.load(Ordering::Relaxed);
+        if now.saturating_sub(last) < MIN_GAP_US {
+            return;
+        }
+        if self
+            .last_stats_req_us
+            .compare_exchange(last, now, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            let _ = self.try_send_frame(&Frame::StatsRequest);
+        }
+    }
+
     fn now_us(&self) -> u64 {
         self.epoch.elapsed().as_micros() as u64
     }
 
-    /// Serialize one frame onto the connection. On failure the socket is
-    /// shut down so the reader notices promptly and runs eviction.
-    fn send(&self, io: &mut ShardIo, frame: &Frame) -> std::io::Result<()> {
-        let Some(conn) = io.conn.as_mut() else {
+    fn on_pong(&self, t_us: u64) {
+        let rtt = self.now_us().saturating_sub(t_us).max(1);
+        self.rtt_us.store(rtt, Ordering::Relaxed);
+    }
+
+    fn rtt_ms(&self) -> Option<f64> {
+        match self.rtt_us.load(Ordering::Relaxed) {
+            0 => None,
+            us => Some(us as f64 / 1e3),
+        }
+    }
+
+    /// Write pre-encoded wire bytes under an already-held writer lock.
+    /// On failure the socket is shut down so the reader notices promptly
+    /// and runs eviction.
+    fn write_held(&self, w: &mut Option<TcpStream>, bytes: &[u8]) -> std::io::Result<()> {
+        let Some(conn) = w.as_mut() else {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::NotConnected,
                 "shard disconnected",
             ));
         };
-        match proto::write_frame(conn, frame) {
+        match conn.write_all(bytes) {
             Ok(()) => Ok(()),
             Err(e) => {
                 let _ = conn.shutdown(Shutdown::Both);
-                io.conn = None;
+                *w = None;
                 self.alive.store(false, Ordering::SeqCst);
                 Err(e)
             }
         }
     }
+
+    /// Write one pre-encoded length-prefixed frame, holding only the
+    /// writer lock for the (possibly blocking) socket write.
+    fn write_wire(&self, bytes: &[u8]) -> std::io::Result<()> {
+        let mut w = self.writer.lock().unwrap();
+        self.write_held(&mut w, bytes)
+    }
+
+    /// Encode + write one frame (cold paths: dispatch batches, Stop).
+    fn send_frame(&self, f: &Frame) -> std::io::Result<()> {
+        let mut buf = Vec::new();
+        proto::write_frame(&mut buf, f).expect("Vec write cannot fail");
+        self.write_wire(&buf)
+    }
+
+    /// Best-effort frame send that never waits on a busy writer (the
+    /// reader's ping path: a write already in flight is itself activity,
+    /// so skipping the ping loses nothing).
+    fn try_send_frame(&self, f: &Frame) -> std::io::Result<()> {
+        let mut buf = Vec::new();
+        proto::write_frame(&mut buf, f).expect("Vec write cannot fail");
+        match self.writer.try_lock() {
+            Ok(mut w) => self.write_held(&mut w, &buf),
+            Err(TryLockError::WouldBlock) => Ok(()),
+            Err(TryLockError::Poisoned(e)) => {
+                let mut w = e.into_inner();
+                self.write_held(&mut w, &buf)
+            }
+        }
+    }
+
+    /// First unit to stop speaks for the whole shard: ask it to drain.
+    fn stop_shard(&self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let _ = self.send_frame(&Frame::Stop);
+    }
+
+    /// Close the connection without `Frame::Stop`: the shard sees EOF,
+    /// aborts nothing it still owes (we own no sequences at drain) and
+    /// goes back to accepting — ready for the next scheduler.
+    fn detach_shard(&self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let mut w = self.writer.lock().unwrap();
+        if let Some(c) = w.take() {
+            let _ = c.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+/// Per-role shard state: the shared connection core plus the pending
+/// table of in-flight request ids (`P` is the per-id payload — decode
+/// keeps the scheduler metrics, prefill additionally assembles KV).
+struct ShardState<P> {
+    core: ShardCore,
+    pending: Mutex<HashMap<u64, P>>,
+}
+
+type DecodeShard = ShardState<RequestMetrics>;
+type PrefillShard = ShardState<PrefillPending>;
+
+/// One dispatched-but-unfinished prefill job on the scheduler side: the
+/// scheduler-clock state that never crosses the wire, plus the KV halves
+/// being assembled from the shard's `KvSegment` stream.
+struct PrefillPending {
+    max_new: u32,
+    metrics: RequestMetrics,
+    k: Vec<f32>,
+    v: Vec<f32>,
 }
 
 fn resolve(addr: &str) -> Result<std::net::SocketAddr> {
@@ -129,9 +275,9 @@ fn resolve(addr: &str) -> Result<std::net::SocketAddr> {
         .ok_or_else(|| anyhow!("shard address {addr} resolved to nothing"))
 }
 
-/// Connect, exchange `Hello`/`HelloAck`, and return the ready stream
-/// plus the advertised shape.
-fn connect_and_handshake(cfg: &RemoteShardConfig) -> Result<(TcpStream, u32, u32)> {
+/// Connect, exchange `Hello`/`HelloAck`, verify the advertised role, and
+/// return the ready stream plus the advertised shape.
+fn connect_and_handshake(cfg: &RemoteShardConfig, want: ShardRole) -> Result<(TcpStream, u32, u32)> {
     let sockaddr = resolve(&cfg.addr)?;
     let conn = TcpStream::connect_timeout(&sockaddr, cfg.connect_timeout)
         .with_context(|| format!("connecting to shard {}", cfg.addr))?;
@@ -147,6 +293,7 @@ fn connect_and_handshake(cfg: &RemoteShardConfig) -> Result<(TcpStream, u32, u32
         match reader.poll(&mut r) {
             Ok(Some(Frame::HelloAck {
                 version,
+                role,
                 units,
                 slots,
             })) => {
@@ -154,6 +301,14 @@ fn connect_and_handshake(cfg: &RemoteShardConfig) -> Result<(TcpStream, u32, u32
                     return Err(anyhow!(
                         "shard {} speaks protocol v{version}, we speak v{PROTO_VERSION}",
                         cfg.addr
+                    ));
+                }
+                if role != want {
+                    return Err(anyhow!(
+                        "shard {} serves {} units, but this pool needs {} units",
+                        cfg.addr,
+                        role.name(),
+                        want.name()
                     ));
                 }
                 if units == 0 {
@@ -179,64 +334,43 @@ fn connect_and_handshake(cfg: &RemoteShardConfig) -> Result<(TcpStream, u32, u32
     }
 }
 
-/// Connect to a shard and return one [`RemoteUnit`] transport per DP
-/// unit it serves. Fails fast if the shard is unreachable at startup;
-/// after that, drops are handled by evict-and-reconnect (module docs).
-pub fn connect_shard(cfg: RemoteShardConfig, sinks: ShardSinks) -> Result<Vec<RemoteUnit>> {
-    let (conn, units, slots) = connect_and_handshake(&cfg)?;
-    let reader_stream = conn.try_clone()?;
-    let handle = Arc::new(ShardHandle {
-        cfg,
-        io: Mutex::new(ShardIo {
-            conn: Some(conn),
-            pending: HashMap::new(),
-        }),
-        alive: AtomicBool::new(true),
-        rtt_us: AtomicU64::new(0),
-        stop: AtomicBool::new(false),
-        epoch: Instant::now(),
-        ping_nonce: AtomicU64::new(1),
-        units,
-        slots,
-    });
-    {
-        let handle = handle.clone();
-        std::thread::spawn(move || reader_loop(handle, sinks, reader_stream));
-    }
-    Ok((0..units)
-        .map(|u| RemoteUnit {
-            shard: handle.clone(),
-            unit: u,
-            slots,
-        })
-        .collect())
+/// Role-specific half of the shared reader loop: frame delivery and
+/// eviction against the role's pending table and sinks.
+trait ReaderPeer: Send {
+    fn core(&self) -> &ShardCore;
+    fn on_frame(&self, frame: Frame);
+    /// Drain the pending table and deliver the evicted ids upstream.
+    /// Called only after the core is marked dead and the write half
+    /// closed (see the locking discipline in the module docs).
+    fn on_death(&self);
 }
 
-/// Receive side: deliver events, measure RTT, and on connection death
-/// evict + reconnect (see module docs).
-fn reader_loop(handle: Arc<ShardHandle>, sinks: ShardSinks, mut stream: TcpStream) {
-    let addr = handle.cfg.addr.clone();
+/// Receive side shared by both roles: deliver events, measure RTT, and
+/// on connection death evict + reconnect (see module docs).
+fn reader_loop<P: ReaderPeer>(peer: P, mut stream: TcpStream) {
+    let core = peer.core();
+    let addr = core.cfg.addr.clone();
     'conn: loop {
         let mut reader = FrameReader::new();
         let mut idle = proto::IdleGuard::new(&reader);
         let mut last_ping = Instant::now();
         loop {
-            if handle.stop.load(Ordering::SeqCst) {
+            if core.stop.load(Ordering::SeqCst) {
                 break 'conn;
             }
             match reader.poll(&mut stream) {
                 Ok(Some(frame)) => {
                     idle.touch();
-                    handle_frame(&handle, &sinks, frame);
+                    peer.on_frame(frame);
                 }
                 Ok(None) => {
                     // Total silence with pings outstanding: the link is
                     // black-holed (partition, frozen host) — no EOF/RST
                     // will ever come, so declare death ourselves.
-                    if idle.idle_for(&reader) >= handle.cfg.dead_after {
+                    if idle.idle_for(&reader) >= core.cfg.dead_after {
                         log::warn!(
                             "shard {addr}: no frames for {:?} (pings unanswered); declaring dead",
-                            handle.cfg.dead_after
+                            core.cfg.dead_after
                         );
                         break;
                     }
@@ -249,65 +383,61 @@ fn reader_loop(handle: Arc<ShardHandle>, sinks: ShardSinks, mut stream: TcpStrea
             }
             // Heartbeat every ping interval, busy or idle: the pongs
             // measure RTT, and the shard relies on this steady inbound
-            // cadence for its own symmetric silence-to-death guard.
-            if last_ping.elapsed() >= handle.cfg.ping_interval {
+            // cadence for its own symmetric silence-to-death guard. A
+            // busy writer (blocked mid-frame) is skipped, not waited on.
+            if last_ping.elapsed() >= core.cfg.ping_interval {
                 last_ping = Instant::now();
                 let ping = Frame::Ping {
-                    nonce: handle.ping_nonce.fetch_add(1, Ordering::Relaxed),
-                    t_us: handle.now_us(),
+                    nonce: core.ping_nonce.fetch_add(1, Ordering::Relaxed),
+                    t_us: core.now_us(),
                 };
-                let mut io = handle.io.lock().unwrap();
-                if handle.send(&mut io, &ping).is_err() {
+                if core.try_send_frame(&ping).is_err() {
                     break;
                 }
             }
         }
-        // The connection is dead: evict everything resident, atomically
-        // with marking the shard unplaceable.
-        let resident: Vec<u64> = {
-            let mut io = handle.io.lock().unwrap();
-            handle.alive.store(false, Ordering::SeqCst);
-            if let Some(c) = io.conn.take() {
+        // The connection is dead. Order matters: mark unplaceable and
+        // close the write half *first*, then evict — a registration that
+        // races this either lands before the eviction sweep (and is
+        // evicted) or fails its write and unwinds itself.
+        core.alive.store(false, Ordering::SeqCst);
+        {
+            let mut w = core.writer.lock().unwrap();
+            if let Some(c) = w.take() {
                 let _ = c.shutdown(Shutdown::Both);
             }
-            io.pending.drain().map(|(id, _)| id).collect()
-        };
-        if !resident.is_empty() {
-            log::warn!("shard {addr} died with {} resident sequences; evicting", resident.len());
-            (sinks.on_evicted)(resident);
         }
-        if handle.stop.load(Ordering::SeqCst) {
+        peer.on_death();
+        if core.stop.load(Ordering::SeqCst) {
             break;
         }
         // Reconnect with backoff until the shard returns or we stop.
         log::info!("shard {addr}: reconnecting");
         loop {
-            std::thread::sleep(handle.cfg.reconnect_backoff);
-            if handle.stop.load(Ordering::SeqCst) {
+            std::thread::sleep(core.cfg.reconnect_backoff);
+            if core.stop.load(Ordering::SeqCst) {
                 break 'conn;
             }
-            match connect_and_handshake(&handle.cfg) {
+            match connect_and_handshake(&core.cfg, core.role) {
                 Ok((conn, units, slots)) => {
                     // The scheduler's pool was sized to the original
                     // shape; a replacement with a different one would
-                    // leave phantom units that it rejects every admit
-                    // for. Refuse it and keep retrying (the shard stays
-                    // visibly dead in the gauges).
-                    if units != handle.units || slots != handle.slots {
+                    // leave phantom units that it rejects every
+                    // placement for. Refuse it and keep retrying (the
+                    // shard stays visibly dead in the gauges).
+                    if units != core.units || slots != core.slots {
                         log::error!(
                             "shard {addr}: replacement advertises {units}×{slots} but the \
                              pool was built for {}×{}; refusing to rejoin",
-                            handle.units,
-                            handle.slots
+                            core.units,
+                            core.slots
                         );
                         continue;
                     }
-                    log::info!("shard {addr}: reconnected ({units} units)");
+                    log::info!("shard {addr}: reconnected ({units} {} units)", core.role.name());
                     let Ok(rs) = conn.try_clone() else { continue };
-                    let mut io = handle.io.lock().unwrap();
-                    io.conn = Some(conn);
-                    handle.alive.store(true, Ordering::SeqCst);
-                    drop(io);
+                    *core.writer.lock().unwrap() = Some(conn);
+                    core.alive.store(true, Ordering::SeqCst);
                     stream = rs;
                     continue 'conn;
                 }
@@ -317,62 +447,115 @@ fn reader_loop(handle: Arc<ShardHandle>, sinks: ShardSinks, mut stream: TcpStrea
     }
 }
 
-fn handle_frame(handle: &ShardHandle, sinks: &ShardSinks, frame: Frame) {
-    match frame {
-        Frame::Token { id, index, token } => {
-            // Gate on the pending table: a stale id (evicted, or left
-            // over from a connection this scheduler never owned) must
-            // not produce upstream events.
-            if handle.io.lock().unwrap().pending.contains_key(&id) {
-                (sinks.on_token)(id, index, token);
+// ---- decode shards -----------------------------------------------------
+
+struct DecodePeer {
+    shard: Arc<DecodeShard>,
+    sinks: ShardSinks,
+}
+
+impl ReaderPeer for DecodePeer {
+    fn core(&self) -> &ShardCore {
+        &self.shard.core
+    }
+
+    fn on_frame(&self, frame: Frame) {
+        match frame {
+            Frame::Token { id, index, token } => {
+                // Gate on the pending table: a stale id (evicted, or
+                // left over from a connection this scheduler never
+                // owned) must not produce upstream events.
+                if self.shard.pending.lock().unwrap().contains_key(&id) {
+                    (self.sinks.on_token)(id, index, token);
+                }
             }
-        }
-        Frame::Done { id, tokens } => {
-            let metrics = handle.io.lock().unwrap().pending.remove(&id);
-            if let Some(m) = metrics {
-                (sinks.on_done)(id, tokens, m);
+            Frame::Done { id, tokens } => {
+                let metrics = self.shard.pending.lock().unwrap().remove(&id);
+                if let Some(m) = metrics {
+                    (self.sinks.on_done)(id, tokens, m);
+                }
             }
-        }
-        Frame::Rejected { id } => {
-            if handle.io.lock().unwrap().pending.remove(&id).is_some() {
-                (sinks.on_rejected)(id);
+            Frame::Rejected { id } => {
+                if self.shard.pending.lock().unwrap().remove(&id).is_some() {
+                    (self.sinks.on_rejected)(id);
+                }
             }
+            Frame::StatsReply { units } => (self.sinks.on_stats)(units),
+            Frame::Pong { t_us, .. } => self.shard.core.on_pong(t_us),
+            Frame::Bye => {
+                // Clean shutdown acknowledgement; the close follows as EOF.
+            }
+            // The rest are informational or belong to the prefill role.
+            _ => {}
         }
-        Frame::Pong { t_us, .. } => {
-            let rtt = handle.now_us().saturating_sub(t_us).max(1);
-            handle.rtt_us.store(rtt, Ordering::Relaxed);
+    }
+
+    fn on_death(&self) {
+        let resident: Vec<u64> = {
+            let mut p = self.shard.pending.lock().unwrap();
+            p.drain().map(|(id, _)| id).collect()
+        };
+        if !resident.is_empty() {
+            log::warn!(
+                "shard {} died with {} resident sequences; evicting",
+                self.shard.core.cfg.addr,
+                resident.len()
+            );
+            (self.sinks.on_evicted)(resident);
         }
-        Frame::Bye => {
-            // Clean shutdown acknowledgement; the close follows as EOF.
-        }
-        // StatsReply and the rest are informational or future-facing;
-        // the scheduler's own ledger is authoritative for gauges.
-        _ => {}
     }
 }
 
-/// Transport for one DP unit of a remote shard (shares the shard's
-/// connection, liveness and RTT with its sibling units).
+/// Connect to a decode shard and return one [`RemoteUnit`] transport per
+/// DP unit it serves. Fails fast if the shard is unreachable at startup;
+/// after that, drops are handled by evict-and-reconnect (module docs).
+pub fn connect_shard(cfg: RemoteShardConfig, sinks: ShardSinks) -> Result<Vec<RemoteUnit>> {
+    let (conn, units, slots) = connect_and_handshake(&cfg, ShardRole::Decode)?;
+    let reader_stream = conn.try_clone()?;
+    let shard = Arc::new(ShardState {
+        core: ShardCore::new(cfg, conn, ShardRole::Decode, units, slots),
+        pending: Mutex::new(HashMap::new()),
+    });
+    {
+        let peer = DecodePeer {
+            shard: shard.clone(),
+            sinks,
+        };
+        std::thread::spawn(move || reader_loop(peer, reader_stream));
+    }
+    Ok((0..units)
+        .map(|u| RemoteUnit {
+            shard: shard.clone(),
+            unit: u,
+            slots,
+            wbuf: Vec::new(),
+        })
+        .collect())
+}
+
+/// Transport for one DP unit of a remote decode shard (shares the
+/// shard's connection, liveness and RTT with its sibling units).
 pub struct RemoteUnit {
-    shard: Arc<ShardHandle>,
+    shard: Arc<DecodeShard>,
     unit: u32,
     slots: u32,
+    /// Reused wire buffer for borrow-encoded `Admit` frames (KV is
+    /// serialized straight from the prefill outcome — no intermediate
+    /// copies, no steady-state allocation).
+    wbuf: Vec<u8>,
 }
 
 impl DecodeTransport for RemoteUnit {
     fn label(&self) -> String {
-        format!("{}#{}", self.shard.cfg.addr, self.unit)
+        format!("{}#{}", self.shard.core.cfg.addr, self.unit)
     }
 
     fn alive(&self) -> bool {
-        self.shard.alive.load(Ordering::SeqCst)
+        self.shard.core.alive.load(Ordering::SeqCst)
     }
 
     fn rtt_ms(&self) -> Option<f64> {
-        match self.shard.rtt_us.load(Ordering::Relaxed) {
-            0 => None,
-            us => Some(us as f64 / 1e3),
-        }
+        self.shard.core.rtt_ms()
     }
 
     fn slots(&self) -> u32 {
@@ -387,59 +570,568 @@ impl DecodeTransport for RemoteUnit {
         if bound > proto::MAX_FRAME as u64 {
             log::warn!(
                 "shard {}: admit for job {} (~{bound} B) exceeds the frame limit; refusing",
-                self.shard.cfg.addr,
+                self.shard.core.cfg.addr,
                 job.id
             );
             return Err(job);
         }
-        let frame = Frame::Admit {
-            unit: self.unit,
-            id: job.id,
-            first_token: job.outcome.first_token,
-            kv_len: job.outcome.len as u32,
-            max_new: job.max_new,
-            k: job.outcome.k.clone(),
-            v: job.outcome.v.clone(),
-        };
-        let mut io = self.shard.io.lock().unwrap();
-        if io.conn.is_none() {
+        if !self.alive() {
             return Err(job);
         }
-        // Register before writing: the reader (same lock) can deliver a
-        // fast Done only after we release the lock, and an eviction
-        // sweeping the table will include this id if the shard dies
-        // mid-write.
-        io.pending.insert(job.id, job.metrics);
-        match self.shard.send(&mut io, &frame) {
+        // Register before writing: a fast Done can only arrive after the
+        // write lands, and an eviction sweeping the table will include
+        // this id if the shard dies mid-write (a failed write removes it
+        // again below — double release is guarded upstream).
+        self.shard
+            .pending
+            .lock()
+            .unwrap()
+            .insert(job.id, job.metrics);
+        // Borrow-encode outside every lock, write under the writer lock
+        // only: a slow write here must not delay event delivery.
+        proto::admit_frame_into(
+            &mut self.wbuf,
+            self.unit,
+            job.id,
+            job.outcome.first_token,
+            job.outcome.len as u32,
+            job.max_new,
+            &job.outcome.k,
+            &job.outcome.v,
+        );
+        match self.shard.core.write_wire(&self.wbuf) {
             Ok(()) => Ok(()),
             Err(e) => {
-                io.pending.remove(&job.id);
-                drop(io);
-                log::warn!("shard {}: admit failed: {e}", self.shard.cfg.addr);
+                self.shard.pending.lock().unwrap().remove(&job.id);
+                log::warn!("shard {}: admit failed: {e}", self.shard.core.cfg.addr);
                 Err(job)
             }
         }
     }
 
+    fn request_stats(&self) {
+        self.shard.core.request_stats();
+    }
+
     fn stop(&mut self) {
-        // First unit to stop speaks for the whole shard.
-        if self.shard.stop.swap(true, Ordering::SeqCst) {
-            return;
-        }
-        let mut io = self.shard.io.lock().unwrap();
-        let _ = self.shard.send(&mut io, &Frame::Stop);
+        self.shard.core.stop_shard();
     }
 
     fn detach(&mut self) {
-        // Close the connection without Frame::Stop: the shard sees EOF,
-        // aborts nothing it still owes (we own no sequences at drain)
-        // and goes back to accepting — ready for the next scheduler.
-        if self.shard.stop.swap(true, Ordering::SeqCst) {
-            return;
+        self.shard.core.detach_shard();
+    }
+}
+
+// ---- prefill shards ----------------------------------------------------
+
+struct PrefillPeer {
+    shard: Arc<PrefillShard>,
+    sinks: PrefillSinks,
+}
+
+impl PrefillPeer {
+    /// Drop a job whose KV stream is unusable and fail it upstream.
+    fn fail_job(&self, id: u64) {
+        if self.shard.pending.lock().unwrap().remove(&id).is_some() {
+            (self.sinks.on_failed)(id);
         }
-        let mut io = self.shard.io.lock().unwrap();
-        if let Some(c) = io.conn.take() {
-            let _ = c.shutdown(Shutdown::Both);
+    }
+}
+
+impl ReaderPeer for PrefillPeer {
+    fn core(&self) -> &ShardCore {
+        &self.shard.core
+    }
+
+    fn on_frame(&self, frame: Frame) {
+        match frame {
+            Frame::KvSegment {
+                id,
+                half,
+                offset,
+                total,
+                data,
+            } => {
+                let (offset, total) = (offset as usize, total as usize);
+                // A corrupt `total` must not allocate unbounded memory;
+                // a half this size could never be re-admitted to decode
+                // (the Admit frame-size guard would refuse it), so fail
+                // the job instead of buffering it.
+                if total > proto::MAX_FRAME as usize / 4
+                    || offset.saturating_add(data.len()) > total
+                {
+                    log::warn!(
+                        "shard {}: malformed KV segment for job {id} \
+                         ({offset}+{} vs total {total}); failing the job",
+                        self.shard.core.cfg.addr,
+                        data.len()
+                    );
+                    self.fail_job(id);
+                    return;
+                }
+                let mut p = self.shard.pending.lock().unwrap();
+                let Some(entry) = p.get_mut(&id) else {
+                    return; // stale id (evicted or foreign); drop
+                };
+                let dst = match half {
+                    KvHalf::K => &mut entry.k,
+                    KvHalf::V => &mut entry.v,
+                };
+                if dst.len() != total {
+                    dst.resize(total, 0.0);
+                }
+                dst[offset..offset + data.len()].copy_from_slice(&data);
+            }
+            Frame::PrefillDone {
+                id,
+                first_token,
+                kv_len,
+                exec_time,
+            } => {
+                let entry = self.shard.pending.lock().unwrap().remove(&id);
+                if let Some(e) = entry {
+                    let outcome = PrefillOutcome {
+                        first_token,
+                        len: kv_len as usize,
+                        k: e.k,
+                        v: e.v,
+                        exec_time,
+                        passes: 1,
+                    };
+                    (self.sinks.on_prefilled)(id, Box::new(outcome), e.max_new, e.metrics);
+                }
+            }
+            Frame::PrefillFailed { id } => self.fail_job(id),
+            Frame::EndForward {
+                instance,
+                t_measured,
+                remaining,
+            } => {
+                // The index crosses a trust boundary: forwarded raw it
+                // would index scheduler state sized to the advertised
+                // shape, so an out-of-range instance must die here.
+                if instance >= self.shard.core.units {
+                    log::warn!(
+                        "shard {}: EndForward for unknown instance {instance} \
+                         (shard advertised {}); dropping",
+                        self.shard.core.cfg.addr,
+                        self.shard.core.units
+                    );
+                    return;
+                }
+                (self.sinks.on_end_forward)(instance, t_measured, remaining)
+            }
+            Frame::Pong { t_us, .. } => self.shard.core.on_pong(t_us),
+            Frame::Bye => {}
+            _ => {}
         }
+    }
+
+    fn on_death(&self) {
+        let queued: Vec<u64> = {
+            let mut p = self.shard.pending.lock().unwrap();
+            p.drain().map(|(id, _)| id).collect()
+        };
+        if !queued.is_empty() {
+            log::warn!(
+                "prefill shard {} died with {} jobs in flight; rejecting them",
+                self.shard.core.cfg.addr,
+                queued.len()
+            );
+            (self.sinks.on_evicted)(queued);
+        }
+    }
+}
+
+/// Connect to a prefill shard and return one [`RemotePrefill`] transport
+/// per instance it serves. Same startup/reconnect/eviction semantics as
+/// [`connect_shard`].
+pub fn connect_prefill_shard(
+    cfg: RemoteShardConfig,
+    sinks: PrefillSinks,
+) -> Result<Vec<RemotePrefill>> {
+    let (conn, units, slots) = connect_and_handshake(&cfg, ShardRole::Prefill)?;
+    let reader_stream = conn.try_clone()?;
+    let shard = Arc::new(ShardState {
+        core: ShardCore::new(cfg, conn, ShardRole::Prefill, units, slots),
+        pending: Mutex::new(HashMap::new()),
+    });
+    {
+        let peer = PrefillPeer {
+            shard: shard.clone(),
+            sinks,
+        };
+        std::thread::spawn(move || reader_loop(peer, reader_stream));
+    }
+    Ok((0..units)
+        .map(|u| RemotePrefill {
+            shard: shard.clone(),
+            unit: u,
+        })
+        .collect())
+}
+
+/// Transport for one instance of a remote prefill shard (shares the
+/// shard's connection, liveness and RTT with its sibling instances).
+pub struct RemotePrefill {
+    shard: Arc<PrefillShard>,
+    unit: u32,
+}
+
+impl PrefillTransport for RemotePrefill {
+    fn label(&self) -> String {
+        format!("{}#p{}", self.shard.core.cfg.addr, self.unit)
+    }
+
+    fn alive(&self) -> bool {
+        self.shard.core.alive.load(Ordering::SeqCst)
+    }
+
+    fn rtt_ms(&self) -> Option<f64> {
+        self.shard.core.rtt_ms()
+    }
+
+    fn dispatch(&mut self, work: Vec<PrefillWork>) -> Result<(), Vec<PrefillWork>> {
+        if !self.alive() {
+            return Err(work);
+        }
+        // Register the whole batch before writing (same discipline as
+        // decode admits: mid-write death evicts, failed write unwinds).
+        {
+            let mut p = self.shard.pending.lock().unwrap();
+            for w in &work {
+                p.insert(
+                    w.id,
+                    PrefillPending {
+                        max_new: w.max_new,
+                        metrics: w.metrics,
+                        k: Vec::new(),
+                        v: Vec::new(),
+                    },
+                );
+            }
+        }
+        let frame = Frame::PrefillDispatch {
+            unit: self.unit,
+            jobs: work
+                .iter()
+                .map(|w| proto::PrefillJobWire {
+                    id: w.id,
+                    max_new: w.max_new,
+                    prompt: w.prompt.clone(),
+                })
+                .collect(),
+        };
+        match self.shard.core.send_frame(&frame) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let mut p = self.shard.pending.lock().unwrap();
+                for w in &work {
+                    p.remove(&w.id);
+                }
+                drop(p);
+                log::warn!(
+                    "prefill shard {}: dispatch failed: {e}",
+                    self.shard.core.cfg.addr
+                );
+                Err(work)
+            }
+        }
+    }
+
+    fn stop(&mut self) {
+        self.shard.core.stop_shard();
+    }
+
+    fn detach(&mut self) {
+        self.shard.core.detach_shard();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+    use std::sync::atomic::AtomicU32;
+
+    fn counting_sinks(tokens: Arc<AtomicU32>) -> ShardSinks {
+        ShardSinks {
+            on_token: Box::new(move |_, _, _| {
+                tokens.fetch_add(1, Ordering::SeqCst);
+            }),
+            on_done: Box::new(|_, _, _| {}),
+            on_rejected: Box::new(|_| {}),
+            on_evicted: Box::new(|_| {}),
+            on_stats: Box::new(|_| {}),
+        }
+    }
+
+    fn admit_job(id: u64, kv_elems: usize) -> AdmitJob {
+        AdmitJob {
+            id,
+            outcome: Box::new(PrefillOutcome {
+                first_token: 65,
+                len: 4,
+                k: vec![0.5; kv_elems],
+                v: vec![0.5; kv_elems],
+                exec_time: 0.0,
+                passes: 1,
+            }),
+            max_new: 4,
+            metrics: RequestMetrics::arrive(0.0, 4),
+        }
+    }
+
+    /// The write-under-lock regression: an `Admit` write blocked on a
+    /// peer that stopped draining its socket must not delay Token
+    /// delivery from the same shard. The write path may hold only the
+    /// writer lock — never the pending/event lock.
+    #[test]
+    fn blocked_admit_write_does_not_delay_token_delivery() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let done = Arc::new(AtomicBool::new(false));
+        let shard_done = done.clone();
+        let fake_shard = std::thread::spawn(move || {
+            let (conn, _) = listener.accept().unwrap();
+            conn.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+            let mut rd = conn.try_clone().unwrap();
+            let mut reader = FrameReader::new();
+            loop {
+                match reader.poll(&mut rd) {
+                    Ok(Some(Frame::Hello { .. })) => break,
+                    Ok(_) => continue,
+                    Err(e) => panic!("handshake: {e}"),
+                }
+            }
+            let mut w = conn.try_clone().unwrap();
+            proto::write_frame(
+                &mut w,
+                &Frame::HelloAck {
+                    version: PROTO_VERSION,
+                    role: ShardRole::Decode,
+                    units: 1,
+                    slots: 4,
+                },
+            )
+            .unwrap();
+            // Consume frames until the small admit for id 1 arrives,
+            // then STOP reading forever: the scheduler's next big write
+            // must block once the socket buffers fill.
+            loop {
+                match reader.poll(&mut rd) {
+                    Ok(Some(Frame::Admit { id: 1, .. })) => break,
+                    Ok(_) => continue,
+                    Err(e) => panic!("waiting for admit: {e}"),
+                }
+            }
+            // While never reading again, keep streaming tokens for the
+            // resident sequence.
+            let mut index = 1u32;
+            while !shard_done.load(Ordering::SeqCst) {
+                if proto::write_frame(&mut w, &Frame::Token { id: 1, index, token: 7 }).is_err() {
+                    break;
+                }
+                index += 1;
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        });
+
+        let tokens = Arc::new(AtomicU32::new(0));
+        let mut cfg = RemoteShardConfig::new(&addr);
+        // Bounds how long the deliberately blocked write can hang.
+        cfg.connect_timeout = Duration::from_secs(3);
+        let mut units = connect_shard(cfg, counting_sinks(tokens.clone())).unwrap();
+        assert_eq!(units.len(), 1);
+        let mut unit = units.pop().unwrap();
+        unit.admit(admit_job(1, 0)).map_err(|_| ()).expect("small admit");
+
+        // Wait for the token stream to be live before starting the
+        // blocked write.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while tokens.load(Ordering::SeqCst) == 0 {
+            assert!(Instant::now() < deadline, "no tokens before the blocked write");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        // A ~64 MB admit against a peer that stopped reading: write_all
+        // fills the socket buffers and blocks until the write timeout.
+        let admit_returned = Arc::new(AtomicBool::new(false));
+        let flag = admit_returned.clone();
+        let admit_thread = std::thread::spawn(move || {
+            let failed = unit.admit(admit_job(2, 8 << 20)).is_err();
+            flag.store(true, Ordering::SeqCst);
+            unit.detach(); // stop the reader thread once we are done
+            failed
+        });
+
+        // While that write is in flight, tokens must keep arriving
+        // promptly. 10 tokens at 5 ms cadence is ~50 ms; serialized
+        // behind the 3 s blocked write it would time this out.
+        let base = tokens.load(Ordering::SeqCst);
+        let t0 = Instant::now();
+        while tokens.load(Ordering::SeqCst) < base + 10 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(2),
+                "token delivery stalled behind a blocked admit write \
+                 ({} tokens in {:?})",
+                tokens.load(Ordering::SeqCst) - base,
+                t0.elapsed()
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(
+            !admit_returned.load(Ordering::SeqCst),
+            "test premise broken: the big admit finished before the \
+             tokens did — it never actually blocked"
+        );
+
+        done.store(true, Ordering::SeqCst);
+        let failed = admit_thread.join().unwrap();
+        assert!(failed, "a write to a never-draining peer must time out and hand the job back");
+        fake_shard.join().unwrap();
+    }
+
+    /// The KV handoff reassembly path: out-of-order, multi-chunk
+    /// `KvSegment`s for both halves must assemble into the exact caches
+    /// the shard serialized, committed by `PrefillDone` — and `EndForward`
+    /// must surface through the sink with its backlog intact.
+    #[test]
+    fn prefill_client_reassembles_chunked_kv_handoff() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let k: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..600).map(|i| -(i as f32)).collect();
+        let (k2, v2) = (k.clone(), v.clone());
+        let fake_shard = std::thread::spawn(move || {
+            let (conn, _) = listener.accept().unwrap();
+            conn.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+            let mut rd = conn.try_clone().unwrap();
+            let mut reader = FrameReader::new();
+            loop {
+                match reader.poll(&mut rd) {
+                    Ok(Some(Frame::Hello { .. })) => break,
+                    Ok(_) => continue,
+                    Err(e) => panic!("handshake: {e}"),
+                }
+            }
+            let mut w = conn.try_clone().unwrap();
+            proto::write_frame(
+                &mut w,
+                &Frame::HelloAck {
+                    version: PROTO_VERSION,
+                    role: ShardRole::Prefill,
+                    units: 2,
+                    slots: 1,
+                },
+            )
+            .unwrap();
+            let id = loop {
+                match reader.poll(&mut rd) {
+                    Ok(Some(Frame::PrefillDispatch { unit, jobs })) => {
+                        assert_eq!(unit, 1);
+                        assert_eq!(jobs.len(), 1);
+                        assert_eq!(jobs[0].prompt, vec![5; 16]);
+                        break jobs[0].id;
+                    }
+                    Ok(_) => continue,
+                    Err(e) => panic!("dispatch: {e}"),
+                }
+            };
+            // Stream the halves chunked and *out of order* — the borrow
+            // encoder producing exactly what write_frame would.
+            let mut buf = Vec::new();
+            for (half, data, cuts) in [
+                (KvHalf::V, &v2, vec![0usize, 600]),
+                (KvHalf::K, &k2, vec![512, 1000, 0, 512]),
+            ] {
+                for pair in cuts.chunks(2) {
+                    let (a, b) = (pair[0], pair[1]);
+                    proto::kv_segment_frame_into(
+                        &mut buf,
+                        id,
+                        half,
+                        a as u32,
+                        data.len() as u32,
+                        &data[a..b],
+                    );
+                    use std::io::Write;
+                    w.write_all(&buf).unwrap();
+                }
+            }
+            proto::write_frame(
+                &mut w,
+                &Frame::PrefillDone {
+                    id,
+                    first_token: 0x41,
+                    kv_len: 16,
+                    exec_time: 0.25,
+                },
+            )
+            .unwrap();
+            proto::write_frame(
+                &mut w,
+                &Frame::EndForward {
+                    instance: 1,
+                    t_measured: 0.25,
+                    remaining: Some(96),
+                },
+            )
+            .unwrap();
+            // Hold the connection open until the scheduler detaches.
+            let mut tail = FrameReader::new();
+            loop {
+                match tail.poll(&mut rd) {
+                    Ok(_) => continue,
+                    Err(_) => break,
+                }
+            }
+        });
+
+        let (got_tx, got_rx) = std::sync::mpsc::channel();
+        let (ef_tx, ef_rx) = std::sync::mpsc::channel();
+        let sinks = PrefillSinks {
+            on_prefilled: Box::new(move |id, outcome, max_new, _metrics| {
+                let _ = got_tx.send((id, outcome, max_new));
+            }),
+            on_failed: Box::new(|id| panic!("unexpected prefill failure for {id}")),
+            on_end_forward: Box::new(move |instance, t, remaining| {
+                let _ = ef_tx.send((instance, t, remaining));
+            }),
+            on_evicted: Box::new(|_| {}),
+        };
+        let mut units = connect_prefill_shard(RemoteShardConfig::new(&addr), sinks).unwrap();
+        assert_eq!(units.len(), 2);
+        assert_eq!(units[1].label(), format!("{addr}#p1"));
+        units[1]
+            .dispatch(vec![PrefillWork {
+                id: 31,
+                prompt: vec![5; 16],
+                max_new: 7,
+                metrics: RequestMetrics::arrive(0.0, 16),
+            }])
+            .map_err(|_| ())
+            .expect("dispatch");
+
+        let (id, outcome, max_new) = got_rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("handoff must commit");
+        assert_eq!(id, 31);
+        assert_eq!(max_new, 7);
+        assert_eq!(outcome.first_token, 0x41);
+        assert_eq!(outcome.len, 16);
+        assert_eq!(outcome.k, k, "K half must reassemble exactly");
+        assert_eq!(outcome.v, v, "V half must reassemble exactly");
+        let (instance, t, remaining) = ef_rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("EndForward must surface");
+        assert_eq!(instance, 1);
+        assert!((t - 0.25).abs() < 1e-12);
+        assert_eq!(remaining, Some(96), "engine backlog crosses the wire");
+
+        for u in &mut units {
+            u.detach();
+        }
+        fake_shard.join().unwrap();
     }
 }

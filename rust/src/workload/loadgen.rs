@@ -161,11 +161,20 @@ pub fn cli_loadgen(argv: &[String]) -> Result<()> {
     j.insert("duration_s".into(), Json::from(duration));
     j.insert("conns".into(), Json::from(conns));
     j.insert("arrival".into(), Json::from(arrival.name()));
-    // Hoist pool liveness to the top level: a shard killed mid-run must
-    // be loud in the report, not a silently smaller pool.
+    // Hoist pool liveness to the top level: a shard killed mid-run —
+    // decode *or* prefill — must be loud in the report, not a silently
+    // smaller pool.
     for key in ["n_units", "units_alive"] {
         if let Some(v) = decode_pool.get(key) {
             j.insert(key.into(), v.clone());
+        }
+    }
+    if let Some(p) = decode_pool.get("prefill") {
+        if let Some(v) = p.get("n_units") {
+            j.insert("prefill_n_units".into(), v.clone());
+        }
+        if let Some(v) = p.get("units_alive") {
+            j.insert("prefill_units_alive".into(), v.clone());
         }
     }
     j.insert("decode_pool".into(), decode_pool);

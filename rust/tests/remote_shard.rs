@@ -1,15 +1,20 @@
-//! Integration tests for the remote decode shard transport: true
+//! Integration tests for the remote shard transports: true
 //! multi-process (`sbs worker` children driven over real TCP).
 //!
 //! 1. **Parity** (extends the PR 2 harness): the same deterministic job
 //!    trace through an in-process 2-unit pool and a 2-shard remote pool
 //!    must produce identical placement decisions — the transport must be
 //!    invisible to the dispatch core.
-//! 2. **Shard death**: killing a shard mid-run evicts its sequences
-//!    (rejected upstream, ledger released — nothing hangs or leaks) and
-//!    the dead unit stays *visible* in the gauges.
+//! 2. **Shard death**: killing a decode shard mid-run evicts its
+//!    sequences (rejected upstream, ledger released — nothing hangs or
+//!    leaks) and the dead unit stays *visible* in the gauges.
 //! 3. **Reconnect**: a replacement shard on the same address rejoins the
 //!    pool without restarting the scheduler.
+//! 4. **P/D separation**: a 4-process topology (scheduler + 1 remote
+//!    prefill shard + 2 remote decode shards) serves end to end — the
+//!    KV handoff and `EndForward` backlog cross the wire — and killing
+//!    the prefill shard mid-run rejects its in-flight jobs rather than
+//!    leaking or hanging them, with the dead instance loud in `STATS`.
 
 use sbs::cluster::dispatch::DecodePolicy;
 use sbs::cluster::workers::{
@@ -24,14 +29,14 @@ use std::io::{BufRead, BufReader};
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
-/// Spawn one `sbs worker --decode` shard process with a deterministic
-/// mock engine (2 ms steps, zero jitter); returns the child and the
-/// address it announced.
-fn spawn_worker(listen: &str, units: u32, batch: u32) -> (Child, String) {
+/// Spawn one `sbs worker` shard process (`role` = `--decode` or
+/// `--prefill`) with a deterministic mock engine (2 ms steps, zero
+/// jitter); returns the child and the address it announced.
+fn spawn_role_worker(role: &str, listen: &str, units: u32, batch: u32) -> (Child, String) {
     let mut child = Command::new(env!("CARGO_BIN_EXE_sbs"))
         .args([
             "worker",
-            "--decode",
+            role,
             "--listen",
             listen,
             "--units",
@@ -55,6 +60,11 @@ fn spawn_worker(listen: &str, units: u32, batch: u32) -> (Child, String) {
     let addr = parse_listening_line(&line).expect("LISTENING announcement");
     wait_for_port(&addr, Duration::from_secs(10)).expect("shard listener accepting");
     (child, addr)
+}
+
+/// Decode-shard convenience wrapper (the historical helper).
+fn spawn_worker(listen: &str, units: u32, batch: u32) -> (Child, String) {
+    spawn_role_worker("--decode", listen, units, batch)
 }
 
 /// Wait (bounded) for a shard process to exit on its own; kill on
@@ -315,4 +325,130 @@ fn replacement_shard_on_same_address_rejoins_the_pool() {
     let (completions, _report) = cluster.finish().expect("finish");
     assert_eq!(completions.len(), 6, "restored pool must serve all jobs");
     assert!(reap(replacement, Duration::from_secs(10)), "replacement drains on Stop");
+}
+
+/// Fully P/D-separated config: zero local workers on either plane; both
+/// phases run in remote shard processes.
+fn pd_cfg(prefill: Vec<String>, decode: Vec<String>) -> RealClusterConfig {
+    RealClusterConfig {
+        n_prefill: 0,
+        n_decode: 0,
+        decode_batch: 8,
+        c_chunk: 4096,
+        mode: RealSchedMode::Immediate(ImmediatePolicy::RoundRobin),
+        decode_policy: DecodePolicy::LoadAware(Default::default()),
+        sampling: Sampling::Greedy,
+        seed: 23,
+        engine: det_mock(),
+        admission: AdmissionConfig {
+            max_inflight: 1024,
+            ..Default::default()
+        },
+        remote_prefill: prefill,
+        remote_decode: decode,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn pd_separated_topology_serves_end_to_end() {
+    // 4 OS processes: this scheduler + 1 prefill shard + 2 decode shards.
+    let (pf, pf_addr) = spawn_role_worker("--prefill", "127.0.0.1:0", 1, 1);
+    let (d1, a1) = spawn_worker("127.0.0.1:0", 1, 8);
+    let (d2, a2) = spawn_worker("127.0.0.1:0", 1, 8);
+
+    let cluster = RealCluster::start(pd_cfg(vec![pf_addr.clone()], vec![a1, a2]))
+        .expect("P/D cluster start");
+    let handle = cluster.handle();
+    const JOBS: u64 = 16;
+    for i in 0..JOBS {
+        cluster.submit(Job {
+            id: i,
+            prompt: vec![7; 16 + (i as usize * 13) % 60],
+            max_new: 8,
+        });
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let (completions, report) = cluster.finish().expect("P/D cluster finish");
+    assert_eq!(completions.len(), JOBS as usize, "every job crosses both wire hops");
+    assert_eq!(report.rejected, 0, "nothing may be shed on a healthy topology");
+    for c in &completions {
+        assert_eq!(c.tokens.len(), 8, "full generation (first token + 7 decoded)");
+        assert!(c.metrics.ttft().is_some(), "TTFT observed for job {}", c.id);
+    }
+
+    let stats = handle.decode_stats();
+    assert_eq!(stats.prefill.len(), 1, "the remote instance is the whole prefill pool");
+    assert!(stats.prefill[0].transport.contains("#p0"), "{stats:?}");
+    assert!(stats.prefill[0].dispatched > 0, "dispatches crossed the wire: {stats:?}");
+    assert_eq!(stats.units.len(), 2);
+    assert_eq!(stats.total_placed(), JOBS, "every sequence decoded remotely");
+
+    // The drain sent Stop to all three shards: they exit on their own.
+    assert!(reap(pf, Duration::from_secs(10)), "prefill shard must drain and exit");
+    assert!(reap(d1, Duration::from_secs(10)), "decode shard 1 must drain and exit");
+    assert!(reap(d2, Duration::from_secs(10)), "decode shard 2 must drain and exit");
+}
+
+#[test]
+fn killed_prefill_shard_rejects_inflight_jobs_and_stays_visible() {
+    let (mut pf, pf_addr) = spawn_role_worker("--prefill", "127.0.0.1:0", 1, 1);
+    let (d1, a1) = spawn_worker("127.0.0.1:0", 1, 8);
+    let (d2, a2) = spawn_worker("127.0.0.1:0", 1, 8);
+
+    let cluster =
+        RealCluster::start(pd_cfg(vec![pf_addr], vec![a1, a2])).expect("P/D cluster start");
+    let handle = cluster.handle();
+
+    // A burst that outruns the single prefill instance (~8.5 ms/job at
+    // mock defaults): when the shard dies mid-burst, part of the batch
+    // is decoding already, part is still queued on the shard.
+    let mut streams = Vec::new();
+    for _ in 0..24 {
+        match handle.try_submit(vec![7; 24], 200) {
+            Admission::Accepted { updates, .. } => streams.push(updates),
+            Admission::Busy(r) => panic!("unexpected BUSY: {r:?}"),
+        }
+        std::thread::sleep(Duration::from_millis(4));
+    }
+    pf.kill().expect("kill prefill shard");
+    pf.wait().expect("reap prefill shard");
+
+    // Every stream must reach a terminal state: jobs already handed off
+    // keep decoding to Done; jobs queued on the dead shard (or still
+    // scheduler-side with nowhere to dispatch) are rejected — parked
+    // work is *rejected, not leaked*.
+    let (mut done, mut rejected) = (0, 0);
+    for rx in &streams {
+        if drain_stream(rx, Duration::from_secs(60)) {
+            done += 1;
+        } else {
+            rejected += 1;
+        }
+    }
+    assert_eq!(done + rejected, 24, "every stream reaches a terminal state");
+    assert!(rejected > 0, "jobs in flight at the dead prefill shard must be rejected");
+    assert!(done > 0, "jobs handed off before the kill must still complete");
+
+    // Nothing leaked: the decode ledger drains to zero, and the dead
+    // prefill instance is reported, not hidden.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let stats = loop {
+        let stats = handle.decode_stats();
+        if stats.units.iter().all(|u| u.active == 0) && stats.prefill_units_alive() == 0 {
+            break stats;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "ledger must drain and the dead prefill shard must be visible: {stats:?}"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    assert_eq!(stats.prefill.len(), 1, "dead instance stays in the gauges: {stats:?}");
+    assert!(!stats.prefill[0].alive);
+    assert_eq!(stats.units_alive(), 2, "decode shards are unaffected");
+
+    let (_completions, _report) = cluster.finish().expect("finish must not hang");
+    assert!(reap(d1, Duration::from_secs(10)), "decode shard 1 drains on Stop");
+    assert!(reap(d2, Duration::from_secs(10)), "decode shard 2 drains on Stop");
 }
