@@ -99,6 +99,15 @@ fn render_pool(stats: &DecodePoolStats) -> String {
             u.seq_seconds,
         ));
     }
+    if stats.kv_wire.raw_bytes > 0 || stats.kv_wire.relay_raw_bytes > 0 {
+        s.push_str(&format!(
+            "kv wire [{}]: shard-inbound {} B coded / {} B raw, scheduler-relay {} B coded\n",
+            stats.kv_wire.codec,
+            stats.kv_wire.wire_bytes,
+            stats.kv_wire.raw_bytes,
+            stats.kv_wire.relay_wire_bytes,
+        ));
+    }
     s.push_str(&format!(
         "prefill pool: {}/{} instances alive\n",
         stats.prefill_units_alive(),

@@ -519,6 +519,7 @@ impl DispatchCore {
             policy: self.policy.name().to_string(),
             units,
             prefill: Vec::new(),
+            kv_wire: Default::default(),
         }
     }
 }

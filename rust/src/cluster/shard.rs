@@ -26,11 +26,29 @@
 //! loop as the in-process pool. A finished prefill leaves the shard as
 //! a **streamed KV handoff**: the prompt caches are borrow-serialized
 //! into [`config::KV_SEGMENT_ELEMS`]-sized `KvSegment` frames (one
-//! buffer per chunk, no intermediate copies) and committed by a
-//! `PrefillDone` — chunking lets other instances' frames interleave, so
-//! a long prompt's caches never monopolize the connection. Each pass
-//! also emits `EndForward` with the instance's *real remaining backlog*,
-//! which the scheduler feeds to the staggered trigger's capacity model.
+//! buffer per chunk, no intermediate copies, coded per the negotiated
+//! `--kv-wire` codec) and committed by a `PrefillDone` — chunking lets
+//! other instances' frames interleave, so a long prompt's caches never
+//! monopolize the connection. Each pass also emits `EndForward` with the
+//! instance's *real remaining backlog*, which the scheduler feeds to the
+//! staggered trigger's capacity model.
+//!
+//! ## Direct prefill→decode transfer
+//!
+//! When a dispatched job carries a [`DirectTarget`], the prefill shard
+//! bypasses the scheduler on the KV path entirely: it opens (and pools)
+//! a connection to the decode shard's **peer listener** (the port
+//! advertised in the decode shard's `HelloAck`), streams the coded
+//! `KvSegment`s there, commits with `HandoffCommit`, and waits for the
+//! decode shard's `HandoffAck` — only then does it send the lightweight
+//! `HandoffCommit` notification to the scheduler. Any failure on the
+//! peer path (connect, stream, ack timeout) falls back to the relayed
+//! `KvSegment*`+`PrefillDone` route, which the scheduler handles by
+//! re-placing the join; a decode shard that dies mid-handoff is covered
+//! twice (the fallback, and the scheduler's eviction of its pending
+//! ids). The decode shard emits the sequence's `Token index 0` on its
+//! scheduler connection the moment a peer handoff is admitted, before
+//! any decode-step token, so the stream stays ordered.
 //!
 //! `Stop` drains: units finish their queued work (their terminal frames
 //! flush first), the shard replies `Bye` and the process exits.
@@ -47,16 +65,18 @@ use crate::engine::PrefillOutcome;
 use crate::metrics::RequestMetrics;
 use crate::runtime::artifacts_dir;
 use crate::transport::proto::{
-    self, Frame, FrameReader, KvHalf, ProtoError, ShardRole, UnitLoad, PROTO_VERSION,
+    self, DirectTarget, Frame, FrameReader, ProtoError, ShardRole, UnitLoad, PROTO_VERSION,
 };
-use crate::transport::{AdmitJob, PrefillMsg, PrefillWork, UnitMsg};
+use crate::transport::{AdmitJob, KvCodec, KvWireCounters, PrefillMsg, PrefillWork, UnitMsg};
 use crate::util::{Clock, RealClock};
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
+use std::collections::{HashMap, HashSet};
+use std::io::Write;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Shard configuration (one role per process).
 #[derive(Debug, Clone)]
@@ -106,6 +126,11 @@ pub fn cli_worker(argv: &[String]) -> Result<()> {
         .opt("artifacts", "artifact directory (pjrt engine)", Some("artifacts"))
         .opt("mock-decode-ms", "mock engine: one decode step, milliseconds", Some("4"))
         .opt("mock-jitter", "mock engine: execution-time jitter fraction", Some("0.1"))
+        .opt(
+            "mock-kv-elems",
+            "mock engine: synthetic KV elements per prompt token (per cache half)",
+            Some("16"),
+        )
         .opt("seed", "rng seed", Some("17"));
     let args = cmd.parse(argv).map_err(|e| anyhow!("{e}"))?;
     let role = match (args.flag("decode"), args.flag("prefill")) {
@@ -126,9 +151,12 @@ pub fn cli_worker(argv: &[String]) -> Result<()> {
         "mock" => {
             let step_ms: f64 = args.parse_or("mock-decode-ms", 4.0).map_err(|e| anyhow!("{e}"))?;
             let jitter: f64 = args.parse_or("mock-jitter", 0.1).map_err(|e| anyhow!("{e}"))?;
+            let kv_elems: usize =
+                args.parse_or("mock-kv-elems", 16usize).map_err(|e| anyhow!("{e}"))?;
             EngineSpec::Mock(MockEngineConfig {
                 t_decode_step: step_ms / 1e3,
                 jitter,
+                kv_elems_per_token: kv_elems,
                 ..Default::default()
             })
         }
@@ -142,13 +170,33 @@ pub fn cli_worker(argv: &[String]) -> Result<()> {
         sampling: Sampling::Greedy,
         seed: args.parse_or("seed", 17u64).map_err(|e| anyhow!("{e}"))?,
     };
-    let listener = TcpListener::bind(args.str_or("listen", "127.0.0.1:7501"))?;
+    let listener = bind_with_retry(&args.str_or("listen", "127.0.0.1:7501"))?;
     // Announce the bound address on stdout so a parent that asked for an
     // ephemeral port (`:0`) can learn it.
     println!("LISTENING {}", listener.local_addr()?);
-    use std::io::Write;
     std::io::stdout().flush().ok();
     run_shard(cfg, listener)
+}
+
+/// Bind a listener with a bounded retry: a replacement shard reusing its
+/// predecessor's fixed address can race the kernel's release of the port
+/// (`TIME_WAIT`, a dying process), which a blind bind turns into a
+/// startup failure and a flaky test. Ephemeral binds (`:0`) succeed on
+/// the first attempt.
+fn bind_with_retry(addr: &str) -> Result<TcpListener> {
+    const ATTEMPTS: u32 = 20;
+    let mut last = None;
+    for i in 0..ATTEMPTS {
+        match TcpListener::bind(addr) {
+            Ok(l) => return Ok(l),
+            Err(e) => {
+                log::debug!("bind {addr} attempt {}/{ATTEMPTS} failed: {e}", i + 1);
+                last = Some(e);
+                std::thread::sleep(Duration::from_millis(250));
+            }
+        }
+    }
+    Err(last.unwrap()).with_context(|| format!("binding {addr} after {ATTEMPTS} attempts"))
 }
 
 /// Shard-internal outbound queue entry: pre-framed wire bytes (the
@@ -185,30 +233,208 @@ impl DecodeEventSink for WireSink {
     }
 }
 
-/// Outbound sink for one prefill instance thread: finished prefills
-/// leave as a chunked `KvSegment` stream + `PrefillDone`, passes as
+/// Load a codec out of the shard's connection-scoped atomic (set at each
+/// scheduler handshake; frames are self-describing, so a mid-switch race
+/// is harmless).
+fn load_codec(codec: &AtomicU8) -> KvCodec {
+    KvCodec::from_wire(codec.load(Ordering::Relaxed)).unwrap_or(KvCodec::Raw)
+}
+
+/// One pooled peer connection to a decode shard (the direct-transfer
+/// path). Both stream halves plus the reader state for `PeerHelloAck` /
+/// `HandoffAck` replies.
+struct PeerConn {
+    w: TcpStream,
+    r: TcpStream,
+    reader: FrameReader,
+}
+
+impl PeerConn {
+    /// Wait (bounded) for one frame on the peer connection.
+    fn recv(&mut self, deadline: Instant) -> Result<Frame> {
+        loop {
+            match self.reader.poll(&mut self.r) {
+                Ok(Some(f)) => return Ok(f),
+                Ok(None) if Instant::now() < deadline => continue,
+                Ok(None) => return Err(anyhow!("peer reply timed out")),
+                Err(e) => return Err(anyhow!("peer receive failed: {e}")),
+            }
+        }
+    }
+}
+
+/// Pool of peer connections from this prefill shard to decode shards,
+/// keyed by peer address and shared by every instance thread. One
+/// connection per decode shard; concurrent handoffs to the same shard
+/// serialize on its slot (KV streams must not interleave mid-job).
+struct PeerPool {
+    conns: Mutex<HashMap<String, Arc<Mutex<Option<PeerConn>>>>>,
+}
+
+impl PeerPool {
+    fn new() -> Self {
+        PeerPool {
+            conns: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn connect(addr: &str, codec: KvCodec) -> Result<PeerConn> {
+        use std::net::ToSocketAddrs;
+        let sockaddr = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving peer {addr}"))?
+            .next()
+            .ok_or_else(|| anyhow!("peer address {addr} resolved to nothing"))?;
+        let conn = TcpStream::connect_timeout(&sockaddr, Duration::from_secs(5))
+            .with_context(|| format!("connecting to decode peer {addr}"))?;
+        conn.set_nodelay(true)?;
+        conn.set_read_timeout(Some(Duration::from_millis(250)))?;
+        conn.set_write_timeout(Some(Duration::from_secs(5)))?;
+        let mut pc = PeerConn {
+            w: conn.try_clone()?,
+            r: conn,
+            reader: FrameReader::new(),
+        };
+        proto::write_frame(
+            &mut pc.w,
+            &Frame::PeerHello {
+                version: PROTO_VERSION,
+                kv_wire: codec,
+            },
+        )?;
+        match pc.recv(Instant::now() + Duration::from_secs(5))? {
+            Frame::PeerHelloAck { version } if version == PROTO_VERSION => Ok(pc),
+            Frame::PeerHelloAck { version } => {
+                Err(anyhow!("peer {addr} speaks v{version}, we speak v{PROTO_VERSION}"))
+            }
+            other => Err(anyhow!("peer {addr}: expected PeerHelloAck, got {other:?}")),
+        }
+    }
+
+    /// Stream one finished prefill's KV to `target` and wait for the
+    /// decode shard's ack. On any failure the pooled connection is
+    /// dropped and the error surfaces so the caller falls back to the
+    /// scheduler relay; a stale pooled connection gets one reconnect
+    /// before giving up.
+    fn handoff(
+        &self,
+        codec: KvCodec,
+        target: &DirectTarget,
+        id: u64,
+        outcome: &PrefillOutcome,
+        decode_max_new: u32,
+    ) -> Result<()> {
+        let slot = {
+            let mut conns = self.conns.lock().unwrap();
+            conns
+                .entry(target.addr.clone())
+                .or_insert_with(|| Arc::new(Mutex::new(None)))
+                .clone()
+        };
+        let mut slot = slot.lock().unwrap();
+        let pooled = slot.is_some();
+        if slot.is_none() {
+            *slot = Some(Self::connect(&target.addr, codec)?);
+        }
+        match Self::stream(slot.as_mut().unwrap(), codec, target, id, outcome, decode_max_new) {
+            Ok(()) => Ok(()),
+            Err(e) if pooled => {
+                // The pooled connection may have died idle; retry once on
+                // a fresh one before declaring the peer unreachable.
+                log::debug!("peer {}: pooled connection failed ({e:#}); reconnecting", target.addr);
+                *slot = None;
+                *slot = Some(Self::connect(&target.addr, codec)?);
+                let out = Self::stream(
+                    slot.as_mut().unwrap(),
+                    codec,
+                    target,
+                    id,
+                    outcome,
+                    decode_max_new,
+                );
+                if out.is_err() {
+                    *slot = None;
+                }
+                out
+            }
+            Err(e) => {
+                *slot = None;
+                Err(e)
+            }
+        }
+    }
+
+    fn stream(
+        pc: &mut PeerConn,
+        codec: KvCodec,
+        target: &DirectTarget,
+        id: u64,
+        outcome: &PrefillOutcome,
+        decode_max_new: u32,
+    ) -> Result<()> {
+        let mut buf = Vec::new();
+        proto::each_kv_segment(
+            &mut buf,
+            codec,
+            id,
+            config::KV_SEGMENT_ELEMS,
+            &outcome.k,
+            &outcome.v,
+            |bytes| pc.w.write_all(bytes),
+        )?;
+        proto::write_frame(
+            &mut pc.w,
+            &Frame::HandoffCommit {
+                unit: target.unit,
+                id,
+                first_token: outcome.first_token,
+                kv_len: outcome.len as u32,
+                max_new: decode_max_new,
+                exec_time: outcome.exec_time,
+            },
+        )?;
+        // The ack is what makes the commit safe to report: after it, the
+        // sequence is durably enqueued on the decode unit, so the
+        // scheduler-facing HandoffCommit can never name a lost handoff.
+        match pc.recv(Instant::now() + Duration::from_secs(10))? {
+            Frame::HandoffAck { id: ack } if ack == id => Ok(()),
+            other => Err(anyhow!("peer {}: expected HandoffAck({id}), got {other:?}", target.addr)),
+        }
+    }
+}
+
+/// Outbound sink for one prefill instance thread. A finished prefill
+/// leaves either **directly** — streamed to the target decode shard's
+/// peer listener, the scheduler seeing only a lightweight
+/// `HandoffCommit` — or as the **relayed** chunked `KvSegment` stream +
+/// `PrefillDone` (no target, or the peer path failed). Passes emit
 /// `EndForward` carrying the instance's real remaining backlog.
 struct PrefillWireSink {
     out: Sender<Outbound>,
+    peers: Arc<PeerPool>,
+    /// Codec negotiated with the current scheduler connection.
+    codec: Arc<AtomicU8>,
 }
 
-impl PrefillEventSink for PrefillWireSink {
-    fn prefilled(&self, id: u64, outcome: PrefillOutcome, _max_new: u32, _metrics: RequestMetrics) {
-        for (half, data) in [(KvHalf::K, &outcome.k), (KvHalf::V, &outcome.v)] {
-            let total = data.len() as u32;
-            let mut off = 0usize;
-            while off < data.len() {
-                let end = (off + config::KV_SEGMENT_ELEMS).min(data.len());
-                // Borrow-encode the chunk straight from the outcome into
-                // one wire buffer — the only copy between engine memory
-                // and the socket.
-                let mut buf = Vec::new();
-                proto::kv_segment_frame_into(&mut buf, id, half, off as u32, total, &data[off..end]);
-                if self.out.send(Outbound::Bytes(buf)).is_err() {
-                    return;
-                }
-                off = end;
-            }
+impl PrefillWireSink {
+    /// The relay path: stream the KV to the scheduler, chunked (same
+    /// framing as the direct path via `proto::each_kv_segment`).
+    fn relay(&self, id: u64, outcome: &PrefillOutcome) {
+        let codec = load_codec(&self.codec);
+        let mut buf = Vec::new();
+        let sent = proto::each_kv_segment(
+            &mut buf,
+            codec,
+            id,
+            config::KV_SEGMENT_ELEMS,
+            &outcome.k,
+            &outcome.v,
+            // The writer thread owns each queued chunk; the shard is
+            // draining if the queue is gone.
+            |bytes| self.out.send(Outbound::Bytes(bytes.to_vec())).map_err(|_| ()),
+        );
+        if sent.is_err() {
+            return;
         }
         let _ = self.out.send(Outbound::Frame(Frame::PrefillDone {
             id,
@@ -216,6 +442,45 @@ impl PrefillEventSink for PrefillWireSink {
             kv_len: outcome.len as u32,
             exec_time: outcome.exec_time,
         }));
+    }
+}
+
+impl PrefillEventSink for PrefillWireSink {
+    fn prefilled(
+        &self,
+        id: u64,
+        outcome: PrefillOutcome,
+        max_new: u32,
+        _metrics: RequestMetrics,
+        target: Option<DirectTarget>,
+    ) {
+        if let Some(t) = target.filter(|_| max_new > 1) {
+            let codec = load_codec(&self.codec);
+            match self.peers.handoff(codec, &t, id, &outcome, max_new - 1) {
+                Ok(()) => {
+                    // Acked by the decode shard: tell the scheduler with
+                    // the lightweight commit — no KV on this connection.
+                    let _ = self.out.send(Outbound::Frame(Frame::HandoffCommit {
+                        unit: t.unit,
+                        id,
+                        first_token: outcome.first_token,
+                        kv_len: outcome.len as u32,
+                        max_new: max_new - 1,
+                        exec_time: outcome.exec_time,
+                    }));
+                    return;
+                }
+                Err(e) => {
+                    log::warn!(
+                        "direct handoff of job {id} to {}#{} failed ({e:#}); \
+                         falling back to scheduler relay",
+                        t.addr,
+                        t.unit
+                    );
+                }
+            }
+        }
+        self.relay(id, &outcome);
     }
 
     fn failed(&self, id: u64) {
@@ -328,6 +593,24 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
     let clock = Arc::new(RealClock::new());
     let (ev_tx, ev_rx) = channel::<Outbound>();
     let (ready_tx, ready_rx) = channel::<bool>();
+    // Codec negotiated with the current scheduler connection (what this
+    // shard's senders produce; receivers decode self-describing blocks
+    // regardless).
+    let codec = Arc::new(AtomicU8::new(KvCodec::Raw.to_wire()));
+    // Inbound-KV byte accounting (relay admits + direct peer handoffs),
+    // reported to the scheduler in every StatsReply.
+    let kv_in: Arc<KvWireCounters> = Arc::default();
+    // Direct-transfer peer pool (prefill role only; created unconditionally
+    // so the sink type stays uniform).
+    let peers = Arc::new(PeerPool::new());
+    // Ids already admitted through the peer path (decode role). A
+    // prefill shard whose HandoffAck was lost re-streams the same job on
+    // a fresh connection; the re-commit must be acked *without*
+    // re-admitting or re-emitting its first token. Cleared whenever a
+    // new scheduler connection aborts the shard's state (fresh id
+    // space).
+    let direct_seen: Arc<Mutex<HashSet<u64>>> = Arc::default();
+    let stop_flag = Arc::new(AtomicBool::new(false));
     let mut unit_threads = Vec::new();
     let channels = match cfg.role {
         ShardRole::Decode => {
@@ -370,7 +653,11 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
                 let g = Arc::new(PrefillGauges::default());
                 gauges.push(g.clone());
                 let spec = cfg.engine.clone();
-                let sink = PrefillWireSink { out: ev_tx.clone() };
+                let sink = PrefillWireSink {
+                    out: ev_tx.clone(),
+                    peers: peers.clone(),
+                    codec: codec.clone(),
+                };
                 let seed = cfg.seed.wrapping_add(8000 + u as u64);
                 let ready = ready_tx.clone();
                 unit_threads.push(std::thread::spawn(move || {
@@ -396,11 +683,36 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
             _ => return Err(anyhow!("a shard unit failed to build its engine (see log)")),
         }
     }
+
+    // Decode shards additionally serve a *peer listener*: the endpoint
+    // prefill shards stream direct KV handoffs into. Bound on the same
+    // interface as the scheduler listener, ephemeral port, advertised in
+    // every HelloAck. Peer connections are concurrent (one thread each)
+    // and independent of the single-scheduler accept loop below.
+    let peer_port = match cfg.role {
+        ShardRole::Decode => {
+            let ip = listener.local_addr()?.ip();
+            let peer_listener = TcpListener::bind((ip, 0))?;
+            let port = peer_listener.local_addr()?.port();
+            peer_listener.set_nonblocking(true)?;
+            let peer_channels = match &channels {
+                UnitChannels::Decode { txs, .. } => txs.clone(),
+                UnitChannels::Prefill { .. } => unreachable!("decode role"),
+            };
+            let (ev_tx, kv_in, stop) = (ev_tx.clone(), kv_in.clone(), stop_flag.clone());
+            let seen = direct_seen.clone();
+            std::thread::spawn(move || {
+                peer_accept_loop(peer_listener, peer_channels, ev_tx, kv_in, seen, stop)
+            });
+            port
+        }
+        ShardRole::Prefill => 0,
+    };
     log::info!(
         "{} shard ready: {units} units{}",
         cfg.role.name(),
         match cfg.role {
-            ShardRole::Decode => format!(" × {} slots", cfg.batch),
+            ShardRole::Decode => format!(" × {} slots, peer port {peer_port}", cfg.batch),
             ShardRole::Prefill => String::new(),
         }
     );
@@ -431,7 +743,6 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
                 {
                     let mut cur = current.lock().unwrap();
                     if let Some(conn) = cur.as_mut() {
-                        use std::io::Write;
                         if conn.write_all(&bytes).is_err() {
                             // The scheduler hung up (or the write timed
                             // out mid-frame): shut the socket so the peer
@@ -461,7 +772,9 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
         log::info!("scheduler connected from {peer}");
         // A failed handshake/setup on one connection must never take the
         // whole shard down — drop it and keep accepting.
-        stopping = match serve_connection(conn, &cfg, &channels, &ev_tx, &current) {
+        stopping = match serve_connection(
+            conn, &cfg, &channels, &ev_tx, &current, &codec, &kv_in, &direct_seen, peer_port,
+        ) {
             Ok(stop) => stop,
             Err(e) => {
                 log::warn!("connection setup failed: {e:#}");
@@ -471,7 +784,9 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
     }
 
     // Graceful drain: units finish their active work (flushing terminal
-    // frames through the writer), then Bye closes the stream.
+    // frames through the writer), then Bye closes the stream. The peer
+    // listener threads observe the stop flag and exit on their next tick.
+    stop_flag.store(true, Ordering::SeqCst);
     channels.send_stops();
     for t in unit_threads {
         let _ = t.join();
@@ -485,12 +800,17 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
 /// Serve one scheduler connection. Returns `Ok(true)` when the scheduler
 /// asked the shard to stop, `Ok(false)` on disconnect (go back to
 /// accepting).
+#[allow(clippy::too_many_arguments)]
 fn serve_connection(
     conn: TcpStream,
     cfg: &ShardConfig,
     channels: &UnitChannels,
     ev_tx: &Sender<Outbound>,
     current: &Arc<Mutex<Option<TcpStream>>>,
+    codec: &AtomicU8,
+    kv_in: &KvWireCounters,
+    direct_seen: &Mutex<HashSet<u64>>,
+    peer_port: u16,
 ) -> Result<bool> {
     conn.set_nodelay(true)?;
     conn.set_read_timeout(Some(Duration::from_millis(250)))?;
@@ -515,9 +835,9 @@ fn serve_connection(
             }
         }
     };
-    match hello {
-        Frame::Hello { version } if version == PROTO_VERSION => {}
-        Frame::Hello { version } => {
+    let kv_wire = match hello {
+        Frame::Hello { version, kv_wire } if version == PROTO_VERSION => kv_wire,
+        Frame::Hello { version, .. } => {
             log::warn!("scheduler speaks protocol v{version}, we speak v{PROTO_VERSION}");
             return Ok(false);
         }
@@ -525,7 +845,10 @@ fn serve_connection(
             log::warn!("expected Hello, got {other:?}");
             return Ok(false);
         }
-    }
+    };
+    // Adopt the scheduler's codec for everything this shard produces
+    // (and for the peer handshakes its prefill instances open).
+    codec.store(kv_wire.to_wire(), Ordering::Relaxed);
     {
         let mut w = conn.try_clone()?;
         proto::write_frame(
@@ -540,6 +863,8 @@ fn serve_connection(
                     // "slots" only exists for the shape check.
                     ShardRole::Prefill => 1,
                 },
+                kv_wire,
+                peer_port,
             },
         )?;
     }
@@ -557,6 +882,10 @@ fn serve_connection(
                 break;
             }
         }
+        // The new scheduler brings a fresh id space: the peer-path dedup
+        // set guards only against re-streamed handoffs within one
+        // scheduler epoch.
+        direct_seen.lock().unwrap().clear();
         // The acks fence unit *state*; frames a unit queued just before
         // its abort could still sit in the outbound queue. Drain the
         // queue (dropped — no connection attached) behind a flush
@@ -578,6 +907,7 @@ fn serve_connection(
     // wedges the shard forever.
     const CONN_DEAD_AFTER: Duration = Duration::from_secs(6);
     let mut idle = proto::IdleGuard::new(&reader);
+    let mut consumed_at_last_frame = reader.consumed();
     let result = loop {
         if idle.idle_for(&reader) >= CONN_DEAD_AFTER {
             log::warn!("scheduler silent for {CONN_DEAD_AFTER:?}; dropping the connection");
@@ -586,7 +916,9 @@ fn serve_connection(
         match reader.poll(&mut rd) {
             Ok(Some(frame)) => {
                 idle.touch();
-                if handle_scheduler_frame(frame, cfg, channels, ev_tx) {
+                let wire_len = reader.consumed() - consumed_at_last_frame;
+                consumed_at_last_frame = reader.consumed();
+                if handle_scheduler_frame(frame, wire_len, cfg, channels, ev_tx, kv_in) {
                     break true;
                 }
             }
@@ -613,9 +945,11 @@ fn serve_connection(
 /// Returns `true` when the frame was `Stop` (drain and exit).
 fn handle_scheduler_frame(
     frame: Frame,
+    wire_len: u64,
     cfg: &ShardConfig,
     channels: &UnitChannels,
     ev_tx: &Sender<Outbound>,
+    kv_in: &KvWireCounters,
 ) -> bool {
     match frame {
         Frame::Admit {
@@ -634,6 +968,9 @@ fn handle_scheduler_frame(
                 let _ = ev_tx.send(Outbound::Frame(Frame::Rejected { id }));
                 return false;
             };
+            // Relay-path inbound KV: the whole frame crossed the wire for
+            // this sequence's caches.
+            kv_in.record(wire_len, 4 * (k.len() as u64 + v.len() as u64));
             let job = AdmitJob {
                 id,
                 outcome: Box::new(PrefillOutcome {
@@ -680,6 +1017,7 @@ fn handle_scheduler_frame(
                         // Shard-local bookkeeping only; the scheduler
                         // keeps the real wall-clock metrics.
                         metrics: RequestMetrics::arrive(0.0, len),
+                        target: j.target,
                     }
                 })
                 .collect();
@@ -705,12 +1043,195 @@ fn handle_scheduler_frame(
         }
         Frame::StatsRequest => {
             let units = channels.unit_loads(cfg.batch);
-            let _ = ev_tx.send(Outbound::Frame(Frame::StatsReply { units }));
+            let (kv_wire_bytes, kv_raw_bytes) = kv_in.snapshot();
+            let _ = ev_tx.send(Outbound::Frame(Frame::StatsReply {
+                units,
+                kv_wire_bytes,
+                kv_raw_bytes,
+            }));
         }
         Frame::Stop => return true,
         other => log::debug!("ignoring frame {other:?}"),
     }
     false
+}
+
+/// Accept loop of a decode shard's peer listener: each connection is one
+/// prefill shard streaming direct KV handoffs; served concurrently, each
+/// on its own thread, fully independent of the scheduler connection.
+fn peer_accept_loop(
+    listener: TcpListener,
+    txs: Vec<Sender<UnitMsg>>,
+    ev_tx: Sender<Outbound>,
+    kv_in: Arc<KvWireCounters>,
+    direct_seen: Arc<Mutex<HashSet<u64>>>,
+    stop: Arc<AtomicBool>,
+) {
+    loop {
+        match listener.accept() {
+            Ok((conn, peer)) => {
+                log::info!("direct-transfer peer connected from {peer}");
+                let (txs, ev_tx, kv_in, seen, stop) = (
+                    txs.clone(),
+                    ev_tx.clone(),
+                    kv_in.clone(),
+                    direct_seen.clone(),
+                    stop.clone(),
+                );
+                std::thread::spawn(move || {
+                    if let Err(e) = serve_peer(conn, &txs, &ev_tx, &kv_in, &seen, &stop) {
+                        log::info!("peer {peer} connection ended: {e:#}");
+                    }
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => {
+                log::warn!("peer accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Serve one direct-transfer peer connection: `PeerHello` handshake,
+/// then per-job `KvSegment*` + `HandoffCommit`, each commit admitting
+/// the assembled sequence into its unit and acked back to the peer. A
+/// dying connection drops its partial assemblies — nothing was admitted,
+/// so the prefill side's relay fallback (or the scheduler's eviction of
+/// the decode registration) terminalizes the job.
+fn serve_peer(
+    conn: TcpStream,
+    txs: &[Sender<UnitMsg>],
+    ev_tx: &Sender<Outbound>,
+    kv_in: &KvWireCounters,
+    direct_seen: &Mutex<HashSet<u64>>,
+    stop: &AtomicBool,
+) -> Result<()> {
+    conn.set_nonblocking(false)?;
+    conn.set_nodelay(true)?;
+    conn.set_read_timeout(Some(Duration::from_millis(250)))?;
+    conn.set_write_timeout(Some(Duration::from_secs(5)))?;
+    let mut rd = conn.try_clone()?;
+    let mut w = conn.try_clone()?;
+    let mut reader = FrameReader::new();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        match reader.poll(&mut rd)? {
+            Some(Frame::PeerHello { version, .. }) if version == PROTO_VERSION => break,
+            Some(Frame::PeerHello { version, .. }) => {
+                return Err(anyhow!("peer speaks v{version}, we speak v{PROTO_VERSION}"))
+            }
+            Some(other) => return Err(anyhow!("expected PeerHello, got {other:?}")),
+            None if Instant::now() >= deadline => return Err(anyhow!("peer handshake timed out")),
+            None => {}
+        }
+    }
+    proto::write_frame(&mut w, &Frame::PeerHelloAck { version: PROTO_VERSION })?;
+
+    // Per-job KV assembly (keyed by request id, both halves).
+    let mut assembling: HashMap<u64, (Vec<f32>, Vec<f32>)> = HashMap::new();
+    let mut consumed_at_last_frame = reader.consumed();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let frame = match reader.poll(&mut rd) {
+            Ok(Some(f)) => f,
+            Ok(None) => continue,
+            Err(ProtoError::Closed) => return Ok(()),
+            Err(e) => return Err(e.into()),
+        };
+        let wire_len = reader.consumed() - consumed_at_last_frame;
+        consumed_at_last_frame = reader.consumed();
+        match frame {
+            Frame::KvSegment {
+                id,
+                half,
+                offset,
+                total,
+                data,
+            } => {
+                kv_in.record(wire_len, 4 * data.len() as u64);
+                let entry = assembling.entry(id).or_default();
+                if let Err(why) =
+                    proto::apply_kv_segment(&mut entry.0, &mut entry.1, half, offset, total, &data)
+                {
+                    // Malformed stream: a protocol-level violation costs
+                    // the peer connection (its prefill shard falls back
+                    // to relay for in-flight jobs), never the shard.
+                    return Err(anyhow!("malformed KV segment for job {id}: {why}"));
+                }
+            }
+            Frame::HandoffCommit {
+                unit,
+                id,
+                first_token,
+                kv_len,
+                max_new,
+                exec_time,
+            } => {
+                if !direct_seen.lock().unwrap().insert(id) {
+                    // A prefill shard whose ack was lost re-streamed a
+                    // handoff this shard already owns: ack again, admit
+                    // nothing, emit nothing — the original sequence's
+                    // stream is already running.
+                    log::info!("duplicate direct handoff for job {id}; re-acking only");
+                    assembling.remove(&id);
+                    proto::write_frame(&mut w, &Frame::HandoffAck { id })?;
+                    continue;
+                }
+                let (k, v) = assembling.remove(&id).unwrap_or_default();
+                let job = AdmitJob {
+                    id,
+                    outcome: Box::new(PrefillOutcome {
+                        first_token,
+                        len: kv_len as usize,
+                        k,
+                        v,
+                        exec_time,
+                        passes: 1,
+                    }),
+                    max_new,
+                    // Shard-local bookkeeping only (KV gauge); real
+                    // metrics live scheduler-side in the direct
+                    // registration made at dispatch.
+                    metrics: RequestMetrics::arrive(0.0, kv_len),
+                };
+                let admitted = match txs.get(unit as usize) {
+                    Some(tx) => {
+                        // Token index 0 *before* the admit: both ride the
+                        // shard's single outbound queue, so the first
+                        // token precedes every decode-step token on the
+                        // scheduler connection.
+                        let _ = ev_tx.send(Outbound::Frame(Frame::Token {
+                            id,
+                            index: 0,
+                            token: first_token,
+                        }));
+                        tx.send(UnitMsg::Admit(job)).is_ok()
+                    }
+                    None => false,
+                };
+                if !admitted {
+                    log::warn!("direct handoff for job {id} names unknown unit {unit}; rejecting");
+                    let _ = ev_tx.send(Outbound::Frame(Frame::Rejected { id }));
+                }
+                // Ack either way: the handoff reached a terminal owner
+                // (the unit, or a Rejected on the scheduler stream) and
+                // must not be relayed a second time.
+                proto::write_frame(&mut w, &Frame::HandoffAck { id })?;
+            }
+            Frame::Ping { nonce, t_us } => {
+                proto::write_frame(&mut w, &Frame::Pong { nonce, t_us })?;
+            }
+            other => log::debug!("peer: ignoring frame {other:?}"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -724,6 +1245,7 @@ mod tests {
             t_decode_step: 0.001,
             chunk: 128,
             jitter: 0.0,
+            kv_elems_per_token: 4,
         })
     }
 
@@ -756,6 +1278,31 @@ mod tests {
                 }
             }
         }
+
+        /// Handshake as a scheduler; returns the advertised
+        /// `(units, slots, peer_port)`.
+        fn handshake(&mut self, role: ShardRole, kv_wire: KvCodec) -> (u32, u32, u16) {
+            self.send(&Frame::Hello {
+                version: PROTO_VERSION,
+                kv_wire,
+            });
+            match self.recv() {
+                Frame::HelloAck {
+                    version,
+                    role: r,
+                    units,
+                    slots,
+                    kv_wire: acked,
+                    peer_port,
+                } => {
+                    assert_eq!(version, PROTO_VERSION);
+                    assert_eq!(r, role);
+                    assert_eq!(acked, kv_wire, "shard must echo the proposed codec");
+                    (units, slots, peer_port)
+                }
+                other => panic!("expected HelloAck, got {other:?}"),
+            }
+        }
     }
 
     /// Raw protocol smoke against an in-thread decode shard: handshake,
@@ -775,14 +1322,9 @@ mod tests {
         let shard = std::thread::spawn(move || run_shard(cfg, listener));
 
         let mut c = ShardClient::connect(addr);
-        c.send(&Frame::Hello { version: PROTO_VERSION });
-        let ack = Frame::HelloAck {
-            version: PROTO_VERSION,
-            role: ShardRole::Decode,
-            units: 2,
-            slots: 4,
-        };
-        assert_eq!(c.recv(), ack);
+        let (units, slots, peer_port) = c.handshake(ShardRole::Decode, KvCodec::Raw);
+        assert_eq!((units, slots), (2, 4));
+        assert_ne!(peer_port, 0, "decode shards must advertise a peer listener");
 
         c.send(&Frame::Admit {
             unit: 1,
@@ -817,7 +1359,7 @@ mod tests {
 
         c.send(&Frame::StatsRequest);
         match c.recv() {
-            Frame::StatsReply { units } => assert_eq!(units.len(), 2),
+            Frame::StatsReply { units, .. } => assert_eq!(units.len(), 2),
             other => panic!("unexpected frame {other:?}"),
         }
 
@@ -842,8 +1384,7 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let shard = std::thread::spawn(move || run_shard(cfg, listener));
         let mut c = ShardClient::connect(addr);
-        c.send(&Frame::Hello { version: PROTO_VERSION });
-        c.recv(); // HelloAck
+        c.handshake(ShardRole::Decode, KvCodec::Raw);
         c.send(&Frame::Admit {
             unit: 5,
             id: 1,
@@ -860,11 +1401,10 @@ mod tests {
     }
 
     /// Raw protocol smoke against an in-thread *prefill* shard: the
-    /// dispatch→KvSegment*→PrefillDone handoff plus EndForward backlog
-    /// feedback, stats, and a clean drain. The mock engine produces
-    /// empty KV, so the handoff here carries no segments and the commit
-    /// alone must suffice; segment framing itself is covered by the
-    /// proto property tests and the remote-prefill client test.
+    /// dispatch→KvSegment*→PrefillDone relay handoff plus EndForward
+    /// backlog feedback, stats, and a clean drain. The mock engine
+    /// synthesizes KV (4 elements/token here), so real coded segments
+    /// cross the wire ahead of each commit.
     #[test]
     fn prefill_shard_streams_the_kv_handoff_end_to_end() {
         let cfg = ShardConfig {
@@ -880,14 +1420,9 @@ mod tests {
         let shard = std::thread::spawn(move || run_shard(cfg, listener));
 
         let mut c = ShardClient::connect(addr);
-        c.send(&Frame::Hello { version: PROTO_VERSION });
-        let ack = Frame::HelloAck {
-            version: PROTO_VERSION,
-            role: ShardRole::Prefill,
-            units: 1,
-            slots: 1,
-        };
-        assert_eq!(c.recv(), ack);
+        let (units, slots, peer_port) = c.handshake(ShardRole::Prefill, KvCodec::Lz);
+        assert_eq!((units, slots), (1, 1));
+        assert_eq!(peer_port, 0, "prefill shards have no peer listener");
 
         c.send(&Frame::PrefillDispatch {
             unit: 0,
@@ -896,21 +1431,25 @@ mod tests {
                     id: 7,
                     max_new: 4,
                     prompt: vec![1, 2, 3, 4, 5],
+                    target: None,
                 },
                 proto::PrefillJobWire {
                     id: 8,
                     max_new: 4,
                     prompt: vec![9; 12],
+                    target: None,
                 },
             ],
         });
         let mut done_ids = Vec::new();
+        let mut segments = 0u32;
         let mut end_forwards = 0u32;
         while done_ids.len() < 2 || end_forwards < 2 {
             match c.recv() {
                 Frame::KvSegment { id, offset, total, data, .. } => {
                     assert!(id == 7 || id == 8);
                     assert!(offset as usize + data.len() <= total as usize);
+                    segments += 1;
                 }
                 Frame::PrefillDone { id, kv_len, .. } => {
                     let expect_len = if id == 7 { 5 } else { 12 };
@@ -926,10 +1465,11 @@ mod tests {
             }
         }
         assert_eq!(done_ids.len(), 2);
+        assert!(segments >= 2, "synthesized KV must cross the wire as segments");
 
         c.send(&Frame::StatsRequest);
         match c.recv() {
-            Frame::StatsReply { units } => {
+            Frame::StatsReply { units, .. } => {
                 assert_eq!(units.len(), 1);
                 assert_eq!(units[0].active, 0, "queue drained");
             }
@@ -969,14 +1509,14 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let shard = std::thread::spawn(move || run_shard(cfg, listener));
         let mut c = ShardClient::connect(addr);
-        c.send(&Frame::Hello { version: PROTO_VERSION });
-        c.recv(); // HelloAck
+        c.handshake(ShardRole::Prefill, KvCodec::Raw);
         c.send(&Frame::PrefillDispatch {
             unit: 3,
             jobs: vec![proto::PrefillJobWire {
                 id: 11,
                 max_new: 2,
                 prompt: vec![1, 2],
+                target: None,
             }],
         });
         assert_eq!(c.recv(), Frame::PrefillFailed { id: 11 });

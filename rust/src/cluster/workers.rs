@@ -45,7 +45,7 @@ use super::dispatch::{
 use crate::engine::mock::{MockEngine, MockEngineConfig};
 use crate::engine::sampler::Sampling;
 use crate::engine::{EngineBackend, MiniEngine, PrefillOutcome};
-use crate::metrics::{DecodePoolStats, RequestMetrics, ServingReport};
+use crate::metrics::{DecodePoolStats, KvWireGauge, RequestMetrics, ServingReport};
 use crate::runtime::Runtime;
 use crate::scheduler::decode::DecodeSchedConfig;
 use crate::scheduler::flow::{AdmissionController, AdmissionDecision, FlowPolicy};
@@ -54,15 +54,15 @@ use crate::scheduler::pbaa::PbaaConfig;
 use crate::scheduler::staggered::{SchedulerAction, StaggeredConfig};
 use crate::scheduler::state::DpState;
 use crate::scheduler::types::{DpUnitId, Request};
-use crate::transport::proto::UnitLoad;
+use crate::transport::proto::{DirectTarget, UnitLoad};
 use crate::transport::remote::{connect_prefill_shard, connect_shard, RemoteShardConfig};
 use crate::transport::{
-    AdmitJob, DecodeTransport, LocalPrefill, LocalUnit, PrefillMsg, PrefillSinks,
-    PrefillTransport, PrefillWork, ShardSinks, UnitMsg,
+    AdmitJob, DecodeTransport, KvCodec, KvWireCounters, LocalPrefill, LocalUnit, PrefillMsg,
+    PrefillSinks, PrefillTransport, PrefillWork, ShardSinks, UnitMsg,
 };
 use crate::util::{Clock, RealClock};
 use anyhow::{anyhow, Result};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -198,6 +198,16 @@ pub struct RealClusterConfig {
     /// expected resident length (`prompt + max_new`) and parks when no
     /// unit has room. 0 disables the budget (slot-count only).
     pub kv_budget: u64,
+    /// KV wire codec this deployment produces (`--kv-wire`): negotiated
+    /// with every shard at handshake, used for relayed admits and the
+    /// prefill shards' segment streams.
+    pub kv_wire: KvCodec,
+    /// Whether finished prefills on remote shards may stream their KV
+    /// straight to the target decode shard (`HandoffCommit` to the
+    /// scheduler) instead of relaying through it. `false` forces the
+    /// relay path everywhere (the comparison baseline, and a fallback
+    /// switch).
+    pub direct_handoff: bool,
     /// Whether draining this cluster also stops its remote shard
     /// processes (the serving default). `false` merely disconnects them,
     /// leaving the shards running for another cluster — e.g. the example
@@ -238,6 +248,8 @@ impl Default for RealClusterConfig {
             remote_decode: Vec::new(),
             remote_prefill: Vec::new(),
             kv_budget: crate::config::LIVE_KV_BUDGET_TOKENS,
+            kv_wire: KvCodec::Raw,
+            direct_handoff: true,
             stop_shards_on_drain: true,
         }
     }
@@ -342,9 +354,15 @@ enum SchedMsg {
     },
     /// A remote prefill shard died with these jobs queued or
     /// mid-handoff: reject them upstream (they hold no decode ledger
-    /// charge yet).
+    /// charge — unless pre-placed for direct transfer, which the
+    /// handler unwinds).
     PrefillEvict {
         ids: Vec<u64>,
+    },
+    /// A remote prefill shard reported one job's prefill failed
+    /// terminally: reject upstream, unwinding any direct pre-placement.
+    PrefillFailed {
+        id: u64,
     },
     /// A decode shard's engine-truth gauges arrived (`StatsReply`):
     /// cross-check them against the scheduler's own ledger. `base` is
@@ -352,6 +370,16 @@ enum SchedMsg {
     ShardStats {
         base: usize,
         loads: Vec<UnitLoad>,
+        /// The shard's inbound-KV wire accounting (see `KvWireGauge`).
+        kv_wire_bytes: u64,
+        kv_raw_bytes: u64,
+    },
+    /// A direct prefill→decode handoff committed (`HandoffCommit` from
+    /// the prefill shard, decode-acked): the KV skipped the scheduler;
+    /// stamp first-token metrics onto the decode-side registration.
+    DirectCommit {
+        id: u64,
+        exec_time: f64,
     },
     Drain,
 }
@@ -621,13 +649,21 @@ impl RealCluster {
                 return Err(anyhow!("duplicate shard address {addr} in {flag}"));
             }
         }
+        // Relay-path KV accounting, shared by every shard connection and
+        // published in the `kv_wire` gauge.
+        let relay_kv: Arc<KvWireCounters> = Arc::default();
+        let shard_cfg = |addr: &str| {
+            let mut rc = RemoteShardConfig::new(addr);
+            rc.kv_wire = cfg.kv_wire;
+            rc
+        };
         for addr in &cfg.remote_decode {
             // The shard's units join the flat pool after everything
             // connected so far; the stats sink needs that base index to
             // map its shard-local `StatsReply` onto pool units.
             let base = transports.len();
             let sinks = shard_sinks(to_sched.clone(), router_tx.clone(), shared.clone(), base);
-            let units = match connect_shard(RemoteShardConfig::new(addr), sinks) {
+            let units = match connect_shard(shard_cfg(addr), sinks, relay_kv.clone()) {
                 Ok(units) => units,
                 Err(e) => {
                     release_all(&mut transports, &mut prefills);
@@ -641,8 +677,9 @@ impl RealCluster {
         }
         for addr in &cfg.remote_prefill {
             let base = prefills.len() as u32;
-            let sinks = prefill_shard_sinks(to_sched.clone(), router_tx.clone(), shared.clone(), base);
-            let units = match connect_prefill_shard(RemoteShardConfig::new(addr), sinks) {
+            let sinks =
+                prefill_shard_sinks(to_sched.clone(), router_tx.clone(), shared.clone(), base);
+            let units = match connect_prefill_shard(shard_cfg(addr), sinks, relay_kv.clone()) {
                 Ok(units) => units,
                 Err(e) => {
                     release_all(&mut transports, &mut prefills);
@@ -682,6 +719,7 @@ impl RealCluster {
             );
             decorate_stats(&mut stats, &transports, &HashMap::new());
             decorate_prefill_stats(&mut stats, &prefills, &[]);
+            stats.kv_wire.codec = cfg.kv_wire.name().to_string();
             *shared.decode_stats.lock().unwrap() = stats;
         }
 
@@ -689,8 +727,9 @@ impl RealCluster {
             let cfg2 = cfg.clone();
             let router = router_tx.clone();
             let shared = shared.clone();
+            let relay_kv = relay_kv.clone();
             threads.push(std::thread::spawn(move || {
-                scheduler_loop(cfg2, sched_rx, prefills, transports, router, shared);
+                scheduler_loop(cfg2, sched_rx, prefills, transports, router, shared, relay_kv);
             }));
         }
 
@@ -844,12 +883,21 @@ struct PoolAdmission<'a> {
     kv_budget: u64,
     /// Transport liveness snapshot, taken at cycle start.
     alive: &'a [bool],
+    /// When set, additionally require the unit to be a direct-transfer
+    /// peer (the dispatch-time pre-placement for direct handoffs; a
+    /// unit without a peer listener simply isn't a candidate — the job
+    /// falls back to relay placement at prefill completion).
+    peer_only: Option<&'a [bool]>,
 }
 
 impl DecodeAdmission for PoolAdmission<'_> {
     fn admissible(&mut self, state: &DpState, join: &DecodeJoin) -> bool {
         let u = state.id.instance as usize;
         self.alive[u]
+            && match self.peer_only {
+                Some(peers) => peers[u],
+                None => true,
+            }
             && state.batch < self.slots[u]
             && (self.kv_budget == 0
                 || state.kv_tokens + join.total_len() as u64 <= self.kv_budget)
@@ -987,6 +1035,7 @@ fn place_parked(
         slots,
         kv_budget,
         alive: &alive,
+        peer_only: None,
     };
     let out = core.place_decode(joins, now, &mut adm);
     changed |= !out.placed.is_empty();
@@ -1026,6 +1075,28 @@ fn decorate_stats(
         g.rtt_ms = t.rtt_ms();
         g.engine_kv_tokens = engine_truth.get(&i).map(|l| l.kv_tokens);
     }
+}
+
+/// Fill the snapshot's KV wire gauge: the scheduler's own relay
+/// accounting plus the sum of the decode shards' reported inbound-KV
+/// counters.
+fn decorate_kv_stats(
+    stats: &mut DecodePoolStats,
+    codec: KvCodec,
+    relay: &KvWireCounters,
+    shard_kv: &HashMap<usize, (u64, u64)>,
+) {
+    let (relay_wire_bytes, relay_raw_bytes) = relay.snapshot();
+    let (wire_bytes, raw_bytes) = shard_kv
+        .values()
+        .fold((0, 0), |(w, r), (sw, sr)| (w + sw, r + sr));
+    stats.kv_wire = KvWireGauge {
+        codec: codec.name().to_string(),
+        wire_bytes,
+        raw_bytes,
+        relay_wire_bytes,
+        relay_raw_bytes,
+    };
 }
 
 /// Fill the snapshot's prefill section from the prefill transports and
@@ -1068,6 +1139,7 @@ const MAX_PREFILL_ATTEMPTS: u32 = 5;
 /// placement across the DP pool via [`DecodeTransport`]s (local engine
 /// threads and remote shards mix freely on both planes behind the same
 /// core).
+#[allow(clippy::too_many_arguments)]
 fn scheduler_loop(
     cfg: RealClusterConfig,
     rx: Receiver<SchedMsg>,
@@ -1075,6 +1147,7 @@ fn scheduler_loop(
     mut transports: Vec<Box<dyn DecodeTransport>>,
     router: Sender<RouterMsg>,
     shared: Arc<ClusterShared>,
+    relay_kv: Arc<KvWireCounters>,
 ) {
     let mode = match &cfg.mode {
         RealSchedMode::Staggered(sc) => {
@@ -1117,6 +1190,15 @@ fn scheduler_loop(
     // divergence streak behind the logged cross-check.
     let mut engine_truth: HashMap<usize, UnitLoad> = HashMap::new();
     let mut divergent_polls: Vec<u32> = vec![0; transports.len()];
+    // Direct-transfer bookkeeping: jobs pre-placed onto a decode unit at
+    // dispatch (id → flat pool unit) awaiting their HandoffCommit, and
+    // direct jobs already terminalized by their decode shard's death —
+    // whose late relay fallback must be dropped, not re-served.
+    let mut direct_targets: HashMap<u64, usize> = HashMap::new();
+    let mut direct_evicted: HashSet<u64> = HashSet::new();
+    // Latest per-shard inbound-KV counters (keyed by the shard's base
+    // unit index), summed into the published kv_wire gauge.
+    let mut shard_kv: HashMap<usize, (u64, u64)> = HashMap::new();
     let mut next_timer: Option<f64> = None;
     let mut stop = false;
     // Shard liveness/RTT can change without ledger traffic, so pools
@@ -1172,8 +1254,52 @@ fn scheduler_loop(
                 outcome,
                 max_new,
                 metrics,
-            }) => park_join(&mut parked, &mut payloads, id, outcome, max_new, metrics),
+            }) => {
+                if direct_evicted.remove(&id) {
+                    // Terminally rejected when its decode target died;
+                    // the late relay has no live subscriber — drop it.
+                    log::debug!("dropping relay fallback for evicted direct job {id}");
+                } else if let Some(u) = direct_targets.remove(&id) {
+                    // Relay fallback for a direct-dispatched job (the
+                    // peer link failed — or only its ack did). Re-admit
+                    // on the *pre-placed* unit, keeping the existing
+                    // ledger charge: if the direct handoff actually
+                    // landed (ack lost), the unit drops the duplicate
+                    // admit and the original stream continues under the
+                    // re-registered pending entry; any other unit would
+                    // risk two engines generating the same id. Only a
+                    // dead pre-placed unit falls back to free placement.
+                    pool_dirty = true;
+                    let mut unplaced = Some(AdmitJob {
+                        id,
+                        outcome,
+                        max_new,
+                        metrics,
+                    });
+                    if transports[u].alive() {
+                        match transports[u].admit(unplaced.take().expect("job present")) {
+                            Ok(()) => {}
+                            Err(job) => unplaced = Some(job),
+                        }
+                    }
+                    if let Some(job) = unplaced {
+                        transports[u].cancel_direct(id);
+                        core.on_decode_leave(id, now);
+                        park_join(
+                            &mut parked,
+                            &mut payloads,
+                            id,
+                            job.outcome,
+                            job.max_new,
+                            job.metrics,
+                        );
+                    }
+                } else {
+                    park_join(&mut parked, &mut payloads, id, outcome, max_new, metrics);
+                }
+            }
             Ok(SchedMsg::DecodeDone { id }) => {
+                direct_targets.remove(&id);
                 pool_dirty |= core.on_decode_leave(id, now).is_some();
             }
             Ok(SchedMsg::Evict { ids }) => {
@@ -1184,6 +1310,12 @@ fn scheduler_loop(
                 for id in ids {
                     if core.on_decode_leave(id, now).is_some() {
                         pool_dirty = true;
+                        if direct_targets.remove(&id).is_some() {
+                            // The handoff target died before (or while)
+                            // the prefill streamed to it; remember the
+                            // id so its relay fallback is dropped.
+                            direct_evicted.insert(id);
+                        }
                         let _ = router.send(RouterMsg::Update {
                             id,
                             update: JobUpdate::Rejected { id },
@@ -1192,17 +1324,52 @@ fn scheduler_loop(
                 }
             }
             Ok(SchedMsg::PrefillEvict { ids }) => {
-                // A prefill shard died with these jobs in flight: they
-                // hold no decode ledger charge yet, so a terminal
-                // rejection upstream is the whole release.
+                // A prefill shard died with these jobs in flight. Jobs
+                // pre-placed for direct transfer hold a decode charge
+                // and a decode-side registration; everything else holds
+                // nothing, so a terminal rejection is the whole release.
                 for id in ids {
+                    if let Some(u) = direct_targets.remove(&id) {
+                        transports[u].cancel_direct(id);
+                        core.on_decode_leave(id, now);
+                        pool_dirty = true;
+                    }
                     let _ = router.send(RouterMsg::Update {
                         id,
                         update: JobUpdate::Rejected { id },
                     });
                 }
             }
-            Ok(SchedMsg::ShardStats { base, loads }) => {
+            Ok(SchedMsg::PrefillFailed { id }) => {
+                if let Some(u) = direct_targets.remove(&id) {
+                    transports[u].cancel_direct(id);
+                    core.on_decode_leave(id, now);
+                    pool_dirty = true;
+                }
+                let _ = router.send(RouterMsg::Update {
+                    id,
+                    update: JobUpdate::Rejected { id },
+                });
+            }
+            Ok(SchedMsg::DirectCommit { id, exec_time }) => {
+                // The decode shard acked the handoff and owns the
+                // sequence now; the pre-placement graduated into a
+                // normal resident charge (released by DecodeDone). An
+                // acked handoff also never falls back to relay, so any
+                // tombstone left by a decode-shard death is garbage.
+                direct_evicted.remove(&id);
+                if let Some(u) = direct_targets.remove(&id) {
+                    transports[u].patch_direct(id, now, exec_time);
+                    pool_dirty = true;
+                }
+            }
+            Ok(SchedMsg::ShardStats {
+                base,
+                loads,
+                kv_wire_bytes,
+                kv_raw_bytes,
+            }) => {
+                shard_kv.insert(base, (kv_wire_bytes, kv_raw_bytes));
                 // Engine-truth cross-check: compare the shard's own
                 // residency against the scheduler ledger. Transient
                 // skew is normal (admits/terminals in flight), so only
@@ -1272,7 +1439,7 @@ fn scheduler_loop(
                 SchedulerAction::Dispatch(batch) => {
                     let inst = batch.instance as usize;
                     let mut attempts: HashMap<u64, u32> = HashMap::new();
-                    let work: Vec<PrefillWork> = batch
+                    let mut work: Vec<PrefillWork> = batch
                         .assignments
                         .iter()
                         .filter_map(|a| jobs.remove(&a.request.id))
@@ -1286,11 +1453,63 @@ fn scheduler_loop(
                                 prompt: p.job.prompt,
                                 max_new: p.job.max_new,
                                 metrics: m,
+                                target: None,
                             }
                         })
                         .collect();
                     if work.is_empty() {
                         continue;
+                    }
+                    // Direct-transfer pre-placement: decide the Algorithm 3
+                    // decode placement *now*, inside the buffering window,
+                    // so the prefill shard can stream the KV straight to
+                    // its decode peer. Candidates are alive peer-capable
+                    // units with slot + KV-budget headroom; jobs with no
+                    // candidate (or a single-token budget) dispatch
+                    // untargeted and take the relay path at completion.
+                    if cfg.direct_handoff && prefills[inst].supports_direct() {
+                        let joins: Vec<DecodeJoin> = work
+                            .iter()
+                            .filter(|w| w.max_new > 1)
+                            .map(|w| DecodeJoin {
+                                request_id: w.id,
+                                kv_tokens: w.prompt.len() as u32,
+                                remaining_out: w.max_new - 1,
+                            })
+                            .collect();
+                        if !joins.is_empty() {
+                            let alive: Vec<bool> =
+                                transports.iter().map(|t| t.alive()).collect();
+                            let peers: Vec<bool> = transports
+                                .iter()
+                                .map(|t| t.direct_target().is_some())
+                                .collect();
+                            let mut adm = PoolAdmission {
+                                slots: &slots,
+                                kv_budget: cfg.kv_budget,
+                                alive: &alive,
+                                peer_only: Some(&peers),
+                            };
+                            let out = core.place_decode(joins, now, &mut adm);
+                            for (j, unit) in out.placed {
+                                let u = unit.instance as usize;
+                                let (Some(t), Some(w)) = (
+                                    transports[u].direct_target(),
+                                    work.iter_mut().find(|w| w.id == j.request_id),
+                                ) else {
+                                    // Peer vanished between the check and
+                                    // now: undo; relay will re-place.
+                                    core.on_decode_leave(j.request_id, now);
+                                    continue;
+                                };
+                                transports[u].expect_direct(w.id, w.metrics);
+                                direct_targets.insert(w.id, u);
+                                w.target = Some(t);
+                                pool_dirty = true;
+                            }
+                            // out.parked: no admissible peer right now —
+                            // those jobs simply dispatch untargeted.
+                        }
                     }
                     pool_dirty = true;
                     match prefills[inst].dispatch(work) {
@@ -1307,6 +1526,13 @@ fn scheduler_loop(
                                 work.len()
                             );
                             for w in work {
+                                // The dispatch never left: unwind any
+                                // direct pre-placement so the requeue
+                                // starts from a clean ledger.
+                                if let Some(u) = direct_targets.remove(&w.id) {
+                                    transports[u].cancel_direct(w.id);
+                                    core.on_decode_leave(w.id, now);
+                                }
                                 let tries = attempts.get(&w.id).copied().unwrap_or(0) + 1;
                                 if tries >= MAX_PREFILL_ATTEMPTS {
                                     log::warn!(
@@ -1366,6 +1592,7 @@ fn scheduler_loop(
             let mut stats = core.decode_stats(now);
             decorate_stats(&mut stats, &transports, &engine_truth);
             decorate_prefill_stats(&mut stats, &prefills, &prefill_dispatched);
+            decorate_kv_stats(&mut stats, cfg.kv_wire, &relay_kv, &shard_kv);
             *shared.decode_stats.lock().unwrap() = stats;
         }
     }
@@ -1385,6 +1612,7 @@ fn scheduler_loop(
         let mut stats = core.decode_stats(shared.clock.now_s());
         decorate_stats(&mut stats, &transports, &engine_truth);
         decorate_prefill_stats(&mut stats, &prefills, &prefill_dispatched);
+        decorate_kv_stats(&mut stats, cfg.kv_wire, &relay_kv, &shard_kv);
         *shared.decode_stats.lock().unwrap() = stats;
     }
     // In-process units always stop (their threads must exit with the
@@ -1414,7 +1642,17 @@ fn scheduler_loop(
 /// scheduler-side transport to re-deliver through the *same* channels.
 pub(crate) trait PrefillEventSink {
     /// Prefill finished: the outcome plus the job's dispatch-time state.
-    fn prefilled(&self, id: u64, outcome: PrefillOutcome, max_new: u32, metrics: RequestMetrics);
+    /// `target` is the scheduler's direct-transfer pre-placement, when
+    /// one was made (honored by the shard-side wire sink; in-process
+    /// sinks ignore it — a local handoff has no wire to skip).
+    fn prefilled(
+        &self,
+        id: u64,
+        outcome: PrefillOutcome,
+        max_new: u32,
+        metrics: RequestMetrics,
+        target: Option<DirectTarget>,
+    );
     /// Terminal prefill failure.
     fn failed(&self, id: u64);
     /// A pass completed; `remaining` is the runner's queued backlog in
@@ -1480,7 +1718,14 @@ struct LocalPrefillSink {
 }
 
 impl PrefillEventSink for LocalPrefillSink {
-    fn prefilled(&self, id: u64, outcome: PrefillOutcome, max_new: u32, metrics: RequestMetrics) {
+    fn prefilled(
+        &self,
+        id: u64,
+        outcome: PrefillOutcome,
+        max_new: u32,
+        metrics: RequestMetrics,
+        _target: Option<DirectTarget>,
+    ) {
         let t_first = self.shared.clock.now_s();
         deliver_prefilled(
             &self.to_sched,
@@ -1624,7 +1869,7 @@ pub(crate) fn run_prefill_unit<S: PrefillEventSink>(
         match engine.prefill(&w.prompt) {
             Ok(outcome) => {
                 let t_measured = outcome.exec_time;
-                sink.prefilled(w.id, outcome, w.max_new, w.metrics);
+                sink.prefilled(w.id, outcome, w.max_new, w.metrics, w.target);
                 let remaining: u32 = queue.iter().map(|q| q.prompt.len() as u32).sum();
                 sink.end_forward(instance, t_measured, remaining);
             }
@@ -1711,6 +1956,15 @@ fn shard_sinks(
         on_done: Box::new(move |id, tokens, mut metrics| {
             metrics.t_done = shared.clock.now_s();
             metrics.output_tokens = tokens.len() as u32;
+            if metrics.t_first_token < 0.0 {
+                // A direct-transfer sequence whose Done outran the
+                // HandoffCommit's metrics patch (the decode shard owns
+                // the whole stream, so nothing else stamps it):
+                // conservatively count TTFT as completion time rather
+                // than reporting it absent.
+                metrics.t_first_token = metrics.t_done;
+                metrics.t_exec_start = metrics.t_exec_start.max(metrics.t_dispatch);
+            }
             don.done(id, tokens, metrics);
         }),
         on_rejected: Box::new(move |id| rej.rejected(id)),
@@ -1719,8 +1973,13 @@ fn shard_sinks(
             // ledger and rejects exactly those upstream.
             let _ = to_sched.send(SchedMsg::Evict { ids });
         }),
-        on_stats: Box::new(move |loads| {
-            let _ = stats_sched.send(SchedMsg::ShardStats { base, loads });
+        on_stats: Box::new(move |loads, kv_wire_bytes, kv_raw_bytes| {
+            let _ = stats_sched.send(SchedMsg::ShardStats {
+                base,
+                loads,
+                kv_wire_bytes,
+                kv_raw_bytes,
+            });
         }),
     }
 }
@@ -1736,8 +1995,10 @@ fn prefill_shard_sinks(
     base: u32,
 ) -> PrefillSinks {
     let (prefilled_sched, prefilled_router) = (to_sched.clone(), router.clone());
-    let failed_router = router;
+    drop(router);
+    let failed_sched = to_sched.clone();
     let ef_sched = to_sched.clone();
+    let handoff_sched = to_sched.clone();
     PrefillSinks {
         on_prefilled: Box::new(move |id, outcome, max_new, metrics| {
             let t_first = shared.clock.now_s();
@@ -1751,11 +2012,16 @@ fn prefill_shard_sinks(
                 t_first,
             );
         }),
+        on_handoff: Box::new(move |id, exec_time| {
+            // The KV skipped the scheduler; the decode shard already
+            // emits the token stream (index 0 included). All that's left
+            // is graduating the pre-placement and stamping TTFT.
+            let _ = handoff_sched.send(SchedMsg::DirectCommit { id, exec_time });
+        }),
         on_failed: Box::new(move |id| {
-            let _ = failed_router.send(RouterMsg::Update {
-                id,
-                update: JobUpdate::Rejected { id },
-            });
+            // Through the scheduler thread: a direct-dispatched job's
+            // pre-placement must be unwound with the rejection.
+            let _ = failed_sched.send(SchedMsg::PrefillFailed { id });
         }),
         on_end_forward: Box::new(move |instance, t_measured, remaining| {
             let _ = ef_sched.send(SchedMsg::EndForward {
@@ -1840,6 +2106,15 @@ pub(crate) fn run_decode_unit<S: DecodeEventSink, F: Fn() -> f64>(
         // Admit as many pending sequences as there are free slots.
         let mut rest = Vec::new();
         for job in pending.drain(..) {
+            if tracks.contains_key(&job.id) {
+                // Duplicate id: a direct handoff whose ack was presumed
+                // lost can be re-admitted by the relay fallback while
+                // the original is still generating. The engine already
+                // serves it — drop the duplicate silently (one token
+                // stream, one terminal).
+                log::warn!("decode unit {label}: dropping duplicate admit for {}", job.id);
+                continue;
+            }
             if engine.free_slots() == 0 {
                 rest.push(job);
                 continue;

@@ -25,6 +25,12 @@ pub struct MockEngineConfig {
     pub chunk: u32,
     /// Multiplicative execution-time jitter in `[1-j, 1+j]`.
     pub jitter: f64,
+    /// Synthetic KV elements per prompt token, per cache half (0 = empty
+    /// caches). Deterministic per prompt, so the whole prefill→decode KV
+    /// handoff — chunked segments, wire codecs, direct transfer, byte
+    /// accounting — is exercised on a bare checkout with content every
+    /// topology reproduces identically.
+    pub kv_elems_per_token: usize,
 }
 
 impl Default for MockEngineConfig {
@@ -35,8 +41,25 @@ impl Default for MockEngineConfig {
             t_decode_step: 0.004,
             chunk: 512,
             jitter: 0.1,
+            kv_elems_per_token: 16,
         }
     }
+}
+
+/// Deterministic synthetic KV for a prompt: piecewise-constant values
+/// derived from prompt content — realistic enough to exercise fp16
+/// rounding, structured enough that LZ compression has real wins (the
+/// run length mirrors attention caches' repeated heads / padding).
+fn synth_kv(prompt: &[i32], elems: usize) -> (Vec<f32>, Vec<f32>) {
+    let n = prompt.len() * elems;
+    let mut k = Vec::with_capacity(n);
+    let mut v = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = prompt[i % prompt.len()] as f32;
+        k.push((t + (i / 7) as f32 * 0.5) * 0.125);
+        v.push((t - (i / 5) as f32 * 0.25) * 0.0625);
+    }
+    (k, v)
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -91,11 +114,12 @@ impl EngineBackend for MockEngine {
             + self.cfg.t_prefill_per_token * prompt.len() as f64;
         let cost = self.jittered(cost);
         std::thread::sleep(std::time::Duration::from_secs_f64(cost));
+        let (k, v) = synth_kv(prompt, self.cfg.kv_elems_per_token);
         Ok(PrefillOutcome {
             first_token: Self::first_token_of(prompt),
             len: prompt.len(),
-            k: Vec::new(),
-            v: Vec::new(),
+            k,
+            v,
             exec_time: cost,
             passes: (prompt.len() as u32).div_ceil(self.cfg.chunk.max(1)),
         })
@@ -165,6 +189,7 @@ mod tests {
             t_decode_step: 0.0,
             chunk: 128,
             jitter: 0.0,
+            kv_elems_per_token: 8,
         }
     }
 
@@ -175,6 +200,17 @@ mod tests {
         assert_eq!(pre.len, 300);
         assert_eq!(pre.passes, 3); // ceil(300/128)
         assert!((0x20..0x7f).contains(&pre.first_token));
+        assert_eq!(pre.k.len(), 300 * 8, "synthetic KV sized per config");
+        assert_eq!(pre.v.len(), 300 * 8);
+    }
+
+    #[test]
+    fn synthetic_kv_is_deterministic_per_prompt() {
+        let mut a = MockEngine::new(quick_cfg(), 1, 1);
+        let mut b = MockEngine::new(quick_cfg(), 1, 42);
+        let (pa, pb) = (a.prefill(&[3, 9, 27]).unwrap(), b.prefill(&[3, 9, 27]).unwrap());
+        assert_eq!(pa.k, pb.k, "KV must not depend on engine seed");
+        assert_eq!(pa.v, pb.v);
     }
 
     #[test]

@@ -102,6 +102,40 @@ impl PrefillUnitGauge {
     }
 }
 
+/// KV handoff wire accounting under the negotiated `--kv-wire` codec:
+/// what the KV payloads cost on the wire vs their raw `f32` size, split
+/// by where they landed. `wire/raw_bytes` aggregate the decode shards'
+/// *inbound* KV (their `StatsReply` counters — covers both relayed
+/// admits and direct peer handoffs); `relay_*` count only KV the
+/// scheduler itself carried (received `KvSegment`s + sent `Admit`s), so
+/// direct transfer shows up as `relay_wire_bytes ≈ 0` while the shard
+/// totals keep growing.
+#[derive(Debug, Clone, Default)]
+pub struct KvWireGauge {
+    /// Negotiated codec name (`raw` / `fp16` / `lz`).
+    pub codec: String,
+    /// Coded KV bytes received by decode shards.
+    pub wire_bytes: u64,
+    /// The same KV as raw `f32` bytes.
+    pub raw_bytes: u64,
+    /// Coded KV bytes that crossed the scheduler (relay path only).
+    pub relay_wire_bytes: u64,
+    /// Raw size of the scheduler-relayed KV.
+    pub relay_raw_bytes: u64,
+}
+
+impl KvWireGauge {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("codec", Json::from(self.codec.clone())),
+            ("wire_bytes", Json::from(self.wire_bytes)),
+            ("raw_bytes", Json::from(self.raw_bytes)),
+            ("relay_wire_bytes", Json::from(self.relay_wire_bytes)),
+            ("relay_raw_bytes", Json::from(self.relay_raw_bytes)),
+        ])
+    }
+}
+
 /// Snapshot of the cluster's serving pools under one placement policy:
 /// the decode DP pool's occupancy gauges plus the prefill pool's
 /// liveness gauges. (Named for its decode-side origin; `STATS` exposes
@@ -114,6 +148,9 @@ pub struct DecodePoolStats {
     pub units: Vec<DpOccupancyGauge>,
     /// Per-instance prefill gauges, flat pool order.
     pub prefill: Vec<PrefillUnitGauge>,
+    /// KV handoff wire accounting (filled by the driver's decorator; the
+    /// core is transport-blind).
+    pub kv_wire: KvWireGauge,
 }
 
 impl DecodePoolStats {
@@ -123,6 +160,7 @@ impl DecodePoolStats {
             policy: policy.to_string(),
             units: Vec::new(),
             prefill: Vec::new(),
+            kv_wire: KvWireGauge::default(),
         }
     }
 
@@ -150,6 +188,7 @@ impl DecodePoolStats {
                 })
                 .collect(),
             prefill: Vec::new(),
+            kv_wire: KvWireGauge::default(),
         }
     }
 
@@ -210,6 +249,7 @@ impl DecodePoolStats {
                     ),
                 ]),
             ),
+            ("kv_wire", self.kv_wire.to_json()),
         ])
     }
 }
@@ -254,6 +294,7 @@ mod tests {
             policy: "round-robin".into(),
             units: vec![unit("i0d0", 1, 3.0), unit("i1d0", 1, 1.0)],
             prefill: Vec::new(),
+            kv_wire: KvWireGauge::default(),
         };
         assert!((s.imbalance() - 1.5).abs() < 1e-12);
     }
@@ -264,6 +305,7 @@ mod tests {
             policy: "random".into(),
             units: vec![unit("i0d0", 4, 0.0), unit("i1d0", 0, 0.0)],
             prefill: Vec::new(),
+            kv_wire: KvWireGauge::default(),
         };
         assert!((s.imbalance() - 2.0).abs() < 1e-12);
         assert_eq!(s.total_placed(), 4);
@@ -275,6 +317,13 @@ mod tests {
             policy: "load-aware".into(),
             units: vec![unit("i0d0", 2, 1.0)],
             prefill: vec![prefill_unit(0, true)],
+            kv_wire: KvWireGauge {
+                codec: "lz".into(),
+                wire_bytes: 100,
+                raw_bytes: 400,
+                relay_wire_bytes: 0,
+                relay_raw_bytes: 0,
+            },
         };
         let j = s.to_json();
         assert_eq!(j.get("policy").and_then(|x| x.as_str()), Some("load-aware"));
@@ -291,6 +340,11 @@ mod tests {
         let pu = &p.get("units").and_then(|x| x.as_arr()).unwrap()[0];
         assert_eq!(pu.get("transport").and_then(|x| x.as_str()), Some("prefill:0"));
         assert_eq!(pu.get("dispatched").and_then(|x| x.as_usize()), Some(3));
+        let kv = j.get("kv_wire").unwrap();
+        assert_eq!(kv.get("codec").and_then(|x| x.as_str()), Some("lz"));
+        assert_eq!(kv.get("wire_bytes").and_then(|x| x.as_usize()), Some(100));
+        assert_eq!(kv.get("raw_bytes").and_then(|x| x.as_usize()), Some(400));
+        assert_eq!(kv.get("relay_wire_bytes").and_then(|x| x.as_usize()), Some(0));
     }
 
     #[test]
@@ -304,6 +358,7 @@ mod tests {
             policy: "load-aware".into(),
             units: vec![unit("i0d0", 2, 2.0), dead],
             prefill: Vec::new(),
+            kv_wire: KvWireGauge::default(),
         };
         assert_eq!(s.units_alive(), 1);
         let j = s.to_json();
@@ -321,6 +376,7 @@ mod tests {
             policy: "load-aware".into(),
             units: vec![unit("i0d0", 2, 2.0)],
             prefill: vec![prefill_unit(0, true), prefill_unit(1, false)],
+            kv_wire: KvWireGauge::default(),
         };
         assert_eq!(s.prefill_units_alive(), 1);
         let j = s.to_json();

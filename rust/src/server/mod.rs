@@ -80,6 +80,16 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
             "per-DP-unit KV-token admission budget (0 = slots only)",
             Some(crate::config::LIVE_KV_BUDGET_TOKENS_STR),
         )
+        .opt(
+            "kv-wire",
+            "KV handoff wire codec: raw | fp16 | lz",
+            Some("raw"),
+        )
+        .opt(
+            "handoff",
+            "prefill→decode KV handoff route: direct | relay",
+            Some("direct"),
+        )
         .opt("requests", "batch mode: number of synthetic requests", Some("8"))
         .opt("max-new", "tokens to generate per request", Some("16"))
         .opt(
@@ -115,6 +125,14 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
         other => return Err(anyhow!("unknown flow policy '{other}'")),
     };
     let decode_policy = parse_decode_policy(&args.str_or("decode-policy", "load-aware"), &mode)?;
+    let kv_wire_s = args.str_or("kv-wire", "raw");
+    let kv_wire = crate::transport::KvCodec::parse(&kv_wire_s)
+        .ok_or_else(|| anyhow!("unknown kv-wire codec '{kv_wire_s}' (raw | fp16 | lz)"))?;
+    let direct_handoff = match args.str_or("handoff", "direct").as_str() {
+        "direct" => true,
+        "relay" => false,
+        other => return Err(anyhow!("unknown handoff route '{other}' (direct | relay)")),
+    };
     let remote_decode = args
         .value("remote-decode")
         .map(crate::transport::parse_shard_list)
@@ -144,6 +162,8 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
         kv_budget: args
             .parse_or("kv-budget", crate::config::LIVE_KV_BUDGET_TOKENS)
             .map_err(|e| anyhow!("{e}"))?,
+        kv_wire,
+        direct_handoff,
         ..Default::default()
     };
 

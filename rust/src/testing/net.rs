@@ -1,13 +1,19 @@
-//! TCP test harness for the serving frontend: spawn a mock-engine server
-//! on an ephemeral port and drive it with line-protocol clients. Used by
-//! the `server_concurrency` integration suite; kept in the library so
-//! examples and future stress drivers can reuse it.
+//! TCP test harnesses: spawn a mock-engine serving frontend on an
+//! ephemeral port and drive it with line-protocol clients
+//! ([`TestServer`] / [`LineClient`], used by the `server_concurrency`
+//! suite), and impersonate a shard on the binary transport protocol
+//! ([`FakeShard`] / [`ShardConn`], used by the `transport_faults` suite
+//! to inject truncated/corrupt/reordered streams and abrupt deaths
+//! deterministically). Kept in the library so examples and future
+//! stress drivers can reuse them.
 
 use crate::cluster::workers::RealClusterConfig;
 use crate::server;
+use crate::transport::proto::{self, Frame, FrameReader, ShardRole, PROTO_VERSION};
+use crate::transport::KvCodec;
 use anyhow::{anyhow, Result};
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -54,6 +60,159 @@ pub fn wait_for_port(addr: &str, timeout: Duration) -> Result<()> {
                 return Err(anyhow!("nothing listening on {addr} after {timeout:?}: {e}"))
             }
             Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+/// One accepted scheduler connection on a [`FakeShard`], as seen from
+/// the shard side: send frames (or raw bytes — malformed on purpose),
+/// receive the scheduler's frames with a deadline, or kill the
+/// connection abruptly. Everything is driven by the test's script
+/// closure, so fault sequences are fully deterministic.
+pub struct ShardConn {
+    conn: TcpStream,
+    reader: FrameReader,
+}
+
+impl ShardConn {
+    /// Send one well-formed frame.
+    pub fn send(&mut self, f: &Frame) -> Result<()> {
+        proto::write_frame(&mut self.conn, f)?;
+        Ok(())
+    }
+
+    /// Send raw bytes verbatim — the fault-injection path (truncated
+    /// frames, corrupt length prefixes, garbage tags).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.conn.write_all(bytes)?;
+        Ok(())
+    }
+
+    /// Receive the next frame within `timeout`.
+    pub fn recv(&mut self, timeout: Duration) -> Result<Frame> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.reader.poll(&mut self.conn) {
+                Ok(Some(f)) => return Ok(f),
+                Ok(None) if Instant::now() < deadline => continue,
+                Ok(None) => return Err(anyhow!("no frame within {timeout:?}")),
+                Err(e) => return Err(anyhow!("receive failed: {e}")),
+            }
+        }
+    }
+
+    /// Receive frames until `pred` matches one (bounded by `timeout`).
+    pub fn recv_until(
+        &mut self,
+        timeout: Duration,
+        mut pred: impl FnMut(&Frame) -> bool,
+    ) -> Result<Frame> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline
+                .checked_duration_since(Instant::now())
+                .ok_or_else(|| anyhow!("no matching frame within {timeout:?}"))?;
+            let f = self.recv(left)?;
+            if pred(&f) {
+                return Ok(f);
+            }
+        }
+    }
+
+    /// Kill the connection abruptly (RST-ish: both halves shut down) —
+    /// the mid-handoff peer-death injection.
+    pub fn kill(self) {
+        let _ = self.conn.shutdown(Shutdown::Both);
+    }
+}
+
+/// A scripted fake shard: binds an ephemeral port, serves the
+/// `Hello`/`HelloAck` handshake with *whatever ack the test supplies*
+/// (wrong versions, roles and codecs included), then hands the live
+/// connection to the test's script closure. One connection per accept;
+/// the accept loop keeps serving so scheduler-side reconnects find it
+/// again (each reconnect re-runs `on_accept` to build a fresh script).
+pub struct FakeShard {
+    /// Bound address (`127.0.0.1:<port>`).
+    pub addr: String,
+    stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl FakeShard {
+    /// Standard well-formed ack for `role` (shape 1×4, echoing `codec`).
+    pub fn ack(role: ShardRole, codec: KvCodec) -> Frame {
+        Frame::HelloAck {
+            version: PROTO_VERSION,
+            role,
+            units: 1,
+            slots: 4,
+            kv_wire: codec,
+            peer_port: 0,
+        }
+    }
+
+    /// Spawn a fake shard answering every handshake with `ack` and then
+    /// running `script` on the connection. The scheduler's `Hello` is
+    /// consumed (its proposed codec passed to the script); a script
+    /// returning (or erroring) drops that connection and the shard goes
+    /// back to accepting.
+    pub fn serve<F>(ack: Frame, script: F) -> FakeShard
+    where
+        F: Fn(ShardConn, KvCodec) -> Result<()> + Send + 'static,
+    {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+        let addr = listener.local_addr().expect("local addr").to_string();
+        listener.set_nonblocking(true).expect("nonblocking accept");
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let flag = stop.clone();
+        let thread = std::thread::spawn(move || {
+            use std::sync::atomic::Ordering;
+            loop {
+                match listener.accept() {
+                    Ok((conn, _)) => {
+                        conn.set_nonblocking(false).expect("blocking conn");
+                        conn.set_nodelay(true).expect("nodelay");
+                        conn.set_read_timeout(Some(Duration::from_millis(50)))
+                            .expect("read timeout");
+                        let mut sc = ShardConn {
+                            conn,
+                            reader: FrameReader::new(),
+                        };
+                        let proposed = match sc.recv(Duration::from_secs(5)) {
+                            Ok(Frame::Hello { kv_wire, .. }) => kv_wire,
+                            _ => continue, // not a handshake; drop
+                        };
+                        if sc.send(&ack).is_err() {
+                            continue;
+                        }
+                        if let Err(e) = script(sc, proposed) {
+                            log::debug!("fake shard script ended: {e:#}");
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        if flag.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                }
+            }
+        });
+        FakeShard {
+            addr,
+            stop,
+            thread: Some(thread),
+        }
+    }
+}
+
+impl Drop for FakeShard {
+    fn drop(&mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
         }
     }
 }

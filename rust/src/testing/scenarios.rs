@@ -43,6 +43,7 @@ pub fn skewed_decode_cluster(policy: DecodePolicy, n_decode: u32) -> RealCluster
             t_decode_step: 0.002,
             chunk: 512,
             jitter: 0.0,
+            kv_elems_per_token: 8,
         }),
         admission: AdmissionConfig {
             max_inflight: 1024,

@@ -1,0 +1,505 @@
+//! KV wire codecs: how `f32` cache blocks are represented on the wire.
+//!
+//! The prefill→decode KV handoff is the largest payload in the system by
+//! orders of magnitude, so the protocol encodes every KV block behind a
+//! self-describing header (`[codec][elements][payload bytes][payload]`,
+//! see `proto::kv_block_into`). Three codecs:
+//!
+//! * [`KvCodec::Raw`] — little-endian `f32`s, 4 B/element. The identity
+//!   baseline; bit-exact.
+//! * [`KvCodec::Fp16`] — IEEE 754 binary16, 2 B/element, round-to-
+//!   nearest-even. Lossy (≤ 2⁻¹¹ relative error on normals), halves the
+//!   wire, mirrors serving systems that ship half-precision KV.
+//! * [`KvCodec::Lz`] — byte-oriented LZ (LZ4-style token stream, own
+//!   format) over the raw `f32` bytes. Bit-exact; wins whenever caches
+//!   carry structure (repeated heads, zero-padding, low-entropy values).
+//!
+//! Everything here is dependency-free and allocation-disciplined: the
+//! compressor appends into a caller-owned buffer (reserve-bounded so the
+//! hot-path encoders stay zero-alloc in steady state), and the
+//! decompressor is fully bounds-checked — arbitrary corrupt input must
+//! produce an error, never a panic, wrap, or out-of-bounds copy.
+
+/// KV block codec negotiated in `Hello`/`HelloAck` and stamped on every
+/// encoded block (blocks are self-describing, so mixed streams decode
+/// regardless of what was negotiated — negotiation picks what senders
+/// *produce*).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvCodec {
+    /// Raw little-endian `f32`s (the identity codec).
+    #[default]
+    Raw,
+    /// IEEE 754 binary16, round-to-nearest-even (lossy).
+    Fp16,
+    /// LZ-compressed raw bytes (bit-exact).
+    Lz,
+}
+
+impl KvCodec {
+    /// Wire byte for handshakes and block headers.
+    pub fn to_wire(self) -> u8 {
+        match self {
+            KvCodec::Raw => 0,
+            KvCodec::Fp16 => 1,
+            KvCodec::Lz => 2,
+        }
+    }
+
+    /// Inverse of [`KvCodec::to_wire`]; `None` for unknown bytes (the
+    /// caller maps it onto its own error type).
+    pub fn from_wire(x: u8) -> Option<Self> {
+        match x {
+            0 => Some(KvCodec::Raw),
+            1 => Some(KvCodec::Fp16),
+            2 => Some(KvCodec::Lz),
+            _ => None,
+        }
+    }
+
+    /// Stable codec name for CLI round-trips and gauges.
+    pub fn name(self) -> &'static str {
+        match self {
+            KvCodec::Raw => "raw",
+            KvCodec::Fp16 => "fp16",
+            KvCodec::Lz => "lz",
+        }
+    }
+
+    /// Parse a `--kv-wire` CLI value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "raw" => Some(KvCodec::Raw),
+            "fp16" => Some(KvCodec::Fp16),
+            "lz" => Some(KvCodec::Lz),
+            _ => None,
+        }
+    }
+
+    /// Worst-case encoded payload size for `n` elements — what a caller
+    /// must `reserve` so encoding never reallocates mid-append.
+    pub fn payload_bound(self, n: usize) -> usize {
+        match self {
+            KvCodec::Raw => 4 * n,
+            KvCodec::Fp16 => 2 * n,
+            KvCodec::Lz => lz_compress_bound(4 * n),
+        }
+    }
+}
+
+// ---- fp16 ---------------------------------------------------------------
+
+/// `f32` → binary16 bits, round-to-nearest-even; overflow saturates to
+/// ±inf, underflow flushes to signed zero, NaN payload (truncated) is
+/// preserved as a quiet NaN.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x7f_ffff;
+    if exp == 0xff {
+        // Inf / NaN: keep NaN-ness even when the truncated payload is 0.
+        let payload = (mant >> 13) as u16 & 0x3ff;
+        return if mant != 0 {
+            sign | 0x7c00 | payload.max(1)
+        } else {
+            sign | 0x7c00
+        };
+    }
+    let e = exp - 127;
+    if e >= 16 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e >= -14 {
+        // Normal half: 23→10 bit mantissa, round to nearest even. A
+        // mantissa carry correctly rolls into the exponent (and 65504+
+        // rounds up to inf) because the fields are adjacent.
+        let mant10 = (mant >> 13) as u16;
+        let rem = mant & 0x1fff;
+        let mut h = sign | (((e + 15) as u16) << 10) | mant10;
+        if rem > 0x1000 || (rem == 0x1000 && (mant10 & 1) == 1) {
+            h = h.wrapping_add(1);
+        }
+        return h;
+    }
+    if e >= -24 {
+        // Subnormal half.
+        let full = mant | 0x80_0000;
+        let shift = (13 + (-14 - e)) as u32;
+        let mant10 = (full >> shift) as u16;
+        let half_point = 1u32 << (shift - 1);
+        let rem = full & ((1u32 << shift) - 1);
+        let mut h = sign | mant10;
+        if rem > half_point || (rem == half_point && (mant10 & 1) == 1) {
+            h += 1;
+        }
+        return h;
+    }
+    sign // underflow → signed zero
+}
+
+/// binary16 bits → `f32` (exact; every half value is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal half → normalized f32.
+            let mut e = 0u32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e += 1;
+            }
+            sign | ((113 - e) << 23) | ((m & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ---- LZ -----------------------------------------------------------------
+
+const LZ_MIN_MATCH: usize = 4;
+const LZ_HASH_BITS: u32 = 13;
+const LZ_MAX_OFFSET: usize = 0xffff;
+
+/// Worst-case compressed size for `raw_len` input bytes: all-literal
+/// output plus one length-extension byte per 255 literals and a small
+/// constant for the final token.
+pub fn lz_compress_bound(raw_len: usize) -> usize {
+    raw_len + raw_len / 255 + 16
+}
+
+#[inline]
+fn lz_hash(bytes: &[u8]) -> usize {
+    let w = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+    (w.wrapping_mul(0x9E37_79B1) >> (32 - LZ_HASH_BITS)) as usize
+}
+
+/// Append a length in the LZ4 extension scheme: the nibble held `15`,
+/// the remainder follows as 255-saturated bytes.
+fn lz_put_ext_len(out: &mut Vec<u8>, mut rest: usize) {
+    while rest >= 255 {
+        out.push(255);
+        rest -= 255;
+    }
+    out.push(rest as u8);
+}
+
+/// Compress `src` into `out` (appended; `out` is *not* cleared). The
+/// format is an LZ4-style token stream: `[token][ext lit len][literals]
+/// [offset u16 LE][ext match len]`, token nibbles = literal length /
+/// match length − 4, the final sequence carrying literals only. Greedy
+/// single-pass matching over a 2^13-entry hash table, 64 KiB window.
+pub fn lz_compress(src: &[u8], out: &mut Vec<u8>) {
+    out.reserve(lz_compress_bound(src.len()));
+    let mut table = [usize::MAX; 1 << LZ_HASH_BITS];
+    let mut anchor = 0usize;
+    let mut i = 0usize;
+    // Matching needs 4 bytes to hash; everything past this is literal.
+    let match_limit = src.len().saturating_sub(LZ_MIN_MATCH);
+    while i < match_limit {
+        let h = lz_hash(&src[i..]);
+        let cand = table[h];
+        table[h] = i;
+        let ok = cand != usize::MAX
+            && i - cand <= LZ_MAX_OFFSET
+            && src[cand..cand + LZ_MIN_MATCH] == src[i..i + LZ_MIN_MATCH];
+        if !ok {
+            i += 1;
+            continue;
+        }
+        // Extend the match as far as the input allows.
+        let mut len = LZ_MIN_MATCH;
+        while i + len < src.len() && src[cand + len] == src[i + len] {
+            len += 1;
+        }
+        let lit = i - anchor;
+        let lit_nib = lit.min(15) as u8;
+        let match_nib = (len - LZ_MIN_MATCH).min(15) as u8;
+        out.push((lit_nib << 4) | match_nib);
+        if lit >= 15 {
+            lz_put_ext_len(out, lit - 15);
+        }
+        out.extend_from_slice(&src[anchor..i]);
+        out.extend_from_slice(&((i - cand) as u16).to_le_bytes());
+        if len - LZ_MIN_MATCH >= 15 {
+            lz_put_ext_len(out, len - LZ_MIN_MATCH - 15);
+        }
+        i += len;
+        anchor = i;
+    }
+    // Final literals (possibly zero) under a match-free token.
+    let lit = src.len() - anchor;
+    out.push((lit.min(15) as u8) << 4);
+    if lit >= 15 {
+        lz_put_ext_len(out, lit - 15);
+    }
+    out.extend_from_slice(&src[anchor..]);
+}
+
+/// Why an LZ payload failed to decompress. All variants are reachable
+/// from corrupt wire bytes; none may panic or over-read.
+#[derive(Debug, PartialEq, Eq)]
+pub enum LzError {
+    /// Input ended inside a token, length extension, literal run or
+    /// offset.
+    Truncated,
+    /// A copy (literal or match) would overrun the declared output size.
+    OutputOverflow,
+    /// A match offset points before the start of the output.
+    BadOffset,
+    /// The stream ended before producing the declared output size.
+    ShortOutput,
+}
+
+impl std::fmt::Display for LzError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LzError::Truncated => write!(f, "lz stream truncated"),
+            LzError::OutputOverflow => write!(f, "lz copy overruns declared output"),
+            LzError::BadOffset => write!(f, "lz match offset before output start"),
+            LzError::ShortOutput => write!(f, "lz stream ended short of declared output"),
+        }
+    }
+}
+
+fn lz_get_ext_len(src: &[u8], at: &mut usize, base: usize) -> Result<usize, LzError> {
+    let mut len = base;
+    loop {
+        let b = *src.get(*at).ok_or(LzError::Truncated)?;
+        *at += 1;
+        len = len.checked_add(b as usize).ok_or(LzError::OutputOverflow)?;
+        if b != 255 {
+            return Ok(len);
+        }
+    }
+}
+
+/// Decompress `src` into exactly `expected_len` bytes. Fully
+/// bounds-checked: corrupt input errors out without panicking, and the
+/// output allocation is capped at `expected_len` (the caller bounds that
+/// against the frame limit before calling).
+pub fn lz_decompress(src: &[u8], expected_len: usize) -> Result<Vec<u8>, LzError> {
+    let mut out = Vec::with_capacity(expected_len);
+    let mut at = 0usize;
+    loop {
+        let token = *src.get(at).ok_or(LzError::Truncated)?;
+        at += 1;
+        let mut lit = (token >> 4) as usize;
+        if lit == 15 {
+            lit = lz_get_ext_len(src, &mut at, 15)?;
+        }
+        let lit_end = at.checked_add(lit).ok_or(LzError::Truncated)?;
+        if lit_end > src.len() {
+            return Err(LzError::Truncated);
+        }
+        if out.len() + lit > expected_len {
+            return Err(LzError::OutputOverflow);
+        }
+        out.extend_from_slice(&src[at..lit_end]);
+        at = lit_end;
+        if out.len() == expected_len {
+            // Complete. A well-formed stream ends here (its final token
+            // has no match part); trailing garbage is tolerated — the
+            // frame layer already accounts the payload length.
+            return Ok(out);
+        }
+        if at == src.len() {
+            return Err(LzError::ShortOutput);
+        }
+        if at + 2 > src.len() {
+            return Err(LzError::Truncated);
+        }
+        let offset = u16::from_le_bytes([src[at], src[at + 1]]) as usize;
+        at += 2;
+        if offset == 0 || offset > out.len() {
+            return Err(LzError::BadOffset);
+        }
+        let mut mlen = (token & 0x0f) as usize + LZ_MIN_MATCH;
+        if mlen == 15 + LZ_MIN_MATCH {
+            mlen = lz_get_ext_len(src, &mut at, mlen)?;
+        }
+        if out.len() + mlen > expected_len {
+            return Err(LzError::OutputOverflow);
+        }
+        // Byte-at-a-time copy: offsets smaller than the match length are
+        // legal (run-length encoding of repeating patterns).
+        let start = out.len() - offset;
+        for k in 0..mlen {
+            let b = out[start + k];
+            out.push(b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn f16_round_trips_exactly_representable_values() {
+        for x in [
+            0.0f32, -0.0, 1.0, -1.0, 0.5, 0.0625, 2048.0, 65504.0, -65504.0,
+            f32::INFINITY, f32::NEG_INFINITY,
+        ] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} must survive fp16 exactly");
+        }
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn f16_relative_error_is_bounded_on_normals() {
+        let mut rng = Rng::new(0x1F16);
+        for _ in 0..20_000 {
+            let sign = if rng.chance(0.5) { -1.0 } else { 1.0 };
+            let x = (rng.uniform(-6.0, 6.0)).exp() as f32 * sign;
+            let back = f16_bits_to_f32(f32_to_f16_bits(x));
+            let rel = ((back - x) / x).abs();
+            assert!(rel <= 1.0 / 2048.0 + 1e-7, "x={x} back={back} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn f16_saturates_and_flushes_at_the_extremes() {
+        assert_eq!(f32_to_f16_bits(1e9), 0x7c00, "overflow → +inf");
+        assert_eq!(f32_to_f16_bits(-1e9), 0xfc00, "overflow → -inf");
+        assert_eq!(f32_to_f16_bits(1e-12), 0x0000, "underflow → +0");
+        assert_eq!(f32_to_f16_bits(-1e-12), 0x8000, "underflow → -0");
+        // The smallest-subnormal neighborhood survives (2⁻²⁴ ≈ 5.96e-8).
+        let tiny = 6.0e-8f32;
+        let back = f16_bits_to_f32(f32_to_f16_bits(tiny));
+        assert!((back - tiny).abs() / tiny < 0.05, "{back}");
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1 + 2^-11 sits exactly between 1.0 and 1 + 2^-10: even wins.
+        let x = f32::from_bits(0x3f80_1000);
+        assert_eq!(f32_to_f16_bits(x), 0x3c00, "tie must round to even (1.0)");
+        let y = f32::from_bits(0x3f80_3000); // 1 + 3·2^-11 → rounds up
+        assert_eq!(f32_to_f16_bits(y), 0x3c02);
+    }
+
+    fn round_trip(src: &[u8]) {
+        let mut packed = Vec::new();
+        lz_compress(src, &mut packed);
+        assert!(packed.len() <= lz_compress_bound(src.len()), "bound violated");
+        let back = lz_decompress(&packed, src.len()).expect("decompress");
+        assert_eq!(back, src, "lz must be bit-exact");
+    }
+
+    #[test]
+    fn lz_round_trips_edge_shapes() {
+        round_trip(&[]);
+        round_trip(&[7]);
+        round_trip(&[1, 2, 3]);
+        round_trip(&[0; 4]);
+        round_trip(&[9; 1000]);
+        round_trip(&(0..=255u8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn lz_round_trips_random_and_structured_blocks() {
+        let mut rng = Rng::new(0x17AB);
+        for case in 0..60 {
+            let n = (rng.below(6000) + 1) as usize;
+            let data: Vec<u8> = match case % 3 {
+                0 => (0..n).map(|_| rng.below(256) as u8).collect(), // incompressible
+                1 => (0..n).map(|i| ((i / 16) % 7) as u8).collect(), // runs
+                _ => {
+                    // f32-shaped: repeating 4-byte words, the KV pattern.
+                    let words: Vec<[u8; 4]> =
+                        (0..8).map(|k| ((k as f32) * 0.125f32).to_le_bytes()).collect();
+                    (0..n).map(|i| words[(i / 4) % 8][i % 4]).collect()
+                }
+            };
+            round_trip(&data);
+        }
+    }
+
+    #[test]
+    fn lz_shrinks_structured_f32_blocks_hard() {
+        // The mock KV shape: values constant over short runs — the wire
+        // claim the e2e byte-accounting test asserts end to end.
+        let floats: Vec<f32> = (0..16_384).map(|i| (7.0 + (i / 7) as f32 * 0.5) * 0.125).collect();
+        let raw: Vec<u8> = floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+        let mut packed = Vec::new();
+        lz_compress(&raw, &mut packed);
+        assert!(
+            (packed.len() as f64) < 0.6 * raw.len() as f64,
+            "structured KV must compress ≥40%: {} / {}",
+            packed.len(),
+            raw.len()
+        );
+        assert_eq!(lz_decompress(&packed, raw.len()).unwrap(), raw);
+    }
+
+    #[test]
+    fn lz_decompress_survives_truncation_at_every_offset() {
+        let src: Vec<u8> = (0..400u32).flat_map(|i| ((i % 11) as f32).to_le_bytes()).collect();
+        let mut packed = Vec::new();
+        lz_compress(&src, &mut packed);
+        for cut in 0..packed.len() {
+            // Must error (never panic); a prefix cannot produce the full
+            // declared output.
+            assert!(lz_decompress(&packed[..cut], src.len()).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn lz_decompress_survives_arbitrary_corruption() {
+        let mut rng = Rng::new(0xC0);
+        let src: Vec<u8> = (0..600).map(|i| (i % 30) as u8).collect();
+        let mut packed = Vec::new();
+        lz_compress(&src, &mut packed);
+        for _ in 0..2000 {
+            let mut bad = packed.clone();
+            let flips = 1 + rng.below(4);
+            for _ in 0..flips {
+                let at = rng.index(bad.len());
+                bad[at] ^= rng.below(255) as u8 + 1;
+            }
+            // Either decodes to *something* of the right length or errors
+            // cleanly — never panics, never wrong-sized output.
+            if let Ok(out) = lz_decompress(&bad, src.len()) {
+                assert_eq!(out.len(), src.len());
+            }
+        }
+        // Pure garbage too.
+        for _ in 0..500 {
+            let garbage: Vec<u8> = (0..rng.below(200)).map(|_| rng.below(256) as u8).collect();
+            if let Ok(out) = lz_decompress(&garbage, 333) {
+                assert_eq!(out.len(), 333);
+            }
+        }
+    }
+
+    #[test]
+    fn lz_offsets_shorter_than_match_length_rle() {
+        // A run compresses via offset-1 self-overlapping matches.
+        let src = vec![0xABu8; 5000];
+        let mut packed = Vec::new();
+        lz_compress(&src, &mut packed);
+        assert!(packed.len() < 64, "RLE shape must collapse: {}", packed.len());
+        assert_eq!(lz_decompress(&packed, src.len()).unwrap(), src);
+    }
+
+    #[test]
+    fn codec_names_round_trip() {
+        for c in [KvCodec::Raw, KvCodec::Fp16, KvCodec::Lz] {
+            assert_eq!(KvCodec::from_wire(c.to_wire()), Some(c));
+            assert_eq!(KvCodec::parse(c.name()), Some(c));
+        }
+        assert_eq!(KvCodec::from_wire(9), None);
+        assert_eq!(KvCodec::parse("zstd"), None);
+    }
+}

@@ -27,12 +27,46 @@
 //! (or fully disaggregating P from D across machines) is a deployment
 //! decision, not a scheduling one.
 
+pub mod codec;
 pub mod proto;
 pub mod remote;
 
+pub use codec::KvCodec;
+
 use crate::engine::PrefillOutcome;
 use crate::metrics::RequestMetrics;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
+
+/// Shared KV byte accounting: coded bytes as they crossed the wire vs
+/// the same payloads as raw `f32` bytes. One pair is kept per counting
+/// domain (the scheduler's relay traffic; each decode shard's inbound
+/// KV) and surfaced through `STATS` as the `kv_wire` gauge — the
+/// observable behind the paper-level claim that compression + direct
+/// transfer shrink the handoff.
+#[derive(Debug, Default)]
+pub struct KvWireCounters {
+    /// Coded KV bytes on the wire (block headers included).
+    pub wire_bytes: AtomicU64,
+    /// The same KV as raw `f32` bytes (4 × elements).
+    pub raw_bytes: AtomicU64,
+}
+
+impl KvWireCounters {
+    /// Record one KV block (or frame) that crossed the wire.
+    pub fn record(&self, wire: u64, raw: u64) {
+        self.wire_bytes.fetch_add(wire, Ordering::Relaxed);
+        self.raw_bytes.fetch_add(raw, Ordering::Relaxed);
+    }
+
+    /// Snapshot `(wire_bytes, raw_bytes)`.
+    pub fn snapshot(&self) -> (u64, u64) {
+        (
+            self.wire_bytes.load(Ordering::Relaxed),
+            self.raw_bytes.load(Ordering::Relaxed),
+        )
+    }
+}
 
 /// Parse a comma-separated shard address list (`a:p[,a:p...]`), the
 /// shared grammar of `sbs serve --remote-decode` / `--remote-prefill`
@@ -105,6 +139,27 @@ pub trait DecodeTransport: Send {
     /// scheduler's own ledger. No-op for in-process units — the ledger
     /// *is* their engine truth.
     fn request_stats(&self) {}
+    /// Direct-transfer address of this unit (`host:peer_port` + the
+    /// shard-local unit index), when its shard runs a peer listener.
+    /// `None` for in-process units — a local pool has no wire to skip.
+    fn direct_target(&self) -> Option<proto::DirectTarget> {
+        None
+    }
+    /// Register a sequence the scheduler pre-placed onto this unit for
+    /// direct transfer: tokens/terminals for `id` may start arriving
+    /// from the shard the moment the prefill peer commits, so the
+    /// pending gate must know the id *before* dispatch leaves.
+    fn expect_direct(&self, _id: u64, _metrics: RequestMetrics) {}
+    /// Un-register a direct pre-placement that will not happen (relay
+    /// fallback, prefill death, failed dispatch). Returns whether the
+    /// registration was still present.
+    fn cancel_direct(&self, _id: u64) -> bool {
+        false
+    }
+    /// Stamp first-token metrics onto a direct registration once its
+    /// `HandoffCommit` surfaces (no-op if the sequence already
+    /// terminalized).
+    fn patch_direct(&self, _id: u64, _t_first: f64, _exec_time: f64) {}
     /// Ask the unit (and its shard, once per shard) to drain and stop.
     fn stop(&mut self);
     /// Release the unit without stopping its backing process: an
@@ -191,9 +246,10 @@ pub struct ShardSinks {
     /// ledger charges and reject them upstream.
     pub on_evicted: Box<dyn Fn(Vec<u64>) + Send>,
     /// A `StatsReply` arrived: the shard's engine-truth per-unit gauges
-    /// (shard-local unit order), for divergence cross-checks against the
-    /// scheduler's ledger.
-    pub on_stats: Box<dyn Fn(Vec<proto::UnitLoad>) + Send>,
+    /// (shard-local unit order) plus its inbound-KV wire/raw byte
+    /// counters, for divergence cross-checks against the scheduler's
+    /// ledger and the `kv_wire` gauge.
+    pub on_stats: Box<dyn Fn(Vec<proto::UnitLoad>, u64, u64) + Send>,
 }
 
 /// One prefill job being dispatched to a prefill instance: the prompt
@@ -211,6 +267,10 @@ pub struct PrefillWork {
     /// Lifecycle metrics, scheduler clock (`t_dispatch` stamped by the
     /// scheduler before dispatch).
     pub metrics: RequestMetrics,
+    /// Direct-transfer placement (the decode unit the scheduler
+    /// pre-placed this job onto); `None` = relay the KV handoff through
+    /// the scheduler.
+    pub target: Option<proto::DirectTarget>,
 }
 
 /// Message consumed by one prefill engine runner (local worker thread or
@@ -247,6 +307,12 @@ pub trait PrefillTransport: Send {
     /// Ship one dispatch batch. On failure the batch is handed back so
     /// the caller can terminalize every job in it (reject upstream).
     fn dispatch(&mut self, work: Vec<PrefillWork>) -> Result<(), Vec<PrefillWork>>;
+    /// Whether this instance can execute direct prefill→decode transfer
+    /// (`true` only for remote shards — a local prefill's handoff is an
+    /// in-process move, not a wire hop worth bypassing).
+    fn supports_direct(&self) -> bool {
+        false
+    }
     /// Ask the instance (and its shard, once per shard) to drain and
     /// stop.
     fn stop(&mut self);
@@ -318,6 +384,11 @@ pub struct PrefillSinks {
     /// attached at dispatch, handed back for first-token stamping on the
     /// scheduler clock.
     pub on_prefilled: Box<dyn Fn(u64, Box<PrefillOutcome>, u32, RequestMetrics) + Send>,
+    /// A direct prefill→decode handoff committed (`HandoffCommit` from
+    /// the prefill shard, sent only after the decode peer acked):
+    /// `(id, exec_time)`. The KV never touched the scheduler; the
+    /// decode shard emits the token stream from here on.
+    pub on_handoff: Box<dyn Fn(u64, f64) + Send>,
     /// Terminal prefill failure reported by the shard.
     pub on_failed: Box<dyn Fn(u64) + Send>,
     /// `EndForward` crossed the wire: `(shard-local instance, measured
@@ -383,6 +454,7 @@ mod tests {
             prompt: vec![7; 12],
             max_new: 4,
             metrics: RequestMetrics::arrive(0.0, 12),
+            target: None,
         }
     }
 

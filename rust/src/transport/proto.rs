@@ -21,15 +21,18 @@
 //! | shard → sched | [`Frame::EndForward`] | engine backlog feedback into the staggered trigger |
 //! | both | [`Frame::Ping`] / [`Frame::Pong`] | liveness + RTT measurement |
 //! | sched → shard | [`Frame::StatsRequest`] | gauge snapshot request |
-//! | shard → sched | [`Frame::StatsReply`] | per-unit occupancy gauges |
+//! | shard → sched | [`Frame::StatsReply`] | per-unit occupancy gauges + KV wire counters |
 //! | sched → shard | [`Frame::Stop`] | drain and exit |
 //! | shard → sched | [`Frame::Bye`] | drain complete, closing |
+//! | prefill → peer | [`Frame::PeerHello`] / [`Frame::PeerHelloAck`] | direct-transfer handshake |
+//! | prefill → peer | [`Frame::HandoffCommit`] | commit a direct KV handoff (also → sched) |
+//! | peer → prefill | [`Frame::HandoffAck`] | the handoff is durably accepted |
 //!
 //! Reads are driven through the stateful [`FrameReader`], which preserves
 //! partial progress across socket read timeouts — a timeout mid-frame
 //! must never desynchronize the stream.
 //!
-//! ## Hot-path encoding
+//! ## Hot-path encoding and the KV wire codec
 //!
 //! The KV-bearing frames (`Admit`, `KvSegment`) are the only ones whose
 //! payloads reach megabytes, and building a [`Frame`] for them would copy
@@ -39,14 +42,28 @@
 //! the caches are serialized straight from the engine's buffers into one
 //! reusable length-prefixed wire buffer — no intermediate `Vec`s, no
 //! steady-state allocation.
+//!
+//! Every KV payload travels as a **self-describing coded block**
+//! (`[u8 codec][u32 elements][u32 payload bytes][payload]`, see
+//! [`crate::transport::codec::KvCodec`]): raw `f32`s, fp16, or an
+//! LZ-compressed block. The codec a sender *produces* is negotiated in
+//! `Hello`/`HelloAck` (`--kv-wire`); receivers decode whatever the block
+//! header declares, so mixed streams stay well-formed. The borrow
+//! encoders return the block's wire size so senders can keep the
+//! `kv_wire_bytes` / `kv_raw_bytes` accounting exact.
 
+use super::codec::{self, KvCodec};
 use std::io::{ErrorKind, Read, Write};
 use std::time::{Duration, Instant};
 
 /// Protocol version carried in `Hello`/`HelloAck`; bumped on any frame
 /// layout change. Mismatched peers refuse the handshake.
 /// v2: `HelloAck` carries the shard role; prefill frames added.
-pub const PROTO_VERSION: u32 = 2;
+/// v3: KV payloads ride the codec layer (`Hello`/`HelloAck` negotiate a
+/// [`KvCodec`], `HelloAck` advertises the shard's peer port), and the
+/// direct prefill→decode transfer frames (`PeerHello`/`PeerHelloAck`,
+/// `HandoffCommit`/`HandoffAck`, per-job [`DirectTarget`]s) exist.
+pub const PROTO_VERSION: u32 = 3;
 
 /// Upper bound on one frame's payload (guards against a corrupt length
 /// prefix allocating unbounded memory). Sized for an `Admit` carrying
@@ -115,6 +132,19 @@ impl KvHalf {
     }
 }
 
+/// Where a prefill shard should stream a finished job's KV directly: a
+/// decode shard's peer listener plus the shard-local unit the scheduler
+/// pre-placed the sequence onto (Algorithm 3, decided inside the
+/// buffering window). Carried per job in [`Frame::PrefillDispatch`];
+/// absent = relay the handoff through the scheduler.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DirectTarget {
+    /// Decode shard peer address (`host:peer_port`).
+    pub addr: String,
+    /// Shard-local decode unit index.
+    pub unit: u32,
+}
+
 /// One job inside a [`Frame::PrefillDispatch`] batch.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PrefillJobWire {
@@ -124,6 +154,9 @@ pub struct PrefillJobWire {
     pub max_new: u32,
     /// Prompt token ids.
     pub prompt: Vec<i32>,
+    /// Direct-transfer placement, when the scheduler pre-placed the
+    /// sequence onto a remote decode unit.
+    pub target: Option<DirectTarget>,
 }
 
 /// Per-unit occupancy snapshot carried by [`Frame::StatsReply`].
@@ -140,10 +173,12 @@ pub struct UnitLoad {
 /// One protocol frame (see module docs for the direction table).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
-    /// Scheduler handshake: protocol version check.
+    /// Scheduler handshake: protocol version check + KV codec proposal.
     Hello {
         /// Sender's [`PROTO_VERSION`].
         version: u32,
+        /// KV codec the scheduler wants this deployment to produce.
+        kv_wire: KvCodec,
     },
     /// Shard handshake reply: the role and shape the scheduler adds to
     /// its pool.
@@ -157,6 +192,12 @@ pub enum Frame {
         /// Decode slots per unit (the shard's batch size); 1 for prefill
         /// shards, whose instances are gated single-pass engines.
         slots: u32,
+        /// KV codec the shard will produce — must echo the `Hello`
+        /// proposal or the scheduler refuses the handshake.
+        kv_wire: KvCodec,
+        /// Port of the shard's direct-transfer peer listener (decode
+        /// shards only); 0 = no direct transfer into this shard.
+        peer_port: u16,
     },
     /// Placement commit: admit a prefilled sequence onto `unit`.
     Admit {
@@ -272,15 +313,62 @@ pub enum Frame {
     },
     /// Ask the shard for its per-unit occupancy.
     StatsRequest,
-    /// Per-unit occupancy gauges, shard-local unit order.
+    /// Per-unit occupancy gauges, shard-local unit order, plus the
+    /// shard's inbound-KV wire accounting.
     StatsReply {
         /// One entry per DP unit.
         units: Vec<UnitLoad>,
+        /// Coded KV bytes this shard has received (relay admits + direct
+        /// peer handoffs), as they crossed the wire.
+        kv_wire_bytes: u64,
+        /// The same KV as raw `f32` bytes (4 × elements) — the
+        /// denominator of the compression claim.
+        kv_raw_bytes: u64,
     },
     /// Drain every active sequence, then exit.
     Stop,
     /// Drain complete; the shard closes the connection after this.
     Bye,
+    /// Peer handshake on a decode shard's peer listener: a prefill shard
+    /// opening a direct-transfer connection.
+    PeerHello {
+        /// Sender's [`PROTO_VERSION`].
+        version: u32,
+        /// KV codec the peer will produce on this connection.
+        kv_wire: KvCodec,
+    },
+    /// Peer handshake reply; the decode shard is ready to receive
+    /// `KvSegment` streams committed by `HandoffCommit`.
+    PeerHelloAck {
+        /// Receiver's [`PROTO_VERSION`].
+        version: u32,
+    },
+    /// Commit one direct KV handoff. On a peer connection it follows the
+    /// job's `KvSegment` stream and admits the sequence into `unit`; on
+    /// the prefill shard's scheduler connection it is the lightweight
+    /// notification that replaces the relayed `KvSegment*`+`PrefillDone`
+    /// (sent only after the decode peer's [`Frame::HandoffAck`]).
+    HandoffCommit {
+        /// Shard-local decode unit (the scheduler's pre-placement).
+        unit: u32,
+        /// Request id.
+        id: u64,
+        /// First generated token (produced by prefill).
+        first_token: i32,
+        /// Prompt length — valid KV rows.
+        kv_len: u32,
+        /// Output tokens still to generate *after* the first.
+        max_new: u32,
+        /// Engine execution time of the prefill passes, seconds.
+        exec_time: f64,
+    },
+    /// The decode shard durably accepted a direct handoff (sequence
+    /// enqueued on its unit); the prefill shard may now report the
+    /// commit to the scheduler instead of falling back to relay.
+    HandoffAck {
+        /// Request id.
+        id: u64,
+    },
 }
 
 /// Why a frame could not be decoded.
@@ -335,6 +423,19 @@ const TAG_PREFILL_DISPATCH: u8 = 14;
 const TAG_KV_SEGMENT: u8 = 15;
 const TAG_PREFILL_DONE: u8 = 16;
 const TAG_PREFILL_FAILED: u8 = 17;
+const TAG_PEER_HELLO: u8 = 18;
+const TAG_PEER_HELLO_ACK: u8 = 19;
+const TAG_HANDOFF_COMMIT: u8 = 20;
+const TAG_HANDOFF_ACK: u8 = 21;
+
+/// Cap on the address string inside a [`DirectTarget`]: long enough for
+/// any `host:port`, short enough that a corrupt length cannot allocate
+/// meaningfully.
+const MAX_ADDR_LEN: usize = 256;
+
+/// Fixed overhead of one coded KV block: codec byte + element count +
+/// payload length.
+const KV_BLOCK_HEADER: usize = 9;
 
 struct Enc(Vec<u8>);
 
@@ -359,18 +460,62 @@ impl Enc {
         self.0.extend_from_slice(&x.to_bits().to_le_bytes());
     }
 
-    fn f32s(&mut self, xs: &[f32]) {
+    fn i32s(&mut self, xs: &[i32]) {
         self.u32(xs.len() as u32);
         for x in xs {
             self.0.extend_from_slice(&x.to_le_bytes());
         }
     }
 
-    fn i32s(&mut self, xs: &[i32]) {
+    fn str(&mut self, s: &str) {
+        let bytes = &s.as_bytes()[..s.len().min(MAX_ADDR_LEN)];
+        self.u32(bytes.len() as u32);
+        self.0.extend_from_slice(bytes);
+    }
+
+    /// Append one self-describing coded KV block
+    /// (`[codec][elements][payload bytes][payload]`) and return its total
+    /// wire size. LZ compresses the raw little-endian bytes through a
+    /// thread-local scratch buffer (clear + reuse — no steady-state
+    /// allocation on the hot path).
+    fn kv_block(&mut self, codec: KvCodec, xs: &[f32]) -> usize {
+        let at0 = self.0.len();
+        self.u8(codec.to_wire());
         self.u32(xs.len() as u32);
-        for x in xs {
-            self.0.extend_from_slice(&x.to_le_bytes());
+        let len_at = self.0.len();
+        self.0.extend_from_slice(&[0u8; 4]);
+        let start = self.0.len();
+        match codec {
+            KvCodec::Raw => {
+                for x in xs {
+                    self.0.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            KvCodec::Fp16 => {
+                for x in xs {
+                    self.0
+                        .extend_from_slice(&codec::f32_to_f16_bits(*x).to_le_bytes());
+                }
+            }
+            KvCodec::Lz => {
+                thread_local! {
+                    static LZ_SCRATCH: std::cell::RefCell<Vec<u8>> =
+                        const { std::cell::RefCell::new(Vec::new()) };
+                }
+                LZ_SCRATCH.with(|s| {
+                    let mut raw = s.borrow_mut();
+                    raw.clear();
+                    raw.reserve(4 * xs.len());
+                    for x in xs {
+                        raw.extend_from_slice(&x.to_le_bytes());
+                    }
+                    codec::lz_compress(&raw, &mut self.0);
+                });
+            }
         }
+        let payload = (self.0.len() - start) as u32;
+        self.0[len_at..len_at + 4].copy_from_slice(&payload.to_le_bytes());
+        self.0.len() - at0
     }
 }
 
@@ -419,16 +564,6 @@ impl<'a> Dec<'a> {
         }
     }
 
-    fn f32s(&mut self) -> Result<Vec<f32>, ProtoError> {
-        let n = self.u32()? as usize;
-        self.check_elems(n, 4)?;
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            out.push(f32::from_le_bytes(self.take(4)?.try_into().unwrap()));
-        }
-        Ok(out)
-    }
-
     fn i32s(&mut self) -> Result<Vec<i32>, ProtoError> {
         let n = self.u32()? as usize;
         self.check_elems(n, 4)?;
@@ -437,6 +572,62 @@ impl<'a> Dec<'a> {
             out.push(self.i32()?);
         }
         Ok(out)
+    }
+
+    fn str(&mut self) -> Result<String, ProtoError> {
+        let n = self.u32()? as usize;
+        if n > MAX_ADDR_LEN {
+            return Err(ProtoError::BadValue("address length"));
+        }
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| ProtoError::BadValue("address utf-8"))
+    }
+
+    /// Decode one self-describing coded KV block into `f32`s. Guards:
+    /// the element count is bounded by [`MAX_FRAME`] *before* allocating,
+    /// the declared payload must be fully present, and a raw/fp16 payload
+    /// must match the element count exactly (LZ declares its own output
+    /// size — `4 × elements` — which decompression enforces).
+    fn kv_block(&mut self) -> Result<Vec<f32>, ProtoError> {
+        let codec =
+            KvCodec::from_wire(self.u8()?).ok_or(ProtoError::BadValue("kv codec"))?;
+        let n = self.u32()? as usize;
+        match n.checked_mul(4) {
+            Some(bytes) if bytes <= MAX_FRAME as usize => {}
+            _ => return Err(ProtoError::BadValue("kv element count")),
+        }
+        let plen = self.u32()? as usize;
+        let payload = self.take(plen)?;
+        match codec {
+            KvCodec::Raw => {
+                if plen != 4 * n {
+                    return Err(ProtoError::BadValue("raw kv payload length"));
+                }
+                Ok(payload
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect())
+            }
+            KvCodec::Fp16 => {
+                if plen != 2 * n {
+                    return Err(ProtoError::BadValue("fp16 kv payload length"));
+                }
+                Ok(payload
+                    .chunks_exact(2)
+                    .map(|c| {
+                        codec::f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap()))
+                    })
+                    .collect())
+            }
+            KvCodec::Lz => {
+                let raw = codec::lz_decompress(payload, 4 * n)
+                    .map_err(|_| ProtoError::BadValue("lz kv payload"))?;
+                Ok(raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect())
+            }
+        }
     }
 
     fn finish(self) -> Result<(), ProtoError> {
@@ -452,9 +643,9 @@ impl<'a> Dec<'a> {
 /// sender-side [`MAX_FRAME`] checks *before* serializing: an oversized
 /// frame must be refused locally (failing one job), never written —
 /// the receiver's `Oversize` error would kill the whole connection.
-pub fn admit_payload_bound(k_len: usize, v_len: usize) -> u64 {
-    // tag + unit + id + first_token + kv_len + max_new + 2 vec headers.
-    64 + 4 * (k_len as u64 + v_len as u64)
+pub fn admit_payload_bound(codec: KvCodec, k_len: usize, v_len: usize) -> u64 {
+    // tag + unit + id + first_token + kv_len + max_new + 2 block headers.
+    64 + codec.payload_bound(k_len) as u64 + codec.payload_bound(v_len) as u64
 }
 
 /// Encode one frame body into `buf` behind a 4-byte length prefix that is
@@ -478,10 +669,13 @@ fn frame_scaffold(buf: &mut Vec<u8>, body_size: usize, body: impl FnOnce(&mut En
 /// `write_frame(&Frame::Admit { .. })` route would copy each cache three
 /// times (into the frame, the payload, the prefixed buffer); this
 /// serializes them once, into a buffer the caller reuses across admits —
-/// zero intermediate `Vec`s, zero steady-state allocation.
+/// zero intermediate `Vec`s, zero steady-state allocation. Returns the
+/// wire size of the two coded KV blocks (the `kv_wire_bytes` increment;
+/// raw is `4 × (k + v)` elements).
 #[allow(clippy::too_many_arguments)]
 pub fn admit_frame_into(
     buf: &mut Vec<u8>,
+    kv_wire: KvCodec,
     unit: u32,
     id: u64,
     first_token: i32,
@@ -489,39 +683,108 @@ pub fn admit_frame_into(
     max_new: u32,
     k: &[f32],
     v: &[f32],
-) {
-    frame_scaffold(buf, 33 + 4 * (k.len() + v.len()), |e| {
-        e.u8(TAG_ADMIT);
-        e.u32(unit);
-        e.u64(id);
-        e.i32(first_token);
-        e.u32(kv_len);
-        e.u32(max_new);
-        e.f32s(k);
-        e.f32s(v);
-    });
+) -> u64 {
+    let mut kv_bytes = 0usize;
+    frame_scaffold(
+        buf,
+        25 + 2 * KV_BLOCK_HEADER + kv_wire.payload_bound(k.len()) + kv_wire.payload_bound(v.len()),
+        |e| {
+            e.u8(TAG_ADMIT);
+            e.u32(unit);
+            e.u64(id);
+            e.i32(first_token);
+            e.u32(kv_len);
+            e.u32(max_new);
+            kv_bytes = e.kv_block(kv_wire, k) + e.kv_block(kv_wire, v);
+        },
+    );
+    kv_bytes as u64
 }
 
 /// Serialize one length-prefixed [`Frame::KvSegment`] into `buf`
 /// (cleared first), borrowing the chunk's elements from the prefill
 /// outcome — the KV-handoff hot path, same single-buffer discipline as
-/// [`admit_frame_into`].
+/// [`admit_frame_into`]. Returns the coded block's wire size.
 pub fn kv_segment_frame_into(
     buf: &mut Vec<u8>,
+    kv_wire: KvCodec,
     id: u64,
     half: KvHalf,
     offset: u32,
     total: u32,
     data: &[f32],
-) {
-    frame_scaffold(buf, 22 + 4 * data.len(), |e| {
-        e.u8(TAG_KV_SEGMENT);
-        e.u64(id);
-        e.u8(half.to_wire());
-        e.u32(offset);
-        e.u32(total);
-        e.f32s(data);
-    });
+) -> u64 {
+    let mut kv_bytes = 0usize;
+    frame_scaffold(
+        buf,
+        18 + KV_BLOCK_HEADER + kv_wire.payload_bound(data.len()),
+        |e| {
+            e.u8(TAG_KV_SEGMENT);
+            e.u64(id);
+            e.u8(half.to_wire());
+            e.u32(offset);
+            e.u32(total);
+            kv_bytes = e.kv_block(kv_wire, data);
+        },
+    );
+    kv_bytes as u64
+}
+
+/// Drive `emit` once per `chunk_elems`-sized chunk of both cache halves,
+/// borrow-encoding each chunk into `buf` (reused across chunks). Shared
+/// by the relay and direct-transfer senders so the two routes cannot
+/// drift in framing; stops at the first `emit` error.
+pub fn each_kv_segment<E>(
+    buf: &mut Vec<u8>,
+    codec: KvCodec,
+    id: u64,
+    chunk_elems: usize,
+    k: &[f32],
+    v: &[f32],
+    mut emit: impl FnMut(&[u8]) -> Result<(), E>,
+) -> Result<(), E> {
+    for (half, data) in [(KvHalf::K, k), (KvHalf::V, v)] {
+        let total = data.len() as u32;
+        let mut off = 0usize;
+        while off < data.len() {
+            let end = (off + chunk_elems.max(1)).min(data.len());
+            kv_segment_frame_into(buf, codec, id, half, off as u32, total, &data[off..end]);
+            emit(buf)?;
+            off = end;
+        }
+    }
+    Ok(())
+}
+
+/// Apply one `KvSegment` to a job's assembling cache halves, with the
+/// shared geometry guards (a corrupt `total` must not allocate unbounded
+/// memory; a chunk must fit its declared total). Shared by the
+/// scheduler-side relay reassembly and the decode shard's peer
+/// reassembly so the two routes cannot drift in validation.
+pub fn apply_kv_segment(
+    k: &mut Vec<f32>,
+    v: &mut Vec<f32>,
+    half: KvHalf,
+    offset: u32,
+    total: u32,
+    data: &[f32],
+) -> Result<(), &'static str> {
+    let (offset, total) = (offset as usize, total as usize);
+    if total > MAX_FRAME as usize / 4 {
+        return Err("total exceeds the frame limit");
+    }
+    if offset.saturating_add(data.len()) > total {
+        return Err("chunk overruns its declared total");
+    }
+    let dst = match half {
+        KvHalf::K => k,
+        KvHalf::V => v,
+    };
+    if dst.len() != total {
+        dst.resize(total, 0.0);
+    }
+    dst[offset..offset + data.len()].copy_from_slice(data);
+    Ok(())
 }
 
 /// Serialize one frame payload (tag + fields, *without* the length
@@ -529,21 +792,26 @@ pub fn kv_segment_frame_into(
 pub fn encode(f: &Frame) -> Vec<u8> {
     let mut e = Enc(Vec::new());
     match f {
-        Frame::Hello { version } => {
+        Frame::Hello { version, kv_wire } => {
             e.u8(TAG_HELLO);
             e.u32(*version);
+            e.u8(kv_wire.to_wire());
         }
         Frame::HelloAck {
             version,
             role,
             units,
             slots,
+            kv_wire,
+            peer_port,
         } => {
             e.u8(TAG_HELLO_ACK);
             e.u32(*version);
             e.u8(role.to_wire());
             e.u32(*units);
             e.u32(*slots);
+            e.u8(kv_wire.to_wire());
+            e.u32(*peer_port as u32);
         }
         Frame::Admit {
             unit,
@@ -554,14 +822,16 @@ pub fn encode(f: &Frame) -> Vec<u8> {
             k,
             v,
         } => {
+            // The enum path always encodes raw (the borrow encoders are
+            // the codec-bearing senders); decode accepts any codec.
             e.u8(TAG_ADMIT);
             e.u32(*unit);
             e.u64(*id);
             e.i32(*first_token);
             e.u32(*kv_len);
             e.u32(*max_new);
-            e.f32s(k);
-            e.f32s(v);
+            e.kv_block(KvCodec::Raw, k);
+            e.kv_block(KvCodec::Raw, v);
         }
         Frame::PrefillDispatch { unit, jobs } => {
             e.u8(TAG_PREFILL_DISPATCH);
@@ -571,6 +841,14 @@ pub fn encode(f: &Frame) -> Vec<u8> {
                 e.u64(j.id);
                 e.u32(j.max_new);
                 e.i32s(&j.prompt);
+                match &j.target {
+                    Some(t) => {
+                        e.u8(1);
+                        e.str(&t.addr);
+                        e.u32(t.unit);
+                    }
+                    None => e.u8(0),
+                }
             }
         }
         Frame::KvSegment {
@@ -585,7 +863,7 @@ pub fn encode(f: &Frame) -> Vec<u8> {
             e.u8(half.to_wire());
             e.u32(*offset);
             e.u32(*total);
-            e.f32s(data);
+            e.kv_block(KvCodec::Raw, data);
         }
         Frame::PrefillDone {
             id,
@@ -645,7 +923,11 @@ pub fn encode(f: &Frame) -> Vec<u8> {
             e.u64(*t_us);
         }
         Frame::StatsRequest => e.u8(TAG_STATS_REQUEST),
-        Frame::StatsReply { units } => {
+        Frame::StatsReply {
+            units,
+            kv_wire_bytes,
+            kv_raw_bytes,
+        } => {
             e.u8(TAG_STATS_REPLY);
             e.u32(units.len() as u32);
             for u in units {
@@ -653,9 +935,40 @@ pub fn encode(f: &Frame) -> Vec<u8> {
                 e.u32(u.free_slots);
                 e.u64(u.kv_tokens);
             }
+            e.u64(*kv_wire_bytes);
+            e.u64(*kv_raw_bytes);
         }
         Frame::Stop => e.u8(TAG_STOP),
         Frame::Bye => e.u8(TAG_BYE),
+        Frame::PeerHello { version, kv_wire } => {
+            e.u8(TAG_PEER_HELLO);
+            e.u32(*version);
+            e.u8(kv_wire.to_wire());
+        }
+        Frame::PeerHelloAck { version } => {
+            e.u8(TAG_PEER_HELLO_ACK);
+            e.u32(*version);
+        }
+        Frame::HandoffCommit {
+            unit,
+            id,
+            first_token,
+            kv_len,
+            max_new,
+            exec_time,
+        } => {
+            e.u8(TAG_HANDOFF_COMMIT);
+            e.u32(*unit);
+            e.u64(*id);
+            e.i32(*first_token);
+            e.u32(*kv_len);
+            e.u32(*max_new);
+            e.f64(*exec_time);
+        }
+        Frame::HandoffAck { id } => {
+            e.u8(TAG_HANDOFF_ACK);
+            e.u64(*id);
+        }
     }
     e.0
 }
@@ -665,12 +978,20 @@ pub fn decode(buf: &[u8]) -> Result<Frame, ProtoError> {
     let mut d = Dec { buf, at: 0 };
     let tag = d.u8()?;
     let f = match tag {
-        TAG_HELLO => Frame::Hello { version: d.u32()? },
+        TAG_HELLO => Frame::Hello {
+            version: d.u32()?,
+            kv_wire: KvCodec::from_wire(d.u8()?).ok_or(ProtoError::BadValue("kv codec"))?,
+        },
         TAG_HELLO_ACK => Frame::HelloAck {
             version: d.u32()?,
             role: ShardRole::from_wire(d.u8()?)?,
             units: d.u32()?,
             slots: d.u32()?,
+            kv_wire: KvCodec::from_wire(d.u8()?).ok_or(ProtoError::BadValue("kv codec"))?,
+            peer_port: {
+                let p = d.u32()?;
+                u16::try_from(p).map_err(|_| ProtoError::BadValue("peer port"))?
+            },
         },
         TAG_ADMIT => Frame::Admit {
             unit: d.u32()?,
@@ -678,8 +999,8 @@ pub fn decode(buf: &[u8]) -> Result<Frame, ProtoError> {
             first_token: d.i32()?,
             kv_len: d.u32()?,
             max_new: d.u32()?,
-            k: d.f32s()?,
-            v: d.f32s()?,
+            k: d.kv_block()?,
+            v: d.kv_block()?,
         },
         TAG_TOKEN => Frame::Token {
             id: d.u64()?,
@@ -719,7 +1040,11 @@ pub fn decode(buf: &[u8]) -> Result<Frame, ProtoError> {
                     kv_tokens: d.u64()?,
                 });
             }
-            Frame::StatsReply { units }
+            Frame::StatsReply {
+                units,
+                kv_wire_bytes: d.u64()?,
+                kv_raw_bytes: d.u64()?,
+            }
         }
         TAG_STOP => Frame::Stop,
         TAG_BYE => Frame::Bye,
@@ -734,6 +1059,14 @@ pub fn decode(buf: &[u8]) -> Result<Frame, ProtoError> {
                     id: d.u64()?,
                     max_new: d.u32()?,
                     prompt: d.i32s()?,
+                    target: match d.u8()? {
+                        0 => None,
+                        1 => Some(DirectTarget {
+                            addr: d.str()?,
+                            unit: d.u32()?,
+                        }),
+                        _ => return Err(ProtoError::BadValue("target flag")),
+                    },
                 });
             }
             Frame::PrefillDispatch { unit, jobs }
@@ -743,7 +1076,7 @@ pub fn decode(buf: &[u8]) -> Result<Frame, ProtoError> {
             half: KvHalf::from_wire(d.u8()?)?,
             offset: d.u32()?,
             total: d.u32()?,
-            data: d.f32s()?,
+            data: d.kv_block()?,
         },
         TAG_PREFILL_DONE => Frame::PrefillDone {
             id: d.u64()?,
@@ -752,6 +1085,20 @@ pub fn decode(buf: &[u8]) -> Result<Frame, ProtoError> {
             exec_time: d.f64()?,
         },
         TAG_PREFILL_FAILED => Frame::PrefillFailed { id: d.u64()? },
+        TAG_PEER_HELLO => Frame::PeerHello {
+            version: d.u32()?,
+            kv_wire: KvCodec::from_wire(d.u8()?).ok_or(ProtoError::BadValue("kv codec"))?,
+        },
+        TAG_PEER_HELLO_ACK => Frame::PeerHelloAck { version: d.u32()? },
+        TAG_HANDOFF_COMMIT => Frame::HandoffCommit {
+            unit: d.u32()?,
+            id: d.u64()?,
+            first_token: d.i32()?,
+            kv_len: d.u32()?,
+            max_new: d.u32()?,
+            exec_time: d.f64()?,
+        },
+        TAG_HANDOFF_ACK => Frame::HandoffAck { id: d.u64()? },
         t => return Err(ProtoError::BadTag(t)),
     };
     d.finish()?;
@@ -902,10 +1249,19 @@ mod tests {
     use super::*;
     use crate::util::Rng;
 
+    fn arbitrary_codec(rng: &mut Rng) -> KvCodec {
+        match rng.below(3) {
+            0 => KvCodec::Raw,
+            1 => KvCodec::Fp16,
+            _ => KvCodec::Lz,
+        }
+    }
+
     fn arbitrary_frame(rng: &mut Rng) -> Frame {
-        match rng.below(17) {
+        match rng.below(21) {
             0 => Frame::Hello {
                 version: rng.next_u64() as u32,
+                kv_wire: arbitrary_codec(rng),
             },
             1 => Frame::HelloAck {
                 version: rng.next_u64() as u32,
@@ -916,6 +1272,8 @@ mod tests {
                 },
                 units: rng.below(64) as u32,
                 slots: rng.below(256) as u32,
+                kv_wire: arbitrary_codec(rng),
+                peer_port: rng.below(1 << 16) as u16,
             },
             2 => Frame::Admit {
                 unit: rng.below(16) as u32,
@@ -958,6 +1316,8 @@ mod tests {
                         kv_tokens: rng.below(1 << 30),
                     })
                     .collect(),
+                kv_wire_bytes: rng.below(1 << 40),
+                kv_raw_bytes: rng.below(1 << 40),
             },
             11 => Frame::Stop,
             12 => Frame::Bye,
@@ -968,6 +1328,10 @@ mod tests {
                         id: rng.next_u64(),
                         max_new: rng.below(512) as u32,
                         prompt: (0..1 + rng.below(48)).map(|_| rng.next_u64() as i32).collect(),
+                        target: rng.chance(0.5).then(|| DirectTarget {
+                            addr: format!("127.0.0.1:{}", rng.below(1 << 16)),
+                            unit: rng.below(16) as u32,
+                        }),
                     })
                     .collect(),
             },
@@ -984,7 +1348,23 @@ mod tests {
                 kv_len: rng.below(4096) as u32,
                 exec_time: rng.f64() * 5.0,
             },
-            _ => Frame::PrefillFailed { id: rng.next_u64() },
+            16 => Frame::PrefillFailed { id: rng.next_u64() },
+            17 => Frame::PeerHello {
+                version: rng.next_u64() as u32,
+                kv_wire: arbitrary_codec(rng),
+            },
+            18 => Frame::PeerHelloAck {
+                version: rng.next_u64() as u32,
+            },
+            19 => Frame::HandoffCommit {
+                unit: rng.below(16) as u32,
+                id: rng.next_u64(),
+                first_token: rng.next_u64() as i32,
+                kv_len: rng.below(4096) as u32,
+                max_new: rng.below(1024) as u32,
+                exec_time: rng.f64() * 5.0,
+            },
+            _ => Frame::HandoffAck { id: rng.next_u64() },
         }
     }
 
@@ -1064,8 +1444,13 @@ mod tests {
         )
         .unwrap();
         let mut buf = Vec::new();
-        admit_frame_into(&mut buf, 3, 99, 7, 5, 11, &k, &v);
+        let kv_bytes = admit_frame_into(&mut buf, KvCodec::Raw, 3, 99, 7, 5, 11, &k, &v);
         assert_eq!(buf, wire, "admit borrow encoder must be byte-identical");
+        assert_eq!(
+            kv_bytes,
+            2 * (KV_BLOCK_HEADER as u64 + 4 * 70),
+            "raw block accounting"
+        );
 
         let mut wire = Vec::new();
         write_frame(
@@ -1080,8 +1465,114 @@ mod tests {
         )
         .unwrap();
         let mut buf = Vec::new();
-        kv_segment_frame_into(&mut buf, 99, KvHalf::V, 128, 4096, &k);
+        kv_segment_frame_into(&mut buf, KvCodec::Raw, 99, KvHalf::V, 128, 4096, &k);
         assert_eq!(buf, wire, "kv-segment borrow encoder must be byte-identical");
+    }
+
+    /// Representative KV content: fp16-exact values (multiples of 2⁻⁴)
+    /// with short constant runs, so lz has structure and fp16 is
+    /// bit-recoverable.
+    fn kv_pattern(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (7.0 + (i / 7) as f32 * 0.5) * 0.125).collect()
+    }
+
+    #[test]
+    fn coded_admit_frames_round_trip_per_codec() {
+        let k = kv_pattern(3000);
+        let v: Vec<f32> = kv_pattern(3000).iter().map(|x| -x).collect();
+        for codec in [KvCodec::Raw, KvCodec::Fp16, KvCodec::Lz] {
+            let mut buf = Vec::new();
+            let kv_bytes = admit_frame_into(&mut buf, codec, 2, 77, 9, 3000, 5, &k, &v);
+            let frame = decode(&buf[4..]).unwrap_or_else(|e| panic!("{}: {e}", codec.name()));
+            let Frame::Admit { id: 77, k: dk, v: dv, .. } = frame else {
+                panic!("wrong frame: {frame:?}")
+            };
+            assert_eq!(dk, k, "{}: K must survive (values are fp16-exact)", codec.name());
+            assert_eq!(dv, v, "{}: V must survive", codec.name());
+            match codec {
+                KvCodec::Raw => assert_eq!(kv_bytes, 2 * (9 + 4 * 3000)),
+                KvCodec::Fp16 => assert_eq!(kv_bytes, 2 * (9 + 2 * 3000)),
+                KvCodec::Lz => assert!(
+                    (kv_bytes as f64) < 0.6 * (2.0 * 4.0 * 3000.0),
+                    "structured KV must shrink ≥40% under lz: {kv_bytes}"
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn fp16_blocks_stay_within_half_precision_tolerance() {
+        let mut rng = Rng::new(0xF16);
+        let data: Vec<f32> = (0..4096).map(|_| rng.uniform(-100.0, 100.0) as f32).collect();
+        let mut buf = Vec::new();
+        kv_segment_frame_into(&mut buf, KvCodec::Fp16, 5, KvHalf::K, 0, 4096, &data);
+        let Frame::KvSegment { data: back, .. } = decode(&buf[4..]).unwrap() else {
+            panic!("wrong frame")
+        };
+        for (a, b) in data.iter().zip(&back) {
+            let rel = ((a - b) / a.abs().max(1e-3)).abs();
+            assert!(rel <= 1.0 / 1024.0, "fp16 error too large: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn lz_blocks_are_bit_exact_on_random_data() {
+        let mut rng = Rng::new(0x12E);
+        for _ in 0..20 {
+            let data: Vec<f32> = (0..rng.below(5000)).map(|_| rng.f64() as f32).collect();
+            let mut buf = Vec::new();
+            kv_segment_frame_into(&mut buf, KvCodec::Lz, 5, KvHalf::V, 0, data.len() as u32, &data);
+            let Frame::KvSegment { data: back, .. } = decode(&buf[4..]).unwrap() else {
+                panic!("wrong frame")
+            };
+            assert_eq!(back, data, "lz must be bit-exact");
+        }
+    }
+
+    #[test]
+    fn coded_frames_reject_truncation_at_every_byte_offset() {
+        let k = kv_pattern(600);
+        for codec in [KvCodec::Raw, KvCodec::Fp16, KvCodec::Lz] {
+            let mut buf = Vec::new();
+            admit_frame_into(&mut buf, codec, 0, 1, 0, 600, 4, &k, &k);
+            let payload = &buf[4..];
+            for cut in 0..payload.len() {
+                assert!(
+                    decode(&payload[..cut]).is_err(),
+                    "{}: truncated admit at {cut} must not decode",
+                    codec.name()
+                );
+            }
+            let mut buf = Vec::new();
+            kv_segment_frame_into(&mut buf, codec, 1, KvHalf::K, 0, 600, &k);
+            let payload = &buf[4..];
+            for cut in 0..payload.len() {
+                assert!(
+                    decode(&payload[..cut]).is_err(),
+                    "{}: truncated segment at {cut} must not decode",
+                    codec.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_codec_byte_and_element_count_rejected() {
+        let mut buf = Vec::new();
+        kv_segment_frame_into(&mut buf, KvCodec::Raw, 1, KvHalf::K, 0, 4, &[1.0, 2.0, 3.0, 4.0]);
+        // The codec byte sits right after id(8)+half(1)+offset(4)+total(4)
+        // past the tag; flip it to an unknown codec.
+        let codec_at = 4 + 1 + 8 + 1 + 4 + 4;
+        let mut bad = buf.clone();
+        bad[codec_at] = 7;
+        assert!(matches!(
+            decode(&bad[4..]),
+            Err(ProtoError::BadValue("kv codec"))
+        ));
+        // A huge element count must fail before allocating.
+        let mut bad = buf.clone();
+        bad[codec_at + 1..codec_at + 5].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&bad[4..]).is_err());
     }
 
     #[test]
@@ -1089,24 +1580,29 @@ mod tests {
         // The zero-intermediate-allocation property of the hot path:
         // same-shape frames into one reused buffer must not touch the
         // allocator — heap pointer and capacity stay fixed after the
-        // first encode (clear + reserve only, never a fresh Vec).
+        // first encode (clear + reserve only, never a fresh Vec). The
+        // compressed codecs must hold the same property: their scaffold
+        // reservation is the worst-case bound, so a varying compressed
+        // size never grows the buffer.
         let k = vec![1.0f32; 4096];
         let v = vec![2.0f32; 4096];
-        let mut buf = Vec::new();
-        admit_frame_into(&mut buf, 0, 1, 0, 4, 4, &k, &v);
-        let (ptr, cap) = (buf.as_ptr(), buf.capacity());
-        for id in 2..32u64 {
-            admit_frame_into(&mut buf, 0, id, 0, 4, 4, &k, &v);
-            assert_eq!(buf.as_ptr(), ptr, "admit encode reallocated");
-            assert_eq!(buf.capacity(), cap, "admit encode grew the buffer");
-        }
-        let mut buf = Vec::new();
-        kv_segment_frame_into(&mut buf, 1, KvHalf::K, 0, 8192, &k);
-        let (ptr, cap) = (buf.as_ptr(), buf.capacity());
-        for off in 1..32u32 {
-            kv_segment_frame_into(&mut buf, 1, KvHalf::K, off, 8192, &k);
-            assert_eq!(buf.as_ptr(), ptr, "kv-segment encode reallocated");
-            assert_eq!(buf.capacity(), cap, "kv-segment encode grew the buffer");
+        for codec in [KvCodec::Raw, KvCodec::Fp16, KvCodec::Lz] {
+            let mut buf = Vec::new();
+            admit_frame_into(&mut buf, codec, 0, 1, 0, 4, 4, &k, &v);
+            let (ptr, cap) = (buf.as_ptr(), buf.capacity());
+            for id in 2..32u64 {
+                admit_frame_into(&mut buf, codec, 0, id, 0, 4, 4, &k, &v);
+                assert_eq!(buf.as_ptr(), ptr, "{}: admit encode reallocated", codec.name());
+                assert_eq!(buf.capacity(), cap, "{}: admit encode grew", codec.name());
+            }
+            let mut buf = Vec::new();
+            kv_segment_frame_into(&mut buf, codec, 1, KvHalf::K, 0, 8192, &k);
+            let (ptr, cap) = (buf.as_ptr(), buf.capacity());
+            for off in 1..32u32 {
+                kv_segment_frame_into(&mut buf, codec, 1, KvHalf::K, off, 8192, &k);
+                assert_eq!(buf.as_ptr(), ptr, "{}: segment encode reallocated", codec.name());
+                assert_eq!(buf.capacity(), cap, "{}: segment encode grew", codec.name());
+            }
         }
     }
 

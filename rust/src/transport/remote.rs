@@ -51,8 +51,11 @@
 //! evict-and-reconnect path. The steady ping cadence is also what the
 //! shard's own symmetric silence guard keys off.
 
-use super::proto::{self, Frame, FrameReader, KvHalf, ProtoError, ShardRole, PROTO_VERSION};
-use super::{AdmitJob, DecodeTransport, PrefillSinks, PrefillTransport, PrefillWork, ShardSinks};
+use super::proto::{self, DirectTarget, Frame, FrameReader, ProtoError, ShardRole, PROTO_VERSION};
+use super::{
+    AdmitJob, DecodeTransport, KvCodec, KvWireCounters, PrefillSinks, PrefillTransport,
+    PrefillWork, ShardSinks,
+};
 use crate::engine::PrefillOutcome;
 use crate::metrics::RequestMetrics;
 use anyhow::{anyhow, Context, Result};
@@ -68,6 +71,9 @@ use std::time::{Duration, Instant};
 pub struct RemoteShardConfig {
     /// Shard address (`host:port`).
     pub addr: String,
+    /// KV wire codec this deployment produces (proposed in `Hello`; the
+    /// shard must echo it back).
+    pub kv_wire: KvCodec,
     /// Initial connect + handshake budget (startup fails fast past it);
     /// also the socket write timeout bounding a blocked writer.
     pub connect_timeout: Duration,
@@ -84,11 +90,12 @@ pub struct RemoteShardConfig {
 }
 
 impl RemoteShardConfig {
-    /// Defaults for `addr` (5 s connect budget, 250 ms ticks, 1 s pings,
-    /// 5 s silence-to-death, 500 ms reconnect backoff).
+    /// Defaults for `addr` (raw KV codec, 5 s connect budget, 250 ms
+    /// ticks, 1 s pings, 5 s silence-to-death, 500 ms reconnect backoff).
     pub fn new(addr: &str) -> Self {
         RemoteShardConfig {
             addr: addr.to_string(),
+            kv_wire: KvCodec::Raw,
             connect_timeout: Duration::from_secs(5),
             read_tick: Duration::from_millis(250),
             ping_interval: Duration::from_secs(1),
@@ -121,10 +128,37 @@ struct ShardCore {
     role: ShardRole,
     units: u32,
     slots: u32,
+    /// Direct-transfer peer address (`host:peer_port`) advertised in the
+    /// last `HelloAck`; `None` for shards without a peer listener. A
+    /// replacement shard may rebind its peer listener, so reconnect
+    /// refreshes this.
+    peer_addr: Mutex<Option<String>>,
+    /// Relay-path KV accounting (the scheduler's own encode/decode of KV
+    /// payloads); shared with every shard of the cluster.
+    relay_kv: Arc<KvWireCounters>,
+}
+
+/// `host:peer_port` for a shard reached at `addr` (drops `addr`'s own
+/// port).
+fn peer_addr_of(addr: &str, peer_port: u16) -> Option<String> {
+    if peer_port == 0 {
+        return None;
+    }
+    let host = addr.rsplit_once(':').map(|(h, _)| h).unwrap_or(addr);
+    Some(format!("{host}:{peer_port}"))
 }
 
 impl ShardCore {
-    fn new(cfg: RemoteShardConfig, conn: TcpStream, role: ShardRole, units: u32, slots: u32) -> Self {
+    fn new(
+        cfg: RemoteShardConfig,
+        conn: TcpStream,
+        role: ShardRole,
+        units: u32,
+        slots: u32,
+        peer_port: u16,
+        relay_kv: Arc<KvWireCounters>,
+    ) -> Self {
+        let peer_addr = peer_addr_of(&cfg.addr, peer_port);
         ShardCore {
             cfg,
             writer: Mutex::new(Some(conn)),
@@ -137,6 +171,8 @@ impl ShardCore {
             role,
             units,
             slots,
+            peer_addr: Mutex::new(peer_addr),
+            relay_kv,
         }
     }
 
@@ -275,9 +311,13 @@ fn resolve(addr: &str) -> Result<std::net::SocketAddr> {
         .ok_or_else(|| anyhow!("shard address {addr} resolved to nothing"))
 }
 
-/// Connect, exchange `Hello`/`HelloAck`, verify the advertised role, and
-/// return the ready stream plus the advertised shape.
-fn connect_and_handshake(cfg: &RemoteShardConfig, want: ShardRole) -> Result<(TcpStream, u32, u32)> {
+/// Connect, exchange `Hello`/`HelloAck`, verify the advertised role and
+/// echoed codec, and return the ready stream plus the advertised shape
+/// (`units`, `slots`, `peer_port`).
+fn connect_and_handshake(
+    cfg: &RemoteShardConfig,
+    want: ShardRole,
+) -> Result<(TcpStream, u32, u32, u16)> {
     let sockaddr = resolve(&cfg.addr)?;
     let conn = TcpStream::connect_timeout(&sockaddr, cfg.connect_timeout)
         .with_context(|| format!("connecting to shard {}", cfg.addr))?;
@@ -285,7 +325,13 @@ fn connect_and_handshake(cfg: &RemoteShardConfig, want: ShardRole) -> Result<(Tc
     conn.set_read_timeout(Some(cfg.read_tick))?;
     conn.set_write_timeout(Some(cfg.connect_timeout))?;
     let mut w = conn.try_clone()?;
-    proto::write_frame(&mut w, &Frame::Hello { version: PROTO_VERSION })?;
+    proto::write_frame(
+        &mut w,
+        &Frame::Hello {
+            version: PROTO_VERSION,
+            kv_wire: cfg.kv_wire,
+        },
+    )?;
     let mut reader = FrameReader::new();
     let mut r = conn.try_clone()?;
     let deadline = Instant::now() + cfg.connect_timeout;
@@ -296,6 +342,8 @@ fn connect_and_handshake(cfg: &RemoteShardConfig, want: ShardRole) -> Result<(Tc
                 role,
                 units,
                 slots,
+                kv_wire,
+                peer_port,
             })) => {
                 if version != PROTO_VERSION {
                     return Err(anyhow!(
@@ -311,6 +359,16 @@ fn connect_and_handshake(cfg: &RemoteShardConfig, want: ShardRole) -> Result<(Tc
                         want.name()
                     ));
                 }
+                if kv_wire != cfg.kv_wire {
+                    // A shard producing a different codec than negotiated
+                    // would silently skew the byte accounting; refuse.
+                    return Err(anyhow!(
+                        "shard {} kv-wire codec mismatch: we asked for {}, it acked {}",
+                        cfg.addr,
+                        cfg.kv_wire.name(),
+                        kv_wire.name()
+                    ));
+                }
                 if units == 0 {
                     return Err(anyhow!("shard {} advertises zero units", cfg.addr));
                 }
@@ -319,7 +377,7 @@ fn connect_and_handshake(cfg: &RemoteShardConfig, want: ShardRole) -> Result<(Tc
                     // would pend forever with no terminal event.
                     return Err(anyhow!("shard {} advertises zero slots", cfg.addr));
                 }
-                return Ok((conn, units, slots));
+                return Ok((conn, units, slots, peer_port));
             }
             // A reconnecting shard may flush stale events first; skip
             // them (but still within the handshake deadline — a peer
@@ -335,10 +393,12 @@ fn connect_and_handshake(cfg: &RemoteShardConfig, want: ShardRole) -> Result<(Tc
 }
 
 /// Role-specific half of the shared reader loop: frame delivery and
-/// eviction against the role's pending table and sinks.
+/// eviction against the role's pending table and sinks. `wire_len` is
+/// the frame's full on-wire size (length prefix included) — what the KV
+/// byte accounting charges for KV-bearing frames.
 trait ReaderPeer: Send {
     fn core(&self) -> &ShardCore;
-    fn on_frame(&self, frame: Frame);
+    fn on_frame(&self, frame: Frame, wire_len: u64);
     /// Drain the pending table and deliver the evicted ids upstream.
     /// Called only after the core is marked dead and the write half
     /// closed (see the locking discipline in the module docs).
@@ -354,6 +414,10 @@ fn reader_loop<P: ReaderPeer>(peer: P, mut stream: TcpStream) {
         let mut reader = FrameReader::new();
         let mut idle = proto::IdleGuard::new(&reader);
         let mut last_ping = Instant::now();
+        // `poll` returns the moment a frame completes, so the consumed
+        // delta between returned frames is exactly that frame's wire
+        // size (used by the KV byte accounting).
+        let mut consumed_at_last_frame = 0u64;
         loop {
             if core.stop.load(Ordering::SeqCst) {
                 break 'conn;
@@ -361,7 +425,9 @@ fn reader_loop<P: ReaderPeer>(peer: P, mut stream: TcpStream) {
             match reader.poll(&mut stream) {
                 Ok(Some(frame)) => {
                     idle.touch();
-                    peer.on_frame(frame);
+                    let wire_len = reader.consumed() - consumed_at_last_frame;
+                    consumed_at_last_frame = reader.consumed();
+                    peer.on_frame(frame, wire_len);
                 }
                 Ok(None) => {
                     // Total silence with pings outstanding: the link is
@@ -419,7 +485,7 @@ fn reader_loop<P: ReaderPeer>(peer: P, mut stream: TcpStream) {
                 break 'conn;
             }
             match connect_and_handshake(&core.cfg, core.role) {
-                Ok((conn, units, slots)) => {
+                Ok((conn, units, slots, peer_port)) => {
                     // The scheduler's pool was sized to the original
                     // shape; a replacement with a different one would
                     // leave phantom units that it rejects every
@@ -436,6 +502,9 @@ fn reader_loop<P: ReaderPeer>(peer: P, mut stream: TcpStream) {
                     }
                     log::info!("shard {addr}: reconnected ({units} {} units)", core.role.name());
                     let Ok(rs) = conn.try_clone() else { continue };
+                    // A replacement process rebinds its peer listener, so
+                    // direct targets must track the fresh port.
+                    *core.peer_addr.lock().unwrap() = peer_addr_of(&core.cfg.addr, peer_port);
                     *core.writer.lock().unwrap() = Some(conn);
                     core.alive.store(true, Ordering::SeqCst);
                     stream = rs;
@@ -459,12 +528,15 @@ impl ReaderPeer for DecodePeer {
         &self.shard.core
     }
 
-    fn on_frame(&self, frame: Frame) {
+    fn on_frame(&self, frame: Frame, _wire_len: u64) {
         match frame {
             Frame::Token { id, index, token } => {
                 // Gate on the pending table: a stale id (evicted, or
                 // left over from a connection this scheduler never
-                // owned) must not produce upstream events.
+                // owned) must not produce upstream events. Direct
+                // pre-placements are registered here at dispatch time,
+                // so a direct sequence's stream (index 0 from the peer
+                // commit onward) passes the same gate.
                 if self.shard.pending.lock().unwrap().contains_key(&id) {
                     (self.sinks.on_token)(id, index, token);
                 }
@@ -480,7 +552,11 @@ impl ReaderPeer for DecodePeer {
                     (self.sinks.on_rejected)(id);
                 }
             }
-            Frame::StatsReply { units } => (self.sinks.on_stats)(units),
+            Frame::StatsReply {
+                units,
+                kv_wire_bytes,
+                kv_raw_bytes,
+            } => (self.sinks.on_stats)(units, kv_wire_bytes, kv_raw_bytes),
             Frame::Pong { t_us, .. } => self.shard.core.on_pong(t_us),
             Frame::Bye => {
                 // Clean shutdown acknowledgement; the close follows as EOF.
@@ -509,11 +585,17 @@ impl ReaderPeer for DecodePeer {
 /// Connect to a decode shard and return one [`RemoteUnit`] transport per
 /// DP unit it serves. Fails fast if the shard is unreachable at startup;
 /// after that, drops are handled by evict-and-reconnect (module docs).
-pub fn connect_shard(cfg: RemoteShardConfig, sinks: ShardSinks) -> Result<Vec<RemoteUnit>> {
-    let (conn, units, slots) = connect_and_handshake(&cfg, ShardRole::Decode)?;
+/// `relay_kv` is the cluster-wide relay-path KV accounting (what the
+/// scheduler itself puts on the wire in `Admit` frames).
+pub fn connect_shard(
+    cfg: RemoteShardConfig,
+    sinks: ShardSinks,
+    relay_kv: Arc<KvWireCounters>,
+) -> Result<Vec<RemoteUnit>> {
+    let (conn, units, slots, peer_port) = connect_and_handshake(&cfg, ShardRole::Decode)?;
     let reader_stream = conn.try_clone()?;
     let shard = Arc::new(ShardState {
-        core: ShardCore::new(cfg, conn, ShardRole::Decode, units, slots),
+        core: ShardCore::new(cfg, conn, ShardRole::Decode, units, slots, peer_port, relay_kv),
         pending: Mutex::new(HashMap::new()),
     });
     {
@@ -563,10 +645,11 @@ impl DecodeTransport for RemoteUnit {
     }
 
     fn admit(&mut self, job: AdmitJob) -> Result<(), AdmitJob> {
+        let codec = self.shard.core.cfg.kv_wire;
         // Refuse frames the receiver would reject as oversized: sending
         // one would cost the whole connection (and every resident
         // sequence on the shard), not just this job.
-        let bound = proto::admit_payload_bound(job.outcome.k.len(), job.outcome.v.len());
+        let bound = proto::admit_payload_bound(codec, job.outcome.k.len(), job.outcome.v.len());
         if bound > proto::MAX_FRAME as u64 {
             log::warn!(
                 "shard {}: admit for job {} (~{bound} B) exceeds the frame limit; refusing",
@@ -591,6 +674,7 @@ impl DecodeTransport for RemoteUnit {
         // only: a slow write here must not delay event delivery.
         proto::admit_frame_into(
             &mut self.wbuf,
+            codec,
             self.unit,
             job.id,
             job.outcome.first_token,
@@ -600,7 +684,16 @@ impl DecodeTransport for RemoteUnit {
             &job.outcome.v,
         );
         match self.shard.core.write_wire(&self.wbuf) {
-            Ok(()) => Ok(()),
+            Ok(()) => {
+                // Whole-frame accounting, matching the receiver side
+                // (shards charge full frame lengths for KV-bearing
+                // frames), so relay and shard gauges stay comparable.
+                self.shard.core.relay_kv.record(
+                    self.wbuf.len() as u64,
+                    4 * (job.outcome.k.len() as u64 + job.outcome.v.len() as u64),
+                );
+                Ok(())
+            }
             Err(e) => {
                 self.shard.pending.lock().unwrap().remove(&job.id);
                 log::warn!("shard {}: admit failed: {e}", self.shard.core.cfg.addr);
@@ -611,6 +704,37 @@ impl DecodeTransport for RemoteUnit {
 
     fn request_stats(&self) {
         self.shard.core.request_stats();
+    }
+
+    fn direct_target(&self) -> Option<DirectTarget> {
+        if !self.alive() {
+            return None;
+        }
+        self.shard
+            .core
+            .peer_addr
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|addr| DirectTarget {
+                addr: addr.clone(),
+                unit: self.unit,
+            })
+    }
+
+    fn expect_direct(&self, id: u64, metrics: RequestMetrics) {
+        self.shard.pending.lock().unwrap().insert(id, metrics);
+    }
+
+    fn cancel_direct(&self, id: u64) -> bool {
+        self.shard.pending.lock().unwrap().remove(&id).is_some()
+    }
+
+    fn patch_direct(&self, id: u64, t_first: f64, exec_time: f64) {
+        if let Some(m) = self.shard.pending.lock().unwrap().get_mut(&id) {
+            m.t_first_token = t_first;
+            m.t_exec_start = (t_first - exec_time).max(m.t_dispatch);
+        }
     }
 
     fn stop(&mut self) {
@@ -643,7 +767,7 @@ impl ReaderPeer for PrefillPeer {
         &self.shard.core
     }
 
-    fn on_frame(&self, frame: Frame) {
+    fn on_frame(&self, frame: Frame, wire_len: u64) {
         match frame {
             Frame::KvSegment {
                 id,
@@ -652,35 +776,40 @@ impl ReaderPeer for PrefillPeer {
                 total,
                 data,
             } => {
-                let (offset, total) = (offset as usize, total as usize);
-                // A corrupt `total` must not allocate unbounded memory;
-                // a half this size could never be re-admitted to decode
-                // (the Admit frame-size guard would refuse it), so fail
-                // the job instead of buffering it.
-                if total > proto::MAX_FRAME as usize / 4
-                    || offset.saturating_add(data.len()) > total
-                {
+                // Relay-path accounting: this KV crossed the scheduler's
+                // own wire (a direct handoff never produces this frame
+                // here).
+                self.shard
+                    .core
+                    .relay_kv
+                    .record(wire_len, 4 * data.len() as u64);
+                let failed = {
+                    let mut p = self.shard.pending.lock().unwrap();
+                    let Some(entry) = p.get_mut(&id) else {
+                        return; // stale id (evicted or foreign); drop
+                    };
+                    // The shared geometry guards: a corrupt `total` must
+                    // not allocate unbounded memory (a half that size
+                    // could never be re-admitted to decode anyway — the
+                    // Admit frame-size guard would refuse it), so fail
+                    // the job instead of buffering it.
+                    proto::apply_kv_segment(
+                        &mut entry.k,
+                        &mut entry.v,
+                        half,
+                        offset,
+                        total,
+                        &data,
+                    )
+                    .err()
+                };
+                if let Some(why) = failed {
                     log::warn!(
-                        "shard {}: malformed KV segment for job {id} \
-                         ({offset}+{} vs total {total}); failing the job",
+                        "shard {}: malformed KV segment for job {id} ({why}); failing the job",
                         self.shard.core.cfg.addr,
-                        data.len()
                     );
                     self.fail_job(id);
-                    return;
                 }
-                let mut p = self.shard.pending.lock().unwrap();
-                let Some(entry) = p.get_mut(&id) else {
-                    return; // stale id (evicted or foreign); drop
-                };
-                let dst = match half {
-                    KvHalf::K => &mut entry.k,
-                    KvHalf::V => &mut entry.v,
-                };
-                if dst.len() != total {
-                    dst.resize(total, 0.0);
-                }
-                dst[offset..offset + data.len()].copy_from_slice(&data);
             }
             Frame::PrefillDone {
                 id,
@@ -702,6 +831,16 @@ impl ReaderPeer for PrefillPeer {
                 }
             }
             Frame::PrefillFailed { id } => self.fail_job(id),
+            Frame::HandoffCommit { id, exec_time, .. } => {
+                // Direct transfer committed: the KV went straight to the
+                // decode shard (which acked before the prefill shard sent
+                // this), so the job leaves the prefill pending table with
+                // nothing to assemble. The decode connection carries the
+                // token stream from here on.
+                if self.shard.pending.lock().unwrap().remove(&id).is_some() {
+                    (self.sinks.on_handoff)(id, exec_time);
+                }
+            }
             Frame::EndForward {
                 instance,
                 t_measured,
@@ -749,11 +888,12 @@ impl ReaderPeer for PrefillPeer {
 pub fn connect_prefill_shard(
     cfg: RemoteShardConfig,
     sinks: PrefillSinks,
+    relay_kv: Arc<KvWireCounters>,
 ) -> Result<Vec<RemotePrefill>> {
-    let (conn, units, slots) = connect_and_handshake(&cfg, ShardRole::Prefill)?;
+    let (conn, units, slots, peer_port) = connect_and_handshake(&cfg, ShardRole::Prefill)?;
     let reader_stream = conn.try_clone()?;
     let shard = Arc::new(ShardState {
-        core: ShardCore::new(cfg, conn, ShardRole::Prefill, units, slots),
+        core: ShardCore::new(cfg, conn, ShardRole::Prefill, units, slots, peer_port, relay_kv),
         pending: Mutex::new(HashMap::new()),
     });
     {
@@ -819,6 +959,7 @@ impl PrefillTransport for RemotePrefill {
                     id: w.id,
                     max_new: w.max_new,
                     prompt: w.prompt.clone(),
+                    target: w.target.clone(),
                 })
                 .collect(),
         };
@@ -839,6 +980,10 @@ impl PrefillTransport for RemotePrefill {
         }
     }
 
+    fn supports_direct(&self) -> bool {
+        true
+    }
+
     fn stop(&mut self) {
         self.shard.core.stop_shard();
     }
@@ -851,6 +996,7 @@ impl PrefillTransport for RemotePrefill {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::transport::proto::KvHalf;
     use std::net::TcpListener;
     use std::sync::atomic::AtomicU32;
 
@@ -862,7 +1008,7 @@ mod tests {
             on_done: Box::new(|_, _, _| {}),
             on_rejected: Box::new(|_| {}),
             on_evicted: Box::new(|_| {}),
-            on_stats: Box::new(|_| {}),
+            on_stats: Box::new(|_, _, _| {}),
         }
     }
 
@@ -912,6 +1058,8 @@ mod tests {
                     role: ShardRole::Decode,
                     units: 1,
                     slots: 4,
+                    kv_wire: KvCodec::Raw,
+                    peer_port: 0,
                 },
             )
             .unwrap();
@@ -941,7 +1089,8 @@ mod tests {
         let mut cfg = RemoteShardConfig::new(&addr);
         // Bounds how long the deliberately blocked write can hang.
         cfg.connect_timeout = Duration::from_secs(3);
-        let mut units = connect_shard(cfg, counting_sinks(tokens.clone())).unwrap();
+        let mut units =
+            connect_shard(cfg, counting_sinks(tokens.clone()), Arc::default()).unwrap();
         assert_eq!(units.len(), 1);
         let mut unit = units.pop().unwrap();
         unit.admit(admit_job(1, 0)).map_err(|_| ()).expect("small admit");
@@ -1023,6 +1172,8 @@ mod tests {
                     role: ShardRole::Prefill,
                     units: 2,
                     slots: 1,
+                    kv_wire: KvCodec::Raw,
+                    peer_port: 0,
                 },
             )
             .unwrap();
@@ -1049,6 +1200,7 @@ mod tests {
                     let (a, b) = (pair[0], pair[1]);
                     proto::kv_segment_frame_into(
                         &mut buf,
+                        KvCodec::Raw,
                         id,
                         half,
                         a as u32,
@@ -1094,13 +1246,16 @@ mod tests {
             on_prefilled: Box::new(move |id, outcome, max_new, _metrics| {
                 let _ = got_tx.send((id, outcome, max_new));
             }),
+            on_handoff: Box::new(|id, _| panic!("unexpected direct handoff for {id}")),
             on_failed: Box::new(|id| panic!("unexpected prefill failure for {id}")),
             on_end_forward: Box::new(move |instance, t, remaining| {
                 let _ = ef_tx.send((instance, t, remaining));
             }),
             on_evicted: Box::new(|_| {}),
         };
-        let mut units = connect_prefill_shard(RemoteShardConfig::new(&addr), sinks).unwrap();
+        let relay_kv: Arc<KvWireCounters> = Arc::default();
+        let mut units =
+            connect_prefill_shard(RemoteShardConfig::new(&addr), sinks, relay_kv.clone()).unwrap();
         assert_eq!(units.len(), 2);
         assert_eq!(units[1].label(), format!("{addr}#p1"));
         units[1]
@@ -1109,6 +1264,7 @@ mod tests {
                 prompt: vec![5; 16],
                 max_new: 7,
                 metrics: RequestMetrics::arrive(0.0, 16),
+                target: None,
             }])
             .map_err(|_| ())
             .expect("dispatch");
@@ -1128,6 +1284,9 @@ mod tests {
         assert_eq!(instance, 1);
         assert!((t - 0.25).abs() < 1e-12);
         assert_eq!(remaining, Some(96), "engine backlog crosses the wire");
+        let (wire, raw) = relay_kv.snapshot();
+        assert_eq!(raw, 4 * (1000 + 600), "relayed KV raw bytes accounted");
+        assert!(wire > raw, "raw codec wire bytes include frame overhead: {wire}");
 
         for u in &mut units {
             u.detach();

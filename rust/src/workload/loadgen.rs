@@ -177,6 +177,20 @@ pub fn cli_loadgen(argv: &[String]) -> Result<()> {
             j.insert("prefill_units_alive".into(), v.clone());
         }
     }
+    // Hoist the KV wire accounting too: the compression / direct-
+    // transfer claims are asserted straight off the report.
+    if let Some(kv) = decode_pool.get("kv_wire") {
+        for (from, to) in [
+            ("codec", "kv_wire_codec"),
+            ("wire_bytes", "kv_wire_bytes"),
+            ("raw_bytes", "kv_raw_bytes"),
+            ("relay_wire_bytes", "kv_relay_wire_bytes"),
+        ] {
+            if let Some(v) = kv.get(from) {
+                j.insert(to.into(), v.clone());
+            }
+        }
+    }
     j.insert("decode_pool".into(), decode_pool);
     println!("{}", Json::Obj(j).dump());
     Ok(())

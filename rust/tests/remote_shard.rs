@@ -25,6 +25,7 @@ use sbs::engine::mock::MockEngineConfig;
 use sbs::engine::sampler::Sampling;
 use sbs::scheduler::baseline::ImmediatePolicy;
 use sbs::testing::net::{parse_listening_line, wait_for_port};
+use sbs::transport::KvCodec;
 use std::io::{BufRead, BufReader};
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
@@ -91,6 +92,7 @@ fn det_mock() -> EngineSpec {
         t_decode_step: 0.002,
         chunk: 512,
         jitter: 0.0,
+        kv_elems_per_token: 16,
     })
 }
 
@@ -388,6 +390,144 @@ fn pd_separated_topology_serves_end_to_end() {
     assert!(reap(pf, Duration::from_secs(10)), "prefill shard must drain and exit");
     assert!(reap(d1, Duration::from_secs(10)), "decode shard 1 must drain and exit");
     assert!(reap(d2, Duration::from_secs(10)), "decode shard 2 must drain and exit");
+}
+
+/// Run one P/D cluster (1 prefill shard + 2 decode shards, fresh
+/// processes) over a fixed trace under the given codec/route; returns
+/// the per-job token streams (sorted by id) and the final pool stats.
+fn run_pd_trace(
+    kv_wire: KvCodec,
+    direct: bool,
+) -> (Vec<(u64, Vec<i32>)>, sbs::metrics::DecodePoolStats) {
+    let (pf, pf_addr) = spawn_role_worker("--prefill", "127.0.0.1:0", 1, 1);
+    let (d1, a1) = spawn_worker("127.0.0.1:0", 1, 8);
+    let (d2, a2) = spawn_worker("127.0.0.1:0", 1, 8);
+    let cfg = RealClusterConfig {
+        kv_wire,
+        direct_handoff: direct,
+        ..pd_cfg(vec![pf_addr], vec![a1, a2])
+    };
+    let cluster = RealCluster::start(cfg).expect("P/D cluster start");
+    let handle = cluster.handle();
+    for i in 0..20u64 {
+        cluster.submit(Job {
+            id: i,
+            prompt: vec![3 + (i as i32 % 5); 24 + (i as usize * 11) % 80],
+            max_new: 6,
+        });
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // Let the last jobs finish *and* a post-traffic StatsReply land (the
+    // scheduler polls each decode shard at most 1/s), so the published
+    // kv_wire gauge includes the full run's shard counters.
+    std::thread::sleep(Duration::from_millis(2200));
+    let (completions, _report) = cluster.finish().expect("P/D cluster finish");
+    let stats = handle.decode_stats();
+    assert!(reap(pf, Duration::from_secs(10)), "prefill shard drains");
+    assert!(reap(d1, Duration::from_secs(10)), "decode shard 1 drains");
+    assert!(reap(d2, Duration::from_secs(10)), "decode shard 2 drains");
+    let mut streams: Vec<(u64, Vec<i32>)> =
+        completions.into_iter().map(|c| (c.id, c.tokens)).collect();
+    streams.sort_by_key(|(id, _)| *id);
+    assert_eq!(streams.len(), 20, "{}-{} run must complete every job",
+        kv_wire.name(), if direct { "direct" } else { "relay" });
+    (streams, stats)
+}
+
+/// The end-to-end parity + byte-accounting claim: the same trace under
+/// `raw`/`fp16`/`lz` and relay vs direct transfer produces identical
+/// token streams, `lz` cuts the KV wire bytes by ≥40%, and direct
+/// transfer leaves the scheduler's relay counters at zero.
+#[test]
+fn kv_codecs_and_routes_produce_identical_streams_and_lz_shrinks_the_wire() {
+    let (raw_direct, _) = run_pd_trace(KvCodec::Raw, true);
+    let (fp16_direct, _) = run_pd_trace(KvCodec::Fp16, true);
+    let (lz_direct, lz_direct_stats) = run_pd_trace(KvCodec::Lz, true);
+    let (lz_relay, lz_relay_stats) = run_pd_trace(KvCodec::Lz, false);
+
+    assert_eq!(raw_direct, fp16_direct, "fp16 must not perturb the token streams");
+    assert_eq!(raw_direct, lz_direct, "lz is bit-exact: identical streams");
+    assert_eq!(raw_direct, lz_relay, "relay vs direct must be invisible to clients");
+
+    let kv = &lz_direct_stats.kv_wire;
+    assert_eq!(kv.codec, "lz");
+    assert!(kv.raw_bytes > 0, "the mock engines synthesize KV: {kv:?}");
+    assert!(
+        (kv.wire_bytes as f64) < 0.6 * kv.raw_bytes as f64,
+        "lz must cut the KV wire by ≥40%: {kv:?}"
+    );
+    assert_eq!(
+        kv.relay_wire_bytes, 0,
+        "direct transfer must leave the scheduler relay at zero KV bytes: {kv:?}"
+    );
+
+    let kv = &lz_relay_stats.kv_wire;
+    assert!(
+        kv.relay_wire_bytes > 0 && kv.relay_raw_bytes > 0,
+        "the relay route must carry the KV through the scheduler: {kv:?}"
+    );
+    assert!(
+        (kv.relay_wire_bytes as f64) < 0.6 * kv.relay_raw_bytes as f64,
+        "lz shrinks the relayed KV too: {kv:?}"
+    );
+}
+
+/// Killing a decode shard mid-run under direct transfer: handoffs aimed
+/// at the dead peer fall back (relay re-placement onto the survivor) or
+/// terminalize via eviction — every stream ends, nothing leaks.
+#[test]
+fn direct_transfer_survives_decode_peer_death_with_all_streams_terminal() {
+    let (pf, pf_addr) = spawn_role_worker("--prefill", "127.0.0.1:0", 1, 1);
+    let (d1, a1) = spawn_worker("127.0.0.1:0", 1, 8);
+    let (mut d2, a2) = spawn_worker("127.0.0.1:0", 1, 8);
+    let cfg = RealClusterConfig {
+        kv_wire: KvCodec::Lz,
+        direct_handoff: true,
+        ..pd_cfg(vec![pf_addr], vec![a1, a2])
+    };
+    let cluster = RealCluster::start(cfg).expect("P/D cluster start");
+    let handle = cluster.handle();
+
+    let mut streams = Vec::new();
+    for _ in 0..24 {
+        match handle.try_submit(vec![7; 24], 200) {
+            Admission::Accepted { updates, .. } => streams.push(updates),
+            Admission::Busy(r) => panic!("unexpected BUSY: {r:?}"),
+        }
+        std::thread::sleep(Duration::from_millis(4));
+    }
+    // Kill decode shard 2 while handoffs and long decodes are in flight.
+    std::thread::sleep(Duration::from_millis(120));
+    d2.kill().expect("kill decode shard");
+    d2.wait().expect("reap decode shard");
+
+    let (mut done, mut rejected) = (0, 0);
+    for rx in &streams {
+        if drain_stream(rx, Duration::from_secs(60)) {
+            done += 1;
+        } else {
+            rejected += 1;
+        }
+    }
+    assert_eq!(done + rejected, 24, "every stream reaches a terminal state");
+    assert!(done > 0, "the surviving shard keeps serving");
+
+    // Nothing leaked: the ledger drains to zero and the dead unit stays
+    // visible.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let stats = loop {
+        let stats = handle.decode_stats();
+        if stats.units.iter().all(|u| u.active == 0) {
+            break stats;
+        }
+        assert!(Instant::now() < deadline, "leaked ledger entries: {stats:?}");
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    assert_eq!(stats.units_alive(), 1, "dead decode peer reported, not hidden");
+
+    let (_completions, _report) = cluster.finish().expect("finish must not hang");
+    assert!(reap(pf, Duration::from_secs(10)), "prefill shard drains");
+    assert!(reap(d1, Duration::from_secs(10)), "decode shard 1 drains");
 }
 
 #[test]

@@ -1,0 +1,673 @@
+//! Deterministic fault injection against the transport layer, driven by
+//! the scripted loopback harness in `sbs::testing::net` (no real shard
+//! processes, no timing races): truncated/corrupt/reordered `KvSegment`
+//! streams, mid-handoff peer death, codec-mismatch handshakes, and the
+//! decode shard's direct-transfer peer listener under the same abuse.
+//!
+//! The invariant under test everywhere: every fault ends in a **clean
+//! reject-or-fallback** — a terminal event per affected job (failed or
+//! evicted), never a hang, never a leaked pending-table entry, and a
+//! surviving connection where the fault is job-scoped rather than
+//! stream-scoped.
+
+use sbs::cluster::shard::{run_shard, ShardConfig};
+use sbs::cluster::workers::EngineSpec;
+use sbs::engine::mock::MockEngineConfig;
+use sbs::engine::sampler::Sampling;
+use sbs::engine::PrefillOutcome;
+use sbs::metrics::RequestMetrics;
+use sbs::testing::net::{FakeShard, ShardConn};
+use sbs::transport::proto::{self, Frame, FrameReader, KvHalf, ShardRole, PROTO_VERSION};
+use sbs::transport::remote::{connect_prefill_shard, connect_shard, RemoteShardConfig};
+use sbs::transport::{
+    DecodeTransport, KvCodec, KvWireCounters, PrefillSinks, PrefillTransport, PrefillWork,
+    ShardSinks,
+};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const TICK: Duration = Duration::from_secs(10);
+
+/// Channel-backed prefill sinks: every upstream event lands in a
+/// receiver the test can assert on (or assert the absence of).
+struct PrefillEvents {
+    prefilled: Receiver<(u64, Box<PrefillOutcome>)>,
+    failed: Receiver<u64>,
+    evicted: Receiver<Vec<u64>>,
+    handoff: Receiver<u64>,
+}
+
+fn prefill_sinks() -> (PrefillSinks, PrefillEvents) {
+    let (p_tx, prefilled) = channel();
+    let (f_tx, failed) = channel();
+    let (e_tx, evicted) = channel();
+    let (h_tx, handoff) = channel();
+    (
+        PrefillSinks {
+            on_prefilled: Box::new(move |id, outcome, _max_new, _m| {
+                let _ = p_tx.send((id, outcome));
+            }),
+            on_handoff: Box::new(move |id, _exec| {
+                let _ = h_tx.send(id);
+            }),
+            on_failed: Box::new(move |id| {
+                let _ = f_tx.send(id);
+            }),
+            on_end_forward: Box::new(|_, _, _| {}),
+            on_evicted: Box::new(move |ids| {
+                let _ = e_tx.send(ids);
+            }),
+        },
+        PrefillEvents {
+            prefilled,
+            failed,
+            evicted,
+            handoff,
+        },
+    )
+}
+
+fn work(id: u64, prompt_len: usize, max_new: u32) -> PrefillWork {
+    PrefillWork {
+        id,
+        prompt: vec![7; prompt_len],
+        max_new,
+        metrics: RequestMetrics::arrive(0.0, prompt_len as u32),
+        target: None,
+    }
+}
+
+/// Block until the script sees the dispatch for `id` (skipping pings).
+fn await_dispatch(sc: &mut ShardConn, id: u64) -> anyhow::Result<()> {
+    sc.recv_until(TICK, |f| {
+        matches!(f, Frame::PrefillDispatch { jobs, .. } if jobs.iter().any(|j| j.id == id))
+    })?;
+    Ok(())
+}
+
+// ---- handshake faults ---------------------------------------------------
+
+#[test]
+fn codec_mismatch_handshake_is_refused() {
+    // The shard acks `lz` against a scheduler that asked for `raw`: the
+    // byte accounting (and lossiness expectations) would silently skew,
+    // so the connect must fail loudly.
+    let shard = FakeShard::serve(FakeShard::ack(ShardRole::Prefill, KvCodec::Lz), |_, _| Ok(()));
+    let (sinks, _ev) = prefill_sinks();
+    let err = connect_prefill_shard(RemoteShardConfig::new(&shard.addr), sinks, Arc::default())
+        .expect_err("codec mismatch must refuse the handshake");
+    assert!(format!("{err:#}").contains("codec"), "{err:#}");
+}
+
+#[test]
+fn version_mismatch_handshake_is_refused() {
+    let ack = Frame::HelloAck {
+        version: PROTO_VERSION - 1,
+        role: ShardRole::Prefill,
+        units: 1,
+        slots: 1,
+        kv_wire: KvCodec::Raw,
+        peer_port: 0,
+    };
+    let shard = FakeShard::serve(ack, |_, _| Ok(()));
+    let (sinks, _ev) = prefill_sinks();
+    let err = connect_prefill_shard(RemoteShardConfig::new(&shard.addr), sinks, Arc::default())
+        .expect_err("version mismatch must refuse the handshake");
+    assert!(format!("{err:#}").contains("protocol"), "{err:#}");
+}
+
+#[test]
+fn wrong_role_handshake_is_refused() {
+    let shard = FakeShard::serve(FakeShard::ack(ShardRole::Decode, KvCodec::Raw), |_, _| Ok(()));
+    let (sinks, _ev) = prefill_sinks();
+    assert!(
+        connect_prefill_shard(RemoteShardConfig::new(&shard.addr), sinks, Arc::default()).is_err(),
+        "a decode shard must not join a prefill pool"
+    );
+}
+
+// ---- KV stream faults (relay path) --------------------------------------
+
+#[test]
+fn mid_handoff_shard_death_evicts_cleanly() {
+    // The shard starts streaming a job's KV, then dies mid-handoff: the
+    // pending entry (and its partial assembly) must come back as one
+    // eviction — not a hang, not a stuck ledger entry, and never a
+    // completed handoff.
+    let shard = FakeShard::serve(FakeShard::ack(ShardRole::Prefill, KvCodec::Raw), |mut sc, _| {
+        await_dispatch(&mut sc, 1)?;
+        sc.send(&Frame::KvSegment {
+            id: 1,
+            half: KvHalf::K,
+            offset: 0,
+            total: 1000,
+            data: vec![0.5; 200], // 800 elements never arrive
+        })?;
+        sc.kill();
+        Ok(())
+    });
+    let (sinks, ev) = prefill_sinks();
+    let mut units =
+        connect_prefill_shard(RemoteShardConfig::new(&shard.addr), sinks, Arc::default()).unwrap();
+    units[0].dispatch(vec![work(1, 16, 4)]).map_err(|_| ()).unwrap();
+
+    let evicted = ev.evicted.recv_timeout(TICK).expect("death must evict, not hang");
+    assert_eq!(evicted, vec![1], "exactly the in-flight job is evicted");
+    assert!(ev.prefilled.try_recv().is_err(), "a dead handoff must not commit");
+    assert!(ev.failed.try_recv().is_err(), "evicted, not failed — one terminal only");
+    // A second eviction for the same id would double-release upstream.
+    assert!(ev.evicted.try_recv().is_err(), "no duplicate eviction");
+    units[0].detach();
+}
+
+#[test]
+fn corrupt_segment_fails_job_but_connection_survives() {
+    // A segment whose offset+len overruns its declared total is a
+    // job-scoped fault: that job fails terminally, the connection (and
+    // the next job) keeps working.
+    let shard = FakeShard::serve(FakeShard::ack(ShardRole::Prefill, KvCodec::Raw), |mut sc, _| {
+        await_dispatch(&mut sc, 1)?;
+        sc.send(&Frame::KvSegment {
+            id: 1,
+            half: KvHalf::K,
+            offset: 90,
+            total: 100,
+            data: vec![0.5; 20], // 90 + 20 > 100
+        })?;
+        await_dispatch(&mut sc, 2)?;
+        sc.send(&Frame::PrefillDone {
+            id: 2,
+            first_token: 0x41,
+            kv_len: 8,
+            exec_time: 0.01,
+        })?;
+        // Hold the connection until the client detaches.
+        let _ = sc.recv_until(Duration::from_secs(30), |_| false);
+        Ok(())
+    });
+    let (sinks, ev) = prefill_sinks();
+    let mut units =
+        connect_prefill_shard(RemoteShardConfig::new(&shard.addr), sinks, Arc::default()).unwrap();
+    units[0].dispatch(vec![work(1, 16, 4)]).map_err(|_| ()).unwrap();
+    assert_eq!(ev.failed.recv_timeout(TICK).expect("corrupt KV fails the job"), 1);
+
+    units[0].dispatch(vec![work(2, 8, 4)]).map_err(|_| ()).unwrap();
+    let (id, outcome) = ev.prefilled.recv_timeout(TICK).expect("connection must survive");
+    assert_eq!(id, 2);
+    assert_eq!(outcome.first_token, 0x41);
+    assert!(ev.evicted.try_recv().is_err(), "no eviction for a job-scoped fault");
+    units[0].detach();
+}
+
+#[test]
+fn absurd_total_fails_job_before_allocating() {
+    // `total` claims more elements than MAX_FRAME could ever carry: the
+    // client must fail the job instead of pre-sizing a giant buffer.
+    let shard = FakeShard::serve(FakeShard::ack(ShardRole::Prefill, KvCodec::Raw), |mut sc, _| {
+        await_dispatch(&mut sc, 5)?;
+        sc.send(&Frame::KvSegment {
+            id: 5,
+            half: KvHalf::V,
+            offset: 0,
+            total: proto::MAX_FRAME / 4 + 1,
+            data: vec![1.0; 4],
+        })?;
+        let _ = sc.recv_until(Duration::from_secs(30), |_| false);
+        Ok(())
+    });
+    let (sinks, ev) = prefill_sinks();
+    let mut units =
+        connect_prefill_shard(RemoteShardConfig::new(&shard.addr), sinks, Arc::default()).unwrap();
+    units[0].dispatch(vec![work(5, 16, 4)]).map_err(|_| ()).unwrap();
+    assert_eq!(ev.failed.recv_timeout(TICK).expect("absurd total fails the job"), 5);
+    units[0].detach();
+}
+
+#[test]
+fn garbage_frame_kills_connection_and_evicts_pending() {
+    // A structurally broken frame (unknown tag behind a valid length
+    // prefix) desyncs the stream permanently: the reader must declare
+    // the connection dead and evict every pending job.
+    let shard = FakeShard::serve(FakeShard::ack(ShardRole::Prefill, KvCodec::Raw), |mut sc, _| {
+        await_dispatch(&mut sc, 7)?;
+        sc.send_raw(&[5, 0, 0, 0, 250, 1, 2, 3, 4])?; // tag 250: unknown
+        // Keep the socket open: the *decode error* alone must kill it.
+        let _ = sc.recv_until(Duration::from_secs(30), |_| false);
+        Ok(())
+    });
+    let (sinks, ev) = prefill_sinks();
+    let mut units =
+        connect_prefill_shard(RemoteShardConfig::new(&shard.addr), sinks, Arc::default()).unwrap();
+    units[0].dispatch(vec![work(7, 16, 4)]).map_err(|_| ()).unwrap();
+    let evicted = ev.evicted.recv_timeout(TICK).expect("garbage must evict, not hang");
+    assert_eq!(evicted, vec![7]);
+    units[0].detach();
+}
+
+#[test]
+fn truncated_frame_then_death_evicts_cleanly() {
+    // The connection dies mid-frame (half a length-prefixed frame on the
+    // wire): partial bytes must not wedge the reader — death is death.
+    let shard = FakeShard::serve(FakeShard::ack(ShardRole::Prefill, KvCodec::Raw), |mut sc, _| {
+        await_dispatch(&mut sc, 9)?;
+        let mut buf = Vec::new();
+        proto::kv_segment_frame_into(
+            &mut buf,
+            KvCodec::Raw,
+            9,
+            KvHalf::K,
+            0,
+            64,
+            &vec![1.0f32; 64],
+        );
+        sc.send_raw(&buf[..buf.len() / 2])?;
+        sc.kill();
+        Ok(())
+    });
+    let (sinks, ev) = prefill_sinks();
+    let mut units =
+        connect_prefill_shard(RemoteShardConfig::new(&shard.addr), sinks, Arc::default()).unwrap();
+    units[0].dispatch(vec![work(9, 16, 4)]).map_err(|_| ()).unwrap();
+    assert_eq!(ev.evicted.recv_timeout(TICK).expect("truncation + death must evict"), vec![9]);
+    units[0].detach();
+}
+
+#[test]
+fn reordered_coded_segments_reassemble_exactly() {
+    // Out-of-order lz-coded chunks for both halves must assemble into
+    // the exact caches (the relay path's correctness under the codec
+    // layer + interleaving).
+    let k: Vec<f32> = (0..900).map(|i| ((i / 7) as f32) * 0.125).collect();
+    let v: Vec<f32> = (0..500).map(|i| -((i / 5) as f32) * 0.25).collect();
+    let (k2, v2) = (k.clone(), v.clone());
+    let shard = FakeShard::serve(
+        FakeShard::ack(ShardRole::Prefill, KvCodec::Lz),
+        move |mut sc, proposed| {
+            assert_eq!(proposed, KvCodec::Lz, "scheduler proposed the lz codec");
+            await_dispatch(&mut sc, 3)?;
+            let mut buf = Vec::new();
+            // V first, then K's second chunk before its first.
+            for (half, data, ranges) in [
+                (KvHalf::V, &v2, vec![(0usize, 500usize)]),
+                (KvHalf::K, &k2, vec![(512, 900), (0, 512)]),
+            ] {
+                for (a, b) in ranges {
+                    proto::kv_segment_frame_into(
+                        &mut buf,
+                        KvCodec::Lz,
+                        3,
+                        half,
+                        a as u32,
+                        data.len() as u32,
+                        &data[a..b],
+                    );
+                    sc.send_raw(&buf)?;
+                }
+            }
+            sc.send(&Frame::PrefillDone {
+                id: 3,
+                first_token: 0x2A,
+                kv_len: 24,
+                exec_time: 0.02,
+            })?;
+            let _ = sc.recv_until(Duration::from_secs(30), |_| false);
+            Ok(())
+        },
+    );
+    let (sinks, ev) = prefill_sinks();
+    let relay_kv: Arc<KvWireCounters> = Arc::default();
+    let mut cfg = RemoteShardConfig::new(&shard.addr);
+    cfg.kv_wire = KvCodec::Lz;
+    let mut units = connect_prefill_shard(cfg, sinks, relay_kv.clone()).unwrap();
+    units[0].dispatch(vec![work(3, 24, 4)]).map_err(|_| ()).unwrap();
+    let (id, outcome) = ev.prefilled.recv_timeout(TICK).expect("handoff must commit");
+    assert_eq!(id, 3);
+    assert_eq!(outcome.k, k, "K must reassemble bit-exactly through lz");
+    assert_eq!(outcome.v, v, "V must reassemble bit-exactly through lz");
+    let (wire, raw) = relay_kv.snapshot();
+    assert_eq!(raw, 4 * (900 + 500), "raw accounting counts every element");
+    assert!(
+        (wire as f64) < 0.6 * raw as f64,
+        "structured KV must shrink ≥40% on the wire: {wire}/{raw}"
+    );
+    units[0].detach();
+}
+
+// ---- decode-side faults -------------------------------------------------
+
+/// Channel-backed decode sinks.
+struct DecodeEvents {
+    evicted: Receiver<Vec<u64>>,
+}
+
+fn decode_sinks(tokens: Arc<AtomicU32>, dones: Arc<AtomicU32>) -> (ShardSinks, DecodeEvents) {
+    let (e_tx, evicted) = channel();
+    (
+        ShardSinks {
+            on_token: Box::new(move |_, _, _| {
+                tokens.fetch_add(1, Ordering::SeqCst);
+            }),
+            on_done: Box::new(move |_, _, _| {
+                dones.fetch_add(1, Ordering::SeqCst);
+            }),
+            on_rejected: Box::new(|_| {}),
+            on_evicted: Box::new(move |ids| {
+                let _ = e_tx.send(ids);
+            }),
+            on_stats: Box::new(|_, _, _| {}),
+        },
+        DecodeEvents { evicted },
+    )
+}
+
+#[test]
+fn decode_shard_death_evicts_direct_registrations_too() {
+    // A decode pre-placement registered with `expect_direct` (made at
+    // dispatch time, before any KV moved) must be swept by the same
+    // eviction as ordinary admits when the shard dies.
+    let shard = FakeShard::serve(FakeShard::ack(ShardRole::Decode, KvCodec::Raw), |mut sc, _| {
+        // Wait for the scheduler's first ping, then die.
+        sc.recv_until(TICK, |f| matches!(f, Frame::Ping { .. }))?;
+        sc.kill();
+        Ok(())
+    });
+    let (sinks, ev) = decode_sinks(Arc::new(AtomicU32::new(0)), Arc::new(AtomicU32::new(0)));
+    let mut units =
+        connect_shard(RemoteShardConfig::new(&shard.addr), sinks, Arc::default()).unwrap();
+    units[0].expect_direct(42, RequestMetrics::arrive(0.0, 16));
+    let evicted = ev.evicted.recv_timeout(TICK).expect("shard death must evict");
+    assert_eq!(evicted, vec![42], "the direct registration is swept");
+    units[0].detach();
+}
+
+// ---- direct-transfer peer listener (real decode shard) ------------------
+
+fn fast_mock() -> EngineSpec {
+    EngineSpec::Mock(MockEngineConfig {
+        t_prefill_base: 0.0,
+        t_prefill_per_token: 0.0,
+        t_decode_step: 0.001,
+        chunk: 128,
+        jitter: 0.0,
+        kv_elems_per_token: 4,
+    })
+}
+
+/// Minimal scheduler-side client for a real in-thread decode shard.
+struct RawClient {
+    w: TcpStream,
+    rd: TcpStream,
+    reader: FrameReader,
+}
+
+impl RawClient {
+    fn connect(addr: std::net::SocketAddr) -> RawClient {
+        let conn = TcpStream::connect(addr).unwrap();
+        conn.set_nodelay(true).unwrap();
+        conn.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        RawClient {
+            w: conn.try_clone().unwrap(),
+            rd: conn,
+            reader: FrameReader::new(),
+        }
+    }
+
+    fn send(&mut self, f: &Frame) {
+        proto::write_frame(&mut self.w, f).unwrap();
+    }
+
+    /// Best-effort send: the peer may already have closed the socket
+    /// (exactly what some fault scripts provoke).
+    fn try_send(&mut self, f: &Frame) {
+        let _ = proto::write_frame(&mut self.w, f);
+    }
+
+    fn send_raw(&mut self, bytes: &[u8]) {
+        use std::io::Write;
+        self.w.write_all(bytes).unwrap();
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Frame {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.reader.poll(&mut self.rd) {
+                Ok(Some(f)) => return f,
+                Ok(None) => assert!(Instant::now() < deadline, "no frame within {timeout:?}"),
+                Err(e) => panic!("receive failed: {e}"),
+            }
+        }
+    }
+}
+
+/// Start a 1-unit decode shard in-thread; returns its scheduler client
+/// (already handshaken), the peer port, and the shard join handle.
+fn start_decode_shard() -> (RawClient, u16, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let cfg = ShardConfig {
+        role: ShardRole::Decode,
+        units: 1,
+        batch: 4,
+        engine: fast_mock(),
+        sampling: Sampling::Greedy,
+        seed: 3,
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let shard = std::thread::spawn(move || run_shard(cfg, listener));
+    let mut c = RawClient::connect(addr);
+    c.send(&Frame::Hello {
+        version: PROTO_VERSION,
+        kv_wire: KvCodec::Lz,
+    });
+    let peer_port = match c.recv(TICK) {
+        Frame::HelloAck { peer_port, .. } => peer_port,
+        other => panic!("expected HelloAck, got {other:?}"),
+    };
+    assert_ne!(peer_port, 0, "decode shards advertise their peer listener");
+    (c, peer_port, shard)
+}
+
+fn peer_connect(port: u16, codec: KvCodec) -> RawClient {
+    let mut p = RawClient::connect(format!("127.0.0.1:{port}").parse().unwrap());
+    p.send(&Frame::PeerHello {
+        version: PROTO_VERSION,
+        kv_wire: codec,
+    });
+    match p.recv(TICK) {
+        Frame::PeerHelloAck { version } => assert_eq!(version, PROTO_VERSION),
+        other => panic!("expected PeerHelloAck, got {other:?}"),
+    }
+    p
+}
+
+#[test]
+fn direct_peer_handoff_admits_and_emits_ordered_stream() {
+    let (mut sched, peer_port, shard) = start_decode_shard();
+    let mut peer = peer_connect(peer_port, KvCodec::Lz);
+
+    // Stream a job's KV directly, commit, and expect the ack.
+    let k: Vec<f32> = (0..640).map(|i| ((i / 7) as f32) * 0.125).collect();
+    let mut buf = Vec::new();
+    for (half, data) in [(KvHalf::K, &k), (KvHalf::V, &k)] {
+        proto::kv_segment_frame_into(
+            &mut buf,
+            KvCodec::Lz,
+            77,
+            half,
+            0,
+            data.len() as u32,
+            data,
+        );
+        peer.send_raw(&buf);
+    }
+    peer.send(&Frame::HandoffCommit {
+        unit: 0,
+        id: 77,
+        first_token: 0x55,
+        kv_len: 160,
+        max_new: 3,
+        exec_time: 0.01,
+    });
+    match peer.recv(TICK) {
+        Frame::HandoffAck { id } => assert_eq!(id, 77),
+        other => panic!("expected HandoffAck, got {other:?}"),
+    }
+
+    // The scheduler connection sees token 0 first, then the decode
+    // steps, then Done — one ordered stream, indices contiguous.
+    let mut next_index = 0u32;
+    let done = loop {
+        match sched.recv(TICK) {
+            Frame::Token { id, index, token } => {
+                assert_eq!(id, 77);
+                assert_eq!(index, next_index, "stream must stay ordered from index 0");
+                if index == 0 {
+                    assert_eq!(token, 0x55, "index 0 is the prefill-produced token");
+                }
+                next_index += 1;
+            }
+            Frame::Done { id, tokens } => {
+                assert_eq!(id, 77);
+                break tokens;
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    };
+    assert_eq!(done.len(), 4, "first token + 3 decoded");
+    assert_eq!(done[0], 0x55);
+
+    // The shard's inbound-KV accounting covered the peer stream.
+    sched.send(&Frame::StatsRequest);
+    let stats = loop {
+        match sched.recv(TICK) {
+            Frame::StatsReply {
+                kv_wire_bytes,
+                kv_raw_bytes,
+                ..
+            } => break (kv_wire_bytes, kv_raw_bytes),
+            _ => continue,
+        }
+    };
+    assert_eq!(stats.1, 4 * 2 * 640, "raw bytes = both halves");
+    assert!(stats.0 > 0 && stats.0 < stats.1, "lz wire bytes shrink: {stats:?}");
+
+    sched.send(&Frame::Stop);
+    loop {
+        if matches!(sched.recv(TICK), Frame::Bye) {
+            break;
+        }
+    }
+    shard.join().unwrap().unwrap();
+}
+
+#[test]
+fn peer_death_mid_handoff_leaves_decode_shard_clean() {
+    let (mut sched, peer_port, shard) = start_decode_shard();
+
+    // A peer streams half a job's KV and dies: nothing was admitted, so
+    // the shard must drop the partial assembly and keep serving.
+    {
+        let mut peer = peer_connect(peer_port, KvCodec::Raw);
+        peer.send(&Frame::KvSegment {
+            id: 9,
+            half: KvHalf::K,
+            offset: 0,
+            total: 400,
+            data: vec![1.0; 100],
+        });
+        drop(peer); // abrupt close
+    }
+
+    // A malformed peer stream costs only that peer connection.
+    {
+        let mut peer = peer_connect(peer_port, KvCodec::Raw);
+        peer.send(&Frame::KvSegment {
+            id: 10,
+            half: KvHalf::K,
+            offset: 390,
+            total: 400,
+            data: vec![1.0; 100], // overruns the declared total
+        });
+        // The shard closes on protocol violation; a follow-up commit
+        // must never admit. (The write may fail — the close races it.)
+        peer.try_send(&Frame::HandoffCommit {
+            unit: 0,
+            id: 10,
+            first_token: 1,
+            kv_len: 4,
+            max_new: 2,
+            exec_time: 0.0,
+        });
+    }
+
+    // The same id then arrives via the ordinary relay Admit — the shard
+    // serves it without interference from the dead peer's leftovers.
+    sched.send(&Frame::Admit {
+        unit: 0,
+        id: 9,
+        first_token: 0x30,
+        kv_len: 4,
+        max_new: 2,
+        k: Vec::new(),
+        v: Vec::new(),
+    });
+    let done = loop {
+        match sched.recv(TICK) {
+            Frame::Token { id, .. } => assert!(id == 9, "only job 9 may emit (got {id})"),
+            Frame::Done { id, tokens } => {
+                assert_eq!(id, 9);
+                break tokens;
+            }
+            Frame::Rejected { id } => panic!("job {id} rejected"),
+            other => panic!("unexpected frame {other:?}"),
+        }
+    };
+    assert_eq!(done.len(), 3, "relay admit serves normally after peer faults");
+
+    sched.send(&Frame::Stop);
+    loop {
+        if matches!(sched.recv(TICK), Frame::Bye) {
+            break;
+        }
+    }
+    shard.join().unwrap().unwrap();
+}
+
+#[test]
+fn unknown_unit_peer_commit_is_rejected_to_scheduler() {
+    let (mut sched, peer_port, shard) = start_decode_shard();
+    let mut peer = peer_connect(peer_port, KvCodec::Raw);
+    peer.send(&Frame::HandoffCommit {
+        unit: 9, // shard has 1 unit
+        id: 55,
+        first_token: 1,
+        kv_len: 4,
+        max_new: 2,
+        exec_time: 0.0,
+    });
+    // The peer still gets its ack (the handoff reached a terminal
+    // owner), and the scheduler stream carries the rejection.
+    match peer.recv(TICK) {
+        Frame::HandoffAck { id } => assert_eq!(id, 55),
+        other => panic!("expected HandoffAck, got {other:?}"),
+    }
+    loop {
+        match sched.recv(TICK) {
+            Frame::Rejected { id } => {
+                assert_eq!(id, 55);
+                break;
+            }
+            Frame::Token { id, index: 0, .. } if id == 55 => continue, // pre-admit token 0
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    sched.send(&Frame::Stop);
+    loop {
+        if matches!(sched.recv(TICK), Frame::Bye) {
+            break;
+        }
+    }
+    shard.join().unwrap().unwrap();
+}
