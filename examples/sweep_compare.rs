@@ -1,0 +1,85 @@
+//! Sweep + compare demo: run a small replicated experiment grid twice —
+//! once with the adaptive stagger interval and once degraded to a long
+//! static window — and put the two BENCH documents through the same
+//! noise-aware comparison the CI bench gate uses. The degraded run should
+//! surface as TTFT regressions; the reverse comparison as improvements.
+//!
+//! Run: `cargo run --release --example sweep_compare`
+
+use sbs::workload::sweep::{self, SweepGrid, SweepModes};
+
+fn main() -> anyhow::Result<()> {
+    sbs::logging::init(log::LevelFilter::Warn);
+    let grid = SweepGrid {
+        scheds: vec!["staggered".into()],
+        arrivals: vec!["poisson".into(), "bursty".into()],
+        qps: vec![100.0],
+        replicas: 3,
+        seed: 21,
+        duration: 20.0,
+        warmup: 5.0,
+        ..SweepGrid::default()
+    };
+    let modes = SweepModes {
+        bench_id: "BENCH_EXAMPLE".into(),
+        des: true,
+        live: None,
+    };
+
+    println!("running baseline grid (adaptive stagger interval)...");
+    let baseline = sweep::run_sweep(&grid, &modes)?;
+
+    // Same grid, but the interval controller pinned to a 2 s static
+    // window: requests sit in formation far longer than Algorithm 1
+    // would allow, so TTFT should visibly regress.
+    println!("running degraded grid (static 2 s stagger window)...");
+    let mut degraded_grid = grid.clone();
+    degraded_grid.windows = vec![2.0];
+    let degraded = sweep::run_sweep(&degraded_grid, &modes)?;
+
+    // The window is a recorded parameter, so align the documents before
+    // comparing: rewrite the degraded params to the baseline's key space.
+    let degraded = realign_window(degraded, &baseline);
+
+    for (label, old, new) in [
+        ("baseline -> degraded", &baseline, &degraded),
+        ("degraded -> baseline", &degraded, &baseline),
+    ] {
+        let rep = sweep::compare(old, new, 0.25, 3.0)?;
+        println!("\n{label}: {} points compared", rep.compared);
+        for line in &rep.regressions {
+            println!("  REGRESSED {line}");
+        }
+        for line in &rep.improvements {
+            println!("  improved  {line}");
+        }
+        if rep.regressions.is_empty() && rep.improvements.is_empty() {
+            println!("  (no change beyond thresholds)");
+        }
+    }
+    Ok(())
+}
+
+/// Copy the baseline's `stagger_window_s` into the degraded document's
+/// params so [`sweep::compare`] pairs the grid points up.
+fn realign_window(mut doc: sbs::json::Json, baseline: &sbs::json::Json) -> sbs::json::Json {
+    use sbs::json::Json;
+    let window = baseline
+        .get("points")
+        .and_then(Json::as_arr)
+        .and_then(|pts| pts.first())
+        .and_then(|pt| pt.f64_at(&["params", "stagger_window_s"]))
+        .unwrap_or(0.0);
+    if let Json::Obj(root) = &mut doc {
+        if let Some(Json::Arr(points)) = root.get_mut("points") {
+            for pt in points {
+                if let Json::Obj(p) = pt {
+                    if let Some(Json::Obj(params)) = p.get_mut("params") {
+                        params.insert("stagger_window_s".into(), Json::from(window));
+                    }
+                }
+            }
+        }
+    }
+    doc
+}

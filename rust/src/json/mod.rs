@@ -51,6 +51,16 @@ impl Json {
         }
     }
 
+    /// Nested object lookup: `j.path(&["summary", "ttft_p99_ms", "mean"])`.
+    pub fn path(&self, keys: &[&str]) -> Option<&Json> {
+        keys.iter().try_fold(self, |j, k| j.get(k))
+    }
+
+    /// Numeric value at a nested path.
+    pub fn f64_at(&self, keys: &[&str]) -> Option<f64> {
+        self.path(keys).and_then(Json::as_f64)
+    }
+
     /// Numeric accessor.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
@@ -177,5 +187,14 @@ mod tests {
         assert_eq!(j.get("a").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(j.get("b").unwrap().as_bool(), Some(false));
         assert!(j.get("missing").is_none());
+    }
+
+    #[test]
+    fn nested_path_lookup() {
+        let j = parse(r#"{"a": {"b": {"c": 2.5}}, "n": 1}"#).unwrap();
+        assert_eq!(j.f64_at(&["a", "b", "c"]), Some(2.5));
+        assert_eq!(j.f64_at(&["a", "b", "nope"]), None);
+        assert_eq!(j.f64_at(&["n"]), Some(1.0));
+        assert!(j.path(&["n", "deeper"]).is_none());
     }
 }

@@ -18,6 +18,10 @@
 //!                     --listen`; prints a JSON latency report.
 //! * `calibrate`     — measure real PJRT pass times and print calibrated
 //!                     cost-model constants.
+//! * `sweep`         — replicated parameter-sweep experiments over the
+//!                     DES (and optionally the live mock cluster),
+//!                     emitting versioned `BENCH_*.json`; also
+//!                     `--validate doc.json` and `--compare old new`.
 
 use sbs::cli::Command;
 use sbs::cluster::sim::Simulation;
@@ -41,6 +45,7 @@ fn main() -> ExitCode {
         "worker" => cmd_worker(rest),
         "loadgen" => cmd_loadgen(rest),
         "calibrate" => cmd_calibrate(rest),
+        "sweep" => cmd_sweep(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
@@ -69,7 +74,9 @@ fn usage() -> String {
        worker          run a standalone shard (--decode | --prefill, --listen addr)\n\
        loadgen         open-loop load generator against a running `serve --listen`\n\
                        (--arrival poisson|bursty|heavy-tail)\n\
-       calibrate       measure PJRT pass times, print cost-model constants"
+       calibrate       measure PJRT pass times, print cost-model constants\n\
+       sweep           replicated experiment grid emitting BENCH_*.json\n\
+                       (--live for the mock cluster; --validate / --compare)"
         .to_string()
 }
 
@@ -231,4 +238,8 @@ fn cmd_loadgen(argv: &[String]) -> Result<(), String> {
 
 fn cmd_calibrate(argv: &[String]) -> Result<(), String> {
     sbs::runtime::cli_calibrate(argv).map_err(|e| format!("{e:#}"))
+}
+
+fn cmd_sweep(argv: &[String]) -> Result<(), String> {
+    sbs::workload::sweep::cli_sweep(argv).map_err(|e| format!("{e:#}"))
 }

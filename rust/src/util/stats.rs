@@ -27,6 +27,16 @@ pub fn stddev(xs: &[f64]) -> f64 {
     variance(xs).sqrt()
 }
 
+/// Sample (n−1) standard deviation — the unbiased dispersion estimate for
+/// small replica counts (bench noise thresholds); 0.0 below two samples.
+pub fn sample_stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
 /// Percentile `p` in `[0, 100]` of an **unsorted** slice, with linear
 /// interpolation between closest ranks (numpy default). O(n log n).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
@@ -191,5 +201,13 @@ mod tests {
     fn stddev_known() {
         let s = stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
         assert!((s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_stddev_bessel_corrected() {
+        // Population σ of {1,2,3} is √(2/3); sample s is 1 exactly.
+        assert!((sample_stddev(&[1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(sample_stddev(&[5.0]), 0.0);
+        assert_eq!(sample_stddev(&[]), 0.0);
     }
 }

@@ -87,9 +87,11 @@ impl ArrivalModel {
     }
 }
 
-/// One scheduled request.
+/// One scheduled request. Opaque outside this module: build schedules
+/// with [`build_schedule`] and drain them with [`run_schedule`] (the
+/// sweep harness's live mode drives the loadgen this way, in process).
 #[derive(Debug, Clone, Copy)]
-struct Arrival {
+pub struct Arrival {
     /// Due time, seconds from the epoch.
     at: f64,
     /// Prompt length in tokens (encoded as that many prompt bytes).
@@ -124,6 +126,15 @@ pub fn cli_loadgen(argv: &[String]) -> Result<()> {
             Some("poisson"),
         )
         .opt("seed", "arrival-process seed", Some("42"))
+        .opt(
+            "wait-ready-secs",
+            "readiness poll timeout for --wait-ready",
+            Some("30"),
+        )
+        .flag(
+            "wait-ready",
+            "poll for the server's listen socket before offering load",
+        )
         .flag("shutdown", "send SHUTDOWN to the server when finished");
     let args = cmd.parse(argv).map_err(|e| anyhow!("{e}"))?;
     let addr = args.str_or("addr", "127.0.0.1:7433");
@@ -137,9 +148,19 @@ pub fn cli_loadgen(argv: &[String]) -> Result<()> {
     let arrival = ArrivalModel::parse(&args.str_or("arrival", "poisson"))?;
     let seed: u64 = args.parse_or("seed", 42u64).map_err(|e| anyhow!("{e}"))?;
 
-    let schedule = arrival_schedule(arrival, rate, duration, seed, prompt_tokens, max_new);
+    if args.flag("wait-ready") {
+        // Bounded poll instead of the caller guessing with `sleep`: the
+        // run starts the moment the server binds, and a server that never
+        // comes up fails fast with a clear error.
+        let secs: u64 = args
+            .parse_or("wait-ready-secs", 30u64)
+            .map_err(|e| anyhow!("{e}"))?;
+        net::wait_for_port(&addr, Duration::from_secs(secs))?;
+    }
+
+    let schedule = build_schedule(arrival, rate, duration, seed, prompt_tokens, max_new);
     let offered = schedule.len();
-    let report = run(&addr, schedule, conns)?;
+    let report = run_schedule(&addr, schedule, conns)?;
     // Grab the server's decode-pool gauges before (optionally) draining it.
     let decode_pool = match fetch_stats(&addr) {
         Ok(j) => j,
@@ -239,7 +260,7 @@ impl LoadgenReport {
 }
 
 /// Materialize the arrival schedule under the chosen inter-arrival model.
-fn arrival_schedule(
+pub fn build_schedule(
     model: ArrivalModel,
     rate: f64,
     duration: f64,
@@ -264,7 +285,10 @@ fn arrival_schedule(
     out
 }
 
-fn run(addr: &str, schedule: VecDeque<Arrival>, conns: usize) -> Result<LoadgenReport> {
+/// Drain a schedule against a running server and return the latency
+/// report. Public so embedders (the sweep harness's live mode) can drive
+/// the open-loop discipline without shelling out.
+pub fn run_schedule(addr: &str, schedule: VecDeque<Arrival>, conns: usize) -> Result<LoadgenReport> {
     let queue = Arc::new(Mutex::new(schedule));
     let t0 = Instant::now();
     let mut workers = Vec::new();

@@ -7,6 +7,7 @@
 //! plus the decode workload of §5.2.2 (input+output ≈ 2.5K).
 
 pub mod loadgen;
+pub mod sweep;
 mod trace;
 
 pub use trace::{read_trace, write_trace};
@@ -92,6 +93,14 @@ pub enum ArrivalProcess {
         trough: f64,
         period: f64,
     },
+    /// Gamma(k = 0.25) gaps (CV 2): arrivals clump into bursts separated
+    /// by lulls — the DES twin of the loadgen's `bursty` model, so sweep
+    /// grid points mean the same thing in both modes.
+    Bursty { qps: f64 },
+    /// Pareto(α = 1.5) gaps: occasional very long quiet periods with
+    /// dense clusters between them — the DES twin of the loadgen's
+    /// `heavy-tail` model.
+    HeavyTail { qps: f64 },
 }
 
 impl ArrivalProcess {
@@ -105,7 +114,28 @@ impl ArrivalProcess {
                 let rate = if phase < 0.5 { qps } else { qps * trough };
                 rng.exp(rate.max(1e-9))
             }
+            ArrivalProcess::Bursty { qps } => {
+                // Gamma(k, θ) has mean kθ; k = 0.25 gives CV 1/√k = 2.
+                const SHAPE: f64 = 0.25;
+                rng.gamma(SHAPE, 1.0 / (SHAPE * qps.max(1e-9)))
+            }
+            ArrivalProcess::HeavyTail { qps } => {
+                // Pareto(x_m, α) has mean αx_m/(α−1); solve x_m for 1/qps.
+                const ALPHA: f64 = 1.5;
+                rng.pareto((ALPHA - 1.0) / (ALPHA * qps.max(1e-9)), ALPHA)
+            }
         }
+    }
+
+    /// Build a mean-rate-`qps` process from its sweep/CLI name.
+    pub fn named(name: &str, qps: f64) -> Result<Self, String> {
+        Ok(match name {
+            "poisson" => ArrivalProcess::Poisson { qps },
+            "uniform" => ArrivalProcess::Uniform { qps },
+            "bursty" | "gamma" => ArrivalProcess::Bursty { qps },
+            "heavy-tail" | "heavy_tail" | "pareto" => ArrivalProcess::HeavyTail { qps },
+            other => return Err(format!("unknown arrival process '{other}'")),
+        })
     }
 }
 
@@ -270,6 +300,42 @@ mod tests {
         let burst: f64 = (0..1000).map(|_| p.next_gap(&mut rng, 1.0)).sum::<f64>() / 1000.0;
         let quiet: f64 = (0..1000).map(|_| p.next_gap(&mut rng, 6.0)).sum::<f64>() / 1000.0;
         assert!(quiet > burst * 5.0, "burst {burst} quiet {quiet}");
+    }
+
+    #[test]
+    fn bursty_and_heavy_tail_preserve_mean_rate() {
+        // Both models are mean-rate-preserving by construction; a long
+        // horizon must recover the nominal rate within sampling noise
+        // (heavy-tail has infinite variance at α = 1.5, so its band is
+        // wide).
+        for (name, lo, hi) in [("bursty", 40.0, 60.0), ("heavy-tail", 30.0, 70.0)] {
+            let mut spec = WorkloadSpec::paper_short(50.0, 200.0, 11);
+            spec.arrivals = ArrivalProcess::named(name, 50.0).unwrap();
+            let rate = spec.generate().len() as f64 / 200.0;
+            assert!((lo..hi).contains(&rate), "{name} rate {rate}");
+        }
+    }
+
+    #[test]
+    fn bursty_gaps_clump() {
+        // CV 2 means the gap distribution is far more dispersed than the
+        // exponential (CV 1) at the same mean.
+        let mut rng = Rng::new(13);
+        let cv = |p: &ArrivalProcess, rng: &mut Rng| {
+            let gaps: Vec<f64> = (0..20_000).map(|_| p.next_gap(rng, 0.0)).collect();
+            let m = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var = gaps.iter().map(|g| (g - m) * (g - m)).sum::<f64>() / gaps.len() as f64;
+            var.sqrt() / m
+        };
+        let cv_poisson = cv(&ArrivalProcess::Poisson { qps: 20.0 }, &mut rng);
+        let cv_bursty = cv(&ArrivalProcess::Bursty { qps: 20.0 }, &mut rng);
+        assert!(cv_bursty > cv_poisson * 1.5, "poisson {cv_poisson} bursty {cv_bursty}");
+    }
+
+    #[test]
+    fn named_rejects_unknown() {
+        assert!(ArrivalProcess::named("weibull", 1.0).is_err());
+        assert!(ArrivalProcess::named("pareto", 1.0).is_ok());
     }
 
     #[test]
