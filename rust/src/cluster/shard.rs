@@ -36,19 +36,23 @@
 //! ## Direct prefill→decode transfer
 //!
 //! When a dispatched job carries a [`DirectTarget`], the prefill shard
-//! bypasses the scheduler on the KV path entirely: it opens (and pools)
-//! a connection to the decode shard's **peer listener** (the port
-//! advertised in the decode shard's `HelloAck`), streams the coded
-//! `KvSegment`s there, commits with `HandoffCommit`, and waits for the
+//! bypasses the scheduler on the KV path entirely: its
+//! [`PeerMux`] shares **one multiplexed connection per decode peer**
+//! (the port advertised in the decode shard's `HelloAck`), streams the
+//! coded `KvSegment`s there on a per-job [`StreamId`] — so concurrent
+//! handoffs to the same shard interleave at frame granularity instead
+//! of serializing — commits with `HandoffCommit`, and waits for the
 //! decode shard's `HandoffAck` — only then does it send the lightweight
 //! `HandoffCommit` notification to the scheduler. Any failure on the
 //! peer path (connect, stream, ack timeout) falls back to the relayed
 //! `KvSegment*`+`PrefillDone` route, which the scheduler handles by
 //! re-placing the join; a decode shard that dies mid-handoff is covered
 //! twice (the fallback, and the scheduler's eviction of its pending
-//! ids). The decode shard emits the sequence's `Token index 0` on its
-//! scheduler connection the moment a peer handoff is admitted, before
-//! any decode-step token, so the stream stays ordered.
+//! ids). On the decode side, accepted peer connections are served by
+//! the process-global [`NetDriver`] event loop (no thread per peer);
+//! the handler keys KV reassembly by job id and emits the sequence's
+//! `Token index 0` on the scheduler connection the moment a handoff is
+//! admitted, before any decode-step token, so the stream stays ordered.
 //!
 //! `Stop` drains: units finish their queued work (their terminal frames
 //! flush first), the shard replies `Bye` and the process exits.
@@ -64,8 +68,11 @@ use crate::engine::sampler::Sampling;
 use crate::engine::PrefillOutcome;
 use crate::metrics::RequestMetrics;
 use crate::runtime::artifacts_dir;
+use crate::transport::driver::{ConnHandler, ConnIo, ConnOptions, NetDriver};
+use crate::transport::peer::PeerMux;
 use crate::transport::proto::{
-    self, DirectTarget, Frame, FrameReader, ProtoError, ShardRole, UnitLoad, PROTO_VERSION,
+    self, DirectTarget, Frame, FrameReader, ProtoError, ShardRole, StreamId, UnitLoad,
+    PROTO_VERSION, STREAM_CONTROL,
 };
 use crate::transport::{AdmitJob, KvCodec, KvWireCounters, PrefillMsg, PrefillWork, UnitMsg};
 use crate::util::{Clock, RealClock};
@@ -240,169 +247,6 @@ fn load_codec(codec: &AtomicU8) -> KvCodec {
     KvCodec::from_wire(codec.load(Ordering::Relaxed)).unwrap_or(KvCodec::Raw)
 }
 
-/// One pooled peer connection to a decode shard (the direct-transfer
-/// path). Both stream halves plus the reader state for `PeerHelloAck` /
-/// `HandoffAck` replies.
-struct PeerConn {
-    w: TcpStream,
-    r: TcpStream,
-    reader: FrameReader,
-}
-
-impl PeerConn {
-    /// Wait (bounded) for one frame on the peer connection.
-    fn recv(&mut self, deadline: Instant) -> Result<Frame> {
-        loop {
-            match self.reader.poll(&mut self.r) {
-                Ok(Some(f)) => return Ok(f),
-                Ok(None) if Instant::now() < deadline => continue,
-                Ok(None) => return Err(anyhow!("peer reply timed out")),
-                Err(e) => return Err(anyhow!("peer receive failed: {e}")),
-            }
-        }
-    }
-}
-
-/// Pool of peer connections from this prefill shard to decode shards,
-/// keyed by peer address and shared by every instance thread. One
-/// connection per decode shard; concurrent handoffs to the same shard
-/// serialize on its slot (KV streams must not interleave mid-job).
-struct PeerPool {
-    conns: Mutex<HashMap<String, Arc<Mutex<Option<PeerConn>>>>>,
-}
-
-impl PeerPool {
-    fn new() -> Self {
-        PeerPool {
-            conns: Mutex::new(HashMap::new()),
-        }
-    }
-
-    fn connect(addr: &str, codec: KvCodec) -> Result<PeerConn> {
-        use std::net::ToSocketAddrs;
-        let sockaddr = addr
-            .to_socket_addrs()
-            .with_context(|| format!("resolving peer {addr}"))?
-            .next()
-            .ok_or_else(|| anyhow!("peer address {addr} resolved to nothing"))?;
-        let conn = TcpStream::connect_timeout(&sockaddr, Duration::from_secs(5))
-            .with_context(|| format!("connecting to decode peer {addr}"))?;
-        conn.set_nodelay(true)?;
-        conn.set_read_timeout(Some(Duration::from_millis(250)))?;
-        conn.set_write_timeout(Some(Duration::from_secs(5)))?;
-        let mut pc = PeerConn {
-            w: conn.try_clone()?,
-            r: conn,
-            reader: FrameReader::new(),
-        };
-        proto::write_frame(
-            &mut pc.w,
-            &Frame::PeerHello {
-                version: PROTO_VERSION,
-                kv_wire: codec,
-            },
-        )?;
-        match pc.recv(Instant::now() + Duration::from_secs(5))? {
-            Frame::PeerHelloAck { version } if version == PROTO_VERSION => Ok(pc),
-            Frame::PeerHelloAck { version } => {
-                Err(anyhow!("peer {addr} speaks v{version}, we speak v{PROTO_VERSION}"))
-            }
-            other => Err(anyhow!("peer {addr}: expected PeerHelloAck, got {other:?}")),
-        }
-    }
-
-    /// Stream one finished prefill's KV to `target` and wait for the
-    /// decode shard's ack. On any failure the pooled connection is
-    /// dropped and the error surfaces so the caller falls back to the
-    /// scheduler relay; a stale pooled connection gets one reconnect
-    /// before giving up.
-    fn handoff(
-        &self,
-        codec: KvCodec,
-        target: &DirectTarget,
-        id: u64,
-        outcome: &PrefillOutcome,
-        decode_max_new: u32,
-    ) -> Result<()> {
-        let slot = {
-            let mut conns = self.conns.lock().unwrap();
-            conns
-                .entry(target.addr.clone())
-                .or_insert_with(|| Arc::new(Mutex::new(None)))
-                .clone()
-        };
-        let mut slot = slot.lock().unwrap();
-        let pooled = slot.is_some();
-        if slot.is_none() {
-            *slot = Some(Self::connect(&target.addr, codec)?);
-        }
-        match Self::stream(slot.as_mut().unwrap(), codec, target, id, outcome, decode_max_new) {
-            Ok(()) => Ok(()),
-            Err(e) if pooled => {
-                // The pooled connection may have died idle; retry once on
-                // a fresh one before declaring the peer unreachable.
-                log::debug!("peer {}: pooled connection failed ({e:#}); reconnecting", target.addr);
-                *slot = None;
-                *slot = Some(Self::connect(&target.addr, codec)?);
-                let out = Self::stream(
-                    slot.as_mut().unwrap(),
-                    codec,
-                    target,
-                    id,
-                    outcome,
-                    decode_max_new,
-                );
-                if out.is_err() {
-                    *slot = None;
-                }
-                out
-            }
-            Err(e) => {
-                *slot = None;
-                Err(e)
-            }
-        }
-    }
-
-    fn stream(
-        pc: &mut PeerConn,
-        codec: KvCodec,
-        target: &DirectTarget,
-        id: u64,
-        outcome: &PrefillOutcome,
-        decode_max_new: u32,
-    ) -> Result<()> {
-        let mut buf = Vec::new();
-        proto::each_kv_segment(
-            &mut buf,
-            codec,
-            id,
-            config::KV_SEGMENT_ELEMS,
-            &outcome.k,
-            &outcome.v,
-            |bytes| pc.w.write_all(bytes),
-        )?;
-        proto::write_frame(
-            &mut pc.w,
-            &Frame::HandoffCommit {
-                unit: target.unit,
-                id,
-                first_token: outcome.first_token,
-                kv_len: outcome.len as u32,
-                max_new: decode_max_new,
-                exec_time: outcome.exec_time,
-            },
-        )?;
-        // The ack is what makes the commit safe to report: after it, the
-        // sequence is durably enqueued on the decode unit, so the
-        // scheduler-facing HandoffCommit can never name a lost handoff.
-        match pc.recv(Instant::now() + Duration::from_secs(10))? {
-            Frame::HandoffAck { id: ack } if ack == id => Ok(()),
-            other => Err(anyhow!("peer {}: expected HandoffAck({id}), got {other:?}", target.addr)),
-        }
-    }
-}
-
 /// Outbound sink for one prefill instance thread. A finished prefill
 /// leaves either **directly** — streamed to the target decode shard's
 /// peer listener, the scheduler seeing only a lightweight
@@ -411,7 +255,7 @@ impl PeerPool {
 /// `EndForward` carrying the instance's real remaining backlog.
 struct PrefillWireSink {
     out: Sender<Outbound>,
-    peers: Arc<PeerPool>,
+    peers: Arc<PeerMux>,
     /// Codec negotiated with the current scheduler connection.
     codec: Arc<AtomicU8>,
 }
@@ -425,6 +269,7 @@ impl PrefillWireSink {
         let sent = proto::each_kv_segment(
             &mut buf,
             codec,
+            proto::job_stream(id),
             id,
             config::KV_SEGMENT_ELEMS,
             &outcome.k,
@@ -600,9 +445,14 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
     // Inbound-KV byte accounting (relay admits + direct peer handoffs),
     // reported to the scheduler in every StatsReply.
     let kv_in: Arc<KvWireCounters> = Arc::default();
-    // Direct-transfer peer pool (prefill role only; created unconditionally
-    // so the sink type stays uniform).
-    let peers = Arc::new(PeerPool::new());
+    // Direct-transfer peer mux (prefill role only; created unconditionally
+    // so the sink type stays uniform). One driver-owned connection per
+    // decode peer, shared by all instance threads — concurrent handoffs
+    // multiplex on per-job streams instead of serializing.
+    let peers = Arc::new(PeerMux::new(
+        config::KV_SEGMENT_ELEMS,
+        Duration::from_secs(10),
+    ));
     // Ids already admitted through the peer path (decode role). A
     // prefill shard whose HandoffAck was lost re-streams the same job on
     // a fresh connection; the re-commit must be acked *without*
@@ -785,12 +635,14 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
 
     // Graceful drain: units finish their active work (flushing terminal
     // frames through the writer), then Bye closes the stream. The peer
-    // listener threads observe the stop flag and exit on their next tick.
+    // accept thread observes the stop flag and exits on its next tick;
+    // driver-owned peer connections close themselves on theirs.
     stop_flag.store(true, Ordering::SeqCst);
     channels.send_stops();
     for t in unit_threads {
         let _ = t.join();
     }
+    peers.close_all();
     let _ = ev_tx.send(Outbound::Frame(Frame::Bye));
     let _ = writer.join();
     log::info!("{} shard drained; exiting", cfg.role.name());
@@ -1056,9 +908,11 @@ fn handle_scheduler_frame(
     false
 }
 
-/// Accept loop of a decode shard's peer listener: each connection is one
-/// prefill shard streaming direct KV handoffs; served concurrently, each
-/// on its own thread, fully independent of the scheduler connection.
+/// Accept loop of a decode shard's peer listener: each accepted
+/// connection is one prefill shard streaming multiplexed direct KV
+/// handoffs. Connections are handed to the process-global
+/// [`NetDriver`] — no thread per peer; the accept thread is the peer
+/// plane's only dedicated thread regardless of cluster size.
 fn peer_accept_loop(
     listener: TcpListener,
     txs: Vec<Sender<UnitMsg>>,
@@ -1071,18 +925,22 @@ fn peer_accept_loop(
         match listener.accept() {
             Ok((conn, peer)) => {
                 log::info!("direct-transfer peer connected from {peer}");
-                let (txs, ev_tx, kv_in, seen, stop) = (
-                    txs.clone(),
-                    ev_tx.clone(),
-                    kv_in.clone(),
-                    direct_seen.clone(),
-                    stop.clone(),
-                );
-                std::thread::spawn(move || {
-                    if let Err(e) = serve_peer(conn, &txs, &ev_tx, &kv_in, &seen, &stop) {
-                        log::info!("peer {peer} connection ended: {e:#}");
-                    }
-                });
+                let handler = PeerServerHandler {
+                    peer: peer.to_string(),
+                    hello_done: false,
+                    txs: txs.clone(),
+                    ev_tx: ev_tx.clone(),
+                    kv_in: kv_in.clone(),
+                    direct_seen: direct_seen.clone(),
+                    stop: stop.clone(),
+                    assembling: HashMap::new(),
+                    poisoned: HashSet::new(),
+                };
+                if let Err(e) =
+                    NetDriver::global().add(conn, Box::new(handler), ConnOptions::default())
+                {
+                    log::warn!("peer {peer}: driver registration failed: {e}");
+                }
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 if stop.load(Ordering::SeqCst) {
@@ -1098,56 +956,71 @@ fn peer_accept_loop(
     }
 }
 
-/// Serve one direct-transfer peer connection: `PeerHello` handshake,
-/// then per-job `KvSegment*` + `HandoffCommit`, each commit admitting
-/// the assembled sequence into its unit and acked back to the peer. A
-/// dying connection drops its partial assemblies — nothing was admitted,
-/// so the prefill side's relay fallback (or the scheduler's eviction of
-/// the decode registration) terminalizes the job.
-fn serve_peer(
-    conn: TcpStream,
-    txs: &[Sender<UnitMsg>],
-    ev_tx: &Sender<Outbound>,
-    kv_in: &KvWireCounters,
-    direct_seen: &Mutex<HashSet<u64>>,
-    stop: &AtomicBool,
-) -> Result<()> {
-    conn.set_nonblocking(false)?;
-    conn.set_nodelay(true)?;
-    conn.set_read_timeout(Some(Duration::from_millis(250)))?;
-    conn.set_write_timeout(Some(Duration::from_secs(5)))?;
-    let mut rd = conn.try_clone()?;
-    let mut w = conn.try_clone()?;
-    let mut reader = FrameReader::new();
-    let deadline = Instant::now() + Duration::from_secs(5);
-    loop {
-        match reader.poll(&mut rd)? {
-            Some(Frame::PeerHello { version, .. }) if version == PROTO_VERSION => break,
-            Some(Frame::PeerHello { version, .. }) => {
-                return Err(anyhow!("peer speaks v{version}, we speak v{PROTO_VERSION}"))
-            }
-            Some(other) => return Err(anyhow!("expected PeerHello, got {other:?}")),
-            None if Instant::now() >= deadline => return Err(anyhow!("peer handshake timed out")),
-            None => {}
-        }
-    }
-    proto::write_frame(&mut w, &Frame::PeerHelloAck { version: PROTO_VERSION })?;
+/// One KV cache pair being reassembled from a peer's `KvSegment` stream.
+struct PeerAssembly {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Last segment arrival, for abandoned-assembly GC.
+    touched: Instant,
+}
 
-    // Per-job KV assembly (keyed by request id, both halves).
-    let mut assembling: HashMap<u64, (Vec<f32>, Vec<f32>)> = HashMap::new();
-    let mut consumed_at_last_frame = reader.consumed();
-    loop {
-        if stop.load(Ordering::SeqCst) {
-            return Ok(());
+/// How long an assembly may sit without progress before GC reclaims it.
+/// Far past the prefill side's ack timeout: by then the sender has
+/// fallen back to relay and will never commit this copy.
+const ASSEMBLY_GC_AFTER: Duration = Duration::from_secs(30);
+
+/// Driver-side handler for one accepted direct-transfer peer connection:
+/// `PeerHello` handshake, then interleaved per-job `KvSegment` streams
+/// (keyed by request id — stream multiplexing means segments of
+/// different jobs arrive interleaved) committed by `HandoffCommit`,
+/// each commit admitting the assembled sequence into its unit and acked
+/// back on the priority lane. A dying connection drops its partial
+/// assemblies — nothing was admitted, so the prefill side's relay
+/// fallback (or the scheduler's eviction of the decode registration)
+/// terminalizes the job.
+struct PeerServerHandler {
+    peer: String,
+    hello_done: bool,
+    txs: Vec<Sender<UnitMsg>>,
+    ev_tx: Sender<Outbound>,
+    kv_in: Arc<KvWireCounters>,
+    direct_seen: Arc<Mutex<HashSet<u64>>>,
+    stop: Arc<AtomicBool>,
+    /// Per-job KV assembly (keyed by request id, both halves).
+    assembling: HashMap<u64, PeerAssembly>,
+    /// Jobs whose KV stream was malformed: their assembly is dropped and
+    /// the eventual commit is *not* acked, so the sender's ack timeout
+    /// routes the job to relay. Scoped to the job, not the connection —
+    /// one bad stream must not kill the other handoffs multiplexed on
+    /// this socket.
+    poisoned: HashSet<u64>,
+}
+
+impl ConnHandler for PeerServerHandler {
+    fn on_frame(&mut self, io: &mut ConnIo<'_>, _stream: StreamId, frame: Frame, wire_len: u64) {
+        if !self.hello_done {
+            match frame {
+                Frame::PeerHello { version, .. } if version == PROTO_VERSION => {
+                    self.hello_done = true;
+                    io.enqueue_priority(proto::frame_bytes_on(
+                        STREAM_CONTROL,
+                        &Frame::PeerHelloAck { version: PROTO_VERSION },
+                    ));
+                }
+                Frame::PeerHello { version, .. } => {
+                    log::warn!(
+                        "peer {} speaks v{version}, we speak v{PROTO_VERSION}; dropping",
+                        self.peer
+                    );
+                    io.close();
+                }
+                other => {
+                    log::warn!("peer {}: expected PeerHello, got {other:?}", self.peer);
+                    io.close();
+                }
+            }
+            return;
         }
-        let frame = match reader.poll(&mut rd) {
-            Ok(Some(f)) => f,
-            Ok(None) => continue,
-            Err(ProtoError::Closed) => return Ok(()),
-            Err(e) => return Err(e.into()),
-        };
-        let wire_len = reader.consumed() - consumed_at_last_frame;
-        consumed_at_last_frame = reader.consumed();
         match frame {
             Frame::KvSegment {
                 id,
@@ -1156,15 +1029,30 @@ fn serve_peer(
                 total,
                 data,
             } => {
-                kv_in.record(wire_len, 4 * data.len() as u64);
-                let entry = assembling.entry(id).or_default();
+                self.kv_in.record(wire_len, 4 * data.len() as u64);
+                if self.poisoned.contains(&id) {
+                    return;
+                }
+                let entry = self.assembling.entry(id).or_insert_with(|| PeerAssembly {
+                    k: Vec::new(),
+                    v: Vec::new(),
+                    touched: Instant::now(),
+                });
+                entry.touched = Instant::now();
                 if let Err(why) =
-                    proto::apply_kv_segment(&mut entry.0, &mut entry.1, half, offset, total, &data)
+                    proto::apply_kv_segment(&mut entry.k, &mut entry.v, half, offset, total, &data)
                 {
-                    // Malformed stream: a protocol-level violation costs
-                    // the peer connection (its prefill shard falls back
-                    // to relay for in-flight jobs), never the shard.
-                    return Err(anyhow!("malformed KV segment for job {id}: {why}"));
+                    // Malformed stream: poison the *job*. Its commit will
+                    // go unacked, so the sender's timeout falls back to
+                    // relay; sibling handoffs on this connection are
+                    // untouched.
+                    log::warn!(
+                        "peer {}: malformed KV segment for job {id} ({why}); \
+                         poisoning the job",
+                        self.peer
+                    );
+                    self.assembling.remove(&id);
+                    self.poisoned.insert(id);
                 }
             }
             Frame::HandoffCommit {
@@ -1175,17 +1063,32 @@ fn serve_peer(
                 max_new,
                 exec_time,
             } => {
-                if !direct_seen.lock().unwrap().insert(id) {
+                if self.poisoned.remove(&id) {
+                    log::warn!(
+                        "peer {}: withholding ack for poisoned job {id} \
+                         (sender will fall back to relay)",
+                        self.peer
+                    );
+                    return;
+                }
+                if !self.direct_seen.lock().unwrap().insert(id) {
                     // A prefill shard whose ack was lost re-streamed a
                     // handoff this shard already owns: ack again, admit
                     // nothing, emit nothing — the original sequence's
                     // stream is already running.
                     log::info!("duplicate direct handoff for job {id}; re-acking only");
-                    assembling.remove(&id);
-                    proto::write_frame(&mut w, &Frame::HandoffAck { id })?;
-                    continue;
+                    self.assembling.remove(&id);
+                    io.enqueue_priority(proto::frame_bytes_on(
+                        STREAM_CONTROL,
+                        &Frame::HandoffAck { id },
+                    ));
+                    return;
                 }
-                let (k, v) = assembling.remove(&id).unwrap_or_default();
+                let (k, v) = self
+                    .assembling
+                    .remove(&id)
+                    .map(|a| (a.k, a.v))
+                    .unwrap_or_default();
                 let job = AdmitJob {
                     id,
                     outcome: Box::new(PrefillOutcome {
@@ -1202,13 +1105,13 @@ fn serve_peer(
                     // registration made at dispatch.
                     metrics: RequestMetrics::arrive(0.0, kv_len),
                 };
-                let admitted = match txs.get(unit as usize) {
+                let admitted = match self.txs.get(unit as usize) {
                     Some(tx) => {
                         // Token index 0 *before* the admit: both ride the
                         // shard's single outbound queue, so the first
                         // token precedes every decode-step token on the
                         // scheduler connection.
-                        let _ = ev_tx.send(Outbound::Frame(Frame::Token {
+                        let _ = self.ev_tx.send(Outbound::Frame(Frame::Token {
                             id,
                             index: 0,
                             token: first_token,
@@ -1218,19 +1121,44 @@ fn serve_peer(
                     None => false,
                 };
                 if !admitted {
-                    log::warn!("direct handoff for job {id} names unknown unit {unit}; rejecting");
-                    let _ = ev_tx.send(Outbound::Frame(Frame::Rejected { id }));
+                    log::warn!(
+                        "direct handoff for job {id} names unknown unit {unit}; rejecting"
+                    );
+                    let _ = self.ev_tx.send(Outbound::Frame(Frame::Rejected { id }));
                 }
                 // Ack either way: the handoff reached a terminal owner
                 // (the unit, or a Rejected on the scheduler stream) and
                 // must not be relayed a second time.
-                proto::write_frame(&mut w, &Frame::HandoffAck { id })?;
+                io.enqueue_priority(proto::frame_bytes_on(
+                    STREAM_CONTROL,
+                    &Frame::HandoffAck { id },
+                ));
             }
             Frame::Ping { nonce, t_us } => {
-                proto::write_frame(&mut w, &Frame::Pong { nonce, t_us })?;
+                io.enqueue_priority(proto::frame_bytes_on(
+                    STREAM_CONTROL,
+                    &Frame::Pong { nonce, t_us },
+                ));
             }
             other => log::debug!("peer: ignoring frame {other:?}"),
         }
+    }
+
+    fn on_tick(&mut self, io: &mut ConnIo<'_>) {
+        if self.stop.load(Ordering::SeqCst) {
+            io.close();
+            return;
+        }
+        // Reclaim assemblies whose sender gave up (never committed —
+        // e.g. segments that kept arriving for a job already routed to
+        // relay, or a stale StreamId's leftovers).
+        self.assembling.retain(|id, a| {
+            let keep = a.touched.elapsed() < ASSEMBLY_GC_AFTER;
+            if !keep {
+                log::debug!("peer {}: GC of abandoned KV assembly for job {id}", self.peer);
+            }
+            keep
+        });
     }
 }
 

@@ -621,9 +621,10 @@ impl RealCluster {
         let release_all =
             |transports: &mut Vec<Box<dyn DecodeTransport>>,
              prefills: &mut Vec<Box<dyn PrefillTransport>>| {
-                // Release everything already connected: reader threads
-                // stop and the shards go back to accepting, so a retried
-                // start() in this process can succeed.
+                // Release everything already connected: the net driver
+                // closes the connections and the shards go back to
+                // accepting, so a retried start() in this process can
+                // succeed.
                 for t in transports.iter_mut() {
                     t.detach();
                 }

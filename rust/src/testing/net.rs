@@ -9,7 +9,7 @@
 
 use crate::cluster::workers::RealClusterConfig;
 use crate::server;
-use crate::transport::proto::{self, Frame, FrameReader, ShardRole, PROTO_VERSION};
+use crate::transport::proto::{self, Frame, FrameReader, ShardRole, StreamId, PROTO_VERSION};
 use crate::transport::KvCodec;
 use anyhow::{anyhow, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -119,10 +119,88 @@ impl ShardConn {
         }
     }
 
+    /// Receive the next frame within `timeout`, tagged with the
+    /// [`StreamId`] from its header — for multiplexing assertions.
+    pub fn recv_stream(&mut self, timeout: Duration) -> Result<(StreamId, Frame)> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.reader.poll_stream(&mut self.conn) {
+                Ok(Some(tagged)) => return Ok(tagged),
+                Ok(None) if Instant::now() < deadline => continue,
+                Ok(None) => return Err(anyhow!("no frame within {timeout:?}")),
+                Err(e) => return Err(anyhow!("receive failed: {e}")),
+            }
+        }
+    }
+
+    /// Capture stream-tagged frames in arrival order until `done` says
+    /// the capture is complete (called after each frame with the whole
+    /// capture so far), bounded by `timeout`. This is how interleaving
+    /// tests prove two logical streams actually alternated on one
+    /// socket: the returned sequence preserves wire order.
+    pub fn capture_streams(
+        &mut self,
+        timeout: Duration,
+        mut done: impl FnMut(&[(StreamId, Frame)]) -> bool,
+    ) -> Result<Vec<(StreamId, Frame)>> {
+        let deadline = Instant::now() + timeout;
+        let mut captured = Vec::new();
+        loop {
+            let left = deadline
+                .checked_duration_since(Instant::now())
+                .ok_or_else(|| {
+                    anyhow!("capture incomplete after {timeout:?} ({} frames)", captured.len())
+                })?;
+            captured.push(self.recv_stream(left)?);
+            if done(&captured) {
+                return Ok(captured);
+            }
+        }
+    }
+
     /// Kill the connection abruptly (RST-ish: both halves shut down) —
     /// the mid-handoff peer-death injection.
     pub fn kill(self) {
         let _ = self.conn.shutdown(Shutdown::Both);
+    }
+}
+
+/// Accept one direct-transfer peer connection on `listener` and serve
+/// the `PeerHello`/`PeerHelloAck` handshake, returning the live
+/// connection and the codec the dialer proposed. The test plays the
+/// decode-shard side: capture `KvSegment`/`HandoffCommit` frames (with
+/// [`ShardConn::capture_streams`]) and ack — or withhold acks / kill
+/// the connection — to script multiplexed-handoff faults.
+pub fn accept_peer(listener: &TcpListener, timeout: Duration) -> Result<(ShardConn, KvCodec)> {
+    listener.set_nonblocking(true)?;
+    let deadline = Instant::now() + timeout;
+    let conn = loop {
+        match listener.accept() {
+            Ok((conn, _)) => break conn,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(anyhow!("no peer connection within {timeout:?}"));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(anyhow!("peer accept failed: {e}")),
+        }
+    };
+    conn.set_nonblocking(false)?;
+    conn.set_nodelay(true)?;
+    conn.set_read_timeout(Some(Duration::from_millis(50)))?;
+    let mut sc = ShardConn {
+        conn,
+        reader: FrameReader::new(),
+    };
+    match sc.recv(Duration::from_secs(5))? {
+        Frame::PeerHello { version, kv_wire } if version == PROTO_VERSION => {
+            sc.send(&Frame::PeerHelloAck {
+                version: PROTO_VERSION,
+            })?;
+            Ok((sc, kv_wire))
+        }
+        other => Err(anyhow!("expected PeerHello, got {other:?}")),
     }
 }
 

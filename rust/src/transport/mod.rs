@@ -28,6 +28,9 @@
 //! decision, not a scheduling one.
 
 pub mod codec;
+pub mod driver;
+pub mod peer;
+pub mod poll;
 pub mod proto;
 pub mod remote;
 
@@ -228,9 +231,10 @@ impl DecodeTransport for LocalUnit {
     }
 }
 
-/// Scheduler-side event sinks a remote shard client delivers into
-/// (consumed by the shard's single reader thread, hence `Send` without
-/// `Sync`). The cluster fabric builds these over its private
+/// Scheduler-side event sinks a remote shard client delivers into.
+/// Invoked from one thread at a time (the net-driver loop, or the
+/// shard's transient reconnect thread after a drop), hence `Send`
+/// without `Sync`. The cluster fabric builds these over its private
 /// router/scheduler channels; the transport layer stays ignorant of
 /// those types.
 pub struct ShardSinks {
@@ -374,10 +378,10 @@ impl PrefillTransport for LocalPrefill {
     }
 }
 
-/// Scheduler-side event sinks for one remote *prefill* shard (consumed
-/// by the shard's single reader thread). The cluster fabric builds these
-/// over its private router/scheduler channels; the transport layer stays
-/// ignorant of those types.
+/// Scheduler-side event sinks for one remote *prefill* shard (invoked
+/// from one thread at a time, like [`ShardSinks`]). The cluster fabric
+/// builds these over its private router/scheduler channels; the
+/// transport layer stays ignorant of those types.
 pub struct PrefillSinks {
     /// A prefill finished and its KV handoff is fully assembled:
     /// `(id, outcome, max_new, metrics)` — the metrics the scheduler

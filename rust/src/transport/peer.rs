@@ -1,0 +1,318 @@
+//! Multiplexed direct-transfer peer client: the prefill shard's side of
+//! the prefill→decode KV handoff.
+//!
+//! A [`PeerMux`] keeps **one driver-owned connection per decode-shard
+//! peer address**, shared by every prefill instance thread. Each handoff
+//! rides its own [`StreamId`], so N concurrent handoffs to the same
+//! decode shard interleave their `KvSegment` frames at frame granularity
+//! on the shared socket (the outbound queue round-robins across streams)
+//! instead of serializing behind each other — the wire-level analogue of
+//! the paper's staggered buffering, and the fix for the old
+//! one-connection-per-pair pool where concurrent handoffs to one shard
+//! queued on a mutex.
+//!
+//! The per-stream FIFO guarantee is all the receiver needs: a handoff's
+//! `KvSegment`s and its `HandoffCommit` share the job's stream, so the
+//! commit can never overtake its own payload, while frames of *other*
+//! jobs are free to land in between (the decode shard keys reassembly by
+//! job id).
+//!
+//! Handoffs block their instance thread only on the **ack**: segments
+//! and commit are enqueued without waiting, then the caller parks on a
+//! per-job waiter until the decode shard's `HandoffAck` arrives, the
+//! connection dies (all waiters are failed), or the ack timeout lapses —
+//! every failure path surfaces as an error so the caller falls back to
+//! the scheduler relay. A stale pooled connection gets one reconnect
+//! before giving up, matching the old pool's semantics.
+
+use super::driver::{ConnHandle, ConnHandler, ConnIo, ConnOptions, NetDriver};
+use super::proto::{self, DirectTarget, Frame, FrameReader, StreamId, PROTO_VERSION, STREAM_CONTROL};
+use super::KvCodec;
+use crate::engine::PrefillOutcome;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Ack waiters for one peer connection, shared between handoff callers
+/// (insert/park) and the driver-side handler (resolve/fail).
+type Waiters = Arc<Mutex<HashMap<u64, Sender<bool>>>>;
+
+/// One live peer connection: the driver handle plus its ack waiters.
+#[derive(Clone)]
+struct PeerEntry {
+    handle: ConnHandle,
+    waiters: Waiters,
+}
+
+/// Multiplexing pool of peer connections from this prefill shard to
+/// decode shards, keyed by peer address and shared by every instance
+/// thread.
+pub struct PeerMux {
+    conns: Mutex<HashMap<String, Arc<Mutex<Option<PeerEntry>>>>>,
+    /// Per-handoff stream allocator (skips [`STREAM_CONTROL`]).
+    next_stream: AtomicU32,
+    /// KV elements per `KvSegment` chunk (tests shrink this to force
+    /// many frames per handoff).
+    chunk_elems: usize,
+    /// How long a handoff waits for its `HandoffAck` before falling
+    /// back to relay.
+    ack_timeout: Duration,
+}
+
+impl PeerMux {
+    pub fn new(chunk_elems: usize, ack_timeout: Duration) -> Self {
+        PeerMux {
+            conns: Mutex::new(HashMap::new()),
+            next_stream: AtomicU32::new(1),
+            chunk_elems,
+            ack_timeout,
+        }
+    }
+
+    /// A fresh nonzero stream id for one handoff. Wrap-around collisions
+    /// (after 2³²−1 handoffs) only cost interleaving, never correctness.
+    fn alloc_stream(&self) -> StreamId {
+        loop {
+            let s = self.next_stream.fetch_add(1, Ordering::Relaxed);
+            if s != STREAM_CONTROL {
+                return s;
+            }
+        }
+    }
+
+    /// Get the live connection for `addr`, dialing if absent or dead.
+    /// Returns `(entry, pooled)` — `pooled` is true when the entry
+    /// predates this call (eligible for one reconnect retry).
+    fn entry(&self, addr: &str, codec: KvCodec) -> Result<(PeerEntry, bool)> {
+        let slot = {
+            let mut conns = self.conns.lock().unwrap();
+            conns.entry(addr.to_string()).or_default().clone()
+        };
+        let mut slot = slot.lock().unwrap();
+        if let Some(e) = slot.as_ref() {
+            if e.handle.is_open() {
+                return Ok((e.clone(), true));
+            }
+        }
+        let e = Self::connect(addr, codec)?;
+        *slot = Some(e.clone());
+        Ok((e, false))
+    }
+
+    /// Drop `entry` from the pool (if it is still the pooled one) and
+    /// close its connection, failing every parked waiter.
+    fn invalidate(&self, addr: &str, entry: &PeerEntry) {
+        let slot = {
+            let conns = self.conns.lock().unwrap();
+            conns.get(addr).cloned()
+        };
+        if let Some(slot) = slot {
+            let mut slot = slot.lock().unwrap();
+            if let Some(e) = slot.as_ref() {
+                if Arc::ptr_eq(&e.waiters, &entry.waiters) {
+                    *slot = None;
+                }
+            }
+        }
+        entry.handle.close("invalidated by handoff failure");
+    }
+
+    /// Close every pooled connection (shard drain).
+    pub fn close_all(&self) {
+        let entries: Vec<_> = {
+            let conns = self.conns.lock().unwrap();
+            conns.values().cloned().collect()
+        };
+        for slot in entries {
+            if let Some(e) = slot.lock().unwrap().take() {
+                e.handle.close("shard draining");
+            }
+        }
+    }
+
+    /// Dial `addr`, run the blocking `PeerHello` handshake, then hand
+    /// the socket to the global driver. Blocking reads happen *before*
+    /// the driver owns the socket, so the handshake never stalls the
+    /// event loop.
+    fn connect(addr: &str, codec: KvCodec) -> Result<PeerEntry> {
+        use std::net::ToSocketAddrs;
+        let sockaddr = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving peer {addr}"))?
+            .next()
+            .ok_or_else(|| anyhow!("peer address {addr} resolved to nothing"))?;
+        let conn = TcpStream::connect_timeout(&sockaddr, Duration::from_secs(5))
+            .with_context(|| format!("connecting to decode peer {addr}"))?;
+        conn.set_nodelay(true)?;
+        conn.set_read_timeout(Some(Duration::from_millis(250)))?;
+        conn.set_write_timeout(Some(Duration::from_secs(5)))?;
+        let mut w = conn.try_clone()?;
+        proto::write_frame(
+            &mut w,
+            &Frame::PeerHello {
+                version: PROTO_VERSION,
+                kv_wire: codec,
+            },
+        )?;
+        let mut rd = conn.try_clone()?;
+        let mut reader = FrameReader::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match reader.poll(&mut rd) {
+                Ok(Some(Frame::PeerHelloAck { version })) if version == PROTO_VERSION => break,
+                Ok(Some(Frame::PeerHelloAck { version })) => {
+                    return Err(anyhow!("peer {addr} speaks v{version}, we speak v{PROTO_VERSION}"))
+                }
+                Ok(Some(other)) => {
+                    return Err(anyhow!("peer {addr}: expected PeerHelloAck, got {other:?}"))
+                }
+                Ok(None) if Instant::now() < deadline => continue,
+                Ok(None) => return Err(anyhow!("peer {addr} handshake timed out")),
+                Err(e) => return Err(anyhow!("peer {addr} handshake failed: {e}")),
+            }
+        }
+        let waiters: Waiters = Arc::default();
+        let handler = PeerClientHandler {
+            waiters: Arc::clone(&waiters),
+        };
+        let handle = NetDriver::global()
+            .add(conn, Box::new(handler), ConnOptions::default())
+            .with_context(|| format!("registering peer {addr} with the net driver"))?;
+        Ok(PeerEntry { handle, waiters })
+    }
+
+    /// Stream one finished prefill's KV to `target` and wait for the
+    /// decode shard's ack. On any failure the error surfaces so the
+    /// caller falls back to the scheduler relay; a stale pooled
+    /// connection gets one reconnect before giving up.
+    pub fn handoff(
+        &self,
+        codec: KvCodec,
+        target: &DirectTarget,
+        id: u64,
+        outcome: &PrefillOutcome,
+        decode_max_new: u32,
+    ) -> Result<()> {
+        let (entry, pooled) = self.entry(&target.addr, codec)?;
+        match self.try_handoff(&entry, codec, target, id, outcome, decode_max_new) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.invalidate(&target.addr, &entry);
+                if !pooled {
+                    return Err(e);
+                }
+                // The pooled connection may have died idle; retry once
+                // on a fresh one before declaring the peer unreachable.
+                log::debug!(
+                    "peer {}: pooled connection failed ({e:#}); reconnecting",
+                    target.addr
+                );
+                let (entry, _) = self.entry(&target.addr, codec)?;
+                let out = self.try_handoff(&entry, codec, target, id, outcome, decode_max_new);
+                if out.is_err() {
+                    self.invalidate(&target.addr, &entry);
+                }
+                out
+            }
+        }
+    }
+
+    fn try_handoff(
+        &self,
+        entry: &PeerEntry,
+        codec: KvCodec,
+        target: &DirectTarget,
+        id: u64,
+        outcome: &PrefillOutcome,
+        decode_max_new: u32,
+    ) -> Result<()> {
+        // Park the waiter before the commit can possibly be acked.
+        let (ack_tx, ack_rx) = channel::<bool>();
+        entry.waiters.lock().unwrap().insert(id, ack_tx);
+        let unpark = |entry: &PeerEntry| {
+            entry.waiters.lock().unwrap().remove(&id);
+        };
+        // The handoff's own stream: its segments and commit stay FIFO
+        // relative to each other, while other jobs' frames interleave.
+        let stream = self.alloc_stream();
+        let mut buf = Vec::new();
+        let sent = proto::each_kv_segment(
+            &mut buf,
+            codec,
+            stream,
+            id,
+            self.chunk_elems,
+            &outcome.k,
+            &outcome.v,
+            |bytes| entry.handle.enqueue(stream, bytes.to_vec()),
+        );
+        if let Err(e) = sent {
+            unpark(entry);
+            return Err(anyhow!("peer {}: enqueue failed: {e}", target.addr));
+        }
+        let commit = Frame::HandoffCommit {
+            unit: target.unit,
+            id,
+            first_token: outcome.first_token,
+            kv_len: outcome.len as u32,
+            max_new: decode_max_new,
+            exec_time: outcome.exec_time,
+        };
+        if let Err(e) = entry.handle.enqueue(stream, proto::frame_bytes_on(stream, &commit)) {
+            unpark(entry);
+            return Err(anyhow!("peer {}: commit enqueue failed: {e}", target.addr));
+        }
+        // The ack is what makes the commit safe to report: after it, the
+        // sequence is durably enqueued on the decode unit, so the
+        // scheduler-facing HandoffCommit can never name a lost handoff.
+        match ack_rx.recv_timeout(self.ack_timeout) {
+            Ok(true) => Ok(()),
+            Ok(false) => Err(anyhow!("peer {} connection died mid-handoff", target.addr)),
+            Err(_) => {
+                unpark(entry);
+                Err(anyhow!(
+                    "peer {}: no HandoffAck for job {id} within {:?}",
+                    target.addr,
+                    self.ack_timeout
+                ))
+            }
+        }
+    }
+}
+
+/// Driver-side handler for one outbound peer connection: resolves ack
+/// waiters, answers pings, and fails every parked handoff when the
+/// connection dies.
+struct PeerClientHandler {
+    waiters: Waiters,
+}
+
+impl ConnHandler for PeerClientHandler {
+    fn on_frame(&mut self, io: &mut ConnIo<'_>, _stream: StreamId, frame: Frame, _wire_len: u64) {
+        match frame {
+            Frame::HandoffAck { id } => {
+                if let Some(tx) = self.waiters.lock().unwrap().remove(&id) {
+                    let _ = tx.send(true);
+                }
+            }
+            Frame::Ping { nonce, t_us } => {
+                io.enqueue_priority(proto::frame_bytes_on(
+                    STREAM_CONTROL,
+                    &Frame::Pong { nonce, t_us },
+                ));
+            }
+            other => log::debug!("peer client: ignoring frame {other:?}"),
+        }
+    }
+
+    fn on_close(&mut self, _reason: &str) {
+        // Fail every parked handoff: their callers fall back to relay.
+        for (_, tx) in self.waiters.lock().unwrap().drain() {
+            let _ = tx.send(false);
+        }
+    }
+}

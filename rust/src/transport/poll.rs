@@ -1,0 +1,418 @@
+//! Minimal readiness poller behind the event-driven transport.
+//!
+//! Dependency-free by design (no `libc`, no `mio`): on Linux the
+//! backend is raw `epoll` FFI, on other unixes classic `poll(2)`, and
+//! on anything else a timed tick that reports every registered source
+//! as ready (sockets are nonblocking, so spurious readiness degrades to
+//! a bounded busy-poll, not a correctness loss).
+//!
+//! The API is the small slice the [`super::driver`] needs: register a
+//! socket under a `u64` token with read/write interest, re-arm the
+//! interest as outbound queues fill and drain, and wait for events with
+//! a timeout that doubles as the driver's tick.
+
+use std::io;
+use std::time::Duration;
+
+/// Readiness interest for one registered source. Readable interest is
+/// effectively always on for the driver; writable tracks whether the
+/// connection's outbound queue has bytes to drain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest {
+        readable: true,
+        writable: false,
+    };
+    pub const READ_WRITE: Interest = Interest {
+        readable: true,
+        writable: true,
+    };
+}
+
+/// One readiness event. `closed` folds the backend's error/hangup
+/// signals together: the driver reacts identically (drive the read path,
+/// which surfaces the real error or EOF).
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    pub closed: bool,
+}
+
+/// Sources the poller can watch. On unix anything with a raw fd
+/// qualifies; elsewhere registration is token-only (the tick backend
+/// reports readiness unconditionally).
+#[cfg(unix)]
+pub trait Pollable: std::os::unix::io::AsRawFd {}
+#[cfg(unix)]
+impl<T: std::os::unix::io::AsRawFd> Pollable for T {}
+#[cfg(not(unix))]
+pub trait Pollable {}
+#[cfg(not(unix))]
+impl<T> Pollable for T {}
+
+pub use imp::Poller;
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use super::{Event, Interest, Pollable};
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+    use std::time::Duration;
+
+    // Raw epoll bindings; the kernel ABI here is stable and tiny, and
+    // pulling in `libc` for five calls would be the only dependency
+    // added by the whole transport layer.
+    #[derive(Clone, Copy)]
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLLIN: u32 = 0x1;
+    const EPOLLOUT: u32 = 0x4;
+    const EPOLLERR: u32 = 0x8;
+    const EPOLLHUP: u32 = 0x10;
+    const EPOLLRDHUP: u32 = 0x2000;
+
+    pub struct Poller {
+        ep: i32,
+    }
+
+    // The epoll fd is just an fd; the driver owns the poller on one
+    // thread but construction happens elsewhere.
+    unsafe impl Send for Poller {}
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let ep = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if ep < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { ep })
+        }
+
+        fn ctl(&self, op: i32, fd: i32, token: u64, interest: Interest) -> io::Result<()> {
+            let mut ev = EpollEvent {
+                events: mask(interest),
+                data: token,
+            };
+            let rc = unsafe { epoll_ctl(self.ep, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn register(
+            &mut self,
+            src: &impl Pollable,
+            token: u64,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, src.as_raw_fd(), token, interest)
+        }
+
+        pub fn modify(
+            &mut self,
+            src: &impl Pollable,
+            token: u64,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, src.as_raw_fd(), token, interest)
+        }
+
+        pub fn deregister(&mut self, src: &impl Pollable, _token: u64) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, src.as_raw_fd(), 0, Interest::READ)
+        }
+
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Duration) -> io::Result<()> {
+            out.clear();
+            let mut buf = [EpollEvent { events: 0, data: 0 }; 64];
+            let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+            let n = unsafe { epoll_wait(self.ep, buf.as_mut_ptr(), buf.len() as i32, ms) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for ev in buf.iter().take(n as usize) {
+                // Copy out of the (packed) struct before use.
+                let (bits, token) = (ev.events, ev.data);
+                out.push(Event {
+                    token,
+                    readable: bits & (EPOLLIN | EPOLLRDHUP) != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    closed: bits & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    fn mask(interest: Interest) -> u32 {
+        let mut m = EPOLLRDHUP;
+        if interest.readable {
+            m |= EPOLLIN;
+        }
+        if interest.writable {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.ep);
+            }
+        }
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod imp {
+    use super::{Event, Interest, Pollable};
+    use std::collections::HashMap;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+    use std::time::Duration;
+
+    #[repr(C)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+    }
+
+    const POLLIN: i16 = 0x1;
+    const POLLOUT: i16 = 0x4;
+    const POLLERR: i16 = 0x8;
+    const POLLHUP: i16 = 0x10;
+
+    /// `poll(2)` backend: the registry lives here and the fd set is
+    /// rebuilt per wait. O(n) per wake, fine for the handful of
+    /// connections a scheduler or shard holds.
+    pub struct Poller {
+        registered: HashMap<u64, (i32, Interest)>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller {
+                registered: HashMap::new(),
+            })
+        }
+
+        pub fn register(
+            &mut self,
+            src: &impl Pollable,
+            token: u64,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.registered.insert(token, (src.as_raw_fd(), interest));
+            Ok(())
+        }
+
+        pub fn modify(
+            &mut self,
+            src: &impl Pollable,
+            token: u64,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.registered.insert(token, (src.as_raw_fd(), interest));
+            Ok(())
+        }
+
+        pub fn deregister(&mut self, _src: &impl Pollable, token: u64) -> io::Result<()> {
+            self.registered.remove(&token);
+            Ok(())
+        }
+
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Duration) -> io::Result<()> {
+            out.clear();
+            let mut fds: Vec<PollFd> = Vec::with_capacity(self.registered.len());
+            let mut tokens: Vec<u64> = Vec::with_capacity(self.registered.len());
+            for (&token, &(fd, interest)) in &self.registered {
+                let mut events = 0i16;
+                if interest.readable {
+                    events |= POLLIN;
+                }
+                if interest.writable {
+                    events |= POLLOUT;
+                }
+                fds.push(PollFd {
+                    fd,
+                    events,
+                    revents: 0,
+                });
+                tokens.push(token);
+            }
+            let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+            let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, ms) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for (pfd, &token) in fds.iter().zip(&tokens) {
+                let r = pfd.revents;
+                if r == 0 {
+                    continue;
+                }
+                out.push(Event {
+                    token,
+                    readable: r & POLLIN != 0,
+                    writable: r & POLLOUT != 0,
+                    closed: r & (POLLERR | POLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    use super::{Event, Interest, Pollable};
+    use std::collections::HashMap;
+    use std::io;
+    use std::time::Duration;
+
+    /// Portability fallback: a timed tick that reports every registered
+    /// source as ready. Sockets are nonblocking, so a spurious "ready"
+    /// costs one `WouldBlock` syscall per tick — a bounded busy-poll,
+    /// never a hang or a missed byte.
+    pub struct Poller {
+        registered: HashMap<u64, Interest>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller {
+                registered: HashMap::new(),
+            })
+        }
+
+        pub fn register(
+            &mut self,
+            _src: &impl Pollable,
+            token: u64,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.registered.insert(token, interest);
+            Ok(())
+        }
+
+        pub fn modify(
+            &mut self,
+            _src: &impl Pollable,
+            token: u64,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.registered.insert(token, interest);
+            Ok(())
+        }
+
+        pub fn deregister(&mut self, _src: &impl Pollable, token: u64) -> io::Result<()> {
+            self.registered.remove(&token);
+            Ok(())
+        }
+
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Duration) -> io::Result<()> {
+            out.clear();
+            std::thread::sleep(timeout.min(Duration::from_millis(10)));
+            for (&token, &interest) in &self.registered {
+                out.push(Event {
+                    token,
+                    readable: interest.readable,
+                    writable: interest.writable,
+                    closed: false,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+
+    #[test]
+    fn reports_readability_and_honors_write_interest() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        let mut poller = Poller::new().unwrap();
+        poller.register(&server, 7, Interest::READ).unwrap();
+
+        // Nothing to read yet: a short wait returns no read event for
+        // the token (the tick backend may report spurious readiness;
+        // skip the emptiness assertion there).
+        let mut events = Vec::new();
+        #[cfg(unix)]
+        {
+            poller.wait(&mut events, Duration::from_millis(20)).unwrap();
+            assert!(events.iter().all(|e| e.token != 7 || !e.readable || e.closed));
+        }
+
+        client.write_all(b"ping").unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        let mut saw_read = false;
+        while std::time::Instant::now() < deadline && !saw_read {
+            poller.wait(&mut events, Duration::from_millis(50)).unwrap();
+            saw_read = events.iter().any(|e| e.token == 7 && e.readable);
+        }
+        assert!(saw_read, "data on the socket must surface as readable");
+        let mut buf = [0u8; 4];
+        (&server).read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"ping");
+
+        // Write interest on an idle socket reports writable promptly.
+        poller.modify(&server, 7, Interest::READ_WRITE).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        let mut saw_write = false;
+        while std::time::Instant::now() < deadline && !saw_write {
+            poller.wait(&mut events, Duration::from_millis(50)).unwrap();
+            saw_write = events.iter().any(|e| e.token == 7 && e.writable);
+        }
+        assert!(saw_write, "an idle socket must report writable");
+
+        poller.deregister(&server, 7).unwrap();
+        poller.wait(&mut events, Duration::from_millis(20)).unwrap();
+        assert!(events.iter().all(|e| e.token != 7));
+    }
+}

@@ -1,10 +1,12 @@
 //! Length-prefixed binary wire protocol for remote shards (decode *and*
 //! prefill).
 //!
-//! One frame on the wire is `[u32 LE payload length][payload]`, where the
-//! payload is `[u8 tag][fields...]` with all integers little-endian and
-//! `f64` as LE bit patterns. The frame set mirrors the dispatch-core
-//! message vocabulary, so both shard roles ride one protocol:
+//! One frame on the wire is `[u32 LE payload length][u32 LE stream
+//! id][payload]`, where the payload is `[u8 tag][fields...]` with all
+//! integers little-endian and `f64` as LE bit patterns. The [`StreamId`]
+//! multiplexes independent in-flight transfers over one connection (see
+//! [`STREAM_CONTROL`]); the frame set mirrors the dispatch-core message
+//! vocabulary, so both shard roles ride one protocol:
 //!
 //! | direction | frame | dispatch-core meaning |
 //! |---|---|---|
@@ -63,7 +65,31 @@ use std::time::{Duration, Instant};
 /// [`KvCodec`], `HelloAck` advertises the shard's peer port), and the
 /// direct prefill→decode transfer frames (`PeerHello`/`PeerHelloAck`,
 /// `HandoffCommit`/`HandoffAck`, per-job [`DirectTarget`]s) exist.
-pub const PROTO_VERSION: u32 = 3;
+/// v4: the frame header grows a [`StreamId`] (`[u32 len][u32 stream]`),
+/// so N in-flight KV handoffs multiplex one connection per peer pair
+/// without serializing behind each other.
+pub const PROTO_VERSION: u32 = 4;
+
+/// Logical stream a frame belongs to within one connection. Streams let
+/// independent in-flight transfers (e.g. two concurrent KV handoffs to
+/// the same decode shard) interleave their frames on a shared socket:
+/// the sender's outbound queue drains round-robin across streams, and a
+/// receiver keys reassembly state by job id, so per-stream FIFO order is
+/// all the protocol requires. Stream ids are allocated by the sender and
+/// carry no meaning beyond "frames with the same id are ordered".
+pub type StreamId = u32;
+
+/// The control stream: handshakes, pings, acks, and every frame that
+/// predates multiplexing. [`write_frame`] always sends on this stream.
+pub const STREAM_CONTROL: StreamId = 0;
+
+/// Bulk-lane stream for one job's transfer frames: nonzero (never the
+/// control stream), derived from the job id. Collisions between jobs
+/// are harmless — sharing a stream only means their frames drain FIFO
+/// instead of round-robin.
+pub fn job_stream(id: u64) -> StreamId {
+    ((id as u32) << 1) | 1
+}
 
 /// Upper bound on one frame's payload (guards against a corrupt length
 /// prefix allocating unbounded memory). Sized for an `Admit` carrying
@@ -648,19 +674,25 @@ pub fn admit_payload_bound(codec: KvCodec, k_len: usize, v_len: usize) -> u64 {
     64 + codec.payload_bound(k_len) as u64 + codec.payload_bound(v_len) as u64
 }
 
-/// Encode one frame body into `buf` behind a 4-byte length prefix that is
-/// backpatched once the body is complete. `body_size` pre-reserves so a
-/// steady-state caller (same-shape frames into one reused buffer) never
-/// reallocates.
-fn frame_scaffold(buf: &mut Vec<u8>, body_size: usize, body: impl FnOnce(&mut Enc)) {
+/// Encode one frame body into `buf` behind the 8-byte
+/// `[u32 len][u32 stream]` header, the length backpatched once the body
+/// is complete. `body_size` pre-reserves so a steady-state caller
+/// (same-shape frames into one reused buffer) never reallocates.
+fn frame_scaffold(
+    buf: &mut Vec<u8>,
+    stream: StreamId,
+    body_size: usize,
+    body: impl FnOnce(&mut Enc),
+) {
     buf.clear();
-    buf.reserve(4 + body_size);
+    buf.reserve(8 + body_size);
     let mut e = Enc(std::mem::take(buf));
-    e.0.extend_from_slice(&[0u8; 4]);
+    e.0.extend_from_slice(&[0u8; 8]);
     body(&mut e);
     *buf = e.0;
-    let len = (buf.len() - 4) as u32;
+    let len = (buf.len() - 8) as u32;
     buf[..4].copy_from_slice(&len.to_le_bytes());
+    buf[4..8].copy_from_slice(&stream.to_le_bytes());
 }
 
 /// Serialize one length-prefixed [`Frame::Admit`] into `buf` (cleared
@@ -676,6 +708,7 @@ fn frame_scaffold(buf: &mut Vec<u8>, body_size: usize, body: impl FnOnce(&mut En
 pub fn admit_frame_into(
     buf: &mut Vec<u8>,
     kv_wire: KvCodec,
+    stream: StreamId,
     unit: u32,
     id: u64,
     first_token: i32,
@@ -687,6 +720,7 @@ pub fn admit_frame_into(
     let mut kv_bytes = 0usize;
     frame_scaffold(
         buf,
+        stream,
         25 + 2 * KV_BLOCK_HEADER + kv_wire.payload_bound(k.len()) + kv_wire.payload_bound(v.len()),
         |e| {
             e.u8(TAG_ADMIT);
@@ -705,9 +739,11 @@ pub fn admit_frame_into(
 /// (cleared first), borrowing the chunk's elements from the prefill
 /// outcome — the KV-handoff hot path, same single-buffer discipline as
 /// [`admit_frame_into`]. Returns the coded block's wire size.
+#[allow(clippy::too_many_arguments)]
 pub fn kv_segment_frame_into(
     buf: &mut Vec<u8>,
     kv_wire: KvCodec,
+    stream: StreamId,
     id: u64,
     half: KvHalf,
     offset: u32,
@@ -717,6 +753,7 @@ pub fn kv_segment_frame_into(
     let mut kv_bytes = 0usize;
     frame_scaffold(
         buf,
+        stream,
         18 + KV_BLOCK_HEADER + kv_wire.payload_bound(data.len()),
         |e| {
             e.u8(TAG_KV_SEGMENT);
@@ -734,9 +771,11 @@ pub fn kv_segment_frame_into(
 /// borrow-encoding each chunk into `buf` (reused across chunks). Shared
 /// by the relay and direct-transfer senders so the two routes cannot
 /// drift in framing; stops at the first `emit` error.
+#[allow(clippy::too_many_arguments)]
 pub fn each_kv_segment<E>(
     buf: &mut Vec<u8>,
     codec: KvCodec,
+    stream: StreamId,
     id: u64,
     chunk_elems: usize,
     k: &[f32],
@@ -748,7 +787,7 @@ pub fn each_kv_segment<E>(
         let mut off = 0usize;
         while off < data.len() {
             let end = (off + chunk_elems.max(1)).min(data.len());
-            kv_segment_frame_into(buf, codec, id, half, off as u32, total, &data[off..end]);
+            kv_segment_frame_into(buf, codec, stream, id, half, off as u32, total, &data[off..end]);
             emit(buf)?;
             off = end;
         }
@@ -1105,19 +1144,33 @@ pub fn decode(buf: &[u8]) -> Result<Frame, ProtoError> {
     Ok(f)
 }
 
-/// Write one length-prefixed frame. The whole frame is serialized first
-/// and written with one `write_all`, so a frame is never interleaved
-/// with another writer's bytes as long as callers serialize writes.
+/// Write one frame on the control stream. The whole frame is serialized
+/// first and written with one `write_all`, so a frame is never
+/// interleaved with another writer's bytes as long as callers serialize
+/// writes.
 pub fn write_frame<W: Write>(w: &mut W, f: &Frame) -> std::io::Result<()> {
+    write_frame_on(w, STREAM_CONTROL, f)
+}
+
+/// Write one frame on an explicit stream (same single-`write_all`
+/// discipline as [`write_frame`]).
+pub fn write_frame_on<W: Write>(w: &mut W, stream: StreamId, f: &Frame) -> std::io::Result<()> {
+    w.write_all(&frame_bytes_on(stream, f))
+}
+
+/// Serialize one complete wire frame (`[u32 len][u32 stream][payload]`)
+/// for callers that enqueue bytes instead of writing a socket directly.
+pub fn frame_bytes_on(stream: StreamId, f: &Frame) -> Vec<u8> {
     let payload = encode(f);
-    let mut out = Vec::with_capacity(4 + payload.len());
+    let mut out = Vec::with_capacity(8 + payload.len());
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&stream.to_le_bytes());
     out.extend_from_slice(&payload);
-    w.write_all(&out)
+    out
 }
 
 enum ReadState {
-    /// Filling the 4-byte length prefix.
+    /// Filling the 8-byte `[u32 len][u32 stream]` header.
     Header,
     /// Filling a payload (`buf` is sized to the decoded length).
     Payload,
@@ -1134,6 +1187,9 @@ pub struct FrameReader {
     buf: Vec<u8>,
     filled: usize,
     consumed: u64,
+    /// Stream id from the frame header being read (valid once the
+    /// header is complete; reported by [`FrameReader::poll_stream`]).
+    stream: StreamId,
 }
 
 impl Default for FrameReader {
@@ -1147,9 +1203,10 @@ impl FrameReader {
     pub fn new() -> Self {
         FrameReader {
             state: ReadState::Header,
-            buf: vec![0; 4],
+            buf: vec![0; 8],
             filled: 0,
             consumed: 0,
+            stream: STREAM_CONTROL,
         }
     }
 
@@ -1162,15 +1219,26 @@ impl FrameReader {
 
     fn reset_frame(&mut self) {
         self.state = ReadState::Header;
-        self.buf = vec![0; 4];
+        self.buf = vec![0; 8];
         self.filled = 0;
     }
 
     /// Drive the reader with one blocking-with-timeout source. Returns
     /// `Ok(Some(frame))` when a full frame is available, `Ok(None)` on a
     /// read timeout (partial progress is preserved), or an error on EOF /
-    /// transport failure / malformed frame.
+    /// transport failure / malformed frame. Stream-agnostic consumers
+    /// (the scheduler planes, where every frame is stand-alone) use
+    /// this; multiplexed consumers use [`FrameReader::poll_stream`].
     pub fn poll<R: Read>(&mut self, r: &mut R) -> Result<Option<Frame>, ProtoError> {
+        Ok(self.poll_stream(r)?.map(|(_, f)| f))
+    }
+
+    /// Like [`FrameReader::poll`], but reports the [`StreamId`] from the
+    /// frame header alongside the frame.
+    pub fn poll_stream<R: Read>(
+        &mut self,
+        r: &mut R,
+    ) -> Result<Option<(StreamId, Frame)>, ProtoError> {
         loop {
             while self.filled < self.buf.len() {
                 match r.read(&mut self.buf[self.filled..]) {
@@ -1192,14 +1260,16 @@ impl FrameReader {
                     if len > MAX_FRAME {
                         return Err(ProtoError::Oversize(len));
                     }
+                    self.stream = u32::from_le_bytes(self.buf[4..8].try_into().unwrap());
                     self.state = ReadState::Payload;
                     self.buf = vec![0; len as usize];
                     self.filled = 0;
                 }
                 ReadState::Payload => {
                     let frame = decode(&self.buf)?;
+                    let stream = self.stream;
                     self.reset_frame();
-                    return Ok(Some(frame));
+                    return Ok(Some((stream, frame)));
                 }
             }
         }
@@ -1444,7 +1514,8 @@ mod tests {
         )
         .unwrap();
         let mut buf = Vec::new();
-        let kv_bytes = admit_frame_into(&mut buf, KvCodec::Raw, 3, 99, 7, 5, 11, &k, &v);
+        let kv_bytes =
+            admit_frame_into(&mut buf, KvCodec::Raw, STREAM_CONTROL, 3, 99, 7, 5, 11, &k, &v);
         assert_eq!(buf, wire, "admit borrow encoder must be byte-identical");
         assert_eq!(
             kv_bytes,
@@ -1465,8 +1536,31 @@ mod tests {
         )
         .unwrap();
         let mut buf = Vec::new();
-        kv_segment_frame_into(&mut buf, KvCodec::Raw, 99, KvHalf::V, 128, 4096, &k);
+        kv_segment_frame_into(&mut buf, KvCodec::Raw, STREAM_CONTROL, 99, KvHalf::V, 128, 4096, &k);
         assert_eq!(buf, wire, "kv-segment borrow encoder must be byte-identical");
+    }
+
+    #[test]
+    fn stream_ids_round_trip_through_header_and_reader() {
+        let mut wire = Vec::new();
+        write_frame_on(&mut wire, 7, &Frame::HandoffAck { id: 1 }).unwrap();
+        write_frame_on(&mut wire, 12, &Frame::HandoffAck { id: 2 }).unwrap();
+        write_frame(&mut wire, &Frame::StatsRequest).unwrap();
+        let mut buf = Vec::new();
+        kv_segment_frame_into(&mut buf, KvCodec::Raw, 7, 1, KvHalf::K, 0, 4, &[1.0; 4]);
+        wire.extend_from_slice(&buf);
+        let mut reader = FrameReader::new();
+        let mut src = wire.as_slice();
+        let mut got = Vec::new();
+        while let Ok(Some((s, f))) = reader.poll_stream(&mut src) {
+            got.push((s, f));
+        }
+        assert_eq!(got.len(), 4);
+        assert_eq!(got[0].0, 7);
+        assert_eq!(got[1].0, 12);
+        assert_eq!(got[2].0, STREAM_CONTROL, "write_frame sends on the control stream");
+        assert_eq!(got[3].0, 7, "borrow encoders stamp the stream header");
+        assert!(matches!(got[3].1, Frame::KvSegment { id: 1, .. }));
     }
 
     /// Representative KV content: fp16-exact values (multiples of 2⁻⁴)
@@ -1482,8 +1576,9 @@ mod tests {
         let v: Vec<f32> = kv_pattern(3000).iter().map(|x| -x).collect();
         for codec in [KvCodec::Raw, KvCodec::Fp16, KvCodec::Lz] {
             let mut buf = Vec::new();
-            let kv_bytes = admit_frame_into(&mut buf, codec, 2, 77, 9, 3000, 5, &k, &v);
-            let frame = decode(&buf[4..]).unwrap_or_else(|e| panic!("{}: {e}", codec.name()));
+            let kv_bytes =
+                admit_frame_into(&mut buf, codec, STREAM_CONTROL, 2, 77, 9, 3000, 5, &k, &v);
+            let frame = decode(&buf[8..]).unwrap_or_else(|e| panic!("{}: {e}", codec.name()));
             let Frame::Admit { id: 77, k: dk, v: dv, .. } = frame else {
                 panic!("wrong frame: {frame:?}")
             };
@@ -1505,8 +1600,17 @@ mod tests {
         let mut rng = Rng::new(0xF16);
         let data: Vec<f32> = (0..4096).map(|_| rng.uniform(-100.0, 100.0) as f32).collect();
         let mut buf = Vec::new();
-        kv_segment_frame_into(&mut buf, KvCodec::Fp16, 5, KvHalf::K, 0, 4096, &data);
-        let Frame::KvSegment { data: back, .. } = decode(&buf[4..]).unwrap() else {
+        kv_segment_frame_into(
+            &mut buf,
+            KvCodec::Fp16,
+            STREAM_CONTROL,
+            5,
+            KvHalf::K,
+            0,
+            4096,
+            &data,
+        );
+        let Frame::KvSegment { data: back, .. } = decode(&buf[8..]).unwrap() else {
             panic!("wrong frame")
         };
         for (a, b) in data.iter().zip(&back) {
@@ -1521,8 +1625,17 @@ mod tests {
         for _ in 0..20 {
             let data: Vec<f32> = (0..rng.below(5000)).map(|_| rng.f64() as f32).collect();
             let mut buf = Vec::new();
-            kv_segment_frame_into(&mut buf, KvCodec::Lz, 5, KvHalf::V, 0, data.len() as u32, &data);
-            let Frame::KvSegment { data: back, .. } = decode(&buf[4..]).unwrap() else {
+            kv_segment_frame_into(
+                &mut buf,
+                KvCodec::Lz,
+                STREAM_CONTROL,
+                5,
+                KvHalf::V,
+                0,
+                data.len() as u32,
+                &data,
+            );
+            let Frame::KvSegment { data: back, .. } = decode(&buf[8..]).unwrap() else {
                 panic!("wrong frame")
             };
             assert_eq!(back, data, "lz must be bit-exact");
@@ -1534,8 +1647,8 @@ mod tests {
         let k = kv_pattern(600);
         for codec in [KvCodec::Raw, KvCodec::Fp16, KvCodec::Lz] {
             let mut buf = Vec::new();
-            admit_frame_into(&mut buf, codec, 0, 1, 0, 600, 4, &k, &k);
-            let payload = &buf[4..];
+            admit_frame_into(&mut buf, codec, STREAM_CONTROL, 0, 1, 0, 600, 4, &k, &k);
+            let payload = &buf[8..];
             for cut in 0..payload.len() {
                 assert!(
                     decode(&payload[..cut]).is_err(),
@@ -1544,8 +1657,8 @@ mod tests {
                 );
             }
             let mut buf = Vec::new();
-            kv_segment_frame_into(&mut buf, codec, 1, KvHalf::K, 0, 600, &k);
-            let payload = &buf[4..];
+            kv_segment_frame_into(&mut buf, codec, STREAM_CONTROL, 1, KvHalf::K, 0, 600, &k);
+            let payload = &buf[8..];
             for cut in 0..payload.len() {
                 assert!(
                     decode(&payload[..cut]).is_err(),
@@ -1559,20 +1672,29 @@ mod tests {
     #[test]
     fn corrupt_codec_byte_and_element_count_rejected() {
         let mut buf = Vec::new();
-        kv_segment_frame_into(&mut buf, KvCodec::Raw, 1, KvHalf::K, 0, 4, &[1.0, 2.0, 3.0, 4.0]);
+        kv_segment_frame_into(
+            &mut buf,
+            KvCodec::Raw,
+            STREAM_CONTROL,
+            1,
+            KvHalf::K,
+            0,
+            4,
+            &[1.0, 2.0, 3.0, 4.0],
+        );
         // The codec byte sits right after id(8)+half(1)+offset(4)+total(4)
         // past the tag; flip it to an unknown codec.
-        let codec_at = 4 + 1 + 8 + 1 + 4 + 4;
+        let codec_at = 8 + 1 + 8 + 1 + 4 + 4;
         let mut bad = buf.clone();
         bad[codec_at] = 7;
         assert!(matches!(
-            decode(&bad[4..]),
+            decode(&bad[8..]),
             Err(ProtoError::BadValue("kv codec"))
         ));
         // A huge element count must fail before allocating.
         let mut bad = buf.clone();
         bad[codec_at + 1..codec_at + 5].copy_from_slice(&u32::MAX.to_le_bytes());
-        assert!(decode(&bad[4..]).is_err());
+        assert!(decode(&bad[8..]).is_err());
     }
 
     #[test]
@@ -1588,18 +1710,18 @@ mod tests {
         let v = vec![2.0f32; 4096];
         for codec in [KvCodec::Raw, KvCodec::Fp16, KvCodec::Lz] {
             let mut buf = Vec::new();
-            admit_frame_into(&mut buf, codec, 0, 1, 0, 4, 4, &k, &v);
+            admit_frame_into(&mut buf, codec, STREAM_CONTROL, 0, 1, 0, 4, 4, &k, &v);
             let (ptr, cap) = (buf.as_ptr(), buf.capacity());
             for id in 2..32u64 {
-                admit_frame_into(&mut buf, codec, 0, id, 0, 4, 4, &k, &v);
+                admit_frame_into(&mut buf, codec, STREAM_CONTROL, 0, id, 0, 4, 4, &k, &v);
                 assert_eq!(buf.as_ptr(), ptr, "{}: admit encode reallocated", codec.name());
                 assert_eq!(buf.capacity(), cap, "{}: admit encode grew", codec.name());
             }
             let mut buf = Vec::new();
-            kv_segment_frame_into(&mut buf, codec, 1, KvHalf::K, 0, 8192, &k);
+            kv_segment_frame_into(&mut buf, codec, 1, 1, KvHalf::K, 0, 8192, &k);
             let (ptr, cap) = (buf.as_ptr(), buf.capacity());
             for off in 1..32u32 {
-                kv_segment_frame_into(&mut buf, codec, 1, KvHalf::K, off, 8192, &k);
+                kv_segment_frame_into(&mut buf, codec, 1, 1, KvHalf::K, off, 8192, &k);
                 assert_eq!(buf.as_ptr(), ptr, "{}: segment encode reallocated", codec.name());
                 assert_eq!(buf.capacity(), cap, "{}: segment encode grew", codec.name());
             }

@@ -5,53 +5,58 @@
 //! `HelloAck`; the scheduler holds one transport per unit
 //! ([`RemoteUnit`] / [`RemotePrefill`]), all sharing the connection.
 //!
-//! ## Locking discipline
+//! ## Event-driven IO
 //!
-//! A shard's state is split into two independent lock domains so the
-//! send path can never stall the event path:
+//! Connections are owned by the process-global [`NetDriver`]: one
+//! poller thread drives reads, writes and ticks for *every* shard, so
+//! scheduler-side transport threads are O(1) in shard count. Send
+//! paths no longer block on the socket — frames are encoded outside
+//! every lock (the KV-bearing hot paths borrow-serialize into a reused
+//! buffer, then hand the buffer to the outbound queue) and enqueued on
+//! the connection's two-lane queue:
 //!
-//! * **pending lock** — the table of in-flight request ids (decode:
-//!   admitted sequences; prefill: dispatched jobs plus their partially
-//!   assembled KV). Token/terminal delivery and eviction take only this
-//!   lock.
-//! * **writer lock** — the connection's write half. Frames are encoded
-//!   *outside* both locks (the KV-bearing hot paths borrow-serialize
-//!   into a per-transport reused buffer) and the blocking `write_all`
-//!   holds only the writer lock.
+//! * liveness pings and stats requests ride the **priority lane**, so
+//!   a bulk KV backlog can never starve RTT/liveness updates (the old
+//!   `try_lock`-skip ping path could be starved indefinitely by
+//!   sustained KV streaming);
+//! * `Admit` frames ride per-job streams in the **bulk lane**, where
+//!   the queue round-robins across streams at frame granularity.
 //!
-//! A slow or blocked socket write therefore delays other *writers*, but
-//! never Token/Done delivery from the same shard (the regression the
-//! old single-io-mutex design had — asserted by
-//! `blocked_admit_write_does_not_delay_token_delivery`). The reader's
-//! liveness pings use `try_lock` and skip when a write is in flight: an
-//! in-progress frame is itself keeping the shard's inbound-byte silence
-//! guard fed.
+//! A peer that stops draining its socket no longer blocks a writer
+//! thread: the backlog accumulates up to the queue's soft cap (new
+//! admits are refused, handing their jobs back to the scheduler) and
+//! the driver's write-stall guard kills the connection, which evicts
+//! the shard's pending work exactly like any other death.
 //!
 //! ## Failure semantics
 //!
-//! A dedicated reader thread owns the receive side. When the connection
-//! dies (EOF, reset, transport error) the reader: marks the shard dead
-//! and closes the write half (placements/dispatches stop immediately —
-//! `alive()` gates admissibility, and an in-flight registration that
-//! races the transition fails its write and unwinds itself), *then*
-//! drains the pending table and delivers the resident ids through the
-//! sinks' `on_evicted` so the scheduler releases their ledger charges
-//! and rejects them upstream — nothing leaks. It then retries the
+//! When the connection dies (EOF, reset, transport error, write
+//! stall) the handler: marks the shard dead (placements/dispatches
+//! stop immediately — `alive()` gates admissibility, and an in-flight
+//! registration that races the transition fails its enqueue and
+//! unwinds itself), *then* drains the pending table and delivers the
+//! resident ids through the sinks' `on_evicted` so the scheduler
+//! releases their ledger charges and rejects them upstream — nothing
+//! leaks. A transient reconnect thread then retries the
 //! connect/handshake loop with backoff until it succeeds (the shard
 //! aborts any stale state on a new handshake, so a reconnect starts
 //! clean) or the cluster stops.
 //!
 //! ## Liveness and RTT
 //!
-//! The reader heartbeats: a `Ping` every ping interval (busy or idle),
-//! with the `Pong` round trip published through the transport's
-//! `rtt_ms` and surfaced in the pool gauges (`STATS`). Silence — no
-//! inbound byte for `dead_after`, pings unanswered — declares the shard
-//! dead even without an EOF/RST (black-holed link), triggering the same
+//! The handler heartbeats from the driver tick: a `Ping` every ping
+//! interval (busy or idle) on the priority lane, with the `Pong`
+//! round trip published through the transport's `rtt_ms` and surfaced
+//! in the pool gauges (`STATS`). Silence — no inbound byte for
+//! `dead_after`, pings unanswered — declares the shard dead even
+//! without an EOF/RST (black-holed link), triggering the same
 //! evict-and-reconnect path. The steady ping cadence is also what the
 //! shard's own symmetric silence guard keys off.
 
-use super::proto::{self, DirectTarget, Frame, FrameReader, ProtoError, ShardRole, PROTO_VERSION};
+use super::driver::{ConnHandle, ConnHandler, ConnIo, ConnOptions, NetDriver};
+use super::proto::{
+    self, DirectTarget, Frame, FrameReader, ShardRole, StreamId, PROTO_VERSION, STREAM_CONTROL,
+};
 use super::{
     AdmitJob, DecodeTransport, KvCodec, KvWireCounters, PrefillSinks, PrefillTransport,
     PrefillWork, ShardSinks,
@@ -60,11 +65,15 @@ use crate::engine::PrefillOutcome;
 use crate::metrics::RequestMetrics;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
-use std::io::Write;
-use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, TryLockError};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Soft cap on a shard connection's outbound backlog (see
+/// [`ConnOptions::cap`]): past this, admits are refused and handed
+/// back to the scheduler rather than queued without bound.
+const OUTBOUND_CAP: u64 = 64 * 1024 * 1024;
 
 /// Tunables for one shard connection.
 #[derive(Debug, Clone)]
@@ -75,11 +84,12 @@ pub struct RemoteShardConfig {
     /// shard must echo it back).
     pub kv_wire: KvCodec,
     /// Initial connect + handshake budget (startup fails fast past it);
-    /// also the socket write timeout bounding a blocked writer.
+    /// also the write-stall bound — a peer that drains nothing for this
+    /// long while bytes are queued is declared dead.
     pub connect_timeout: Duration,
-    /// Socket read timeout — the reader's idle-tick cadence.
+    /// Socket read timeout during the blocking handshake.
     pub read_tick: Duration,
-    /// Quiet time before the reader sends a liveness ping.
+    /// Quiet time before the handler sends a liveness ping.
     pub ping_interval: Duration,
     /// Total silence (no frame of any kind, pings unanswered) after
     /// which the shard is declared dead even without an EOF/RST — the
@@ -105,13 +115,13 @@ impl RemoteShardConfig {
     }
 }
 
-/// Connection state shared by both shard roles: the write half, the
+/// Connection state shared by both shard roles: the driver handle, the
 /// liveness/RTT gauges and the reconnect identity (role + shape).
 struct ShardCore {
     cfg: RemoteShardConfig,
-    /// The connection's write half. Held only around `write_all` — never
-    /// while delivering events or touching the pending table.
-    writer: Mutex<Option<TcpStream>>,
+    /// Handle to the driver-owned connection; `None` between death and
+    /// a successful reconnect.
+    conn: Mutex<Option<ConnHandle>>,
     alive: AtomicBool,
     /// Last measured RTT, microseconds; 0 = not yet measured.
     rtt_us: AtomicU64,
@@ -151,7 +161,6 @@ fn peer_addr_of(addr: &str, peer_port: u16) -> Option<String> {
 impl ShardCore {
     fn new(
         cfg: RemoteShardConfig,
-        conn: TcpStream,
         role: ShardRole,
         units: u32,
         slots: u32,
@@ -161,7 +170,7 @@ impl ShardCore {
         let peer_addr = peer_addr_of(&cfg.addr, peer_port);
         ShardCore {
             cfg,
-            writer: Mutex::new(Some(conn)),
+            conn: Mutex::new(None),
             alive: AtomicBool::new(true),
             rtt_us: AtomicU64::new(0),
             stop: AtomicBool::new(false),
@@ -174,6 +183,10 @@ impl ShardCore {
             peer_addr: Mutex::new(peer_addr),
             relay_kv,
         }
+    }
+
+    fn handle(&self) -> Option<ConnHandle> {
+        self.conn.lock().unwrap().clone()
     }
 
     /// Throttled engine-truth gauge poll: at most one `StatsRequest` per
@@ -190,7 +203,13 @@ impl ShardCore {
             .compare_exchange(last, now, Ordering::Relaxed, Ordering::Relaxed)
             .is_ok()
         {
-            let _ = self.try_send_frame(&Frame::StatsRequest);
+            // Priority lane: a stats poll must not wait out a KV backlog.
+            if let Some(h) = self.handle() {
+                let _ = h.enqueue_priority(proto::frame_bytes_on(
+                    STREAM_CONTROL,
+                    &Frame::StatsRequest,
+                ));
+            }
         }
     }
 
@@ -210,58 +229,28 @@ impl ShardCore {
         }
     }
 
-    /// Write pre-encoded wire bytes under an already-held writer lock.
-    /// On failure the socket is shut down so the reader notices promptly
-    /// and runs eviction.
-    fn write_held(&self, w: &mut Option<TcpStream>, bytes: &[u8]) -> std::io::Result<()> {
-        let Some(conn) = w.as_mut() else {
+    /// Queue pre-encoded wire bytes on `stream`'s bulk lane. Fails when
+    /// the shard is disconnected or the backlog is over the cap — the
+    /// caller unwinds its registration and hands the job back.
+    fn send_wire(&self, stream: StreamId, bytes: Vec<u8>) -> std::io::Result<()> {
+        let Some(h) = self.handle() else {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::NotConnected,
                 "shard disconnected",
             ));
         };
-        match conn.write_all(bytes) {
-            Ok(()) => Ok(()),
-            Err(e) => {
-                let _ = conn.shutdown(Shutdown::Both);
-                *w = None;
-                self.alive.store(false, Ordering::SeqCst);
-                Err(e)
-            }
-        }
+        h.enqueue(stream, bytes)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::WouldBlock, e.to_string()))
     }
 
-    /// Write one pre-encoded length-prefixed frame, holding only the
-    /// writer lock for the (possibly blocking) socket write.
-    fn write_wire(&self, bytes: &[u8]) -> std::io::Result<()> {
-        let mut w = self.writer.lock().unwrap();
-        self.write_held(&mut w, bytes)
-    }
-
-    /// Encode + write one frame (cold paths: dispatch batches, Stop).
+    /// Encode + queue one control frame (cold paths: dispatch batches,
+    /// Stop).
     fn send_frame(&self, f: &Frame) -> std::io::Result<()> {
-        let mut buf = Vec::new();
-        proto::write_frame(&mut buf, f).expect("Vec write cannot fail");
-        self.write_wire(&buf)
-    }
-
-    /// Best-effort frame send that never waits on a busy writer (the
-    /// reader's ping path: a write already in flight is itself activity,
-    /// so skipping the ping loses nothing).
-    fn try_send_frame(&self, f: &Frame) -> std::io::Result<()> {
-        let mut buf = Vec::new();
-        proto::write_frame(&mut buf, f).expect("Vec write cannot fail");
-        match self.writer.try_lock() {
-            Ok(mut w) => self.write_held(&mut w, &buf),
-            Err(TryLockError::WouldBlock) => Ok(()),
-            Err(TryLockError::Poisoned(e)) => {
-                let mut w = e.into_inner();
-                self.write_held(&mut w, &buf)
-            }
-        }
+        self.send_wire(STREAM_CONTROL, proto::frame_bytes_on(STREAM_CONTROL, f))
     }
 
     /// First unit to stop speaks for the whole shard: ask it to drain.
+    /// The Stop rides the bulk lane, behind any already-queued work.
     fn stop_shard(&self) {
         if self.stop.swap(true, Ordering::SeqCst) {
             return;
@@ -276,9 +265,8 @@ impl ShardCore {
         if self.stop.swap(true, Ordering::SeqCst) {
             return;
         }
-        let mut w = self.writer.lock().unwrap();
-        if let Some(c) = w.take() {
-            let _ = c.shutdown(Shutdown::Both);
+        if let Some(h) = self.conn.lock().unwrap().take() {
+            h.close("detached");
         }
     }
 }
@@ -313,7 +301,9 @@ fn resolve(addr: &str) -> Result<std::net::SocketAddr> {
 
 /// Connect, exchange `Hello`/`HelloAck`, verify the advertised role and
 /// echoed codec, and return the ready stream plus the advertised shape
-/// (`units`, `slots`, `peer_port`).
+/// (`units`, `slots`, `peer_port`). Blocking — runs on the connecting
+/// thread (startup or a transient reconnect thread), never on the
+/// driver loop.
 fn connect_and_handshake(
     cfg: &RemoteShardConfig,
     want: ShardRole,
@@ -392,126 +382,167 @@ fn connect_and_handshake(
     }
 }
 
-/// Role-specific half of the shared reader loop: frame delivery and
-/// eviction against the role's pending table and sinks. `wire_len` is
-/// the frame's full on-wire size (length prefix included) — what the KV
+/// Role-specific half of the shared connection handler: frame delivery
+/// and eviction against the role's pending table and sinks. `wire_len`
+/// is the frame's full on-wire size (header included) — what the KV
 /// byte accounting charges for KV-bearing frames.
-trait ReaderPeer: Send {
+trait SchedPeer: Send + Sized + 'static {
     fn core(&self) -> &ShardCore;
     fn on_frame(&self, frame: Frame, wire_len: u64);
     /// Drain the pending table and deliver the evicted ids upstream.
-    /// Called only after the core is marked dead and the write half
-    /// closed (see the locking discipline in the module docs).
+    /// Called only after the core is marked dead and the handle cleared
+    /// (see the failure semantics in the module docs).
     fn on_death(&self);
+    /// Register this peer's connection with the driver and publish the
+    /// resulting handle in the core (consumes `self` into the handler).
+    fn attach(self, conn: TcpStream) -> std::io::Result<()>;
 }
 
-/// Receive side shared by both roles: deliver events, measure RTT, and
-/// on connection death evict + reconnect (see module docs).
-fn reader_loop<P: ReaderPeer>(peer: P, mut stream: TcpStream) {
-    let core = peer.core();
-    let addr = core.cfg.addr.clone();
-    'conn: loop {
-        let mut reader = FrameReader::new();
-        let mut idle = proto::IdleGuard::new(&reader);
-        let mut last_ping = Instant::now();
-        // `poll` returns the moment a frame completes, so the consumed
-        // delta between returned frames is exactly that frame's wire
-        // size (used by the KV byte accounting).
-        let mut consumed_at_last_frame = 0u64;
-        loop {
-            if core.stop.load(Ordering::SeqCst) {
-                break 'conn;
-            }
-            match reader.poll(&mut stream) {
-                Ok(Some(frame)) => {
-                    idle.touch();
-                    let wire_len = reader.consumed() - consumed_at_last_frame;
-                    consumed_at_last_frame = reader.consumed();
-                    peer.on_frame(frame, wire_len);
-                }
-                Ok(None) => {
-                    // Total silence with pings outstanding: the link is
-                    // black-holed (partition, frozen host) — no EOF/RST
-                    // will ever come, so declare death ourselves.
-                    if idle.idle_for(&reader) >= core.cfg.dead_after {
-                        log::warn!(
-                            "shard {addr}: no frames for {:?} (pings unanswered); declaring dead",
-                            core.cfg.dead_after
-                        );
-                        break;
-                    }
-                }
-                Err(ProtoError::Closed) => break,
-                Err(e) => {
-                    log::warn!("shard {addr}: receive failed: {e}");
-                    break;
-                }
-            }
-            // Heartbeat every ping interval, busy or idle: the pongs
-            // measure RTT, and the shard relies on this steady inbound
-            // cadence for its own symmetric silence-to-death guard. A
-            // busy writer (blocked mid-frame) is skipped, not waited on.
-            if last_ping.elapsed() >= core.cfg.ping_interval {
-                last_ping = Instant::now();
-                let ping = Frame::Ping {
-                    nonce: core.ping_nonce.fetch_add(1, Ordering::Relaxed),
-                    t_us: core.now_us(),
-                };
-                if core.try_send_frame(&ping).is_err() {
-                    break;
-                }
-            }
+/// Register `conn` with the global driver and publish the handle.
+///
+/// The handle is published *after* `add` (it does not exist earlier),
+/// so an immediately-dying connection can race: `on_close` clears the
+/// slot and this then stores a stale-but-closed handle with
+/// `alive = true`. Benign — every enqueue on it fails `Closed` (so
+/// admits unwind themselves), and the reconnect already spawned by
+/// `on_close` overwrites both fields when it lands.
+fn attach_shared<P: SchedPeer, T>(
+    peer: P,
+    shard: Arc<ShardState<T>>,
+    conn: TcpStream,
+) -> std::io::Result<()> {
+    let opts = ConnOptions {
+        cap: OUTBOUND_CAP,
+        stall_after: shard.core.cfg.connect_timeout,
+    };
+    let handler = SchedHandler {
+        peer: Some(peer),
+        last_consumed: 0,
+        last_activity: Instant::now(),
+        last_ping: Instant::now(),
+    };
+    let handle = NetDriver::global().add(conn, Box::new(handler), opts)?;
+    *shard.core.conn.lock().unwrap() = Some(handle);
+    shard.core.alive.store(true, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Driver-side handler shared by both roles: deliver events, heartbeat
+/// on the priority lane, watch for silence, and on death evict +
+/// reconnect (see module docs). Owns the role peer; hands it to a
+/// transient reconnect thread when the connection dies.
+struct SchedHandler<P: SchedPeer> {
+    peer: Option<P>,
+    last_consumed: u64,
+    last_activity: Instant,
+    last_ping: Instant,
+}
+
+impl<P: SchedPeer> ConnHandler for SchedHandler<P> {
+    fn on_frame(&mut self, _io: &mut ConnIo<'_>, _stream: StreamId, frame: Frame, wire_len: u64) {
+        self.last_activity = Instant::now();
+        if let Some(peer) = &self.peer {
+            peer.on_frame(frame, wire_len);
         }
-        // The connection is dead. Order matters: mark unplaceable and
-        // close the write half *first*, then evict — a registration that
-        // races this either lands before the eviction sweep (and is
-        // evicted) or fails its write and unwinds itself.
+    }
+
+    fn on_tick(&mut self, io: &mut ConnIo<'_>) {
+        let Some(peer) = &self.peer else { return };
+        let core = peer.core();
+        // Byte-granular silence guard: consumed-byte progress counts as
+        // activity, so a large frame trickling in never reads as
+        // silence (same contract as the old IdleGuard).
+        if io.consumed() != self.last_consumed {
+            self.last_consumed = io.consumed();
+            self.last_activity = Instant::now();
+        }
+        if self.last_activity.elapsed() >= core.cfg.dead_after {
+            log::warn!(
+                "shard {}: no frames for {:?} (pings unanswered); declaring dead",
+                core.cfg.addr,
+                core.cfg.dead_after
+            );
+            io.close();
+            return;
+        }
+        // Heartbeat every ping interval, busy or idle, on the priority
+        // lane: a bulk KV backlog cannot starve liveness (the fix for
+        // the old try_lock-skip path, which dropped pings for as long
+        // as a writer stayed saturated).
+        if self.last_ping.elapsed() >= core.cfg.ping_interval {
+            self.last_ping = Instant::now();
+            let ping = Frame::Ping {
+                nonce: core.ping_nonce.fetch_add(1, Ordering::Relaxed),
+                t_us: core.now_us(),
+            };
+            io.enqueue_priority(proto::frame_bytes_on(STREAM_CONTROL, &ping));
+        }
+    }
+
+    fn on_close(&mut self, reason: &str) {
+        let Some(peer) = self.peer.take() else { return };
+        let core = peer.core();
+        let addr = core.cfg.addr.clone();
+        // Order matters: mark unplaceable and clear the handle *first*,
+        // then evict — a registration that races this either lands
+        // before the eviction sweep (and is evicted) or fails its
+        // enqueue and unwinds itself.
         core.alive.store(false, Ordering::SeqCst);
-        {
-            let mut w = core.writer.lock().unwrap();
-            if let Some(c) = w.take() {
-                let _ = c.shutdown(Shutdown::Both);
-            }
-        }
+        *core.conn.lock().unwrap() = None;
         peer.on_death();
         if core.stop.load(Ordering::SeqCst) {
-            break;
+            return;
         }
-        // Reconnect with backoff until the shard returns or we stop.
-        log::info!("shard {addr}: reconnecting");
-        loop {
-            std::thread::sleep(core.cfg.reconnect_backoff);
-            if core.stop.load(Ordering::SeqCst) {
-                break 'conn;
-            }
-            match connect_and_handshake(&core.cfg, core.role) {
-                Ok((conn, units, slots, peer_port)) => {
-                    // The scheduler's pool was sized to the original
-                    // shape; a replacement with a different one would
-                    // leave phantom units that it rejects every
-                    // placement for. Refuse it and keep retrying (the
-                    // shard stays visibly dead in the gauges).
-                    if units != core.units || slots != core.slots {
-                        log::error!(
-                            "shard {addr}: replacement advertises {units}×{slots} but the \
-                             pool was built for {}×{}; refusing to rejoin",
-                            core.units,
-                            core.slots
-                        );
-                        continue;
-                    }
-                    log::info!("shard {addr}: reconnected ({units} {} units)", core.role.name());
-                    let Ok(rs) = conn.try_clone() else { continue };
-                    // A replacement process rebinds its peer listener, so
-                    // direct targets must track the fresh port.
-                    *core.peer_addr.lock().unwrap() = peer_addr_of(&core.cfg.addr, peer_port);
-                    *core.writer.lock().unwrap() = Some(conn);
-                    core.alive.store(true, Ordering::SeqCst);
-                    stream = rs;
-                    continue 'conn;
+        log::info!("shard {addr}: connection lost ({reason}); reconnecting");
+        // Reconnect on a transient thread: the blocking
+        // connect/handshake must not stall the driver loop serving
+        // every other shard.
+        std::thread::spawn(move || reconnect_loop(peer));
+    }
+}
+
+/// Retry connect/handshake with backoff until the shard returns (with
+/// its original shape) or the cluster stops.
+fn reconnect_loop<P: SchedPeer>(mut peer: P) {
+    loop {
+        std::thread::sleep(peer.core().cfg.reconnect_backoff);
+        if peer.core().stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let addr = peer.core().cfg.addr.clone();
+        match connect_and_handshake(&peer.core().cfg, peer.core().role) {
+            Ok((conn, units, slots, peer_port)) => {
+                // The scheduler's pool was sized to the original shape;
+                // a replacement with a different one would leave phantom
+                // units that it rejects every placement for. Refuse it
+                // and keep retrying (the shard stays visibly dead in the
+                // gauges).
+                if units != peer.core().units || slots != peer.core().slots {
+                    log::error!(
+                        "shard {addr}: replacement advertises {units}×{slots} but the \
+                         pool was built for {}×{}; refusing to rejoin",
+                        peer.core().units,
+                        peer.core().slots
+                    );
+                    continue;
                 }
-                Err(e) => log::debug!("shard {addr}: reconnect attempt failed: {e:#}"),
+                // A replacement process rebinds its peer listener, so
+                // direct targets must track the fresh port.
+                *peer.core().peer_addr.lock().unwrap() =
+                    peer_addr_of(&peer.core().cfg.addr, peer_port);
+                log::info!(
+                    "shard {addr}: reconnected ({units} {} units)",
+                    peer.core().role.name()
+                );
+                match peer.attach(conn) {
+                    Ok(()) => return,
+                    Err(e) => {
+                        log::warn!("shard {addr}: attach after reconnect failed: {e}");
+                        return;
+                    }
+                }
             }
+            Err(e) => log::debug!("shard {addr}: reconnect attempt failed: {e:#}"),
         }
     }
 }
@@ -523,7 +554,7 @@ struct DecodePeer {
     sinks: ShardSinks,
 }
 
-impl ReaderPeer for DecodePeer {
+impl SchedPeer for DecodePeer {
     fn core(&self) -> &ShardCore {
         &self.shard.core
     }
@@ -580,6 +611,11 @@ impl ReaderPeer for DecodePeer {
             (self.sinks.on_evicted)(resident);
         }
     }
+
+    fn attach(self, conn: TcpStream) -> std::io::Result<()> {
+        let shard = Arc::clone(&self.shard);
+        attach_shared(self, shard, conn)
+    }
 }
 
 /// Connect to a decode shard and return one [`RemoteUnit`] transport per
@@ -593,18 +629,15 @@ pub fn connect_shard(
     relay_kv: Arc<KvWireCounters>,
 ) -> Result<Vec<RemoteUnit>> {
     let (conn, units, slots, peer_port) = connect_and_handshake(&cfg, ShardRole::Decode)?;
-    let reader_stream = conn.try_clone()?;
     let shard = Arc::new(ShardState {
-        core: ShardCore::new(cfg, conn, ShardRole::Decode, units, slots, peer_port, relay_kv),
+        core: ShardCore::new(cfg, ShardRole::Decode, units, slots, peer_port, relay_kv),
         pending: Mutex::new(HashMap::new()),
     });
-    {
-        let peer = DecodePeer {
-            shard: shard.clone(),
-            sinks,
-        };
-        std::thread::spawn(move || reader_loop(peer, reader_stream));
-    }
+    let peer = DecodePeer {
+        shard: shard.clone(),
+        sinks,
+    };
+    peer.attach(conn)?;
     Ok((0..units)
         .map(|u| RemoteUnit {
             shard: shard.clone(),
@@ -621,9 +654,10 @@ pub struct RemoteUnit {
     shard: Arc<DecodeShard>,
     unit: u32,
     slots: u32,
-    /// Reused wire buffer for borrow-encoded `Admit` frames (KV is
-    /// serialized straight from the prefill outcome — no intermediate
-    /// copies, no steady-state allocation).
+    /// Wire buffer for borrow-encoded `Admit` frames: KV is serialized
+    /// straight from the prefill outcome (no intermediate copies), then
+    /// the buffer's ownership passes to the outbound queue — one
+    /// allocation per admit, zero extra copies.
     wbuf: Vec<u8>,
 }
 
@@ -661,20 +695,23 @@ impl DecodeTransport for RemoteUnit {
         if !self.alive() {
             return Err(job);
         }
-        // Register before writing: a fast Done can only arrive after the
-        // write lands, and an eviction sweeping the table will include
-        // this id if the shard dies mid-write (a failed write removes it
-        // again below — double release is guarded upstream).
+        // Register before queueing: a fast Done can only arrive after
+        // the frame lands, and an eviction sweeping the table will
+        // include this id if the shard dies with the frame still queued
+        // (a failed enqueue removes it again below — double release is
+        // guarded upstream).
         self.shard
             .pending
             .lock()
             .unwrap()
             .insert(job.id, job.metrics);
-        // Borrow-encode outside every lock, write under the writer lock
-        // only: a slow write here must not delay event delivery.
+        // Each admit rides its own stream, so concurrent bulk frames
+        // round-robin on the wire instead of serializing.
+        let stream = proto::job_stream(job.id);
         proto::admit_frame_into(
             &mut self.wbuf,
             codec,
+            stream,
             self.unit,
             job.id,
             job.outcome.first_token,
@@ -683,20 +720,25 @@ impl DecodeTransport for RemoteUnit {
             &job.outcome.k,
             &job.outcome.v,
         );
-        match self.shard.core.write_wire(&self.wbuf) {
+        let wire_len = self.wbuf.len() as u64;
+        match self
+            .shard
+            .core
+            .send_wire(stream, std::mem::take(&mut self.wbuf))
+        {
             Ok(()) => {
                 // Whole-frame accounting, matching the receiver side
                 // (shards charge full frame lengths for KV-bearing
                 // frames), so relay and shard gauges stay comparable.
                 self.shard.core.relay_kv.record(
-                    self.wbuf.len() as u64,
+                    wire_len,
                     4 * (job.outcome.k.len() as u64 + job.outcome.v.len() as u64),
                 );
                 Ok(())
             }
             Err(e) => {
                 self.shard.pending.lock().unwrap().remove(&job.id);
-                log::warn!("shard {}: admit failed: {e}", self.shard.core.cfg.addr);
+                log::warn!("shard {}: admit refused: {e}", self.shard.core.cfg.addr);
                 Err(job)
             }
         }
@@ -762,7 +804,7 @@ impl PrefillPeer {
     }
 }
 
-impl ReaderPeer for PrefillPeer {
+impl SchedPeer for PrefillPeer {
     fn core(&self) -> &ShardCore {
         &self.shard.core
     }
@@ -880,6 +922,11 @@ impl ReaderPeer for PrefillPeer {
             (self.sinks.on_evicted)(queued);
         }
     }
+
+    fn attach(self, conn: TcpStream) -> std::io::Result<()> {
+        let shard = Arc::clone(&self.shard);
+        attach_shared(self, shard, conn)
+    }
 }
 
 /// Connect to a prefill shard and return one [`RemotePrefill`] transport
@@ -891,18 +938,15 @@ pub fn connect_prefill_shard(
     relay_kv: Arc<KvWireCounters>,
 ) -> Result<Vec<RemotePrefill>> {
     let (conn, units, slots, peer_port) = connect_and_handshake(&cfg, ShardRole::Prefill)?;
-    let reader_stream = conn.try_clone()?;
     let shard = Arc::new(ShardState {
-        core: ShardCore::new(cfg, conn, ShardRole::Prefill, units, slots, peer_port, relay_kv),
+        core: ShardCore::new(cfg, ShardRole::Prefill, units, slots, peer_port, relay_kv),
         pending: Mutex::new(HashMap::new()),
     });
-    {
-        let peer = PrefillPeer {
-            shard: shard.clone(),
-            sinks,
-        };
-        std::thread::spawn(move || reader_loop(peer, reader_stream));
-    }
+    let peer = PrefillPeer {
+        shard: shard.clone(),
+        sinks,
+    };
+    peer.attach(conn)?;
     Ok((0..units)
         .map(|u| RemotePrefill {
             shard: shard.clone(),
@@ -935,8 +979,9 @@ impl PrefillTransport for RemotePrefill {
         if !self.alive() {
             return Err(work);
         }
-        // Register the whole batch before writing (same discipline as
-        // decode admits: mid-write death evicts, failed write unwinds).
+        // Register the whole batch before queueing (same discipline as
+        // decode admits: mid-flight death evicts, failed enqueue
+        // unwinds).
         {
             let mut p = self.shard.pending.lock().unwrap();
             for w in &work {
@@ -997,17 +1042,20 @@ impl PrefillTransport for RemotePrefill {
 mod tests {
     use super::*;
     use crate::transport::proto::KvHalf;
+    use std::io::{Read, Write};
     use std::net::TcpListener;
     use std::sync::atomic::AtomicU32;
 
-    fn counting_sinks(tokens: Arc<AtomicU32>) -> ShardSinks {
+    fn counting_sinks(tokens: Arc<AtomicU32>, evicted: Arc<Mutex<Vec<u64>>>) -> ShardSinks {
         ShardSinks {
             on_token: Box::new(move |_, _, _| {
                 tokens.fetch_add(1, Ordering::SeqCst);
             }),
             on_done: Box::new(|_, _, _| {}),
             on_rejected: Box::new(|_| {}),
-            on_evicted: Box::new(|_| {}),
+            on_evicted: Box::new(move |ids| {
+                evicted.lock().unwrap().extend(ids);
+            }),
             on_stats: Box::new(|_, _, _| {}),
         }
     }
@@ -1028,12 +1076,15 @@ mod tests {
         }
     }
 
-    /// The write-under-lock regression: an `Admit` write blocked on a
-    /// peer that stopped draining its socket must not delay Token
-    /// delivery from the same shard. The write path may hold only the
-    /// writer lock — never the pending/event lock.
+    /// The queueing replacement for the old write-under-lock
+    /// regression: an `Admit` for a peer that stopped draining its
+    /// socket is *queued* (the admit returns immediately), Token
+    /// delivery from the same shard keeps flowing, and the write-stall
+    /// guard then declares the shard dead and evicts every resident
+    /// sequence — including the queued one — after which admits are
+    /// refused outright.
     #[test]
-    fn blocked_admit_write_does_not_delay_token_delivery() {
+    fn blocked_peer_stalls_out_and_evicts_without_delaying_tokens() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let done = Arc::new(AtomicBool::new(false));
@@ -1064,8 +1115,8 @@ mod tests {
             )
             .unwrap();
             // Consume frames until the small admit for id 1 arrives,
-            // then STOP reading forever: the scheduler's next big write
-            // must block once the socket buffers fill.
+            // then STOP reading forever: the 64 MB admit that follows
+            // can never drain past the socket buffers.
             loop {
                 match reader.poll(&mut rd) {
                     Ok(Some(Frame::Admit { id: 1, .. })) => break,
@@ -1086,59 +1137,198 @@ mod tests {
         });
 
         let tokens = Arc::new(AtomicU32::new(0));
+        let evicted = Arc::new(Mutex::new(Vec::new()));
         let mut cfg = RemoteShardConfig::new(&addr);
-        // Bounds how long the deliberately blocked write can hang.
-        cfg.connect_timeout = Duration::from_secs(3);
-        let mut units =
-            connect_shard(cfg, counting_sinks(tokens.clone()), Arc::default()).unwrap();
+        // Bounds how long the stalled backlog may sit before the shard
+        // is declared dead.
+        cfg.connect_timeout = Duration::from_secs(1);
+        let mut units = connect_shard(
+            cfg,
+            counting_sinks(tokens.clone(), evicted.clone()),
+            Arc::default(),
+        )
+        .unwrap();
         assert_eq!(units.len(), 1);
         let mut unit = units.pop().unwrap();
         unit.admit(admit_job(1, 0)).map_err(|_| ()).expect("small admit");
 
-        // Wait for the token stream to be live before starting the
-        // blocked write.
+        // Wait for the token stream to be live before queueing the big
+        // frame.
         let deadline = Instant::now() + Duration::from_secs(10);
         while tokens.load(Ordering::SeqCst) == 0 {
-            assert!(Instant::now() < deadline, "no tokens before the blocked write");
+            assert!(Instant::now() < deadline, "no tokens before the big admit");
             std::thread::sleep(Duration::from_millis(5));
         }
 
-        // A ~64 MB admit against a peer that stopped reading: write_all
-        // fills the socket buffers and blocks until the write timeout.
-        let admit_returned = Arc::new(AtomicBool::new(false));
-        let flag = admit_returned.clone();
-        let admit_thread = std::thread::spawn(move || {
-            let failed = unit.admit(admit_job(2, 8 << 20)).is_err();
-            flag.store(true, Ordering::SeqCst);
-            unit.detach(); // stop the reader thread once we are done
-            failed
-        });
+        // A ~64 MB admit against a peer that stopped reading: accepted
+        // into the queue immediately (no blocking write), it fills the
+        // socket buffers and then sits.
+        let t_admit = Instant::now();
+        unit.admit(admit_job(2, 8 << 20)).map_err(|_| ()).expect("queued admit");
+        assert!(
+            t_admit.elapsed() < Duration::from_millis(500),
+            "admit must queue, not block on the socket"
+        );
 
-        // While that write is in flight, tokens must keep arriving
-        // promptly. 10 tokens at 5 ms cadence is ~50 ms; serialized
-        // behind the 3 s blocked write it would time this out.
+        // While that backlog sits, tokens must keep arriving promptly —
+        // the read path is independent of the outbound queue.
         let base = tokens.load(Ordering::SeqCst);
         let t0 = Instant::now();
         while tokens.load(Ordering::SeqCst) < base + 10 {
             assert!(
                 t0.elapsed() < Duration::from_secs(2),
-                "token delivery stalled behind a blocked admit write \
+                "token delivery stalled behind a queued bulk write \
                  ({} tokens in {:?})",
                 tokens.load(Ordering::SeqCst) - base,
                 t0.elapsed()
             );
             std::thread::sleep(Duration::from_millis(5));
         }
+
+        // The stall guard declares the shard dead (no write progress
+        // for connect_timeout with bytes queued) and evicts both
+        // resident ids: the streaming sequence and the queued admit.
+        let deadline = Instant::now() + Duration::from_secs(15);
+        loop {
+            {
+                let ev = evicted.lock().unwrap();
+                if ev.contains(&1) && ev.contains(&2) {
+                    break;
+                }
+            }
+            assert!(
+                Instant::now() < deadline,
+                "stall guard never evicted the resident sequences: {:?}",
+                evicted.lock().unwrap()
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(!unit.alive(), "the stalled shard must read as dead");
         assert!(
-            !admit_returned.load(Ordering::SeqCst),
-            "test premise broken: the big admit finished before the \
-             tokens did — it never actually blocked"
+            unit.admit(admit_job(3, 0)).is_err(),
+            "admits against a dead shard must hand the job back"
         );
 
         done.store(true, Ordering::SeqCst);
-        let failed = admit_thread.join().unwrap();
-        assert!(failed, "a write to a never-draining peer must time out and hand the job back");
+        unit.detach();
         fake_shard.join().unwrap();
+    }
+
+    /// A `Read` that throttles to ~`per_read` bytes every 2 ms — a peer
+    /// that drains slowly enough to keep the sender's outbound queue
+    /// saturated for seconds.
+    struct Throttled<R> {
+        inner: R,
+        per_read: usize,
+    }
+
+    impl<R: Read> Read for Throttled<R> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            std::thread::sleep(Duration::from_millis(2));
+            let n = buf.len().min(self.per_read);
+            self.inner.read(&mut buf[..n])
+        }
+    }
+
+    /// The ping-starvation regression (satellite fix): under the old
+    /// writer-lock model, RTT pings used `try_lock` and were skipped
+    /// whenever a bulk write held the writer — sustained KV streaming
+    /// starved liveness indefinitely. With the priority lane, pings
+    /// jump the queued bulk frames: the RTT must be measured while the
+    /// bulk backlog is still draining, well before the last admit
+    /// reaches the shard.
+    #[test]
+    fn pings_outrun_a_bulk_saturated_outbound_queue() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        const ADMITS: u64 = 24;
+        const ELEMS: usize = 128 * 1024; // 512 KB per half-pair frame
+        let all_admits_at = Arc::new(Mutex::new(None::<Instant>));
+        let admits_at = all_admits_at.clone();
+        let fake_shard = std::thread::spawn(move || {
+            let (conn, _) = listener.accept().unwrap();
+            conn.set_read_timeout(Some(Duration::from_millis(20))).unwrap();
+            let mut rd = Throttled {
+                inner: conn.try_clone().unwrap(),
+                per_read: 8 * 1024,
+            };
+            let mut w = conn.try_clone().unwrap();
+            let mut reader = FrameReader::new();
+            let mut seen = 0u64;
+            loop {
+                match reader.poll(&mut rd) {
+                    Ok(Some(Frame::Hello { .. })) => {
+                        proto::write_frame(
+                            &mut w,
+                            &Frame::HelloAck {
+                                version: PROTO_VERSION,
+                                role: ShardRole::Decode,
+                                units: 1,
+                                slots: 64,
+                                kv_wire: KvCodec::Raw,
+                                peer_port: 0,
+                            },
+                        )
+                        .unwrap();
+                    }
+                    // Answer pings immediately: the write direction is
+                    // unthrottled, only the drain of our inbound side
+                    // is slow.
+                    Ok(Some(Frame::Ping { nonce, t_us })) => {
+                        proto::write_frame(&mut w, &Frame::Pong { nonce, t_us }).unwrap();
+                    }
+                    Ok(Some(Frame::Admit { .. })) => {
+                        seen += 1;
+                        if seen == ADMITS {
+                            *admits_at.lock().unwrap() = Some(Instant::now());
+                            return;
+                        }
+                    }
+                    Ok(_) => continue,
+                    Err(e) => panic!("fake shard receive: {e}"),
+                }
+            }
+        });
+
+        let tokens = Arc::new(AtomicU32::new(0));
+        let evicted = Arc::new(Mutex::new(Vec::new()));
+        let mut cfg = RemoteShardConfig::new(&addr);
+        // Fast pings so several land during the ~3+ s throttled drain;
+        // generous stall/death bounds so slow progress is not death.
+        cfg.ping_interval = Duration::from_millis(100);
+        cfg.connect_timeout = Duration::from_secs(20);
+        cfg.dead_after = Duration::from_secs(30);
+        let mut units = connect_shard(
+            cfg,
+            counting_sinks(tokens, evicted),
+            Arc::default(),
+        )
+        .unwrap();
+        let mut unit = units.pop().unwrap();
+
+        let t0 = Instant::now();
+        for id in 1..=ADMITS {
+            unit.admit(admit_job(id, ELEMS)).map_err(|_| ()).expect("queued admit");
+        }
+        // ~24 MB through an ~4 MB/s peer: the backlog drains for
+        // seconds. The RTT must be measured long before that finishes.
+        let rtt_deadline = t0 + Duration::from_millis(1500);
+        while unit.rtt_ms().is_none() {
+            assert!(
+                Instant::now() < rtt_deadline,
+                "no pong during a saturated bulk drain: pings are being starved"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let rtt_at = Instant::now();
+
+        fake_shard.join().unwrap();
+        let drained_at = all_admits_at.lock().unwrap().expect("all admits delivered");
+        assert!(
+            drained_at.duration_since(t0) > rtt_at.duration_since(t0),
+            "test premise broken: the bulk backlog drained before the first pong"
+        );
+        unit.detach();
     }
 
     /// The KV handoff reassembly path: out-of-order, multi-chunk
@@ -1190,7 +1380,8 @@ mod tests {
                 }
             };
             // Stream the halves chunked and *out of order* — the borrow
-            // encoder producing exactly what write_frame would.
+            // encoder producing exactly what write_frame would, on the
+            // job's stream.
             let mut buf = Vec::new();
             for (half, data, cuts) in [
                 (KvHalf::V, &v2, vec![0usize, 600]),
@@ -1201,13 +1392,13 @@ mod tests {
                     proto::kv_segment_frame_into(
                         &mut buf,
                         KvCodec::Raw,
+                        proto::job_stream(id),
                         id,
                         half,
                         a as u32,
                         data.len() as u32,
                         &data[a..b],
                     );
-                    use std::io::Write;
                     w.write_all(&buf).unwrap();
                 }
             }

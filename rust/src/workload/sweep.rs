@@ -103,6 +103,12 @@ pub struct SweepGrid {
     /// KV wire codecs (`raw` | `fp16` | `lz`). Fans out live-mode points
     /// only; the DES models the handoff analytically and ignores it.
     pub codecs: Vec<String>,
+    /// Decode shard counts. Fans out live-mode points only (the DES
+    /// topology is fixed by the paper's Fig. 6(a)); this is the axis the
+    /// multiplexed transport is judged on — handoff/TTFT tails must not
+    /// blow up as the shard count grows past the old thread-per-
+    /// connection comfort zone.
+    pub shards: Vec<u32>,
     /// Seeded runs per grid point.
     pub replicas: u32,
     /// Base seed; replica `r` runs at `seed + r` in every point.
@@ -115,9 +121,10 @@ pub struct SweepGrid {
 }
 
 impl Default for SweepGrid {
-    /// The quick CI grid — also exactly what produced the checked-in
-    /// `BENCH_6.json`, so `sbs sweep` with no axis flags yields a
-    /// document directly comparable against the committed baseline.
+    /// The quick CI grid. The checked-in `BENCH_7.json` baseline is this
+    /// grid with `--live --shards 2,16` on top (its DES points are
+    /// therefore directly comparable against `sbs sweep` with no axis
+    /// flags, and its live points carry the shard-count axis).
     fn default() -> Self {
         SweepGrid {
             scheds: vec!["staggered".into(), "immediate".into()],
@@ -127,6 +134,7 @@ impl Default for SweepGrid {
             windows: vec![0.0],
             kv_budgets: vec![config::LIVE_KV_BUDGET_TOKENS],
             codecs: vec!["raw".into()],
+            shards: vec![2],
             replicas: 3,
             seed: 1,
             duration: 45.0,
@@ -146,6 +154,10 @@ impl SweepGrid {
             ("stagger_window_s", Json::from(self.windows.clone())),
             ("kv_budget_tokens", Json::from(self.kv_budgets.clone())),
             ("kv_wire", Json::from(self.codecs.clone())),
+            (
+                "decode_shards",
+                Json::Arr(self.shards.iter().map(|&s| Json::from(s)).collect()),
+            ),
             ("replicas", Json::from(self.replicas)),
             ("seed", Json::from(self.seed)),
             ("duration_s", Json::from(self.duration)),
@@ -193,6 +205,8 @@ struct PointParams {
     kv_budget: u64,
     /// Live points only; the DES ignores the codec axis.
     codec: Option<String>,
+    /// Live points only; the DES topology is fixed.
+    shards: Option<u32>,
 }
 
 impl PointParams {
@@ -208,6 +222,9 @@ impl PointParams {
         ];
         if let Some(c) = &self.codec {
             pairs.push(("kv_wire", Json::from(c.as_str())));
+        }
+        if let Some(s) = self.shards {
+            pairs.push(("decode_shards", Json::from(s)));
         }
         Json::obj(pairs)
     }
@@ -254,15 +271,22 @@ fn expand(grid: &SweepGrid, mode: &'static str) -> Result<Vec<PointParams>> {
                                 window,
                                 kv_budget,
                                 codec: None,
+                                shards: None,
                             };
                             if mode == "live" {
                                 for codec in &grid.codecs {
                                     KvCodec::parse(codec)
                                         .ok_or_else(|| anyhow!("unknown kv codec '{codec}'"))?;
-                                    out.push(PointParams {
-                                        codec: Some(codec.clone()),
-                                        ..base.clone()
-                                    });
+                                    for &shards in &grid.shards {
+                                        if shards == 0 {
+                                            return Err(anyhow!("--shards values must be >= 1"));
+                                        }
+                                        out.push(PointParams {
+                                            codec: Some(codec.clone()),
+                                            shards: Some(shards),
+                                            ..base.clone()
+                                        });
+                                    }
                                 }
                             } else {
                                 out.push(base);
@@ -323,7 +347,7 @@ fn run_live_replica(p: &PointParams, grid: &SweepGrid, live: &LiveOpts, seed: u6
         ..Default::default()
     };
     cfg.seed = seed;
-    cfg.n_decode = 2;
+    cfg.n_decode = p.shards.unwrap_or(2);
     cfg.decode_batch = 8;
     cfg.decode_policy = parse_policy(&p.policy)?.policy();
     cfg.kv_budget = p.kv_budget;
@@ -464,12 +488,13 @@ pub fn run_sweep(grid: &SweepGrid, modes: &SweepModes) -> Result<Json> {
     if let Some(live) = &modes.live {
         for p in expand(grid, "live")? {
             log::info!(
-                "sweep live point: {}/{}/{} qps={} codec={:?}",
+                "sweep live point: {}/{}/{} qps={} codec={:?} shards={:?}",
                 p.sched,
                 p.arrival,
                 p.policy,
                 p.qps,
-                p.codec
+                p.codec,
+                p.shards
             );
             let mut reps = Vec::new();
             for r in 0..grid.replicas {
@@ -729,6 +754,11 @@ pub fn cli_sweep(argv: &[String]) -> Result<()> {
         "comma list of live-mode KV codecs: raw,fp16,lz",
         Some("raw"),
     )
+    .opt(
+        "shards",
+        "comma list of live-mode decode shard counts",
+        Some("2"),
+    )
     .opt("replicas", "seeded runs per grid point", Some("3"))
     .opt("seed", "base seed (replica r runs at seed+r)", Some("1"))
     .opt(
@@ -740,7 +770,7 @@ pub fn cli_sweep(argv: &[String]) -> Result<()> {
     .opt(
         "bench-id",
         "identifier stamped into the document",
-        Some("BENCH_6"),
+        Some("BENCH_7"),
     )
     .opt("out", "write the document here (default: stdout)", None)
     .opt(
@@ -827,6 +857,10 @@ pub fn cli_sweep(argv: &[String]) -> Result<()> {
         windows: parse_f64_list(&args.str_or("window", "0"))?,
         kv_budgets: parse_u64_list(&args.str_or("kv-budget", config::LIVE_KV_BUDGET_TOKENS_STR))?,
         codecs: split_list(&args.str_or("kv-wire", "raw")),
+        shards: parse_u64_list(&args.str_or("shards", "2"))?
+            .into_iter()
+            .map(|s| u32::try_from(s).map_err(|_| anyhow!("shard count {s} too large")))
+            .collect::<Result<_>>()?,
         replicas: args.parse_or("replicas", 3u32).map_err(|e| anyhow!("{e}"))?,
         seed: args.parse_or("seed", 1u64).map_err(|e| anyhow!("{e}"))?,
         duration: args.parse_or("duration", 45.0).map_err(|e| anyhow!("{e}"))?,
@@ -851,7 +885,7 @@ pub fn cli_sweep(argv: &[String]) -> Result<()> {
         None
     };
     let modes = SweepModes {
-        bench_id: args.str_or("bench-id", "BENCH_6"),
+        bench_id: args.str_or("bench-id", "BENCH_7"),
         des: !args.flag("no-des"),
         live,
     };
@@ -884,6 +918,7 @@ mod tests {
             windows: vec![0.0, 0.5],
             kv_budgets: vec![150_000],
             codecs: vec!["raw".into(), "lz".into()],
+            shards: vec![2, 16],
             replicas: 2,
             seed: 5,
             duration: 4.0,
@@ -895,20 +930,23 @@ mod tests {
     fn expand_collapses_window_axis_for_immediate() {
         let pts = expand(&tiny_grid(), "des").unwrap();
         // staggered × 2 windows + immediate × 1 (collapsed) = 3 points,
-        // and no DES point carries the codec axis.
+        // and no DES point carries the live-only axes.
         assert_eq!(pts.len(), 3);
-        assert!(pts.iter().all(|p| p.codec.is_none()));
+        assert!(pts.iter().all(|p| p.codec.is_none() && p.shards.is_none()));
         let imm: Vec<_> = pts.iter().filter(|p| p.sched == "immediate").collect();
         assert_eq!(imm.len(), 1);
         assert_eq!(imm[0].window, 0.0);
     }
 
     #[test]
-    fn expand_fans_codecs_out_in_live_mode_only() {
+    fn expand_fans_codecs_and_shards_out_in_live_mode_only() {
         let pts = expand(&tiny_grid(), "live").unwrap();
-        // 3 scheduler/window points × 2 codecs.
-        assert_eq!(pts.len(), 6);
-        assert!(pts.iter().all(|p| p.codec.is_some()));
+        // 3 scheduler/window points × 2 codecs × 2 shard counts.
+        assert_eq!(pts.len(), 12);
+        assert!(pts.iter().all(|p| p.codec.is_some() && p.shards.is_some()));
+        for want in [2u32, 16] {
+            assert!(pts.iter().any(|p| p.shards == Some(want)));
+        }
     }
 
     #[test]

@@ -16,6 +16,7 @@ fn tiny_grid() -> SweepGrid {
         windows: vec![0.0],
         kv_budgets: vec![150_000],
         codecs: vec!["raw".into()],
+        shards: vec![2],
         replicas: 2,
         seed: 5,
         duration: 8.0,
@@ -244,6 +245,7 @@ fn live_mock_cluster_smoke() {
         windows: vec![0.0],
         kv_budgets: vec![150_000],
         codecs: vec!["raw".into()],
+        shards: vec![2],
         replicas: 1,
         seed: 11,
         duration: 1.5,
@@ -266,6 +268,7 @@ fn live_mock_cluster_smoke() {
     let pt = &points[0];
     assert_eq!(pt.path(&["params", "mode"]).and_then(Json::as_str), Some("live"));
     assert_eq!(pt.path(&["params", "kv_wire"]).and_then(Json::as_str), Some("raw"));
+    assert_eq!(pt.f64_at(&["params", "decode_shards"]), Some(2.0));
     let rep = &pt.get("replicas").and_then(Json::as_arr).unwrap()[0];
     assert!(rep.f64_at(&["completed"]).unwrap() > 0.0, "live run completed nothing");
     assert!(rep.f64_at(&["ttft_p99_ms"]).unwrap() > 0.0);

@@ -1,8 +1,10 @@
 //! Deterministic fault injection against the transport layer, driven by
 //! the scripted loopback harness in `sbs::testing::net` (no real shard
 //! processes, no timing races): truncated/corrupt/reordered `KvSegment`
-//! streams, mid-handoff peer death, codec-mismatch handshakes, and the
-//! decode shard's direct-transfer peer listener under the same abuse.
+//! streams, mid-handoff peer death, codec-mismatch handshakes, the
+//! decode shard's direct-transfer peer listener under the same abuse,
+//! and the v4 multiplexed per-job streams (interleaved handoffs, stale
+//! streams after relay fallback, split frames, two-in-flight death).
 //!
 //! The invariant under test everywhere: every fault ends in a **clean
 //! reject-or-fallback** — a terminal event per affected job (failed or
@@ -16,8 +18,11 @@ use sbs::engine::mock::MockEngineConfig;
 use sbs::engine::sampler::Sampling;
 use sbs::engine::PrefillOutcome;
 use sbs::metrics::RequestMetrics;
-use sbs::testing::net::{FakeShard, ShardConn};
-use sbs::transport::proto::{self, Frame, FrameReader, KvHalf, ShardRole, PROTO_VERSION};
+use sbs::testing::net::{accept_peer, FakeShard, ShardConn};
+use sbs::transport::peer::PeerMux;
+use sbs::transport::proto::{
+    self, DirectTarget, Frame, FrameReader, KvHalf, ShardRole, StreamId, PROTO_VERSION,
+};
 use sbs::transport::remote::{connect_prefill_shard, connect_shard, RemoteShardConfig};
 use sbs::transport::{
     DecodeTransport, KvCodec, KvWireCounters, PrefillSinks, PrefillTransport, PrefillWork,
@@ -233,7 +238,8 @@ fn garbage_frame_kills_connection_and_evicts_pending() {
     // the connection dead and evict every pending job.
     let shard = FakeShard::serve(FakeShard::ack(ShardRole::Prefill, KvCodec::Raw), |mut sc, _| {
         await_dispatch(&mut sc, 7)?;
-        sc.send_raw(&[5, 0, 0, 0, 250, 1, 2, 3, 4])?; // tag 250: unknown
+        // v4 header: [len=5][stream=0], then payload with unknown tag 250.
+        sc.send_raw(&[5, 0, 0, 0, 0, 0, 0, 0, 250, 1, 2, 3, 4])?;
         // Keep the socket open: the *decode error* alone must kill it.
         let _ = sc.recv_until(Duration::from_secs(30), |_| false);
         Ok(())
@@ -257,6 +263,7 @@ fn truncated_frame_then_death_evicts_cleanly() {
         proto::kv_segment_frame_into(
             &mut buf,
             KvCodec::Raw,
+            proto::job_stream(9),
             9,
             KvHalf::K,
             0,
@@ -298,6 +305,7 @@ fn reordered_coded_segments_reassemble_exactly() {
                     proto::kv_segment_frame_into(
                         &mut buf,
                         KvCodec::Lz,
+                        proto::job_stream(3),
                         3,
                         half,
                         a as u32,
@@ -494,6 +502,7 @@ fn direct_peer_handoff_admits_and_emits_ordered_stream() {
         proto::kv_segment_frame_into(
             &mut buf,
             KvCodec::Lz,
+            proto::job_stream(77),
             77,
             half,
             0,
@@ -580,7 +589,8 @@ fn peer_death_mid_handoff_leaves_decode_shard_clean() {
         drop(peer); // abrupt close
     }
 
-    // A malformed peer stream costs only that peer connection.
+    // A malformed peer segment poisons only that *job* (the connection
+    // — and any sibling handoffs multiplexed on it — survives).
     {
         let mut peer = peer_connect(peer_port, KvCodec::Raw);
         peer.send(&Frame::KvSegment {
@@ -590,8 +600,8 @@ fn peer_death_mid_handoff_leaves_decode_shard_clean() {
             total: 400,
             data: vec![1.0; 100], // overruns the declared total
         });
-        // The shard closes on protocol violation; a follow-up commit
-        // must never admit. (The write may fail — the close races it.)
+        // The poisoned job's commit is swallowed: no admit, and the ack
+        // is withheld so the sender's timeout routes the job to relay.
         peer.try_send(&Frame::HandoffCommit {
             unit: 0,
             id: 10,
@@ -633,6 +643,329 @@ fn peer_death_mid_handoff_leaves_decode_shard_clean() {
         }
     }
     shard.join().unwrap().unwrap();
+}
+
+// ---- multiplexed peer streams (v4 stream framing) ------------------------
+
+/// Drain the scheduler stream until `Done` has arrived for every id in
+/// `want`, asserting no other job ever emits.
+fn await_dones(sched: &mut RawClient, want: &[u64]) {
+    let mut pending: Vec<u64> = want.to_vec();
+    while !pending.is_empty() {
+        match sched.recv(TICK) {
+            Frame::Token { id, .. } => {
+                assert!(want.contains(&id), "token from unexpected job {id}")
+            }
+            Frame::Done { id, .. } => {
+                assert!(want.contains(&id), "done from unexpected job {id}");
+                pending.retain(|&p| p != id);
+            }
+            Frame::Rejected { id } => panic!("job {id} rejected"),
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+}
+
+fn stop_shard(mut sched: RawClient, shard: std::thread::JoinHandle<anyhow::Result<()>>) {
+    sched.send(&Frame::Stop);
+    loop {
+        if matches!(sched.recv(TICK), Frame::Bye) {
+            break;
+        }
+    }
+    shard.join().unwrap().unwrap();
+}
+
+#[test]
+fn interleaved_handoffs_with_split_frames_share_one_connection() {
+    // Two handoffs in flight on one peer connection, their frames
+    // alternating at frame granularity on distinct streams — and every
+    // frame of one stream arriving split across two writes (so the
+    // reader always holds a partial frame of stream A when stream B's
+    // next frame lands). Both must reassemble exactly and admit.
+    let (mut sched, peer_port, shard) = start_decode_shard();
+    let mut peer = peer_connect(peer_port, KvCodec::Raw);
+
+    let ka: Vec<f32> = (0..200).map(|i| i as f32).collect();
+    let kb: Vec<f32> = (0..120).map(|i| -(i as f32)).collect();
+    let (sa, sb) = (proto::job_stream(101), proto::job_stream(102));
+    let frames_for = |stream: StreamId, id: u64, data: &[f32]| -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        for half in [KvHalf::K, KvHalf::V] {
+            let mid = data.len() / 2;
+            for (a, b) in [(0usize, mid), (mid, data.len())] {
+                out.push(proto::frame_bytes_on(
+                    stream,
+                    &Frame::KvSegment {
+                        id,
+                        half,
+                        offset: a as u32,
+                        total: data.len() as u32,
+                        data: data[a..b].to_vec(),
+                    },
+                ));
+            }
+        }
+        out
+    };
+    let a_frames = frames_for(sa, 101, &ka);
+    let b_frames = frames_for(sb, 102, &kb);
+    for (af, bf) in a_frames.iter().zip(&b_frames) {
+        let cut = af.len() / 2; // inside A's payload (header is 8 bytes)
+        peer.send_raw(&af[..cut]);
+        std::thread::sleep(Duration::from_millis(5)); // force a partial read
+        peer.send_raw(&af[cut..]);
+        peer.send_raw(bf);
+    }
+    for (stream, id, kv_len) in [(sa, 101u64, 50u32), (sb, 102, 30)] {
+        peer.send_raw(&proto::frame_bytes_on(
+            stream,
+            &Frame::HandoffCommit {
+                unit: 0,
+                id,
+                first_token: id as i32,
+                kv_len,
+                max_new: 2,
+                exec_time: 0.0,
+            },
+        ));
+    }
+    let mut acked = Vec::new();
+    while acked.len() < 2 {
+        match peer.recv(TICK) {
+            Frame::HandoffAck { id } => acked.push(id),
+            other => panic!("expected HandoffAck, got {other:?}"),
+        }
+    }
+    acked.sort_unstable();
+    assert_eq!(acked, vec![101, 102], "both interleaved handoffs admit");
+    await_dones(&mut sched, &[101, 102]);
+    stop_shard(sched, shard);
+}
+
+#[test]
+fn stale_stream_frames_after_relay_fallback_are_dropped() {
+    // A handoff goes bad (poisoned job → withheld ack), the scheduler
+    // relay takes the job over — and then frames for the stale stream
+    // keep arriving. They must be dropped without disturbing the
+    // relay-admitted job, and the *next* handoff on the same connection
+    // must work untouched.
+    let (mut sched, peer_port, shard) = start_decode_shard();
+    let mut peer = peer_connect(peer_port, KvCodec::Raw);
+
+    let s20 = proto::job_stream(20);
+    peer.send_raw(&proto::frame_bytes_on(
+        s20,
+        &Frame::KvSegment {
+            id: 20,
+            half: KvHalf::K,
+            offset: 90,
+            total: 100,
+            data: vec![1.0; 20], // overrun: poisons job 20
+        },
+    ));
+    peer.send_raw(&proto::frame_bytes_on(
+        s20,
+        &Frame::HandoffCommit {
+            unit: 0,
+            id: 20,
+            first_token: 2,
+            kv_len: 4,
+            max_new: 2,
+            exec_time: 0.0,
+        },
+    ));
+    // The prefill side would now time out on the ack and relay; the
+    // scheduler admits job 20 the ordinary way.
+    sched.send(&Frame::Admit {
+        unit: 0,
+        id: 20,
+        first_token: 0x30,
+        kv_len: 4,
+        max_new: 2,
+        k: Vec::new(),
+        v: Vec::new(),
+    });
+    // Late frames on the stale stream: dropped (GC'd if never
+    // committed), never admitted, never fatal to the connection.
+    peer.send_raw(&proto::frame_bytes_on(
+        s20,
+        &Frame::KvSegment {
+            id: 20,
+            half: KvHalf::V,
+            offset: 0,
+            total: 100,
+            data: vec![1.0; 50],
+        },
+    ));
+    // A fresh handoff on the same connection works end to end.
+    let s21 = proto::job_stream(21);
+    peer.send_raw(&proto::frame_bytes_on(
+        s21,
+        &Frame::KvSegment {
+            id: 21,
+            half: KvHalf::K,
+            offset: 0,
+            total: 8,
+            data: vec![0.5; 8],
+        },
+    ));
+    peer.send_raw(&proto::frame_bytes_on(
+        s21,
+        &Frame::KvSegment {
+            id: 21,
+            half: KvHalf::V,
+            offset: 0,
+            total: 8,
+            data: vec![0.25; 8],
+        },
+    ));
+    peer.send_raw(&proto::frame_bytes_on(
+        s21,
+        &Frame::HandoffCommit {
+            unit: 0,
+            id: 21,
+            first_token: 7,
+            kv_len: 2,
+            max_new: 2,
+            exec_time: 0.0,
+        },
+    ));
+    // The first (and only) ack is job 21's — job 20's stayed withheld.
+    match peer.recv(TICK) {
+        Frame::HandoffAck { id } => assert_eq!(id, 21, "poisoned job 20 must not be acked"),
+        other => panic!("expected HandoffAck, got {other:?}"),
+    }
+    await_dones(&mut sched, &[20, 21]);
+    stop_shard(sched, shard);
+}
+
+#[test]
+fn peer_death_with_two_handoffs_in_flight_drops_both_assemblies() {
+    // Mid-handoff death with *two* handoffs multiplexed on the dying
+    // connection: neither was committed, so the shard must drop both
+    // partial assemblies and serve both ids cleanly via relay after.
+    let (mut sched, peer_port, shard) = start_decode_shard();
+    {
+        let mut peer = peer_connect(peer_port, KvCodec::Raw);
+        for id in [31u64, 32] {
+            peer.send_raw(&proto::frame_bytes_on(
+                proto::job_stream(id),
+                &Frame::KvSegment {
+                    id,
+                    half: KvHalf::K,
+                    offset: 0,
+                    total: 400,
+                    data: vec![1.0; 100], // 300 elements never arrive
+                },
+            ));
+        }
+        drop(peer); // abrupt close with both assemblies open
+    }
+    for id in [31u64, 32] {
+        sched.send(&Frame::Admit {
+            unit: 0,
+            id,
+            first_token: 0x30,
+            kv_len: 4,
+            max_new: 2,
+            k: Vec::new(),
+            v: Vec::new(),
+        });
+    }
+    await_dones(&mut sched, &[31, 32]);
+    stop_shard(sched, shard);
+}
+
+#[test]
+fn concurrent_same_peer_handoffs_interleave_on_one_socket() {
+    // The acceptance test for stream multiplexing: two concurrent
+    // handoffs from one PeerMux to the same peer address must share one
+    // socket and *demonstrably interleave* — the small handoff's frames
+    // land before the big one's tail, on distinct streams, captured in
+    // wire order by the test harness.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    // Small chunks → many frames per handoff, so the round-robin drain
+    // has something to alternate between.
+    let mux = Arc::new(PeerMux::new(4096, Duration::from_secs(30)));
+
+    let server = std::thread::spawn(move || -> anyhow::Result<Vec<(StreamId, Frame)>> {
+        let (mut sc, codec) = accept_peer(&listener, Duration::from_secs(10))?;
+        assert_eq!(codec, KvCodec::Raw);
+        // Stall reads so the sender's outbound queue backs up: by the
+        // time the second handoff enqueues, the first still has a deep
+        // backlog for it to interleave into.
+        std::thread::sleep(Duration::from_millis(300));
+        let cap = sc.capture_streams(Duration::from_secs(60), |cap| {
+            cap.iter()
+                .filter(|(_, f)| matches!(f, Frame::HandoffCommit { .. }))
+                .count()
+                == 2
+        })?;
+        for (_, f) in &cap {
+            if let Frame::HandoffCommit { id, .. } = f {
+                sc.send(&Frame::HandoffAck { id: *id })?;
+            }
+        }
+        Ok(cap)
+    });
+
+    // Big enough that the backlog cannot hide in socket buffers while
+    // the server stalls (16 MiB total), against a 4 KiB-elem chunk.
+    let outcome = |elems: usize, fill: f32| PrefillOutcome {
+        first_token: 1,
+        len: elems / 4,
+        k: vec![fill; elems],
+        v: vec![fill; elems],
+        exec_time: 0.0,
+        passes: 1,
+    };
+    let big = outcome(2 * 1024 * 1024, 0.5);
+    let small = outcome(2048, 0.25);
+    let spawn_handoff = |mux: &Arc<PeerMux>, addr: &str, id: u64, out: PrefillOutcome| {
+        let (mux, target) = (
+            Arc::clone(mux),
+            DirectTarget {
+                addr: addr.to_string(),
+                unit: 0,
+            },
+        );
+        std::thread::spawn(move || mux.handoff(KvCodec::Raw, &target, id, &out, 4))
+    };
+    let t_big = spawn_handoff(&mux, &addr, 201, big);
+    std::thread::sleep(Duration::from_millis(50));
+    let t_small = spawn_handoff(&mux, &addr, 202, small);
+    t_big.join().unwrap().expect("big handoff must be acked");
+    t_small.join().unwrap().expect("small handoff must be acked");
+
+    let cap = server.join().unwrap().unwrap();
+    let stream_of = |id: u64| {
+        cap.iter()
+            .find_map(|(s, f)| match f {
+                Frame::HandoffCommit { id: i, .. } if *i == id => Some(*s),
+                _ => None,
+            })
+            .expect("commit captured")
+    };
+    let (s_big, s_small) = (stream_of(201), stream_of(202));
+    assert_ne!(s_big, s_small, "each handoff rides its own stream");
+    // Stream discipline: every segment frame travels on the stream its
+    // job's commit used.
+    for (s, f) in &cap {
+        if let Frame::KvSegment { id, .. } = f {
+            assert_eq!(*s, stream_of(*id), "job {id} leaked onto a foreign stream");
+        }
+    }
+    // The interleaving itself: the small handoff completes inside the
+    // big one's frame sequence instead of queueing behind it.
+    let last_big = cap.iter().rposition(|(s, _)| *s == s_big).unwrap();
+    let first_small = cap.iter().position(|(s, _)| *s == s_small).unwrap();
+    assert!(
+        first_small < last_big,
+        "small handoff must interleave into the big one's backlog \
+         (first small frame at {first_small}, last big frame at {last_big})"
+    );
 }
 
 #[test]
