@@ -74,13 +74,14 @@ use crate::transport::proto::{
     self, DirectTarget, Frame, FrameReader, ProtoError, ShardRole, StreamId, UnitLoad,
     PROTO_VERSION, STREAM_CONTROL,
 };
+use crate::trace::{Mark, TraceMark};
 use crate::transport::{AdmitJob, KvCodec, KvWireCounters, PrefillMsg, PrefillWork, UnitMsg};
 use crate::util::{Clock, RealClock};
 use anyhow::{anyhow, Context, Result};
 use std::collections::{HashMap, HashSet};
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU32, AtomicU8, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -218,12 +219,91 @@ enum Outbound {
     Flush(Sender<()>),
 }
 
+/// Marks buffered past this point are shed (and counted): tracing is
+/// best-effort and must never grow without bound when the scheduler
+/// connection is slow or absent.
+const TRACE_BUF_CAP: usize = 4096;
+
+/// Shard-side TTFT trace buffer. Marks are stamped on the shard's local
+/// monotonic clock and aligned to the *scheduler's* clock with the
+/// offset observed from heartbeat pings (`Frame::Ping` carries the
+/// scheduler-clock send time, so `offset = t_ping - t_local` is right to
+/// within the one-way delay, ≈ the link RTT). Aligned marks batch up in
+/// a capped buffer and leave as best-effort [`Frame::TraceSpans`] on the
+/// shard's single outbound queue — flushed *before* each terminal frame
+/// so a request's marks reach the scheduler no later than the event that
+/// finalizes its trace, and periodically from the connection loop for
+/// everything else. Marks stamped before the first ping (offset
+/// unknown) or past the cap are shed and counted, never blocked on.
+struct ShardTraceBuf {
+    clock: Arc<RealClock>,
+    /// Scheduler-clock µs minus shard-clock µs at the last heartbeat;
+    /// `i64::MIN` = no ping observed yet.
+    offset_us: AtomicI64,
+    buf: Mutex<Vec<TraceMark>>,
+    /// Marks shed since the last flush that carried any.
+    dropped: AtomicU32,
+}
+
+impl ShardTraceBuf {
+    fn new(clock: Arc<RealClock>) -> Self {
+        ShardTraceBuf {
+            clock,
+            offset_us: AtomicI64::new(i64::MIN),
+            buf: Mutex::new(Vec::new()),
+            dropped: AtomicU32::new(0),
+        }
+    }
+
+    fn local_us(&self) -> i64 {
+        (self.clock.now_s() * 1e6) as i64
+    }
+
+    /// Re-anchor the clock alignment from a scheduler heartbeat.
+    fn observe_ping(&self, sched_t_us: u64) {
+        let off = (sched_t_us as i64).saturating_sub(self.local_us());
+        self.offset_us.store(off, Ordering::Relaxed);
+    }
+
+    /// Stamp one mark at "now" on the scheduler's timebase.
+    fn push(&self, id: u64, mark: Mark, unit: u32) {
+        let off = self.offset_us.load(Ordering::Relaxed);
+        if off == i64::MIN {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let t_us = self.local_us().saturating_add(off).max(0) as u64;
+        let mut buf = self.buf.lock().unwrap();
+        if buf.len() >= TRACE_BUF_CAP {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        buf.push(TraceMark { id, mark, t_us, unit });
+    }
+
+    /// Queue the buffered marks as one `TraceSpans` frame. A no-op while
+    /// the buffer is empty (shed counts accumulate and ride with the
+    /// next real batch), so shards whose scheduler never pings — and
+    /// therefore sheds every mark — emit no trace frames at all.
+    fn flush(&self, out: &Sender<Outbound>) {
+        let marks = std::mem::take(&mut *self.buf.lock().unwrap());
+        if marks.is_empty() {
+            return;
+        }
+        let dropped = self.dropped.swap(0, Ordering::Relaxed);
+        let _ = out.send(Outbound::Frame(Frame::TraceSpans { dropped, marks }));
+    }
+}
+
 /// Outbound frame sink for one decode unit thread: every engine event
 /// becomes a wire frame. Timestamps and request metrics stay shard-local
 /// and are *not* sent — the scheduler re-stamps terminal events on its
 /// own clock.
 struct WireSink {
     out: Sender<Outbound>,
+    /// This unit's index, carried in trace marks.
+    unit: u32,
+    trace: Arc<ShardTraceBuf>,
 }
 
 impl DecodeEventSink for WireSink {
@@ -232,11 +312,20 @@ impl DecodeEventSink for WireSink {
     }
 
     fn done(&self, id: u64, tokens: Vec<i32>, _metrics: RequestMetrics) {
+        // Flush ahead of the terminal: the scheduler retires the
+        // request's trace when `Done` lands, so any buffered marks must
+        // precede it on the (FIFO) outbound queue.
+        self.trace.flush(&self.out);
         let _ = self.out.send(Outbound::Frame(Frame::Done { id, tokens }));
     }
 
     fn rejected(&self, id: u64) {
+        self.trace.flush(&self.out);
         let _ = self.out.send(Outbound::Frame(Frame::Rejected { id }));
+    }
+
+    fn trace(&self, id: u64, mark: Mark) {
+        self.trace.push(id, mark, self.unit);
     }
 }
 
@@ -258,6 +347,9 @@ struct PrefillWireSink {
     peers: Arc<PeerMux>,
     /// Codec negotiated with the current scheduler connection.
     codec: Arc<AtomicU8>,
+    /// This instance's index, carried in trace marks.
+    unit: u32,
+    trace: Arc<ShardTraceBuf>,
 }
 
 impl PrefillWireSink {
@@ -281,6 +373,9 @@ impl PrefillWireSink {
         if sent.is_err() {
             return;
         }
+        // The scheduler stamps `KvCommit`/`FirstToken` when this frame
+        // lands; the shard's prefill marks must already be there.
+        self.trace.flush(&self.out);
         let _ = self.out.send(Outbound::Frame(Frame::PrefillDone {
             id,
             first_token: outcome.first_token,
@@ -299,12 +394,18 @@ impl PrefillEventSink for PrefillWireSink {
         _metrics: RequestMetrics,
         target: Option<DirectTarget>,
     ) {
+        // End of prefill execution; the KV transfer (direct or relayed)
+        // starts here, closed by the scheduler's `KvCommit` stamp.
+        self.trace.push(id, Mark::PrefillEnd, self.unit);
         if let Some(t) = target.filter(|_| max_new > 1) {
             let codec = load_codec(&self.codec);
             match self.peers.handoff(codec, &t, id, &outcome, max_new - 1) {
                 Ok(()) => {
                     // Acked by the decode shard: tell the scheduler with
                     // the lightweight commit — no KV on this connection.
+                    // Trace marks flush first (the commit finalizes the
+                    // scheduler-side TTFT stamps).
+                    self.trace.flush(&self.out);
                     let _ = self.out.send(Outbound::Frame(Frame::HandoffCommit {
                         unit: t.unit,
                         id,
@@ -338,6 +439,10 @@ impl PrefillEventSink for PrefillWireSink {
             t_measured,
             remaining: Some(remaining),
         }));
+    }
+
+    fn trace(&self, id: u64, mark: Mark) {
+        self.trace.push(id, mark, self.unit);
     }
 }
 
@@ -436,6 +541,9 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
     };
     let units = cfg.units;
     let clock = Arc::new(RealClock::new());
+    // TTFT trace marks, aligned to the scheduler clock via heartbeat
+    // pings and piggybacked on the control stream (best-effort).
+    let trace = Arc::new(ShardTraceBuf::new(clock.clone()));
     let (ev_tx, ev_rx) = channel::<Outbound>();
     let (ready_tx, ready_rx) = channel::<bool>();
     // Codec negotiated with the current scheduler connection (what this
@@ -472,7 +580,11 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
                 let g = Arc::new(UnitGauges::default());
                 gauges.push(g.clone());
                 let spec = cfg.engine.clone();
-                let sink = WireSink { out: ev_tx.clone() };
+                let sink = WireSink {
+                    out: ev_tx.clone(),
+                    unit: u,
+                    trace: trace.clone(),
+                };
                 let clock = clock.clone();
                 let (sampling, batch) = (cfg.sampling, cfg.batch);
                 let seed = cfg.seed.wrapping_add(7000 + u as u64);
@@ -507,6 +619,8 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
                     out: ev_tx.clone(),
                     peers: peers.clone(),
                     codec: codec.clone(),
+                    unit: u,
+                    trace: trace.clone(),
                 };
                 let seed = cfg.seed.wrapping_add(8000 + u as u64);
                 let ready = ready_tx.clone();
@@ -624,6 +738,7 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
         // whole shard down — drop it and keep accepting.
         stopping = match serve_connection(
             conn, &cfg, &channels, &ev_tx, &current, &codec, &kv_in, &direct_seen, peer_port,
+            &trace,
         ) {
             Ok(stop) => stop,
             Err(e) => {
@@ -663,6 +778,7 @@ fn serve_connection(
     kv_in: &KvWireCounters,
     direct_seen: &Mutex<HashSet<u64>>,
     peer_port: u16,
+    trace: &ShardTraceBuf,
 ) -> Result<bool> {
     conn.set_nodelay(true)?;
     conn.set_read_timeout(Some(Duration::from_millis(250)))?;
@@ -758,19 +874,27 @@ fn serve_connection(
     // scheduler's reconnect — without this, a half-open connection
     // wedges the shard forever.
     const CONN_DEAD_AFTER: Duration = Duration::from_secs(6);
+    /// Non-terminal trace marks (e.g. `DecodeAdmit` instants) leave on
+    /// this cadence; terminal-adjacent marks flush inline at their sink.
+    const TRACE_FLUSH_EVERY: Duration = Duration::from_millis(250);
     let mut idle = proto::IdleGuard::new(&reader);
     let mut consumed_at_last_frame = reader.consumed();
+    let mut last_trace_flush = Instant::now();
     let result = loop {
         if idle.idle_for(&reader) >= CONN_DEAD_AFTER {
             log::warn!("scheduler silent for {CONN_DEAD_AFTER:?}; dropping the connection");
             break false;
+        }
+        if last_trace_flush.elapsed() >= TRACE_FLUSH_EVERY {
+            trace.flush(ev_tx);
+            last_trace_flush = Instant::now();
         }
         match reader.poll(&mut rd) {
             Ok(Some(frame)) => {
                 idle.touch();
                 let wire_len = reader.consumed() - consumed_at_last_frame;
                 consumed_at_last_frame = reader.consumed();
-                if handle_scheduler_frame(frame, wire_len, cfg, channels, ev_tx, kv_in) {
+                if handle_scheduler_frame(frame, wire_len, cfg, channels, ev_tx, kv_in, trace) {
                     break true;
                 }
             }
@@ -802,6 +926,7 @@ fn handle_scheduler_frame(
     channels: &UnitChannels,
     ev_tx: &Sender<Outbound>,
     kv_in: &KvWireCounters,
+    trace: &ShardTraceBuf,
 ) -> bool {
     match frame {
         Frame::Admit {
@@ -861,6 +986,9 @@ fn handle_scheduler_frame(
             let work: Vec<PrefillWork> = jobs
                 .into_iter()
                 .map(|j| {
+                    // Receipt at the shard closes the dispatch-transit
+                    // stage and opens the in-engine queue stage.
+                    trace.push(j.id, Mark::PrefillRecv, unit);
                     let len = j.prompt.len() as u32;
                     PrefillWork {
                         id: j.id,
@@ -891,6 +1019,9 @@ fn handle_scheduler_frame(
             }
         }
         Frame::Ping { nonce, t_us } => {
+            // The heartbeat carries the scheduler's clock: (re-)anchor
+            // the trace alignment before echoing it back.
+            trace.observe_ping(t_us);
             let _ = ev_tx.send(Outbound::Frame(Frame::Pong { nonce, t_us }));
         }
         Frame::StatsRequest => {

@@ -45,7 +45,9 @@ use super::dispatch::{
 use crate::engine::mock::{MockEngine, MockEngineConfig};
 use crate::engine::sampler::Sampling;
 use crate::engine::{EngineBackend, MiniEngine, PrefillOutcome};
+use crate::json::Json;
 use crate::metrics::{DecodePoolStats, KvWireGauge, RequestMetrics, ServingReport};
+use crate::trace::{Mark, TraceCollector};
 use crate::runtime::Runtime;
 use crate::scheduler::decode::DecodeSchedConfig;
 use crate::scheduler::flow::{AdmissionController, AdmissionDecision, FlowPolicy};
@@ -213,6 +215,11 @@ pub struct RealClusterConfig {
     /// leaving the shards running for another cluster — e.g. the example
     /// binary, which runs two clusters back to back over one shard set.
     pub stop_shards_on_drain: bool,
+    /// Completed per-request TTFT traces retained for Perfetto export
+    /// (`sbs serve --trace-out`). 0 keeps the aggregate stage histograms
+    /// only — the always-on `ttft_stages` gauge costs one mark batch per
+    /// request either way.
+    pub trace_retain: usize,
 }
 
 impl Default for RealClusterConfig {
@@ -251,6 +258,7 @@ impl Default for RealClusterConfig {
             kv_wire: KvCodec::Raw,
             direct_handoff: true,
             stop_shards_on_drain: true,
+            trace_retain: 0,
         }
     }
 }
@@ -403,6 +411,14 @@ struct Ledger {
     rejected_ids: Vec<u64>,
 }
 
+/// Trace track (≈ Perfetto process) for marks stamped by the scheduler
+/// process itself; shard-emitted marks are tracked under their address.
+const TRACK_SCHED: &str = "sched";
+/// Track for in-process decode DP units.
+const TRACK_LOCAL_DECODE: &str = "local-decode";
+/// Track for in-process prefill instances.
+const TRACK_LOCAL_PREFILL: &str = "local-prefill";
+
 struct ClusterShared {
     clock: RealClock,
     ledger: Mutex<Ledger>,
@@ -411,6 +427,14 @@ struct ClusterShared {
     /// Latest decode-pool occupancy snapshot, published by the scheduler
     /// thread after every placement/release (read by `STATS`).
     decode_stats: Mutex<DecodePoolStats>,
+    /// Per-request TTFT stage decomposition (marks from every process;
+    /// see [`crate::trace`]).
+    trace: TraceCollector,
+    /// Ledger/engine-truth divergences that persisted across 3
+    /// consecutive shard stat polls (the cross-check in the `ShardStats`
+    /// handler) — promoted from a log line to a counted gauge so drift
+    /// is visible in `STATS` and the loadgen report.
+    ledger_divergence: AtomicU64,
     next_id: AtomicU64,
 }
 
@@ -449,6 +473,39 @@ impl ClusterHandle {
     /// Latest per-DP decode occupancy + imbalance gauges.
     pub fn decode_stats(&self) -> DecodePoolStats {
         self.shared.decode_stats.lock().unwrap().clone()
+    }
+
+    /// The full `STATS` payload: the decode-pool snapshot plus the TTFT
+    /// stage decomposition (`ttft_stages`) and the persistent
+    /// ledger/engine-truth divergence counter (`ledger_divergence`).
+    pub fn stats_json(&self) -> Json {
+        let mut j = self.decode_stats().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("ttft_stages".to_string(), self.shared.trace.to_json());
+            map.insert(
+                "ledger_divergence".to_string(),
+                Json::from(self.shared.ledger_divergence.load(Ordering::Relaxed)),
+            );
+        }
+        j
+    }
+
+    /// TTFT stage-decomposition snapshot (see [`crate::trace`]).
+    pub fn ttft_stages(&self) -> Json {
+        self.shared.trace.to_json()
+    }
+
+    /// Requests with a complete TTFT stage decomposition so far.
+    pub fn trace_finalized(&self) -> u64 {
+        self.shared.trace.finalized()
+    }
+
+    /// Write the retained per-request traces as Chrome/Perfetto
+    /// `trace_event` JSON (`sbs serve --trace-out`); returns the event
+    /// count. Retention is bounded by
+    /// [`RealClusterConfig::trace_retain`].
+    pub fn write_trace(&self, path: &std::path::Path) -> std::io::Result<usize> {
+        self.shared.trace.write_perfetto(path)
     }
 
     /// Flow-controlled streaming submission — the serving-frontend path.
@@ -533,6 +590,8 @@ impl RealCluster {
             // Placeholder until the pool shape (local + remote units) is
             // known below; replaced by a shaped zero snapshot.
             decode_stats: Mutex::new(DecodePoolStats::empty(cfg.decode_policy.name())),
+            trace: TraceCollector::new(cfg.trace_retain),
+            ledger_divergence: AtomicU64::new(0),
             next_id: AtomicU64::new(0),
         });
         let (to_sched, sched_rx) = channel::<SchedMsg>();
@@ -547,6 +606,8 @@ impl RealCluster {
             let sink = LocalSink {
                 to_sched: to_sched.clone(),
                 router: router_tx.clone(),
+                shared: shared.clone(),
+                unit: i,
             };
             let shared = shared.clone();
             let (sampling, batch) = (cfg.sampling, cfg.decode_batch);
@@ -584,6 +645,7 @@ impl RealCluster {
                 to_sched: to_sched.clone(),
                 router: router_tx.clone(),
                 shared: shared.clone(),
+                unit: i,
             };
             let seed = cfg.seed.wrapping_add(1 + i as u64);
             let ready = ready_tx.clone();
@@ -656,6 +718,10 @@ impl RealCluster {
         let shard_cfg = |addr: &str| {
             let mut rc = RemoteShardConfig::new(addr);
             rc.kv_wire = cfg.kv_wire;
+            // The heartbeat pinger shares the cluster clock's epoch, so
+            // its `Ping { t_us }` carries scheduler-clock time — what the
+            // shard's trace alignment anchors to.
+            rc.epoch = shared.clock.epoch();
             rc
         };
         for addr in &cfg.remote_decode {
@@ -663,7 +729,8 @@ impl RealCluster {
             // connected so far; the stats sink needs that base index to
             // map its shard-local `StatsReply` onto pool units.
             let base = transports.len();
-            let sinks = shard_sinks(to_sched.clone(), router_tx.clone(), shared.clone(), base);
+            let sinks =
+                shard_sinks(to_sched.clone(), router_tx.clone(), shared.clone(), base, addr);
             let units = match connect_shard(shard_cfg(addr), sinks, relay_kv.clone()) {
                 Ok(units) => units,
                 Err(e) => {
@@ -678,8 +745,13 @@ impl RealCluster {
         }
         for addr in &cfg.remote_prefill {
             let base = prefills.len() as u32;
-            let sinks =
-                prefill_shard_sinks(to_sched.clone(), router_tx.clone(), shared.clone(), base);
+            let sinks = prefill_shard_sinks(
+                to_sched.clone(),
+                router_tx.clone(),
+                shared.clone(),
+                base,
+                addr,
+            );
             let units = match connect_prefill_shard(shard_cfg(addr), sinks, relay_kv.clone()) {
                 Ok(units) => units,
                 Err(e) => {
@@ -833,6 +905,20 @@ fn router_loop(rx: Receiver<RouterMsg>, shared: Arc<ClusterShared>) {
             RouterMsg::Update { id, update } => {
                 let terminal = matches!(update, JobUpdate::Done(_) | JobUpdate::Rejected { .. });
                 if terminal {
+                    // Close the request's trace here — every terminal,
+                    // local or remote, routes through this thread, so one
+                    // site covers them all. A rejection will never grow a
+                    // first token: discard instead of leaking a pending
+                    // record.
+                    match &update {
+                        JobUpdate::Done(c) => {
+                            shared
+                                .trace
+                                .mark(TRACK_SCHED, id, Mark::Done, 0, c.metrics.t_done)
+                        }
+                        JobUpdate::Rejected { .. } => shared.trace.discard(id),
+                        JobUpdate::Token { .. } => {}
+                    }
                     let mut led = shared.ledger.lock().unwrap();
                     match &update {
                         JobUpdate::Done(c) => led.completions.push(c.clone()),
@@ -1223,6 +1309,9 @@ fn scheduler_loop(
         let mut pool_dirty = false;
         match msg {
             Ok(SchedMsg::Submit(job, t_arrive)) => {
+                shared
+                    .trace
+                    .mark(TRACK_SCHED, job.id, Mark::Arrival, 0, t_arrive);
                 let req = Request::new(job.id, job.prompt.len() as u32, job.max_new, t_arrive);
                 jobs.insert(
                     job.id,
@@ -1358,6 +1447,13 @@ fn scheduler_loop(
                 // normal resident charge (released by DecodeDone). An
                 // acked handoff also never falls back to relay, so any
                 // tombstone left by a decode-shard death is garbage.
+                // The commit is also the scheduler's first observation
+                // of the committed KV *and* of the first token (which
+                // the decode shard streams itself): both stamps land
+                // here, after the shard's prefill marks (flushed ahead
+                // of the commit on the same connection).
+                shared.trace.mark(TRACK_SCHED, id, Mark::KvCommit, 0, now);
+                shared.trace.mark(TRACK_SCHED, id, Mark::FirstToken, 0, now);
                 direct_evicted.remove(&id);
                 if let Some(u) = direct_targets.remove(&id) {
                     transports[u].patch_direct(id, now, exec_time);
@@ -1382,6 +1478,7 @@ fn scheduler_loop(
                     if load.active != g.active {
                         divergent_polls[unit] += 1;
                         if divergent_polls[unit] == 3 {
+                            shared.ledger_divergence.fetch_add(1, Ordering::Relaxed);
                             log::warn!(
                                 "unit {unit} engine-truth divergence: shard reports \
                                  {} active / {} KV tokens, ledger holds {} / {} \
@@ -1446,6 +1543,13 @@ fn scheduler_loop(
                         .filter_map(|a| jobs.remove(&a.request.id))
                         .map(|p| {
                             attempts.insert(p.job.id, p.attempts);
+                            shared.trace.mark(
+                                TRACK_SCHED,
+                                p.job.id,
+                                Mark::Dispatch,
+                                inst as u32,
+                                now,
+                            );
                             let mut m =
                                 RequestMetrics::arrive(p.t_arrive, p.job.prompt.len() as u32);
                             m.t_dispatch = now;
@@ -1659,6 +1763,9 @@ pub(crate) trait PrefillEventSink {
     /// A pass completed; `remaining` is the runner's queued backlog in
     /// prompt tokens (the `EndForward` payload of Fig. 5).
     fn end_forward(&self, instance: u32, t_measured: f64, remaining: u32);
+    /// A TTFT trace boundary observed by this runner (work receipt,
+    /// pass start). Best-effort; the default discards it.
+    fn trace(&self, _id: u64, _mark: Mark) {}
 }
 
 /// Route one finished prefill into the cluster: stamp the first token on
@@ -1716,6 +1823,8 @@ struct LocalPrefillSink {
     to_sched: Sender<SchedMsg>,
     router: Sender<RouterMsg>,
     shared: Arc<ClusterShared>,
+    /// This instance's index within the prefill pool (trace attribution).
+    unit: u32,
 }
 
 impl PrefillEventSink for LocalPrefillSink {
@@ -1728,6 +1837,13 @@ impl PrefillEventSink for LocalPrefillSink {
         _target: Option<DirectTarget>,
     ) {
         let t_first = self.shared.clock.now_s();
+        // An in-process handoff has no wire hop: prefill end, KV commit
+        // and the first token coincide on the scheduler clock (the
+        // kv_transfer / decode_queue stages are genuinely zero here).
+        let tr = &self.shared.trace;
+        tr.mark(TRACK_LOCAL_PREFILL, id, Mark::PrefillEnd, self.unit, t_first);
+        tr.mark(TRACK_SCHED, id, Mark::KvCommit, 0, t_first);
+        tr.mark(TRACK_SCHED, id, Mark::FirstToken, 0, t_first);
         deliver_prefilled(
             &self.to_sched,
             &self.router,
@@ -1758,6 +1874,13 @@ impl PrefillEventSink for LocalPrefillSink {
             t_measured,
             remaining: None,
         });
+    }
+
+    fn trace(&self, id: u64, mark: Mark) {
+        let t = self.shared.clock.now_s();
+        self.shared
+            .trace
+            .mark(TRACK_LOCAL_PREFILL, id, mark, self.unit, t);
     }
 }
 
@@ -1836,6 +1959,12 @@ pub(crate) fn run_prefill_unit<S: PrefillEventSink>(
             };
             match msg {
                 PrefillMsg::Work(w) => {
+                    // Work receipt closes the dispatch-transit stage (for
+                    // shard-hosted runners the wire receipt already
+                    // stamped it — first write wins there).
+                    for job in &w {
+                        sink.trace(job.id, Mark::PrefillRecv);
+                    }
                     queue.extend(w);
                     changed = true;
                 }
@@ -1867,6 +1996,8 @@ pub(crate) fn run_prefill_unit<S: PrefillEventSink>(
         };
         // Gauges reflect the post-pop queue while the pass runs.
         publish(&queue);
+        // The in-engine queue wait ends here; the pass itself begins.
+        sink.trace(w.id, Mark::PrefillStart);
         match engine.prefill(&w.prompt) {
             Ok(outcome) => {
                 let t_measured = outcome.exec_time;
@@ -1894,6 +2025,9 @@ pub(crate) trait DecodeEventSink {
     fn done(&self, id: u64, tokens: Vec<i32>, metrics: RequestMetrics);
     /// Terminal failure (ledger release).
     fn rejected(&self, id: u64);
+    /// A TTFT trace boundary observed by this runner (engine admission).
+    /// Best-effort; the default discards it.
+    fn trace(&self, _id: u64, _mark: Mark) {}
 }
 
 /// In-process sink: the decode half of the historical worker wiring.
@@ -1901,6 +2035,9 @@ pub(crate) trait DecodeEventSink {
 struct LocalSink {
     to_sched: Sender<SchedMsg>,
     router: Sender<RouterMsg>,
+    shared: Arc<ClusterShared>,
+    /// Flat pool index of the unit this sink serves (trace attribution).
+    unit: u32,
 }
 
 impl DecodeEventSink for LocalSink {
@@ -1930,6 +2067,13 @@ impl DecodeEventSink for LocalSink {
             update: JobUpdate::Rejected { id },
         });
     }
+
+    fn trace(&self, id: u64, mark: Mark) {
+        let t = self.shared.clock.now_s();
+        self.shared
+            .trace
+            .mark(TRACK_LOCAL_DECODE, id, mark, self.unit, t);
+    }
 }
 
 /// Scheduler-side sinks for one remote decode shard: terminal events are
@@ -1942,14 +2086,19 @@ fn shard_sinks(
     router: Sender<RouterMsg>,
     shared: Arc<ClusterShared>,
     base: usize,
+    addr: &str,
 ) -> ShardSinks {
     let sink = LocalSink {
         to_sched: to_sched.clone(),
         router,
+        shared: shared.clone(),
+        unit: base as u32,
     };
     let (tok, don, rej) = (sink.clone(), sink.clone(), sink);
     let clock = shared.clone();
     let stats_sched = to_sched.clone();
+    let trace_shared = shared.clone();
+    let track = format!("decode:{addr}");
     ShardSinks {
         on_token: Box::new(move |id, index, token| {
             tok.token(id, index, token, clock.clock.now_s());
@@ -1982,6 +2131,9 @@ fn shard_sinks(
                 kv_raw_bytes,
             });
         }),
+        on_trace: Box::new(move |dropped, marks| {
+            trace_shared.trace.record(&track, dropped, &marks);
+        }),
     }
 }
 
@@ -1994,15 +2146,24 @@ fn prefill_shard_sinks(
     router: Sender<RouterMsg>,
     shared: Arc<ClusterShared>,
     base: u32,
+    addr: &str,
 ) -> PrefillSinks {
     let (prefilled_sched, prefilled_router) = (to_sched.clone(), router.clone());
     drop(router);
     let failed_sched = to_sched.clone();
     let ef_sched = to_sched.clone();
     let handoff_sched = to_sched.clone();
+    let trace_shared = shared.clone();
+    let track = format!("prefill:{addr}");
     PrefillSinks {
         on_prefilled: Box::new(move |id, outcome, max_new, metrics| {
             let t_first = shared.clock.now_s();
+            // Relay path: the first token is synthesized here, so the
+            // KV-commit and first-token boundaries coincide with it.
+            shared.trace.mark(TRACK_SCHED, id, Mark::KvCommit, 0, t_first);
+            shared
+                .trace
+                .mark(TRACK_SCHED, id, Mark::FirstToken, 0, t_first);
             deliver_prefilled(
                 &prefilled_sched,
                 &prefilled_router,
@@ -2033,6 +2194,9 @@ fn prefill_shard_sinks(
         }),
         on_evicted: Box::new(move |ids| {
             let _ = to_sched.send(SchedMsg::PrefillEvict { ids });
+        }),
+        on_trace: Box::new(move |dropped, marks| {
+            trace_shared.trace.record(&track, dropped, &marks);
         }),
     }
 }
@@ -2125,6 +2289,9 @@ pub(crate) fn run_decode_unit<S: DecodeEventSink, F: Fn() -> f64>(
                 sink.rejected(job.id);
                 continue;
             }
+            // Timeline instant: the sequence reached a decode engine —
+            // one hook covers the local, relay and direct-handoff paths.
+            sink.trace(job.id, Mark::DecodeAdmit);
             tracks.insert(
                 job.id,
                 Track {

@@ -52,6 +52,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod server;
 pub mod testing;
+pub mod trace;
 pub mod transport;
 pub mod util;
 pub mod workload;

@@ -85,6 +85,27 @@ mod tests {
     }
 
     #[test]
+    fn level_parsing_full_table() {
+        // Every level the module doc advertises, case-insensitively.
+        let table = [
+            ("off", LevelFilter::Off),
+            ("error", LevelFilter::Error),
+            ("warn", LevelFilter::Warn),
+            ("info", LevelFilter::Info),
+            ("debug", LevelFilter::Debug),
+            ("trace", LevelFilter::Trace),
+        ];
+        for (name, want) in table {
+            assert_eq!(parse_level(name), Some(want), "{name}");
+            assert_eq!(parse_level(&name.to_ascii_uppercase()), Some(want));
+        }
+        // No silent fallback for near-misses: the caller decides defaults.
+        assert_eq!(parse_level(""), None);
+        assert_eq!(parse_level(" info"), None);
+        assert_eq!(parse_level("warning"), None);
+    }
+
+    #[test]
     fn init_idempotent() {
         init(LevelFilter::Warn);
         init(LevelFilter::Trace); // second call is a no-op

@@ -178,4 +178,62 @@ mod tests {
         assert_eq!(a.count(), 2);
         assert!((a.mean() - 0.15).abs() < 1e-12);
     }
+
+    #[test]
+    #[should_panic]
+    fn merge_rejects_mismatched_geometry() {
+        let mut a = Histogram::new(1e-4, 1e3, 800);
+        let b = Histogram::new(1e-4, 1e3, 400);
+        a.merge(&b);
+    }
+
+    #[test]
+    fn out_of_range_samples_clamp_but_count() {
+        let mut h = Histogram::new(1.0, 100.0, 10);
+        h.record(0.0); // non-positive → underflow
+        h.record(0.5); // below min → underflow
+        h.record(1e9); // above max → overflow
+        h.record(10.0);
+        assert_eq!(h.count(), 4);
+        // The exact running mean includes the clamped samples verbatim.
+        let want = (0.0 + 0.5 + 1e9 + 10.0) / 4.0;
+        assert!((h.mean() - want).abs() / want < 1e-12);
+        // Extremes stay exact even when they fell outside the bucket range.
+        assert_eq!(h.percentile(0.0), 0.0);
+        assert_eq!(h.percentile(100.0), 1e9);
+        // Interior percentiles never report past the observed maximum.
+        assert!(h.percentile(99.0) <= 1e9);
+    }
+
+    #[test]
+    fn percentiles_are_monotone_in_p() {
+        let mut h = Histogram::latency();
+        let mut r = Rng::new(17);
+        for _ in 0..5_000 {
+            h.record(r.lognormal(-2.0, 1.5));
+        }
+        let mut prev = f64::NEG_INFINITY;
+        for p in 0..=100 {
+            let q = h.percentile(p as f64);
+            assert!(q >= prev, "p{p}: {q} < {prev}");
+            prev = q;
+        }
+    }
+
+    #[test]
+    fn single_value_within_bucket_resolution() {
+        // One repeated sample must come back within a single bucket's
+        // relative width — the ~2% resolution the module doc promises.
+        let mut h = Histogram::latency();
+        for _ in 0..100 {
+            h.record(0.137);
+        }
+        for p in [10.0, 50.0, 90.0] {
+            let q = h.percentile(p);
+            assert!(
+                (q - 0.137).abs() / 0.137 < 0.02,
+                "p{p}: {q} outside bucket resolution"
+            );
+        }
+    }
 }

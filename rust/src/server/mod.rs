@@ -7,7 +7,8 @@
 //!
 //! * `GEN <max_tokens> <prompt...>` — generate; the response streams.
 //! * `STATS` — one-line JSON snapshot of the decode DP pool (per-DP
-//!   occupancy + imbalance gauges).
+//!   occupancy + imbalance gauges), plus the `ttft_stages` per-stage
+//!   TTFT decomposition and the `ledger_divergence` counter.
 //! * `QUIT` — close *this* connection (in-flight work elsewhere is
 //!   untouched).
 //! * `SHUTDOWN` — stop accepting, drain every in-flight job, exit.
@@ -103,6 +104,12 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
             Some("256"),
         )
         .opt("flow", "admission policy: throttle | reject", Some("throttle"))
+        .opt(
+            "trace-out",
+            "write per-request TTFT stage traces (Chrome/Perfetto \
+             trace_event JSON) to this file on exit",
+            None,
+        )
         .opt("seed", "rng seed", Some("7"));
     let args = cmd.parse(argv).map_err(|e| anyhow!("{e}"))?;
     let dir = std::path::PathBuf::from(
@@ -141,6 +148,7 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
         .value("remote-prefill")
         .map(crate::transport::parse_shard_list)
         .unwrap_or_default();
+    let trace_out = args.value("trace-out").map(std::path::PathBuf::from);
     let cfg = RealClusterConfig {
         n_prefill: args.parse_or("prefill", 2u32).map_err(|e| anyhow!("{e}"))?,
         n_decode: args.parse_or("n-decode", 1u32).map_err(|e| anyhow!("{e}"))?,
@@ -164,17 +172,21 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
             .map_err(|e| anyhow!("{e}"))?,
         kv_wire,
         direct_handoff,
+        // Per-request Perfetto records are only retained when there is a
+        // file to write them to; aggregate stage stats are always on.
+        trace_retain: if trace_out.is_some() { TRACE_RETAIN } else { 0 },
         ..Default::default()
     };
 
     if let Some(addr) = args.value("listen") {
-        return serve_tcp(cfg, addr);
+        return serve_tcp(cfg, addr, trace_out);
     }
 
     // Batch mode: synthetic prompts through the cluster; print report.
     let n: usize = args.parse_or("requests", 8).map_err(|e| anyhow!("{e}"))?;
     let max_new: u32 = args.parse_or("max-new", 16).map_err(|e| anyhow!("{e}"))?;
     let cluster = RealCluster::start(cfg)?;
+    let handle = cluster.handle();
     for i in 0..n {
         let prompt = tokenizer::encode(&format!(
             "Request {i}: the staggered batch scheduler buffers requests to \
@@ -196,7 +208,22 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
         );
     }
     println!("\n{}", report.render());
+    write_trace_out(&handle, trace_out.as_deref());
     Ok(())
+}
+
+/// Per-request trace records retained for Perfetto export when
+/// `--trace-out` is set (bounds collector memory on long-lived servers).
+const TRACE_RETAIN: usize = 65_536;
+
+/// Best-effort `--trace-out` export: a trace that fails to write must
+/// never turn a completed serving run into an error.
+fn write_trace_out(cluster: &ClusterHandle, path: Option<&std::path::Path>) {
+    let Some(path) = path else { return };
+    match cluster.write_trace(path) {
+        Ok(n) => log::info!("wrote {n} trace records to {}", path.display()),
+        Err(e) => log::warn!("trace export to {} failed: {e:#}", path.display()),
+    }
 }
 
 /// Map a `--decode-policy` string onto a [`DecodePolicy`]. The load-aware
@@ -218,9 +245,13 @@ fn parse_decode_policy(s: &str, mode: &RealSchedMode) -> Result<DecodePolicy> {
 }
 
 /// Bind `addr` and run the concurrent TCP server until `SHUTDOWN`.
-pub fn serve_tcp(cfg: RealClusterConfig, addr: &str) -> Result<()> {
+pub fn serve_tcp(
+    cfg: RealClusterConfig,
+    addr: &str,
+    trace_out: Option<std::path::PathBuf>,
+) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
-    serve_listener(cfg, listener)
+    serve_listener_traced(cfg, listener, trace_out)
 }
 
 /// Run the concurrent TCP server on an already-bound listener (tests use
@@ -228,6 +259,16 @@ pub fn serve_tcp(cfg: RealClusterConfig, addr: &str) -> Result<()> {
 /// shared [`ClusterHandle`]; `SHUTDOWN` stops the accept loop, joins the
 /// handlers, and drains every in-flight cluster job before returning.
 pub fn serve_listener(cfg: RealClusterConfig, listener: TcpListener) -> Result<()> {
+    serve_listener_traced(cfg, listener, None)
+}
+
+/// [`serve_listener`] plus an optional Perfetto `--trace-out` export
+/// written after the drain (when every span has reached the collector).
+pub fn serve_listener_traced(
+    cfg: RealClusterConfig,
+    listener: TcpListener,
+    trace_out: Option<std::path::PathBuf>,
+) -> Result<()> {
     let addr = listener.local_addr()?;
     log::info!("listening on {addr}");
     let cluster = RealCluster::start(cfg)?;
@@ -266,8 +307,10 @@ pub fn serve_listener(cfg: RealClusterConfig, listener: TcpListener) -> Result<(
     for h in handlers {
         let _ = h.join();
     }
+    let handle = cluster.handle();
     let (_completions, report) = cluster.finish()?;
     log::info!("final report:\n{}", report.render());
+    write_trace_out(&handle, trace_out.as_deref());
     Ok(())
 }
 
@@ -311,7 +354,7 @@ fn handle_connection(
             return Ok(());
         }
         if req == "STATS" {
-            writeln!(out, "STATS {}", cluster.decode_stats().to_json().dump())?;
+            writeln!(out, "STATS {}", cluster.stats_json().dump())?;
             continue;
         }
         if req == "SHUTDOWN" {

@@ -254,6 +254,10 @@ pub struct ShardSinks {
     /// counters, for divergence cross-checks against the scheduler's
     /// ledger and the `kv_wire` gauge.
     pub on_stats: Box<dyn Fn(Vec<proto::UnitLoad>, u64, u64) + Send>,
+    /// A `TraceSpans` batch arrived: `(shard-side shed count, marks)`.
+    /// The marks are already scheduler-clock microseconds; the sink
+    /// attributes them to this shard's track in the trace collector.
+    pub on_trace: Box<dyn Fn(u32, Vec<crate::trace::TraceMark>) + Send>,
 }
 
 /// One prefill job being dispatched to a prefill instance: the prompt
@@ -402,6 +406,9 @@ pub struct PrefillSinks {
     /// The shard died with these jobs queued or mid-handoff: reject them
     /// upstream so nothing leaks.
     pub on_evicted: Box<dyn Fn(Vec<u64>) + Send>,
+    /// A `TraceSpans` batch arrived from the prefill shard (see
+    /// [`ShardSinks::on_trace`]).
+    pub on_trace: Box<dyn Fn(u32, Vec<crate::trace::TraceMark>) + Send>,
 }
 
 #[cfg(test)]

@@ -29,6 +29,7 @@
 //! | prefill → peer | [`Frame::PeerHello`] / [`Frame::PeerHelloAck`] | direct-transfer handshake |
 //! | prefill → peer | [`Frame::HandoffCommit`] | commit a direct KV handoff (also → sched) |
 //! | peer → prefill | [`Frame::HandoffAck`] | the handoff is durably accepted |
+//! | shard → sched | [`Frame::TraceSpans`] | batched TTFT trace marks (best-effort) |
 //!
 //! Reads are driven through the stateful [`FrameReader`], which preserves
 //! partial progress across socket read timeouts — a timeout mid-frame
@@ -55,6 +56,7 @@
 //! `kv_wire_bytes` / `kv_raw_bytes` accounting exact.
 
 use super::codec::{self, KvCodec};
+use crate::trace::{Mark, TraceMark};
 use std::io::{ErrorKind, Read, Write};
 use std::time::{Duration, Instant};
 
@@ -68,7 +70,9 @@ use std::time::{Duration, Instant};
 /// v4: the frame header grows a [`StreamId`] (`[u32 len][u32 stream]`),
 /// so N in-flight KV handoffs multiplex one connection per peer pair
 /// without serializing behind each other.
-pub const PROTO_VERSION: u32 = 4;
+/// v5: shards piggyback batched TTFT trace marks on the control stream
+/// ([`Frame::TraceSpans`], carrying the shard-side shed count).
+pub const PROTO_VERSION: u32 = 5;
 
 /// Logical stream a frame belongs to within one connection. Streams let
 /// independent in-flight transfers (e.g. two concurrent KV handoffs to
@@ -395,6 +399,16 @@ pub enum Frame {
         /// Request id.
         id: u64,
     },
+    /// Batched TTFT trace marks, shard → scheduler on the control
+    /// stream. Best-effort telemetry: the shard sheds marks instead of
+    /// ever blocking the request path, and reports how many it shed.
+    TraceSpans {
+        /// Marks the shard dropped since the last batch (buffer full or
+        /// clock offset not yet established).
+        dropped: u32,
+        /// The marks, already converted to scheduler-clock microseconds.
+        marks: Vec<TraceMark>,
+    },
 }
 
 /// Why a frame could not be decoded.
@@ -453,6 +467,7 @@ const TAG_PEER_HELLO: u8 = 18;
 const TAG_PEER_HELLO_ACK: u8 = 19;
 const TAG_HANDOFF_COMMIT: u8 = 20;
 const TAG_HANDOFF_ACK: u8 = 21;
+const TAG_TRACE_SPANS: u8 = 22;
 
 /// Cap on the address string inside a [`DirectTarget`]: long enough for
 /// any `host:port`, short enough that a corrupt length cannot allocate
@@ -1008,6 +1023,17 @@ pub fn encode(f: &Frame) -> Vec<u8> {
             e.u8(TAG_HANDOFF_ACK);
             e.u64(*id);
         }
+        Frame::TraceSpans { dropped, marks } => {
+            e.u8(TAG_TRACE_SPANS);
+            e.u32(*dropped);
+            e.u32(marks.len() as u32);
+            for m in marks {
+                e.u64(m.id);
+                e.u8(m.mark.to_wire());
+                e.u64(m.t_us);
+                e.u32(m.unit);
+            }
+        }
     }
     e.0
 }
@@ -1138,6 +1164,22 @@ pub fn decode(buf: &[u8]) -> Result<Frame, ProtoError> {
             exec_time: d.f64()?,
         },
         TAG_HANDOFF_ACK => Frame::HandoffAck { id: d.u64()? },
+        TAG_TRACE_SPANS => {
+            let dropped = d.u32()?;
+            let n = d.u32()? as usize;
+            // Each mark is id(8) + mark(1) + t_us(8) + unit(4) bytes.
+            d.check_elems(n, 21)?;
+            let mut marks = Vec::with_capacity(n);
+            for _ in 0..n {
+                marks.push(TraceMark {
+                    id: d.u64()?,
+                    mark: Mark::from_wire(d.u8()?).ok_or(ProtoError::BadValue("trace mark"))?,
+                    t_us: d.u64()?,
+                    unit: d.u32()?,
+                });
+            }
+            Frame::TraceSpans { dropped, marks }
+        }
         t => return Err(ProtoError::BadTag(t)),
     };
     d.finish()?;
@@ -1328,7 +1370,7 @@ mod tests {
     }
 
     fn arbitrary_frame(rng: &mut Rng) -> Frame {
-        match rng.below(21) {
+        match rng.below(22) {
             0 => Frame::Hello {
                 version: rng.next_u64() as u32,
                 kv_wire: arbitrary_codec(rng),
@@ -1434,7 +1476,18 @@ mod tests {
                 max_new: rng.below(1024) as u32,
                 exec_time: rng.f64() * 5.0,
             },
-            _ => Frame::HandoffAck { id: rng.next_u64() },
+            20 => Frame::HandoffAck { id: rng.next_u64() },
+            _ => Frame::TraceSpans {
+                dropped: rng.below(1 << 10) as u32,
+                marks: (0..rng.below(16))
+                    .map(|_| TraceMark {
+                        id: rng.next_u64(),
+                        mark: Mark::from_wire(rng.below(9) as u8).unwrap(),
+                        t_us: rng.next_u64() >> 16,
+                        unit: rng.below(16) as u32,
+                    })
+                    .collect(),
+            },
         }
     }
 

@@ -97,6 +97,12 @@ pub struct RemoteShardConfig {
     pub dead_after: Duration,
     /// Delay between reconnect attempts after a drop.
     pub reconnect_backoff: Duration,
+    /// Epoch the heartbeat `Ping { t_us }` timestamps count from.
+    /// Defaults to "now"; the cluster fabric overrides it with the
+    /// scheduler clock's epoch so shards can align their trace marks to
+    /// the scheduler timebase from the pings alone (error ≤ the one-way
+    /// network delay, ≈ RTT).
+    pub epoch: Instant,
 }
 
 impl RemoteShardConfig {
@@ -111,6 +117,7 @@ impl RemoteShardConfig {
             ping_interval: Duration::from_secs(1),
             dead_after: Duration::from_secs(5),
             reconnect_backoff: Duration::from_millis(500),
+            epoch: Instant::now(),
         }
     }
 }
@@ -168,13 +175,14 @@ impl ShardCore {
         relay_kv: Arc<KvWireCounters>,
     ) -> Self {
         let peer_addr = peer_addr_of(&cfg.addr, peer_port);
+        let epoch = cfg.epoch;
         ShardCore {
             cfg,
             conn: Mutex::new(None),
             alive: AtomicBool::new(true),
             rtt_us: AtomicU64::new(0),
             stop: AtomicBool::new(false),
-            epoch: Instant::now(),
+            epoch,
             ping_nonce: AtomicU64::new(1),
             last_stats_req_us: AtomicU64::new(0),
             role,
@@ -415,11 +423,17 @@ fn attach_shared<P: SchedPeer, T>(
         cap: OUTBOUND_CAP,
         stall_after: shard.core.cfg.connect_timeout,
     };
+    // Backdate the ping timer so the first tick pings immediately: the
+    // shard's trace clock alignment (and first RTT sample) should not
+    // wait out a full ping interval after every (re)connect.
+    let backdated = Instant::now()
+        .checked_sub(shard.core.cfg.ping_interval)
+        .unwrap_or_else(Instant::now);
     let handler = SchedHandler {
         peer: Some(peer),
         last_consumed: 0,
         last_activity: Instant::now(),
-        last_ping: Instant::now(),
+        last_ping: backdated,
     };
     let handle = NetDriver::global().add(conn, Box::new(handler), opts)?;
     *shard.core.conn.lock().unwrap() = Some(handle);
@@ -588,6 +602,7 @@ impl SchedPeer for DecodePeer {
                 kv_wire_bytes,
                 kv_raw_bytes,
             } => (self.sinks.on_stats)(units, kv_wire_bytes, kv_raw_bytes),
+            Frame::TraceSpans { dropped, marks } => (self.sinks.on_trace)(dropped, marks),
             Frame::Pong { t_us, .. } => self.shard.core.on_pong(t_us),
             Frame::Bye => {
                 // Clean shutdown acknowledgement; the close follows as EOF.
@@ -902,6 +917,7 @@ impl SchedPeer for PrefillPeer {
                 }
                 (self.sinks.on_end_forward)(instance, t_measured, remaining)
             }
+            Frame::TraceSpans { dropped, marks } => (self.sinks.on_trace)(dropped, marks),
             Frame::Pong { t_us, .. } => self.shard.core.on_pong(t_us),
             Frame::Bye => {}
             _ => {}
@@ -1057,6 +1073,7 @@ mod tests {
                 evicted.lock().unwrap().extend(ids);
             }),
             on_stats: Box::new(|_, _, _| {}),
+            on_trace: Box::new(|_, _| {}),
         }
     }
 
@@ -1443,6 +1460,7 @@ mod tests {
                 let _ = ef_tx.send((instance, t, remaining));
             }),
             on_evicted: Box::new(|_| {}),
+            on_trace: Box::new(|_, _| {}),
         };
         let relay_kv: Arc<KvWireCounters> = Arc::default();
         let mut units =

@@ -27,6 +27,14 @@ impl RealClock {
             epoch: Instant::now(),
         }
     }
+
+    /// The instant this clock counts from. Sharing an epoch across
+    /// components (e.g. the remote-shard heartbeat pinger) keeps every
+    /// `now_s` reading on one timebase, which the cross-process trace
+    /// alignment depends on.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
 }
 
 impl Default for RealClock {

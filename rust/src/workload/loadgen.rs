@@ -198,6 +198,14 @@ pub fn cli_loadgen(argv: &[String]) -> Result<()> {
             j.insert("prefill_units_alive".into(), v.clone());
         }
     }
+    // Hoist the per-stage TTFT decomposition and the ledger-divergence
+    // counter: a sweep/CI gate reads `ttft_stages` straight off the
+    // report, and divergence must be loud, not buried in the pool dump.
+    for key in ["ttft_stages", "ledger_divergence"] {
+        if let Some(v) = decode_pool.get(key) {
+            j.insert(key.into(), v.clone());
+        }
+    }
     // Hoist the KV wire accounting too: the compression / direct-
     // transfer claims are asserted straight off the report.
     if let Some(kv) = decode_pool.get("kv_wire") {

@@ -103,11 +103,12 @@ pub struct SweepGrid {
     /// KV wire codecs (`raw` | `fp16` | `lz`). Fans out live-mode points
     /// only; the DES models the handoff analytically and ignores it.
     pub codecs: Vec<String>,
-    /// Decode shard counts. Fans out live-mode points only (the DES
-    /// topology is fixed by the paper's Fig. 6(a)); this is the axis the
-    /// multiplexed transport is judged on — handoff/TTFT tails must not
-    /// blow up as the shard count grows past the old thread-per-
-    /// connection comfort zone.
+    /// Local decode pool sizes (`n_decode` DP units in-process). Fans out
+    /// live-mode points only (the DES topology is fixed by the paper's
+    /// Fig. 6(a)); scaling this axis is how handoff/TTFT tails are judged
+    /// as the pool grows. With `--live-remote-decode` the pool comes from
+    /// the listed shard processes instead and this axis merely labels the
+    /// point. Reported as `local_pool_units` in the document.
     pub shards: Vec<u32>,
     /// Seeded runs per grid point.
     pub replicas: u32,
@@ -155,7 +156,7 @@ impl SweepGrid {
             ("kv_budget_tokens", Json::from(self.kv_budgets.clone())),
             ("kv_wire", Json::from(self.codecs.clone())),
             (
-                "decode_shards",
+                "local_pool_units",
                 Json::Arr(self.shards.iter().map(|&s| Json::from(s)).collect()),
             ),
             ("replicas", Json::from(self.replicas)),
@@ -205,7 +206,8 @@ struct PointParams {
     kv_budget: u64,
     /// Live points only; the DES ignores the codec axis.
     codec: Option<String>,
-    /// Live points only; the DES topology is fixed.
+    /// Live points only; the DES topology is fixed. Sizes the in-process
+    /// decode pool (`local_pool_units` in the document).
     shards: Option<u32>,
 }
 
@@ -224,7 +226,7 @@ impl PointParams {
             pairs.push(("kv_wire", Json::from(c.as_str())));
         }
         if let Some(s) = self.shards {
-            pairs.push(("decode_shards", Json::from(s)));
+            pairs.push(("local_pool_units", Json::from(s)));
         }
         Json::obj(pairs)
     }
@@ -335,6 +337,7 @@ fn run_des_replica(p: &PointParams, grid: &SweepGrid, seed: u64) -> Result<Json>
         ("completed", Json::from(r.completed)),
         ("offered", Json::from(r.offered)),
         ("rejected", Json::from(r.report.rejected)),
+        ("ttft_stages", r.ttft_stages),
     ]))
 }
 
@@ -396,6 +399,10 @@ fn run_live_replica(p: &PointParams, grid: &SweepGrid, live: &LiveOpts, seed: u6
         ("completed", Json::from(report.completed)),
         ("offered", Json::from(offered)),
         ("rejected", Json::from(report.busy)),
+        (
+            "ttft_stages",
+            pool.get("ttft_stages").cloned().unwrap_or(Json::Null),
+        ),
     ]))
 }
 
@@ -756,7 +763,7 @@ pub fn cli_sweep(argv: &[String]) -> Result<()> {
     )
     .opt(
         "shards",
-        "comma list of live-mode decode shard counts",
+        "comma list of live-mode local decode pool sizes (DP units)",
         Some("2"),
     )
     .opt("replicas", "seeded runs per grid point", Some("3"))

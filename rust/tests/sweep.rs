@@ -268,8 +268,14 @@ fn live_mock_cluster_smoke() {
     let pt = &points[0];
     assert_eq!(pt.path(&["params", "mode"]).and_then(Json::as_str), Some("live"));
     assert_eq!(pt.path(&["params", "kv_wire"]).and_then(Json::as_str), Some("raw"));
-    assert_eq!(pt.f64_at(&["params", "decode_shards"]), Some(2.0));
+    assert_eq!(pt.f64_at(&["params", "local_pool_units"]), Some(2.0));
     let rep = &pt.get("replicas").and_then(Json::as_arr).unwrap()[0];
     assert!(rep.f64_at(&["completed"]).unwrap() > 0.0, "live run completed nothing");
     assert!(rep.f64_at(&["ttft_p99_ms"]).unwrap() > 0.0);
+    // The live replica carries the per-stage TTFT decomposition fetched
+    // off the server's STATS snapshot.
+    assert!(
+        rep.f64_at(&["ttft_stages", "requests"]).unwrap_or(0.0) > 0.0,
+        "live replica has no finalized stage traces"
+    );
 }

@@ -65,6 +65,7 @@ fn prefill_sinks() -> (PrefillSinks, PrefillEvents) {
             on_evicted: Box::new(move |ids| {
                 let _ = e_tx.send(ids);
             }),
+            on_trace: Box::new(|_, _| {}),
         },
         PrefillEvents {
             prefilled,
@@ -366,6 +367,7 @@ fn decode_sinks(tokens: Arc<AtomicU32>, dones: Arc<AtomicU32>) -> (ShardSinks, D
                 let _ = e_tx.send(ids);
             }),
             on_stats: Box::new(|_, _, _| {}),
+            on_trace: Box::new(|_, _| {}),
         },
         DecodeEvents { evicted },
     )
