@@ -40,7 +40,7 @@ use crate::scheduler::staggered::{
     DispatchBatch, SchedulerAction, SchedulerEvent, StaggeredConfig, StaggeredScheduler,
 };
 use crate::scheduler::state::DpState;
-use crate::scheduler::types::{DpUnitId, Request};
+use crate::scheduler::types::{DpUnitId, Request, SloClass};
 use crate::util::Rng;
 use std::collections::HashMap;
 
@@ -59,6 +59,12 @@ pub enum SchedMode {
 pub enum DecodePolicy {
     /// Algorithm 3: IQR outlier masking + lexicographic ⟨B, K⟩.
     LoadAware(DecodeSchedConfig),
+    /// Algorithm 3 extended with deadline urgency: a join carrying a
+    /// deadline is scored `u·B̂ + (1−u)·K̂` over the admissible units
+    /// (`u = 1/(1+slack)`), so urgent sequences minimize batch-depth
+    /// interference while relaxed ones pack KV headroom. Joins without a
+    /// deadline fall back to the pure load-aware rule.
+    DeadlineAware(DecodeSchedConfig),
     /// Blind strict round-robin (equal counts, blind to load).
     RoundRobin,
     /// Blind random routing (what session-affinity hashing degenerates
@@ -71,6 +77,7 @@ impl DecodePolicy {
     pub fn name(&self) -> &'static str {
         match self {
             DecodePolicy::LoadAware(_) => "load-aware",
+            DecodePolicy::DeadlineAware(_) => "deadline-aware",
             DecodePolicy::RoundRobin => "round-robin",
             DecodePolicy::Random => "random",
         }
@@ -126,6 +133,11 @@ pub struct DecodeJoin {
     pub kv_tokens: u32,
     /// Output tokens still to generate.
     pub remaining_out: u32,
+    /// SLO class (placement order: interactive before batch).
+    pub class: SloClass,
+    /// Absolute completion deadline on the driver clock, seconds
+    /// (deadline-aware placement weight; `None` = pure load).
+    pub deadline: Option<f64>,
 }
 
 impl DecodeJoin {
@@ -414,7 +426,8 @@ impl DispatchCore {
     /// Place `joins` across the decode pool under the configured policy.
     ///
     /// Joins with no admissible unit (per [`DecodeAdmission`]) come back
-    /// in `parked`. Placement order is heaviest-first
+    /// in `parked`. Placement order is SLO class first (interactive
+    /// before standard before batch), heaviest-first within a class
     /// ("fill-the-valley", §4.3.2); each placement updates the ledger and
     /// occupancy gauges at time `now` and is committed to the driver via
     /// [`DecodeAdmission::commit`] so intra-cycle admissibility stays
@@ -425,7 +438,12 @@ impl DispatchCore {
         now: f64,
         admission: &mut dyn DecodeAdmission,
     ) -> DecodePlacementOutcome {
-        joins.sort_by(|a, b| b.total_len().cmp(&a.total_len()));
+        joins.sort_by(|a, b| {
+            a.class
+                .rank()
+                .cmp(&b.class.rank())
+                .then(b.total_len().cmp(&a.total_len()))
+        });
         let mut placed = Vec::new();
         let mut parked = Vec::new();
         for j in joins {
@@ -449,6 +467,37 @@ impl DispatchCore {
                     let a = schedule_batch(cfg, vec![req], &mut view);
                     view.iter().position(|d| d.id == a[0].unit).unwrap()
                 }
+                DecodePolicy::DeadlineAware(cfg) => match j.deadline {
+                    // Deadline-less joins (legacy clients): pure load.
+                    None => {
+                        let req = Request::new(j.request_id, j.kv_tokens, j.remaining_out, 0.0);
+                        let a = schedule_batch(cfg, vec![req], &mut view);
+                        view.iter().position(|d| d.id == a[0].unit).unwrap()
+                    }
+                    Some(deadline) => {
+                        // Urgency interpolates the objective between
+                        // batch depth (interference → per-step latency)
+                        // and KV occupancy (memory packing). Norms are
+                        // over the admissible view; +1 avoids 0/0 on an
+                        // idle pool. Ties break to the lower unit index
+                        // (deterministic, DES/live parity).
+                        let slack = (deadline - now).max(0.0);
+                        let urgency = 1.0 / (1.0 + slack);
+                        let max_b = view.iter().map(|d| d.batch).max().unwrap_or(0) as f64;
+                        let max_k = view.iter().map(|d| d.kv_tokens).max().unwrap_or(0) as f64;
+                        let score = |d: &DpState| {
+                            urgency * d.batch as f64 / (max_b + 1.0)
+                                + (1.0 - urgency) * d.kv_tokens as f64 / (max_k + 1.0)
+                        };
+                        let mut best = 0usize;
+                        for i in 1..view.len() {
+                            if score(&view[i]) < score(&view[best]) {
+                                best = i;
+                            }
+                        }
+                        best
+                    }
+                },
                 DecodePolicy::Random => self.place_rng.index(view.len()),
                 DecodePolicy::RoundRobin => {
                     let i = self.rr_cursor % view.len();
@@ -557,6 +606,8 @@ mod tests {
             request_id: id,
             kv_tokens: kv,
             remaining_out: out,
+            class: SloClass::Standard,
+            deadline: None,
         }
     }
 
@@ -666,6 +717,91 @@ mod tests {
         assert!((busy - 2.0).abs() < 1e-9, "1 active seq for 2 s: {busy}");
         assert_eq!(stats.units.iter().map(|u| u.placed).sum::<u64>(), 1);
         assert!(stats.imbalance() >= 1.0);
+    }
+
+    #[test]
+    fn placement_orders_interactive_before_batch() {
+        let mut c = DispatchCore::new(&core_cfg(staggered(), DecodePolicy::RoundRobin));
+        let joins = vec![
+            DecodeJoin {
+                class: SloClass::Batch,
+                ..join(1, 900, 10)
+            },
+            DecodeJoin {
+                class: SloClass::Interactive,
+                ..join(2, 100, 10)
+            },
+            join(3, 500, 10),
+        ];
+        let out = c.place_decode(joins, 0.0, &mut FnAdmission(|_, _| true));
+        let order: Vec<u64> = out.placed.iter().map(|(j, _)| j.request_id).collect();
+        assert_eq!(order, vec![2, 3, 1], "class rank beats heaviest-first");
+    }
+
+    #[test]
+    fn deadline_aware_without_deadline_matches_load_aware() {
+        let place = |policy: DecodePolicy| {
+            let mut c = DispatchCore::new(&core_cfg(staggered(), policy));
+            // Pre-load i0d0 so pure load must avoid it.
+            c.place_decode(
+                vec![join(1, 100, 10), join(2, 100, 10)],
+                0.0,
+                &mut FnAdmission(|u, _| u == DpUnitId::new(0, 0)),
+            );
+            let out = c.place_decode(
+                (3..9).map(|i| join(i, 100 + i as u32, 10)).collect(),
+                0.1,
+                &mut FnAdmission(|_, _| true),
+            );
+            out.placed
+                .iter()
+                .map(|(j, u)| (j.request_id, *u))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(
+            place(DecodePolicy::LoadAware(DecodeSchedConfig::default())),
+            place(DecodePolicy::DeadlineAware(DecodeSchedConfig::default())),
+            "class-less joins fall back to the pure load-aware rule"
+        );
+    }
+
+    #[test]
+    fn deadline_aware_urgent_join_prefers_shallow_batch() {
+        let mut c = DispatchCore::new(&core_cfg(
+            staggered(),
+            DecodePolicy::DeadlineAware(DecodeSchedConfig::default()),
+        ));
+        // i0d0: deep batch (3 short seqs); i0d1: one huge KV resident.
+        for i in 0..3 {
+            c.place_decode(
+                vec![join(i, 50, 5)],
+                0.0,
+                &mut FnAdmission(|u, _| u == DpUnitId::new(0, 0)),
+            );
+        }
+        c.place_decode(
+            vec![join(10, 20_000, 5)],
+            0.0,
+            &mut FnAdmission(|u, _| u == DpUnitId::new(0, 1)),
+        );
+        let two = |u: DpUnitId, _| u == DpUnitId::new(0, 0) || u == DpUnitId::new(0, 1);
+        // Urgent (deadline now): batch depth dominates → pick i0d1.
+        let urgent = DecodeJoin {
+            class: SloClass::Interactive,
+            deadline: Some(1.0),
+            ..join(20, 100, 10)
+        };
+        let out = c.place_decode(vec![urgent], 1.0, &mut FnAdmission(two));
+        assert_eq!(out.placed[0].1, DpUnitId::new(0, 1));
+        c.on_decode_leave(20, 1.0);
+        // Relaxed (distant deadline): KV packing dominates → pick i0d0.
+        let relaxed = DecodeJoin {
+            class: SloClass::Batch,
+            deadline: Some(1_000.0),
+            ..join(21, 100, 10)
+        };
+        let out = c.place_decode(vec![relaxed], 1.0, &mut FnAdmission(two));
+        assert_eq!(out.placed[0].1, DpUnitId::new(0, 0));
     }
 
     #[test]

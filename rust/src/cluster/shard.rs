@@ -68,6 +68,7 @@ use crate::engine::sampler::Sampling;
 use crate::engine::PrefillOutcome;
 use crate::metrics::RequestMetrics;
 use crate::runtime::artifacts_dir;
+use crate::scheduler::types::SloClass;
 use crate::transport::driver::{ConnHandler, ConnIo, ConnOptions, NetDriver};
 use crate::transport::peer::PeerMux;
 use crate::transport::proto::{
@@ -391,6 +392,7 @@ impl PrefillEventSink for PrefillWireSink {
         id: u64,
         outcome: PrefillOutcome,
         max_new: u32,
+        class: SloClass,
         _metrics: RequestMetrics,
         target: Option<DirectTarget>,
     ) {
@@ -399,7 +401,7 @@ impl PrefillEventSink for PrefillWireSink {
         self.trace.push(id, Mark::PrefillEnd, self.unit);
         if let Some(t) = target.filter(|_| max_new > 1) {
             let codec = load_codec(&self.codec);
-            match self.peers.handoff(codec, &t, id, &outcome, max_new - 1) {
+            match self.peers.handoff(codec, &t, id, &outcome, max_new - 1, class) {
                 Ok(()) => {
                     // Acked by the decode shard: tell the scheduler with
                     // the lightweight commit — no KV on this connection.
@@ -412,6 +414,7 @@ impl PrefillEventSink for PrefillWireSink {
                         first_token: outcome.first_token,
                         kv_len: outcome.len as u32,
                         max_new: max_new - 1,
+                        class,
                         exec_time: outcome.exec_time,
                     }));
                     return;
@@ -935,6 +938,7 @@ fn handle_scheduler_frame(
             first_token,
             kv_len,
             max_new,
+            class,
             k,
             v,
         } => {
@@ -959,6 +963,7 @@ fn handle_scheduler_frame(
                     passes: 0,
                 }),
                 max_new,
+                class,
                 // Shard-local bookkeeping only (KV gauge); real metrics
                 // stay with the scheduler.
                 metrics: RequestMetrics::arrive(0.0, kv_len),
@@ -994,6 +999,7 @@ fn handle_scheduler_frame(
                         id: j.id,
                         prompt: j.prompt,
                         max_new: j.max_new,
+                        class: j.class,
                         // Shard-local bookkeeping only; the scheduler
                         // keeps the real wall-clock metrics.
                         metrics: RequestMetrics::arrive(0.0, len),
@@ -1192,6 +1198,7 @@ impl ConnHandler for PeerServerHandler {
                 first_token,
                 kv_len,
                 max_new,
+                class,
                 exec_time,
             } => {
                 if self.poisoned.remove(&id) {
@@ -1231,6 +1238,7 @@ impl ConnHandler for PeerServerHandler {
                         passes: 1,
                     }),
                     max_new,
+                    class,
                     // Shard-local bookkeeping only (KV gauge); real
                     // metrics live scheduler-side in the direct
                     // registration made at dispatch.
@@ -1391,6 +1399,7 @@ mod tests {
             first_token: 0x30,
             kv_len: 5,
             max_new: 3,
+            class: SloClass::Standard,
             k: Vec::new(),
             v: Vec::new(),
         });
@@ -1450,6 +1459,7 @@ mod tests {
             first_token: 0x30,
             kv_len: 2,
             max_new: 2,
+            class: SloClass::Interactive,
             k: Vec::new(),
             v: Vec::new(),
         });
@@ -1489,12 +1499,14 @@ mod tests {
                 proto::PrefillJobWire {
                     id: 7,
                     max_new: 4,
+                    class: SloClass::Standard,
                     prompt: vec![1, 2, 3, 4, 5],
                     target: None,
                 },
                 proto::PrefillJobWire {
                     id: 8,
                     max_new: 4,
+                    class: SloClass::Batch,
                     prompt: vec![9; 12],
                     target: None,
                 },
@@ -1542,6 +1554,7 @@ mod tests {
             first_token: 0,
             kv_len: 1,
             max_new: 1,
+            class: SloClass::Standard,
             k: Vec::new(),
             v: Vec::new(),
         });
@@ -1574,6 +1587,7 @@ mod tests {
             jobs: vec![proto::PrefillJobWire {
                 id: 11,
                 max_new: 2,
+                class: SloClass::Standard,
                 prompt: vec![1, 2],
                 target: None,
             }],

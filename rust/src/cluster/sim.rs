@@ -22,13 +22,13 @@ use super::dispatch::{
 };
 use super::events::EventQueue;
 use super::prefill::PrefillEngine;
-use crate::metrics::{DecodePoolStats, RequestMetrics, ServingReport};
+use crate::metrics::{DecodePoolStats, LatencyRecorder, RequestMetrics, ServingReport};
 use crate::scheduler::baseline::ImmediatePolicy;
 use crate::scheduler::decode::DecodeSchedConfig;
 use crate::scheduler::pbaa::Assignment;
 use crate::scheduler::staggered::{SchedulerAction, StaggeredConfig};
 use crate::json::Json;
-use crate::scheduler::types::{DpUnitId, Request};
+use crate::scheduler::types::{DpUnitId, Request, SloClass};
 use crate::trace::{Mark, TraceCollector};
 use crate::workload::WorkloadSpec;
 
@@ -40,6 +40,10 @@ pub use super::dispatch::SchedMode;
 pub enum DecodePlacement {
     /// Algorithm 3: IQR masking + lexicographic ⟨B, K⟩.
     IqrLex(DecodeSchedConfig),
+    /// Algorithm 3 with per-request deadline urgency folded into the
+    /// lexicographic key (classed workloads; class-less requests fall
+    /// back to pure load).
+    DeadlineAware(DecodeSchedConfig),
     /// Blind hash/random routing (the Fig. 7–8 baseline).
     Random,
     /// Blind strict round-robin (ablation).
@@ -51,6 +55,7 @@ impl DecodePlacement {
     pub fn policy(&self) -> DecodePolicy {
         match self {
             DecodePlacement::IqrLex(c) => DecodePolicy::LoadAware(c.clone()),
+            DecodePlacement::DeadlineAware(c) => DecodePolicy::DeadlineAware(c.clone()),
             DecodePlacement::Random => DecodePolicy::Random,
             DecodePlacement::RoundRobin => DecodePolicy::RoundRobin,
         }
@@ -248,6 +253,10 @@ pub struct SimReport {
     /// Per-stage TTFT decomposition (the same span vocabulary the live
     /// cluster traces emit, so sim and live reports are comparable).
     pub ttft_stages: Json,
+    /// Requests shed or rejected, indexed by [`SloClass::rank`].
+    pub rejected_by_class: [u64; 3],
+    /// Post-warmup TTFT per SLO class, indexed by [`SloClass::rank`].
+    pub ttft_by_class: [LatencyRecorder; 3],
 }
 
 impl SimReport {
@@ -295,6 +304,8 @@ pub struct Simulation {
     straggler_waste_s: f64,
     completed: usize,
     rejected: u64,
+    rejected_by_class: [u64; 3],
+    ttft_by_class: [LatencyRecorder; 3],
     /// TTFT stage decomposition over virtual time (stats only, no
     /// Perfetto retention — the DES has nothing to export per-process).
     trace: TraceCollector,
@@ -352,6 +363,8 @@ impl Simulation {
             straggler_waste_s: 0.0,
             completed: 0,
             rejected: 0,
+            rejected_by_class: [0; 3],
+            ttft_by_class: SloClass::ALL.map(|c| LatencyRecorder::new(c.name())),
             trace: TraceCollector::new(0),
             cfg,
         }
@@ -460,6 +473,7 @@ impl Simulation {
                 }
                 SchedulerAction::Reject(r) => {
                     self.rejected += 1;
+                    self.rejected_by_class[r.class.rank()] += 1;
                     // Mark as completed-with-rejection so the run drains.
                     self.completed += 1;
                     // No first token will ever come: drop the trace record.
@@ -606,6 +620,8 @@ impl Simulation {
             request_id: i as u64,
             kv_tokens: self.requests[i].input_tokens,
             remaining_out: self.requests[i].output_tokens - 1,
+            class: self.requests[i].class,
+            deadline: self.requests[i].deadline,
         });
         self.place_joins(now);
         for inst in 0..self.decode.len() {
@@ -674,6 +690,9 @@ impl Simulation {
         if self.requests[i].arrival >= self.cfg.warmup {
             let m = self.metrics[i];
             self.report.absorb(&m);
+            if let Some(t) = m.ttft() {
+                self.ttft_by_class[self.requests[i].class.rank()].record(t);
+            }
         }
     }
 
@@ -694,6 +713,8 @@ impl Simulation {
             lost_signals: self.lost_signals,
             t_end: self.q.now(),
             ttft_stages: self.trace.to_json(),
+            rejected_by_class: self.rejected_by_class,
+            ttft_by_class: self.ttft_by_class,
         }
     }
 }
@@ -783,6 +804,66 @@ mod tests {
         // stage must be populated (not collapsed away).
         let sd = j.f64_at(&["stages", "sched_dispatch", "mean_ms"]).unwrap();
         assert!(sd > 0.0, "l_net never showed up in sched_dispatch");
+    }
+
+    #[test]
+    fn deadline_aware_matches_load_aware_without_deadlines() {
+        // Class-less traffic must make the urgency term inert: identical
+        // placement, identical metrics.
+        let mut cfg = small_cfg(10.0, true);
+        cfg.decode = DecodePlacement::DeadlineAware(DecodeSchedConfig::default());
+        let da = Simulation::run(&cfg);
+        let la = Simulation::run(&small_cfg(10.0, true));
+        assert_eq!(da.decode_pool.policy, "deadline-aware");
+        assert_eq!(da.completed, da.offered);
+        assert!((da.report.ttft.mean() - la.report.ttft.mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overload_sheds_batch_before_interactive() {
+        // A single cramped prefill unit, overloaded but sized so
+        // interactive + standard traffic alone (70% of 10 QPS) fits the
+        // ~7.5 req/s capacity (chunk 1024, mean 1K-token prompts, pass
+        // ≈ 0.13 s) while the full offered load does not: class-ordered
+        // batch formation serves batch only from the leftover, so batch
+        // both completes some work (TTFT comparable) *and* starves into
+        // the N_limit overflow, while interactive always wins placement.
+        let mut cfg = small_cfg(0.0, true);
+        cfg.topology = SimTopology {
+            n_prefill: 1,
+            dp_prefill: 1,
+            c_chunk: 1024,
+            n_decode: 1,
+            dp_decode: 4,
+        };
+        if let SchedMode::Staggered(sc) = &mut cfg.mode {
+            sc.pbaa.n_limit = 4;
+        }
+        cfg.warmup = 0.0;
+        cfg.max_time = 500.0;
+        cfg.workload = WorkloadSpec::paper_short(10.0, 20.0, 21);
+        cfg.workload.class_mix = Some([0.2, 0.5, 0.3]);
+        let r = Simulation::run_trace(&cfg, cfg.workload.generate());
+        let shed = r.rejected_by_class;
+        assert!(
+            shed[SloClass::Batch.rank()] > 0,
+            "overload never shed batch: {shed:?}"
+        );
+        assert_eq!(
+            shed[SloClass::Interactive.rank()],
+            0,
+            "interactive shed while batch was admitted: {shed:?}"
+        );
+        // The TTFT ordering the classes exist for.
+        let i = &r.ttft_by_class[SloClass::Interactive.rank()];
+        let b = &r.ttft_by_class[SloClass::Batch.rank()];
+        assert!(i.count() > 0 && b.count() > 0, "both classes must finish some work");
+        assert!(
+            i.percentile(99.0) < b.percentile(99.0),
+            "interactive p99 {:.3}s !< batch p99 {:.3}s",
+            i.percentile(99.0),
+            b.percentile(99.0)
+        );
     }
 
     #[test]

@@ -55,7 +55,7 @@ use crate::scheduler::interval::IntervalConfig;
 use crate::scheduler::pbaa::PbaaConfig;
 use crate::scheduler::staggered::{SchedulerAction, StaggeredConfig};
 use crate::scheduler::state::DpState;
-use crate::scheduler::types::{DpUnitId, Request};
+use crate::scheduler::types::{DpUnitId, Request, SloClass};
 use crate::transport::proto::{DirectTarget, UnitLoad};
 use crate::transport::remote::{connect_prefill_shard, connect_shard, RemoteShardConfig};
 use crate::transport::{
@@ -263,16 +263,13 @@ impl Default for RealClusterConfig {
     }
 }
 
-/// One submitted generation job.
-pub struct Job {
-    /// Unique id (use [`ClusterHandle::next_id`] unless the caller manages
-    /// its own id space end to end).
-    pub id: u64,
-    /// Prompt token ids.
-    pub prompt: Vec<i32>,
-    /// Max tokens to generate.
-    pub max_new: u32,
-}
+/// One submitted generation job — the first-class request descriptor
+/// ([`JobSpec`](crate::scheduler::types::JobSpec)) under its historical
+/// name: id, prompt, generation cap, SLO class and optional deadline
+/// travel together from the frontend down to Algorithm 3 placement.
+/// Use [`ClusterHandle::next_id`] for the id unless the caller manages
+/// its own id space end to end.
+pub use crate::scheduler::types::JobSpec as Job;
 
 /// Completed generation.
 #[derive(Debug, Clone)]
@@ -348,6 +345,7 @@ enum SchedMsg {
         id: u64,
         outcome: Box<PrefillOutcome>,
         max_new: u32,
+        class: SloClass,
         metrics: RequestMetrics,
     },
     /// A decode unit released a sequence (finished or rejected): free
@@ -486,6 +484,12 @@ impl ClusterHandle {
                 "ledger_divergence".to_string(),
                 Json::from(self.shared.ledger_divergence.load(Ordering::Relaxed)),
             );
+            let (overload, shed) = {
+                let adm = self.shared.admission.lock().unwrap();
+                (adm.rejected_overload(), adm.rejected_shed())
+            };
+            map.insert("rejected_overload".to_string(), per_class_json(overload));
+            map.insert("rejected_shed".to_string(), per_class_json(shed));
         }
         j
     }
@@ -511,8 +515,16 @@ impl ClusterHandle {
     /// Flow-controlled streaming submission — the serving-frontend path.
     /// Consults the [`AdmissionController`] first: at capacity (or while
     /// shedding during a cool-down) the request never reaches the
-    /// scheduler and the caller must reply `BUSY`.
-    pub fn try_submit(&self, prompt: Vec<i32>, max_new: u32) -> Admission {
+    /// scheduler and the caller must reply `BUSY`. Shedding is
+    /// class-ordered: `Batch` sheds first, and `Interactive` is never
+    /// refused while a lower class is still admitted.
+    pub fn try_submit_spec(
+        &self,
+        prompt: Vec<i32>,
+        max_new: u32,
+        class: SloClass,
+        deadline_ms: Option<f64>,
+    ) -> Admission {
         let now = self.now_s();
         {
             // Decide and reserve the in-flight slot under the ledger lock
@@ -520,7 +532,8 @@ impl ClusterHandle {
             // (lock order ledger → admission, as in `finish`).
             let mut led = self.shared.ledger.lock().unwrap();
             let mut adm = self.shared.admission.lock().unwrap();
-            let probe = Request::new(u64::MAX, prompt.len() as u32, max_new, now);
+            let probe =
+                Request::new(u64::MAX, prompt.len() as u32, max_new, now).with_class(class);
             match adm.try_admit(now, led.inflight, probe) {
                 AdmissionDecision::Admit => led.inflight += 1,
                 AdmissionDecision::RejectQueueFull => {
@@ -535,12 +548,16 @@ impl ClusterHandle {
         // for this id (the update is causally after the submit).
         let (tx, rx) = channel();
         let _ = self.router.send(RouterMsg::Register { id, tx });
-        self.send_job(Job {
-            id,
-            prompt,
-            max_new,
-        });
+        let mut job = Job::new(id, prompt, max_new).with_class(class);
+        job.deadline_ms = deadline_ms;
+        self.send_job(job);
         Admission::Accepted { id, updates: rx }
+    }
+
+    /// Legacy `(prompt, max_new)` submission: a standard-class spec with
+    /// no deadline — byte-identical behaviour for unannotated clients.
+    pub fn try_submit(&self, prompt: Vec<i32>, max_new: u32) -> Admission {
+        self.try_submit_spec(prompt, max_new, SloClass::default(), None)
     }
 
     /// Fire-and-forget submission; the result lands in the cluster ledger
@@ -553,6 +570,16 @@ impl ClusterHandle {
     fn send_job(&self, job: Job) {
         let _ = self.to_sched.send(SchedMsg::Submit(job, self.now_s()));
     }
+}
+
+/// A per-class counter array ([`SloClass::rank`]-indexed) as a
+/// `{class name: count}` JSON object.
+fn per_class_json(counts: [u64; 3]) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    for c in SloClass::ALL {
+        m.insert(c.name().to_string(), Json::from(counts[c.rank()]));
+    }
+    Json::Obj(m)
 }
 
 /// The running cluster: hand out [`ClusterHandle`]s to frontend threads,
@@ -950,6 +977,7 @@ fn router_loop(rx: Receiver<RouterMsg>, shared: Arc<ClusterShared>) {
 struct JoinPayload {
     outcome: Box<PrefillOutcome>,
     max_new: u32,
+    class: SloClass,
     metrics: RequestMetrics,
 }
 
@@ -994,24 +1022,30 @@ impl DecodeAdmission for PoolAdmission<'_> {
 }
 
 /// Park one prefilled job for decode placement (join + engine payload).
+#[allow(clippy::too_many_arguments)]
 fn park_join(
     parked: &mut Vec<DecodeJoin>,
     payloads: &mut HashMap<u64, JoinPayload>,
     id: u64,
     outcome: Box<PrefillOutcome>,
     max_new: u32,
+    class: SloClass,
+    deadline: Option<f64>,
     metrics: RequestMetrics,
 ) {
     parked.push(DecodeJoin {
         request_id: id,
         kv_tokens: outcome.len as u32,
         remaining_out: max_new,
+        class,
+        deadline,
     });
     payloads.insert(
         id,
         JoinPayload {
             outcome,
             max_new,
+            class,
             metrics,
         },
     );
@@ -1137,6 +1171,7 @@ fn place_parked(
             id: j.request_id,
             outcome: p.outcome,
             max_new: p.max_new,
+            class: p.class,
             metrics: p.metrics,
         };
         if transports[inst].admit(job).is_err() {
@@ -1264,6 +1299,11 @@ fn scheduler_loop(
     });
     // Job payloads keyed by request id (the scheduler works on Requests).
     let mut jobs: HashMap<u64, PendingJob> = HashMap::new();
+    // Absolute completion deadlines (scheduler clock, seconds) for jobs
+    // that declared one. Deadlines never cross the wire, so the scheduler
+    // keeps them here and re-attaches them to every decode join it builds
+    // — the deadline-aware placement policy's input.
+    let mut deadlines: HashMap<u64, f64> = HashMap::new();
     // Decode joins awaiting placement + their engine payloads.
     let mut parked: Vec<DecodeJoin> = Vec::new();
     let mut payloads: HashMap<u64, JoinPayload> = HashMap::new();
@@ -1312,7 +1352,14 @@ fn scheduler_loop(
                 shared
                     .trace
                     .mark(TRACK_SCHED, job.id, Mark::Arrival, 0, t_arrive);
-                let req = Request::new(job.id, job.prompt.len() as u32, job.max_new, t_arrive);
+                let mut req =
+                    Request::new(job.id, job.prompt.len() as u32, job.max_new, t_arrive)
+                        .with_class(job.class);
+                if let Some(ms) = job.deadline_ms {
+                    let d = t_arrive + ms / 1000.0;
+                    deadlines.insert(job.id, d);
+                    req = req.with_deadline(d);
+                }
                 jobs.insert(
                     job.id,
                     PendingJob {
@@ -1343,6 +1390,7 @@ fn scheduler_loop(
                 id,
                 outcome,
                 max_new,
+                class,
                 metrics,
             }) => {
                 if direct_evicted.remove(&id) {
@@ -1364,6 +1412,7 @@ fn scheduler_loop(
                         id,
                         outcome,
                         max_new,
+                        class,
                         metrics,
                     });
                     if transports[u].alive() {
@@ -1381,15 +1430,21 @@ fn scheduler_loop(
                             id,
                             job.outcome,
                             job.max_new,
+                            job.class,
+                            deadlines.get(&id).copied(),
                             job.metrics,
                         );
                     }
                 } else {
-                    park_join(&mut parked, &mut payloads, id, outcome, max_new, metrics);
+                    let deadline = deadlines.get(&id).copied();
+                    park_join(
+                        &mut parked, &mut payloads, id, outcome, max_new, class, deadline, metrics,
+                    );
                 }
             }
             Ok(SchedMsg::DecodeDone { id }) => {
                 direct_targets.remove(&id);
+                deadlines.remove(&id);
                 pool_dirty |= core.on_decode_leave(id, now).is_some();
             }
             Ok(SchedMsg::Evict { ids }) => {
@@ -1398,6 +1453,7 @@ fn scheduler_loop(
                 // actually still owned are rejected, so a sequence that
                 // completed a moment earlier is never double-terminated.
                 for id in ids {
+                    deadlines.remove(&id);
                     if core.on_decode_leave(id, now).is_some() {
                         pool_dirty = true;
                         if direct_targets.remove(&id).is_some() {
@@ -1419,6 +1475,7 @@ fn scheduler_loop(
                 // and a decode-side registration; everything else holds
                 // nothing, so a terminal rejection is the whole release.
                 for id in ids {
+                    deadlines.remove(&id);
                     if let Some(u) = direct_targets.remove(&id) {
                         transports[u].cancel_direct(id);
                         core.on_decode_leave(id, now);
@@ -1431,6 +1488,7 @@ fn scheduler_loop(
                 }
             }
             Ok(SchedMsg::PrefillFailed { id }) => {
+                deadlines.remove(&id);
                 if let Some(u) = direct_targets.remove(&id) {
                     transports[u].cancel_direct(id);
                     core.on_decode_leave(id, now);
@@ -1557,6 +1615,7 @@ fn scheduler_loop(
                                 id: p.job.id,
                                 prompt: p.job.prompt,
                                 max_new: p.job.max_new,
+                                class: p.job.class,
                                 metrics: m,
                                 target: None,
                             }
@@ -1580,6 +1639,8 @@ fn scheduler_loop(
                                 request_id: w.id,
                                 kv_tokens: w.prompt.len() as u32,
                                 remaining_out: w.max_new - 1,
+                                class: w.class,
+                                deadline: deadlines.get(&w.id).copied(),
                             })
                             .collect();
                         if !joins.is_empty() {
@@ -1644,6 +1705,7 @@ fn scheduler_loop(
                                         "job {} failed {tries} prefill dispatches; rejecting",
                                         w.id
                                     );
+                                    deadlines.remove(&w.id);
                                     let _ = router.send(RouterMsg::Update {
                                         id: w.id,
                                         update: JobUpdate::Rejected { id: w.id },
@@ -1651,20 +1713,21 @@ fn scheduler_loop(
                                     continue;
                                 }
                                 let t_arrive = w.metrics.t_arrival;
-                                let req = Request::new(
+                                let mut req = Request::new(
                                     w.id,
                                     w.prompt.len() as u32,
                                     w.max_new,
                                     t_arrive,
-                                );
+                                )
+                                .with_class(w.class);
+                                if let Some(&d) = deadlines.get(&w.id) {
+                                    req = req.with_deadline(d);
+                                }
                                 jobs.insert(
                                     w.id,
                                     PendingJob {
-                                        job: Job {
-                                            id: w.id,
-                                            prompt: w.prompt,
-                                            max_new: w.max_new,
-                                        },
+                                        job: Job::new(w.id, w.prompt, w.max_new)
+                                            .with_class(w.class),
                                         t_arrive,
                                         attempts: tries,
                                     },
@@ -1685,6 +1748,7 @@ fn scheduler_loop(
                     // on this job observe it instead of hanging.
                     log::warn!("flow control rejected request {}", r.id);
                     jobs.remove(&r.id);
+                    deadlines.remove(&r.id);
                     let _ = router.send(RouterMsg::Update {
                         id: r.id,
                         update: JobUpdate::Rejected { id: r.id },
@@ -1755,6 +1819,7 @@ pub(crate) trait PrefillEventSink {
         id: u64,
         outcome: PrefillOutcome,
         max_new: u32,
+        class: SloClass,
         metrics: RequestMetrics,
         target: Option<DirectTarget>,
     );
@@ -1773,12 +1838,14 @@ pub(crate) trait PrefillEventSink {
 /// jobs) or park the sequence for decode placement. Shared by the
 /// in-process sink and the remote-shard sink, so where prefill ran is
 /// invisible downstream.
+#[allow(clippy::too_many_arguments)]
 fn deliver_prefilled(
     to_sched: &Sender<SchedMsg>,
     router: &Sender<RouterMsg>,
     id: u64,
     outcome: Box<PrefillOutcome>,
     max_new: u32,
+    class: SloClass,
     mut metrics: RequestMetrics,
     t_first: f64,
 ) {
@@ -1799,6 +1866,11 @@ fn deliver_prefilled(
     if max_new <= 1 {
         metrics.t_done = t_first;
         metrics.output_tokens = 1;
+        // A single-token job terminates at prefill without the scheduler
+        // ever seeing a decode release: tell it anyway so per-job state
+        // (deadline bookkeeping) is dropped — `on_decode_leave` is a
+        // no-op for an id that never held a decode charge.
+        let _ = to_sched.send(SchedMsg::DecodeDone { id });
         let _ = router.send(RouterMsg::Update {
             id,
             update: JobUpdate::Done(Completion {
@@ -1812,6 +1884,7 @@ fn deliver_prefilled(
             id,
             outcome,
             max_new: max_new - 1,
+            class,
             metrics,
         });
     }
@@ -1833,6 +1906,7 @@ impl PrefillEventSink for LocalPrefillSink {
         id: u64,
         outcome: PrefillOutcome,
         max_new: u32,
+        class: SloClass,
         metrics: RequestMetrics,
         _target: Option<DirectTarget>,
     ) {
@@ -1850,6 +1924,7 @@ impl PrefillEventSink for LocalPrefillSink {
             id,
             Box::new(outcome),
             max_new,
+            class,
             metrics,
             t_first,
         );
@@ -2001,7 +2076,7 @@ pub(crate) fn run_prefill_unit<S: PrefillEventSink>(
         match engine.prefill(&w.prompt) {
             Ok(outcome) => {
                 let t_measured = outcome.exec_time;
-                sink.prefilled(w.id, outcome, w.max_new, w.metrics, w.target);
+                sink.prefilled(w.id, outcome, w.max_new, w.class, w.metrics, w.target);
                 let remaining: u32 = queue.iter().map(|q| q.prompt.len() as u32).sum();
                 sink.end_forward(instance, t_measured, remaining);
             }
@@ -2156,7 +2231,7 @@ fn prefill_shard_sinks(
     let trace_shared = shared.clone();
     let track = format!("prefill:{addr}");
     PrefillSinks {
-        on_prefilled: Box::new(move |id, outcome, max_new, metrics| {
+        on_prefilled: Box::new(move |id, outcome, max_new, class, metrics| {
             let t_first = shared.clock.now_s();
             // Relay path: the first token is synthesized here, so the
             // KV-commit and first-token boundaries coincide with it.
@@ -2170,6 +2245,7 @@ fn prefill_shard_sinks(
                 id,
                 outcome,
                 max_new,
+                class,
                 metrics,
                 t_first,
             );

@@ -200,6 +200,7 @@ impl KvFile {
         if let Some(d) = self.get("decode_placement") {
             cfg.decode = match d {
                 "iqr" | "load_aware" => DecodePlacement::IqrLex(DecodeSchedConfig::default()),
+                "deadline_aware" => DecodePlacement::DeadlineAware(DecodeSchedConfig::default()),
                 "round_robin" => DecodePlacement::RoundRobin,
                 "random" => DecodePlacement::Random,
                 other => return Err(anyhow!("unknown decode_placement '{other}'")),

@@ -5,7 +5,7 @@
 //! admissions for a cool-down window) and outright rejection, and exposes
 //! an admission check for the frontend.
 
-use super::types::Request;
+use super::types::{Request, SloClass};
 
 /// Flow-control policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,8 +28,13 @@ pub struct FlowController {
     throttle_until: f64,
     /// Monotone counter used to deterministically shed every k-th request.
     admit_counter: u64,
-    /// Total rejected requests (overload + shed).
-    rejected: u64,
+    /// Requests rejected because they exceeded `N_limit` waiting cycles
+    /// (or hit the frontend's hard in-flight cap), per [`SloClass::rank`].
+    rejected_overload: [u64; 3],
+    /// New arrivals shed during a throttle cool-down, per
+    /// [`SloClass::rank`]. `rejected_shed[Interactive]` is zero by
+    /// construction — interactive traffic is never shed.
+    rejected_shed: [u64; 3],
 }
 
 impl FlowController {
@@ -41,13 +46,24 @@ impl FlowController {
             cooldown: 2.0,
             throttle_until: -1.0,
             admit_counter: 0,
-            rejected: 0,
+            rejected_overload: [0; 3],
+            rejected_shed: [0; 3],
         }
     }
 
-    /// Total requests rejected so far.
+    /// Total requests rejected so far (overload + shed, all classes).
     pub fn rejected(&self) -> u64 {
-        self.rejected
+        self.rejected_overload.iter().sum::<u64>() + self.rejected_shed.iter().sum::<u64>()
+    }
+
+    /// Overload rejections (`N_limit` / queue-full), per [`SloClass::rank`].
+    pub fn rejected_overload(&self) -> [u64; 3] {
+        self.rejected_overload
+    }
+
+    /// Throttle-window sheds, per [`SloClass::rank`].
+    pub fn rejected_shed(&self) -> [u64; 3] {
+        self.rejected_shed
     }
 
     /// Whether throttling is active at `now`.
@@ -62,23 +78,37 @@ impl FlowController {
         if !overloaded.is_empty() && self.policy == FlowPolicy::Throttle {
             self.throttle_until = now + self.cooldown;
         }
-        self.rejected += overloaded.len() as u64;
+        for r in &overloaded {
+            self.rejected_overload[r.class.rank()] += 1;
+        }
         overloaded
     }
 
-    /// Admission check for a new arrival at `now`. Deterministic shedding:
-    /// while throttling, every ⌈1/shed_fraction⌉-th request is refused.
-    pub fn admit(&mut self, now: f64) -> bool {
+    /// Admission check for a new arrival of `class` at `now`.
+    /// Class-ordered shedding: while throttling, `Batch` arrivals are
+    /// always shed and `Interactive` never is, so no interactive request
+    /// can be refused while batch traffic is still being admitted.
+    /// `Standard` keeps the deterministic every-⌈1/shed_fraction⌉-th rule.
+    pub fn admit(&mut self, now: f64, class: SloClass) -> bool {
         if !self.throttling(now) {
             return true;
         }
-        self.admit_counter += 1;
-        let period = (1.0 / self.shed_fraction).round().max(1.0) as u64;
-        if self.admit_counter % period == 0 {
-            self.rejected += 1;
-            false
-        } else {
-            true
+        match class {
+            SloClass::Interactive => true,
+            SloClass::Batch => {
+                self.rejected_shed[class.rank()] += 1;
+                false
+            }
+            SloClass::Standard => {
+                self.admit_counter += 1;
+                let period = (1.0 / self.shed_fraction).round().max(1.0) as u64;
+                if self.admit_counter % period == 0 {
+                    self.rejected_shed[class.rank()] += 1;
+                    false
+                } else {
+                    true
+                }
+            }
         }
     }
 }
@@ -127,6 +157,16 @@ impl AdmissionController {
         self.flow.rejected()
     }
 
+    /// Queue-full rejections, per [`SloClass::rank`].
+    pub fn rejected_overload(&self) -> [u64; 3] {
+        self.flow.rejected_overload()
+    }
+
+    /// Throttle-window sheds, per [`SloClass::rank`].
+    pub fn rejected_shed(&self) -> [u64; 3] {
+        self.flow.rejected_shed()
+    }
+
     /// Whether the post-overload throttle window is active at `now`.
     pub fn throttling(&self, now: f64) -> bool {
         self.flow.throttling(now)
@@ -140,7 +180,7 @@ impl AdmissionController {
             self.flow.on_overload(now, vec![request]);
             return AdmissionDecision::RejectQueueFull;
         }
-        if !self.flow.admit(now) {
+        if !self.flow.admit(now, request.class) {
             return AdmissionDecision::Shed;
         }
         AdmissionDecision::Admit
@@ -162,7 +202,7 @@ mod tests {
         assert_eq!(rejected.len(), 2);
         assert_eq!(f.rejected(), 2);
         assert!(!f.throttling(1.1));
-        assert!(f.admit(1.1));
+        assert!(f.admit(1.1, SloClass::Standard));
     }
 
     #[test]
@@ -171,11 +211,11 @@ mod tests {
         f.shed_fraction = 0.5;
         f.on_overload(10.0, vec![r(1)]);
         assert!(f.throttling(10.5));
-        let admitted = (0..10).filter(|_| f.admit(10.5)).count();
+        let admitted = (0..10).filter(|_| f.admit(10.5, SloClass::Standard)).count();
         assert_eq!(admitted, 5, "50% shed");
         // After cooldown everything is admitted again.
         assert!(!f.throttling(12.5));
-        assert!(f.admit(12.5));
+        assert!(f.admit(12.5, SloClass::Standard));
     }
 
     #[test]
@@ -208,9 +248,51 @@ mod tests {
         let mut f = FlowController::new(FlowPolicy::Throttle);
         f.shed_fraction = 0.5;
         f.on_overload(0.0, vec![r(1)]); // 1 overload rejection
-        let shed = (0..10).filter(|_| !f.admit(0.5)).count() as u64;
+        let shed = (0..10)
+            .filter(|_| !f.admit(0.5, SloClass::Standard))
+            .count() as u64;
         assert_eq!(shed, 5);
         assert_eq!(f.rejected(), 1 + shed);
+        // The split counters attribute each side to the right bucket.
+        assert_eq!(f.rejected_overload(), [0, 1, 0]);
+        assert_eq!(f.rejected_shed(), [0, shed, 0]);
+    }
+
+    #[test]
+    fn throttle_sheds_batch_before_standard_before_interactive() {
+        let mut f = FlowController::new(FlowPolicy::Throttle);
+        f.on_overload(0.0, vec![r(1)]);
+        assert!(f.throttling(0.5));
+        // Interactive is never shed, batch always is, standard partially.
+        for i in 0..20 {
+            assert!(f.admit(0.5, SloClass::Interactive), "interactive #{i} shed");
+            assert!(!f.admit(0.5, SloClass::Batch), "batch #{i} admitted");
+        }
+        let std_admitted = (0..20)
+            .filter(|_| f.admit(0.5, SloClass::Standard))
+            .count();
+        assert!(std_admitted > 0 && std_admitted < 20);
+        assert_eq!(f.rejected_shed()[SloClass::Interactive.rank()], 0);
+        assert_eq!(f.rejected_shed()[SloClass::Batch.rank()], 20);
+        // Once the window expires, batch is admitted again.
+        assert!(f.admit(0.0 + f.cooldown, SloClass::Batch));
+    }
+
+    #[test]
+    fn overload_rejections_count_per_class() {
+        let mut f = FlowController::new(FlowPolicy::RejectOverloaded);
+        f.on_overload(
+            0.0,
+            vec![
+                r(1).with_class(SloClass::Interactive),
+                r(2),
+                r(3).with_class(SloClass::Batch),
+                r(4).with_class(SloClass::Batch),
+            ],
+        );
+        assert_eq!(f.rejected_overload(), [1, 1, 2]);
+        assert_eq!(f.rejected_shed(), [0, 0, 0]);
+        assert_eq!(f.rejected(), 4);
     }
 
     #[test]
@@ -230,6 +312,26 @@ mod tests {
         let later = 1.0 + 10.0;
         assert!(!a.throttling(later));
         assert_eq!(a.try_admit(later, 0, r(99)), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn admission_never_sheds_interactive_while_admitting_batch() {
+        let mut a = AdmissionController::new(FlowPolicy::Throttle, 4);
+        assert_eq!(a.try_admit(0.0, 4, r(0)), AdmissionDecision::RejectQueueFull);
+        assert!(a.throttling(0.1));
+        let mut batch_shed = 0;
+        for i in 0..16 {
+            let interactive = r(100 + i).with_class(SloClass::Interactive);
+            assert_eq!(a.try_admit(0.1, 0, interactive), AdmissionDecision::Admit);
+            if a.try_admit(0.1, 0, r(200 + i).with_class(SloClass::Batch))
+                == AdmissionDecision::Shed
+            {
+                batch_shed += 1;
+            }
+        }
+        assert_eq!(batch_shed, 16, "all batch arrivals shed in the window");
+        assert_eq!(a.rejected_shed(), [0, 0, 16]);
+        assert_eq!(a.rejected_overload()[SloClass::Standard.rank()], 1);
     }
 
     #[test]

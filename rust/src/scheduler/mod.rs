@@ -32,4 +32,4 @@ pub mod staggered;
 pub mod sync;
 pub mod types;
 
-pub use types::{DpUnitId, Request, RequestId};
+pub use types::{DpUnitId, JobSpec, Request, RequestId, SloClass};

@@ -17,7 +17,7 @@
 
 use super::prefix::PrefixCacheModel;
 use super::state::DpState;
-use super::types::{DpUnitId, Request};
+use super::types::{DpUnitId, Request, SloClass};
 
 /// PBAA configuration.
 #[derive(Debug, Clone)]
@@ -80,10 +80,16 @@ pub fn allocate(
     greedy_dispatch(cfg, new_arrivals, dps, cache.as_deref_mut(), &mut out);
 
     // Phase 3: overload detection on everything that failed to place.
+    // Class-ordered shedding: `Interactive` requests are never surrendered
+    // to flow control. Strict class priority in `greedy_dispatch` means an
+    // interactive request only lingers past `N_limit` when interactive
+    // load *alone* exceeds capacity, and the SLO contract prefers degraded
+    // latency over refusal there. Standard/batch overflow at `N_limit` as
+    // in the paper — batch, dispatched last, starves into it first.
     let mut survivors = Vec::with_capacity(out.next_queue.len());
     for mut r in out.next_queue.drain(..) {
         r.wait_cycles += 1;
-        if r.wait_cycles > cfg.n_limit {
+        if r.wait_cycles > cfg.n_limit && r.class != SloClass::Interactive {
             out.overloaded.push(r);
         } else {
             survivors.push(r);
@@ -93,8 +99,11 @@ pub fn allocate(
     out
 }
 
-/// The paper's `GreedyDispatch(Q)`: sort by length descending (reduce
-/// fragmentation), then water-fill.
+/// The paper's `GreedyDispatch(Q)`, made SLO-aware: order the buffering
+/// window by class first (interactive before standard before batch), by
+/// length descending within a class (reduce fragmentation), then
+/// water-fill. Under sustained overload this starves batch traffic into
+/// the `N_limit` overflow first, so flow control sheds it first.
 fn greedy_dispatch(
     cfg: &PbaaConfig,
     mut queue: Vec<Request>,
@@ -102,8 +111,13 @@ fn greedy_dispatch(
     mut cache: Option<&mut PrefixCacheModel>,
     out: &mut PbaaOutcome,
 ) {
-    // Stable sort: equal lengths keep FCFS order.
-    queue.sort_by(|a, b| b.input_tokens.cmp(&a.input_tokens));
+    // Stable sort: equal (class, length) keys keep FCFS order.
+    queue.sort_by(|a, b| {
+        a.class
+            .rank()
+            .cmp(&b.class.rank())
+            .then(b.input_tokens.cmp(&a.input_tokens))
+    });
 
     for r in queue {
         // `Capacity(r, d)` for every unit; pick the argmax.
@@ -297,5 +311,71 @@ mod tests {
         let out = allocate(&PbaaConfig::default(), vec![], rs, &mut dps, None);
         let ids: Vec<u64> = out.assignments.iter().map(|a| a.request.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn batch_formation_orders_by_class_then_length() {
+        use crate::scheduler::types::SloClass;
+        let mut dps = units(&[10_000]);
+        // Arrival order: long batch, short interactive, mid standard,
+        // long interactive. Expected dispatch order: interactive (long,
+        // short), standard, batch.
+        let rs = vec![
+            Request::new(0, 900, 1, 0.0).with_class(SloClass::Batch),
+            Request::new(1, 100, 1, 0.1).with_class(SloClass::Interactive),
+            Request::new(2, 500, 1, 0.2),
+            Request::new(3, 800, 1, 0.3).with_class(SloClass::Interactive),
+        ];
+        let out = allocate(&PbaaConfig::default(), vec![], rs, &mut dps, None);
+        let ids: Vec<u64> = out.assignments.iter().map(|a| a.request.id).collect();
+        assert_eq!(ids, vec![3, 1, 2, 0]);
+    }
+
+    #[test]
+    fn interactive_never_overflows() {
+        let cfg = PbaaConfig {
+            n_limit: 1,
+            cache_aware: false,
+        };
+        let mut dps = units(&[10]);
+        dps[0].on_dispatch(10); // saturated: nothing can place
+        let mut pending = vec![
+            Request::new(0, 100, 1, 0.0).with_class(SloClass::Interactive),
+            Request::new(1, 100, 1, 0.0).with_class(SloClass::Batch),
+        ];
+        let mut overflowed = Vec::new();
+        for _ in 0..5 {
+            let out = allocate(&cfg, pending, vec![], &mut dps, None);
+            overflowed.extend(out.overloaded);
+            pending = out.next_queue;
+        }
+        assert!(overflowed.iter().all(|r| r.class == SloClass::Batch));
+        assert_eq!(overflowed.len(), 1);
+        // The interactive request rides the pending queue indefinitely
+        // instead of being shed.
+        assert_eq!(pending.len(), 1);
+        assert_eq!(pending[0].class, SloClass::Interactive);
+        assert!(pending[0].wait_cycles >= 5);
+    }
+
+    #[test]
+    fn batch_class_waits_when_interactive_takes_capacity() {
+        use crate::scheduler::types::SloClass;
+        let cfg = PbaaConfig {
+            n_limit: 1,
+            cache_aware: false,
+        };
+        // Capacity for exactly one 500-token request per cycle; the
+        // interactive request wins it, the batch one waits and overflows.
+        let mut dps = units(&[500]);
+        let rs = vec![
+            Request::new(0, 500, 1, 0.0).with_class(SloClass::Batch),
+            Request::new(1, 500, 1, 0.1).with_class(SloClass::Interactive),
+        ];
+        let out = allocate(&cfg, vec![], rs, &mut dps, None);
+        assert_eq!(out.assignments.len(), 1);
+        assert_eq!(out.assignments[0].request.id, 1);
+        assert_eq!(out.next_queue.len(), 1);
+        assert_eq!(out.next_queue[0].class, SloClass::Batch);
     }
 }

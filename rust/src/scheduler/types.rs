@@ -4,6 +4,116 @@
 /// Globally unique request identifier.
 pub type RequestId = u64;
 
+/// Service-level objective class of a request, ordered by latency
+/// sensitivity. Under overload the flow controller sheds strictly in
+/// reverse order: `Batch` first, `Standard` next, `Interactive` never
+/// while a lower class is still being admitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum SloClass {
+    /// Latency-critical (chat-style) traffic; never shed by throttling.
+    Interactive,
+    /// Default class for unannotated requests (legacy clients).
+    #[default]
+    Standard,
+    /// Deadline-tolerant offline work; first to be shed under overload.
+    Batch,
+}
+
+impl SloClass {
+    /// Every class, in shed-priority order (`rank()` order).
+    pub const ALL: [SloClass; 3] = [SloClass::Interactive, SloClass::Standard, SloClass::Batch];
+
+    /// Stable small integer used to index per-class counter arrays and
+    /// to order batch formation (lower = more latency-sensitive).
+    pub fn rank(self) -> usize {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Standard => 1,
+            SloClass::Batch => 2,
+        }
+    }
+
+    /// Canonical lowercase name (wire text, report keys, CLI values).
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    /// Parse a canonical name; `None` for anything unknown.
+    pub fn parse(s: &str) -> Option<SloClass> {
+        match s {
+            "interactive" => Some(SloClass::Interactive),
+            "standard" => Some(SloClass::Standard),
+            "batch" => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+
+    /// Single-byte wire encoding (frame protocol v6).
+    pub fn to_wire(self) -> u8 {
+        self.rank() as u8
+    }
+
+    /// Decode the wire byte; `None` rejects out-of-domain values.
+    pub fn from_wire(b: u8) -> Option<SloClass> {
+        match b {
+            0 => Some(SloClass::Interactive),
+            1 => Some(SloClass::Standard),
+            2 => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// A complete request descriptor as submitted by a frontend: everything
+/// the cluster needs to admit, schedule and place one generation. This
+/// is the one struct threaded from the `GEN` line (or the DES workload
+/// generator) down to Algorithm 3 placement — layers must not decompose
+/// it back into loose `(prompt, max_new)` tuples.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Unique id.
+    pub id: RequestId,
+    /// Prompt token ids.
+    pub prompt: Vec<i32>,
+    /// Generation cap (including the prefill's first token).
+    pub max_new: u32,
+    /// SLO class; `Standard` for legacy clients that do not annotate.
+    pub class: SloClass,
+    /// Optional completion deadline, milliseconds after arrival. Only
+    /// meaningful to the deadline-aware decode placement policy.
+    pub deadline_ms: Option<f64>,
+}
+
+impl JobSpec {
+    /// A standard-class spec with no deadline (legacy `(prompt, max_new)`
+    /// submissions map onto exactly this).
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new: u32) -> Self {
+        JobSpec {
+            id,
+            prompt,
+            max_new,
+            class: SloClass::default(),
+            deadline_ms: None,
+        }
+    }
+
+    /// Set the SLO class.
+    pub fn with_class(mut self, class: SloClass) -> Self {
+        self.class = class;
+        self
+    }
+
+    /// Set the completion deadline in milliseconds after arrival.
+    pub fn with_deadline_ms(mut self, deadline_ms: f64) -> Self {
+        self.deadline_ms = Some(deadline_ms);
+        self
+    }
+}
+
 /// Identifies one DP-Attention unit: `(instance, local dp rank)`.
 ///
 /// The paper's §3.1 point: in DP+EP deployments the atomic scheduling unit
@@ -48,6 +158,11 @@ pub struct Request {
     pub prefix_group: Option<u64>,
     /// Length of the shared prefix in tokens (0 when no group).
     pub prefix_len: u32,
+    /// SLO class (batch-formation order, shed priority).
+    pub class: SloClass,
+    /// Absolute completion deadline on the scheduler clock, seconds
+    /// (`arrival + deadline_ms / 1000`). `None` = no deadline.
+    pub deadline: Option<f64>,
 }
 
 impl Request {
@@ -61,6 +176,8 @@ impl Request {
             wait_cycles: 0,
             prefix_group: None,
             prefix_len: 0,
+            class: SloClass::default(),
+            deadline: None,
         }
     }
 
@@ -69,6 +186,18 @@ impl Request {
         assert!(prefix_len <= self.input_tokens);
         self.prefix_group = Some(group);
         self.prefix_len = prefix_len;
+        self
+    }
+
+    /// Attach an SLO class.
+    pub fn with_class(mut self, class: SloClass) -> Self {
+        self.class = class;
+        self
+    }
+
+    /// Attach an absolute completion deadline (scheduler clock, seconds).
+    pub fn with_deadline(mut self, deadline: f64) -> Self {
+        self.deadline = Some(deadline);
         self
     }
 
@@ -101,5 +230,44 @@ mod tests {
     #[should_panic]
     fn prefix_longer_than_input_rejected() {
         let _ = Request::new(1, 10, 1, 0.0).with_prefix(7, 11);
+    }
+
+    #[test]
+    fn slo_class_round_trips_names_and_wire_bytes() {
+        for c in SloClass::ALL {
+            assert_eq!(SloClass::parse(c.name()), Some(c));
+            assert_eq!(SloClass::from_wire(c.to_wire()), Some(c));
+        }
+        assert_eq!(SloClass::parse("premium"), None);
+        assert_eq!(SloClass::from_wire(3), None);
+    }
+
+    #[test]
+    fn slo_class_ranks_order_by_latency_sensitivity() {
+        assert!(SloClass::Interactive.rank() < SloClass::Standard.rank());
+        assert!(SloClass::Standard.rank() < SloClass::Batch.rank());
+        assert_eq!(SloClass::default(), SloClass::Standard);
+    }
+
+    #[test]
+    fn job_spec_defaults_match_legacy_submissions() {
+        let spec = JobSpec::new(3, vec![1, 2], 8);
+        assert_eq!(spec.class, SloClass::Standard);
+        assert_eq!(spec.deadline_ms, None);
+        let spec = spec.with_class(SloClass::Batch).with_deadline_ms(750.0);
+        assert_eq!(spec.class, SloClass::Batch);
+        assert_eq!(spec.deadline_ms, Some(750.0));
+    }
+
+    #[test]
+    fn request_class_and_deadline_builders() {
+        let r = Request::new(1, 100, 28, 2.0)
+            .with_class(SloClass::Interactive)
+            .with_deadline(2.5);
+        assert_eq!(r.class, SloClass::Interactive);
+        assert_eq!(r.deadline, Some(2.5));
+        let plain = Request::new(2, 10, 1, 0.0);
+        assert_eq!(plain.class, SloClass::Standard);
+        assert_eq!(plain.deadline, None);
     }
 }

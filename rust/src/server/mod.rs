@@ -5,7 +5,11 @@
 //!
 //! Requests (one per line):
 //!
-//! * `GEN <max_tokens> <prompt...>` — generate; the response streams.
+//! * `GEN <max_tokens> [class=<c>] [deadline=<ms>] <prompt...>` —
+//!   generate; the response streams. The optional, order-tolerant
+//!   annotations attach an SLO class (`interactive | standard | batch`,
+//!   default `standard`) and a completion deadline in milliseconds —
+//!   a classless line behaves exactly as before.
 //! * `STATS` — one-line JSON snapshot of the decode DP pool (per-DP
 //!   occupancy + imbalance gauges), plus the `ttft_stages` per-stage
 //!   TTFT decomposition and the `ledger_divergence` counter.
@@ -40,6 +44,7 @@ use crate::engine::tokenizer;
 use crate::runtime::artifacts_dir;
 use crate::scheduler::baseline::ImmediatePolicy;
 use crate::scheduler::flow::FlowPolicy;
+use crate::scheduler::types::SloClass;
 use anyhow::{anyhow, Result};
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
@@ -63,7 +68,7 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
         )
         .opt(
             "decode-policy",
-            "decode placement: load-aware | round-robin | random",
+            "decode placement: load-aware | deadline-aware | round-robin | random",
             Some("load-aware"),
         )
         .opt(
@@ -192,11 +197,7 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
             "Request {i}: the staggered batch scheduler buffers requests to \
              form optimal execution batches before dispatch."
         ));
-        cluster.submit(Job {
-            id: i as u64,
-            prompt,
-            max_new,
-        });
+        cluster.submit(Job::new(i as u64, prompt, max_new));
     }
     let (completions, report) = cluster.finish()?;
     for c in completions.iter().take(3) {
@@ -230,14 +231,13 @@ fn write_trace_out(cluster: &ClusterHandle, path: Option<&std::path::Path>) {
 /// policy picks up Algorithm 3's knobs from the staggered scheduler config
 /// when one is in force (one `StaggeredConfig` carries the full knob set).
 fn parse_decode_policy(s: &str, mode: &RealSchedMode) -> Result<DecodePolicy> {
+    let dc = || match mode {
+        RealSchedMode::Staggered(sc) => sc.decode.clone(),
+        RealSchedMode::Immediate(_) => Default::default(),
+    };
     Ok(match s {
-        "load-aware" | "load_aware" | "iqr" => {
-            let dc = match mode {
-                RealSchedMode::Staggered(sc) => sc.decode.clone(),
-                RealSchedMode::Immediate(_) => Default::default(),
-            };
-            DecodePolicy::LoadAware(dc)
-        }
+        "load-aware" | "load_aware" | "iqr" => DecodePolicy::LoadAware(dc()),
+        "deadline-aware" | "deadline_aware" => DecodePolicy::DeadlineAware(dc()),
         "round-robin" | "round_robin" => DecodePolicy::RoundRobin,
         "random" => DecodePolicy::Random,
         other => return Err(anyhow!("unknown decode policy '{other}'")),
@@ -363,12 +363,21 @@ fn handle_connection(
             return Ok(());
         }
         let Some(rest) = req.strip_prefix("GEN ") else {
-            writeln!(out, "ERR expected: GEN <max_tokens> <prompt> | STATS | QUIT | SHUTDOWN")?;
+            writeln!(
+                out,
+                "ERR expected: GEN <max_tokens> [class=<c>] [deadline=<ms>] <prompt> \
+                 | STATS | QUIT | SHUTDOWN"
+            )?;
             continue;
         };
-        let (max_s, prompt_text) = rest.split_once(' ').unwrap_or((rest, ""));
-        let max_new: u32 = max_s.parse().unwrap_or(16);
-        match cluster.try_submit(tokenizer::encode(prompt_text), max_new) {
+        let (max_new, class, deadline_ms, prompt_text) = match parse_gen(rest) {
+            Ok(parsed) => parsed,
+            Err(msg) => {
+                writeln!(out, "ERR {msg}")?;
+                continue;
+            }
+        };
+        match cluster.try_submit_spec(tokenizer::encode(prompt_text), max_new, class, deadline_ms) {
             Admission::Busy(reason) => {
                 let tag = match reason {
                     BusyReason::QueueFull => "queue_full",
@@ -379,6 +388,39 @@ fn handle_connection(
             Admission::Accepted { id, updates } => stream_job(&mut out, id, updates)?,
         }
     }
+}
+
+/// Parse the payload of a `GEN` line: `<max_tokens> [class=<c>]
+/// [deadline=<ms>] <prompt...>`. The annotations are optional and
+/// order-tolerant; the first word matching neither starts the prompt, so
+/// a legacy classless line parses exactly as before (standard class, no
+/// deadline). A malformed annotation is an error, not prompt text — a
+/// typo like `class=interactve` must not silently generate at the wrong
+/// priority.
+fn parse_gen(rest: &str) -> std::result::Result<(u32, SloClass, Option<f64>, &str), String> {
+    let (max_s, mut rest) = rest.split_once(' ').unwrap_or((rest, ""));
+    let max_new: u32 = max_s.parse().unwrap_or(16);
+    let mut class = SloClass::default();
+    let mut deadline_ms = None;
+    loop {
+        let (word, tail) = rest.split_once(' ').unwrap_or((rest, ""));
+        if let Some(c) = word.strip_prefix("class=") {
+            class = SloClass::parse(c)
+                .ok_or_else(|| format!("unknown class '{c}' (interactive | standard | batch)"))?;
+        } else if let Some(d) = word.strip_prefix("deadline=") {
+            let ms: f64 = d
+                .parse()
+                .map_err(|_| format!("bad deadline '{d}' (milliseconds)"))?;
+            if !ms.is_finite() || ms <= 0.0 {
+                return Err(format!("bad deadline '{d}' (must be positive)"));
+            }
+            deadline_ms = Some(ms);
+        } else {
+            break;
+        }
+        rest = tail;
+    }
+    Ok((max_new, class, deadline_ms, rest))
 }
 
 /// Relay one job's update stream onto the wire as `TOK`/`DONE` lines.
@@ -427,5 +469,50 @@ fn truncate(s: &str, n: usize) -> String {
         cleaned
     } else {
         cleaned.chars().take(n).collect::<String>() + "…"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classless_gen_line_parses_as_before() {
+        // The legacy grammar must round-trip unchanged: default class,
+        // no deadline, the full remainder as prompt text.
+        let (max_new, class, deadline, prompt) = parse_gen("16 hello world").unwrap();
+        assert_eq!(max_new, 16);
+        assert_eq!(class, SloClass::Standard);
+        assert_eq!(deadline, None);
+        assert_eq!(prompt, "hello world");
+    }
+
+    #[test]
+    fn gen_annotations_parse_in_either_order() {
+        let (max_new, class, deadline, prompt) =
+            parse_gen("8 class=interactive deadline=250 a prompt").unwrap();
+        assert_eq!((max_new, class), (8, SloClass::Interactive));
+        assert_eq!(deadline, Some(250.0));
+        assert_eq!(prompt, "a prompt");
+        let (_, class, deadline, prompt) = parse_gen("8 deadline=250 class=batch p").unwrap();
+        assert_eq!(class, SloClass::Batch);
+        assert_eq!(deadline, Some(250.0));
+        assert_eq!(prompt, "p");
+    }
+
+    #[test]
+    fn gen_prompt_mentioning_class_is_not_an_annotation() {
+        // Only annotations *before* the prompt are consumed; prompt words
+        // after the first non-annotation token pass through verbatim.
+        let (_, class, _, prompt) = parse_gen("4 what class=batch means").unwrap();
+        assert_eq!(class, SloClass::Standard);
+        assert_eq!(prompt, "what class=batch means");
+    }
+
+    #[test]
+    fn gen_malformed_annotations_are_errors() {
+        assert!(parse_gen("4 class=premium p").is_err());
+        assert!(parse_gen("4 deadline=soon p").is_err());
+        assert!(parse_gen("4 deadline=-5 p").is_err());
     }
 }

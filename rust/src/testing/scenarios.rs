@@ -66,11 +66,8 @@ pub fn submit_skewed_jobs(
 ) {
     for i in 0..n_jobs {
         let heavy = i % heavy_stride == 0;
-        cluster.submit(Job {
-            id: i,
-            prompt: vec![7; 24],
-            max_new: if heavy { heavy_max_new } else { light_max_new },
-        });
+        let max_new = if heavy { heavy_max_new } else { light_max_new };
+        cluster.submit(Job::new(i, vec![7; 24], max_new));
         // Wide enough that a briefly stalled scheduler thread on a loaded
         // CI runner still sees one placement per cycle (order-preserving).
         std::thread::sleep(Duration::from_millis(6));

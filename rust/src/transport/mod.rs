@@ -38,6 +38,7 @@ pub use codec::KvCodec;
 
 use crate::engine::PrefillOutcome;
 use crate::metrics::RequestMetrics;
+use crate::scheduler::types::SloClass;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 
@@ -95,6 +96,9 @@ pub struct AdmitJob {
     pub outcome: Box<PrefillOutcome>,
     /// Output tokens still to generate.
     pub max_new: u32,
+    /// SLO class (carried on the wire so shard-side traces see it; the
+    /// decode engine itself is class-blind).
+    pub class: SloClass,
     /// Lifecycle metrics, scheduler clock.
     pub metrics: RequestMetrics,
 }
@@ -272,6 +276,9 @@ pub struct PrefillWork {
     pub prompt: Vec<i32>,
     /// Max tokens to generate (first token included).
     pub max_new: u32,
+    /// SLO class (crosses the wire; rides back with the handoff so the
+    /// decode-side admit keeps the class without a scheduler lookup).
+    pub class: SloClass,
     /// Lifecycle metrics, scheduler clock (`t_dispatch` stamped by the
     /// scheduler before dispatch).
     pub metrics: RequestMetrics,
@@ -388,10 +395,10 @@ impl PrefillTransport for LocalPrefill {
 /// transport layer stays ignorant of those types.
 pub struct PrefillSinks {
     /// A prefill finished and its KV handoff is fully assembled:
-    /// `(id, outcome, max_new, metrics)` — the metrics the scheduler
-    /// attached at dispatch, handed back for first-token stamping on the
-    /// scheduler clock.
-    pub on_prefilled: Box<dyn Fn(u64, Box<PrefillOutcome>, u32, RequestMetrics) + Send>,
+    /// `(id, outcome, max_new, class, metrics)` — the metrics the
+    /// scheduler attached at dispatch, handed back for first-token
+    /// stamping on the scheduler clock.
+    pub on_prefilled: Box<dyn Fn(u64, Box<PrefillOutcome>, u32, SloClass, RequestMetrics) + Send>,
     /// A direct prefill→decode handoff committed (`HandoffCommit` from
     /// the prefill shard, sent only after the decode peer acked):
     /// `(id, exec_time)`. The KV never touched the scheduler; the
@@ -428,6 +435,7 @@ mod tests {
                 passes: 1,
             }),
             max_new: 3,
+            class: SloClass::Standard,
             metrics: RequestMetrics::arrive(0.0, 4),
         }
     }
@@ -464,6 +472,7 @@ mod tests {
             id,
             prompt: vec![7; 12],
             max_new: 4,
+            class: SloClass::Standard,
             metrics: RequestMetrics::arrive(0.0, 12),
             target: None,
         }

@@ -29,6 +29,7 @@ use super::driver::{ConnHandle, ConnHandler, ConnIo, ConnOptions, NetDriver};
 use super::proto::{self, DirectTarget, Frame, FrameReader, StreamId, PROTO_VERSION, STREAM_CONTROL};
 use super::KvCodec;
 use crate::engine::PrefillOutcome;
+use crate::scheduler::types::SloClass;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::net::TcpStream;
@@ -196,9 +197,10 @@ impl PeerMux {
         id: u64,
         outcome: &PrefillOutcome,
         decode_max_new: u32,
+        class: SloClass,
     ) -> Result<()> {
         let (entry, pooled) = self.entry(&target.addr, codec)?;
-        match self.try_handoff(&entry, codec, target, id, outcome, decode_max_new) {
+        match self.try_handoff(&entry, codec, target, id, outcome, decode_max_new, class) {
             Ok(()) => Ok(()),
             Err(e) => {
                 self.invalidate(&target.addr, &entry);
@@ -212,7 +214,8 @@ impl PeerMux {
                     target.addr
                 );
                 let (entry, _) = self.entry(&target.addr, codec)?;
-                let out = self.try_handoff(&entry, codec, target, id, outcome, decode_max_new);
+                let out =
+                    self.try_handoff(&entry, codec, target, id, outcome, decode_max_new, class);
                 if out.is_err() {
                     self.invalidate(&target.addr, &entry);
                 }
@@ -221,6 +224,7 @@ impl PeerMux {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn try_handoff(
         &self,
         entry: &PeerEntry,
@@ -229,6 +233,7 @@ impl PeerMux {
         id: u64,
         outcome: &PrefillOutcome,
         decode_max_new: u32,
+        class: SloClass,
     ) -> Result<()> {
         // Park the waiter before the commit can possibly be acked.
         let (ack_tx, ack_rx) = channel::<bool>();
@@ -260,6 +265,7 @@ impl PeerMux {
             first_token: outcome.first_token,
             kv_len: outcome.len as u32,
             max_new: decode_max_new,
+            class,
             exec_time: outcome.exec_time,
         };
         if let Err(e) = entry.handle.enqueue(stream, proto::frame_bytes_on(stream, &commit)) {

@@ -56,6 +56,7 @@
 //! `kv_wire_bytes` / `kv_raw_bytes` accounting exact.
 
 use super::codec::{self, KvCodec};
+use crate::scheduler::types::SloClass;
 use crate::trace::{Mark, TraceMark};
 use std::io::{ErrorKind, Read, Write};
 use std::time::{Duration, Instant};
@@ -72,7 +73,11 @@ use std::time::{Duration, Instant};
 /// without serializing behind each other.
 /// v5: shards piggyback batched TTFT trace marks on the control stream
 /// ([`Frame::TraceSpans`], carrying the shard-side shed count).
-pub const PROTO_VERSION: u32 = 5;
+/// v6: the job-bearing frames (`Admit`, per-job in `PrefillDispatch`,
+/// `HandoffCommit`) carry the request's [`SloClass`] as one byte, so
+/// remote shards and the trace subsystem see the same class the
+/// scheduler admitted (deadlines stay scheduler-side).
+pub const PROTO_VERSION: u32 = 6;
 
 /// Logical stream a frame belongs to within one connection. Streams let
 /// independent in-flight transfers (e.g. two concurrent KV handoffs to
@@ -182,6 +187,8 @@ pub struct PrefillJobWire {
     pub id: u64,
     /// Output tokens to generate after the first.
     pub max_new: u32,
+    /// The request's SLO class.
+    pub class: SloClass,
     /// Prompt token ids.
     pub prompt: Vec<i32>,
     /// Direct-transfer placement, when the scheduler pre-placed the
@@ -241,6 +248,8 @@ pub enum Frame {
         kv_len: u32,
         /// Output tokens still to generate.
         max_new: u32,
+        /// The sequence's SLO class.
+        class: SloClass,
         /// Prompt K caches (`[L, S, H, Dh]` flattened; empty for engines
         /// without transferable KV, e.g. the mock).
         k: Vec<f32>,
@@ -389,6 +398,8 @@ pub enum Frame {
         kv_len: u32,
         /// Output tokens still to generate *after* the first.
         max_new: u32,
+        /// The sequence's SLO class.
+        class: SloClass,
         /// Engine execution time of the prefill passes, seconds.
         exec_time: f64,
     },
@@ -685,7 +696,8 @@ impl<'a> Dec<'a> {
 /// frame must be refused locally (failing one job), never written —
 /// the receiver's `Oversize` error would kill the whole connection.
 pub fn admit_payload_bound(codec: KvCodec, k_len: usize, v_len: usize) -> u64 {
-    // tag + unit + id + first_token + kv_len + max_new + 2 block headers.
+    // tag + unit + id + first_token + kv_len + max_new + class + 2 block
+    // headers.
     64 + codec.payload_bound(k_len) as u64 + codec.payload_bound(v_len) as u64
 }
 
@@ -729,6 +741,7 @@ pub fn admit_frame_into(
     first_token: i32,
     kv_len: u32,
     max_new: u32,
+    class: SloClass,
     k: &[f32],
     v: &[f32],
 ) -> u64 {
@@ -736,7 +749,7 @@ pub fn admit_frame_into(
     frame_scaffold(
         buf,
         stream,
-        25 + 2 * KV_BLOCK_HEADER + kv_wire.payload_bound(k.len()) + kv_wire.payload_bound(v.len()),
+        26 + 2 * KV_BLOCK_HEADER + kv_wire.payload_bound(k.len()) + kv_wire.payload_bound(v.len()),
         |e| {
             e.u8(TAG_ADMIT);
             e.u32(unit);
@@ -744,6 +757,7 @@ pub fn admit_frame_into(
             e.i32(first_token);
             e.u32(kv_len);
             e.u32(max_new);
+            e.u8(class.to_wire());
             kv_bytes = e.kv_block(kv_wire, k) + e.kv_block(kv_wire, v);
         },
     );
@@ -873,6 +887,7 @@ pub fn encode(f: &Frame) -> Vec<u8> {
             first_token,
             kv_len,
             max_new,
+            class,
             k,
             v,
         } => {
@@ -884,6 +899,7 @@ pub fn encode(f: &Frame) -> Vec<u8> {
             e.i32(*first_token);
             e.u32(*kv_len);
             e.u32(*max_new);
+            e.u8(class.to_wire());
             e.kv_block(KvCodec::Raw, k);
             e.kv_block(KvCodec::Raw, v);
         }
@@ -894,6 +910,7 @@ pub fn encode(f: &Frame) -> Vec<u8> {
             for j in jobs {
                 e.u64(j.id);
                 e.u32(j.max_new);
+                e.u8(j.class.to_wire());
                 e.i32s(&j.prompt);
                 match &j.target {
                     Some(t) => {
@@ -1009,6 +1026,7 @@ pub fn encode(f: &Frame) -> Vec<u8> {
             first_token,
             kv_len,
             max_new,
+            class,
             exec_time,
         } => {
             e.u8(TAG_HANDOFF_COMMIT);
@@ -1017,6 +1035,7 @@ pub fn encode(f: &Frame) -> Vec<u8> {
             e.i32(*first_token);
             e.u32(*kv_len);
             e.u32(*max_new);
+            e.u8(class.to_wire());
             e.f64(*exec_time);
         }
         Frame::HandoffAck { id } => {
@@ -1064,6 +1083,7 @@ pub fn decode(buf: &[u8]) -> Result<Frame, ProtoError> {
             first_token: d.i32()?,
             kv_len: d.u32()?,
             max_new: d.u32()?,
+            class: SloClass::from_wire(d.u8()?).ok_or(ProtoError::BadValue("slo class"))?,
             k: d.kv_block()?,
             v: d.kv_block()?,
         },
@@ -1116,13 +1136,15 @@ pub fn decode(buf: &[u8]) -> Result<Frame, ProtoError> {
         TAG_PREFILL_DISPATCH => {
             let unit = d.u32()?;
             let n = d.u32()? as usize;
-            // Every job is at least id + max_new + prompt header.
-            d.check_elems(n, 16)?;
+            // Every job is at least id + max_new + class + prompt header.
+            d.check_elems(n, 17)?;
             let mut jobs = Vec::with_capacity(n);
             for _ in 0..n {
                 jobs.push(PrefillJobWire {
                     id: d.u64()?,
                     max_new: d.u32()?,
+                    class: SloClass::from_wire(d.u8()?)
+                        .ok_or(ProtoError::BadValue("slo class"))?,
                     prompt: d.i32s()?,
                     target: match d.u8()? {
                         0 => None,
@@ -1161,6 +1183,7 @@ pub fn decode(buf: &[u8]) -> Result<Frame, ProtoError> {
             first_token: d.i32()?,
             kv_len: d.u32()?,
             max_new: d.u32()?,
+            class: SloClass::from_wire(d.u8()?).ok_or(ProtoError::BadValue("slo class"))?,
             exec_time: d.f64()?,
         },
         TAG_HANDOFF_ACK => Frame::HandoffAck { id: d.u64()? },
@@ -1369,6 +1392,10 @@ mod tests {
         }
     }
 
+    fn arbitrary_class(rng: &mut Rng) -> SloClass {
+        SloClass::from_wire(rng.below(3) as u8).unwrap()
+    }
+
     fn arbitrary_frame(rng: &mut Rng) -> Frame {
         match rng.below(22) {
             0 => Frame::Hello {
@@ -1393,6 +1420,7 @@ mod tests {
                 first_token: rng.next_u64() as i32,
                 kv_len: rng.below(4096) as u32,
                 max_new: rng.below(1024) as u32,
+                class: arbitrary_class(rng),
                 k: (0..rng.below(32)).map(|_| rng.f64() as f32).collect(),
                 v: (0..rng.below(32)).map(|_| rng.f64() as f32).collect(),
             },
@@ -1439,6 +1467,7 @@ mod tests {
                     .map(|_| PrefillJobWire {
                         id: rng.next_u64(),
                         max_new: rng.below(512) as u32,
+                        class: arbitrary_class(rng),
                         prompt: (0..1 + rng.below(48)).map(|_| rng.next_u64() as i32).collect(),
                         target: rng.chance(0.5).then(|| DirectTarget {
                             addr: format!("127.0.0.1:{}", rng.below(1 << 16)),
@@ -1474,6 +1503,7 @@ mod tests {
                 first_token: rng.next_u64() as i32,
                 kv_len: rng.below(4096) as u32,
                 max_new: rng.below(1024) as u32,
+                class: arbitrary_class(rng),
                 exec_time: rng.f64() * 5.0,
             },
             20 => Frame::HandoffAck { id: rng.next_u64() },
@@ -1549,6 +1579,33 @@ mod tests {
     }
 
     #[test]
+    fn out_of_domain_slo_class_byte_rejected() {
+        let mut buf = Vec::new();
+        admit_frame_into(
+            &mut buf,
+            KvCodec::Raw,
+            STREAM_CONTROL,
+            0,
+            1,
+            0,
+            4,
+            4,
+            SloClass::Standard,
+            &[1.0; 4],
+            &[1.0; 4],
+        );
+        // The class byte sits after tag+unit+id+first_token+kv_len+max_new
+        // past the 8-byte frame header.
+        let class_at = 8 + 1 + 4 + 8 + 4 + 4 + 4;
+        assert_eq!(buf[class_at], SloClass::Standard.to_wire());
+        buf[class_at] = 9;
+        assert!(matches!(
+            decode(&buf[8..]),
+            Err(ProtoError::BadValue("slo class"))
+        ));
+    }
+
+    #[test]
     fn borrow_encoders_match_the_enum_encoding() {
         let k: Vec<f32> = (0..70).map(|i| i as f32 * 0.5).collect();
         let v: Vec<f32> = (0..70).map(|i| i as f32 * -0.25).collect();
@@ -1561,14 +1618,26 @@ mod tests {
                 first_token: 7,
                 kv_len: 5,
                 max_new: 11,
+                class: SloClass::Interactive,
                 k: k.clone(),
                 v: v.clone(),
             },
         )
         .unwrap();
         let mut buf = Vec::new();
-        let kv_bytes =
-            admit_frame_into(&mut buf, KvCodec::Raw, STREAM_CONTROL, 3, 99, 7, 5, 11, &k, &v);
+        let kv_bytes = admit_frame_into(
+            &mut buf,
+            KvCodec::Raw,
+            STREAM_CONTROL,
+            3,
+            99,
+            7,
+            5,
+            11,
+            SloClass::Interactive,
+            &k,
+            &v,
+        );
         assert_eq!(buf, wire, "admit borrow encoder must be byte-identical");
         assert_eq!(
             kv_bytes,
@@ -1629,10 +1698,21 @@ mod tests {
         let v: Vec<f32> = kv_pattern(3000).iter().map(|x| -x).collect();
         for codec in [KvCodec::Raw, KvCodec::Fp16, KvCodec::Lz] {
             let mut buf = Vec::new();
-            let kv_bytes =
-                admit_frame_into(&mut buf, codec, STREAM_CONTROL, 2, 77, 9, 3000, 5, &k, &v);
+            let kv_bytes = admit_frame_into(
+                &mut buf,
+                codec,
+                STREAM_CONTROL,
+                2,
+                77,
+                9,
+                3000,
+                5,
+                SloClass::Batch,
+                &k,
+                &v,
+            );
             let frame = decode(&buf[8..]).unwrap_or_else(|e| panic!("{}: {e}", codec.name()));
-            let Frame::Admit { id: 77, k: dk, v: dv, .. } = frame else {
+            let Frame::Admit { id: 77, class: SloClass::Batch, k: dk, v: dv, .. } = frame else {
                 panic!("wrong frame: {frame:?}")
             };
             assert_eq!(dk, k, "{}: K must survive (values are fp16-exact)", codec.name());
@@ -1700,7 +1780,19 @@ mod tests {
         let k = kv_pattern(600);
         for codec in [KvCodec::Raw, KvCodec::Fp16, KvCodec::Lz] {
             let mut buf = Vec::new();
-            admit_frame_into(&mut buf, codec, STREAM_CONTROL, 0, 1, 0, 600, 4, &k, &k);
+            admit_frame_into(
+                &mut buf,
+                codec,
+                STREAM_CONTROL,
+                0,
+                1,
+                0,
+                600,
+                4,
+                SloClass::Standard,
+                &k,
+                &k,
+            );
             let payload = &buf[8..];
             for cut in 0..payload.len() {
                 assert!(
@@ -1762,11 +1854,12 @@ mod tests {
         let k = vec![1.0f32; 4096];
         let v = vec![2.0f32; 4096];
         for codec in [KvCodec::Raw, KvCodec::Fp16, KvCodec::Lz] {
+            let cls = SloClass::Standard;
             let mut buf = Vec::new();
-            admit_frame_into(&mut buf, codec, STREAM_CONTROL, 0, 1, 0, 4, 4, &k, &v);
+            admit_frame_into(&mut buf, codec, STREAM_CONTROL, 0, 1, 0, 4, 4, cls, &k, &v);
             let (ptr, cap) = (buf.as_ptr(), buf.capacity());
             for id in 2..32u64 {
-                admit_frame_into(&mut buf, codec, STREAM_CONTROL, 0, id, 0, 4, 4, &k, &v);
+                admit_frame_into(&mut buf, codec, STREAM_CONTROL, 0, id, 0, 4, 4, cls, &k, &v);
                 assert_eq!(buf.as_ptr(), ptr, "{}: admit encode reallocated", codec.name());
                 assert_eq!(buf.capacity(), cap, "{}: admit encode grew", codec.name());
             }

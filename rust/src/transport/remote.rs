@@ -63,6 +63,7 @@ use super::{
 };
 use crate::engine::PrefillOutcome;
 use crate::metrics::RequestMetrics;
+use crate::scheduler::types::SloClass;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::net::{TcpStream, ToSocketAddrs};
@@ -295,6 +296,7 @@ type PrefillShard = ShardState<PrefillPending>;
 /// being assembled from the shard's `KvSegment` stream.
 struct PrefillPending {
     max_new: u32,
+    class: SloClass,
     metrics: RequestMetrics,
     k: Vec<f32>,
     v: Vec<f32>,
@@ -732,6 +734,7 @@ impl DecodeTransport for RemoteUnit {
             job.outcome.first_token,
             job.outcome.len as u32,
             job.max_new,
+            job.class,
             &job.outcome.k,
             &job.outcome.v,
         );
@@ -884,7 +887,7 @@ impl SchedPeer for PrefillPeer {
                         exec_time,
                         passes: 1,
                     };
-                    (self.sinks.on_prefilled)(id, Box::new(outcome), e.max_new, e.metrics);
+                    (self.sinks.on_prefilled)(id, Box::new(outcome), e.max_new, e.class, e.metrics);
                 }
             }
             Frame::PrefillFailed { id } => self.fail_job(id),
@@ -1005,6 +1008,7 @@ impl PrefillTransport for RemotePrefill {
                     w.id,
                     PrefillPending {
                         max_new: w.max_new,
+                        class: w.class,
                         metrics: w.metrics,
                         k: Vec::new(),
                         v: Vec::new(),
@@ -1019,6 +1023,7 @@ impl PrefillTransport for RemotePrefill {
                 .map(|w| proto::PrefillJobWire {
                     id: w.id,
                     max_new: w.max_new,
+                    class: w.class,
                     prompt: w.prompt.clone(),
                     target: w.target.clone(),
                 })
@@ -1089,6 +1094,7 @@ mod tests {
                 passes: 1,
             }),
             max_new: 4,
+            class: SloClass::Standard,
             metrics: RequestMetrics::arrive(0.0, 4),
         }
     }
@@ -1451,8 +1457,8 @@ mod tests {
         let (got_tx, got_rx) = std::sync::mpsc::channel();
         let (ef_tx, ef_rx) = std::sync::mpsc::channel();
         let sinks = PrefillSinks {
-            on_prefilled: Box::new(move |id, outcome, max_new, _metrics| {
-                let _ = got_tx.send((id, outcome, max_new));
+            on_prefilled: Box::new(move |id, outcome, max_new, class, _metrics| {
+                let _ = got_tx.send((id, outcome, max_new, class));
             }),
             on_handoff: Box::new(|id, _| panic!("unexpected direct handoff for {id}")),
             on_failed: Box::new(|id| panic!("unexpected prefill failure for {id}")),
@@ -1472,17 +1478,19 @@ mod tests {
                 id: 31,
                 prompt: vec![5; 16],
                 max_new: 7,
+                class: SloClass::Interactive,
                 metrics: RequestMetrics::arrive(0.0, 16),
                 target: None,
             }])
             .map_err(|_| ())
             .expect("dispatch");
 
-        let (id, outcome, max_new) = got_rx
+        let (id, outcome, max_new, class) = got_rx
             .recv_timeout(Duration::from_secs(10))
             .expect("handoff must commit");
         assert_eq!(id, 31);
         assert_eq!(max_new, 7);
+        assert_eq!(class, SloClass::Interactive, "class survives the round trip");
         assert_eq!(outcome.first_token, 0x41);
         assert_eq!(outcome.len, 16);
         assert_eq!(outcome.k, k, "K half must reassemble exactly");

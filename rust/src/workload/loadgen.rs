@@ -28,6 +28,7 @@
 use crate::cli::Command;
 use crate::json::Json;
 use crate::metrics::LatencyRecorder;
+use crate::scheduler::SloClass;
 use crate::testing::net::{self, Reply};
 use crate::util::Rng;
 use anyhow::{anyhow, Context, Result};
@@ -98,15 +99,20 @@ pub struct Arrival {
     prompt_tokens: u32,
     /// Generation budget.
     max_new: u32,
+    /// SLO class sent on the `GEN` line (standard = class-less wire form).
+    class: SloClass,
 }
 
 /// Per-connection tallies, merged into the final report.
 #[derive(Debug, Default)]
 struct ClientStats {
-    ttft: Vec<f64>,
+    /// `(class, seconds)` TTFT samples — split per class at merge time.
+    ttft: Vec<(SloClass, f64)>,
     e2e: Vec<f64>,
     completed: u64,
     busy: u64,
+    /// `BUSY` replies per class (which traffic the server shed).
+    busy_by_class: [u64; 3],
     errors: u64,
     tokens: u64,
 }
@@ -124,6 +130,12 @@ pub fn cli_loadgen(argv: &[String]) -> Result<()> {
             "arrival",
             "inter-arrival model: poisson | bursty | heavy-tail",
             Some("poisson"),
+        )
+        .opt(
+            "class-mix",
+            "SLO class weights, e.g. interactive:0.2,standard:0.5,batch:0.3 \
+             (empty = every request class-less)",
+            Some(""),
         )
         .opt("seed", "arrival-process seed", Some("42"))
         .opt(
@@ -146,6 +158,12 @@ pub fn cli_loadgen(argv: &[String]) -> Result<()> {
         .map_err(|e| anyhow!("{e}"))?;
     let max_new: u32 = args.parse_or("max-new", 16u32).map_err(|e| anyhow!("{e}"))?;
     let arrival = ArrivalModel::parse(&args.str_or("arrival", "poisson"))?;
+    let class_mix_arg = args.str_or("class-mix", "");
+    let class_mix = if class_mix_arg.is_empty() {
+        None
+    } else {
+        Some(super::parse_class_mix(&class_mix_arg).map_err(|e| anyhow!("{e}"))?)
+    };
     let seed: u64 = args.parse_or("seed", 42u64).map_err(|e| anyhow!("{e}"))?;
 
     if args.flag("wait-ready") {
@@ -158,7 +176,7 @@ pub fn cli_loadgen(argv: &[String]) -> Result<()> {
         net::wait_for_port(&addr, Duration::from_secs(secs))?;
     }
 
-    let schedule = build_schedule(arrival, rate, duration, seed, prompt_tokens, max_new);
+    let schedule = build_schedule(arrival, rate, duration, seed, prompt_tokens, max_new, class_mix);
     let offered = schedule.len();
     let report = run_schedule(&addr, schedule, conns)?;
     // Grab the server's decode-pool gauges before (optionally) draining it.
@@ -182,6 +200,16 @@ pub fn cli_loadgen(argv: &[String]) -> Result<()> {
     j.insert("duration_s".into(), Json::from(duration));
     j.insert("conns".into(), Json::from(conns));
     j.insert("arrival".into(), Json::from(arrival.name()));
+    if let Some(mix) = &class_mix {
+        j.insert("class_mix".into(), Json::from(super::class_mix_label(mix)));
+    }
+    // Per-class flow-control counters straight off the server's STATS:
+    // who the admission controller throttled vs shed.
+    for key in ["rejected_overload", "rejected_shed"] {
+        if let Some(v) = decode_pool.get(key) {
+            j.insert(key.into(), v.clone());
+        }
+    }
     // Hoist pool liveness to the top level: a shard killed mid-run —
     // decode *or* prefill — must be loud in the report, not a silently
     // smaller pool.
@@ -232,6 +260,8 @@ pub struct LoadgenReport {
     pub completed: u64,
     /// Requests shed with `BUSY`.
     pub busy: u64,
+    /// `BUSY` replies split by SLO class (indexed by [`SloClass::rank`]).
+    pub busy_by_class: [u64; 3],
     /// Protocol/transport errors.
     pub errors: u64,
     /// Total streamed tokens.
@@ -240,6 +270,8 @@ pub struct LoadgenReport {
     pub elapsed_s: f64,
     /// TTFT from scheduled arrival.
     pub ttft: LatencyRecorder,
+    /// TTFT split by SLO class (indexed by [`SloClass::rank`]).
+    pub ttft_by_class: [LatencyRecorder; 3],
     /// End-to-end latency from scheduled arrival.
     pub e2e: LatencyRecorder,
 }
@@ -262,12 +294,34 @@ impl LoadgenReport {
                 Json::from(self.tokens as f64 / self.elapsed_s.max(1e-9)),
             ),
             ("ttft", self.ttft.to_json()),
+            (
+                "ttft_by_class",
+                Json::obj(
+                    SloClass::ALL
+                        .iter()
+                        .map(|c| (c.name(), self.ttft_by_class[c.rank()].to_json()))
+                        .collect(),
+                ),
+            ),
+            (
+                "busy_by_class",
+                Json::obj(
+                    SloClass::ALL
+                        .iter()
+                        .map(|c| (c.name(), Json::from(self.busy_by_class[c.rank()])))
+                        .collect(),
+                ),
+            ),
             ("e2e", self.e2e.to_json()),
         ])
     }
 }
 
 /// Materialize the arrival schedule under the chosen inter-arrival model.
+/// With a class mix, classes are drawn from the same seeded stream as the
+/// gaps — the schedule is a deterministic function of `(model, seed)`, so
+/// a DES replay of the identical trace sees the identical class sequence.
+#[allow(clippy::too_many_arguments)]
 pub fn build_schedule(
     model: ArrivalModel,
     rate: f64,
@@ -275,6 +329,7 @@ pub fn build_schedule(
     seed: u64,
     prompt_tokens: u32,
     max_new: u32,
+    class_mix: Option<[f64; 3]>,
 ) -> VecDeque<Arrival> {
     let mut rng = Rng::new(seed);
     let mut out = VecDeque::new();
@@ -284,10 +339,15 @@ pub fn build_schedule(
         if t >= duration {
             break;
         }
+        let class = match &class_mix {
+            Some(mix) => super::draw_class(mix, &mut rng),
+            None => SloClass::Standard,
+        };
         out.push_back(Arrival {
             at: t,
             prompt_tokens,
             max_new,
+            class,
         });
     }
     out
@@ -306,22 +366,28 @@ pub fn run_schedule(addr: &str, schedule: VecDeque<Arrival>, conns: usize) -> Re
         workers.push(std::thread::spawn(move || run_client(&addr, t0, queue)));
     }
     let mut ttft = LatencyRecorder::new("ttft");
+    let mut ttft_by_class = SloClass::ALL.map(|c| LatencyRecorder::new(c.name()));
     let mut e2e = LatencyRecorder::new("e2e");
     let mut completed = 0;
     let mut busy = 0;
+    let mut busy_by_class = [0u64; 3];
     let mut errors = 0;
     let mut tokens = 0;
     for w in workers {
         match w.join() {
             Ok(st) => {
-                for x in st.ttft {
+                for (class, x) in st.ttft {
                     ttft.record(x);
+                    ttft_by_class[class.rank()].record(x);
                 }
                 for x in st.e2e {
                     e2e.record(x);
                 }
                 completed += st.completed;
                 busy += st.busy;
+                for (total, n) in busy_by_class.iter_mut().zip(st.busy_by_class) {
+                    *total += n;
+                }
                 errors += st.errors;
                 tokens += st.tokens;
             }
@@ -331,10 +397,12 @@ pub fn run_schedule(addr: &str, schedule: VecDeque<Arrival>, conns: usize) -> Re
     Ok(LoadgenReport {
         completed,
         busy,
+        busy_by_class,
         errors,
         tokens,
         elapsed_s: t0.elapsed().as_secs_f64(),
         ttft,
+        ttft_by_class,
         e2e,
     })
 }
@@ -371,7 +439,14 @@ fn run_client(addr: &str, t0: Instant, queue: Arc<Mutex<VecDeque<Arrival>>>) -> 
         }
         // One prompt byte per token (plus BOS server-side).
         let prompt = "x".repeat(a.prompt_tokens.max(1) as usize);
-        if let Err(e) = writeln!(out, "GEN {} {}", a.max_new, prompt) {
+        // Standard stays class-less so legacy servers see the exact
+        // pre-SLO wire line.
+        let sent = if a.class == SloClass::Standard {
+            writeln!(out, "GEN {} {}", a.max_new, prompt)
+        } else {
+            writeln!(out, "GEN {} class={} {}", a.max_new, a.class.name(), prompt)
+        };
+        if let Err(e) = sent {
             log::error!("loadgen client: send failed: {e}");
             st.errors += 1;
             return st;
@@ -404,7 +479,7 @@ fn run_client(addr: &str, t0: Instant, queue: Arc<Mutex<VecDeque<Arrival>>>) -> 
                 }
                 Reply::Done { .. } => {
                     if let Some(x) = ttft_sample {
-                        st.ttft.push(x);
+                        st.ttft.push((a.class, x));
                     }
                     st.e2e.push(t0.elapsed().as_secs_f64() - a.at);
                     st.completed += 1;
@@ -412,6 +487,7 @@ fn run_client(addr: &str, t0: Instant, queue: Arc<Mutex<VecDeque<Arrival>>>) -> 
                 }
                 Reply::Busy { .. } => {
                     st.busy += 1;
+                    st.busy_by_class[a.class.rank()] += 1;
                     break;
                 }
                 // Never sent during a GEN stream; ignore defensively.

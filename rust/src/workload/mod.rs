@@ -12,8 +12,56 @@ mod trace;
 
 pub use trace::{read_trace, write_trace};
 
-use crate::scheduler::Request;
+use crate::scheduler::{Request, SloClass};
 use crate::util::Rng;
+
+/// SLO-class probability weights, indexed by [`SloClass::rank`]. Parsed
+/// from the CLI/sweep `interactive:0.2,standard:0.5,batch:0.3` syntax;
+/// weights are normalized at draw time so they need not sum to 1.
+pub fn parse_class_mix(s: &str) -> Result<[f64; 3], String> {
+    let mut mix = [0.0; 3];
+    for part in s.split(',').filter(|p| !p.is_empty()) {
+        let (name, weight) = part
+            .split_once(':')
+            .ok_or_else(|| format!("class-mix entry '{part}' is not <class>:<weight>"))?;
+        let c = SloClass::parse(name.trim())
+            .ok_or_else(|| format!("unknown SLO class '{name}' in class mix"))?;
+        let w: f64 = weight
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad weight '{weight}' for class '{name}'"))?;
+        if !w.is_finite() || w < 0.0 {
+            return Err(format!("weight for class '{name}' must be >= 0"));
+        }
+        mix[c.rank()] += w;
+    }
+    if mix.iter().sum::<f64>() <= 0.0 {
+        return Err("class mix has no positive weight".into());
+    }
+    Ok(mix)
+}
+
+/// Render a mix back to the canonical `name:weight` CLI form.
+pub fn class_mix_label(mix: &[f64; 3]) -> String {
+    SloClass::ALL
+        .iter()
+        .map(|c| format!("{}:{}", c.name(), mix[c.rank()]))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Draw one class from (unnormalized) weights.
+pub(crate) fn draw_class(mix: &[f64; 3], rng: &mut Rng) -> SloClass {
+    let total: f64 = mix.iter().sum();
+    let mut x = rng.f64() * total;
+    for c in SloClass::ALL {
+        x -= mix[c.rank()];
+        if x < 0.0 {
+            return c;
+        }
+    }
+    SloClass::Batch
+}
 
 /// Token-length distribution.
 #[derive(Debug, Clone)]
@@ -163,6 +211,11 @@ pub struct WorkloadSpec {
     pub output_len: LengthDist,
     /// Optional shared-prefix structure.
     pub prefix: Option<PrefixSpec>,
+    /// Optional SLO-class mix (weights indexed by [`SloClass::rank`]).
+    /// `None` leaves every request at the class-less default
+    /// ([`SloClass::Standard`]) and draws nothing from the RNG, so
+    /// legacy workloads are bit-identical.
+    pub class_mix: Option<[f64; 3]>,
     /// Workload horizon in seconds.
     pub duration: f64,
     /// RNG seed (workloads are fully reproducible).
@@ -177,6 +230,7 @@ impl WorkloadSpec {
             input_len: LengthDist::paper_short(),
             output_len: LengthDist::Uniform { lo: 64, hi: 512 },
             prefix: None,
+            class_mix: None,
             duration,
             seed,
         }
@@ -189,6 +243,7 @@ impl WorkloadSpec {
             input_len: LengthDist::paper_long(),
             output_len: LengthDist::Uniform { lo: 64, hi: 512 },
             prefix: None,
+            class_mix: None,
             duration,
             seed,
         }
@@ -207,6 +262,7 @@ impl WorkloadSpec {
             },
             output_len: LengthDist::paper_decode_out(),
             prefix: None,
+            class_mix: None,
             duration,
             seed,
         }
@@ -226,6 +282,9 @@ impl WorkloadSpec {
             let input = self.input_len.sample(&mut rng);
             let output = self.output_len.sample(&mut rng).max(1);
             let mut r = Request::new(id, input, output, t);
+            if let Some(mix) = &self.class_mix {
+                r = r.with_class(draw_class(mix, &mut rng));
+            }
             if let Some(p) = &self.prefix {
                 if rng.chance(p.participation) {
                     let group = rng.zipf(p.groups, p.zipf_s) as u64;
@@ -336,6 +395,52 @@ mod tests {
     fn named_rejects_unknown() {
         assert!(ArrivalProcess::named("weibull", 1.0).is_err());
         assert!(ArrivalProcess::named("pareto", 1.0).is_ok());
+    }
+
+    #[test]
+    fn class_mix_parses_and_round_trips() {
+        let mix = parse_class_mix("interactive:0.2,standard:0.5,batch:0.3").unwrap();
+        assert_eq!(mix, [0.2, 0.5, 0.3]);
+        assert_eq!(
+            class_mix_label(&mix),
+            "interactive:0.2,standard:0.5,batch:0.3"
+        );
+        // Partial specs leave the rest at zero weight.
+        assert_eq!(parse_class_mix("batch:1").unwrap(), [0.0, 0.0, 1.0]);
+        assert!(parse_class_mix("premium:1").is_err());
+        assert!(parse_class_mix("interactive:-1").is_err());
+        assert!(parse_class_mix("interactive:0,batch:0").is_err());
+    }
+
+    #[test]
+    fn class_mix_draws_match_weights() {
+        let mut spec = WorkloadSpec::paper_short(100.0, 100.0, 17);
+        spec.class_mix = Some([0.2, 0.5, 0.3]);
+        let reqs = spec.generate();
+        let mut counts = [0usize; 3];
+        for r in &reqs {
+            counts[r.class.rank()] += 1;
+        }
+        let n = reqs.len() as f64;
+        for (got, want) in counts.iter().zip([0.2, 0.5, 0.3]) {
+            let frac = *got as f64 / n;
+            assert!((frac - want).abs() < 0.05, "{counts:?} vs weights");
+        }
+        // Same seed → same classes (parity precondition for DES vs live).
+        let again = spec.generate();
+        for (a, b) in reqs.iter().zip(&again) {
+            assert_eq!(a.class, b.class);
+        }
+    }
+
+    #[test]
+    fn classless_generation_unchanged_by_class_field() {
+        // `class_mix: None` must not perturb the RNG stream.
+        let base = WorkloadSpec::paper_short(20.0, 10.0, 42).generate();
+        for r in &base {
+            assert_eq!(r.class, SloClass::Standard);
+            assert!(r.deadline.is_none());
+        }
     }
 
     #[test]

@@ -36,8 +36,11 @@ use crate::scheduler::baseline::ImmediatePolicy;
 use crate::scheduler::decode::DecodeSchedConfig;
 use crate::testing::net::TestServer;
 use crate::transport::KvCodec;
+use crate::scheduler::SloClass;
 use crate::util::stats;
-use crate::workload::{loadgen, ArrivalProcess, LengthDist, WorkloadSpec};
+use crate::workload::{
+    class_mix_label, loadgen, parse_class_mix, ArrivalProcess, LengthDist, WorkloadSpec,
+};
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 
@@ -110,6 +113,13 @@ pub struct SweepGrid {
     /// the listed shard processes instead and this axis merely labels the
     /// point. Reported as `local_pool_units` in the document.
     pub shards: Vec<u32>,
+    /// SLO class mixes (`;`-separated on the CLI, since a mix itself is a
+    /// comma list). `"none"` (or empty) = class-less traffic, and the
+    /// point's params carry no `class_mix` key at all — so legacy
+    /// baselines (`BENCH_7` and earlier) keep indexing the same points
+    /// under `--compare`. Classed points add per-class TTFT/shed replica
+    /// columns on top of the standard set.
+    pub class_mixes: Vec<String>,
     /// Seeded runs per grid point.
     pub replicas: u32,
     /// Base seed; replica `r` runs at `seed + r` in every point.
@@ -122,10 +132,12 @@ pub struct SweepGrid {
 }
 
 impl Default for SweepGrid {
-    /// The quick CI grid. The checked-in `BENCH_7.json` baseline is this
+    /// The quick CI grid. The checked-in `BENCH_9.json` baseline is this
     /// grid with `--live --shards 2,16` on top (its DES points are
     /// therefore directly comparable against `sbs sweep` with no axis
-    /// flags, and its live points carry the shard-count axis).
+    /// flags, and its live points carry the shard-count axis). The
+    /// class-less points are the same grid points `BENCH_7` carried, so
+    /// cross-baseline `--compare` still overlaps on them.
     fn default() -> Self {
         SweepGrid {
             scheds: vec!["staggered".into(), "immediate".into()],
@@ -136,6 +148,7 @@ impl Default for SweepGrid {
             kv_budgets: vec![config::LIVE_KV_BUDGET_TOKENS],
             codecs: vec!["raw".into()],
             shards: vec![2],
+            class_mixes: vec!["none".into(), "interactive:0.2,standard:0.5,batch:0.3".into()],
             replicas: 3,
             seed: 1,
             duration: 45.0,
@@ -159,6 +172,7 @@ impl SweepGrid {
                 "local_pool_units",
                 Json::Arr(self.shards.iter().map(|&s| Json::from(s)).collect()),
             ),
+            ("class_mix", Json::from(self.class_mixes.clone())),
             ("replicas", Json::from(self.replicas)),
             ("seed", Json::from(self.seed)),
             ("duration_s", Json::from(self.duration)),
@@ -209,6 +223,9 @@ struct PointParams {
     /// Live points only; the DES topology is fixed. Sizes the in-process
     /// decode pool (`local_pool_units` in the document).
     shards: Option<u32>,
+    /// Canonical class-mix label; `None` = class-less point (legacy
+    /// param key set, comparable against pre-SLO baselines).
+    class_mix: Option<String>,
 }
 
 impl PointParams {
@@ -228,13 +245,27 @@ impl PointParams {
         if let Some(s) = self.shards {
             pairs.push(("local_pool_units", Json::from(s)));
         }
+        if let Some(m) = &self.class_mix {
+            pairs.push(("class_mix", Json::from(m.as_str())));
+        }
         Json::obj(pairs)
+    }
+
+    /// Parsed class weights, when the point is classed.
+    fn mix(&self) -> Result<Option<[f64; 3]>> {
+        self.class_mix
+            .as_deref()
+            .map(|m| parse_class_mix(m).map_err(|e| anyhow!(e)))
+            .transpose()
     }
 }
 
 fn parse_policy(name: &str) -> Result<DecodePlacement> {
     Ok(match name {
         "load-aware" | "iqr" => DecodePlacement::IqrLex(DecodeSchedConfig::default()),
+        "deadline-aware" | "deadline_aware" => {
+            DecodePlacement::DeadlineAware(DecodeSchedConfig::default())
+        }
         "round-robin" | "round_robin" => DecodePlacement::RoundRobin,
         "random" => DecodePlacement::Random,
         other => return Err(anyhow!("unknown decode policy '{other}'")),
@@ -264,34 +295,46 @@ fn expand(grid: &SweepGrid, mode: &'static str) -> Result<Vec<PointParams>> {
                         }
                         let window = if sched == "immediate" { 0.0 } else { window };
                         for &kv_budget in &grid.kv_budgets {
-                            let base = PointParams {
-                                mode,
-                                sched: sched.clone(),
-                                arrival: arrival.clone(),
-                                policy: policy.clone(),
-                                qps,
-                                window,
-                                kv_budget,
-                                codec: None,
-                                shards: None,
-                            };
-                            if mode == "live" {
-                                for codec in &grid.codecs {
-                                    KvCodec::parse(codec)
-                                        .ok_or_else(|| anyhow!("unknown kv codec '{codec}'"))?;
-                                    for &shards in &grid.shards {
-                                        if shards == 0 {
-                                            return Err(anyhow!("--shards values must be >= 1"));
+                            for mix in &grid.class_mixes {
+                                // Normalize through the parser so the same
+                                // mix always indexes the same grid point.
+                                let class_mix = if mix.is_empty() || mix == "none" {
+                                    None
+                                } else {
+                                    Some(class_mix_label(
+                                        &parse_class_mix(mix).map_err(|e| anyhow!(e))?,
+                                    ))
+                                };
+                                let base = PointParams {
+                                    mode,
+                                    sched: sched.clone(),
+                                    arrival: arrival.clone(),
+                                    policy: policy.clone(),
+                                    qps,
+                                    window,
+                                    kv_budget,
+                                    codec: None,
+                                    shards: None,
+                                    class_mix,
+                                };
+                                if mode == "live" {
+                                    for codec in &grid.codecs {
+                                        KvCodec::parse(codec)
+                                            .ok_or_else(|| anyhow!("unknown kv codec '{codec}'"))?;
+                                        for &shards in &grid.shards {
+                                            if shards == 0 {
+                                                return Err(anyhow!("--shards values must be >= 1"));
+                                            }
+                                            out.push(PointParams {
+                                                codec: Some(codec.clone()),
+                                                shards: Some(shards),
+                                                ..base.clone()
+                                            });
                                         }
-                                        out.push(PointParams {
-                                            codec: Some(codec.clone()),
-                                            shards: Some(shards),
-                                            ..base.clone()
-                                        });
                                     }
+                                } else {
+                                    out.push(base);
                                 }
-                            } else {
-                                out.push(base);
                             }
                         }
                     }
@@ -321,12 +364,13 @@ fn run_des_replica(p: &PointParams, grid: &SweepGrid, seed: u64) -> Result<Json>
             sc.interval.adaptive = false;
         }
     }
+    cfg.workload.class_mix = p.mix()?;
     let r = Simulation::run(&cfg);
     // Modelled KV handoff traffic: every computed prefill token ships a
     // raw-f32 block sized like the mock engine's KV (16 elems × 4 B).
     // The live path reports measured wire bytes under the same key.
     let kv_bytes = r.report.throughput.prefill_tokens as f64 * 64.0;
-    Ok(Json::obj(vec![
+    let mut rep = match Json::obj(vec![
         ("seed", Json::from(seed)),
         ("ttft_p50_ms", Json::from(r.report.ttft.percentile_ms(50.0))),
         ("ttft_p99_ms", Json::from(r.report.ttft.percentile_ms(99.0))),
@@ -338,7 +382,25 @@ fn run_des_replica(p: &PointParams, grid: &SweepGrid, seed: u64) -> Result<Json>
         ("offered", Json::from(r.offered)),
         ("rejected", Json::from(r.report.rejected)),
         ("ttft_stages", r.ttft_stages),
-    ]))
+    ]) {
+        Json::Obj(m) => m,
+        _ => unreachable!(),
+    };
+    // Classed points carry per-class columns on top of the standard set
+    // (extra keys, so pre-SLO documents still validate).
+    if p.class_mix.is_some() {
+        for c in SloClass::ALL {
+            rep.insert(
+                format!("ttft_p99_{}_ms", c.name()),
+                Json::from(r.ttft_by_class[c.rank()].percentile_ms(99.0)),
+            );
+            rep.insert(
+                format!("rejected_{}", c.name()),
+                Json::from(r.rejected_by_class[c.rank()]),
+            );
+        }
+    }
+    Ok(Json::Obj(rep))
 }
 
 /// One live replica: an in-process [`TestServer`] over mock engines,
@@ -381,6 +443,7 @@ fn run_live_replica(p: &PointParams, grid: &SweepGrid, live: &LiveOpts, seed: u6
         seed,
         live.prompt_tokens,
         live.max_new,
+        p.mix()?,
     );
     let offered = schedule.len();
     let report = loadgen::run_schedule(&server.addr, schedule, live.conns)?;
@@ -388,7 +451,7 @@ fn run_live_replica(p: &PointParams, grid: &SweepGrid, live: &LiveOpts, seed: u6
     server.shutdown()?;
     let imbalance = pool.f64_at(&["imbalance"]).unwrap_or(1.0);
     let kv_bytes = pool.f64_at(&["kv_wire", "wire_bytes"]).unwrap_or(0.0);
-    Ok(Json::obj(vec![
+    let mut rep = match Json::obj(vec![
         ("seed", Json::from(seed)),
         ("ttft_p50_ms", Json::from(report.ttft.percentile_ms(50.0))),
         ("ttft_p99_ms", Json::from(report.ttft.percentile_ms(99.0))),
@@ -403,7 +466,29 @@ fn run_live_replica(p: &PointParams, grid: &SweepGrid, live: &LiveOpts, seed: u6
             "ttft_stages",
             pool.get("ttft_stages").cloned().unwrap_or(Json::Null),
         ),
-    ]))
+    ]) {
+        Json::Obj(m) => m,
+        _ => unreachable!(),
+    };
+    if p.class_mix.is_some() {
+        for c in SloClass::ALL {
+            rep.insert(
+                format!("ttft_p99_{}_ms", c.name()),
+                Json::from(report.ttft_by_class[c.rank()].percentile_ms(99.0)),
+            );
+            rep.insert(
+                format!("rejected_{}", c.name()),
+                Json::from(report.busy_by_class[c.rank()]),
+            );
+            // What the server's flow controller says it shed, per class
+            // (distinct from client-observed BUSY, which also counts
+            // mid-stream rejections).
+            if let Some(v) = pool.f64_at(&["rejected_shed", c.name()]) {
+                rep.insert(format!("rejected_shed_{}", c.name()), Json::from(v));
+            }
+        }
+    }
+    Ok(Json::Obj(rep))
 }
 
 /// mean/std/min/max over the replicas for each summary metric. Std is the
@@ -766,6 +851,12 @@ pub fn cli_sweep(argv: &[String]) -> Result<()> {
         "comma list of live-mode local decode pool sizes (DP units)",
         Some("2"),
     )
+    .opt(
+        "class-mix",
+        "semicolon list of SLO class mixes (none = class-less), e.g. \
+         'none;interactive:0.2,standard:0.5,batch:0.3'",
+        Some("none;interactive:0.2,standard:0.5,batch:0.3"),
+    )
     .opt("replicas", "seeded runs per grid point", Some("3"))
     .opt("seed", "base seed (replica r runs at seed+r)", Some("1"))
     .opt(
@@ -777,7 +868,7 @@ pub fn cli_sweep(argv: &[String]) -> Result<()> {
     .opt(
         "bench-id",
         "identifier stamped into the document",
-        Some("BENCH_7"),
+        Some("BENCH_9"),
     )
     .opt("out", "write the document here (default: stdout)", None)
     .opt(
@@ -868,6 +959,19 @@ pub fn cli_sweep(argv: &[String]) -> Result<()> {
             .into_iter()
             .map(|s| u32::try_from(s).map_err(|_| anyhow!("shard count {s} too large")))
             .collect::<Result<_>>()?,
+        class_mixes: {
+            let mixes: Vec<String> = args
+                .str_or("class-mix", "none;interactive:0.2,standard:0.5,batch:0.3")
+                .split(';')
+                .map(|m| m.trim().to_string())
+                .filter(|m| !m.is_empty())
+                .collect();
+            if mixes.is_empty() {
+                vec!["none".into()]
+            } else {
+                mixes
+            }
+        },
         replicas: args.parse_or("replicas", 3u32).map_err(|e| anyhow!("{e}"))?,
         seed: args.parse_or("seed", 1u64).map_err(|e| anyhow!("{e}"))?,
         duration: args.parse_or("duration", 45.0).map_err(|e| anyhow!("{e}"))?,
@@ -892,7 +996,7 @@ pub fn cli_sweep(argv: &[String]) -> Result<()> {
         None
     };
     let modes = SweepModes {
-        bench_id: args.str_or("bench-id", "BENCH_7"),
+        bench_id: args.str_or("bench-id", "BENCH_9"),
         des: !args.flag("no-des"),
         live,
     };
@@ -926,6 +1030,7 @@ mod tests {
             kv_budgets: vec![150_000],
             codecs: vec!["raw".into(), "lz".into()],
             shards: vec![2, 16],
+            class_mixes: vec!["none".into()],
             replicas: 2,
             seed: 5,
             duration: 4.0,
@@ -954,6 +1059,35 @@ mod tests {
         for want in [2u32, 16] {
             assert!(pts.iter().any(|p| p.shards == Some(want)));
         }
+    }
+
+    #[test]
+    fn class_mix_axis_fans_out_and_stays_off_legacy_params() {
+        let mut g = tiny_grid();
+        g.class_mixes = vec!["none".into(), "interactive:0.2,standard:0.5,batch:0.3".into()];
+        let pts = expand(&g, "des").unwrap();
+        // Every scheduler/window point doubles: one class-less, one classed.
+        assert_eq!(pts.len(), 6);
+        let classless: Vec<_> = pts.iter().filter(|p| p.class_mix.is_none()).collect();
+        assert_eq!(classless.len(), 3);
+        // Class-less params must index identically to a pre-SLO document:
+        // no class_mix key at all.
+        assert!(classless.iter().all(|p| p.to_json().get("class_mix").is_none()));
+        let classed: Vec<_> = pts.iter().filter(|p| p.class_mix.is_some()).collect();
+        assert_eq!(
+            classed[0].to_json().get("class_mix").and_then(Json::as_str),
+            Some("interactive:0.2,standard:0.5,batch:0.3")
+        );
+        // Bad mixes fail at expansion, not hours into the sweep.
+        g.class_mixes = vec!["premium:1".into()];
+        assert!(expand(&g, "des").is_err());
+    }
+
+    #[test]
+    fn deadline_aware_is_a_valid_policy_axis() {
+        let mut g = tiny_grid();
+        g.policies = vec!["deadline-aware".into()];
+        assert!(expand(&g, "des").is_ok());
     }
 
     #[test]

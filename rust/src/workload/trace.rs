@@ -3,7 +3,7 @@
 //! across scheduler variants.
 
 use crate::json::{parse, Json};
-use crate::scheduler::Request;
+use crate::scheduler::{Request, SloClass};
 use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
@@ -19,6 +19,13 @@ fn to_json(r: &Request) -> Json {
     if let Some(g) = r.prefix_group {
         fields.push(("prefix_group", Json::from(g)));
         fields.push(("prefix_len", Json::from(r.prefix_len)));
+    }
+    // Class-less standard requests stay byte-identical to pre-SLO traces.
+    if r.class != SloClass::Standard {
+        fields.push(("class", Json::Str(r.class.name().to_string())));
+    }
+    if let Some(d) = r.deadline {
+        fields.push(("deadline", Json::from(d)));
     }
     Json::obj(fields)
 }
@@ -43,6 +50,13 @@ fn from_json(j: &Json) -> Result<Request> {
     if let Some(g) = j.get("prefix_group").and_then(Json::as_f64) {
         let plen = get_u32("prefix_len")?.min(r.input_tokens);
         r = r.with_prefix(g as u64, plen);
+    }
+    if let Some(c) = j.get("class").and_then(Json::as_str) {
+        let c = SloClass::parse(c).ok_or_else(|| anyhow!("unknown SLO class '{c}'"))?;
+        r = r.with_class(c);
+    }
+    if let Some(d) = j.get("deadline").and_then(Json::as_f64) {
+        r = r.with_deadline(d);
     }
     Ok(r)
 }
@@ -104,6 +118,30 @@ mod tests {
             assert_eq!(a.prefix_group, b.prefix_group);
             assert_eq!(a.prefix_len, b.prefix_len);
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn classed_requests_round_trip() {
+        let dir = std::env::temp_dir().join("sbs_trace_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("classed.jsonl");
+        let reqs = vec![
+            Request::new(0, 100, 10, 0.0).with_class(SloClass::Interactive),
+            Request::new(1, 100, 10, 0.1).with_class(SloClass::Batch).with_deadline(2.5),
+            Request::new(2, 100, 10, 0.2), // class-less
+        ];
+        write_trace(&path, &reqs).unwrap();
+        let back = read_trace(&path).unwrap();
+        for (a, b) in reqs.iter().zip(&back) {
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.deadline, b.deadline);
+        }
+        // The class-less line carries neither key — legacy consumers see
+        // the exact pre-SLO schema.
+        let raw = std::fs::read_to_string(&path).unwrap();
+        let last = raw.lines().nth(2).unwrap();
+        assert!(!last.contains("class") && !last.contains("deadline"), "{last}");
         std::fs::remove_file(&path).ok();
     }
 

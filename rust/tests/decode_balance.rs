@@ -15,8 +15,10 @@ use sbs::cluster::dispatch::{
 use sbs::cluster::workers::RealCluster;
 use sbs::metrics::DecodePoolStats;
 use sbs::scheduler::staggered::{SchedulerAction, StaggeredConfig};
-use sbs::scheduler::types::{DpUnitId, Request};
+use sbs::scheduler::types::{DpUnitId, Request, SloClass};
 use sbs::testing::scenarios::{skewed_decode_cluster, submit_skewed_jobs};
+use sbs::workload::WorkloadSpec;
+use std::collections::VecDeque;
 
 const N_JOBS: u64 = 40;
 const N_DECODE: u32 = 4;
@@ -139,6 +141,8 @@ fn sim_and_live_drivers_make_identical_dispatch_decisions() {
             request_id: 1000 + i,
             kv_tokens: 64 + (i as u32 * 97) % 900,
             remaining_out: 8 + (i as u32 * 13) % 120,
+            class: SloClass::Standard,
+            deadline: None,
         })
         .collect();
     let place = |core: &mut DispatchCore| -> Vec<(u64, DpUnitId)> {
@@ -152,4 +156,106 @@ fn sim_and_live_drivers_make_identical_dispatch_decisions() {
     let pb = place(&mut core_live);
     assert_eq!(pa.len(), joins.len());
     assert_eq!(pa, pb, "decode placements must match between driver styles");
+}
+
+/// Classed counterpart of [`drive_trace`]: a seeded 20/50/30
+/// interactive/standard/batch trace against a single prefill instance
+/// whose `EndForward` is withheld until every second event, so the core
+/// sees genuine backlog and Algorithm 2's overload phase engages
+/// (`N_limit = 2`). Returns (shed ids with class, dispatched ids) so the
+/// two driver styles can be compared decision-for-decision.
+fn drive_classed_overload(live_style: bool) -> (Vec<(u64, SloClass)>, Vec<u64>) {
+    fn absorb(
+        core: &mut DispatchCore,
+        actions: Vec<SchedulerAction>,
+        live_style: bool,
+        shed: &mut Vec<(u64, SloClass)>,
+        placed: &mut Vec<u64>,
+        in_flight: &mut VecDeque<u32>,
+    ) {
+        for act in actions {
+            match act {
+                SchedulerAction::Dispatch(batch) => {
+                    if !live_style {
+                        for a in &batch.assignments {
+                            let eff = a.request.input_tokens - a.cached_tokens;
+                            core.on_deliver_ack(a.unit, eff);
+                            core.on_prefill_consumed(a.unit, eff);
+                        }
+                    }
+                    placed.extend(batch.assignments.iter().map(|a| a.request.id));
+                    in_flight.push_back(batch.instance);
+                }
+                SchedulerAction::Reject(r) => shed.push((r.id, r.class)),
+                _ => {}
+            }
+        }
+    }
+
+    let mut sc = StaggeredConfig::default();
+    sc.pbaa.n_limit = 2;
+    let cfg = DispatchCoreConfig {
+        mode: SchedMode::Staggered(sc),
+        n_prefill: 1,
+        dp_prefill: 1,
+        c_chunk: 1024,
+        n_decode: 1,
+        dp_decode: 2,
+        decode_policy: DecodePolicy::LoadAware(Default::default()),
+        seed: 7,
+    };
+    let mut wl = WorkloadSpec::paper_short(60.0, 3.0, 7);
+    wl.class_mix = Some([0.2, 0.5, 0.3]);
+
+    let mut core = DispatchCore::new(&cfg);
+    let mut shed = Vec::new();
+    let mut placed = Vec::new();
+    let mut in_flight: VecDeque<u32> = VecDeque::new();
+    for (i, r) in wl.generate().into_iter().enumerate() {
+        let t = r.arrival;
+        // Finish at most one outstanding pass every second event: the
+        // instance drains at roughly half the offered rate, so pending
+        // backlog builds and wait counters climb.
+        if i % 2 == 0 {
+            if let Some(inst) = in_flight.pop_front() {
+                let backlog = if live_style {
+                    EndForwardBacklog::ConsumedAll
+                } else {
+                    EndForwardBacklog::Remaining(0)
+                };
+                let acts = core.on_end_forward(inst, 0.05, backlog, t);
+                absorb(&mut core, acts, live_style, &mut shed, &mut placed, &mut in_flight);
+            }
+        }
+        let acts = core.on_arrival(r, t);
+        absorb(&mut core, acts, live_style, &mut shed, &mut placed, &mut in_flight);
+    }
+    (shed, placed)
+}
+
+#[test]
+fn sim_and_live_drivers_shed_the_same_classed_requests() {
+    let (shed_sim, placed_sim) = drive_classed_overload(false);
+    let (shed_live, placed_live) = drive_classed_overload(true);
+    assert_eq!(
+        placed_sim, placed_live,
+        "dispatch decisions must match between driver styles"
+    );
+    assert_eq!(
+        shed_sim, shed_live,
+        "shed sets must be identical between driver styles"
+    );
+    assert!(!shed_sim.is_empty(), "the overload trace must engage flow control");
+    assert!(
+        shed_sim.iter().any(|(_, c)| *c == SloClass::Batch),
+        "batch traffic must shed under sustained overload: {shed_sim:?}"
+    );
+    assert!(
+        shed_sim.iter().all(|(_, c)| *c != SloClass::Interactive),
+        "no interactive request may ever be shed: {shed_sim:?}"
+    );
+    // Nothing is both dispatched and shed.
+    for (id, _) in &shed_sim {
+        assert!(!placed_sim.contains(id), "request {id} both placed and shed");
+    }
 }

@@ -133,11 +133,7 @@ fn submit_parity_trace(cluster: &RealCluster) {
         // sequence is timing-independent.
         let prompt_len = 16 + (i as usize * 37) % 200;
         let max_new = 150 + (i as u32 % 4) * 60;
-        cluster.submit(Job {
-            id: i,
-            prompt: vec![7; prompt_len],
-            max_new,
-        });
+        cluster.submit(Job::new(i, vec![7; prompt_len], max_new));
         std::thread::sleep(Duration::from_millis(10));
     }
 }
@@ -318,11 +314,7 @@ fn replacement_shard_on_same_address_rejoins_the_pool() {
 
     // The restored pool serves traffic end to end.
     for i in 0..6u64 {
-        cluster.submit(Job {
-            id: 1000 + i,
-            prompt: vec![7; 24],
-            max_new: 4,
-        });
+        cluster.submit(Job::new(1000 + i, vec![7; 24], 4));
     }
     let (completions, _report) = cluster.finish().expect("finish");
     assert_eq!(completions.len(), 6, "restored pool must serve all jobs");
@@ -364,11 +356,7 @@ fn pd_separated_topology_serves_end_to_end() {
     let handle = cluster.handle();
     const JOBS: u64 = 16;
     for i in 0..JOBS {
-        cluster.submit(Job {
-            id: i,
-            prompt: vec![7; 16 + (i as usize * 13) % 60],
-            max_new: 8,
-        });
+        cluster.submit(Job::new(i, vec![7; 16 + (i as usize * 13) % 60], 8));
         std::thread::sleep(Duration::from_millis(5));
     }
     let (completions, report) = cluster.finish().expect("P/D cluster finish");
@@ -410,11 +398,7 @@ fn run_pd_trace(
     let cluster = RealCluster::start(cfg).expect("P/D cluster start");
     let handle = cluster.handle();
     for i in 0..20u64 {
-        cluster.submit(Job {
-            id: i,
-            prompt: vec![3 + (i as i32 % 5); 24 + (i as usize * 11) % 80],
-            max_new: 6,
-        });
+        cluster.submit(Job::new(i, vec![3 + (i as i32 % 5); 24 + (i as usize * 11) % 80], 6));
         std::thread::sleep(Duration::from_millis(5));
     }
     // Let the last jobs finish *and* a post-traffic StatsReply land (the

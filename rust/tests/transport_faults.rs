@@ -18,6 +18,7 @@ use sbs::engine::mock::MockEngineConfig;
 use sbs::engine::sampler::Sampling;
 use sbs::engine::PrefillOutcome;
 use sbs::metrics::RequestMetrics;
+use sbs::scheduler::types::SloClass;
 use sbs::testing::net::{accept_peer, FakeShard, ShardConn};
 use sbs::transport::peer::PeerMux;
 use sbs::transport::proto::{
@@ -52,7 +53,7 @@ fn prefill_sinks() -> (PrefillSinks, PrefillEvents) {
     let (h_tx, handoff) = channel();
     (
         PrefillSinks {
-            on_prefilled: Box::new(move |id, outcome, _max_new, _m| {
+            on_prefilled: Box::new(move |id, outcome, _max_new, _class, _m| {
                 let _ = p_tx.send((id, outcome));
             }),
             on_handoff: Box::new(move |id, _exec| {
@@ -81,6 +82,7 @@ fn work(id: u64, prompt_len: usize, max_new: u32) -> PrefillWork {
         id,
         prompt: vec![7; prompt_len],
         max_new,
+        class: SloClass::Standard,
         metrics: RequestMetrics::arrive(0.0, prompt_len as u32),
         target: None,
     }
@@ -519,6 +521,7 @@ fn direct_peer_handoff_admits_and_emits_ordered_stream() {
         first_token: 0x55,
         kv_len: 160,
         max_new: 3,
+        class: SloClass::Interactive,
         exec_time: 0.01,
     });
     match peer.recv(TICK) {
@@ -610,6 +613,7 @@ fn peer_death_mid_handoff_leaves_decode_shard_clean() {
             first_token: 1,
             kv_len: 4,
             max_new: 2,
+            class: SloClass::Standard,
             exec_time: 0.0,
         });
     }
@@ -622,6 +626,7 @@ fn peer_death_mid_handoff_leaves_decode_shard_clean() {
         first_token: 0x30,
         kv_len: 4,
         max_new: 2,
+        class: SloClass::Standard,
         k: Vec::new(),
         v: Vec::new(),
     });
@@ -728,6 +733,7 @@ fn interleaved_handoffs_with_split_frames_share_one_connection() {
                 first_token: id as i32,
                 kv_len,
                 max_new: 2,
+                class: SloClass::Standard,
                 exec_time: 0.0,
             },
         ));
@@ -774,6 +780,7 @@ fn stale_stream_frames_after_relay_fallback_are_dropped() {
             first_token: 2,
             kv_len: 4,
             max_new: 2,
+            class: SloClass::Standard,
             exec_time: 0.0,
         },
     ));
@@ -785,6 +792,7 @@ fn stale_stream_frames_after_relay_fallback_are_dropped() {
         first_token: 0x30,
         kv_len: 4,
         max_new: 2,
+        class: SloClass::Standard,
         k: Vec::new(),
         v: Vec::new(),
     });
@@ -830,6 +838,7 @@ fn stale_stream_frames_after_relay_fallback_are_dropped() {
             first_token: 7,
             kv_len: 2,
             max_new: 2,
+            class: SloClass::Standard,
             exec_time: 0.0,
         },
     ));
@@ -871,6 +880,7 @@ fn peer_death_with_two_handoffs_in_flight_drops_both_assemblies() {
             first_token: 0x30,
             kv_len: 4,
             max_new: 2,
+            class: SloClass::Standard,
             k: Vec::new(),
             v: Vec::new(),
         });
@@ -933,7 +943,9 @@ fn concurrent_same_peer_handoffs_interleave_on_one_socket() {
                 unit: 0,
             },
         );
-        std::thread::spawn(move || mux.handoff(KvCodec::Raw, &target, id, &out, 4))
+        std::thread::spawn(move || {
+            mux.handoff(KvCodec::Raw, &target, id, &out, 4, SloClass::Standard)
+        })
     };
     let t_big = spawn_handoff(&mux, &addr, 201, big);
     std::thread::sleep(Duration::from_millis(50));
@@ -980,6 +992,7 @@ fn unknown_unit_peer_commit_is_rejected_to_scheduler() {
         first_token: 1,
         kv_len: 4,
         max_new: 2,
+        class: SloClass::Standard,
         exec_time: 0.0,
     });
     // The peer still gets its ack (the handoff reached a terminal
