@@ -120,6 +120,17 @@ impl DecodeEngine {
         self.units[dp].push(ActiveSeq { req, remaining, kv });
     }
 
+    /// Extract a sequence mid-generation (rescue preemption/migration):
+    /// remove it from unit `dp` and return its live state so the caller
+    /// can re-park it with its progress intact. `None` if the request is
+    /// not resident there. Extraction happens at step boundaries only
+    /// (the DES driver acts between `finish_step` and the next
+    /// `start_step`), matching the live engines' slot-release semantics.
+    pub fn remove(&mut self, dp: usize, req: usize) -> Option<ActiveSeq> {
+        let i = self.units[dp].iter().position(|s| s.req == req)?;
+        Some(self.units[dp].remove(i))
+    }
+
     /// Start a synchronized step; returns its duration if any sequence is
     /// active and the engine is idle.
     pub fn start_step(&mut self) -> Option<f64> {
@@ -221,6 +232,19 @@ mod tests {
         e3.join(0, 1, 100, 5);
         e3.join(0, 2, 100, 5);
         assert!(!e3.can_accept(0, 10)); // batch cap
+    }
+
+    #[test]
+    fn remove_extracts_live_state_and_frees_the_unit() {
+        let mut e = engine(1);
+        e.join(0, 7, 100, 5);
+        e.start_step().unwrap();
+        e.finish_step();
+        let s = e.remove(0, 7).expect("resident");
+        assert_eq!(s.kv, 101, "KV grew by the one step taken");
+        assert_eq!(s.remaining, 4);
+        assert_eq!(e.active(), 0);
+        assert!(e.remove(0, 7).is_none(), "double extraction is safe");
     }
 
     #[test]

@@ -33,7 +33,7 @@
 //!   [`DecodePoolStats`].
 
 use super::costmodel::DpStepLoad;
-use crate::metrics::{DecodePoolStats, DpOccupancyGauge};
+use crate::metrics::{DecodePoolStats, DpOccupancyGauge, RescueGauge};
 use crate::scheduler::baseline::{ImmediatePolicy, ImmediateScheduler};
 use crate::scheduler::decode::{schedule_batch, DecodeSchedConfig};
 use crate::scheduler::staggered::{
@@ -42,7 +42,7 @@ use crate::scheduler::staggered::{
 use crate::scheduler::state::DpState;
 use crate::scheduler::types::{DpUnitId, Request, SloClass};
 use crate::util::Rng;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 /// Prefill control-plane choice, shared by the DES and the live cluster.
 #[derive(Debug, Clone)]
@@ -158,6 +158,113 @@ pub struct DecodePlacementOutcome {
     pub parked: Vec<DecodeJoin>,
 }
 
+/// Tunables of the SLO-violation rescue scan ([`DispatchCore::rescue_scan`]).
+///
+/// The scan runs inside the scheduling tick (the staggered buffering
+/// window — off the dispatch hot path) and projects each resident
+/// sequence's completion from its observed per-token rate. A sequence
+/// whose projection violates its [`DecodeJoin::deadline`] triggers one
+/// of two rescue actions: preempt a batch-class sequence on its unit, or
+/// live-migrate the endangered sequence to a unit with headroom.
+#[derive(Debug, Clone)]
+pub struct RescueConfig {
+    /// Master switch; disabled cores never scan and never count.
+    pub enabled: bool,
+    /// Minimum seconds between scans (debounces high-rate tick loops).
+    pub scan_every: f64,
+    /// Per-sequence grace after a join or a rescue action: the sequence
+    /// is left alone this long before (re)considering it, so one slow
+    /// sequence cannot thrash the pool with back-to-back extractions.
+    pub cooldown: f64,
+    /// Pessimism multiplier on the projected remaining time (>1 rescues
+    /// earlier, <1 later).
+    pub margin: f64,
+    /// Assumed seconds per token before a sequence has shown any
+    /// progress; 0 = never project (wait for the first observed token).
+    pub default_rate: f64,
+}
+
+impl Default for RescueConfig {
+    fn default() -> Self {
+        RescueConfig {
+            enabled: false,
+            scan_every: 0.05,
+            cooldown: 0.25,
+            margin: 1.0,
+            default_rate: 0.0,
+        }
+    }
+}
+
+impl RescueConfig {
+    /// An enabled config with the default cadence.
+    pub fn on() -> Self {
+        RescueConfig {
+            enabled: true,
+            ..Default::default()
+        }
+    }
+}
+
+/// What a rescue action does to the sequence it names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RescueKind {
+    /// The sequence is a batch-class victim on an endangered sequence's
+    /// unit: extract it to shed load there (it re-parks and re-places
+    /// with its progress intact).
+    Preempt,
+    /// The sequence is itself endangered: extract it so it can re-place
+    /// onto a unit with headroom (live migration).
+    Migrate,
+}
+
+/// One rescue decision from [`DispatchCore::rescue_scan`]: extract the
+/// named sequence from `unit`. The driver performs the extraction
+/// through its transport; when the extracted state lands, it releases
+/// the ledger charge ([`DispatchCore::on_decode_leave`]) and re-parks
+/// the sequence for standard placement — both rescue kinds reuse the
+/// one placement path, so the DES and the live cluster cannot diverge.
+#[derive(Debug, Clone, Copy)]
+pub struct RescueAction {
+    /// Sequence to extract.
+    pub id: u64,
+    /// Unit it is resident on.
+    pub unit: DpUnitId,
+    /// Why it is being extracted.
+    pub kind: RescueKind,
+}
+
+/// One resident decode sequence as the rescue scan sees it.
+#[derive(Debug, Clone)]
+struct ResidentSeq {
+    /// Flat index into the core's decode ledger.
+    unit: usize,
+    class: SloClass,
+    deadline: Option<f64>,
+    /// KV tokens at this join (prompt + any pre-move generation).
+    kv_at_join: u32,
+    remaining_at_join: u32,
+    joined_at: f64,
+    /// First emission index observed for this residency; progress is
+    /// measured relative to it, so a migrated sequence's cumulative
+    /// indexes self-calibrate on the destination.
+    first_index: Option<u32>,
+    /// Tokens generated during this residency (observed).
+    tokens_done: u32,
+    /// Last join or rescue action touching this sequence (cooldown).
+    last_rescue: f64,
+}
+
+/// Rescue + deadline outcome counters (mirrored into [`RescueGauge`]).
+#[derive(Debug, Clone, Copy, Default)]
+struct RescueCounters {
+    preempted: u64,
+    migrated: u64,
+    deadline_met: u64,
+    deadline_violated: u64,
+    rescue_deadline_met: u64,
+}
+
 /// Driver-side admission control for decode placement.
 ///
 /// `admissible` receives the core's live ledger entry for the unit
@@ -237,6 +344,15 @@ pub struct DispatchCore {
     occupancy: Vec<UnitOccupancy>,
     /// request id → (flat unit index, ledger charge) for exact release.
     owners: HashMap<u64, (usize, u32)>,
+    /// SLO-violation rescue scan tunables ([`DispatchCore::set_rescue`]).
+    rescue_cfg: RescueConfig,
+    /// request id → residency facts the rescue scan projects from.
+    resident: HashMap<u64, ResidentSeq>,
+    /// Sequences a rescue action has touched (survives re-placement, so
+    /// `rescue_deadline_met` credits the rescue, not the original spot).
+    rescued: HashSet<u64>,
+    last_scan: f64,
+    rescue_counters: RescueCounters,
 }
 
 impl DispatchCore {
@@ -271,7 +387,18 @@ impl DispatchCore {
             place_rng: Rng::new(cfg.seed),
             occupancy,
             owners: HashMap::new(),
+            rescue_cfg: RescueConfig::default(),
+            resident: HashMap::new(),
+            rescued: HashSet::new(),
+            last_scan: f64::NEG_INFINITY,
+            rescue_counters: RescueCounters::default(),
         }
+    }
+
+    /// Install the rescue-scan tunables (default: disabled). Separate
+    /// from [`DispatchCoreConfig`] so existing drivers opt in explicitly.
+    pub fn set_rescue(&mut self, cfg: RescueConfig) {
+        self.rescue_cfg = cfg;
     }
 
     // ---- prefill plane -------------------------------------------------
@@ -446,77 +573,121 @@ impl DispatchCore {
         });
         let mut placed = Vec::new();
         let mut parked = Vec::new();
-        for j in joins {
-            let admit: Vec<usize> = (0..self.decode_states.len())
-                .filter(|&u| admission.admissible(&self.decode_states[u], &j))
-                .collect();
-            if admit.is_empty() {
-                parked.push(j);
-                continue;
-            }
-            // Run the policy over a view of the admissible units; the
-            // per-join snapshot semantics of Algorithm 3 are preserved by
-            // placing one request at a time.
-            let mut view: Vec<DpState> = admit
-                .iter()
-                .map(|&u| self.decode_states[u].clone())
-                .collect();
-            let chosen = match &self.policy {
-                DecodePolicy::LoadAware(cfg) => {
-                    let req = Request::new(j.request_id, j.kv_tokens, j.remaining_out, 0.0);
-                    let a = schedule_batch(cfg, vec![req], &mut view);
-                    view.iter().position(|d| d.id == a[0].unit).unwrap()
+        'joins: for j in joins {
+            // Units that failed the commit-time re-check this join: a
+            // shard can die between the admissibility snapshot and the
+            // commit, so a stale winner is excluded and the join is
+            // re-scored over the survivors instead of panicking the
+            // scheduler thread (historically an `.unwrap()` here).
+            let mut excluded: Vec<usize> = Vec::new();
+            loop {
+                let admit: Vec<usize> = (0..self.decode_states.len())
+                    .filter(|&u| !excluded.contains(&u))
+                    .filter(|&u| admission.admissible(&self.decode_states[u], &j))
+                    .collect();
+                if admit.is_empty() {
+                    parked.push(j);
+                    continue 'joins;
                 }
-                DecodePolicy::DeadlineAware(cfg) => match j.deadline {
-                    // Deadline-less joins (legacy clients): pure load.
-                    None => {
+                // Run the policy over a view of the admissible units; the
+                // per-join snapshot semantics of Algorithm 3 are preserved
+                // by placing one request at a time.
+                let mut view: Vec<DpState> = admit
+                    .iter()
+                    .map(|&u| self.decode_states[u].clone())
+                    .collect();
+                let chosen = match &self.policy {
+                    DecodePolicy::LoadAware(cfg) => {
                         let req = Request::new(j.request_id, j.kv_tokens, j.remaining_out, 0.0);
                         let a = schedule_batch(cfg, vec![req], &mut view);
-                        view.iter().position(|d| d.id == a[0].unit).unwrap()
+                        a.first()
+                            .and_then(|a0| view.iter().position(|d| d.id == a0.unit))
                     }
-                    Some(deadline) => {
-                        // Urgency interpolates the objective between
-                        // batch depth (interference → per-step latency)
-                        // and KV occupancy (memory packing). Norms are
-                        // over the admissible view; +1 avoids 0/0 on an
-                        // idle pool. Ties break to the lower unit index
-                        // (deterministic, DES/live parity).
-                        let slack = (deadline - now).max(0.0);
-                        let urgency = 1.0 / (1.0 + slack);
-                        let max_b = view.iter().map(|d| d.batch).max().unwrap_or(0) as f64;
-                        let max_k = view.iter().map(|d| d.kv_tokens).max().unwrap_or(0) as f64;
-                        let score = |d: &DpState| {
-                            urgency * d.batch as f64 / (max_b + 1.0)
-                                + (1.0 - urgency) * d.kv_tokens as f64 / (max_k + 1.0)
-                        };
-                        let mut best = 0usize;
-                        for i in 1..view.len() {
-                            if score(&view[i]) < score(&view[best]) {
-                                best = i;
-                            }
+                    DecodePolicy::DeadlineAware(cfg) => match j.deadline {
+                        // Deadline-less joins (legacy clients): pure load.
+                        None => {
+                            let req =
+                                Request::new(j.request_id, j.kv_tokens, j.remaining_out, 0.0);
+                            let a = schedule_batch(cfg, vec![req], &mut view);
+                            a.first()
+                                .and_then(|a0| view.iter().position(|d| d.id == a0.unit))
                         }
-                        best
+                        Some(deadline) => {
+                            // Urgency interpolates the objective between
+                            // batch depth (interference → per-step latency)
+                            // and KV occupancy (memory packing). Norms are
+                            // over the admissible view; +1 avoids 0/0 on an
+                            // idle pool. Ties break to the lower unit index
+                            // (deterministic, DES/live parity).
+                            let slack = (deadline - now).max(0.0);
+                            let urgency = 1.0 / (1.0 + slack);
+                            let max_b = view.iter().map(|d| d.batch).max().unwrap_or(0) as f64;
+                            let max_k =
+                                view.iter().map(|d| d.kv_tokens).max().unwrap_or(0) as f64;
+                            let score = |d: &DpState| {
+                                urgency * d.batch as f64 / (max_b + 1.0)
+                                    + (1.0 - urgency) * d.kv_tokens as f64 / (max_k + 1.0)
+                            };
+                            let mut best = 0usize;
+                            for i in 1..view.len() {
+                                if score(&view[i]) < score(&view[best]) {
+                                    best = i;
+                                }
+                            }
+                            Some(best)
+                        }
+                    },
+                    DecodePolicy::Random => Some(self.place_rng.index(view.len())),
+                    DecodePolicy::RoundRobin => {
+                        let i = self.rr_cursor % view.len();
+                        self.rr_cursor = self.rr_cursor.wrapping_add(1);
+                        Some(i)
                     }
-                },
-                DecodePolicy::Random => self.place_rng.index(view.len()),
-                DecodePolicy::RoundRobin => {
-                    let i = self.rr_cursor % view.len();
-                    self.rr_cursor = self.rr_cursor.wrapping_add(1);
-                    i
+                };
+                let Some(chosen) = chosen else {
+                    // The scorer named a unit that is no longer in the
+                    // view (or assigned nothing): treat as inadmissible
+                    // and park rather than panic.
+                    parked.push(j);
+                    continue 'joins;
+                };
+                let u = admit[chosen];
+                // Commit-time re-check: the snapshot above may have gone
+                // stale while the policy scored (the driver's transport
+                // can mark a shard dead at any point). A unit that no
+                // longer admits is excluded and the join re-scored.
+                if !admission.admissible(&self.decode_states[u], &j) {
+                    excluded.push(u);
+                    continue;
                 }
-            };
-            let u = admit[chosen];
-            let charge = j.total_len();
-            // Defensive: ids must be unique, but if a duplicate slips in,
-            // release the earlier charge instead of leaking it forever.
-            if self.owners.contains_key(&j.request_id) {
-                self.on_decode_leave(j.request_id, now);
+                let charge = j.total_len();
+                // Defensive: ids must be unique, but if a duplicate slips
+                // in, release the earlier charge instead of leaking it
+                // forever.
+                if self.owners.contains_key(&j.request_id) {
+                    self.on_decode_leave(j.request_id, now);
+                }
+                self.decode_states[u].on_decode_join(charge);
+                self.occupancy[u].join(now);
+                self.owners.insert(j.request_id, (u, charge));
+                self.resident.insert(
+                    j.request_id,
+                    ResidentSeq {
+                        unit: u,
+                        class: j.class,
+                        deadline: j.deadline,
+                        kv_at_join: j.kv_tokens,
+                        remaining_at_join: j.remaining_out,
+                        joined_at: now,
+                        first_index: None,
+                        tokens_done: 0,
+                        last_rescue: now,
+                    },
+                );
+                admission.commit(self.decode_states[u].id, &j);
+                placed.push((j, self.decode_states[u].id));
+                continue 'joins;
             }
-            self.decode_states[u].on_decode_join(charge);
-            self.occupancy[u].join(now);
-            self.owners.insert(j.request_id, (u, charge));
-            admission.commit(self.decode_states[u].id, &j);
-            placed.push((j, self.decode_states[u].id));
         }
         DecodePlacementOutcome { placed, parked }
     }
@@ -528,9 +699,194 @@ impl DispatchCore {
     /// placed / already released).
     pub fn on_decode_leave(&mut self, request_id: u64, now: f64) -> Option<(DpUnitId, u32)> {
         let (u, charge) = self.owners.remove(&request_id)?;
+        self.resident.remove(&request_id);
         self.decode_states[u].on_decode_leave(charge);
         self.occupancy[u].leave(now);
         Some((self.decode_states[u].id, charge))
+    }
+
+    /// A placed sequence finished its generation (terminal `Done`):
+    /// score its deadline outcome, then release the ledger charge like
+    /// [`DispatchCore::on_decode_leave`]. Sequences a rescue action
+    /// touched ([`DispatchCore::rescue_scan`]) that still meet their
+    /// deadline count into `rescue_deadline_met`. Rescue extractions
+    /// must go through `on_decode_leave` instead — the sequence is
+    /// moving, not finishing.
+    pub fn on_decode_finish(&mut self, request_id: u64, now: f64) -> Option<(DpUnitId, u32)> {
+        if let Some(deadline) = self.resident.get(&request_id).and_then(|s| s.deadline) {
+            if now <= deadline {
+                self.rescue_counters.deadline_met += 1;
+                if self.rescued.contains(&request_id) {
+                    self.rescue_counters.rescue_deadline_met += 1;
+                }
+            } else {
+                self.rescue_counters.deadline_violated += 1;
+            }
+        }
+        self.rescued.remove(&request_id);
+        self.on_decode_leave(request_id, now)
+    }
+
+    /// Feed one generated-token observation for a resident sequence.
+    ///
+    /// `index` is the *cumulative* emission index of the stream (tokens
+    /// emitted so far for the request, monotone across migrations). The
+    /// core calibrates against the first index seen in the current
+    /// residency, so both the DES (which reports absolute progress) and
+    /// a freshly migrated live stream (which resumes mid-count) yield
+    /// the same per-residency rate.
+    pub fn on_decode_progress(&mut self, request_id: u64, index: u32) {
+        if let Some(seq) = self.resident.get_mut(&request_id) {
+            let first = *seq.first_index.get_or_insert(index);
+            seq.tokens_done = seq.tokens_done.max(index.saturating_sub(first) + 1);
+        }
+    }
+
+    /// SLO class of a resident sequence (what it was placed with).
+    /// Drivers query it before [`DispatchCore::on_decode_leave`] when
+    /// re-parking an extracted sequence, so the class survives the move
+    /// without a second driver-side registry.
+    pub fn resident_class(&self, request_id: u64) -> Option<SloClass> {
+        self.resident.get(&request_id).map(|s| s.class)
+    }
+
+    /// Scan resident sequences for projected deadline violations and
+    /// decide rescue actions (the tentpole of the SLO rescue layer).
+    ///
+    /// For each endangered sequence — one whose `now + remaining ×
+    /// observed_rate × margin` exceeds its deadline — the scan prefers
+    /// **preempting** the heaviest batch-class sequence co-resident on
+    /// the same unit (shedding interference without moving the urgent
+    /// KV), and falls back to **migrating** the endangered sequence
+    /// itself when a strictly shallower admissible unit exists. The scan
+    /// only *decides*; the driver extracts the named sequences through
+    /// its transport, releases their charge via
+    /// [`DispatchCore::on_decode_leave`] when the state lands, and
+    /// re-parks them into the standard placement path — so the DES and
+    /// the live cluster share every rescue decision bit for bit.
+    pub fn rescue_scan(
+        &mut self,
+        now: f64,
+        admission: &mut dyn DecodeAdmission,
+    ) -> Vec<RescueAction> {
+        if !self.rescue_cfg.enabled || now - self.last_scan < self.rescue_cfg.scan_every {
+            return Vec::new();
+        }
+        self.last_scan = now;
+        let cfg = self.rescue_cfg.clone();
+        let mut actions: Vec<RescueAction> = Vec::new();
+        // Sequences already claimed by an action this scan (either as
+        // victim or as migrant) — one move per sequence per scan.
+        let mut taken: HashSet<u64> = HashSet::new();
+        // Deterministic order for DES/live parity.
+        let mut ids: Vec<u64> = self.resident.keys().copied().collect();
+        ids.sort_unstable();
+        for id in ids {
+            let (deadline, src, joined_at, tokens_done, remaining_at_join, kv_at_join) = {
+                let s = &self.resident[&id];
+                let Some(d) = s.deadline else { continue };
+                if taken.contains(&id) || now - s.last_rescue < cfg.cooldown {
+                    continue;
+                }
+                (
+                    d,
+                    s.unit,
+                    s.joined_at,
+                    s.tokens_done,
+                    s.remaining_at_join,
+                    s.kv_at_join,
+                )
+            };
+            // Observed seconds per token this residency; before the
+            // first token the configured default applies (0 = wait).
+            let rate = if tokens_done > 0 {
+                (now - joined_at).max(0.0) / tokens_done as f64
+            } else if cfg.default_rate > 0.0 {
+                cfg.default_rate
+            } else {
+                continue;
+            };
+            let remaining = remaining_at_join.saturating_sub(tokens_done);
+            if remaining == 0 {
+                continue;
+            }
+            if now + remaining as f64 * rate * cfg.margin <= deadline {
+                continue;
+            }
+            // Endangered. (a) Shed the heaviest batch-class co-resident
+            // (most remaining work = most interference relief; ties to
+            // the lowest id for determinism).
+            let victim = self
+                .resident
+                .iter()
+                .filter(|(vid, v)| {
+                    **vid != id
+                        && v.unit == src
+                        && v.class == SloClass::Batch
+                        && !taken.contains(*vid)
+                        && now - v.last_rescue >= cfg.cooldown
+                })
+                .max_by(|(aid, a), (bid, b)| {
+                    let ar = a.remaining_at_join.saturating_sub(a.tokens_done);
+                    let br = b.remaining_at_join.saturating_sub(b.tokens_done);
+                    ar.cmp(&br).then(bid.cmp(aid))
+                })
+                .map(|(vid, _)| *vid);
+            if let Some(vid) = victim {
+                taken.insert(vid);
+                taken.insert(id);
+                self.rescue_counters.preempted += 1;
+                self.rescued.insert(id);
+                actions.push(RescueAction {
+                    id: vid,
+                    unit: self.decode_states[src].id,
+                    kind: RescueKind::Preempt,
+                });
+                self.resident.get_mut(&vid).unwrap().last_rescue = now;
+                self.resident.get_mut(&id).unwrap().last_rescue = now;
+                continue;
+            }
+            // (b) No batch victim: migrate the endangered sequence if an
+            // admissible unit exists that would still be strictly
+            // shallower than the source after accepting it.
+            let moved = DecodeJoin {
+                request_id: id,
+                kv_tokens: kv_at_join + tokens_done,
+                remaining_out: remaining,
+                class: self.resident[&id].class,
+                deadline: Some(deadline),
+            };
+            let src_batch = self.decode_states[src].batch;
+            let has_headroom = (0..self.decode_states.len()).any(|u| {
+                u != src
+                    && self.decode_states[u].batch + 1 < src_batch
+                    && admission.admissible(&self.decode_states[u], &moved)
+            });
+            if has_headroom {
+                taken.insert(id);
+                self.rescue_counters.migrated += 1;
+                self.rescued.insert(id);
+                actions.push(RescueAction {
+                    id,
+                    unit: self.decode_states[src].id,
+                    kind: RescueKind::Migrate,
+                });
+                self.resident.get_mut(&id).unwrap().last_rescue = now;
+            }
+        }
+        actions
+    }
+
+    /// Snapshot of the rescue/deadline counters.
+    pub fn rescue_gauge(&self) -> RescueGauge {
+        RescueGauge {
+            enabled: self.rescue_cfg.enabled,
+            preempted: self.rescue_counters.preempted,
+            migrated: self.rescue_counters.migrated,
+            deadline_met: self.rescue_counters.deadline_met,
+            deadline_violated: self.rescue_counters.deadline_violated,
+            rescue_deadline_met: self.rescue_counters.rescue_deadline_met,
+        }
     }
 
     /// Sequences currently placed on `unit` per the core ledger.
@@ -569,6 +925,7 @@ impl DispatchCore {
             units,
             prefill: Vec::new(),
             kv_wire: Default::default(),
+            rescue: self.rescue_gauge(),
         }
     }
 }
@@ -802,6 +1159,230 @@ mod tests {
         };
         let out = c.place_decode(vec![relaxed], 1.0, &mut FnAdmission(two));
         assert_eq!(out.placed[0].1, DpUnitId::new(0, 0));
+    }
+
+    /// Admission that simulates a shard dying *between* the
+    /// admissibility snapshot and the commit: every unit admits for the
+    /// first `kill_after` `admissible` calls, then `dead` (or, with
+    /// `dead == None`, every unit) stops admitting — exactly the window
+    /// that used to panic the scheduler via `.unwrap()`.
+    struct DyingAdmission {
+        dead: Option<DpUnitId>,
+        calls: u32,
+        kill_after: u32,
+    }
+
+    impl DecodeAdmission for DyingAdmission {
+        fn admissible(&mut self, state: &DpState, _join: &DecodeJoin) -> bool {
+            self.calls += 1;
+            if self.calls <= self.kill_after {
+                return true;
+            }
+            match self.dead {
+                Some(d) => state.id != d,
+                None => false,
+            }
+        }
+
+        fn commit(&mut self, unit: DpUnitId, _join: &DecodeJoin) {
+            if let Some(d) = self.dead {
+                assert_ne!(unit, d, "must never commit onto the dead unit");
+            }
+        }
+    }
+
+    #[test]
+    fn unit_death_between_snapshot_and_commit_rescores_survivors() {
+        let mut c = DispatchCore::new(&core_cfg(
+            staggered(),
+            DecodePolicy::LoadAware(DecodeSchedConfig::default()),
+        ));
+        // Load every unit except i0d0 so the scorer must pick i0d0.
+        for (i, u) in [(1u64, (0, 1)), (2, (1, 0)), (3, (1, 1))] {
+            c.place_decode(
+                vec![join(i, 100, 10)],
+                0.0,
+                &mut FnAdmission(|id, _| id == DpUnitId::new(u.0, u.1)),
+            );
+        }
+        // The snapshot sees all 4 units admissible (4 calls), the policy
+        // picks idle i0d0, and the commit-time re-check (call 5) finds
+        // it dead. The join must re-score over the survivors and land
+        // elsewhere — the old code panicked here.
+        let mut adm = DyingAdmission {
+            dead: Some(DpUnitId::new(0, 0)),
+            calls: 0,
+            kill_after: 4,
+        };
+        let out = c.place_decode(vec![join(9, 100, 10)], 1.0, &mut adm);
+        assert_eq!(out.placed.len(), 1);
+        assert_ne!(out.placed[0].1, DpUnitId::new(0, 0));
+        assert!(out.parked.is_empty());
+    }
+
+    #[test]
+    fn whole_pool_death_between_snapshot_and_commit_parks() {
+        let mut c = DispatchCore::new(&core_cfg(
+            staggered(),
+            DecodePolicy::LoadAware(DecodeSchedConfig::default()),
+        ));
+        let mut adm = DyingAdmission {
+            dead: None,
+            calls: 0,
+            kill_after: 4,
+        };
+        let out = c.place_decode(vec![join(9, 100, 10)], 0.0, &mut adm);
+        assert!(out.placed.is_empty());
+        assert_eq!(out.parked.len(), 1, "total death parks instead of panicking");
+    }
+
+    fn rescue_core() -> DispatchCore {
+        let mut c = DispatchCore::new(&core_cfg(
+            staggered(),
+            DecodePolicy::LoadAware(DecodeSchedConfig::default()),
+        ));
+        c.set_rescue(RescueConfig::on());
+        c
+    }
+
+    #[test]
+    fn rescue_prefers_preempting_batch_victim_on_hot_unit() {
+        let mut c = rescue_core();
+        let on_00 = |u: DpUnitId, _| u == DpUnitId::new(0, 0);
+        // i0d0 hosts a heavy batch sequence and an endangered
+        // interactive one.
+        c.place_decode(
+            vec![
+                DecodeJoin {
+                    class: SloClass::Batch,
+                    ..join(1, 100, 50)
+                },
+                DecodeJoin {
+                    class: SloClass::Interactive,
+                    deadline: Some(2.0),
+                    ..join(2, 100, 10)
+                },
+            ],
+            0.0,
+            &mut FnAdmission(on_00),
+        );
+        // One token in one second: 1 s/token, 9 remaining → projected
+        // finish ≈ 10 s, deadline 2 s → endangered.
+        c.on_decode_progress(2, 0);
+        let actions = c.rescue_scan(1.0, &mut FnAdmission(|_, _| true));
+        assert_eq!(actions.len(), 1);
+        assert_eq!(actions[0].id, 1, "the batch co-resident is the victim");
+        assert_eq!(actions[0].kind, RescueKind::Preempt);
+        assert_eq!(actions[0].unit, DpUnitId::new(0, 0));
+        assert_eq!(c.rescue_gauge().preempted, 1);
+        // scan_every gates an immediate rescan; cooldown gates the pair.
+        assert!(c.rescue_scan(1.01, &mut FnAdmission(|_, _| true)).is_empty());
+        assert!(c.rescue_scan(1.2, &mut FnAdmission(|_, _| true)).is_empty());
+        // The rescued sequence finishing inside its deadline credits the
+        // rescue.
+        c.on_decode_finish(2, 1.8);
+        let g = c.rescue_gauge();
+        assert_eq!(g.deadline_met, 1);
+        assert_eq!(g.rescue_deadline_met, 1);
+        assert_eq!(g.deadline_violated, 0);
+    }
+
+    #[test]
+    fn rescue_migrates_endangered_seq_when_no_batch_victim() {
+        let mut c = rescue_core();
+        let on_00 = |u: DpUnitId, _| u == DpUnitId::new(0, 0);
+        // Two interactive residents on i0d0 (no batch victim); only one
+        // carries a deadline.
+        c.place_decode(
+            vec![
+                DecodeJoin {
+                    class: SloClass::Interactive,
+                    deadline: Some(2.0),
+                    ..join(1, 100, 10)
+                },
+                DecodeJoin {
+                    class: SloClass::Interactive,
+                    ..join(2, 100, 10)
+                },
+            ],
+            0.0,
+            &mut FnAdmission(on_00),
+        );
+        c.on_decode_progress(1, 0);
+        let actions = c.rescue_scan(1.0, &mut FnAdmission(|_, _| true));
+        assert_eq!(actions.len(), 1);
+        assert_eq!(actions[0].id, 1, "the endangered sequence itself moves");
+        assert_eq!(actions[0].kind, RescueKind::Migrate);
+        assert_eq!(c.rescue_gauge().migrated, 1);
+        // Driver side of the move: release, re-park, re-place. The
+        // rescued mark survives the move, so a deadline met after the
+        // migration still credits the rescue.
+        c.on_decode_leave(1, 1.1);
+        let moved = DecodeJoin {
+            request_id: 1,
+            kv_tokens: 101,
+            remaining_out: 9,
+            class: SloClass::Interactive,
+            deadline: Some(2.0),
+        };
+        let out = c.place_decode(vec![moved], 1.1, &mut FnAdmission(|_, _| true));
+        assert_eq!(out.placed.len(), 1);
+        assert_ne!(out.placed[0].1, DpUnitId::new(0, 0), "lands off the hot unit");
+        c.on_decode_finish(1, 1.9);
+        assert_eq!(c.rescue_gauge().rescue_deadline_met, 1);
+    }
+
+    #[test]
+    fn rescue_migration_requires_strictly_shallower_destination() {
+        let mut c = rescue_core();
+        // Endangered sequence alone on its unit: every other unit has
+        // equal depth after accepting it, so no migration fires.
+        c.place_decode(
+            vec![DecodeJoin {
+                class: SloClass::Interactive,
+                deadline: Some(2.0),
+                ..join(1, 100, 10)
+            }],
+            0.0,
+            &mut FnAdmission(|u, _| u == DpUnitId::new(0, 0)),
+        );
+        c.on_decode_progress(1, 0);
+        assert!(
+            c.rescue_scan(1.0, &mut FnAdmission(|_, _| true)).is_empty(),
+            "moving between equally shallow units is churn, not rescue"
+        );
+    }
+
+    #[test]
+    fn rescue_disabled_scans_nothing_and_counts_nothing() {
+        let mut c = DispatchCore::new(&core_cfg(
+            staggered(),
+            DecodePolicy::LoadAware(DecodeSchedConfig::default()),
+        ));
+        c.place_decode(
+            vec![
+                DecodeJoin {
+                    class: SloClass::Batch,
+                    ..join(1, 100, 50)
+                },
+                DecodeJoin {
+                    class: SloClass::Interactive,
+                    deadline: Some(2.0),
+                    ..join(2, 100, 10)
+                },
+            ],
+            0.0,
+            &mut FnAdmission(|u, _| u == DpUnitId::new(0, 0)),
+        );
+        c.on_decode_progress(2, 0);
+        assert!(c.rescue_scan(1.0, &mut FnAdmission(|_, _| true)).is_empty());
+        let g = c.rescue_gauge();
+        assert!(!g.enabled);
+        assert_eq!(g.preempted + g.migrated, 0);
+        // Deadline outcomes still tally (they are observability, not
+        // rescue policy).
+        c.on_decode_finish(2, 3.0);
+        assert_eq!(c.rescue_gauge().deadline_violated, 1);
     }
 
     #[test]

@@ -76,7 +76,9 @@ use crate::transport::proto::{
     PROTO_VERSION, STREAM_CONTROL,
 };
 use crate::trace::{Mark, TraceMark};
-use crate::transport::{AdmitJob, KvCodec, KvWireCounters, PrefillMsg, PrefillWork, UnitMsg};
+use crate::transport::{
+    AdmitJob, ExtractedSeq, KvCodec, KvWireCounters, PrefillMsg, PrefillWork, UnitMsg,
+};
 use crate::util::{Clock, RealClock};
 use anyhow::{anyhow, Context, Result};
 use std::collections::{HashMap, HashSet};
@@ -304,12 +306,61 @@ struct WireSink {
     out: Sender<Outbound>,
     /// This unit's index, carried in trace marks.
     unit: u32,
+    /// Codec negotiated with the current scheduler connection (migration
+    /// KV leaves coded like every other KV stream).
+    codec: Arc<AtomicU8>,
     trace: Arc<ShardTraceBuf>,
 }
 
 impl DecodeEventSink for WireSink {
     fn token(&self, id: u64, index: u32, token: i32, _t: f64) {
         let _ = self.out.send(Outbound::Frame(Frame::Token { id, index, token }));
+    }
+
+    fn extracted(&self, id: u64, seq: Option<ExtractedSeq>) {
+        // Everything rides the shard's single FIFO outbound queue, so
+        // every Token frame the unit emitted before releasing the slot
+        // is on the wire *before* this ack — the scheduler can treat the
+        // ack's token history as the complete, final word on what the
+        // source produced (exactly-once across the move).
+        self.trace.flush(&self.out);
+        let Some(ex) = seq else {
+            let _ = self.out.send(Outbound::Frame(Frame::MigrateAck {
+                id,
+                found: false,
+                kv_len: 0,
+                remaining: 0,
+                tokens: Vec::new(),
+            }));
+            return;
+        };
+        // The sequence's KV leaves as the same coded chunked KvSegment
+        // stream as a prefill handoff, on the job's stream id, committed
+        // by the MigrateAck.
+        let codec = load_codec(&self.codec);
+        let mut buf = Vec::new();
+        let sent = proto::each_kv_segment(
+            &mut buf,
+            codec,
+            proto::job_stream(id),
+            id,
+            config::KV_SEGMENT_ELEMS,
+            &ex.k,
+            &ex.v,
+            |bytes| self.out.send(Outbound::Bytes(bytes.to_vec())).map_err(|_| ()),
+        );
+        if sent.is_err() {
+            // Shard draining: the scheduler's eviction of its pending ids
+            // terminalizes the job.
+            return;
+        }
+        let _ = self.out.send(Outbound::Frame(Frame::MigrateAck {
+            id,
+            found: true,
+            kv_len: ex.kv_len,
+            remaining: ex.remaining,
+            tokens: ex.tokens,
+        }));
     }
 
     fn done(&self, id: u64, tokens: Vec<i32>, _metrics: RequestMetrics) {
@@ -586,6 +637,7 @@ pub fn run_shard(cfg: ShardConfig, listener: TcpListener) -> Result<()> {
                 let sink = WireSink {
                     out: ev_tx.clone(),
                     unit: u,
+                    codec: codec.clone(),
                     trace: trace.clone(),
                 };
                 let clock = clock.clone();
@@ -939,6 +991,7 @@ fn handle_scheduler_frame(
             kv_len,
             max_new,
             class,
+            resume,
             k,
             v,
         } => {
@@ -964,6 +1017,7 @@ fn handle_scheduler_frame(
                 }),
                 max_new,
                 class,
+                resume,
                 // Shard-local bookkeeping only (KV gauge); real metrics
                 // stay with the scheduler.
                 metrics: RequestMetrics::arrive(0.0, kv_len),
@@ -1021,6 +1075,37 @@ fn handle_scheduler_frame(
                     for w in work {
                         let _ = ev_tx.send(Outbound::Frame(Frame::PrefillFailed { id: w.id }));
                     }
+                }
+            }
+        }
+        Frame::Migrate { unit, id } => {
+            // Rescue extraction: the unit releases the slot and answers
+            // through its sink (KvSegment stream + MigrateAck). A target
+            // this shard cannot serve answers not-found immediately so
+            // the scheduler's rescue does not dangle.
+            let not_found = || {
+                let _ = ev_tx.send(Outbound::Frame(Frame::MigrateAck {
+                    id,
+                    found: false,
+                    kv_len: 0,
+                    remaining: 0,
+                    tokens: Vec::new(),
+                }));
+            };
+            let UnitChannels::Decode { txs, .. } = channels else {
+                log::warn!("migrate sent to a prefill shard; job {id} reported not-found");
+                not_found();
+                return false;
+            };
+            match txs.get(unit as usize) {
+                Some(tx) => {
+                    if tx.send(UnitMsg::Extract { id }).is_err() {
+                        not_found();
+                    }
+                }
+                None => {
+                    log::warn!("migrate for unknown unit {unit}");
+                    not_found();
                 }
             }
         }
@@ -1239,6 +1324,7 @@ impl ConnHandler for PeerServerHandler {
                     }),
                     max_new,
                     class,
+                    resume: Vec::new(),
                     // Shard-local bookkeeping only (KV gauge); real
                     // metrics live scheduler-side in the direct
                     // registration made at dispatch.
@@ -1400,6 +1486,7 @@ mod tests {
             kv_len: 5,
             max_new: 3,
             class: SloClass::Standard,
+            resume: Vec::new(),
             k: Vec::new(),
             v: Vec::new(),
         });
@@ -1436,6 +1523,142 @@ mod tests {
         shard.join().unwrap().unwrap();
     }
 
+    /// The full migration round-trip against a live decode shard:
+    /// admit → tokens → `Migrate` → coded KV stream + `MigrateAck`
+    /// (whose token history must be exactly the streamed prefix — the
+    /// FIFO outbound queue is the exactly-once guarantee) → re-admit on
+    /// another unit seeded with the history → the stream continues
+    /// contiguously to `Done` with no token lost or duplicated.
+    #[test]
+    fn migration_moves_a_live_sequence_between_units_without_reordering() {
+        let cfg = ShardConfig {
+            role: ShardRole::Decode,
+            units: 2,
+            batch: 4,
+            engine: fast_mock(),
+            sampling: Sampling::Greedy,
+            seed: 3,
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let shard = std::thread::spawn(move || run_shard(cfg, listener));
+        let mut c = ShardClient::connect(addr);
+        c.handshake(ShardRole::Decode, KvCodec::Lz);
+
+        // Real prompt KV so coded segments cross the wire on the way out.
+        let k: Vec<f32> = (0..40).map(|i| i as f32 * 0.5).collect();
+        let v: Vec<f32> = (0..40).map(|i| i as f32 * -0.25).collect();
+        c.send(&Frame::Admit {
+            unit: 0,
+            id: 42,
+            first_token: 0x30,
+            kv_len: 10,
+            max_new: 64,
+            class: SloClass::Interactive,
+            resume: Vec::new(),
+            k: k.clone(),
+            v: v.clone(),
+        });
+        // Let a few tokens flow, then ask for the move.
+        let mut streamed = vec![0x30];
+        while streamed.len() < 4 {
+            match c.recv() {
+                Frame::Token { id, index, token } => {
+                    assert_eq!(id, 42);
+                    assert_eq!(index as usize, streamed.len());
+                    streamed.push(token);
+                }
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+        c.send(&Frame::Migrate { unit: 0, id: 42 });
+        // Until the ack lands, the unit may step a few more times; every
+        // such token must precede the ack on the wire.
+        let (mut mk, mut mv) = (Vec::new(), Vec::new());
+        let (kv_len, remaining, tokens) = loop {
+            match c.recv() {
+                Frame::Token { id, index, token } => {
+                    assert_eq!(id, 42);
+                    assert_eq!(index as usize, streamed.len());
+                    streamed.push(token);
+                }
+                Frame::KvSegment { id, half, offset, total, data } => {
+                    assert_eq!(id, 42);
+                    proto::apply_kv_segment(&mut mk, &mut mv, half, offset, total, &data)
+                        .unwrap();
+                }
+                Frame::MigrateAck { id, found, kv_len, remaining, tokens } => {
+                    assert_eq!(id, 42);
+                    assert!(found);
+                    break (kv_len, remaining, tokens);
+                }
+                other => panic!("unexpected frame {other:?}"),
+            }
+        };
+        assert_eq!(
+            tokens, streamed,
+            "the ack's history is exactly the streamed prefix — nothing lost, nothing extra"
+        );
+        assert_eq!(kv_len, 10);
+        assert_eq!(remaining as usize, 64 - (streamed.len() - 1));
+        assert_eq!(mk, k, "prompt KV survives the coded migration round-trip");
+        assert_eq!(mv, v);
+
+        // Re-admit on the other unit, seeded with the history.
+        c.send(&Frame::Admit {
+            unit: 1,
+            id: 42,
+            first_token: *tokens.last().unwrap(),
+            kv_len,
+            max_new: remaining,
+            class: SloClass::Interactive,
+            resume: tokens.clone(),
+            k: mk,
+            v: mv,
+        });
+        let mut all = tokens;
+        let done = loop {
+            match c.recv() {
+                Frame::Token { id, index, token } => {
+                    assert_eq!(id, 42);
+                    assert_eq!(
+                        index as usize,
+                        all.len(),
+                        "indices continue contiguously across the move"
+                    );
+                    let expect = 0x20 + (all.last().unwrap() - 0x20 + 1).rem_euclid(0x5f);
+                    assert_eq!(token, expect, "the deterministic chain continues unbroken");
+                    all.push(token);
+                }
+                Frame::Done { id, tokens } => {
+                    assert_eq!(id, 42);
+                    break tokens;
+                }
+                other => panic!("unexpected frame {other:?}"),
+            }
+        };
+        assert_eq!(done, all, "terminal history = resume + post-move tokens");
+        assert_eq!(done.len(), 65, "1 prefill + 64 generated, exactly once each");
+
+        // A migrate for a sequence the shard no longer holds answers
+        // not-found (the scheduler re-places from its own registration).
+        c.send(&Frame::Migrate { unit: 1, id: 42 });
+        assert_eq!(
+            c.recv(),
+            Frame::MigrateAck {
+                id: 42,
+                found: false,
+                kv_len: 0,
+                remaining: 0,
+                tokens: Vec::new()
+            }
+        );
+
+        c.send(&Frame::Stop);
+        assert_eq!(c.recv(), Frame::Bye);
+        shard.join().unwrap().unwrap();
+    }
+
     /// Admits for an out-of-range unit come back Rejected instead of
     /// wedging the scheduler's ledger.
     #[test]
@@ -1460,6 +1683,7 @@ mod tests {
             kv_len: 2,
             max_new: 2,
             class: SloClass::Interactive,
+            resume: Vec::new(),
             k: Vec::new(),
             v: Vec::new(),
         });
@@ -1555,6 +1779,7 @@ mod tests {
             kv_len: 1,
             max_new: 1,
             class: SloClass::Standard,
+            resume: Vec::new(),
             k: Vec::new(),
             v: Vec::new(),
         });

@@ -40,7 +40,7 @@
 
 use super::dispatch::{
     DecodeAdmission, DecodeJoin, DecodePolicy, DispatchCore, DispatchCoreConfig,
-    EndForwardBacklog,
+    EndForwardBacklog, RescueConfig,
 };
 use crate::engine::mock::{MockEngine, MockEngineConfig};
 use crate::engine::sampler::Sampling;
@@ -59,8 +59,8 @@ use crate::scheduler::types::{DpUnitId, Request, SloClass};
 use crate::transport::proto::{DirectTarget, UnitLoad};
 use crate::transport::remote::{connect_prefill_shard, connect_shard, RemoteShardConfig};
 use crate::transport::{
-    AdmitJob, DecodeTransport, KvCodec, KvWireCounters, LocalPrefill, LocalUnit, PrefillMsg,
-    PrefillSinks, PrefillTransport, PrefillWork, ShardSinks, UnitMsg,
+    AdmitJob, DecodeTransport, ExtractedSeq, KvCodec, KvWireCounters, LocalPrefill, LocalUnit,
+    PrefillMsg, PrefillSinks, PrefillTransport, PrefillWork, ShardSinks, UnitMsg,
 };
 use crate::util::{Clock, RealClock};
 use anyhow::{anyhow, Result};
@@ -220,6 +220,11 @@ pub struct RealClusterConfig {
     /// only — the always-on `ttft_stages` gauge costs one mark batch per
     /// request either way.
     pub trace_retain: usize,
+    /// SLO-violation rescue: scan resident decode sequences for
+    /// projected deadline misses and preempt a batch victim or
+    /// live-migrate the endangered sequence (`--rescue on`). Disabled by
+    /// default — rescue moves sequences between engines mid-generation.
+    pub rescue: RescueConfig,
 }
 
 impl Default for RealClusterConfig {
@@ -259,6 +264,7 @@ impl Default for RealClusterConfig {
             direct_handoff: true,
             stop_shards_on_drain: true,
             trace_retain: 0,
+            rescue: RescueConfig::default(),
         }
     }
 }
@@ -352,6 +358,21 @@ enum SchedMsg {
     /// its slot and ledger charge.
     DecodeDone {
         id: u64,
+    },
+    /// A decode unit emitted one token for a resident sequence: feed the
+    /// rescue layer's per-token progress model (`index` is the
+    /// cumulative emission index of the stream).
+    Progress {
+        id: u64,
+        index: u32,
+    },
+    /// A rescue extraction completed: `Some` carries the live state to
+    /// re-park for placement (progress intact), `None` means the
+    /// sequence already terminalized (or the extraction failed) and the
+    /// rescue is a no-op.
+    Migrated {
+        id: u64,
+        seq: Option<ExtractedSeq>,
     },
     /// A remote decode shard died with these sequences resident: release
     /// their ledger charges and reject them upstream so nothing leaks.
@@ -978,6 +999,10 @@ struct JoinPayload {
     outcome: Box<PrefillOutcome>,
     max_new: u32,
     class: SloClass,
+    /// Token history for a sequence re-parked by a rescue extraction
+    /// (empty for fresh joins): the destination unit seeds its emission
+    /// index past it, keeping the client-visible stream contiguous.
+    resume: Vec<i32>,
     metrics: RequestMetrics,
 }
 
@@ -1046,6 +1071,7 @@ fn park_join(
             outcome,
             max_new,
             class,
+            resume: Vec::new(),
             metrics,
         },
     );
@@ -1172,6 +1198,7 @@ fn place_parked(
             outcome: p.outcome,
             max_new: p.max_new,
             class: p.class,
+            resume: p.resume,
             metrics: p.metrics,
         };
         if transports[inst].admit(job).is_err() {
@@ -1297,6 +1324,7 @@ fn scheduler_loop(
         decode_policy: cfg.decode_policy.clone(),
         seed: cfg.seed ^ 0xDECD_E000,
     });
+    core.set_rescue(cfg.rescue.clone());
     // Job payloads keyed by request id (the scheduler works on Requests).
     let mut jobs: HashMap<u64, PendingJob> = HashMap::new();
     // Absolute completion deadlines (scheduler clock, seconds) for jobs
@@ -1413,6 +1441,7 @@ fn scheduler_loop(
                         outcome,
                         max_new,
                         class,
+                        resume: Vec::new(),
                         metrics,
                     });
                     if transports[u].alive() {
@@ -1445,8 +1474,58 @@ fn scheduler_loop(
             Ok(SchedMsg::DecodeDone { id }) => {
                 direct_targets.remove(&id);
                 deadlines.remove(&id);
-                pool_dirty |= core.on_decode_leave(id, now).is_some();
+                // Finish, not leave: terminal completions score their
+                // deadline outcome (met / violated / rescue_deadline_met)
+                // before the ledger release.
+                pool_dirty |= core.on_decode_finish(id, now).is_some();
             }
+            Ok(SchedMsg::Progress { id, index }) => {
+                core.on_decode_progress(id, index);
+            }
+            Ok(SchedMsg::Migrated { id, seq }) => match seq {
+                Some(ex) => {
+                    // The sequence left its unit with its live state in
+                    // hand: release the old charge and re-park it for
+                    // standard placement, progress intact. Class comes
+                    // from the core's resident registry (queried before
+                    // the release drops it); the deadline from the
+                    // scheduler's own table.
+                    let class = core.resident_class(id).unwrap_or(SloClass::Standard);
+                    pool_dirty |= core.on_decode_leave(id, now).is_some();
+                    let generated = (ex.tokens.len() as u32).saturating_sub(1);
+                    parked.push(DecodeJoin {
+                        request_id: id,
+                        // The destination charge counts the KV the
+                        // sequence has actually grown: prompt rows plus
+                        // one per generated token.
+                        kv_tokens: ex.kv_len + generated,
+                        remaining_out: ex.remaining,
+                        class,
+                        deadline: deadlines.get(&id).copied(),
+                    });
+                    payloads.insert(
+                        id,
+                        JoinPayload {
+                            outcome: Box::new(PrefillOutcome {
+                                first_token: ex.tokens.last().copied().unwrap_or(0),
+                                len: ex.kv_len as usize,
+                                k: ex.k,
+                                v: ex.v,
+                                exec_time: 0.0,
+                                passes: 1,
+                            }),
+                            max_new: ex.remaining,
+                            class,
+                            resume: ex.tokens,
+                            metrics: ex.metrics,
+                        },
+                    );
+                }
+                // Extraction raced a terminal (or failed shard-side):
+                // the sequence already finished or still runs where it
+                // was — either way the rescue is a no-op.
+                None => log::debug!("rescue extraction for {id} found nothing to move"),
+            },
             Ok(SchedMsg::Evict { ids }) => {
                 // A shard died owning these sequences: release each from
                 // the ledger and reject it upstream. Only ids the core
@@ -1585,6 +1664,37 @@ fn scheduler_loop(
             &mut all_dead_since,
             now,
         );
+        // Deadline-rescue scan (self-gated on the configured cadence):
+        // endangered residents trigger a batch-victim preemption or
+        // their own live migration. Either way the named sequence is
+        // extracted through its transport and comes back as
+        // `SchedMsg::Migrated` for ledger release + re-placement.
+        if cfg.rescue.enabled {
+            let alive: Vec<bool> = transports.iter().map(|t| t.alive()).collect();
+            let mut adm = PoolAdmission {
+                slots: &slots,
+                kv_budget: cfg.kv_budget,
+                alive: &alive,
+                peer_only: None,
+            };
+            for a in core.rescue_scan(now, &mut adm) {
+                let u = a.unit.instance as usize;
+                if transports[u].extract(a.id) {
+                    log::info!(
+                        "rescue: extracting {} from {} ({:?})",
+                        a.id,
+                        transports[u].label(),
+                        a.kind
+                    );
+                } else {
+                    log::warn!(
+                        "rescue: {} cannot extract {}; sequence stays put",
+                        transports[u].label(),
+                        a.id
+                    );
+                }
+            }
+        }
         // Work-queue over the actions: a dispatch that lands on a dead
         // prefill transport requeues its jobs through `on_arrival`,
         // whose follow-up actions join the back of the queue (bounded by
@@ -2100,6 +2210,10 @@ pub(crate) trait DecodeEventSink {
     fn done(&self, id: u64, tokens: Vec<i32>, metrics: RequestMetrics);
     /// Terminal failure (ledger release).
     fn rejected(&self, id: u64);
+    /// A rescue extraction completed on this runner: `Some` with the
+    /// live state (removed from the engine, no further emissions),
+    /// `None` when the sequence was not resident (already terminal).
+    fn extracted(&self, _id: u64, _seq: Option<ExtractedSeq>) {}
     /// A TTFT trace boundary observed by this runner (engine admission).
     /// Best-effort; the default discards it.
     fn trace(&self, _id: u64, _mark: Mark) {}
@@ -2117,6 +2231,11 @@ struct LocalSink {
 
 impl DecodeEventSink for LocalSink {
     fn token(&self, id: u64, index: u32, token: i32, t: f64) {
+        // Progress feeds the rescue layer's per-token rate model; the
+        // router update is the client-visible stream. Remote shards
+        // route through this same sink (shard_sinks wraps it), so one
+        // site covers both planes.
+        let _ = self.to_sched.send(SchedMsg::Progress { id, index });
         let _ = self.router.send(RouterMsg::Update {
             id,
             update: JobUpdate::Token { token, index, t },
@@ -2141,6 +2260,10 @@ impl DecodeEventSink for LocalSink {
             id,
             update: JobUpdate::Rejected { id },
         });
+    }
+
+    fn extracted(&self, id: u64, seq: Option<ExtractedSeq>) {
+        let _ = self.to_sched.send(SchedMsg::Migrated { id, seq });
     }
 
     fn trace(&self, id: u64, mark: Mark) {
@@ -2172,6 +2295,7 @@ fn shard_sinks(
     let (tok, don, rej) = (sink.clone(), sink.clone(), sink);
     let clock = shared.clone();
     let stats_sched = to_sched.clone();
+    let mig_sched = to_sched.clone();
     let trace_shared = shared.clone();
     let track = format!("decode:{addr}");
     ShardSinks {
@@ -2205,6 +2329,9 @@ fn shard_sinks(
                 kv_wire_bytes,
                 kv_raw_bytes,
             });
+        }),
+        on_migrated: Box::new(move |id, seq| {
+            let _ = mig_sched.send(SchedMsg::Migrated { id, seq });
         }),
         on_trace: Box::new(move |dropped, marks| {
             trace_shared.trace.record(&track, dropped, &marks);
@@ -2322,6 +2449,12 @@ pub(crate) fn run_decode_unit<S: DecodeEventSink, F: Fn() -> f64>(
     let _ = ready.send(true);
     struct Track {
         tokens: Vec<i32>,
+        /// Prompt-KV length plus the prompt K/V planes, retained for the
+        /// lifetime of the sequence: engines do not expose KV readback,
+        /// so a rescue extraction re-streams the copy kept here.
+        kv_len: u32,
+        k: Vec<f32>,
+        v: Vec<f32>,
         metrics: RequestMetrics,
     }
     let mut tracks: HashMap<u64, Track> = HashMap::new();
@@ -2368,11 +2501,30 @@ pub(crate) fn run_decode_unit<S: DecodeEventSink, F: Fn() -> f64>(
             // Timeline instant: the sequence reached a decode engine —
             // one hook covers the local, relay and direct-handoff paths.
             sink.trace(job.id, Mark::DecodeAdmit);
+            let AdmitJob {
+                id,
+                outcome,
+                resume,
+                metrics,
+                ..
+            } = job;
+            // A migrated sequence resumes with its full emission history
+            // so token indices continue exactly where the source unit
+            // stopped; a fresh sequence starts from the prefill's first
+            // token.
+            let tokens = if resume.is_empty() {
+                vec![outcome.first_token]
+            } else {
+                resume
+            };
             tracks.insert(
-                job.id,
+                id,
                 Track {
-                    tokens: vec![job.outcome.first_token],
-                    metrics: job.metrics,
+                    tokens,
+                    kv_len: outcome.len as u32,
+                    k: outcome.k,
+                    v: outcome.v,
+                    metrics,
                 },
             );
             membership_changed = true;
@@ -2423,6 +2575,29 @@ pub(crate) fn run_decode_unit<S: DecodeEventSink, F: Fn() -> f64>(
                     pending.clear();
                     membership_changed = true;
                     let _ = ack.send(());
+                }
+                UnitMsg::Extract { id } => {
+                    // Rescue extraction: release the engine slot and hand
+                    // the live state (emission history + prompt KV) back
+                    // to the owner. After this point the unit emits
+                    // nothing further for `id`, so the extraction event —
+                    // delivered through the same FIFO sink as tokens —
+                    // is strictly ordered after every token it covers.
+                    let extracted = match engine.release(id) {
+                        Some(remaining) => tracks.remove(&id).map(|tr| {
+                            membership_changed = true;
+                            ExtractedSeq {
+                                tokens: tr.tokens,
+                                remaining,
+                                kv_len: tr.kv_len,
+                                k: tr.k,
+                                v: tr.v,
+                                metrics: tr.metrics,
+                            }
+                        }),
+                        None => None,
+                    };
+                    sink.extracted(id, extracted);
                 }
             }
         }
@@ -2485,6 +2660,7 @@ pub(crate) fn run_decode_unit<S: DecodeEventSink, F: Fn() -> f64>(
                 UnitMsg::Abort { ack } => {
                     let _ = ack.send(());
                 }
+                UnitMsg::Extract { id } => sink.extracted(id, None),
                 UnitMsg::Stop => break,
             }
         }

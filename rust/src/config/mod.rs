@@ -7,6 +7,7 @@
 pub use crate::cluster::sim::{DecodePlacement, SchedMode, SimConfig, SimTopology};
 
 use crate::cluster::costmodel::{DecodeCostModel, KvTransferModel, PrefillCostModel};
+use crate::cluster::dispatch::RescueConfig;
 use crate::scheduler::baseline::ImmediatePolicy;
 use crate::scheduler::decode::DecodeSchedConfig;
 use crate::scheduler::staggered::StaggeredConfig;
@@ -70,6 +71,7 @@ pub fn fig6a(load: f64, staggered: bool, seed: u64) -> SimConfig {
         max_time: 1.0e4,
         fault_lose_endforward: 0.0,
         decode_caps: crate::cluster::decode::DecodeCaps::default(),
+        rescue: RescueConfig::default(),
     };
     if !staggered {
         cfg.mode = SchedMode::Immediate(ImmediatePolicy::LeastOutstanding);

@@ -176,6 +176,16 @@ impl EngineBackend for MockEngine {
     fn abort_all(&mut self) {
         self.slots.iter_mut().for_each(|s| *s = None);
     }
+
+    fn release(&mut self, request_id: u64) -> Option<u32> {
+        let s = self
+            .slots
+            .iter_mut()
+            .find(|s| s.map(|s| s.request_id) == Some(request_id))?;
+        let remaining = s.map(|s| s.max_new.saturating_sub(s.generated))?;
+        *s = None;
+        Some(remaining)
+    }
 }
 
 #[cfg(test)]
@@ -240,6 +250,32 @@ mod tests {
         assert_eq!(
             a.prefill(&[9, 9, 9]).unwrap().first_token,
             b.prefill(&[9, 9, 9]).unwrap().first_token,
+        );
+    }
+
+    #[test]
+    fn release_returns_unconsumed_budget_and_frees_the_slot() {
+        let mut e = MockEngine::new(quick_cfg(), 1, 1);
+        let p = e.prefill(&[1, 2]).unwrap();
+        e.admit(&p, 5, 9).unwrap();
+        e.step().unwrap();
+        e.step().unwrap();
+        assert_eq!(e.release(9), Some(3), "5 budgeted, 2 generated");
+        assert_eq!(e.free_slots(), 1);
+        assert_eq!(e.release(9), None, "double release is safe");
+        // The freed slot is immediately reusable, and a re-admission
+        // seeded with the last emitted token continues the same
+        // deterministic chain — the migration contiguity invariant.
+        let cont = PrefillOutcome {
+            first_token: MockEngine::next_token(MockEngine::next_token(p.first_token)),
+            ..e.prefill(&[1, 2]).unwrap()
+        };
+        e.admit(&cont, 3, 9).unwrap();
+        let (em, _) = e.step().unwrap();
+        assert_eq!(
+            em[0].token,
+            MockEngine::next_token(cont.first_token),
+            "stream resumes exactly where it left off"
         );
     }
 

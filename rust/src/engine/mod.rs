@@ -77,6 +77,12 @@ pub trait EngineBackend {
     /// owner supersedes whoever admitted them — stale request ids must
     /// not keep generating, or they could collide with the new owner's.
     fn abort_all(&mut self);
+    /// Release one active sequence mid-generation, freeing its slot (no
+    /// further emissions for it). Returns the unconsumed token budget
+    /// (`max_new − generated`) so a rescue extraction can re-admit the
+    /// sequence elsewhere with exactly the work it had left; `None` if
+    /// the request is not resident (already finished or never admitted).
+    fn release(&mut self, request_id: u64) -> Option<u32>;
 }
 
 impl EngineBackend for MiniEngine {
@@ -102,6 +108,10 @@ impl EngineBackend for MiniEngine {
 
     fn abort_all(&mut self) {
         MiniEngine::abort_all(self)
+    }
+
+    fn release(&mut self, request_id: u64) -> Option<u32> {
+        MiniEngine::release(self, request_id)
     }
 }
 
@@ -224,6 +234,21 @@ impl MiniEngine {
     /// admission overwrites them — causal masking keeps them invisible.
     pub fn abort_all(&mut self) {
         self.slots.iter_mut().for_each(|s| *s = None);
+    }
+
+    /// Release one sequence mid-generation (rescue extraction), freeing
+    /// its slot and returning the unconsumed budget. Its KV rows stay as
+    /// dead weight like [`MiniEngine::abort_all`]'s.
+    pub fn release(&mut self, request_id: u64) -> Option<u32> {
+        let slot = self
+            .slots
+            .iter()
+            .position(|s| s.as_ref().is_some_and(|s| s.request_id == request_id))?;
+        let remaining = self.slots[slot]
+            .as_ref()
+            .map(|s| s.max_new.saturating_sub(s.generated))?;
+        self.slots[slot] = None;
+        Some(remaining)
     }
 
     /// Number of active sequences.

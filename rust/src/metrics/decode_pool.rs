@@ -136,6 +136,40 @@ impl KvWireGauge {
     }
 }
 
+/// SLO rescue + deadline outcome gauge: what the dispatch core's rescue
+/// scan has done (preemptions and live migrations) and how deadlines
+/// are landing. `rescue_deadline_met` counts deadline-carrying
+/// sequences a rescue action touched that still finished in time — the
+/// layer's headline "the rescue worked" number.
+#[derive(Debug, Clone, Default)]
+pub struct RescueGauge {
+    /// Whether the rescue scan is enabled on this core.
+    pub enabled: bool,
+    /// Batch-class sequences preempted off a hot unit.
+    pub preempted: u64,
+    /// Endangered sequences live-migrated to a unit with headroom.
+    pub migrated: u64,
+    /// Deadline-carrying sequences that finished in time.
+    pub deadline_met: u64,
+    /// Deadline-carrying sequences that finished late.
+    pub deadline_violated: u64,
+    /// Of `deadline_met`, those a rescue action touched.
+    pub rescue_deadline_met: u64,
+}
+
+impl RescueGauge {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("enabled", Json::from(self.enabled)),
+            ("preempted", Json::from(self.preempted)),
+            ("migrated", Json::from(self.migrated)),
+            ("deadline_met", Json::from(self.deadline_met)),
+            ("deadline_violated", Json::from(self.deadline_violated)),
+            ("rescue_deadline_met", Json::from(self.rescue_deadline_met)),
+        ])
+    }
+}
+
 /// Snapshot of the cluster's serving pools under one placement policy:
 /// the decode DP pool's occupancy gauges plus the prefill pool's
 /// liveness gauges. (Named for its decode-side origin; `STATS` exposes
@@ -151,6 +185,8 @@ pub struct DecodePoolStats {
     /// KV handoff wire accounting (filled by the driver's decorator; the
     /// core is transport-blind).
     pub kv_wire: KvWireGauge,
+    /// SLO rescue + deadline outcome counters.
+    pub rescue: RescueGauge,
 }
 
 impl DecodePoolStats {
@@ -161,6 +197,7 @@ impl DecodePoolStats {
             units: Vec::new(),
             prefill: Vec::new(),
             kv_wire: KvWireGauge::default(),
+            rescue: RescueGauge::default(),
         }
     }
 
@@ -189,6 +226,7 @@ impl DecodePoolStats {
                 .collect(),
             prefill: Vec::new(),
             kv_wire: KvWireGauge::default(),
+            rescue: RescueGauge::default(),
         }
     }
 
@@ -250,6 +288,7 @@ impl DecodePoolStats {
                 ]),
             ),
             ("kv_wire", self.kv_wire.to_json()),
+            ("rescue", self.rescue.to_json()),
         ])
     }
 }
@@ -295,6 +334,7 @@ mod tests {
             units: vec![unit("i0d0", 1, 3.0), unit("i1d0", 1, 1.0)],
             prefill: Vec::new(),
             kv_wire: KvWireGauge::default(),
+            rescue: RescueGauge::default(),
         };
         assert!((s.imbalance() - 1.5).abs() < 1e-12);
     }
@@ -306,6 +346,7 @@ mod tests {
             units: vec![unit("i0d0", 4, 0.0), unit("i1d0", 0, 0.0)],
             prefill: Vec::new(),
             kv_wire: KvWireGauge::default(),
+            rescue: RescueGauge::default(),
         };
         assert!((s.imbalance() - 2.0).abs() < 1e-12);
         assert_eq!(s.total_placed(), 4);
@@ -323,6 +364,14 @@ mod tests {
                 raw_bytes: 400,
                 relay_wire_bytes: 0,
                 relay_raw_bytes: 0,
+            },
+            rescue: RescueGauge {
+                enabled: true,
+                preempted: 2,
+                migrated: 1,
+                deadline_met: 5,
+                deadline_violated: 1,
+                rescue_deadline_met: 2,
             },
         };
         let j = s.to_json();
@@ -345,6 +394,13 @@ mod tests {
         assert_eq!(kv.get("wire_bytes").and_then(|x| x.as_usize()), Some(100));
         assert_eq!(kv.get("raw_bytes").and_then(|x| x.as_usize()), Some(400));
         assert_eq!(kv.get("relay_wire_bytes").and_then(|x| x.as_usize()), Some(0));
+        let r = j.get("rescue").unwrap();
+        assert_eq!(r.get("enabled").and_then(|x| x.as_bool()), Some(true));
+        assert_eq!(r.get("preempted").and_then(|x| x.as_usize()), Some(2));
+        assert_eq!(r.get("migrated").and_then(|x| x.as_usize()), Some(1));
+        assert_eq!(r.get("deadline_met").and_then(|x| x.as_usize()), Some(5));
+        assert_eq!(r.get("deadline_violated").and_then(|x| x.as_usize()), Some(1));
+        assert_eq!(r.get("rescue_deadline_met").and_then(|x| x.as_usize()), Some(2));
     }
 
     #[test]
@@ -359,6 +415,7 @@ mod tests {
             units: vec![unit("i0d0", 2, 2.0), dead],
             prefill: Vec::new(),
             kv_wire: KvWireGauge::default(),
+            rescue: RescueGauge::default(),
         };
         assert_eq!(s.units_alive(), 1);
         let j = s.to_json();
@@ -377,6 +434,7 @@ mod tests {
             units: vec![unit("i0d0", 2, 2.0)],
             prefill: vec![prefill_unit(0, true), prefill_unit(1, false)],
             kv_wire: KvWireGauge::default(),
+            rescue: RescueGauge::default(),
         };
         assert_eq!(s.prefill_units_alive(), 1);
         let j = s.to_json();

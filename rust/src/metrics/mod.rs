@@ -10,7 +10,9 @@ mod decode_pool;
 mod histogram;
 mod recorder;
 
-pub use decode_pool::{DecodePoolStats, DpOccupancyGauge, KvWireGauge, PrefillUnitGauge};
+pub use decode_pool::{
+    DecodePoolStats, DpOccupancyGauge, KvWireGauge, PrefillUnitGauge, RescueGauge,
+};
 pub use histogram::Histogram;
 pub use recorder::{
     LatencyRecorder, RequestMetrics, ServingReport, ThroughputCounter, UtilizationMeter,

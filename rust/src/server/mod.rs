@@ -33,7 +33,7 @@
 //! `GEN` per connection, pipelining via multiple connections).
 
 use crate::cli::Command;
-use crate::cluster::dispatch::DecodePolicy;
+use crate::cluster::dispatch::{DecodePolicy, RescueConfig};
 use crate::cluster::workers::{
     Admission, AdmissionConfig, BusyReason, ClusterHandle, EngineSpec, Job, JobUpdate,
     RealCluster, RealClusterConfig, RealSchedMode,
@@ -96,6 +96,11 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
             "prefill→decode KV handoff route: direct | relay",
             Some("direct"),
         )
+        .opt(
+            "rescue",
+            "SLO-violation rescue (decode preemption + migration): on | off",
+            Some("off"),
+        )
         .opt("requests", "batch mode: number of synthetic requests", Some("8"))
         .opt("max-new", "tokens to generate per request", Some("16"))
         .opt(
@@ -145,6 +150,11 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
         "relay" => false,
         other => return Err(anyhow!("unknown handoff route '{other}' (direct | relay)")),
     };
+    let rescue = match args.str_or("rescue", "off").as_str() {
+        "on" => RescueConfig::on(),
+        "off" => RescueConfig::default(),
+        other => return Err(anyhow!("unknown rescue mode '{other}' (on | off)")),
+    };
     let remote_decode = args
         .value("remote-decode")
         .map(crate::transport::parse_shard_list)
@@ -177,6 +187,7 @@ pub fn cli_serve(argv: &[String]) -> Result<()> {
             .map_err(|e| anyhow!("{e}"))?,
         kv_wire,
         direct_handoff,
+        rescue,
         // Per-request Perfetto records are only retained when there is a
         // file to write them to; aggregate stage stats are always on.
         trace_retain: if trace_out.is_some() { TRACE_RETAIN } else { 0 },

@@ -99,6 +99,31 @@ pub struct AdmitJob {
     /// SLO class (carried on the wire so shard-side traces see it; the
     /// decode engine itself is class-blind).
     pub class: SloClass,
+    /// Already-generated tokens for a sequence re-admitted
+    /// mid-generation (live migration), oldest first; empty for a fresh
+    /// join. The receiver seeds its emission index past this history so
+    /// the client-visible token stream stays contiguous across the move.
+    pub resume: Vec<i32>,
+    /// Lifecycle metrics, scheduler clock.
+    pub metrics: RequestMetrics,
+}
+
+/// A decode sequence extracted mid-generation for live migration: the
+/// state a destination unit needs to continue it, plus the lifecycle
+/// metrics that accompany the sequence wherever it is resident.
+pub struct ExtractedSeq {
+    /// Every token generated so far, oldest first (first token
+    /// included) — the destination's [`AdmitJob::resume`] payload.
+    pub tokens: Vec<i32>,
+    /// Output tokens still to generate.
+    pub remaining: u32,
+    /// Prompt KV rows at the original join (the destination's
+    /// `outcome.len`).
+    pub kv_len: u32,
+    /// Prompt K caches (empty for engines without transferable KV).
+    pub k: Vec<f32>,
+    /// Prompt V caches.
+    pub v: Vec<f32>,
     /// Lifecycle metrics, scheduler clock.
     pub metrics: RequestMetrics,
 }
@@ -120,6 +145,14 @@ pub enum UnitMsg {
     Abort {
         /// Signalled (best-effort) after the abort has been applied.
         ack: Sender<()>,
+    },
+    /// Extract one resident sequence for live migration: remove it from
+    /// the engine (no further emissions) and report its state through
+    /// the unit's event sink — `Some` with the extracted state, `None`
+    /// if the sequence already terminalized.
+    Extract {
+        /// Request id to extract.
+        id: u64,
     },
     /// Finish active sequences, then exit.
     Stop,
@@ -167,6 +200,15 @@ pub trait DecodeTransport: Send {
     /// `HandoffCommit` surfaces (no-op if the sequence already
     /// terminalized).
     fn patch_direct(&self, _id: u64, _t_first: f64, _exec_time: f64) {}
+    /// Ask the unit to extract a resident sequence for live migration.
+    /// Returns whether the request was delivered; the extraction result
+    /// arrives asynchronously through the unit's event path (the local
+    /// sink's `extracted`, or [`ShardSinks::on_migrated`] for remote
+    /// shards). `false` (the default) means this transport cannot
+    /// migrate — the caller must not wait for a result.
+    fn extract(&mut self, _id: u64) -> bool {
+        false
+    }
     /// Ask the unit (and its shard, once per shard) to drain and stop.
     fn stop(&mut self);
     /// Release the unit without stopping its backing process: an
@@ -230,6 +272,10 @@ impl DecodeTransport for LocalUnit {
         }
     }
 
+    fn extract(&mut self, id: u64) -> bool {
+        self.tx.send(UnitMsg::Extract { id }).is_ok()
+    }
+
     fn stop(&mut self) {
         let _ = self.tx.send(UnitMsg::Stop);
     }
@@ -262,6 +308,12 @@ pub struct ShardSinks {
     /// The marks are already scheduler-clock microseconds; the sink
     /// attributes them to this shard's track in the trace collector.
     pub on_trace: Box<dyn Fn(u32, Vec<crate::trace::TraceMark>) + Send>,
+    /// A `MigrateAck` arrived (behind the sequence's `KvSegment`
+    /// stream): `Some` with the fully-assembled extracted state, `None`
+    /// when the shard reported the sequence gone (already terminal) or
+    /// its KV stream was unusable — the scheduler treats `None` as a
+    /// no-op rescue.
+    pub on_migrated: Box<dyn Fn(u64, Option<ExtractedSeq>) + Send>,
 }
 
 /// One prefill job being dispatched to a prefill instance: the prompt
@@ -436,6 +488,7 @@ mod tests {
             }),
             max_new: 3,
             class: SloClass::Standard,
+            resume: Vec::new(),
             metrics: RequestMetrics::arrive(0.0, 4),
         }
     }

@@ -30,6 +30,8 @@
 //! | prefill → peer | [`Frame::HandoffCommit`] | commit a direct KV handoff (also → sched) |
 //! | peer → prefill | [`Frame::HandoffAck`] | the handoff is durably accepted |
 //! | shard → sched | [`Frame::TraceSpans`] | batched TTFT trace marks (best-effort) |
+//! | sched → shard | [`Frame::Migrate`] | extract a resident sequence for live migration |
+//! | shard → sched | [`Frame::MigrateAck`] | extraction result (follows the sequence's `KvSegment` stream) |
 //!
 //! Reads are driven through the stateful [`FrameReader`], which preserves
 //! partial progress across socket read timeouts — a timeout mid-frame
@@ -77,7 +79,12 @@ use std::time::{Duration, Instant};
 /// `HandoffCommit`) carry the request's [`SloClass`] as one byte, so
 /// remote shards and the trace subsystem see the same class the
 /// scheduler admitted (deadlines stay scheduler-side).
-pub const PROTO_VERSION: u32 = 6;
+/// v7: deadline-rescue live migration — [`Frame::Migrate`] asks a decode
+/// shard to extract a resident sequence, [`Frame::MigrateAck`] carries
+/// the extraction result behind the sequence's coded `KvSegment` stream,
+/// and `Admit` grows a `resume` token history so a migrated sequence
+/// re-admits mid-generation with its stream position intact.
+pub const PROTO_VERSION: u32 = 7;
 
 /// Logical stream a frame belongs to within one connection. Streams let
 /// independent in-flight transfers (e.g. two concurrent KV handoffs to
@@ -250,6 +257,12 @@ pub enum Frame {
         max_new: u32,
         /// The sequence's SLO class.
         class: SloClass,
+        /// Already-generated tokens, oldest first, for a sequence being
+        /// re-admitted mid-generation (migration); empty for a fresh
+        /// join. The last entry is the token the engine continues from,
+        /// and the receiver seeds its emission index past the history so
+        /// the client-visible stream stays contiguous.
+        resume: Vec<i32>,
         /// Prompt K caches (`[L, S, H, Dh]` flattened; empty for engines
         /// without transferable KV, e.g. the mock).
         k: Vec<f32>,
@@ -420,6 +433,37 @@ pub enum Frame {
         /// The marks, already converted to scheduler-clock microseconds.
         marks: Vec<TraceMark>,
     },
+    /// Extract a resident decode sequence for live migration (deadline
+    /// rescue). The shard removes the sequence from its engine, streams
+    /// its KV as coded [`Frame::KvSegment`]s on the sequence's job
+    /// stream, and commits with a [`Frame::MigrateAck`] — all *behind*
+    /// any Token frames already queued for the sequence, so the token
+    /// stream stays contiguous and exactly-once across the move.
+    Migrate {
+        /// Shard-local DP unit the sequence is resident on.
+        unit: u32,
+        /// Request id.
+        id: u64,
+    },
+    /// Extraction result for a [`Frame::Migrate`]. With `found`, the
+    /// sequence has been removed from the source engine (no further
+    /// tokens will be emitted for it here) and its KV was streamed ahead
+    /// of this frame; the scheduler re-places it elsewhere. Without
+    /// `found`, the sequence already terminalized (or was never
+    /// resident) and the migration is a no-op.
+    MigrateAck {
+        /// Request id.
+        id: u64,
+        /// Whether the sequence was resident and extracted.
+        found: bool,
+        /// Resident KV rows at extraction (prompt + generated).
+        kv_len: u32,
+        /// Output tokens still to generate.
+        remaining: u32,
+        /// Every token generated so far, oldest first (the destination's
+        /// `Admit.resume` payload).
+        tokens: Vec<i32>,
+    },
 }
 
 /// Why a frame could not be decoded.
@@ -479,6 +523,8 @@ const TAG_PEER_HELLO_ACK: u8 = 19;
 const TAG_HANDOFF_COMMIT: u8 = 20;
 const TAG_HANDOFF_ACK: u8 = 21;
 const TAG_TRACE_SPANS: u8 = 22;
+const TAG_MIGRATE: u8 = 23;
+const TAG_MIGRATE_ACK: u8 = 24;
 
 /// Cap on the address string inside a [`DirectTarget`]: long enough for
 /// any `host:port`, short enough that a corrupt length cannot allocate
@@ -695,10 +741,12 @@ impl<'a> Dec<'a> {
 /// sender-side [`MAX_FRAME`] checks *before* serializing: an oversized
 /// frame must be refused locally (failing one job), never written —
 /// the receiver's `Oversize` error would kill the whole connection.
-pub fn admit_payload_bound(codec: KvCodec, k_len: usize, v_len: usize) -> u64 {
-    // tag + unit + id + first_token + kv_len + max_new + class + 2 block
-    // headers.
-    64 + codec.payload_bound(k_len) as u64 + codec.payload_bound(v_len) as u64
+pub fn admit_payload_bound(codec: KvCodec, resume_len: usize, k_len: usize, v_len: usize) -> u64 {
+    // tag + unit + id + first_token + kv_len + max_new + class + resume
+    // vector + 2 block headers.
+    64 + 4 * resume_len as u64
+        + codec.payload_bound(k_len) as u64
+        + codec.payload_bound(v_len) as u64
 }
 
 /// Encode one frame body into `buf` behind the 8-byte
@@ -742,6 +790,7 @@ pub fn admit_frame_into(
     kv_len: u32,
     max_new: u32,
     class: SloClass,
+    resume: &[i32],
     k: &[f32],
     v: &[f32],
 ) -> u64 {
@@ -749,7 +798,10 @@ pub fn admit_frame_into(
     frame_scaffold(
         buf,
         stream,
-        26 + 2 * KV_BLOCK_HEADER + kv_wire.payload_bound(k.len()) + kv_wire.payload_bound(v.len()),
+        30 + 4 * resume.len()
+            + 2 * KV_BLOCK_HEADER
+            + kv_wire.payload_bound(k.len())
+            + kv_wire.payload_bound(v.len()),
         |e| {
             e.u8(TAG_ADMIT);
             e.u32(unit);
@@ -758,6 +810,7 @@ pub fn admit_frame_into(
             e.u32(kv_len);
             e.u32(max_new);
             e.u8(class.to_wire());
+            e.i32s(resume);
             kv_bytes = e.kv_block(kv_wire, k) + e.kv_block(kv_wire, v);
         },
     );
@@ -888,6 +941,7 @@ pub fn encode(f: &Frame) -> Vec<u8> {
             kv_len,
             max_new,
             class,
+            resume,
             k,
             v,
         } => {
@@ -900,6 +954,7 @@ pub fn encode(f: &Frame) -> Vec<u8> {
             e.u32(*kv_len);
             e.u32(*max_new);
             e.u8(class.to_wire());
+            e.i32s(resume);
             e.kv_block(KvCodec::Raw, k);
             e.kv_block(KvCodec::Raw, v);
         }
@@ -1053,6 +1108,25 @@ pub fn encode(f: &Frame) -> Vec<u8> {
                 e.u32(m.unit);
             }
         }
+        Frame::Migrate { unit, id } => {
+            e.u8(TAG_MIGRATE);
+            e.u32(*unit);
+            e.u64(*id);
+        }
+        Frame::MigrateAck {
+            id,
+            found,
+            kv_len,
+            remaining,
+            tokens,
+        } => {
+            e.u8(TAG_MIGRATE_ACK);
+            e.u64(*id);
+            e.u8(*found as u8);
+            e.u32(*kv_len);
+            e.u32(*remaining);
+            e.i32s(tokens);
+        }
     }
     e.0
 }
@@ -1084,6 +1158,7 @@ pub fn decode(buf: &[u8]) -> Result<Frame, ProtoError> {
             kv_len: d.u32()?,
             max_new: d.u32()?,
             class: SloClass::from_wire(d.u8()?).ok_or(ProtoError::BadValue("slo class"))?,
+            resume: d.i32s()?,
             k: d.kv_block()?,
             v: d.kv_block()?,
         },
@@ -1203,6 +1278,21 @@ pub fn decode(buf: &[u8]) -> Result<Frame, ProtoError> {
             }
             Frame::TraceSpans { dropped, marks }
         }
+        TAG_MIGRATE => Frame::Migrate {
+            unit: d.u32()?,
+            id: d.u64()?,
+        },
+        TAG_MIGRATE_ACK => Frame::MigrateAck {
+            id: d.u64()?,
+            found: match d.u8()? {
+                0 => false,
+                1 => true,
+                _ => return Err(ProtoError::BadValue("migrate found flag")),
+            },
+            kv_len: d.u32()?,
+            remaining: d.u32()?,
+            tokens: d.i32s()?,
+        },
         t => return Err(ProtoError::BadTag(t)),
     };
     d.finish()?;
@@ -1397,7 +1487,7 @@ mod tests {
     }
 
     fn arbitrary_frame(rng: &mut Rng) -> Frame {
-        match rng.below(22) {
+        match rng.below(24) {
             0 => Frame::Hello {
                 version: rng.next_u64() as u32,
                 kv_wire: arbitrary_codec(rng),
@@ -1421,6 +1511,7 @@ mod tests {
                 kv_len: rng.below(4096) as u32,
                 max_new: rng.below(1024) as u32,
                 class: arbitrary_class(rng),
+                resume: (0..rng.below(16)).map(|_| rng.next_u64() as i32).collect(),
                 k: (0..rng.below(32)).map(|_| rng.f64() as f32).collect(),
                 v: (0..rng.below(32)).map(|_| rng.f64() as f32).collect(),
             },
@@ -1507,7 +1598,7 @@ mod tests {
                 exec_time: rng.f64() * 5.0,
             },
             20 => Frame::HandoffAck { id: rng.next_u64() },
-            _ => Frame::TraceSpans {
+            21 => Frame::TraceSpans {
                 dropped: rng.below(1 << 10) as u32,
                 marks: (0..rng.below(16))
                     .map(|_| TraceMark {
@@ -1517,6 +1608,17 @@ mod tests {
                         unit: rng.below(16) as u32,
                     })
                     .collect(),
+            },
+            22 => Frame::Migrate {
+                unit: rng.below(16) as u32,
+                id: rng.next_u64(),
+            },
+            _ => Frame::MigrateAck {
+                id: rng.next_u64(),
+                found: rng.chance(0.5),
+                kv_len: rng.below(4096) as u32,
+                remaining: rng.below(1024) as u32,
+                tokens: (0..rng.below(48)).map(|_| rng.next_u64() as i32).collect(),
             },
         }
     }
@@ -1591,11 +1693,13 @@ mod tests {
             4,
             4,
             SloClass::Standard,
+            &[],
             &[1.0; 4],
             &[1.0; 4],
         );
         // The class byte sits after tag+unit+id+first_token+kv_len+max_new
-        // past the 8-byte frame header.
+        // past the 8-byte frame header (resume and the KV blocks follow
+        // the class byte, so its offset is layout-stable).
         let class_at = 8 + 1 + 4 + 8 + 4 + 4 + 4;
         assert_eq!(buf[class_at], SloClass::Standard.to_wire());
         buf[class_at] = 9;
@@ -1619,6 +1723,7 @@ mod tests {
                 kv_len: 5,
                 max_new: 11,
                 class: SloClass::Interactive,
+                resume: vec![7, 8, 9],
                 k: k.clone(),
                 v: v.clone(),
             },
@@ -1635,6 +1740,7 @@ mod tests {
             5,
             11,
             SloClass::Interactive,
+            &[7, 8, 9],
             &k,
             &v,
         );
@@ -1708,6 +1814,7 @@ mod tests {
                 3000,
                 5,
                 SloClass::Batch,
+                &[],
                 &k,
                 &v,
             );
@@ -1790,6 +1897,7 @@ mod tests {
                 600,
                 4,
                 SloClass::Standard,
+                &[],
                 &k,
                 &k,
             );
@@ -1856,10 +1964,10 @@ mod tests {
         for codec in [KvCodec::Raw, KvCodec::Fp16, KvCodec::Lz] {
             let cls = SloClass::Standard;
             let mut buf = Vec::new();
-            admit_frame_into(&mut buf, codec, STREAM_CONTROL, 0, 1, 0, 4, 4, cls, &k, &v);
+            admit_frame_into(&mut buf, codec, STREAM_CONTROL, 0, 1, 0, 4, 4, cls, &[], &k, &v);
             let (ptr, cap) = (buf.as_ptr(), buf.capacity());
             for id in 2..32u64 {
-                admit_frame_into(&mut buf, codec, STREAM_CONTROL, 0, id, 0, 4, 4, cls, &k, &v);
+                admit_frame_into(&mut buf, codec, STREAM_CONTROL, 0, id, 0, 4, 4, cls, &[], &k, &v);
                 assert_eq!(buf.as_ptr(), ptr, "{}: admit encode reallocated", codec.name());
                 assert_eq!(buf.capacity(), cap, "{}: admit encode grew", codec.name());
             }

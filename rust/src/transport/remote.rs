@@ -58,8 +58,8 @@ use super::proto::{
     self, DirectTarget, Frame, FrameReader, ShardRole, StreamId, PROTO_VERSION, STREAM_CONTROL,
 };
 use super::{
-    AdmitJob, DecodeTransport, KvCodec, KvWireCounters, PrefillSinks, PrefillTransport,
-    PrefillWork, ShardSinks,
+    AdmitJob, DecodeTransport, ExtractedSeq, KvCodec, KvWireCounters, PrefillSinks,
+    PrefillTransport, PrefillWork, ShardSinks,
 };
 use crate::engine::PrefillOutcome;
 use crate::metrics::RequestMetrics;
@@ -568,6 +568,12 @@ fn reconnect_loop<P: SchedPeer>(mut peer: P) {
 struct DecodePeer {
     shard: Arc<DecodeShard>,
     sinks: ShardSinks,
+    /// KV halves being reassembled from `KvSegment` streams that precede
+    /// a `MigrateAck` — the rescue-migration return path. Keyed by
+    /// request id; an entry exists only between the first segment and
+    /// the ack (or death, which drops the partial assembly with the
+    /// sequence it belonged to).
+    migrating: Mutex<HashMap<u64, (Vec<f32>, Vec<f32>)>>,
 }
 
 impl SchedPeer for DecodePeer {
@@ -575,7 +581,7 @@ impl SchedPeer for DecodePeer {
         &self.shard.core
     }
 
-    fn on_frame(&self, frame: Frame, _wire_len: u64) {
+    fn on_frame(&self, frame: Frame, wire_len: u64) {
         match frame {
             Frame::Token { id, index, token } => {
                 // Gate on the pending table: a stale id (evicted, or
@@ -599,6 +605,76 @@ impl SchedPeer for DecodePeer {
                     (self.sinks.on_rejected)(id);
                 }
             }
+            Frame::KvSegment {
+                id,
+                half,
+                offset,
+                total,
+                data,
+            } => {
+                // A decode shard streams KV back only ahead of a
+                // `MigrateAck`: the extracted sequence's prompt caches
+                // returning to the scheduler for re-placement. Gate on
+                // the pending table so a stale stream cannot allocate.
+                if !self.shard.pending.lock().unwrap().contains_key(&id) {
+                    return;
+                }
+                self.shard
+                    .core
+                    .relay_kv
+                    .record(wire_len, 4 * data.len() as u64);
+                let failed = {
+                    let mut m = self.migrating.lock().unwrap();
+                    let (k, v) = m.entry(id).or_default();
+                    proto::apply_kv_segment(k, v, half, offset, total, &data).err()
+                };
+                if let Some(why) = failed {
+                    // A corrupt segment makes the extraction unusable;
+                    // drop the assembly and let the MigrateAck hand the
+                    // scheduler a KV-less extraction it will terminalize.
+                    log::warn!(
+                        "shard {}: malformed migration KV segment for job {id} ({why})",
+                        self.shard.core.cfg.addr,
+                    );
+                    self.migrating.lock().unwrap().remove(&id);
+                }
+            }
+            Frame::MigrateAck {
+                id,
+                found,
+                kv_len,
+                remaining,
+                tokens,
+            } => {
+                let assembly = self.migrating.lock().unwrap().remove(&id);
+                if found {
+                    // The sequence left the shard; its pending entry
+                    // carries the scheduler-clock metrics the re-placed
+                    // sequence keeps. A raced `Done` already removed it
+                    // — then the sequence finished before extraction and
+                    // there is nothing to move.
+                    let metrics = self.shard.pending.lock().unwrap().remove(&id);
+                    if let Some(metrics) = metrics {
+                        let (k, v) = assembly.unwrap_or_default();
+                        (self.sinks.on_migrated)(
+                            id,
+                            Some(ExtractedSeq {
+                                tokens,
+                                remaining,
+                                kv_len,
+                                k,
+                                v,
+                                metrics,
+                            }),
+                        );
+                    }
+                } else if self.shard.pending.lock().unwrap().contains_key(&id) {
+                    // Extraction failed shard-side (unknown unit, seq
+                    // already gone): tell the scheduler so it stops
+                    // waiting for the move; the sequence stays resident.
+                    (self.sinks.on_migrated)(id, None);
+                }
+            }
             Frame::StatsReply {
                 units,
                 kv_wire_bytes,
@@ -615,6 +691,10 @@ impl SchedPeer for DecodePeer {
     }
 
     fn on_death(&self) {
+        // Partial migration assemblies die with the connection: the ids
+        // they belong to are evicted below, and a reconnected shard
+        // starts clean.
+        self.migrating.lock().unwrap().clear();
         let resident: Vec<u64> = {
             let mut p = self.shard.pending.lock().unwrap();
             p.drain().map(|(id, _)| id).collect()
@@ -653,6 +733,7 @@ pub fn connect_shard(
     let peer = DecodePeer {
         shard: shard.clone(),
         sinks,
+        migrating: Mutex::new(HashMap::new()),
     };
     peer.attach(conn)?;
     Ok((0..units)
@@ -700,7 +781,12 @@ impl DecodeTransport for RemoteUnit {
         // Refuse frames the receiver would reject as oversized: sending
         // one would cost the whole connection (and every resident
         // sequence on the shard), not just this job.
-        let bound = proto::admit_payload_bound(codec, job.outcome.k.len(), job.outcome.v.len());
+        let bound = proto::admit_payload_bound(
+            codec,
+            job.resume.len(),
+            job.outcome.k.len(),
+            job.outcome.v.len(),
+        );
         if bound > proto::MAX_FRAME as u64 {
             log::warn!(
                 "shard {}: admit for job {} (~{bound} B) exceeds the frame limit; refusing",
@@ -735,6 +821,7 @@ impl DecodeTransport for RemoteUnit {
             job.outcome.len as u32,
             job.max_new,
             job.class,
+            &job.resume,
             &job.outcome.k,
             &job.outcome.v,
         );
@@ -764,6 +851,20 @@ impl DecodeTransport for RemoteUnit {
 
     fn request_stats(&self) {
         self.shard.core.request_stats();
+    }
+
+    fn extract(&mut self, id: u64) -> bool {
+        if !self.alive() {
+            return false;
+        }
+        // Control lane: a Migrate must not queue behind a KV backlog
+        // bound for the same shard — the whole point is moving a
+        // sequence *off* a hot unit quickly. The ack (and the KV coming
+        // back) rides the job's own stream like any other admit.
+        self.shard
+            .core
+            .send_frame(&Frame::Migrate { unit: self.unit, id })
+            .is_ok()
     }
 
     fn direct_target(&self) -> Option<DirectTarget> {
@@ -1079,6 +1180,7 @@ mod tests {
             }),
             on_stats: Box::new(|_, _, _| {}),
             on_trace: Box::new(|_, _| {}),
+            on_migrated: Box::new(|_, _| {}),
         }
     }
 
@@ -1095,6 +1197,7 @@ mod tests {
             }),
             max_new: 4,
             class: SloClass::Standard,
+            resume: Vec::new(),
             metrics: RequestMetrics::arrive(0.0, 4),
         }
     }

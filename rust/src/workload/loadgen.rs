@@ -101,6 +101,9 @@ pub struct Arrival {
     max_new: u32,
     /// SLO class sent on the `GEN` line (standard = class-less wire form).
     class: SloClass,
+    /// Completion deadline sent as `deadline=<ms>` on the `GEN` line and
+    /// scored client-side against the scheduled arrival instant.
+    deadline_ms: Option<f64>,
 }
 
 /// Per-connection tallies, merged into the final report.
@@ -113,6 +116,11 @@ struct ClientStats {
     busy: u64,
     /// `BUSY` replies per class (which traffic the server shed).
     busy_by_class: [u64; 3],
+    /// Completions inside their deadline, per class (deadline-carrying
+    /// requests only).
+    deadline_met_by_class: [u64; 3],
+    /// Completions past their deadline, per class.
+    deadline_missed_by_class: [u64; 3],
     errors: u64,
     tokens: u64,
 }
@@ -135,6 +143,13 @@ pub fn cli_loadgen(argv: &[String]) -> Result<()> {
             "class-mix",
             "SLO class weights, e.g. interactive:0.2,standard:0.5,batch:0.3 \
              (empty = every request class-less)",
+            Some(""),
+        )
+        .opt(
+            "class-deadline-ms",
+            "per-class completion deadlines, e.g. interactive:800 \
+             (sent as deadline=<ms> on the GEN line, scored from the \
+             scheduled arrival; empty = no deadlines)",
             Some(""),
         )
         .opt("seed", "arrival-process seed", Some("42"))
@@ -164,6 +179,14 @@ pub fn cli_loadgen(argv: &[String]) -> Result<()> {
     } else {
         Some(super::parse_class_mix(&class_mix_arg).map_err(|e| anyhow!("{e}"))?)
     };
+    // Same `<class>:<value>` grammar as the mix; values are milliseconds
+    // and 0 leaves that class deadline-free.
+    let deadline_arg = args.str_or("class-deadline-ms", "");
+    let class_deadline_ms = if deadline_arg.is_empty() {
+        None
+    } else {
+        Some(super::parse_class_mix(&deadline_arg).map_err(|e| anyhow!("{e}"))?)
+    };
     let seed: u64 = args.parse_or("seed", 42u64).map_err(|e| anyhow!("{e}"))?;
 
     if args.flag("wait-ready") {
@@ -176,7 +199,16 @@ pub fn cli_loadgen(argv: &[String]) -> Result<()> {
         net::wait_for_port(&addr, Duration::from_secs(secs))?;
     }
 
-    let schedule = build_schedule(arrival, rate, duration, seed, prompt_tokens, max_new, class_mix);
+    let schedule = build_schedule(
+        arrival,
+        rate,
+        duration,
+        seed,
+        prompt_tokens,
+        max_new,
+        class_mix,
+        class_deadline_ms,
+    );
     let offered = schedule.len();
     let report = run_schedule(&addr, schedule, conns)?;
     // Grab the server's decode-pool gauges before (optionally) draining it.
@@ -226,6 +258,12 @@ pub fn cli_loadgen(argv: &[String]) -> Result<()> {
             j.insert("prefill_units_alive".into(), v.clone());
         }
     }
+    // Hoist the rescue gauges: the deadline-rescue CI gate reads
+    // `rescue.preempted` / `rescue.migrated` / `rescue.rescue_deadline_met`
+    // straight off the report.
+    if let Some(v) = decode_pool.get("rescue") {
+        j.insert("rescue".into(), v.clone());
+    }
     // Hoist the per-stage TTFT decomposition and the ledger-divergence
     // counter: a sweep/CI gate reads `ttft_stages` straight off the
     // report, and divergence must be loud, not buried in the pool dump.
@@ -262,6 +300,10 @@ pub struct LoadgenReport {
     pub busy: u64,
     /// `BUSY` replies split by SLO class (indexed by [`SloClass::rank`]).
     pub busy_by_class: [u64; 3],
+    /// Deadline-carrying completions inside their deadline, per class.
+    pub deadline_met_by_class: [u64; 3],
+    /// Deadline-carrying completions past their deadline, per class.
+    pub deadline_missed_by_class: [u64; 3],
     /// Protocol/transport errors.
     pub errors: u64,
     /// Total streamed tokens.
@@ -312,6 +354,29 @@ impl LoadgenReport {
                         .collect(),
                 ),
             ),
+            (
+                "deadline_by_class",
+                Json::obj(
+                    SloClass::ALL
+                        .iter()
+                        .map(|c| {
+                            (
+                                c.name(),
+                                Json::obj(vec![
+                                    (
+                                        "met",
+                                        Json::from(self.deadline_met_by_class[c.rank()]),
+                                    ),
+                                    (
+                                        "missed",
+                                        Json::from(self.deadline_missed_by_class[c.rank()]),
+                                    ),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
             ("e2e", self.e2e.to_json()),
         ])
     }
@@ -330,6 +395,7 @@ pub fn build_schedule(
     prompt_tokens: u32,
     max_new: u32,
     class_mix: Option<[f64; 3]>,
+    class_deadline_ms: Option<[f64; 3]>,
 ) -> VecDeque<Arrival> {
     let mut rng = Rng::new(seed);
     let mut out = VecDeque::new();
@@ -343,11 +409,18 @@ pub fn build_schedule(
             Some(mix) => super::draw_class(mix, &mut rng),
             None => SloClass::Standard,
         };
+        // Deadlines derive from the drawn class with no RNG draws, so a
+        // rescue on/off A-B over the same seed offers an identical
+        // schedule.
+        let deadline_ms = class_deadline_ms
+            .map(|dl| dl[class.rank()])
+            .filter(|ms| *ms > 0.0);
         out.push_back(Arrival {
             at: t,
             prompt_tokens,
             max_new,
             class,
+            deadline_ms,
         });
     }
     out
@@ -371,6 +444,8 @@ pub fn run_schedule(addr: &str, schedule: VecDeque<Arrival>, conns: usize) -> Re
     let mut completed = 0;
     let mut busy = 0;
     let mut busy_by_class = [0u64; 3];
+    let mut deadline_met_by_class = [0u64; 3];
+    let mut deadline_missed_by_class = [0u64; 3];
     let mut errors = 0;
     let mut tokens = 0;
     for w in workers {
@@ -388,6 +463,18 @@ pub fn run_schedule(addr: &str, schedule: VecDeque<Arrival>, conns: usize) -> Re
                 for (total, n) in busy_by_class.iter_mut().zip(st.busy_by_class) {
                     *total += n;
                 }
+                for (total, n) in deadline_met_by_class
+                    .iter_mut()
+                    .zip(st.deadline_met_by_class)
+                {
+                    *total += n;
+                }
+                for (total, n) in deadline_missed_by_class
+                    .iter_mut()
+                    .zip(st.deadline_missed_by_class)
+                {
+                    *total += n;
+                }
                 errors += st.errors;
                 tokens += st.tokens;
             }
@@ -398,6 +485,8 @@ pub fn run_schedule(addr: &str, schedule: VecDeque<Arrival>, conns: usize) -> Re
         completed,
         busy,
         busy_by_class,
+        deadline_met_by_class,
+        deadline_missed_by_class,
         errors,
         tokens,
         elapsed_s: t0.elapsed().as_secs_f64(),
@@ -440,12 +529,15 @@ fn run_client(addr: &str, t0: Instant, queue: Arc<Mutex<VecDeque<Arrival>>>) -> 
         // One prompt byte per token (plus BOS server-side).
         let prompt = "x".repeat(a.prompt_tokens.max(1) as usize);
         // Standard stays class-less so legacy servers see the exact
-        // pre-SLO wire line.
-        let sent = if a.class == SloClass::Standard {
-            writeln!(out, "GEN {} {}", a.max_new, prompt)
-        } else {
-            writeln!(out, "GEN {} class={} {}", a.max_new, a.class.name(), prompt)
-        };
+        // pre-SLO wire line; annotations are added only when carried.
+        let mut ann = String::new();
+        if a.class != SloClass::Standard {
+            ann.push_str(&format!(" class={}", a.class.name()));
+        }
+        if let Some(ms) = a.deadline_ms {
+            ann.push_str(&format!(" deadline={ms}"));
+        }
+        let sent = writeln!(out, "GEN {}{} {}", a.max_new, ann, prompt);
         if let Err(e) = sent {
             log::error!("loadgen client: send failed: {e}");
             st.errors += 1;
@@ -481,8 +573,19 @@ fn run_client(addr: &str, t0: Instant, queue: Arc<Mutex<VecDeque<Arrival>>>) -> 
                     if let Some(x) = ttft_sample {
                         st.ttft.push((a.class, x));
                     }
-                    st.e2e.push(t0.elapsed().as_secs_f64() - a.at);
+                    let e2e = t0.elapsed().as_secs_f64() - a.at;
+                    st.e2e.push(e2e);
                     st.completed += 1;
+                    // Deadline scored against the *scheduled* arrival:
+                    // queueing delay from a saturated client pool counts
+                    // against the deadline, as it would for a real user.
+                    if let Some(ms) = a.deadline_ms {
+                        if e2e * 1e3 <= ms {
+                            st.deadline_met_by_class[a.class.rank()] += 1;
+                        } else {
+                            st.deadline_missed_by_class[a.class.rank()] += 1;
+                        }
+                    }
                     break;
                 }
                 Reply::Busy { .. } => {

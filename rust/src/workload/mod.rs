@@ -216,6 +216,12 @@ pub struct WorkloadSpec {
     /// ([`SloClass::Standard`]) and draws nothing from the RNG, so
     /// legacy workloads are bit-identical.
     pub class_mix: Option<[f64; 3]>,
+    /// Optional per-class completion deadlines, milliseconds after
+    /// arrival, indexed by [`SloClass::rank`]; an entry `<= 0` leaves
+    /// that class deadline-free. Applied deterministically from the
+    /// drawn class — no RNG draws — so enabling it does not perturb the
+    /// request stream (parity precondition for rescue on/off A-Bs).
+    pub class_deadline_ms: Option<[f64; 3]>,
     /// Workload horizon in seconds.
     pub duration: f64,
     /// RNG seed (workloads are fully reproducible).
@@ -231,6 +237,7 @@ impl WorkloadSpec {
             output_len: LengthDist::Uniform { lo: 64, hi: 512 },
             prefix: None,
             class_mix: None,
+            class_deadline_ms: None,
             duration,
             seed,
         }
@@ -244,6 +251,7 @@ impl WorkloadSpec {
             output_len: LengthDist::Uniform { lo: 64, hi: 512 },
             prefix: None,
             class_mix: None,
+            class_deadline_ms: None,
             duration,
             seed,
         }
@@ -263,6 +271,7 @@ impl WorkloadSpec {
             output_len: LengthDist::paper_decode_out(),
             prefix: None,
             class_mix: None,
+            class_deadline_ms: None,
             duration,
             seed,
         }
@@ -284,6 +293,12 @@ impl WorkloadSpec {
             let mut r = Request::new(id, input, output, t);
             if let Some(mix) = &self.class_mix {
                 r = r.with_class(draw_class(mix, &mut rng));
+            }
+            if let Some(dl) = &self.class_deadline_ms {
+                let ms = dl[r.class.rank()];
+                if ms > 0.0 {
+                    r = r.with_deadline(t + ms / 1000.0);
+                }
             }
             if let Some(p) = &self.prefix {
                 if rng.chance(p.participation) {
@@ -430,6 +445,31 @@ mod tests {
         let again = spec.generate();
         for (a, b) in reqs.iter().zip(&again) {
             assert_eq!(a.class, b.class);
+        }
+    }
+
+    #[test]
+    fn class_deadlines_derive_from_class_without_touching_the_rng() {
+        let mut spec = WorkloadSpec::paper_short(100.0, 50.0, 17);
+        spec.class_mix = Some([0.2, 0.5, 0.3]);
+        let base = spec.generate();
+        // Interactive gets 2s, standard none (0 = deadline-free), batch 60s.
+        spec.class_deadline_ms = Some([2000.0, 0.0, 60_000.0]);
+        let with = spec.generate();
+        assert_eq!(base.len(), with.len());
+        for (a, b) in base.iter().zip(&with) {
+            // Deadlines must not perturb arrivals, lengths or classes.
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.input_tokens, b.input_tokens);
+            assert_eq!(a.output_tokens, b.output_tokens);
+            assert_eq!(a.class, b.class);
+            match b.class {
+                SloClass::Interactive => {
+                    assert_eq!(b.deadline, Some(b.arrival + 2.0), "anchored at arrival")
+                }
+                SloClass::Standard => assert!(b.deadline.is_none()),
+                SloClass::Batch => assert_eq!(b.deadline, Some(b.arrival + 60.0)),
+            }
         }
     }
 

@@ -27,6 +27,7 @@
 
 use crate::cli::Command;
 use crate::cluster::costmodel::{DpPassLoad, PrefillCostModel};
+use crate::cluster::dispatch::RescueConfig;
 use crate::cluster::sim::{DecodePlacement, SchedMode, SimTopology, Simulation};
 use crate::cluster::workers::{EngineSpec, RealClusterConfig, RealSchedMode};
 use crate::config;
@@ -120,6 +121,16 @@ pub struct SweepGrid {
     /// under `--compare`. Classed points add per-class TTFT/shed replica
     /// columns on top of the standard set.
     pub class_mixes: Vec<String>,
+    /// Rescue axis: `off` | `on` (SLO-violation decode rescue —
+    /// preemption + migration). `off` points carry no `rescue` param key
+    /// at all, so legacy baselines keep indexing the same points under
+    /// `--compare`; `on` points add rescue-counter replica columns.
+    pub rescues: Vec<String>,
+    /// Per-class completion deadlines in ms (class-mix grammar; `None` =
+    /// deadline-free traffic). A scalar knob, not an axis: it applies to
+    /// every point identically, so a rescue on/off pair over the same
+    /// seed is a paired comparison over byte-identical workloads.
+    pub class_deadline_ms: Option<[f64; 3]>,
     /// Seeded runs per grid point.
     pub replicas: u32,
     /// Base seed; replica `r` runs at `seed + r` in every point.
@@ -149,6 +160,8 @@ impl Default for SweepGrid {
             codecs: vec!["raw".into()],
             shards: vec![2],
             class_mixes: vec!["none".into(), "interactive:0.2,standard:0.5,batch:0.3".into()],
+            rescues: vec!["off".into()],
+            class_deadline_ms: None,
             replicas: 3,
             seed: 1,
             duration: 45.0,
@@ -173,6 +186,14 @@ impl SweepGrid {
                 Json::Arr(self.shards.iter().map(|&s| Json::from(s)).collect()),
             ),
             ("class_mix", Json::from(self.class_mixes.clone())),
+            ("rescue", Json::from(self.rescues.clone())),
+            (
+                "class_deadline_ms",
+                match self.class_deadline_ms {
+                    Some(dl) => Json::Arr(dl.iter().map(|&x| Json::from(x)).collect()),
+                    None => Json::Null,
+                },
+            ),
             ("replicas", Json::from(self.replicas)),
             ("seed", Json::from(self.seed)),
             ("duration_s", Json::from(self.duration)),
@@ -226,6 +247,9 @@ struct PointParams {
     /// Canonical class-mix label; `None` = class-less point (legacy
     /// param key set, comparable against pre-SLO baselines).
     class_mix: Option<String>,
+    /// SLO-violation rescue enabled for this point. `false` keeps the
+    /// legacy param key set (no `rescue` key at all).
+    rescue: bool,
 }
 
 impl PointParams {
@@ -247,6 +271,9 @@ impl PointParams {
         }
         if let Some(m) = &self.class_mix {
             pairs.push(("class_mix", Json::from(m.as_str())));
+        }
+        if self.rescue {
+            pairs.push(("rescue", Json::from("on")));
         }
         Json::obj(pairs)
     }
@@ -305,35 +332,50 @@ fn expand(grid: &SweepGrid, mode: &'static str) -> Result<Vec<PointParams>> {
                                         &parse_class_mix(mix).map_err(|e| anyhow!(e))?,
                                     ))
                                 };
-                                let base = PointParams {
-                                    mode,
-                                    sched: sched.clone(),
-                                    arrival: arrival.clone(),
-                                    policy: policy.clone(),
-                                    qps,
-                                    window,
-                                    kv_budget,
-                                    codec: None,
-                                    shards: None,
-                                    class_mix,
-                                };
-                                if mode == "live" {
-                                    for codec in &grid.codecs {
-                                        KvCodec::parse(codec)
-                                            .ok_or_else(|| anyhow!("unknown kv codec '{codec}'"))?;
-                                        for &shards in &grid.shards {
-                                            if shards == 0 {
-                                                return Err(anyhow!("--shards values must be >= 1"));
-                                            }
-                                            out.push(PointParams {
-                                                codec: Some(codec.clone()),
-                                                shards: Some(shards),
-                                                ..base.clone()
-                                            });
+                                for resc in &grid.rescues {
+                                    let rescue = match resc.as_str() {
+                                        "on" => true,
+                                        "off" => false,
+                                        other => {
+                                            return Err(anyhow!(
+                                                "unknown rescue value '{other}' (want on|off)"
+                                            ))
                                         }
+                                    };
+                                    let base = PointParams {
+                                        mode,
+                                        sched: sched.clone(),
+                                        arrival: arrival.clone(),
+                                        policy: policy.clone(),
+                                        qps,
+                                        window,
+                                        kv_budget,
+                                        codec: None,
+                                        shards: None,
+                                        class_mix: class_mix.clone(),
+                                        rescue,
+                                    };
+                                    if mode == "live" {
+                                        for codec in &grid.codecs {
+                                            KvCodec::parse(codec).ok_or_else(|| {
+                                                anyhow!("unknown kv codec '{codec}'")
+                                            })?;
+                                            for &shards in &grid.shards {
+                                                if shards == 0 {
+                                                    return Err(anyhow!(
+                                                        "--shards values must be >= 1"
+                                                    ));
+                                                }
+                                                out.push(PointParams {
+                                                    codec: Some(codec.clone()),
+                                                    shards: Some(shards),
+                                                    ..base.clone()
+                                                });
+                                            }
+                                        }
+                                    } else {
+                                        out.push(base);
                                     }
-                                } else {
-                                    out.push(base);
                                 }
                             }
                         }
@@ -365,6 +407,10 @@ fn run_des_replica(p: &PointParams, grid: &SweepGrid, seed: u64) -> Result<Json>
         }
     }
     cfg.workload.class_mix = p.mix()?;
+    cfg.workload.class_deadline_ms = grid.class_deadline_ms;
+    if p.rescue {
+        cfg.rescue = RescueConfig::on();
+    }
     let r = Simulation::run(&cfg);
     // Modelled KV handoff traffic: every computed prefill token ships a
     // raw-f32 block sized like the mock engine's KV (16 elems × 4 B).
@@ -400,6 +446,19 @@ fn run_des_replica(p: &PointParams, grid: &SweepGrid, seed: u64) -> Result<Json>
             );
         }
     }
+    // Deadlined points score completion deadlines on both arms of a
+    // rescue A/B; rescue points additionally carry the decision counters.
+    if grid.class_deadline_ms.is_some() {
+        let g = &r.decode_pool.rescue;
+        rep.insert("deadline_met".into(), Json::from(g.deadline_met));
+        rep.insert("deadline_missed".into(), Json::from(g.deadline_violated));
+    }
+    if p.rescue {
+        let g = &r.decode_pool.rescue;
+        rep.insert("rescue_preempted".into(), Json::from(g.preempted));
+        rep.insert("rescue_migrated".into(), Json::from(g.migrated));
+        rep.insert("rescue_deadline_met".into(), Json::from(g.rescue_deadline_met));
+    }
     Ok(Json::Obj(rep))
 }
 
@@ -433,6 +492,9 @@ fn run_live_replica(p: &PointParams, grid: &SweepGrid, live: &LiveOpts, seed: u6
             sc.interval.adaptive = false;
         }
     }
+    if p.rescue {
+        cfg.rescue = RescueConfig::on();
+    }
     let server = TestServer::start(cfg);
     let model = loadgen::ArrivalModel::parse(&p.arrival)
         .with_context(|| "live mode supports the loadgen arrival models only")?;
@@ -444,6 +506,7 @@ fn run_live_replica(p: &PointParams, grid: &SweepGrid, live: &LiveOpts, seed: u6
         live.prompt_tokens,
         live.max_new,
         p.mix()?,
+        grid.class_deadline_ms,
     );
     let offered = schedule.len();
     let report = loadgen::run_schedule(&server.addr, schedule, live.conns)?;
@@ -487,6 +550,33 @@ fn run_live_replica(p: &PointParams, grid: &SweepGrid, live: &LiveOpts, seed: u6
                 rep.insert(format!("rejected_shed_{}", c.name()), Json::from(v));
             }
         }
+    }
+    // Client-side deadline verdicts (scored from the scheduled arrival)
+    // plus the server's rescue decision counters, mirroring the DES
+    // columns so live points pair up the same way.
+    if grid.class_deadline_ms.is_some() {
+        rep.insert(
+            "deadline_met".into(),
+            Json::from(report.deadline_met_by_class.iter().sum::<u64>()),
+        );
+        rep.insert(
+            "deadline_missed".into(),
+            Json::from(report.deadline_missed_by_class.iter().sum::<u64>()),
+        );
+    }
+    if p.rescue {
+        rep.insert(
+            "rescue_preempted".into(),
+            Json::from(pool.f64_at(&["rescue", "preempted"]).unwrap_or(0.0)),
+        );
+        rep.insert(
+            "rescue_migrated".into(),
+            Json::from(pool.f64_at(&["rescue", "migrated"]).unwrap_or(0.0)),
+        );
+        rep.insert(
+            "rescue_deadline_met".into(),
+            Json::from(pool.f64_at(&["rescue", "rescue_deadline_met"]).unwrap_or(0.0)),
+        );
     }
     Ok(Json::Obj(rep))
 }
@@ -857,6 +947,17 @@ pub fn cli_sweep(argv: &[String]) -> Result<()> {
          'none;interactive:0.2,standard:0.5,batch:0.3'",
         Some("none;interactive:0.2,standard:0.5,batch:0.3"),
     )
+    .opt(
+        "rescue",
+        "comma list: off,on (SLO-violation decode rescue axis)",
+        Some("off"),
+    )
+    .opt(
+        "class-deadline-ms",
+        "per-class completion deadlines in ms (class-mix grammar), e.g. \
+         'interactive:800'; empty = deadline-free traffic",
+        Some(""),
+    )
     .opt("replicas", "seeded runs per grid point", Some("3"))
     .opt("seed", "base seed (replica r runs at seed+r)", Some("1"))
     .opt(
@@ -972,6 +1073,15 @@ pub fn cli_sweep(argv: &[String]) -> Result<()> {
                 mixes
             }
         },
+        rescues: split_list(&args.str_or("rescue", "off")),
+        class_deadline_ms: {
+            let s = args.str_or("class-deadline-ms", "");
+            if s.is_empty() {
+                None
+            } else {
+                Some(parse_class_mix(&s).map_err(|e| anyhow!(e))?)
+            }
+        },
         replicas: args.parse_or("replicas", 3u32).map_err(|e| anyhow!("{e}"))?,
         seed: args.parse_or("seed", 1u64).map_err(|e| anyhow!("{e}"))?,
         duration: args.parse_or("duration", 45.0).map_err(|e| anyhow!("{e}"))?,
@@ -1031,6 +1141,8 @@ mod tests {
             codecs: vec!["raw".into(), "lz".into()],
             shards: vec![2, 16],
             class_mixes: vec!["none".into()],
+            rescues: vec!["off".into()],
+            class_deadline_ms: None,
             replicas: 2,
             seed: 5,
             duration: 4.0,
@@ -1080,6 +1192,27 @@ mod tests {
         );
         // Bad mixes fail at expansion, not hours into the sweep.
         g.class_mixes = vec!["premium:1".into()];
+        assert!(expand(&g, "des").is_err());
+    }
+
+    #[test]
+    fn rescue_axis_fans_out_and_off_keeps_legacy_params() {
+        let mut g = tiny_grid();
+        g.rescues = vec!["off".into(), "on".into()];
+        let pts = expand(&g, "des").unwrap();
+        // Every scheduler/window point doubles: one off-arm, one on-arm.
+        assert_eq!(pts.len(), 6);
+        let off: Vec<_> = pts.iter().filter(|p| !p.rescue).collect();
+        assert_eq!(off.len(), 3);
+        // Off-arm params must index identically to a pre-rescue document:
+        // no rescue key at all.
+        assert!(off.iter().all(|p| p.to_json().get("rescue").is_none()));
+        assert!(pts
+            .iter()
+            .filter(|p| p.rescue)
+            .all(|p| p.to_json().get("rescue").and_then(Json::as_str) == Some("on")));
+        // Bad axis values fail at expansion.
+        g.rescues = vec!["maybe".into()];
         assert!(expand(&g, "des").is_err());
     }
 

@@ -12,13 +12,16 @@ use sbs::cluster::dispatch::{
     DecodeJoin, DecodePolicy, DispatchCore, DispatchCoreConfig, EndForwardBacklog, FnAdmission,
     SchedMode,
 };
-use sbs::cluster::workers::RealCluster;
+use sbs::cluster::workers::{EngineSpec, Job, RealCluster, RealClusterConfig, RealSchedMode};
+use sbs::engine::mock::MockEngineConfig;
 use sbs::metrics::DecodePoolStats;
+use sbs::scheduler::baseline::ImmediatePolicy;
 use sbs::scheduler::staggered::{SchedulerAction, StaggeredConfig};
 use sbs::scheduler::types::{DpUnitId, Request, SloClass};
 use sbs::testing::scenarios::{skewed_decode_cluster, submit_skewed_jobs};
 use sbs::workload::WorkloadSpec;
 use std::collections::VecDeque;
+use std::time::Duration;
 
 const N_JOBS: u64 = 40;
 const N_DECODE: u32 = 4;
@@ -156,6 +159,61 @@ fn sim_and_live_drivers_make_identical_dispatch_decisions() {
     let pb = place(&mut core_live);
     assert_eq!(pa.len(), joins.len());
     assert_eq!(pa, pb, "decode placements must match between driver styles");
+}
+
+/// The deadline clock anchors at *arrival* (`ClusterHandle::now_s()` at
+/// submit), never at dispatch. A deadlined job whose budget is smaller
+/// than the prefill pass it queues behind must therefore score as
+/// violated even though its own decode takes single-digit milliseconds —
+/// a dispatch-anchored clock would trivially meet it. An identical job
+/// with a generous budget scores met, and both verdicts accrue on the
+/// rescue gauge with rescue disabled (the A/B property the CI rescue
+/// smoke gates on).
+#[test]
+fn deadline_clock_anchors_at_arrival_not_dispatch() {
+    let cfg = RealClusterConfig {
+        n_prefill: 1,
+        n_decode: 1,
+        engine: EngineSpec::Mock(MockEngineConfig {
+            t_prefill_base: 0.3,
+            t_prefill_per_token: 0.0,
+            t_decode_step: 0.001,
+            chunk: 128,
+            jitter: 0.0,
+            kv_elems_per_token: 4,
+        }),
+        mode: RealSchedMode::Immediate(ImmediatePolicy::LeastOutstanding),
+        ..Default::default()
+    };
+    let cluster = RealCluster::start(cfg).expect("cluster start");
+    let handle = cluster.handle();
+
+    // 150 ms of budget against a 300 ms prefill pass.
+    let tight = handle.next_id();
+    cluster.submit(
+        Job::new(tight, vec![7; 64], 2)
+            .with_class(SloClass::Interactive)
+            .with_deadline_ms(150.0),
+    );
+    cluster.wait_for(tight, Duration::from_secs(30)).expect("tight job completes");
+
+    let loose = handle.next_id();
+    cluster.submit(
+        Job::new(loose, vec![7; 64], 2)
+            .with_class(SloClass::Interactive)
+            .with_deadline_ms(30_000.0),
+    );
+    cluster.wait_for(loose, Duration::from_secs(30)).expect("loose job completes");
+    cluster.finish().expect("cluster finish");
+
+    let g = handle.decode_stats().rescue;
+    assert!(!g.enabled, "rescue stays off: verdicts must accrue in both A/B arms");
+    assert_eq!(
+        (g.deadline_met, g.deadline_violated),
+        (1, 1),
+        "arrival-anchored clock: queueing time counts against the budget ({g:?})"
+    );
+    assert_eq!(g.preempted + g.migrated, 0, "no rescue actions while disabled");
 }
 
 /// Classed counterpart of [`drive_trace`]: a seeded 20/50/30

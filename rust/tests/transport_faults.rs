@@ -26,8 +26,8 @@ use sbs::transport::proto::{
 };
 use sbs::transport::remote::{connect_prefill_shard, connect_shard, RemoteShardConfig};
 use sbs::transport::{
-    DecodeTransport, KvCodec, KvWireCounters, PrefillSinks, PrefillTransport, PrefillWork,
-    ShardSinks,
+    AdmitJob, DecodeTransport, KvCodec, KvWireCounters, PrefillSinks, PrefillTransport,
+    PrefillWork, ShardSinks,
 };
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU32, Ordering};
@@ -370,6 +370,7 @@ fn decode_sinks(tokens: Arc<AtomicU32>, dones: Arc<AtomicU32>) -> (ShardSinks, D
             }),
             on_stats: Box::new(|_, _, _| {}),
             on_trace: Box::new(|_, _| {}),
+            on_migrated: Box::new(|_, _| {}),
         },
         DecodeEvents { evicted },
     )
@@ -392,6 +393,146 @@ fn decode_shard_death_evicts_direct_registrations_too() {
     units[0].expect_direct(42, RequestMetrics::arrive(0.0, 16));
     let evicted = ev.evicted.recv_timeout(TICK).expect("shard death must evict");
     assert_eq!(evicted, vec![42], "the direct registration is swept");
+    units[0].detach();
+}
+
+// ---- mid-migration shard death -------------------------------------------
+
+/// Channel-backed decode sinks with every rescue-relevant event exposed.
+struct MigrationEvents {
+    tokens: Receiver<(u64, u32, i32)>,
+    done: Receiver<u64>,
+    evicted: Receiver<Vec<u64>>,
+    /// `(id, extraction delivered)` per `on_migrated` call.
+    migrated: Receiver<(u64, bool)>,
+}
+
+fn migration_sinks() -> (ShardSinks, MigrationEvents) {
+    let (t_tx, tokens) = channel();
+    let (d_tx, done) = channel();
+    let (e_tx, evicted) = channel();
+    let (m_tx, migrated) = channel();
+    (
+        ShardSinks {
+            on_token: Box::new(move |id, index, token| {
+                let _ = t_tx.send((id, index, token));
+            }),
+            on_done: Box::new(move |id, _, _| {
+                let _ = d_tx.send(id);
+            }),
+            on_rejected: Box::new(|_| {}),
+            on_evicted: Box::new(move |ids| {
+                let _ = e_tx.send(ids);
+            }),
+            on_stats: Box::new(|_, _, _| {}),
+            on_trace: Box::new(|_, _| {}),
+            on_migrated: Box::new(move |id, seq| {
+                let _ = m_tx.send((id, seq.is_some()));
+            }),
+        },
+        MigrationEvents {
+            tokens,
+            done,
+            evicted,
+            migrated,
+        },
+    )
+}
+
+fn resident_job(id: u64) -> AdmitJob {
+    AdmitJob {
+        id,
+        outcome: Box::new(PrefillOutcome {
+            first_token: 0x41,
+            len: 4,
+            k: vec![0.5; 16],
+            v: vec![0.25; 16],
+            exec_time: 0.01,
+            passes: 1,
+        }),
+        max_new: 8,
+        class: SloClass::Interactive,
+        resume: Vec::new(),
+        metrics: RequestMetrics::arrive(0.0, 16),
+    }
+}
+
+#[test]
+fn source_shard_death_mid_migration_evicts_once_no_double_delivery() {
+    // The scheduler asks a decode shard to extract a resident sequence;
+    // the shard streams half the KV behind the coming MigrateAck and
+    // dies. The move must collapse to the ordinary death path: exactly
+    // one terminal (eviction) for the sequence, the partial extraction
+    // assembly dropped, no migration result ever delivered — and never
+    // a hang.
+    let shard = FakeShard::serve(FakeShard::ack(ShardRole::Decode, KvCodec::Raw), |mut sc, _| {
+        // Skip the Admit (and pings); the Migrate is the death cue.
+        sc.recv_until(TICK, |f| matches!(f, Frame::Migrate { id: 60, .. }))?;
+        sc.send(&Frame::KvSegment {
+            id: 60,
+            half: KvHalf::K,
+            offset: 0,
+            total: 400,
+            data: vec![0.5; 100], // 300 elements never arrive
+        })?;
+        sc.kill();
+        Ok(())
+    });
+    let (sinks, ev) = migration_sinks();
+    let mut units =
+        connect_shard(RemoteShardConfig::new(&shard.addr), sinks, Arc::default()).unwrap();
+    units[0].admit(resident_job(60)).map_err(|_| ()).unwrap();
+    assert!(units[0].extract(60), "extract is deliverable while the shard lives");
+
+    let evicted = ev.evicted.recv_timeout(TICK).expect("death must evict, not hang");
+    assert_eq!(evicted, vec![60], "exactly the mid-move sequence is evicted");
+    assert!(
+        ev.migrated.try_recv().is_err(),
+        "a migration cut short by death must not deliver an extraction"
+    );
+    assert!(ev.done.try_recv().is_err(), "no completion for a sequence that died mid-move");
+    assert!(ev.evicted.try_recv().is_err(), "one terminal only — no double delivery");
+    units[0].detach();
+}
+
+#[test]
+fn destination_shard_death_after_resumed_admit_is_single_terminal() {
+    // The destination side of a live migration is an Admit carrying the
+    // resume history. The shard echoes one post-resume token (proving
+    // the history crossed the wire and the emission index continued
+    // past it) and dies: the sequence must end in exactly one terminal
+    // (eviction) — never a Done, never a replay of the resume prefix.
+    let shard = FakeShard::serve(FakeShard::ack(ShardRole::Decode, KvCodec::Raw), |mut sc, _| {
+        let admit = sc.recv_until(TICK, |f| matches!(f, Frame::Admit { id: 61, .. }))?;
+        if let Frame::Admit { id, resume, .. } = admit {
+            // Only a faithfully-transferred history earns the token the
+            // test asserts on; a mangled resume fails loudly below.
+            if resume == vec![0x41, 0x42, 0x43] {
+                sc.send(&Frame::Token {
+                    id,
+                    index: resume.len() as u32,
+                    token: 0x44,
+                })?;
+            }
+        }
+        sc.kill();
+        Ok(())
+    });
+    let (sinks, ev) = migration_sinks();
+    let mut units =
+        connect_shard(RemoteShardConfig::new(&shard.addr), sinks, Arc::default()).unwrap();
+    let mut job = resident_job(61);
+    job.resume = vec![0x41, 0x42, 0x43];
+    units[0].admit(job).map_err(|_| ()).unwrap();
+
+    let (id, index, token) =
+        ev.tokens.recv_timeout(TICK).expect("resume must survive the wire verbatim");
+    assert_eq!((id, token), (61, 0x44));
+    assert_eq!(index, 3, "emission resumes past the transferred history");
+    let evicted = ev.evicted.recv_timeout(TICK).expect("destination death must evict");
+    assert_eq!(evicted, vec![61]);
+    assert!(ev.done.try_recv().is_err(), "no Done for a sequence the destination lost");
+    assert!(ev.evicted.try_recv().is_err(), "one terminal only — ledger releases once");
     units[0].detach();
 }
 
@@ -627,6 +768,7 @@ fn peer_death_mid_handoff_leaves_decode_shard_clean() {
         kv_len: 4,
         max_new: 2,
         class: SloClass::Standard,
+        resume: Vec::new(),
         k: Vec::new(),
         v: Vec::new(),
     });
@@ -793,6 +935,7 @@ fn stale_stream_frames_after_relay_fallback_are_dropped() {
         kv_len: 4,
         max_new: 2,
         class: SloClass::Standard,
+        resume: Vec::new(),
         k: Vec::new(),
         v: Vec::new(),
     });
@@ -881,6 +1024,7 @@ fn peer_death_with_two_handoffs_in_flight_drops_both_assemblies() {
             kv_len: 4,
             max_new: 2,
             class: SloClass::Standard,
+            resume: Vec::new(),
             k: Vec::new(),
             v: Vec::new(),
         });
